@@ -1,0 +1,50 @@
+//! Accuracy/latency trade-off exploration: run the HOLMES composer and
+//! all §4.2 baselines across a range of latency budgets and print the
+//! frontier each method reaches (the Fig. 1 / Fig. 7 story).
+//!
+//! ```bash
+//! cargo run --release --example composer_search
+//! ```
+
+use holmes::config::{ComposerConfig, SystemConfig};
+use holmes::exp::common::{Method, SearchContext};
+use holmes::zoo::Zoo;
+
+fn main() -> holmes::Result<()> {
+    let zoo = Zoo::load("artifacts")?;
+    let system = SystemConfig { gpus: 2, patients: 32, window_s: 30.0 };
+    let ctx = SearchContext::new(&zoo, system);
+    let cfg = ComposerConfig::default();
+
+    println!(
+        "{:<9} {:>8} {:>9} {:>9} {:>6} {:>7}",
+        "budget", "method", "ROC-AUC", "latency", "|b|", "calls"
+    );
+    for budget in [0.05, 0.1, 0.2, 0.5] {
+        for m in Method::ALL {
+            let r = ctx.run(m, budget, 0, &cfg);
+            println!(
+                "{:<9} {:>8} {:>9.4} {:>8.3}s {:>6} {:>7}",
+                format!("{budget}s"),
+                m.name(),
+                r.best.accuracy.roc_auc,
+                r.best.latency,
+                r.best.selector.len(),
+                r.profiler_calls
+            );
+        }
+        println!();
+    }
+
+    // show HOLMES' chosen ensemble at the paper's 200 ms operating point
+    let r = ctx.run(Method::Holmes, 0.2, 0, &cfg);
+    println!("HOLMES @ 200 ms picks:");
+    for &i in r.best.selector.indices() {
+        let m = zoo.model(i);
+        println!(
+            "  {} (lead {}, width {}, blocks {}, val AUC {:.4})",
+            m.id, m.lead, m.width, m.blocks, m.val_auc
+        );
+    }
+    Ok(())
+}

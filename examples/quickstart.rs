@@ -1,0 +1,66 @@
+//! Quickstart: load the zoo, compose an ensemble under a latency budget,
+//! deploy it on the serving pipeline, and run one ensemble query.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::time::Instant;
+
+use holmes::composer::Composer;
+use holmes::config::{ComposerConfig, SystemConfig};
+use holmes::data;
+use holmes::ingest::synth::SynthConfig;
+use holmes::profiler::{AnalyticLatencyProfiler, ServiceTimes, ValidationAccuracyProfiler};
+use holmes::runtime::Engine;
+use holmes::serving::pipeline::{Pipeline, PipelineConfig, Query};
+use holmes::zoo::Zoo;
+
+fn main() -> holmes::Result<()> {
+    // 1. The model zoo built by `make artifacts`: 60 Table-3 profiles,
+    //    18 with AOT-compiled HLO artifacts.
+    let zoo = Zoo::load("artifacts")?;
+    println!("zoo: {} models, {} servable", zoo.n(), zoo.servable_indices().len());
+
+    // 2. Compose: maximise validation accuracy subject to f_l ≤ 200 ms
+    //    (Eq. 1), restricted to servable models so we can deploy it.
+    let system = SystemConfig { gpus: 2, patients: 32, window_s: 30.0 };
+    let acc = ValidationAccuracyProfiler::from_zoo(&zoo);
+    let lat = AnalyticLatencyProfiler::new(ServiceTimes::from_macs(&zoo, 5e-4, 2e10));
+    let cfg = ComposerConfig { servable_only: true, ..Default::default() };
+    let composer = Composer::new(&zoo, &acc, &lat, cfg, system);
+    let result = composer.search(&[]);
+    let best = &result.best;
+    println!(
+        "composed {}-model ensemble: AUC {:.4}, predicted latency {:.3}s",
+        best.selector.len(),
+        best.accuracy.roc_auc,
+        best.latency
+    );
+    for &i in best.selector.indices() {
+        println!("  - {}", zoo.model(i).id);
+    }
+
+    // 3. Deploy on the real PJRT pipeline (2 device workers = "2 GPUs").
+    //    Warm-compile each member so the demo query measures steady state.
+    let engine = Engine::new(&zoo, 2)?;
+    for &i in best.selector.indices() {
+        engine.profile_model((i, 1), 1)?;
+    }
+    let pipeline = Pipeline::spawn(&zoo, &engine, PipelineConfig::new(best.selector.clone()))?;
+
+    // 4. One synthetic patient window → bagging prediction (Eq. 5).
+    let clip = data::make_clips(1, zoo.manifest.clip_len, 7, &SynthConfig::default());
+    let prediction = pipeline.query(Query {
+        patient: 0,
+        window_id: 0,
+        sim_end: 30.0,
+        leads: clip.clips[0].clone(),
+        emitted: Instant::now(),
+    })?;
+    println!(
+        "prediction: P(stable) = {:.3} (label was {}), e2e latency {:?}",
+        prediction.score, clip.labels[0], prediction.e2e
+    );
+    Ok(())
+}

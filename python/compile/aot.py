@@ -1,0 +1,361 @@
+"""AOT build: train the zoo, lower every servable variant to HLO text.
+
+This is the ONLY python entrypoint in the system; it runs once at
+``make artifacts`` and never on the request path. Outputs (under
+``artifacts/``):
+
+  models/<id>_b<B>.hlo.txt   one HLO-text module per (variant, batch);
+                             weights baked in as constants, per-clip
+                             standardisation fused into the graph, so the
+                             rust runtime feeds RAW windows and reads a
+                             probability back.
+  zoo_manifest.json          Table-3-style profile per zoo model (depth,
+                             width, MACs, memory, modality, input length,
+                             val AUC), artifact paths, generator
+                             calibration constants.
+  val_scores.json            per-model score vector on the shared
+                             patient-held-out validation split — the
+                             accuracy profiler f_a(V, b) data in rust.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Zoo layout follows the paper: 3 ECG leads × widths {8,16,32,64,128} ×
+blocks {2,4,8,16} = 60 models. A configurable subset is actually
+trained + lowered (default 18: widths {8,16,32} × blocks {2,4}); the
+remaining profiles receive validation scores transported from their
+nearest trained anchor to a calibrated target AUC (DESIGN.md §3) and are
+marked ``"trained": false`` in the manifest.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import data as D
+from compile import model as M
+from compile import train as T
+
+LEADS = [0, 1, 2]
+WIDTHS = [8, 16, 32, 64, 128]
+BLOCKS = [2, 4, 8, 16]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (id-safe interchange).
+
+    `print_large_constants=True` is ESSENTIAL: the default printer elides
+    big literals as `constant({...})`, which the XLA text parser then
+    reads back as zeros — silently wiping the baked-in model weights.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "..." not in text, "HLO printer elided constants"
+    return text
+
+
+def lower_variant(params, cfg: M.ModelConfig, batch: int, clip_len: int) -> str:
+    """Lower proba(normalize(x)) with weights closed over as constants."""
+
+    def fn(x):
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        sd = jnp.std(x, axis=-1, keepdims=True) + 1e-6
+        xn = (x - mu) / sd
+        return (M.forward_proba(params, xn, cfg, use_pallas=True),)
+
+    spec = jax.ShapeDtypeStruct((batch, clip_len), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+# ---------------------------------------------------------------------------
+# Score transport: give untrained variants realistic validation scores.
+# ---------------------------------------------------------------------------
+
+
+def _mix_auc(z_anchor, z_target, y, lam):
+    z = (1.0 - lam) * z_anchor + lam * z_target
+    return T.roc_auc(y, z)
+
+
+def lead_difficulty(y: np.ndarray, lead: int, seed: int) -> tuple:
+    """Shared per-lead error structure: a noise vector every model of the
+    lead partially shares, plus ~12% 'hard' samples whose oracle margin
+    is inverted for the whole lead. Without this, transported models have
+    independent errors and any bagging ensemble saturates near 1.0 —
+    unlike real same-modality models, which share failure modes."""
+    rng = np.random.default_rng(seed * 7919 + lead)
+    shared = rng.normal(0.0, 1.0, len(y))
+    margin = (2.0 * y - 1.0).astype(np.float64)
+    hard = rng.choice(len(y), size=max(1, int(0.12 * len(y))), replace=False)
+    margin[hard] *= -1.0  # the lead systematically gets these wrong
+    return shared, margin
+
+
+def transport_scores(
+    p_anchor: np.ndarray,
+    y: np.ndarray,
+    target_auc: float,
+    rng: np.random.Generator,
+    shared: np.ndarray | None = None,
+    margin: np.ndarray | None = None,
+) -> np.ndarray:
+    """Blend the anchor's logits toward shared-lead noise (degrade) or the
+    lead's capped oracle margin (improve) until the blend's AUC hits
+    `target_auc` (bisection on the monotone mixing coefficient)."""
+    eps = 1e-6
+    z = np.log(np.clip(p_anchor, eps, 1 - eps) / np.clip(1 - p_anchor, eps, 1 - eps))
+    zs = z / (z.std() + eps)
+    base_auc = T.roc_auc(y, zs)
+    if shared is None:
+        shared = rng.normal(0.0, 1.0, len(y))
+    if margin is None:
+        margin = 2.0 * y - 1.0
+    if target_auc <= base_auc:
+        # degrade toward mostly-shared noise (errors stay correlated)
+        z_to = 0.7 * shared + 0.7 * rng.normal(0.0, 1.0, len(y))
+    else:
+        # improve toward the lead's margin — capped by its hard samples
+        z_to = margin + 0.35 * shared + 0.15 * rng.normal(0.0, 1.0, len(y))
+    lo, hi = 0.0, 1.0
+    for _ in range(40):
+        mid = 0.5 * (lo + hi)
+        auc = _mix_auc(zs, z_to, y, mid)
+        if (auc > target_auc) == (target_auc <= base_auc):
+            lo = mid
+        else:
+            hi = mid
+    lam = 0.5 * (lo + hi)
+    zf = (1.0 - lam) * zs + lam * z_to + 0.05 * rng.normal(0.0, 1.0, len(y))
+    return 1.0 / (1.0 + np.exp(-zf))
+
+
+def target_auc_for(cfg: M.ModelConfig, anchor: M.ModelConfig, anchor_auc: float) -> float:
+    """Width/depth scaling law anchored at the nearest trained variant."""
+    dw = np.log2(cfg.width) - np.log2(anchor.width)
+    dd = np.log2(cfg.blocks) - np.log2(anchor.blocks)
+    return float(np.clip(anchor_auc + 0.020 * dw + 0.015 * dd, 0.70, 0.965))
+
+
+# ---------------------------------------------------------------------------
+# Build driver
+# ---------------------------------------------------------------------------
+
+
+def build(args) -> dict:
+    out_dir = pathlib.Path(args.out)
+    (out_dir / "models").mkdir(parents=True, exist_ok=True)
+
+    t0 = time.time()
+    cohort = D.CohortConfig(
+        n_patients=args.patients,
+        clips_per_patient=args.clips_per_patient,
+        clip_len=args.clip_len,
+        seed=args.seed,
+    )
+    x, y, pids = D.make_dataset(cohort)
+    (xtr, ytr), (xva, yva) = D.patient_split(x, y, pids, seed=args.seed + 4)
+    print(
+        f"[aot] cohort: {x.shape[0]} clips ({xtr.shape[0]} train / {xva.shape[0]} val)"
+        f" in {time.time() - t0:.1f}s"
+    )
+
+    trained_widths = WIDTHS if args.full_zoo else args.trained_widths
+    trained_blocks = BLOCKS if args.full_zoo else args.trained_blocks
+    batch_sizes = args.batch_sizes
+
+    zoo = [
+        M.ModelConfig(lead, w, d) for lead in LEADS for w in WIDTHS for d in BLOCKS
+    ]
+    trained: dict[str, tuple[dict, float, np.ndarray]] = {}
+
+    # 1. train the servable subset, score it on the shared val split
+    for cfg in zoo:
+        if cfg.width not in trained_widths or cfg.blocks not in trained_blocks:
+            continue
+        t1 = time.time()
+        params, hist = T.train_model(
+            cfg,
+            xtr[:, cfg.lead, :],
+            ytr,
+            steps=args.train_steps,
+            seed=args.seed + hash(cfg.model_id) % 10000,
+        )
+        scores = T.predict_proba(params, cfg, xva[:, cfg.lead, :])
+        auc = T.roc_auc(yva, scores)
+        trained[cfg.model_id] = (params, auc, scores)
+        print(
+            f"[aot] trained {cfg.model_id}: loss {hist[0]:.3f}→{hist[-1]:.3f} "
+            f"val_auc={auc:.4f} ({time.time() - t1:.1f}s)"
+        )
+
+    # 2. transport scores to the untrained profiles
+    rng = np.random.default_rng(args.seed + 99)
+    all_scores: dict[str, np.ndarray] = {}
+    all_auc: dict[str, float] = {}
+    for cfg in zoo:
+        if cfg.model_id in trained:
+            _, auc, scores = trained[cfg.model_id]
+        else:
+            anchor_cfg, (aparams, aauc, ascores) = min(
+                (
+                    (M.ModelConfig(cfg.lead, w, d), trained[f"lead{cfg.lead}_w{w}_d{d}"])
+                    for w in trained_widths
+                    for d in trained_blocks
+                ),
+                key=lambda kv: abs(np.log2(kv[0].width) - np.log2(cfg.width))
+                + abs(np.log2(kv[0].blocks) - np.log2(cfg.blocks)),
+            )
+            target = target_auc_for(cfg, anchor_cfg, aauc)
+            shared, margin = lead_difficulty(yva.astype(np.float64), cfg.lead, args.seed)
+            scores = transport_scores(
+                ascores, yva.astype(np.float64), target, rng, shared, margin
+            )
+            auc = T.roc_auc(yva, scores)
+        all_scores[cfg.model_id] = np.asarray(scores, np.float64)
+        all_auc[cfg.model_id] = float(auc)
+
+    # 3. lower servable variants to HLO text per batch size
+    artifacts: dict[str, dict[str, str]] = {}
+    for cfg in zoo:
+        if cfg.model_id not in trained:
+            continue
+        params = trained[cfg.model_id][0]
+        paths = {}
+        for b in batch_sizes:
+            t1 = time.time()
+            text = lower_variant(params, cfg, b, args.clip_len)
+            rel = f"models/{cfg.model_id}_b{b}.hlo.txt"
+            (out_dir / rel).write_text(text)
+            paths[str(b)] = rel
+            print(
+                f"[aot] lowered {cfg.model_id} batch={b}: {len(text)/1e3:.0f} kB "
+                f"({time.time() - t1:.1f}s)"
+            )
+        artifacts[cfg.model_id] = paths
+
+    # 3b. Fig-13 window sweep: one good trained model lowered at a range
+    # of observation-window lengths (batch 1).
+    window_sweep = None
+    sweep_id = f"lead1_w{max(w for w in trained_widths)}_d{max(d for d in trained_blocks)}"
+    if sweep_id in trained and args.window_sweep:
+        (out_dir / "window_sweep").mkdir(exist_ok=True)
+        sweep_cfg = M.ModelConfig(1, max(trained_widths), max(trained_blocks))
+        params = trained[sweep_id][0]
+        sweep_paths = {}
+        for length in args.window_sweep:
+            text = lower_variant(params, sweep_cfg, 1, length)
+            rel = f"window_sweep/len{length}.hlo.txt"
+            (out_dir / rel).write_text(text)
+            sweep_paths[str(length)] = rel
+        window_sweep = {"model_id": sweep_id, "artifacts": sweep_paths}
+        print(f"[aot] window sweep: {sorted(args.window_sweep)} for {sweep_id}")
+
+    # 3c. cross-language parity probe: a fixed random input + the score
+    # the jax ref path produces for the first trained model. The rust
+    # integration suite executes the same artifact on the same input and
+    # asserts agreement — guarding the whole python→HLO→PJRT chain.
+    first_id = next(iter(trained))
+    first_cfg = next(c for c in zoo if c.model_id == first_id)
+    prng = np.random.default_rng(4242)
+    probe_x = (prng.normal(0.0, 1.0, (1, args.clip_len)) * 0.4 + 0.1).astype(np.float32)
+    probe_score = float(
+        T.predict_proba(trained[first_id][0], first_cfg, probe_x)[0]
+    )
+    (out_dir / "parity.json").write_text(
+        json.dumps(
+            {
+                "model_id": first_id,
+                "input": np.round(probe_x[0], 6).tolist(),
+                "expected_score": probe_score,
+                "tolerance": 2e-3,
+            }
+        )
+    )
+
+    # 4. manifest + val scores
+    models = []
+    for i, cfg in enumerate(zoo):
+        models.append(
+            {
+                "index": i,
+                "id": cfg.model_id,
+                "lead": cfg.lead,
+                "width": cfg.width,
+                "blocks": cfg.blocks,
+                "depth": 2 + 2 * cfg.blocks,  # stem + head + 2 convs/block
+                "cardinality": cfg.cardinality,
+                "macs": M.macs(cfg, args.clip_len),
+                "params": M.param_count(cfg),
+                "memory_bytes": M.memory_bytes(cfg, args.clip_len, max(batch_sizes)),
+                "input_modality": f"ECG-lead-{['I','II','III'][cfg.lead]}",
+                "input_len": args.clip_len,
+                "val_auc": all_auc[cfg.model_id],
+                "trained": cfg.model_id in trained,
+                "artifacts": artifacts.get(cfg.model_id, {}),
+            }
+        )
+    manifest = {
+        "version": 1,
+        "clip_len": args.clip_len,
+        "fs": D.FS,
+        "batch_sizes": batch_sizes,
+        "n_models": len(models),
+        "calibration": D.calibration_constants(),
+        "val_n": int(len(yva)),
+        "window_sweep": window_sweep,
+        "models": models,
+    }
+    (out_dir / "zoo_manifest.json").write_text(json.dumps(manifest, indent=1))
+    (out_dir / "val_scores.json").write_text(
+        json.dumps(
+            {
+                "labels": yva.astype(int).tolist(),
+                "model_ids": [m["id"] for m in models],
+                "scores": [
+                    np.round(all_scores[m["id"]], 6).tolist() for m in models
+                ],
+            }
+        )
+    )
+    print(f"[aot] wrote {len(models)}-model zoo manifest; total {time.time()-t0:.1f}s")
+    return manifest
+
+
+def parse_args(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--clip-len", type=int, default=1000)
+    p.add_argument("--patients", type=int, default=57)
+    p.add_argument("--clips-per-patient", type=int, default=40)
+    p.add_argument("--train-steps", type=int, default=300)
+    p.add_argument("--seed", type=int, default=7)
+    p.add_argument("--batch-sizes", type=int, nargs="+", default=[1, 8])
+    p.add_argument("--trained-widths", type=int, nargs="+", default=[8, 16, 32])
+    p.add_argument("--trained-blocks", type=int, nargs="+", default=[2, 4])
+    p.add_argument(
+        "--full-zoo", action="store_true", help="train + lower all 60 variants"
+    )
+    p.add_argument(
+        "--window-sweep",
+        type=int,
+        nargs="*",
+        default=[250, 500, 1000, 2000, 4000],
+        help="Fig-13 input lengths (empty list disables the sweep)",
+    )
+    return p.parse_args(argv)
+
+
+if __name__ == "__main__":
+    build(parse_args())

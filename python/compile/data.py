@@ -1,0 +1,190 @@
+"""Synthetic CICU cohort generator (python mirror of rust `ingest::synth`).
+
+Substitution for the CHOA post-Norwood dataset (see DESIGN.md §3): 3-lead
+ECG clips at 250 Hz whose morphology is driven by a latent *severity*
+state s ∈ [0,1]. Critical (label 0) patients have high severity —
+tachycardic, low HRV, ST depression, widened QRS, more motion/sensor
+noise; stable (label 1) patients the opposite. The classes overlap so
+trained-model AUC lands in the paper's 0.85–0.95 band.
+
+The generator is deterministic given (seed, patient, clip) and the same
+parameterisation is re-implemented in rust/src/ingest/synth.rs; the
+cross-language agreement is covered by tests on the shared calibration
+constants exported in the manifest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+FS = 250  # Hz, paper's ECG sampling rate
+
+# Per-lead projection of the canonical beat: (P, QRS, T) amplitude scale
+# and additive baseline noise factor. Lead II (index 1) is the cleanest,
+# matching the paper's per-lead sample counts / quality ordering.
+LEAD_AMP = np.array([0.8, 1.0, 0.6])
+LEAD_NOISE = np.array([1.2, 0.8, 1.5])
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortConfig:
+    n_patients: int = 57
+    clips_per_patient: int = 40
+    clip_len: int = 1000  # samples @ 250 Hz (paper: 7500 = 30 s)
+    stable_frac: float = 0.45
+    seed: int = 7
+
+
+def severity_for_label(rng: np.random.Generator, label: int) -> float:
+    """Latent severity: stable (1) low, critical (0) high, overlapping."""
+    if label == 1:
+        return float(rng.beta(2.0, 5.0))
+    return float(rng.beta(5.0, 2.0))
+
+
+def beat_template(t: np.ndarray, severity: float, lead: int) -> np.ndarray:
+    """One cardiac cycle on normalized phase t ∈ [0,1): P-QRS-T gaussians."""
+    qrs_width = 0.018 * (1.0 + 0.9 * severity)  # widened QRS when sick
+    t_amp = 0.30 * (1.0 - 0.45 * severity)  # flattened T wave
+    st_level = -0.18 * severity  # ST depression
+
+    def g(center, width, amp):
+        return amp * np.exp(-0.5 * ((t - center) / width) ** 2)
+
+    wave = (
+        g(0.18, 0.025, 0.12)  # P
+        - g(0.385, qrs_width * 0.7, 0.22)  # Q
+        + g(0.40, qrs_width, 1.00)  # R
+        - g(0.42, qrs_width * 0.8, 0.28)  # S
+        + g(0.62, 0.045, t_amp)  # T
+    )
+    # ST segment shift between S and T
+    st_mask = np.exp(-0.5 * ((t - 0.51) / 0.05) ** 2)
+    wave = wave + st_level * st_mask
+    return LEAD_AMP[lead] * wave
+
+
+def synth_clip(
+    rng: np.random.Generator, severity: float, clip_len: int, lead: int
+) -> np.ndarray:
+    """One ECG clip (float32, length clip_len) for one lead."""
+    hr = 95.0 + 75.0 * severity + rng.normal(0.0, 6.0)  # bpm
+    hr = float(np.clip(hr, 60.0, 220.0))
+    hrv = 0.09 * (1.0 - severity) + 0.012  # RR jitter fraction
+    noise_sd = (0.035 + 0.09 * severity * rng.uniform(0.5, 1.5)) * LEAD_NOISE[lead]
+
+    out = np.zeros(clip_len, np.float32)
+    pos = -rng.uniform(0.0, FS * 60.0 / hr)  # random phase offset
+    while pos < clip_len:
+        rr = FS * 60.0 / hr * (1.0 + rng.normal(0.0, hrv))
+        rr = max(rr, FS * 60.0 / 230.0)
+        start = int(np.floor(pos))
+        n = int(np.ceil(rr))
+        t = (np.arange(n) - (pos - start)) / rr
+        seg = beat_template(t, severity, lead).astype(np.float32)
+        lo, hi = max(start, 0), min(start + n, clip_len)
+        if hi > lo:
+            out[lo:hi] += seg[lo - start : hi - start]
+        pos += rr
+    # baseline wander (respiration) + measurement noise
+    ph = rng.uniform(0.0, 2 * np.pi)
+    t_abs = np.arange(clip_len) / FS
+    out += 0.05 * np.sin(2 * np.pi * 0.25 * t_abs + ph).astype(np.float32)
+    out += rng.normal(0.0, noise_sd, clip_len).astype(np.float32)
+    # occasional sensor dropout burst ("sensor falls off"), sicker => likelier
+    if rng.uniform() < 0.08 + 0.22 * severity:
+        b0 = int(rng.uniform(0, clip_len * 0.8))
+        blen = int(rng.uniform(clip_len * 0.02, clip_len * 0.10))
+        out[b0 : b0 + blen] = rng.normal(0.0, 0.02, min(blen, clip_len - b0))
+    return out
+
+
+def make_dataset(cfg: CohortConfig):
+    """Cohort → (x, y, patient_id): x (N, 3, clip_len) f32, y (N,) {0,1}.
+
+    Split MUST be by patient (the paper splits 47 train / 10 test
+    patients) — use `patient_split`.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    n_stable = int(round(cfg.n_patients * cfg.stable_frac))
+    labels = np.array([1] * n_stable + [0] * (cfg.n_patients - n_stable))
+    rng.shuffle(labels)
+
+    xs, ys, pids = [], [], []
+    for pid in range(cfg.n_patients):
+        label = int(labels[pid])
+        prng = np.random.default_rng(cfg.seed * 100003 + pid)
+        for _ in range(cfg.clips_per_patient):
+            sev = severity_for_label(prng, label)
+            clip = np.stack(
+                [synth_clip(prng, sev, cfg.clip_len, lead) for lead in range(3)]
+            )
+            xs.append(clip)
+            ys.append(label)
+            pids.append(pid)
+    return (
+        np.stack(xs).astype(np.float32),
+        np.array(ys, np.int32),
+        np.array(pids, np.int32),
+    )
+
+
+def patient_split(x, y, pids, val_frac: float = 0.25, seed: int = 11):
+    """Split by patient id, like the paper's 47/10 patient split."""
+    rng = np.random.default_rng(seed)
+    unique = np.unique(pids)
+    rng.shuffle(unique)
+    n_val = max(1, int(round(len(unique) * val_frac)))
+    val_pat = set(unique[:n_val].tolist())
+    val_mask = np.array([p in val_pat for p in pids])
+    tr, va = ~val_mask, val_mask
+    return (x[tr], y[tr]), (x[va], y[va])
+
+
+def staleness_dataset(
+    n_patients: int, clip_len: int, delays_h: list, seed: int = 23
+):
+    """Fig 2 substrate: clips sampled `delay` hours before the label time.
+
+    Patient severity drifts toward its label's end-state; stale clips
+    reflect an earlier, less separable severity, so AUC decays with
+    delay — the behaviour Fig 2 measures on real CICU data.
+    """
+    rng = np.random.default_rng(seed)
+    out = {}
+    labels = rng.integers(0, 2, n_patients)
+    # initial severities near the undecided middle
+    init = rng.beta(4, 4, n_patients)
+    for d in delays_h:
+        xs, ys = [], []
+        w = float(np.exp(-d / 12.0))  # 12 h drift time-constant
+        for pid in range(n_patients):
+            lab = int(labels[pid])
+            prng = np.random.default_rng(seed * 7919 + pid * 31 + int(d * 10))
+            end_sev = severity_for_label(prng, lab)
+            sev = float(np.clip(w * end_sev + (1 - w) * init[pid], 0.0, 1.0))
+            clip = np.stack(
+                [synth_clip(prng, sev, clip_len, lead) for lead in range(3)]
+            )
+            xs.append(clip)
+            ys.append(lab)
+        out[d] = (np.stack(xs).astype(np.float32), np.array(ys, np.int32))
+    return out
+
+
+def calibration_constants() -> dict:
+    """Generator constants exported into the manifest for the rust mirror."""
+    return {
+        "fs": FS,
+        "lead_amp": LEAD_AMP.tolist(),
+        "lead_noise": LEAD_NOISE.tolist(),
+        "hr_base": 95.0,
+        "hr_sev_gain": 75.0,
+        "hrv_base": 0.012,
+        "hrv_stable_gain": 0.09,
+        "st_depression": -0.18,
+        "noise_base": 0.035,
+        "noise_sev_gain": 0.09,
+    }

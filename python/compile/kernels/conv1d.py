@@ -1,0 +1,115 @@
+"""Pallas 1-D convolution kernel — the L1 compute hot-spot.
+
+HOLMES' zoo models are 1-D ResNeXt CNNs; on the paper's V100s the conv
+layers ran through cuDNN. Here the conv is re-thought for TPU (see
+DESIGN.md §Hardware-Adaptation): each tap contributes a dense
+``(Lout, Cin) @ (Cin, Cout)`` matmul that lands on the MXU systolic
+array, accumulated in float32, with bias + ReLU fused into the same
+kernel so activations never round-trip to HBM between conv and
+nonlinearity.
+
+Blocking: the grid iterates over the batch; one grid step holds one
+padded input slab ``(Lp, Cin)``, the full tap-major weight tensor
+``(K, Cin, Cout)`` and one output slab ``(Lout, Cout)`` in VMEM. For
+every zoo variant (L ≤ 2000 after the stem, C ≤ 128, K ≤ 9) the slab
+set is ≤ ~2.2 MiB — comfortably inside the ~16 MiB VMEM budget, so no
+halo exchange between length tiles is needed. ``vmem_bytes`` below is
+the number the §Perf analysis reports.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; lowering stays pure-HLO so the rust runtime executes it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv1d_kernel(x_ref, w_ref, b_ref, o_ref, *, taps: int, stride: int, relu: bool):
+    """One batch element: accumulate K tap-matmuls on the MXU."""
+    x = x_ref[0]  # (Lp, Cin)
+    lout = o_ref.shape[1]
+    cout = o_ref.shape[2]
+    acc = jnp.zeros((lout, cout), jnp.float32)
+    for t in range(taps):  # static unroll: K independent MXU matmuls
+        xs = jax.lax.slice(
+            x, (t, 0), (t + (lout - 1) * stride + 1, x.shape[1]), (stride, 1)
+        )
+        acc = acc + jnp.dot(
+            xs.astype(jnp.float32),
+            w_ref[t].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+    acc = acc + b_ref[...].astype(jnp.float32)[None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+def conv1d(x, w, b, *, stride: int = 1, relu: bool = True):
+    """Pallas conv1d, channels-last, valid padding. Matches ref.conv1d_ref.
+
+    x: (B, L, Cin); w: (K, Cin, Cout); b: (Cout,).
+    Returns (B, Lout, Cout), Lout = (L - K) // stride + 1.
+    """
+    batch, l, cin = x.shape
+    k, wcin, cout = w.shape
+    assert wcin == cin, f"channel mismatch {wcin} != {cin}"
+    lout = (l - k) // stride + 1
+    kernel = functools.partial(_conv1d_kernel, taps=k, stride=stride, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, l, cin), lambda i: (i, 0, 0)),
+            pl.BlockSpec((k, cin, cout), lambda i: (0, 0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, lout, cout), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, lout, cout), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+def grouped_conv1d(x, w, b, *, groups: int, stride: int = 1, relu: bool = True):
+    """ResNeXt grouped conv: `groups` independent channel slices.
+
+    Grouping is expressed at the wrapper level (g smaller dense kernels);
+    each group's matmul is still MXU-shaped. w: (K, Cin//groups, Cout).
+    """
+    if groups == 1:
+        return conv1d(x, w, b, stride=stride, relu=relu)
+    cin, cout = x.shape[2], w.shape[2]
+    cig, cog = cin // groups, cout // groups
+    outs = [
+        conv1d(
+            x[:, :, g * cig : (g + 1) * cig],
+            w[:, :, g * cog : (g + 1) * cog],
+            b[g * cog : (g + 1) * cog],
+            stride=stride,
+            relu=relu,
+        )
+        for g in range(groups)
+    ]
+    return jnp.concatenate(outs, axis=2)
+
+
+def vmem_bytes(l: int, cin: int, cout: int, k: int, stride: int = 1) -> int:
+    """VMEM working-set estimate for one grid step (f32), for §Perf."""
+    lout = (l - k) // stride + 1
+    return 4 * (l * cin + k * cin * cout + lout * cout + lout * cout)
+
+
+def mxu_utilization_estimate(l: int, cin: int, cout: int, k: int) -> float:
+    """Fraction of MXU capacity the tap-matmul shape can use.
+
+    The 128x128 systolic array is fully fed when both contraction (Cin)
+    and output (Cout) dims reach 128; smaller dims waste lanes. This is
+    the structural estimate DESIGN.md §Perf reports (interpret-mode
+    wallclock is not a TPU proxy).
+    """
+    return min(cin, 128) / 128.0 * min(cout, 128) / 128.0

@@ -1,0 +1,52 @@
+"""Pallas blocked matmul — dense classifier head of the zoo models.
+
+Row-blocked: grid over row tiles of x; weights stay resident in VMEM
+across grid steps (the classifier head is (W, 1) — tiny). Bias and the
+optional ReLU are fused. interpret=True (see conv1d.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    acc = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    acc = acc + b_ref[...].astype(jnp.float32)[None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def matmul(x, w, b, *, relu: bool = False, block_rows: int = 128):
+    """(B, F) @ (F, O) + (O,), row-blocked. Matches ref.matmul_ref."""
+    bsz, f = x.shape
+    fw, o = w.shape
+    assert f == fw, f"contraction mismatch {f} != {fw}"
+    br = min(block_rows, bsz)
+    # pad rows up to a multiple of the block
+    pad = (-bsz) % br
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    rows = xp.shape[0]
+    kernel = functools.partial(_matmul_kernel, relu=relu)
+    yp = pl.pallas_call(
+        kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, o), lambda i: (0, 0)),
+            pl.BlockSpec((o,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, o), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, o), x.dtype),
+        interpret=True,
+    )(xp, w, b)
+    return yp[:bsz]

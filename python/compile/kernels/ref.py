@@ -1,0 +1,73 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this
+package must match its `*_ref` counterpart to float32 tolerance on all
+shapes (enforced by pytest + hypothesis in ``python/tests``). The refs
+are also the *fast* path used during build-time training (interpret-mode
+Pallas is far too slow to train with).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def conv1d_ref(x, w, b, *, stride: int = 1, relu: bool = True):
+    """1-D convolution, channels-last. Valid padding.
+
+    Args:
+      x: (B, L, Cin) float input (pad outside if 'same' is wanted).
+      w: (K, Cin, Cout) taps-first weights.
+      b: (Cout,) bias.
+      stride: output stride.
+      relu: fuse max(0, .) on the output.
+
+    Returns:
+      (B, Lout, Cout) with Lout = (L - K) // stride + 1.
+    """
+    k, _, _ = w.shape
+    l = x.shape[1]
+    lout = (l - k) // stride + 1
+    acc = jnp.zeros((x.shape[0], lout, w.shape[2]), jnp.float32)
+    for t in range(k):
+        # strided window of x starting at tap offset t
+        xs = x[:, t : t + (lout - 1) * stride + 1 : stride, :]
+        acc = acc + jnp.einsum(
+            "blc,cd->bld", xs.astype(jnp.float32), w[t].astype(jnp.float32)
+        )
+    acc = acc + b.astype(jnp.float32)[None, None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    return acc
+
+
+def grouped_conv1d_ref(x, w, b, *, groups: int, stride: int = 1, relu: bool = True):
+    """Grouped conv: channels split into `groups` independent convs.
+
+    w: (K, Cin // groups, Cout) where output channels are grouped
+    contiguously, i.e. group g maps x[..., g*cig:(g+1)*cig] to
+    out[..., g*cog:(g+1)*cog].
+    """
+    cin = x.shape[2]
+    cout = w.shape[2]
+    cig, cog = cin // groups, cout // groups
+    outs = []
+    for g in range(groups):
+        outs.append(
+            conv1d_ref(
+                x[:, :, g * cig : (g + 1) * cig],
+                w[:, :, g * cog : (g + 1) * cog],
+                b[g * cog : (g + 1) * cog],
+                stride=stride,
+                relu=relu,
+            )
+        )
+    return jnp.concatenate(outs, axis=2)
+
+
+def matmul_ref(x, w, b, *, relu: bool = False):
+    """Dense head oracle: (B, F) @ (F, O) + (O,)."""
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32)[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y

@@ -1,0 +1,154 @@
+"""L2: ResNeXt-1D zoo model (jax), calling the L1 Pallas kernels.
+
+The paper trains a 1-D adaptation of ResNeXt [36] per ECG lead, varying
+the first-layer filter count (width ∈ {8,16,32,64,128}) and the number
+of residual blocks (∈ {2,4,8,16}) — a 60-model zoo. This module defines
+that architecture once, parameterised by (width, blocks):
+
+    input (B, L) single-lead clip
+      → stem conv  K=9, stride 4, 1→W channels, ReLU        [Pallas conv1d]
+      → `blocks` × residual block:
+            grouped conv K=3, W→W, cardinality 4, ReLU       [Pallas grouped_conv1d]
+            conv         K=3, W→W, no activation             [Pallas conv1d]
+            out = ReLU(x + h)                                 (XLA fuses)
+      → global average pool over length
+      → dense head W→1                                        [Pallas matmul]
+      → sigmoid probability (B,)
+
+Two execution paths share one parameter pytree:
+  * ``use_pallas=True``  — the kernels above; this is what `aot.py`
+    lowers to HLO for the rust runtime.
+  * ``use_pallas=False`` — the pure-jnp refs; used for training (fast)
+    and as the L2 correctness oracle (tested equal in python/tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import conv1d as pk
+from compile.kernels import matmul as mk
+from compile.kernels import ref
+
+STEM_TAPS = 9
+STEM_STRIDE = 4
+BLOCK_TAPS = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One zoo variant (a row of the paper's Table 3 profile)."""
+
+    lead: int  # ECG lead index 0..2 (I, II, III)
+    width: int  # first-layer filter count
+    blocks: int  # residual blocks
+
+    @property
+    def cardinality(self) -> int:
+        # ResNeXt grouped-conv cardinality; dense below 16 channels.
+        return 4 if self.width >= 16 else 1
+
+    @property
+    def model_id(self) -> str:
+        return f"lead{self.lead}_w{self.width}_d{self.blocks}"
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """He-normal init, taps-first conv layout (K, Cin, Cout)."""
+    w = cfg.width
+    keys = jax.random.split(key, 2 * cfg.blocks + 2)
+
+    def he(key, shape, fan_in):
+        return (jax.random.normal(key, shape) * np.sqrt(2.0 / fan_in)).astype(
+            jnp.float32
+        )
+
+    params = {
+        "stem_w": he(keys[0], (STEM_TAPS, 1, w), STEM_TAPS),
+        "stem_b": jnp.zeros((w,), jnp.float32),
+        "head_w": he(keys[1], (w, 1), w),
+        "head_b": jnp.zeros((1,), jnp.float32),
+        "blocks": [],
+    }
+    cig = w // cfg.cardinality
+    for i in range(cfg.blocks):
+        params["blocks"].append(
+            {
+                "w1": he(keys[2 + 2 * i], (BLOCK_TAPS, cig, w), BLOCK_TAPS * cig),
+                "b1": jnp.zeros((w,), jnp.float32),
+                "w2": he(keys[3 + 2 * i], (BLOCK_TAPS, w, w), BLOCK_TAPS * w),
+                "b2": jnp.zeros((w,), jnp.float32),
+            }
+        )
+    return params
+
+
+def _pad_same(x, taps: int):
+    lo = (taps - 1) // 2
+    return jnp.pad(x, ((0, 0), (lo, taps - 1 - lo), (0, 0)))
+
+
+def forward_logits(params: dict, x, cfg: ModelConfig, *, use_pallas: bool):
+    """(B, L) single-lead clip → (B,) logits."""
+    conv = pk.conv1d if use_pallas else ref.conv1d_ref
+    gconv = pk.grouped_conv1d if use_pallas else ref.grouped_conv1d_ref
+    dense = mk.matmul if use_pallas else ref.matmul_ref
+
+    h = x[:, :, None]  # (B, L, 1)
+    h = conv(h, params["stem_w"], params["stem_b"], stride=STEM_STRIDE, relu=True)
+    for blk in params["blocks"]:
+        r = h
+        h = _pad_same(h, BLOCK_TAPS)
+        h = gconv(h, blk["w1"], blk["b1"], groups=cfg.cardinality, stride=1, relu=True)
+        h = _pad_same(h, BLOCK_TAPS)
+        h = conv(h, blk["w2"], blk["b2"], stride=1, relu=False)
+        h = jnp.maximum(h + r, 0.0)
+    pooled = jnp.mean(h, axis=1)  # (B, W) global average pool
+    logits = dense(pooled, params["head_w"], params["head_b"], relu=False)
+    return logits[:, 0]
+
+
+def forward_proba(params: dict, x, cfg: ModelConfig, *, use_pallas: bool):
+    return jax.nn.sigmoid(forward_logits(params, x, cfg, use_pallas=use_pallas))
+
+
+# ---------------------------------------------------------------------------
+# Profile arithmetic (Table 3 fields), shared with the manifest.
+# ---------------------------------------------------------------------------
+
+
+def stem_out_len(clip_len: int) -> int:
+    return (clip_len - STEM_TAPS) // STEM_STRIDE + 1
+
+
+def macs(cfg: ModelConfig, clip_len: int) -> int:
+    """Multiply-accumulate count of one forward pass, batch 1."""
+    l1 = stem_out_len(clip_len)
+    total = l1 * STEM_TAPS * 1 * cfg.width  # stem
+    w = cfg.width
+    per_block = (
+        l1 * BLOCK_TAPS * (w // cfg.cardinality) * w  # grouped conv
+        + l1 * BLOCK_TAPS * w * w  # dense conv
+    )
+    total += cfg.blocks * per_block
+    total += w  # head
+    return int(total)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    w = cfg.width
+    n = STEM_TAPS * w + w + w + 1
+    n += cfg.blocks * (
+        BLOCK_TAPS * (w // cfg.cardinality) * w + w + BLOCK_TAPS * w * w + w
+    )
+    return int(n)
+
+
+def memory_bytes(cfg: ModelConfig, clip_len: int, batch: int) -> int:
+    """Weights + peak activation estimate (f32), the Table 3 memory field."""
+    act = batch * stem_out_len(clip_len) * cfg.width * 2  # double-buffered slab
+    return 4 * (param_count(cfg) + act)

@@ -1,0 +1,111 @@
+"""Quick build-time trainer for zoo variants (hand-rolled Adam, no optax).
+
+Training runs on the pure-jnp ref path (XLA-compiled, fast); the
+resulting parameters are then lowered through the Pallas path by aot.py
+— both paths share one pytree, and python/tests asserts they agree.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+
+
+def bce_loss(params, x, y, cfg: M.ModelConfig):
+    logits = M.forward_logits(params, x, cfg, use_pallas=False)
+    y = y.astype(jnp.float32)
+    # numerically stable BCE-with-logits
+    return jnp.mean(
+        jnp.maximum(logits, 0.0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1**t), m)
+    vh = jax.tree.map(lambda v: v / (1 - b2**t), v)
+    new = jax.tree.map(lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def train_model(
+    cfg: M.ModelConfig,
+    x_train: np.ndarray,  # (N, L) this model's lead only
+    y_train: np.ndarray,
+    *,
+    steps: int = 300,
+    batch: int = 64,
+    lr: float = 2e-3,
+    seed: int = 0,
+):
+    """Returns (params, loss_history). Normalises clips per-sample."""
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(cfg, key)
+    opt = adam_init(params)
+
+    x_train = normalize(x_train)
+    n = x_train.shape[0]
+
+    @jax.jit
+    def step(params, opt, xb, yb):
+        loss, grads = jax.value_and_grad(bce_loss)(params, xb, yb, cfg)
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    rng = np.random.default_rng(seed + 1)
+    history = []
+    for i in range(steps):
+        idx = rng.integers(0, n, batch)
+        params, opt, loss = step(params, opt, x_train[idx], y_train[idx])
+        if i % 25 == 0 or i == steps - 1:
+            history.append(float(loss))
+    return params, history
+
+
+def normalize(x: np.ndarray) -> np.ndarray:
+    """Per-clip standardisation — identical to rust serving-side prep."""
+    mu = x.mean(axis=-1, keepdims=True)
+    sd = x.std(axis=-1, keepdims=True) + 1e-6
+    return ((x - mu) / sd).astype(np.float32)
+
+
+def predict_proba(params, cfg: M.ModelConfig, x: np.ndarray, batch: int = 256):
+    """Validation-set scores on the ref path (normalised internally)."""
+    x = normalize(x)
+    fwd = jax.jit(lambda xb: M.forward_proba(params, xb, cfg, use_pallas=False))
+    outs = []
+    for i in range(0, x.shape[0], batch):
+        outs.append(np.asarray(fwd(x[i : i + batch])))
+    return np.concatenate(outs)
+
+
+def roc_auc(y: np.ndarray, score: np.ndarray) -> float:
+    """Rank-statistic AUC (ties handled by midranks)."""
+    order = np.argsort(score, kind="mergesort")
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, len(score) + 1)
+    # midranks for ties
+    s_sorted = score[order]
+    i = 0
+    while i < len(s_sorted):
+        j = i
+        while j + 1 < len(s_sorted) and s_sorted[j + 1] == s_sorted[i]:
+            j += 1
+        if j > i:
+            ranks[order[i : j + 1]] = (i + j + 2) / 2.0
+        i = j + 1
+    pos = y == 1
+    n1, n0 = pos.sum(), (~pos).sum()
+    if n1 == 0 or n0 == 0:
+        return 0.5
+    return float((ranks[pos].sum() - n1 * (n1 + 1) / 2.0) / (n1 * n0))

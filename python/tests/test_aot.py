@@ -1,0 +1,85 @@
+"""AOT build: manifest integrity, score transport, HLO text validity."""
+
+import json
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile import train as T
+
+
+def test_transport_scores_hits_target_auc():
+    rng = np.random.default_rng(0)
+    y = rng.integers(0, 2, 600).astype(np.float64)
+    anchor = 1 / (1 + np.exp(-((2 * y - 1) * 1.2 + rng.normal(0, 1.4, 600))))
+    for target in (0.70, 0.80, 0.93):
+        s = aot.transport_scores(anchor, y, target, rng)
+        assert abs(T.roc_auc(y, s) - target) < 0.04
+        assert ((s > 0) & (s < 1)).all()
+
+
+def test_target_auc_scaling_law():
+    anchor = M.ModelConfig(0, 16, 4)
+    bigger = M.ModelConfig(0, 128, 16)
+    smaller = M.ModelConfig(0, 8, 2)
+    a = aot.target_auc_for(bigger, anchor, 0.88)
+    b = aot.target_auc_for(smaller, anchor, 0.88)
+    assert a > 0.88 > b
+    assert a <= 0.965 and b >= 0.70
+
+
+def test_lower_variant_emits_hlo_text():
+    cfg = M.ModelConfig(lead=0, width=8, blocks=2)
+    import jax
+
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    text = aot.lower_variant(params, cfg, batch=1, clip_len=64)
+    assert text.startswith("HloModule")
+    assert "ROOT" in text
+    # the silent-weight-wipe regression: constants must never be elided
+    assert "constant({...}" not in text and "{...}" not in text
+
+
+def test_lowered_constants_carry_weights():
+    # a weight-sized constant must appear verbatim (not zeroed/elided)
+    import jax
+    import jax.numpy as jnp
+
+    cfg = M.ModelConfig(lead=0, width=16, blocks=2)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    marker = float(np.asarray(params["head_w"])[3, 0])
+    text = aot.lower_variant(params, cfg, batch=1, clip_len=64)
+    assert f"{marker:.6}"[:6] in text or f"{marker}"[:6] in text, (
+        "head weight value missing from HLO text — constants were elided"
+    )
+
+
+@pytest.mark.slow
+def test_mini_build_end_to_end(tmp_path):
+    args = aot.parse_args(
+        [
+            "--out", str(tmp_path),
+            "--clip-len", "200",
+            "--patients", "10",
+            "--clips-per-patient", "4",
+            "--train-steps", "30",
+            "--batch-sizes", "1",
+            "--trained-widths", "8",
+            "--trained-blocks", "2",
+        ]
+    )
+    manifest = aot.build(args)
+    assert manifest["n_models"] == 60
+    m = json.loads((tmp_path / "zoo_manifest.json").read_text())
+    trained = [x for x in m["models"] if x["trained"]]
+    assert len(trained) == 3  # one per lead
+    for t in trained:
+        assert (tmp_path / t["artifacts"]["1"]).exists()
+    vs = json.loads((tmp_path / "val_scores.json").read_text())
+    assert len(vs["scores"]) == 60
+    assert len(vs["scores"][0]) == len(vs["labels"])
+    # profiles monotone: bigger model → more MACs
+    by_id = {x["id"]: x for x in m["models"]}
+    assert by_id["lead0_w128_d16"]["macs"] > by_id["lead0_w8_d2"]["macs"]

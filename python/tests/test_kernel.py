@@ -1,0 +1,164 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compiled artifacts — every
+HLO module the rust runtime executes is built from these kernels.
+Hypothesis sweeps shapes/strides/dtypes; assert_allclose against ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import conv1d as pk
+from compile.kernels import matmul as mk
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def rand(*shape, dtype=np.float32):
+    return RNG.standard_normal(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# conv1d
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 4),
+    l=st.integers(16, 64),
+    cin=st.sampled_from([1, 2, 4, 8]),
+    cout=st.sampled_from([1, 4, 8, 16]),
+    k=st.sampled_from([1, 3, 5, 9]),
+    stride=st.sampled_from([1, 2, 4]),
+    relu=st.booleans(),
+)
+def test_conv1d_matches_ref(batch, l, cin, cout, k, stride, relu):
+    if l < k:
+        l = k
+    x, w, b = rand(batch, l, cin), rand(k, cin, cout), rand(cout)
+    got = pk.conv1d(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), stride=stride, relu=relu
+    )
+    want = ref.conv1d_ref(x, w, b, stride=stride, relu=relu)
+    assert got.shape == want.shape
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_conv1d_known_values():
+    # identity tap: K=1, w=I ⇒ output == relu(x + b)
+    x = rand(2, 10, 3)
+    w = np.eye(3, dtype=np.float32)[None, :, :]
+    b = np.array([0.5, -0.5, 0.0], np.float32)
+    got = np.asarray(pk.conv1d(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b)))
+    assert_allclose(got, np.maximum(x + b, 0.0), rtol=1e-6)
+
+
+def test_conv1d_valid_output_length():
+    x, w, b = rand(1, 33, 2), rand(5, 2, 4), rand(4)
+    for stride in (1, 2, 3):
+        out = pk.conv1d(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), stride=stride)
+        assert out.shape == (1, (33 - 5) // stride + 1, 4)
+
+
+def test_conv1d_channel_mismatch_raises():
+    with pytest.raises(AssertionError):
+        pk.conv1d(jnp.zeros((1, 8, 3)), jnp.zeros((3, 2, 4)), jnp.zeros((4,)))
+
+
+def test_conv1d_no_relu_keeps_negatives():
+    x = -np.ones((1, 8, 1), np.float32)
+    w = np.ones((1, 1, 1), np.float32)
+    b = np.zeros((1,), np.float32)
+    out = np.asarray(
+        pk.conv1d(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), relu=False)
+    )
+    assert (out < 0).all()
+
+
+# ---------------------------------------------------------------------------
+# grouped conv
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    groups=st.sampled_from([1, 2, 4]),
+    cmul=st.sampled_from([1, 2]),
+    l=st.integers(8, 40),
+    k=st.sampled_from([1, 3]),
+)
+def test_grouped_conv_matches_ref(groups, cmul, l, k):
+    cin = cout = groups * 4 * cmul
+    x, w, b = rand(2, l, cin), rand(k, cin // groups, cout), rand(cout)
+    got = pk.grouped_conv1d(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), groups=groups
+    )
+    want = ref.grouped_conv1d_ref(x, w, b, groups=groups)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_grouped_conv_group_isolation():
+    # zeroing group 0's input must not change group 1's output
+    groups, cin = 2, 8
+    x, w, b = rand(1, 20, cin), rand(3, cin // groups, cin), rand(cin)
+    base = np.asarray(
+        pk.grouped_conv1d(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), groups=2)
+    )
+    x2 = x.copy()
+    x2[:, :, :4] = 0.0
+    out = np.asarray(
+        pk.grouped_conv1d(jnp.asarray(x2), jnp.asarray(w), jnp.asarray(b), groups=2)
+    )
+    assert_allclose(out[:, :, 4:], base[:, :, 4:], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bsz=st.integers(1, 70),
+    f=st.sampled_from([1, 3, 8, 32]),
+    o=st.sampled_from([1, 2, 8]),
+    relu=st.booleans(),
+    block=st.sampled_from([4, 16, 128]),
+)
+def test_matmul_matches_ref(bsz, f, o, relu, block):
+    x, w, b = rand(bsz, f), rand(f, o), rand(o)
+    got = mk.matmul(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), relu=relu, block_rows=block
+    )
+    want = ref.matmul_ref(x, w, b, relu=relu)
+    assert got.shape == want.shape
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_row_padding_edge():
+    # bsz not a multiple of block_rows exercises the pad/trim path
+    x, w, b = rand(5, 4), rand(4, 2), rand(2)
+    got = mk.matmul(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), block_rows=4)
+    assert_allclose(np.asarray(got), np.asarray(ref.matmul_ref(x, w, b)), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# perf-analysis helpers
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_estimate_within_budget_for_all_zoo_shapes():
+    # every zoo variant must fit the documented VMEM slab budget
+    for c in (8, 16, 32, 64, 128):
+        assert pk.vmem_bytes(2000, c, c, 9) < 16 * 2**20
+
+
+def test_mxu_utilization_monotone_in_channels():
+    utils = [pk.mxu_utilization_estimate(1000, c, c, 3) for c in (8, 16, 64, 128)]
+    assert utils == sorted(utils)
+    assert utils[-1] == 1.0

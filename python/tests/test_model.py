@@ -1,0 +1,70 @@
+"""L2 correctness: ResNeXt-1D shapes, pallas-vs-ref path agreement,
+profile arithmetic."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return M.ModelConfig(lead=0, width=8, blocks=2)
+
+
+@pytest.fixture(scope="module")
+def small_params(small_cfg):
+    return M.init_params(small_cfg, jax.random.PRNGKey(0))
+
+
+def test_forward_shapes(small_cfg, small_params):
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((3, 200)), jnp.float32)
+    out = M.forward_proba(small_params, x, small_cfg, use_pallas=False)
+    assert out.shape == (3,)
+    assert ((out >= 0) & (out <= 1)).all()
+
+
+@pytest.mark.parametrize("width,blocks", [(8, 2), (16, 2), (16, 4)])
+def test_pallas_path_matches_ref_path(width, blocks):
+    cfg = M.ModelConfig(lead=1, width=width, blocks=blocks)
+    params = M.init_params(cfg, jax.random.PRNGKey(42))
+    x = jnp.asarray(
+        np.random.default_rng(2).standard_normal((2, 160)), jnp.float32
+    )
+    ref_out = M.forward_logits(params, x, cfg, use_pallas=False)
+    pal_out = M.forward_logits(params, x, cfg, use_pallas=True)
+    assert_allclose(np.asarray(pal_out), np.asarray(ref_out), rtol=2e-4, atol=2e-4)
+
+
+def test_cardinality_rule():
+    assert M.ModelConfig(0, 8, 2).cardinality == 1
+    for w in (16, 32, 64, 128):
+        assert M.ModelConfig(0, w, 2).cardinality == 4
+
+
+def test_macs_monotone_in_width_and_depth():
+    base = M.macs(M.ModelConfig(0, 8, 2), 1000)
+    assert M.macs(M.ModelConfig(0, 16, 2), 1000) > base
+    assert M.macs(M.ModelConfig(0, 8, 4), 1000) > base
+    assert M.macs(M.ModelConfig(0, 128, 16), 1000) > 100 * base
+
+
+def test_param_count_matches_pytree(small_cfg, small_params):
+    n = sum(x.size for x in jax.tree.leaves(small_params))
+    assert n == M.param_count(small_cfg)
+
+
+def test_stem_out_len():
+    assert M.stem_out_len(1000) == (1000 - M.STEM_TAPS) // M.STEM_STRIDE + 1
+
+
+def test_memory_bytes_positive_and_scales_with_batch():
+    cfg = M.ModelConfig(0, 32, 4)
+    assert M.memory_bytes(cfg, 1000, 8) > M.memory_bytes(cfg, 1000, 1) > 0
+
+
+def test_model_id_format(small_cfg):
+    assert small_cfg.model_id == "lead0_w8_d2"

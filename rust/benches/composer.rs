@@ -1,0 +1,56 @@
+//! Composer benches: full Table-2-configuration searches per method, a
+//! single SMBO iteration's components, and the ablations DESIGN.md calls
+//! out (genetic vs random exploration).
+//!
+//! `cargo bench --bench composer`
+
+use holmes::bench::{black_box, Bencher};
+use holmes::composer::{explore, Composer};
+use holmes::config::{ComposerConfig, SystemConfig};
+use holmes::exp::common::{Method, SearchContext};
+use holmes::profiler::{AccuracyProfiler, ValidationAccuracyProfiler};
+use holmes::rng::Rng;
+use holmes::zoo::{Selector, Zoo};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut b = if quick { Bencher::quick() } else { Bencher::default() };
+    println!("== composer benches ==");
+    let zoo = Zoo::load(std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+        .expect("run `make artifacts` first");
+    let system = SystemConfig { gpus: 2, patients: 32, window_s: 30.0 };
+    let ctx = SearchContext::new(&zoo, system);
+    let cfg = ComposerConfig::default();
+
+    // ---- end-to-end searches (one per Table-2 method)
+    for m in Method::ALL {
+        b.bench(&format!("search/{}@200ms", m.name()), || {
+            black_box(ctx.run(m, 0.2, 0, &cfg).best.accuracy.roc_auc)
+        });
+    }
+
+    // ---- components of one SMBO iteration
+    let acc = ValidationAccuracyProfiler::from_zoo(&zoo);
+    let ten = Selector::from_indices(zoo.n(), (0..10).map(|i| i * 5));
+    b.bench("profiler/f_a/10-model-ensemble", || black_box(acc.accuracy(&ten).roc_auc));
+
+    let mut rng = Rng::seed_from_u64(9);
+    let b_set: Vec<Selector> = (0..24)
+        .map(|i| Selector::from_indices(zoo.n(), [i, i + 7, i + 13]))
+        .collect();
+    b.bench("explore/64-candidates", || {
+        black_box(explore(&b_set, zoo.n(), 64, 3, 0.8, 0.5, None, &mut rng).len())
+    });
+
+    // ---- ablation: genetic exploration vs pure random (p_genetic = 0)
+    let cfg_random = ComposerConfig { p_genetic: 0.0, ..Default::default() };
+    let lat = holmes::profiler::AnalyticLatencyProfiler::new(
+        holmes::exp::common::default_service_times(&zoo),
+    );
+    for (name, c) in [("genetic", &cfg), ("random-explore", &cfg_random)] {
+        b.bench(&format!("ablation/holmes-{name}"), || {
+            let composer = Composer::new(&zoo, &acc, &lat, c.clone(), system);
+            black_box(composer.search(&[]).best.accuracy.roc_auc)
+        });
+    }
+}

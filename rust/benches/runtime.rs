@@ -1,0 +1,56 @@
+//! PJRT runtime benches: raw executable latency per zoo variant and
+//! batch size — the numbers behind the latency profiler's calibration
+//! and the Fig. 13 Timeit legend.
+//!
+//! `cargo bench --bench runtime`
+
+use holmes::bench::{black_box, Bencher};
+use holmes::runtime::{bench_hlo_file, Engine};
+use holmes::zoo::Zoo;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut b = if quick { Bencher::quick() } else { Bencher::default() };
+    println!("== runtime benches ==");
+    let zoo = Zoo::load(std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+        .expect("run `make artifacts` first");
+    let engine = Engine::new(&zoo, 1).expect("engine");
+    let clip_len = zoo.manifest.clip_len;
+
+    // smallest / mid / largest trained model, batch 1 and 8
+    let mut servable = zoo.servable_indices();
+    servable.sort_by_key(|&i| zoo.model(i).macs);
+    let picks = [servable[0], servable[servable.len() / 2], servable[servable.len() - 1]];
+    for &idx in &picks {
+        let id = &zoo.model(idx).id;
+        for &batch in &[1usize, 8] {
+            let input = vec![0.1f32; batch * clip_len];
+            engine.execute_blocking((idx, batch), input.clone()).unwrap(); // warm
+            b.bench(&format!("execute/{id}/b{batch}"), || {
+                black_box(
+                    engine
+                        .execute_blocking((idx, batch), input.clone())
+                        .unwrap()
+                        .scores[0],
+                )
+            });
+        }
+    }
+
+    // Fig-13 window sweep artifacts (per-length raw latency)
+    if let Some(sweep) = &zoo.manifest.window_sweep {
+        let mut lengths: Vec<usize> =
+            sweep.artifacts.keys().filter_map(|k| k.parse().ok()).collect();
+        lengths.sort_unstable();
+        for len in lengths {
+            let path = zoo.root.join(&sweep.artifacts[&len.to_string()]);
+            let times = bench_hlo_file(&path, len, if quick { 3 } else { 10 }).unwrap();
+            let med = times[times.len() / 2];
+            println!(
+                "{:<44} window {len:>5} samples: median {:?}",
+                format!("window_sweep/{}", sweep.model_id),
+                med
+            );
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Serving-pipeline benches: end-to-end query latency, burst handling
+//! (the Fig.-10 hot path), aggregator ingest throughput, and the
+//! measured latency profiler.
+//!
+//! `cargo bench --bench serving`
+
+use std::time::Instant;
+
+use holmes::bench::{black_box, Bencher};
+use holmes::config::SystemConfig;
+use holmes::data;
+use holmes::ingest::synth::SynthConfig;
+use holmes::ingest::{Frame, Modality};
+use holmes::runtime::Engine;
+use holmes::serving::aggregator::WindowAggregator;
+use holmes::serving::pipeline::{Pipeline, PipelineConfig, Query};
+use holmes::serving::profile::{profile_ensemble, ProfileEffort};
+use holmes::zoo::{Selector, Zoo};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut b = if quick { Bencher::quick() } else { Bencher::default() };
+    println!("== serving benches ==");
+    let zoo = Zoo::load(std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+        .expect("run `make artifacts` first");
+    let engine = Engine::new(&zoo, 2).expect("engine");
+    let clip_len = zoo.manifest.clip_len;
+
+    // ---- aggregator ingest throughput (pure L3, no device)
+    let mut agg = WindowAggregator::new(0, clip_len);
+    let frame = Frame {
+        patient: 0,
+        modality: Modality::Ecg,
+        sim_time: 0.0,
+        values: vec![0.1, 0.2, 0.3],
+    };
+    b.bench("aggregator/push_ecg_frame", || black_box(agg.push(&frame).is_some()));
+
+    // ---- pipeline end-to-end, 3-model cross-lead ensemble
+    let members: Vec<usize> = zoo.servable_indices().into_iter().take(3).collect();
+    let ensemble = Selector::from_indices(zoo.n(), members);
+    for &m in ensemble.indices() {
+        for &bs in engine.batch_sizes() {
+            engine.profile_model((m, bs), 1).unwrap();
+        }
+    }
+    let pipeline = Pipeline::spawn(&zoo, &engine, PipelineConfig::new(ensemble.clone())).unwrap();
+    let clips = data::make_clips(4, clip_len, 21, &SynthConfig::default());
+    let mut w = 0u64;
+    b.bench("pipeline/query_e2e/3-models", || {
+        w += 1;
+        let p = pipeline
+            .query(Query {
+                patient: 0,
+                window_id: w,
+                sim_end: 0.0,
+                leads: clips.clips[(w as usize) % clips.len()].clone(),
+                emitted: Instant::now(),
+            })
+            .unwrap();
+        black_box(p.score)
+    });
+
+    // ---- 16-query burst (batching + 2-worker contention)
+    b.bench("pipeline/burst16/3-models", || {
+        let mut replies = Vec::with_capacity(16);
+        for i in 0..16usize {
+            w += 1;
+            replies.push(
+                pipeline
+                    .submit(Query {
+                        patient: i,
+                        window_id: w,
+                        sim_end: 0.0,
+                        leads: clips.clips[i % clips.len()].clone(),
+                        emitted: Instant::now(),
+                    })
+                    .unwrap(),
+            );
+        }
+        let mut acc = 0.0;
+        for r in replies {
+            acc += r.recv().unwrap().score;
+        }
+        black_box(acc)
+    });
+    drop(pipeline);
+
+    // ---- measured latency profiler (one full μ/T_s/T_q cycle)
+    let system = SystemConfig { gpus: 2, patients: 16, window_s: 30.0 };
+    let effort = ProfileEffort { closed_loop_queries: 8, open_loop_queries: 8 };
+    let t0 = Instant::now();
+    let m = profile_ensemble(&zoo, &engine, &ensemble, &system, effort).unwrap();
+    println!(
+        "{:<44} one cycle: {:?} (μ={:.1} qps, T_s p95={:.4}s, T_q≤{:.4}s)",
+        "profile/measured_f_l/3-models",
+        t0.elapsed(),
+        m.mu,
+        m.ts_p95,
+        m.tq_bound
+    );
+}

@@ -1,0 +1,68 @@
+//! Substrate micro-benchmarks: metrics, surrogate forest, network
+//! calculus, JSON, RNG, and the synthetic ECG generator — the pieces
+//! under the composer's profiler calls and the ingest hot path.
+//!
+//! `cargo bench --bench substrates` (add `-- --quick` for a short run).
+
+use holmes::bench::{black_box, Bencher};
+use holmes::ingest::synth::{PatientSim, SynthConfig};
+use holmes::json::Value;
+use holmes::metrics::{pr_auc, roc_auc};
+use holmes::netcalc::{queueing_bound, ArrivalCurve, ServiceCurve};
+use holmes::rng::Rng;
+use holmes::surrogate::{ForestConfig, RandomForest, Surrogate};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut b = if quick { Bencher::quick() } else { Bencher::default() };
+    println!("== substrate benches ==");
+
+    // ---- metrics on a profiler-sized validation set (560 samples)
+    let mut rng = Rng::seed_from_u64(1);
+    let labels: Vec<u8> = (0..560).map(|_| rng.bool(0.5) as u8).collect();
+    let scores: Vec<f64> = (0..560).map(|_| rng.f64()).collect();
+    b.bench("metrics/roc_auc/560", || black_box(roc_auc(&labels, &scores)));
+    b.bench("metrics/pr_auc/560", || black_box(pr_auc(&labels, &scores)));
+
+    // ---- random-forest surrogate: SMBO-sized fit + predict
+    let x: Vec<Vec<f64>> =
+        (0..150).map(|_| (0..67).map(|_| rng.f64().round()).collect()).collect();
+    let y: Vec<f64> = (0..150).map(|_| rng.f64()).collect();
+    b.bench("surrogate/rf_fit/150x67/60trees", || {
+        let mut rf = RandomForest::new(ForestConfig::default());
+        rf.fit(&x, &y);
+        black_box(rf.n_trees())
+    });
+    let mut rf = RandomForest::new(ForestConfig::default());
+    rf.fit(&x, &y);
+    b.bench("surrogate/rf_predict/67f", || black_box(rf.predict(&x[0])));
+
+    // ---- network calculus on a profiling-sized trace
+    let ts: Vec<f64> = (0..48).map(|i| i as f64 * 0.03).collect();
+    b.bench("netcalc/exact_curve+bound/48", || {
+        let ac = ArrivalCurve::from_timestamps_exact(&ts);
+        black_box(queueing_bound(&ac, &ServiceCurve::new(50.0, 0.01)))
+    });
+
+    // ---- JSON: parse a manifest-like document
+    let manifest = std::fs::read_to_string(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/zoo_manifest.json"),
+    )
+    .ok();
+    if let Some(text) = manifest {
+        b.bench("json/parse_zoo_manifest", || black_box(Value::parse(&text).unwrap()));
+    }
+
+    // ---- RNG + ECG synthesis (ingest-side load generator)
+    let mut r = Rng::seed_from_u64(2);
+    b.bench("rng/normal", || black_box(r.normal()));
+    let mut sim = PatientSim::new(0, 3, SynthConfig::default());
+    b.bench("synth/ecg_sample_3lead", || black_box(sim.next_ecg()));
+    b.bench("synth/one_second_250hz", || {
+        let mut acc = 0.0f32;
+        for _ in 0..250 {
+            acc += sim.next_ecg()[1];
+        }
+        black_box(acc)
+    });
+}

@@ -1,0 +1,144 @@
+//! Micro-benchmark harness (criterion is unavailable offline): warm-up,
+//! adaptive iteration count targeting a fixed measurement time, and
+//! median/mean/p95-of-batches reporting. Used by the `cargo bench`
+//! binaries under `rust/benches/`.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} iters  mean {:>12}  median {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean),
+            fmt_dur(self.median),
+            fmt_dur(self.p95)
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark runner with a total time budget per benchmark.
+pub struct Bencher {
+    /// Target measurement time per benchmark.
+    pub measure_for: Duration,
+    /// Number of timed batches (percentiles come from these).
+    pub batches: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { measure_for: Duration::from_secs(2), batches: 20, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { measure_for: Duration::from_millis(300), batches: 8, results: Vec::new() }
+    }
+
+    /// Time `f` adaptively; `f` should perform ONE unit of work and
+    /// return a value (black-boxed to keep the optimizer honest).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // warm-up + calibration: how many iters fit one batch?
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed() < self.measure_for / 10 || calib_iters < 3 {
+            black_box(f());
+            calib_iters += 1;
+            if calib_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = t0.elapsed().as_secs_f64() / calib_iters as f64;
+        let batch_time = self.measure_for.as_secs_f64() / self.batches as f64;
+        let iters_per_batch = ((batch_time / per_iter.max(1e-12)) as u64).clamp(1, 10_000_000);
+
+        let mut batch_means: Vec<f64> = Vec::with_capacity(self.batches);
+        for _ in 0..self.batches {
+            let t = Instant::now();
+            for _ in 0..iters_per_batch {
+                black_box(f());
+            }
+            batch_means.push(t.elapsed().as_secs_f64() / iters_per_batch as f64);
+        }
+        batch_means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = batch_means.iter().sum::<f64>() / batch_means.len() as f64;
+        let median = batch_means[batch_means.len() / 2];
+        let p95 = batch_means[(batch_means.len() as f64 * 0.95) as usize - 1];
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: iters_per_batch * self.batches as u64,
+            mean: Duration::from_secs_f64(mean),
+            median: Duration::from_secs_f64(median),
+            p95: Duration::from_secs_f64(p95),
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Optimizer barrier (stable-rust version of `std::hint::black_box` —
+/// re-exported so benches don't depend on feature availability).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something_sane() {
+        let mut b = Bencher { measure_for: Duration::from_millis(50), batches: 4, results: vec![] };
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..100 {
+                // black_box the input so release mode can't const-fold
+                acc = acc.wrapping_add(black_box(i));
+            }
+            acc
+        });
+        assert!(r.mean > Duration::ZERO);
+        assert!(r.median <= r.p95);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(Duration::from_nanos(5)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).contains(" s"));
+    }
+}

@@ -1,0 +1,135 @@
+//! Tiny argument-parsing substrate for the `holmes` binary (clap is
+//! unavailable in the offline build): positional subcommand + `--key
+//! value` / `--flag` options with typed accessors.
+
+use std::collections::HashMap;
+
+use crate::{Error, Result};
+
+/// Parsed command line: subcommand, positionals, options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positionals: Vec<String>,
+    options: HashMap<String, Vec<String>>,
+    flags: Vec<String>,
+}
+
+/// Which option names take a value (everything else is a boolean flag).
+pub fn parse(argv: &[String], value_opts: &[&str]) -> Result<Args> {
+    let mut args = Args::default();
+    let mut it = argv.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let (name, inline) = match name.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (name, None),
+            };
+            if value_opts.contains(&name) {
+                let v = match inline {
+                    Some(v) => v,
+                    None => it
+                        .next()
+                        .ok_or_else(|| Error::config(format!("--{name} needs a value")))?
+                        .clone(),
+                };
+                args.options.entry(name.to_string()).or_default().push(v);
+            } else if inline.is_some() {
+                return Err(Error::config(format!("--{name} does not take a value")));
+            } else {
+                args.flags.push(name.to_string());
+            }
+        } else if args.subcommand.is_none() {
+            args.subcommand = Some(a.clone());
+        } else {
+            args.positionals.push(a.clone());
+        }
+    }
+    Ok(args)
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("--{name}: '{v}' is not an integer"))),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("--{name}: '{v}' is not a number"))),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("--{name}: '{v}' is not an integer"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_and_flags() {
+        let a = parse(&argv("compose --budget 0.2 --servable-only --seed=9"), &["budget", "seed"])
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("compose"));
+        assert_eq!(a.f64_or("budget", 0.0).unwrap(), 0.2);
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 9);
+        assert!(a.flag("servable-only"));
+        assert!(!a.flag("quick"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(&argv("x --budget"), &["budget"]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&argv("serve"), &["patients"]).unwrap();
+        assert_eq!(a.usize_or("patients", 64).unwrap(), 64);
+    }
+
+    #[test]
+    fn bad_numbers_are_errors() {
+        let a = parse(&argv("x --n abc"), &["n"]).unwrap();
+        assert!(a.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn positionals_after_subcommand() {
+        let a = parse(&argv("exp fig10 --quick"), &["out"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.positionals, vec!["fig10".to_string()]);
+        assert!(a.flag("quick"));
+    }
+}

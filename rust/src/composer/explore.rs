@@ -1,0 +1,160 @@
+//! Algorithm 2: candidate exploration with genetic operators.
+//!
+//! With probability `1 − p`: a uniformly random selector. Otherwise a
+//! genetic step: with probability `q` an S-degree **mutation** of a
+//! random member of B (≤ S bit flips ⇒ Manhattan distance ≤ S), else a
+//! single-point **recombination** of two members (Eq. 4). Duplicates —
+//! against both B and the growing B′ — are rejected, matching the
+//! paper's "not add duplicates" guard.
+
+use std::collections::HashSet;
+
+use crate::rng::Rng;
+use crate::zoo::Selector;
+
+/// Generate up to `m` novel candidates. `allowed` restricts the index
+/// universe (e.g. servable-only search); `None` = all of 0..n.
+#[allow(clippy::too_many_arguments)]
+pub fn explore(
+    b_set: &[Selector],
+    n: usize,
+    m: usize,
+    mutation_degree: usize,
+    p_genetic: f64,
+    q_mutation: f64,
+    allowed: Option<&[usize]>,
+    rng: &mut Rng,
+) -> Vec<Selector> {
+    let universe: Vec<usize> = match allowed {
+        Some(a) => a.to_vec(),
+        None => (0..n).collect(),
+    };
+    assert!(!universe.is_empty());
+    let seen: HashSet<&Selector> = b_set.iter().collect();
+    let mut out: Vec<Selector> = Vec::with_capacity(m);
+    let mut out_seen: HashSet<Selector> = HashSet::new();
+    // Bounded attempts: the binary space may be nearly exhausted.
+    let max_attempts = 50 * m + 200;
+    let mut attempts = 0;
+    while out.len() < m && attempts < max_attempts {
+        attempts += 1;
+        let cand = if b_set.is_empty() || rng.f64() > p_genetic {
+            random_selector(n, &universe, rng)
+        } else if rng.f64() <= q_mutation {
+            let b3 = &b_set[rng.range(0, b_set.len())];
+            mutate(b3, mutation_degree, &universe, rng)
+        } else {
+            let b1 = &b_set[rng.range(0, b_set.len())];
+            let b2 = &b_set[rng.range(0, b_set.len())];
+            let point = rng.range(0, n + 1);
+            restrict(&b1.recombine(b2, point), &universe)
+        };
+        if seen.contains(&cand) || out_seen.contains(&cand) {
+            continue;
+        }
+        out_seen.insert(cand.clone());
+        out.push(cand);
+    }
+    out
+}
+
+/// Uniformly random selector over the allowed universe: each allowed bit
+/// independently with probability that favours small/medium ensembles
+/// (expected size ~uniform in [1, |universe|/4], mirroring realistic
+/// ensemble sizes rather than n/2-sized monsters).
+pub fn random_selector(n: usize, universe: &[usize], rng: &mut Rng) -> Selector {
+    let target = rng.range(1, (universe.len() / 4).max(2) + 1);
+    let p = target as f64 / universe.len() as f64;
+    let mut idx = Vec::new();
+    for &i in universe {
+        if rng.f64() < p {
+            idx.push(i);
+        }
+    }
+    if idx.is_empty() {
+        idx.push(universe[rng.range(0, universe.len())]);
+    }
+    Selector::from_indices(n, idx)
+}
+
+/// Mutation(b₃, S): flip S random (allowed) positions ⇒ Manhattan
+/// distance ≤ S from b₃ (repeat flips can cancel, hence ≤).
+pub fn mutate(b3: &Selector, degree: usize, universe: &[usize], rng: &mut Rng) -> Selector {
+    let mut out = restrict(b3, universe);
+    for _ in 0..degree.max(1) {
+        let i = universe[rng.range(0, universe.len())];
+        out.flip(i);
+    }
+    out
+}
+
+/// Drop any indices outside the allowed universe.
+fn restrict(b: &Selector, universe: &[usize]) -> Selector {
+    let allowed: HashSet<usize> = universe.iter().copied().collect();
+    Selector::from_indices(b.n(), b.indices().iter().copied().filter(|i| allowed.contains(i)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    fn rng() -> Rng {
+        Rng::seed_from_u64(7)
+    }
+
+    #[test]
+    fn explore_returns_m_unique_novel_candidates() {
+        let n = 30;
+        let b: Vec<Selector> = (0..5)
+            .map(|i| Selector::from_indices(n, [i, i + 1, i + 2]))
+            .collect();
+        let out = explore(&b, n, 40, 3, 0.8, 0.5, None, &mut rng());
+        assert_eq!(out.len(), 40);
+        let set: HashSet<_> = out.iter().collect();
+        assert_eq!(set.len(), 40, "duplicates inside B'");
+        for c in &out {
+            assert!(!b.contains(c), "candidate already in B");
+        }
+    }
+
+    #[test]
+    fn mutation_within_manhattan_radius() {
+        let n = 20;
+        let universe: Vec<usize> = (0..n).collect();
+        let b3 = Selector::from_indices(n, [1, 5, 9]);
+        for s in [1usize, 3, 5] {
+            for _ in 0..50 {
+                let m = mutate(&b3, s, &universe, &mut rng());
+                assert!(m.hamming(&b3) <= s, "distance {} > {}", m.hamming(&b3), s);
+            }
+        }
+    }
+
+    #[test]
+    fn explore_respects_allowed_universe() {
+        let n = 40;
+        let allowed: Vec<usize> = (0..10).collect();
+        let b = vec![Selector::from_indices(n, [0, 3])];
+        let out = explore(&b, n, 30, 3, 0.8, 0.5, Some(&allowed), &mut rng());
+        for c in &out {
+            assert!(c.indices().iter().all(|&i| i < 10), "index outside universe");
+        }
+    }
+
+    #[test]
+    fn explore_handles_tiny_space_without_hanging() {
+        // universe of 2 ⇒ only 3 non-empty selectors of interest
+        let n = 2;
+        let out = explore(&[], n, 50, 1, 0.5, 0.5, None, &mut rng());
+        assert!(out.len() <= 3 + 1); // at most the whole space
+        let set: HashSet<_> = out.iter().collect();
+        assert_eq!(set.len(), out.len());
+    }
+
+    #[test]
+    fn random_selector_never_empty() {
+        let universe: Vec<usize> = (0..12).collect();
+        for _ in 0..100 {
+            assert!(!random_selector(12, &universe, &mut rng()).is_empty());
+        }
+    }
+}

@@ -1,0 +1,338 @@
+//! The Ensemble Composer — the paper's Algorithm 1.
+//!
+//! Sequential Model-Based (Bayesian) Optimisation over the binary
+//! ensemble space B = {0,1}ⁿ: random-forest surrogates approximate the
+//! accuracy/latency profilers; a genetic explorer ([`explore`]) proposes
+//! candidates; the top-K by *approximated* utility (Eq. 2) get truly profiled
+//! and appended to the profile set B; after N iterations the true-utility
+//! argmax over B is returned.
+
+pub mod baselines;
+mod explore;
+
+pub use explore::{explore, mutate, random_selector};
+
+use std::collections::HashSet;
+
+use crate::config::{ComposerConfig, SystemConfig};
+use crate::profiler::{AccuracyProfiler, EnsembleAccuracy, LatencyProfiler};
+use crate::rng::Rng;
+use crate::surrogate::{ForestConfig, RandomForest, Surrogate};
+use crate::zoo::{Selector, Zoo};
+
+/// δ of Eq. (2)/(3): hard step (−∞ below 0) or soft linear (λ·x).
+#[derive(Debug, Clone, Copy)]
+pub enum Delta {
+    HardStep,
+    Linear(f64),
+}
+
+impl Delta {
+    pub fn eval(&self, x: f64) -> f64 {
+        match self {
+            Delta::HardStep => {
+                if x < 0.0 {
+                    f64::NEG_INFINITY
+                } else {
+                    0.0
+                }
+            }
+            Delta::Linear(lambda) => lambda * x.min(0.0), // penalise violation only
+        }
+    }
+}
+
+/// Utility L_a(b) = f_a + δ(L − f_l) (Eq. 2).
+pub fn utility(acc: f64, lat: f64, budget: f64, delta: Delta) -> f64 {
+    acc + delta.eval(budget - lat)
+}
+
+/// One truly-profiled point of the profile set B.
+#[derive(Debug, Clone)]
+pub struct ProfiledPoint {
+    pub selector: Selector,
+    pub accuracy: EnsembleAccuracy,
+    pub latency: f64,
+    /// Search iteration at which the point was profiled (0 = warm start).
+    pub iteration: usize,
+}
+
+impl ProfiledPoint {
+    pub fn utility(&self, budget: f64, delta: Delta) -> f64 {
+        utility(self.accuracy.roc_auc, self.latency, budget, delta)
+    }
+}
+
+/// Search output: the optimum plus the full trace (Figs. 6, 8, 11).
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub best: ProfiledPoint,
+    /// Every profiled point, in profiling order.
+    pub profile_set: Vec<ProfiledPoint>,
+    /// Per-iteration surrogate quality on a held-out probe set (Fig. 8):
+    /// (iteration, accuracy-surrogate R², latency-surrogate R²).
+    pub surrogate_r2: Vec<(usize, f64, f64)>,
+    /// Total profiler invocations (accuracy+latency pairs).
+    pub profiler_calls: usize,
+}
+
+impl SearchResult {
+    /// Running best-so-far trajectory (Fig. 6): at each profiled point,
+    /// the (accuracy, latency) of the incumbent under the given budget.
+    pub fn trajectory(&self, budget: f64, delta: Delta) -> Vec<(f64, f64)> {
+        let mut best: Option<&ProfiledPoint> = None;
+        let mut out = Vec::with_capacity(self.profile_set.len());
+        for p in &self.profile_set {
+            let better = match best {
+                None => true,
+                Some(b) => p.utility(budget, delta) > b.utility(budget, delta),
+            };
+            if better {
+                best = Some(p);
+            }
+            let b = best.unwrap();
+            out.push((b.accuracy.roc_auc, b.latency));
+        }
+        out
+    }
+}
+
+/// Feature map for the surrogates: the raw selector bits plus cheap
+/// profile-derived aggregates (ensemble size, Σlog-MACs, mean/max member
+/// AUC, per-lead counts) — binary-only features starve the forest at the
+/// small sample sizes SMBO operates with.
+pub struct FeatureMap {
+    macs: Vec<f64>,
+    auc: Vec<f64>,
+    lead: Vec<usize>,
+}
+
+impl FeatureMap {
+    pub fn from_zoo(zoo: &Zoo) -> Self {
+        FeatureMap {
+            macs: zoo.manifest.models.iter().map(|m| m.macs as f64).collect(),
+            auc: zoo.manifest.models.iter().map(|m| m.val_auc).collect(),
+            lead: zoo.manifest.models.iter().map(|m| m.lead).collect(),
+        }
+    }
+
+    pub fn features(&self, b: &Selector) -> Vec<f64> {
+        let mut f = b.to_f64();
+        let k = b.len() as f64;
+        let sum_macs: f64 = b.indices().iter().map(|&i| self.macs[i]).sum();
+        let mean_auc = if b.is_empty() {
+            0.5
+        } else {
+            b.indices().iter().map(|&i| self.auc[i]).sum::<f64>() / k
+        };
+        let max_auc = b
+            .indices()
+            .iter()
+            .map(|&i| self.auc[i])
+            .fold(0.5, f64::max);
+        let mut lead_counts = [0.0f64; 3];
+        for &i in b.indices() {
+            if self.lead[i] < 3 {
+                lead_counts[self.lead[i]] += 1.0;
+            }
+        }
+        f.push(k);
+        f.push((1.0 + sum_macs).ln());
+        f.push(mean_auc);
+        f.push(max_auc);
+        f.extend_from_slice(&lead_counts);
+        f
+    }
+}
+
+/// The SMBO + genetic-exploration composer (Algorithm 1).
+pub struct Composer<'a, A: AccuracyProfiler, L: LatencyProfiler> {
+    pub cfg: ComposerConfig,
+    pub system: SystemConfig,
+    pub delta: Delta,
+    zoo: &'a Zoo,
+    acc_profiler: &'a A,
+    lat_profiler: &'a L,
+    features: FeatureMap,
+}
+
+impl<'a, A: AccuracyProfiler, L: LatencyProfiler> Composer<'a, A, L> {
+    pub fn new(
+        zoo: &'a Zoo,
+        acc_profiler: &'a A,
+        lat_profiler: &'a L,
+        cfg: ComposerConfig,
+        system: SystemConfig,
+    ) -> Self {
+        let features = FeatureMap::from_zoo(zoo);
+        Composer { cfg, system, delta: Delta::HardStep, zoo, acc_profiler, lat_profiler, features }
+    }
+
+    pub fn with_delta(mut self, delta: Delta) -> Self {
+        self.delta = delta;
+        self
+    }
+
+    fn allowed(&self) -> Option<Vec<usize>> {
+        if self.cfg.servable_only {
+            Some(self.zoo.servable_indices())
+        } else {
+            None
+        }
+    }
+
+    fn profile(&self, b: Selector, iteration: usize) -> ProfiledPoint {
+        ProfiledPoint {
+            accuracy: self.acc_profiler.accuracy(&b),
+            latency: self.lat_profiler.latency(&b, &self.system),
+            selector: b,
+            iteration,
+        }
+    }
+
+    /// Run Algorithm 1. `seeds` are extra warm-start selectors (the
+    /// paper seeds HOLMES and NPO with the RD/AF/LF solutions).
+    pub fn search(&self, seeds: &[Selector]) -> SearchResult {
+        let n = self.zoo.n();
+        let mut rng = Rng::seed_from_u64(self.cfg.seed);
+        let allowed = self.allowed();
+        let universe: Vec<usize> = allowed.clone().unwrap_or_else(|| (0..n).collect());
+
+        // -- warm start: seeds + random selectors (line 6)
+        let mut seen: HashSet<Selector> = HashSet::new();
+        let mut profile_set: Vec<ProfiledPoint> = Vec::new();
+        let mut profiler_calls = 0usize;
+        let add = |b: Selector,
+                       it: usize,
+                       seen: &mut HashSet<Selector>,
+                       set: &mut Vec<ProfiledPoint>,
+                       calls: &mut usize| {
+            if b.is_empty() || seen.contains(&b) {
+                return;
+            }
+            seen.insert(b.clone());
+            set.push(self.profile(b, it));
+            *calls += 1;
+        };
+        for s in seeds {
+            add(s.clone(), 0, &mut seen, &mut profile_set, &mut profiler_calls);
+        }
+        while profile_set.len() < self.cfg.warm_start {
+            let b = explore::random_selector(n, &universe, &mut rng);
+            add(b, 0, &mut seen, &mut profile_set, &mut profiler_calls);
+        }
+
+        // held-out probe set for Fig. 8's surrogate-quality tracking
+        let probe: Vec<ProfiledPoint> = {
+            let mut probe_rng = Rng::seed_from_u64(self.cfg.seed ^ 0xABCD);
+            let mut v = Vec::new();
+            let mut guard = 0;
+            while v.len() < 32 && guard < 1000 {
+                guard += 1;
+                let b = explore::random_selector(n, &universe, &mut probe_rng);
+                if !seen.contains(&b) {
+                    v.push(self.profile(b, usize::MAX));
+                }
+            }
+            v
+        };
+
+        let mut surrogate_r2 = Vec::new();
+        let mut f_a_hat = RandomForest::new(ForestConfig { seed: self.cfg.seed + 1, ..Default::default() });
+        let mut f_l_hat = RandomForest::new(ForestConfig { seed: self.cfg.seed + 2, ..Default::default() });
+
+        // -- SMBO loop (lines 8–22)
+        for it in 1..=self.cfg.iterations {
+            // fit surrogates on the profiled set (line 13)
+            let x: Vec<Vec<f64>> =
+                profile_set.iter().map(|p| self.features.features(&p.selector)).collect();
+            let ya: Vec<f64> = profile_set.iter().map(|p| p.accuracy.roc_auc).collect();
+            let yl: Vec<f64> = profile_set.iter().map(|p| p.latency).collect();
+            f_a_hat.fit(&x, &ya);
+            f_l_hat.fit(&x, &yl);
+
+            // surrogate quality on the held-out probe set (Fig. 8)
+            let pa: Vec<f64> =
+                probe.iter().map(|p| f_a_hat.predict(&self.features.features(&p.selector))).collect();
+            let pl: Vec<f64> =
+                probe.iter().map(|p| f_l_hat.predict(&self.features.features(&p.selector))).collect();
+            let ta: Vec<f64> = probe.iter().map(|p| p.accuracy.roc_auc).collect();
+            let tl: Vec<f64> = probe.iter().map(|p| p.latency).collect();
+            surrogate_r2.push((it, crate::metrics::r2(&ta, &pa), crate::metrics::r2(&tl, &pl)));
+
+            // genetic exploration (line 15, Algorithm 2)
+            let b_current: Vec<Selector> =
+                profile_set.iter().map(|p| p.selector.clone()).collect();
+            let candidates = explore::explore(
+                &b_current,
+                n,
+                self.cfg.explore_samples,
+                self.cfg.mutation_degree,
+                self.cfg.p_genetic,
+                self.cfg.q_mutation,
+                allowed.as_deref(),
+                &mut rng,
+            );
+            if candidates.is_empty() {
+                break; // space exhausted
+            }
+
+            // approximate utility L̂_a over B' (line 17) — the soft-λ form
+            // of Algorithm 1 so ranking stays informative out of budget
+            let mut scored: Vec<(f64, Selector)> = candidates
+                .into_iter()
+                .map(|b| {
+                    let f = self.features.features(&b);
+                    let u = f_a_hat.predict(&f)
+                        + self.cfg.lambda
+                            * (self.cfg.latency_budget - f_l_hat.predict(&f)).min(0.0);
+                    (u, b)
+                })
+                .collect();
+            // top-K by approximated utility (line 19, argsort_K)
+            scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            for (_, b) in scored.into_iter().take(self.cfg.top_k) {
+                add(b, it, &mut seen, &mut profile_set, &mut profiler_calls);
+            }
+        }
+
+        // -- argmax of the true utility over B (line 24)
+        let best = profile_set
+            .iter()
+            .max_by(|a, b| {
+                a.utility(self.cfg.latency_budget, self.delta)
+                    .partial_cmp(&b.utility(self.cfg.latency_budget, self.delta))
+                    .unwrap()
+            })
+            .expect("profile set cannot be empty")
+            .clone();
+        SearchResult { best, profile_set, surrogate_r2, profiler_calls }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_hard_step() {
+        assert_eq!(Delta::HardStep.eval(0.1), 0.0);
+        assert_eq!(Delta::HardStep.eval(0.0), 0.0);
+        assert_eq!(Delta::HardStep.eval(-0.1), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn delta_linear_penalises_violation_only() {
+        let d = Delta::Linear(2.0);
+        assert_eq!(d.eval(0.5), 0.0);
+        assert_eq!(d.eval(-0.5), -1.0);
+    }
+
+    #[test]
+    fn utility_respects_budget() {
+        let u_ok = utility(0.9, 0.15, 0.2, Delta::HardStep);
+        let u_bad = utility(0.99, 0.25, 0.2, Delta::HardStep);
+        assert_eq!(u_ok, 0.9);
+        assert_eq!(u_bad, f64::NEG_INFINITY);
+    }
+}

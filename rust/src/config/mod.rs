@@ -1,0 +1,194 @@
+//! Configuration types for the coordinator — loadable from JSON files or
+//! assembled by the CLI. `SystemConfig` is the paper's `c ∈ R^d` vector.
+
+use std::path::Path;
+
+use crate::json::Value;
+use crate::Result;
+
+/// The paper's system configuration `c`: resources + offered load.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SystemConfig {
+    /// Number of device workers ("GPUs" in the paper's setup).
+    pub gpus: usize,
+    /// Number of simultaneously monitored patients (beds).
+    pub patients: usize,
+    /// Observation window ΔT in seconds (paper default: 30 s).
+    pub window_s: f64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig { gpus: 2, patients: 64, window_s: 30.0 }
+    }
+}
+
+impl SystemConfig {
+    /// Ensemble-query arrival rate: one query per patient per window.
+    pub fn query_rate(&self) -> f64 {
+        self.patients as f64 / self.window_s
+    }
+
+    /// Feature row for the latency surrogate `f̂_l(V, c, b)`.
+    pub fn feature_row(&self) -> Vec<f64> {
+        vec![self.gpus as f64, self.patients as f64, self.window_s]
+    }
+}
+
+/// Ensemble-composer hyper-parameters (paper Algorithm 1 inputs).
+#[derive(Debug, Clone)]
+pub struct ComposerConfig {
+    /// Latency constraint L (seconds).
+    pub latency_budget: f64,
+    /// λ of the soft-constraint variant; unused under the hard step δ.
+    pub lambda: f64,
+    /// N — search iterations.
+    pub iterations: usize,
+    /// N₀ — warm-start samples.
+    pub warm_start: usize,
+    /// M — candidates generated per exploration round.
+    pub explore_samples: usize,
+    /// K — top candidates profiled per iteration.
+    pub top_k: usize,
+    /// S — mutation degree (Manhattan radius).
+    pub mutation_degree: usize,
+    /// p — probability of genetic (vs random) exploration.
+    pub p_genetic: f64,
+    /// q — probability of mutation (vs recombination) within genetic.
+    pub q_mutation: f64,
+    pub seed: u64,
+    /// Restrict search to models with compiled artifacts.
+    pub servable_only: bool,
+}
+
+impl Default for ComposerConfig {
+    fn default() -> Self {
+        ComposerConfig {
+            latency_budget: 0.2,
+            lambda: 1.0,
+            iterations: 20,
+            warm_start: 24,
+            explore_samples: 64,
+            top_k: 6,
+            mutation_degree: 3,
+            p_genetic: 0.8,
+            q_mutation: 0.5,
+            seed: 13,
+            servable_only: false,
+        }
+    }
+}
+
+/// Serving-pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    pub system: SystemConfig,
+    /// Virtual-clock acceleration (1.0 = real time).
+    pub speedup: f64,
+    /// Max queries coalesced into one device batch.
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch (milliseconds).
+    pub batch_timeout_ms: u64,
+    /// HTTP ingest listen address (None = in-process ingest only).
+    pub http_addr: Option<String>,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            system: SystemConfig::default(),
+            speedup: 1.0,
+            max_batch: 8,
+            batch_timeout_ms: 5,
+            http_addr: None,
+        }
+    }
+}
+
+impl ComposerConfig {
+    /// Load from a JSON file; absent fields keep their defaults.
+    pub fn from_json_file(path: impl AsRef<Path>) -> Result<Self> {
+        let v = Value::parse(&std::fs::read_to_string(path)?)?;
+        let mut c = ComposerConfig::default();
+        let num = |k: &str| v.get(k).and_then(|x| x.as_f64());
+        if let Some(x) = num("latency_budget") {
+            c.latency_budget = x;
+        }
+        if let Some(x) = num("lambda") {
+            c.lambda = x;
+        }
+        if let Some(x) = num("iterations") {
+            c.iterations = x as usize;
+        }
+        if let Some(x) = num("warm_start") {
+            c.warm_start = x as usize;
+        }
+        if let Some(x) = num("explore_samples") {
+            c.explore_samples = x as usize;
+        }
+        if let Some(x) = num("top_k") {
+            c.top_k = x as usize;
+        }
+        if let Some(x) = num("mutation_degree") {
+            c.mutation_degree = x as usize;
+        }
+        if let Some(x) = num("p_genetic") {
+            c.p_genetic = x;
+        }
+        if let Some(x) = num("q_mutation") {
+            c.q_mutation = x;
+        }
+        if let Some(x) = num("seed") {
+            c.seed = x as u64;
+        }
+        if let Some(x) = v.get("servable_only").and_then(|x| x.as_bool()) {
+            c.servable_only = x;
+        }
+        Ok(c)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("latency_budget", Value::Num(self.latency_budget)),
+            ("lambda", Value::Num(self.lambda)),
+            ("iterations", Value::Num(self.iterations as f64)),
+            ("warm_start", Value::Num(self.warm_start as f64)),
+            ("explore_samples", Value::Num(self.explore_samples as f64)),
+            ("top_k", Value::Num(self.top_k as f64)),
+            ("mutation_degree", Value::Num(self.mutation_degree as f64)),
+            ("p_genetic", Value::Num(self.p_genetic)),
+            ("q_mutation", Value::Num(self.q_mutation)),
+            ("seed", Value::Num(self.seed as f64)),
+            ("servable_only", Value::Bool(self.servable_only)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_rate_is_patients_over_window() {
+        let c = SystemConfig { gpus: 2, patients: 64, window_s: 30.0 };
+        assert!((c.query_rate() - 64.0 / 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn configs_roundtrip_json() {
+        let c = ComposerConfig { latency_budget: 0.35, mutation_degree: 5, ..Default::default() };
+        let dir = std::env::temp_dir().join("holmes_cfg_test.json");
+        std::fs::write(&dir, c.to_json().to_string()).unwrap();
+        let c2 = ComposerConfig::from_json_file(&dir).unwrap();
+        assert_eq!(c.latency_budget, c2.latency_budget);
+        assert_eq!(c.mutation_degree, c2.mutation_degree);
+        assert_eq!(c.iterations, c2.iterations);
+    }
+
+    #[test]
+    fn defaults_match_paper_setup() {
+        let s = SystemConfig::default();
+        assert_eq!(s.gpus, 2); // 2× V100 in §4.1.2
+        assert_eq!(s.window_s, 30.0); // 30 s segmentation windows
+    }
+}

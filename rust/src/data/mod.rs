@@ -1,0 +1,203 @@
+//! Rust-side cohort utilities: ECG clip datasets generated from the same
+//! simulator the serving pipeline streams from (so profiled accuracy and
+//! served accuracy agree), staleness datasets (Fig. 2), and tabular
+//! vitals/labs datasets for the CPU side models.
+
+use crate::ingest::synth::{severity_for_label, PatientSim, PatientState, SynthConfig};
+use crate::rng::Rng;
+
+/// A labelled set of 3-lead ECG clips.
+#[derive(Debug, Clone)]
+pub struct ClipSet {
+    /// clips[i][lead] is a `clip_len`-long waveform.
+    pub clips: Vec<[Vec<f32>; 3]>,
+    pub labels: Vec<u8>,
+    pub severities: Vec<f64>,
+}
+
+impl ClipSet {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+}
+
+/// Generate `n` labelled clips of `clip_len` samples (one synthetic
+/// patient per clip, like the python build-time cohort).
+pub fn make_clips(n: usize, clip_len: usize, seed: u64, cfg: &SynthConfig) -> ClipSet {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut clips = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    let mut severities = Vec::with_capacity(n);
+    for i in 0..n {
+        let label = if rng.f64() < 0.45 { 1 } else { 0 };
+        let severity = severity_for_label(&mut rng, label);
+        let clip = clip_for_state(i, seed, cfg, PatientState { label, severity }, clip_len);
+        clips.push(clip);
+        labels.push(label);
+        severities.push(severity);
+    }
+    ClipSet { clips, labels, severities }
+}
+
+/// One clip from a fresh simulator in the given state.
+pub fn clip_for_state(
+    id: usize,
+    seed: u64,
+    cfg: &SynthConfig,
+    state: PatientState,
+    clip_len: usize,
+) -> [Vec<f32>; 3] {
+    let mut sim = PatientSim::with_state(id, seed.wrapping_add(id as u64 * 7919), cfg.clone(), state);
+    let mut leads: [Vec<f32>; 3] =
+        [Vec::with_capacity(clip_len), Vec::with_capacity(clip_len), Vec::with_capacity(clip_len)];
+    for _ in 0..clip_len {
+        let s = sim.next_ecg();
+        for (lead, l) in leads.iter_mut().enumerate() {
+            l.push(s[lead]);
+        }
+    }
+    leads
+}
+
+/// Fig. 2 substrate: clips observed `delay_h` hours before the label
+/// time. Severity drifts toward the label's end-state with a 12-hour
+/// time constant, so stale observations are less separable.
+pub fn staleness_clips(
+    n: usize,
+    clip_len: usize,
+    delay_h: f64,
+    seed: u64,
+    cfg: &SynthConfig,
+) -> ClipSet {
+    let mut rng = Rng::seed_from_u64(seed);
+    let w = (-delay_h / 12.0_f64).exp();
+    let mut clips = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    let mut severities = Vec::with_capacity(n);
+    for i in 0..n {
+        let label = if rng.f64() < 0.5 { 1 } else { 0 };
+        let end_sev = severity_for_label(&mut rng, label);
+        let init: f64 = rng.range_f64(0.3, 0.7); // undecided start state
+        let sev = (w * end_sev + (1.0 - w) * init).clamp(0.0, 1.0);
+        clips.push(clip_for_state(
+            i,
+            seed ^ (delay_h * 10.0) as u64,
+            cfg,
+            PatientState { label, severity: sev },
+            clip_len,
+        ));
+        labels.push(label);
+        severities.push(sev);
+    }
+    ClipSet { clips, labels, severities }
+}
+
+/// Tabular dataset for the CPU side models: (vitals-features, labs-features, labels).
+pub struct TabularSet {
+    pub vitals: Vec<Vec<f64>>,
+    pub labs: Vec<Vec<f64>>,
+    pub labels: Vec<u8>,
+}
+
+pub fn make_tabular(n: usize, seed: u64, cfg: &SynthConfig) -> TabularSet {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut vitals = Vec::with_capacity(n);
+    let mut labs = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let label = if rng.f64() < 0.45 { 1 } else { 0 };
+        let severity = severity_for_label(&mut rng, label);
+        let mut sim = PatientSim::with_state(
+            i,
+            seed.wrapping_add(i as u64),
+            cfg.clone(),
+            PatientState { label, severity },
+        );
+        vitals.push(sim.next_vitals().iter().map(|&v| v as f64).collect());
+        labs.push(sim.next_labs().iter().map(|&v| v as f64).collect());
+        labels.push(label);
+    }
+    TabularSet { vitals, labs, labels }
+}
+
+/// Per-clip standardisation identical to the normalisation baked into
+/// the HLO graphs (only needed when feeding the pure-rust side models).
+pub fn standardize(clip: &[f32]) -> Vec<f32> {
+    let n = clip.len() as f32;
+    let mu: f32 = clip.iter().sum::<f32>() / n;
+    let var: f32 = clip.iter().map(|x| (x - mu) * (x - mu)).sum::<f32>() / n;
+    let sd = var.sqrt() + 1e-6;
+    clip.iter().map(|x| (x - mu) / sd).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clipset_shapes() {
+        let cs = make_clips(10, 200, 1, &SynthConfig::default());
+        assert_eq!(cs.len(), 10);
+        assert_eq!(cs.clips[0][0].len(), 200);
+        assert!(cs.labels.iter().all(|&l| l <= 1));
+    }
+
+    #[test]
+    fn clips_deterministic() {
+        let a = make_clips(4, 100, 9, &SynthConfig::default());
+        let b = make_clips(4, 100, 9, &SynthConfig::default());
+        assert_eq!(a.clips[2][1], b.clips[2][1]);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn staleness_reduces_severity_separation() {
+        let cfg = SynthConfig::default();
+        let fresh = staleness_clips(200, 50, 0.0, 3, &cfg);
+        let stale = staleness_clips(200, 50, 36.0, 3, &cfg);
+        let gap = |cs: &ClipSet| {
+            let (mut s0, mut n0, mut s1, mut n1) = (0.0, 0, 0.0, 0);
+            for (sev, &l) in cs.severities.iter().zip(&cs.labels) {
+                if l == 0 {
+                    s0 += sev;
+                    n0 += 1;
+                } else {
+                    s1 += sev;
+                    n1 += 1;
+                }
+            }
+            s0 / n0.max(1) as f64 - s1 / n1.max(1) as f64
+        };
+        assert!(gap(&fresh) > gap(&stale) + 0.1);
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_std() {
+        let clip: Vec<f32> = (0..100).map(|i| 3.0 + 0.5 * i as f32).collect();
+        let z = standardize(&clip);
+        let mu: f32 = z.iter().sum::<f32>() / 100.0;
+        let sd: f32 = (z.iter().map(|x| x * x).sum::<f32>() / 100.0 - mu * mu).sqrt();
+        assert!(mu.abs() < 1e-4 && (sd - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn tabular_set_severity_signal() {
+        let t = make_tabular(300, 5, &SynthConfig::default());
+        // mean lactate (labs[1]) must be higher in critical class
+        let (mut c, mut nc, mut s, mut ns) = (0.0, 0, 0.0, 0);
+        for (row, &l) in t.labs.iter().zip(&t.labels) {
+            if l == 0 {
+                c += row[1];
+                nc += 1;
+            } else {
+                s += row[1];
+                ns += 1;
+            }
+        }
+        assert!(c / nc as f64 > s / ns as f64 + 0.5);
+    }
+}

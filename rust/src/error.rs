@@ -1,0 +1,64 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Unified error for zoo loading, runtime execution and serving.
+#[derive(Debug)]
+pub enum Error {
+    /// I/O failure (artifact files, result CSVs).
+    Io(std::io::Error),
+    /// Manifest / score-file / ingest-body JSON problems.
+    Json2(String),
+    /// PJRT / XLA failures surfaced by the `xla` crate.
+    Xla(String),
+    /// Artifact inventory problems (missing model, batch variant...).
+    Artifact(String),
+    /// Serving-pipeline failures (actor gone, channel closed...).
+    Serving(String),
+    /// Invalid configuration or argument.
+    Config(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json2(e) => write!(f, "json error: {e}"),
+            Error::Xla(e) => write!(f, "xla error: {e}"),
+            Error::Artifact(e) => write!(f, "artifact error: {e}"),
+            Error::Serving(e) => write!(f, "serving error: {e}"),
+            Error::Config(e) => write!(f, "config error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    pub fn serving(msg: impl Into<String>) -> Self {
+        Error::Serving(msg.into())
+    }
+    pub fn artifact(msg: impl Into<String>) -> Self {
+        Error::Artifact(msg.into())
+    }
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    pub fn json(msg: impl Into<String>) -> Self {
+        Error::Json2(msg.into())
+    }
+}

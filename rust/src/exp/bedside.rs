@@ -1,0 +1,214 @@
+//! End-to-end bedside serving simulation: N patients stream 250 Hz ECG
+//! (+1 Hz vitals) through per-patient stateful aggregators into the
+//! ensemble pipeline — the full Fig. 4 path, used by `holmes serve` and
+//! the `bedside_sim` example, and the source of the headline "64-bed,
+//! sub-second p95" number.
+
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use crate::ingest::synth::{PatientSim, SynthConfig};
+use crate::ingest::{Frame, Modality, VirtualClock};
+use crate::metrics::roc_auc;
+use crate::runtime::Engine;
+use crate::serving::aggregator::WindowAggregator;
+use crate::serving::pipeline::{Pipeline, PipelineConfig, Query};
+use crate::serving::Telemetry;
+use crate::zoo::Zoo;
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct BedsideConfig {
+    pub patients: usize,
+    pub gpus: usize,
+    pub window_s: f64,
+    pub speedup: f64,
+    pub duration_s: f64,
+    pub http_addr: Option<String>,
+    pub seed: u64,
+}
+
+impl Default for BedsideConfig {
+    fn default() -> Self {
+        BedsideConfig {
+            patients: 64,
+            gpus: 2,
+            window_s: 30.0,
+            speedup: 1.0,
+            duration_s: 120.0,
+            http_addr: None,
+            seed: 42,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BedsideReport {
+    pub predictions: usize,
+    pub frames: u64,
+    pub e2e_p50: f64,
+    pub e2e_p95: f64,
+    pub e2e_p99: f64,
+    pub roc_auc: f64,
+    pub wall_s: f64,
+}
+
+/// Run the simulation to completion and report latency + accuracy.
+pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
+    let ensemble = super::fig10_scalability::holmes_servable_ensemble(zoo, 0.2);
+    println!(
+        "bedside sim: {} patients, {} gpus, ΔT={}s, speedup {}×, {}s sim",
+        cfg.patients, cfg.gpus, cfg.window_s, cfg.speedup, cfg.duration_s
+    );
+    println!(
+        "ensemble ({} models): {:?}",
+        ensemble.len(),
+        ensemble.indices().iter().map(|&i| zoo.model(i).id.clone()).collect::<Vec<_>>()
+    );
+    let engine = Engine::new(zoo, cfg.gpus)?;
+    // warm compile outside the measured run
+    for &m in ensemble.indices() {
+        for &b in engine.batch_sizes() {
+            engine.profile_model((m, b), 1)?;
+        }
+    }
+
+    let clip_len = zoo.manifest.clip_len;
+    let synth_cfg = SynthConfig::from(&zoo.manifest.calibration);
+    let t_start = Instant::now();
+
+    let pipeline = Pipeline::spawn(zoo, &engine, PipelineConfig::new(ensemble.clone()))?;
+    let telemetry = Arc::clone(pipeline.telemetry());
+    let (frame_tx, frame_rx) = mpsc::channel::<Frame>();
+
+    // optional HTTP ingest (frames can also arrive over the wire)
+    let mut _http = None;
+    if let Some(addr) = &cfg.http_addr {
+        let server = crate::http::serve(addr, frame_tx.clone(), Arc::clone(&telemetry))?;
+        println!("HTTP ingest listening on {}", server.addr);
+        _http = Some(server);
+    }
+
+    // patient stream generator threads (in-process clients, open loop)
+    let mut labels: HashMap<usize, u8> = HashMap::new();
+    let mut sims: Vec<PatientSim> = (0..cfg.patients)
+        .map(|pid| PatientSim::new(pid, cfg.seed, synth_cfg.clone()))
+        .collect();
+    for sim in &sims {
+        labels.insert(sim.id, sim.state.label);
+    }
+    let mut gen_handles = Vec::new();
+    for mut sim in sims.drain(..) {
+        let tx = frame_tx.clone();
+        let clock = VirtualClock::new(cfg.speedup);
+        let duration = cfg.duration_s;
+        gen_handles.push(std::thread::spawn(move || {
+            let mut sim_t = 0.0f64;
+            while sim_t < duration {
+                // one simulated second per tick: 250 ECG samples + 1 vitals
+                clock.sleep_until_sim(sim_t);
+                for f in sim.ecg_frames(sim_t, 250) {
+                    if tx.send(f).is_err() {
+                        return;
+                    }
+                }
+                let v = sim.next_vitals();
+                let _ = tx.send(Frame {
+                    patient: sim.id,
+                    modality: Modality::Vitals,
+                    sim_time: sim_t,
+                    values: v.to_vec(),
+                });
+                sim_t += 1.0;
+            }
+        }));
+    }
+    drop(frame_tx);
+
+    // aggregator router thread: frames → per-patient windows → queries
+    let (pred_tx, pred_rx) = mpsc::channel::<(usize, f64)>();
+    let router_pipeline = pipeline.clone();
+    let router_tel = Arc::clone(&telemetry);
+    let router = std::thread::spawn(move || {
+        let mut aggs: HashMap<usize, WindowAggregator> = HashMap::new();
+        let mut waiters = Vec::new();
+        for frame in frame_rx {
+            let t0 = Instant::now();
+            router_tel.frames.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let agg = aggs
+                .entry(frame.patient)
+                .or_insert_with(|| WindowAggregator::new(frame.patient, clip_len));
+            if let Some(window) = agg.push(&frame) {
+                let q = Query::from_window(window);
+                let patient = q.patient;
+                if let Ok(rx) = router_pipeline.submit(q) {
+                    let pred_tx = pred_tx.clone();
+                    // collect replies on a small helper thread so the
+                    // router never blocks on inference
+                    waiters.push(std::thread::spawn(move || {
+                        if let Ok(p) = rx.recv() {
+                            let _ = pred_tx.send((patient, p.score));
+                        }
+                    }));
+                }
+            }
+            router_tel.ingest.record(t0.elapsed());
+        }
+        for w in waiters {
+            let _ = w.join();
+        }
+    });
+
+    // prediction sink on this thread
+    let sink = std::thread::spawn(move || {
+        let mut rows: Vec<(usize, f64)> = Vec::new();
+        for r in pred_rx {
+            rows.push(r);
+        }
+        rows
+    });
+
+    for h in gen_handles {
+        let _ = h.join();
+    }
+    router.join().map_err(|_| crate::Error::serving("router panicked"))?;
+    drop(pipeline);
+    let pred_rows = sink.join().map_err(|_| crate::Error::serving("sink panicked"))?;
+    let frames = telemetry.frames.load(std::sync::atomic::Ordering::Relaxed);
+
+    let wall_s = t_start.elapsed().as_secs_f64();
+    // accuracy against ground-truth patient labels
+    let mut labels_v = Vec::with_capacity(pred_rows.len());
+    let mut scores_v = Vec::with_capacity(pred_rows.len());
+    for (pid, score) in &pred_rows {
+        labels_v.push(labels[pid]);
+        scores_v.push(*score);
+    }
+    let auc = roc_auc(&labels_v, &scores_v);
+    let report = BedsideReport {
+        predictions: pred_rows.len(),
+        frames,
+        e2e_p50: telemetry.e2e.percentile(50.0),
+        e2e_p95: telemetry.e2e.percentile(95.0),
+        e2e_p99: telemetry.e2e.percentile(99.0),
+        roc_auc: auc,
+        wall_s,
+    };
+    print_report(&report, &telemetry);
+    Ok(report)
+}
+
+fn print_report(r: &BedsideReport, telemetry: &Telemetry) {
+    println!("\n── bedside report ──────────────────────────");
+    println!("frames ingested      {:>12}", r.frames);
+    println!("ensemble predictions {:>12}", r.predictions);
+    println!("e2e latency p50      {:>11.4}s", r.e2e_p50);
+    println!("e2e latency p95      {:>11.4}s", r.e2e_p95);
+    println!("e2e latency p99      {:>11.4}s", r.e2e_p99);
+    println!("queueing p95         {:>11.4}s", telemetry.queueing.percentile(95.0));
+    println!("exec mean            {:>11.4}s", telemetry.exec.mean());
+    println!("ingest push p95      {:>11.6}s", telemetry.ingest.percentile(95.0));
+    println!("prediction ROC-AUC   {:>11.4}", r.roc_auc);
+    println!("wall time            {:>11.1}s", r.wall_s);
+}

@@ -1,0 +1,163 @@
+//! Shared experiment plumbing: the five search methods of §4.2 under one
+//! enum, default profiler construction, and method-run helpers.
+
+use crate::composer::baselines::{greedy_search, npo_search, Greedy};
+use crate::composer::{Composer, SearchResult};
+use crate::config::{ComposerConfig, SystemConfig};
+use crate::profiler::{AnalyticLatencyProfiler, ServiceTimes, ValidationAccuracyProfiler};
+use crate::zoo::Zoo;
+
+/// The methods compared throughout §4.2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Rd,
+    Af,
+    Lf,
+    Npo,
+    Holmes,
+}
+
+impl Method {
+    pub const ALL: [Method; 5] = [Method::Rd, Method::Af, Method::Lf, Method::Npo, Method::Holmes];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Rd => "RD",
+            Method::Af => "AF",
+            Method::Lf => "LF",
+            Method::Npo => "NPO",
+            Method::Holmes => "HOLMES",
+        }
+    }
+}
+
+/// Default MACs-based service-time model (V100-class coefficients:
+/// 0.5 ms dispatch overhead, 2×10¹⁰ MAC/s sustained), so the zoo spans
+/// ~0.5–13 ms per model — the regime where a 200 ms budget holds a
+/// ~10-model ensemble (the paper's operating point). Serving experiments
+/// replace this with `ServiceTimes::calibrate` measurements.
+pub fn default_service_times(zoo: &Zoo) -> ServiceTimes {
+    ServiceTimes::from_macs(zoo, 5e-4, 2e10)
+}
+
+/// System configuration the search suite profiles under. The paper's
+/// Table-2/Fig-6 searches operate at a lighter load than the Fig-10
+/// stress sweep (a 10-model ensemble fits 200 ms during search but
+/// shows 1.15 s p95 at the full 64-bed burst load); we profile the
+/// composer at 16 concurrent patients and stress serving at 64–100.
+pub fn search_system() -> SystemConfig {
+    SystemConfig { gpus: 2, patients: 32, window_s: 30.0 }
+}
+
+/// One full search-experiment context.
+pub struct SearchContext<'a> {
+    pub zoo: &'a Zoo,
+    pub acc: ValidationAccuracyProfiler,
+    pub lat: AnalyticLatencyProfiler,
+    pub system: SystemConfig,
+}
+
+impl<'a> SearchContext<'a> {
+    pub fn new(zoo: &'a Zoo, system: SystemConfig) -> Self {
+        SearchContext {
+            zoo,
+            acc: ValidationAccuracyProfiler::from_zoo(zoo),
+            lat: AnalyticLatencyProfiler::new(default_service_times(zoo)),
+            system,
+        }
+    }
+
+    pub fn with_latency(mut self, lat: AnalyticLatencyProfiler) -> Self {
+        self.lat = lat;
+        self
+    }
+
+    /// Run one method with one seed under a latency budget.
+    pub fn run(
+        &self,
+        method: Method,
+        budget: f64,
+        seed: u64,
+        composer_cfg: &ComposerConfig,
+    ) -> SearchResult {
+        let servable_only = composer_cfg.servable_only;
+        match method {
+            Method::Rd => greedy_search(
+                Greedy::Random,
+                self.zoo,
+                &self.acc,
+                &self.lat,
+                &self.system,
+                budget,
+                servable_only,
+                seed,
+            ),
+            Method::Af => greedy_search(
+                Greedy::AccuracyFirst,
+                self.zoo,
+                &self.acc,
+                &self.lat,
+                &self.system,
+                budget,
+                servable_only,
+                seed,
+            ),
+            Method::Lf => greedy_search(
+                Greedy::LatencyFirst,
+                self.zoo,
+                &self.acc,
+                &self.lat,
+                &self.system,
+                budget,
+                servable_only,
+                seed,
+            ),
+            Method::Npo => {
+                let seeds = self.greedy_seeds(budget, seed, servable_only);
+                let budget_calls =
+                    composer_cfg.warm_start + composer_cfg.iterations * composer_cfg.top_k;
+                npo_search(
+                    self.zoo,
+                    &self.acc,
+                    &self.lat,
+                    &self.system,
+                    budget,
+                    budget_calls,
+                    &seeds,
+                    servable_only,
+                    seed,
+                )
+            }
+            Method::Holmes => {
+                let seeds = self.greedy_seeds(budget, seed, servable_only);
+                let mut cfg = composer_cfg.clone();
+                cfg.latency_budget = budget;
+                cfg.seed = seed;
+                let composer =
+                    Composer::new(self.zoo, &self.acc, &self.lat, cfg, self.system);
+                composer.search(&seeds)
+            }
+        }
+    }
+
+    /// The paper seeds NPO and HOLMES with the RD/AF/LF solutions.
+    fn greedy_seeds(&self, budget: f64, seed: u64, servable_only: bool) -> Vec<crate::zoo::Selector> {
+        [Greedy::Random, Greedy::AccuracyFirst, Greedy::LatencyFirst]
+            .into_iter()
+            .map(|g| {
+                greedy_search(
+                    g,
+                    self.zoo,
+                    &self.acc,
+                    &self.lat,
+                    &self.system,
+                    budget,
+                    servable_only,
+                    seed,
+                )
+                .best
+                .selector
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,148 @@
+//! Fig. 10: serving-latency scalability.
+//!
+//! Left panel: p95 end-to-end latency vs number of patients (device
+//! workers fixed at 2). Right panel: latency vs number of "GPUs"
+//! (workers) at the highest offered load.
+//!
+//! The HOLMES-selected servable ensemble is deployed on the real
+//! pipeline; ensemble queries arrive open-loop at the aggregate rate
+//! λ = patients / ΔT. ΔT is compressed from 30 s to 3 s so each setting
+//! completes in seconds — λ and the service times are what queueing
+//! depends on, so the scaling *shape* is preserved (EXPERIMENTS.md).
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::composer::baselines::best_feasible;
+use crate::config::ComposerConfig;
+use crate::data;
+use crate::ingest::synth::SynthConfig;
+use crate::runtime::Engine;
+use crate::serving::pipeline::{Pipeline, PipelineConfig, Query};
+use crate::zoo::{Selector, Zoo};
+use crate::Result;
+
+use super::common::{Method, SearchContext};
+use super::write_csv;
+
+pub fn run(zoo: &Zoo, out: &Path, quick: bool) -> Result<()> {
+    let ensemble = holmes_servable_ensemble(zoo, 0.2);
+    println!("\n== Fig 10: latency scalability ==");
+    println!(
+        "serving ensemble ({} models): {:?}",
+        ensemble.len(),
+        ensemble.indices().iter().map(|&i| zoo.model(i).id.clone()).collect::<Vec<_>>()
+    );
+    let window_s = 3.0; // compressed ΔT (see module docs)
+    let rounds = if quick { 3 } else { 5 };
+
+    let mut rows = Vec::new();
+    // ---- left: patients sweep at 2 workers
+    let patients: Vec<usize> =
+        if quick { vec![1, 8, 32, 64] } else { vec![1, 2, 4, 8, 16, 32, 64, 100] };
+    {
+        let engine = Engine::new(zoo, 2)?;
+        warm(&engine, &ensemble)?;
+        for &p in &patients {
+            let (p50, p95, p99) =
+                drive_open_loop(zoo, &engine, &ensemble, p, window_s, rounds)?;
+            println!("  patients={p:>4} gpus=2 → p50 {p50:.4}s p95 {p95:.4}s");
+            rows.push(format!("patients,{p},2,{p50:.6},{p95:.6},{p99:.6}"));
+        }
+    }
+    // ---- right: worker sweep at max load
+    let gpus: Vec<usize> = if quick { vec![1, 2] } else { vec![1, 2, 4] };
+    let max_patients = *patients.last().unwrap();
+    for &g in &gpus {
+        let engine = Engine::new(zoo, g)?;
+        warm(&engine, &ensemble)?;
+        let (p50, p95, p99) =
+            drive_open_loop(zoo, &engine, &ensemble, max_patients, window_s, rounds)?;
+        println!("  patients={max_patients} gpus={g} → p50 {p50:.4}s p95 {p95:.4}s");
+        rows.push(format!("gpus,{max_patients},{g},{p50:.6},{p95:.6},{p99:.6}"));
+    }
+    write_csv(out, "fig10.csv", "sweep,patients,gpus,p50_s,p95_s,p99_s", &rows)?;
+    Ok(())
+}
+
+/// The ensemble HOLMES composes when restricted to servable models,
+/// using engine-free analytic latency (calibrated coefficients).
+pub fn holmes_servable_ensemble(zoo: &Zoo, budget: f64) -> Selector {
+    let system = super::common::search_system();
+    let ctx = SearchContext::new(zoo, system);
+    let cfg = ComposerConfig {
+        servable_only: true,
+        iterations: 10,
+        warm_start: 16,
+        ..Default::default()
+    };
+    let r = ctx.run(Method::Holmes, budget, 0, &cfg);
+    let best = best_feasible(&r.profile_set, budget);
+    if best.selector.is_empty() {
+        // degenerate fallback: best single servable model
+        Selector::from_indices(zoo.n(), [zoo.servable_indices()[0]])
+    } else {
+        best.selector
+    }
+}
+
+fn warm(engine: &Engine, ensemble: &Selector) -> Result<()> {
+    for &m in ensemble.indices() {
+        for &b in engine.batch_sizes() {
+            engine.profile_model((m, b), 1)?;
+        }
+    }
+    Ok(())
+}
+
+/// Open-loop burst driver: every window tick, all `patients` beds emit
+/// their ensemble query together (phase-aligned worst case — the same
+/// arrival model the analytic profiler's token bucket assumes, and the
+/// regime where the paper's "latency scales linearly with ingest rate"
+/// holds). Runs `rounds` windows; returns (p50, p95, p99) e2e seconds.
+fn drive_open_loop(
+    zoo: &Zoo,
+    engine: &Engine,
+    ensemble: &Selector,
+    patients: usize,
+    window_s: f64,
+    rounds: usize,
+) -> Result<(f64, f64, f64)> {
+    let clip_len = zoo.manifest.clip_len;
+    let cfg = SynthConfig::from(&zoo.manifest.calibration);
+    // pre-generate a pool of windows to avoid synth cost in the loop
+    let pool = data::make_clips(8, clip_len, 99, &cfg);
+
+    let pipeline = Pipeline::spawn(zoo, engine, PipelineConfig::new(ensemble.clone()))?;
+    let start = Instant::now();
+    let mut replies = Vec::with_capacity(rounds * patients);
+    for round in 0..rounds {
+        // absolute schedule: bursts keep coming even if the previous one
+        // has not drained (open loop, non-blocking)
+        let tick = std::time::Duration::from_secs_f64(round as f64 * window_s);
+        if let Some(wait) = tick.checked_sub(start.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        for p in 0..patients {
+            let q = Query {
+                patient: p,
+                window_id: round as u64,
+                sim_end: round as f64 * window_s,
+                leads: pool.clips[p % pool.len()].clone(),
+                emitted: Instant::now(),
+            };
+            replies.push(pipeline.submit(q)?);
+        }
+    }
+    let mut e2e = Vec::with_capacity(replies.len());
+    for r in replies {
+        if let Ok(p) = r.recv() {
+            e2e.push(p.e2e.as_secs_f64());
+        }
+    }
+    Ok((
+        crate::metrics::percentile(&e2e, 50.0),
+        crate::metrics::percentile(&e2e, 95.0),
+        crate::metrics::percentile(&e2e, 99.0),
+    ))
+}

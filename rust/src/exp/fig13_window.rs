@@ -1,0 +1,105 @@
+//! Fig. 13: effect of the observation-window length on latency.
+//!
+//! `make artifacts` additionally lowers one trained model at a sweep of
+//! input lengths (`artifacts/window_sweep/`). For each length we report
+//! the paper's four legends:
+//! * **Timeit** — raw model execution (plain PJRT execute loop, the
+//!   paper's "Time in PyTorch"),
+//! * **TS** — serving delay inside the system (Timeit + measured
+//!   pipeline dispatch/batch overhead),
+//! * **TQ** — worst-case queueing bound from network calculus at the
+//!   64-bed load, and
+//! * **TQ+TS** — the end-to-end estimate.
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::netcalc::tq_periodic_sources;
+use crate::runtime::{bench_hlo_file, Engine};
+use crate::serving::pipeline::{Pipeline, PipelineConfig, Query};
+use crate::zoo::{Selector, Zoo};
+use crate::Result;
+
+use super::fig2_staleness::best_trained_per_lead;
+use super::write_csv;
+
+pub fn run(zoo: &Zoo, out: &Path, quick: bool) -> Result<()> {
+    let Some(sweep) = &zoo.manifest.window_sweep else {
+        println!("fig13: no window_sweep artifacts — rebuild with `make artifacts`");
+        return Ok(());
+    };
+    println!("\n== Fig 13: latency vs observation window ({}) ==", sweep.model_id);
+    let reps = if quick { 5 } else { 15 };
+    let gpus = 2usize;
+    let patients = 64usize;
+    let window_s = 30.0;
+
+    // measured pipeline overhead at the native clip length
+    let overhead = pipeline_overhead(zoo, if quick { 8 } else { 20 })?;
+    println!("  measured pipeline overhead: {:.4} ms", overhead * 1e3);
+
+    let mut lengths: Vec<usize> =
+        sweep.artifacts.keys().filter_map(|k| k.parse().ok()).collect();
+    lengths.sort_unstable();
+    let mut rows = Vec::new();
+    for len in lengths {
+        let rel = &sweep.artifacts[&len.to_string()];
+        let path = zoo.root.join(rel);
+        let mut times = bench_hlo_file(&path, len, reps)?;
+        times.sort();
+        let timeit = times[times.len() / 2].as_secs_f64();
+        let ts = timeit + overhead;
+        let mu = gpus as f64 / ts;
+        let tq = tq_periodic_sources(patients, window_s, mu, ts);
+        let secs = len as f64 / zoo.manifest.fs as f64;
+        println!(
+            "  window {secs:>6.1}s ({len:>5} samples): timeit {:.2}ms  ts {:.2}ms  tq {:.2}ms  ts+tq {:.2}ms",
+            timeit * 1e3,
+            ts * 1e3,
+            tq * 1e3,
+            (ts + tq) * 1e3
+        );
+        rows.push(format!(
+            "{len},{secs:.2},{timeit:.6},{ts:.6},{tq:.6},{:.6}",
+            ts + tq
+        ));
+    }
+    write_csv(
+        out,
+        "fig13.csv",
+        "window_samples,window_s,timeit_s,ts_s,tq_s,ts_plus_tq_s",
+        &rows,
+    )?;
+    Ok(())
+}
+
+/// Dispatch/batch overhead of the serving pipeline: mean(e2e) − mean(exec)
+/// for sequential single-model queries at the native clip length.
+fn pipeline_overhead(zoo: &Zoo, probes: usize) -> Result<f64> {
+    let best = best_trained_per_lead(zoo)[0];
+    let engine = Engine::new(zoo, 1)?;
+    engine.profile_model((best, 1), 1)?;
+    let clip_len = zoo.manifest.clip_len;
+    let pipeline = Pipeline::spawn(
+        zoo,
+        &engine,
+        PipelineConfig::new(Selector::from_indices(zoo.n(), [best])),
+    )?;
+    let leads: [Vec<f32>; 3] =
+        [vec![0.1; clip_len], vec![0.1; clip_len], vec![0.1; clip_len]];
+    let mut diffs = Vec::with_capacity(probes);
+    for w in 0..probes {
+        let q = Query {
+            patient: 0,
+            window_id: w as u64,
+            sim_end: 0.0,
+            leads: leads.clone(),
+            emitted: Instant::now(),
+        };
+        let p = pipeline.query(q)?;
+        diffs.push(p.e2e.as_secs_f64());
+    }
+    let exec_mean = pipeline.telemetry().exec.mean();
+    let e2e_mean = diffs.iter().sum::<f64>() / diffs.len().max(1) as f64;
+    Ok((e2e_mean - exec_mean).max(1e-5))
+}

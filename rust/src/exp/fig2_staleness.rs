@@ -1,0 +1,78 @@
+//! Fig. 2: prediction accuracy decreases with prediction delay.
+//!
+//! The paper evaluates step-down readiness on increasingly stale ECG
+//! windows. Here the synthetic cohort drifts toward its end-state with a
+//! 12 h time constant ([`crate::data::staleness_clips`]); clips observed
+//! `delay` hours early are scored by the real AOT-compiled ensemble
+//! (top trained model per lead) through the PJRT engine, and ROC-AUC is
+//! reported per delay.
+
+use std::path::Path;
+
+use crate::data;
+use crate::ingest::synth::SynthConfig;
+use crate::metrics::roc_auc;
+use crate::runtime::Engine;
+use crate::zoo::Zoo;
+use crate::Result;
+
+use super::write_csv;
+
+pub fn run(zoo: &Zoo, out: &Path, quick: bool) -> Result<()> {
+    let delays: Vec<f64> =
+        if quick { vec![0.0, 8.0, 24.0] } else { vec![0.0, 2.0, 4.0, 8.0, 16.0, 24.0, 36.0] };
+    let n_clips = if quick { 60 } else { 200 };
+    let engine = Engine::new(zoo, 2)?;
+    let cfg = SynthConfig::from(&zoo.manifest.calibration);
+    let clip_len = zoo.manifest.clip_len;
+
+    // ensemble: best trained model per lead
+    let members = best_trained_per_lead(zoo);
+    println!("\n== Fig 2: accuracy vs prediction delay ==");
+    println!(
+        "ensemble: {:?}",
+        members.iter().map(|&i| zoo.model(i).id.clone()).collect::<Vec<_>>()
+    );
+
+    let mut rows = Vec::new();
+    for &d in &delays {
+        let set = data::staleness_clips(n_clips, clip_len, d, 77, &cfg);
+        let mut scores = vec![0.0f64; set.len()];
+        for &m in &members {
+            let lead = zoo.model(m).lead;
+            let batch = engine.batch_for(8);
+            let mut i = 0;
+            while i < set.len() {
+                let take = (set.len() - i).min(batch);
+                let mut input = vec![0.0f32; batch * clip_len];
+                for (slot, clip) in set.clips[i..i + take].iter().enumerate() {
+                    input[slot * clip_len..(slot + 1) * clip_len].copy_from_slice(&clip[lead]);
+                }
+                let outz = engine.execute_blocking((m, batch), input)?;
+                for (slot, s) in scores[i..i + take].iter_mut().enumerate() {
+                    *s += outz.scores[slot] as f64 / members.len() as f64;
+                }
+                i += take;
+            }
+        }
+        let auc = roc_auc(&set.labels, &scores);
+        println!("  delay {d:>5.1} h → ROC-AUC {auc:.4}");
+        rows.push(format!("{d},{auc:.6},{n_clips}"));
+    }
+    write_csv(out, "fig2.csv", "delay_h,roc_auc,n_clips", &rows)?;
+    Ok(())
+}
+
+/// Highest-validation-AUC trained model per ECG lead.
+pub fn best_trained_per_lead(zoo: &Zoo) -> Vec<usize> {
+    (0..3)
+        .filter_map(|lead| {
+            zoo.manifest
+                .models
+                .iter()
+                .filter(|m| m.servable() && m.lead == lead)
+                .max_by(|a, b| a.val_auc.partial_cmp(&b.val_auc).unwrap())
+                .map(|m| m.index)
+        })
+        .collect()
+}

@@ -1,0 +1,132 @@
+//! Fig. 9: end-to-end latency timeline, HOLMES online serving vs the
+//! conventional hourly batch re-evaluation, one patient, 60 minutes.
+//!
+//! Time is compressed with the virtual clock (default 120×: the hour
+//! runs in 30 wall-seconds; quick mode 600×) — inference latencies are
+//! real wall-clock measurements, only the *pacing* between windows is
+//! accelerated, which is sound because the system is idle between
+//! events. Documented in EXPERIMENTS.md.
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::ingest::synth::{PatientSim, SynthConfig};
+use crate::ingest::VirtualClock;
+use crate::runtime::Engine;
+use crate::serving::pipeline::{Pipeline, PipelineConfig, Query};
+use crate::zoo::{Selector, Zoo};
+use crate::Result;
+
+use super::fig2_staleness::best_trained_per_lead;
+use super::write_csv;
+
+pub fn run(zoo: &Zoo, out: &Path, quick: bool) -> Result<()> {
+    let speedup = if quick { 600.0 } else { 120.0 };
+    let horizon_s = 3600.0; // one hour of simulated monitoring
+    let window_s = 30.0;
+    let clip_len = zoo.manifest.clip_len;
+    // "the highest accuracy model was chosen as the prediction model"
+    let best = *best_trained_per_lead(zoo)
+        .iter()
+        .max_by(|&&a, &&b| zoo.model(a).val_auc.partial_cmp(&zoo.model(b).val_auc).unwrap())
+        .expect("no trained models");
+    let ensemble = Selector::from_indices(zoo.n(), [best]);
+    println!("\n== Fig 9: online vs hourly-batch timeline (speedup {speedup}×) ==");
+    println!("model: {}", zoo.model(best).id);
+
+    let engine = Engine::new(zoo, 2)?;
+    engine.profile_model((best, 1), 2)?; // warm compile out of the timeline
+
+    let mut rows: Vec<String> = Vec::new();
+
+    // ---- online: evaluate every 30 s window as it completes
+    {
+        let pipeline = Pipeline::spawn(zoo, &engine, PipelineConfig::new(ensemble.clone()))?;
+        let cfg = SynthConfig::from(&zoo.manifest.calibration);
+        let mut sim = PatientSim::new(0, 42, cfg);
+        let clock = VirtualClock::new(speedup);
+        let n_windows = (horizon_s / window_s) as usize;
+        for w in 0..n_windows {
+            let window_end = (w + 1) as f64 * window_s;
+            // collect the window's samples (collection latency is measured
+            // per simulated second of data, like the paper's small events)
+            let mut leads: [Vec<f32>; 3] = Default::default();
+            let per_sec = 250usize;
+            let secs = (clip_len + per_sec - 1) / per_sec;
+            for sec in 0..secs {
+                let t0 = Instant::now();
+                for _ in 0..per_sec.min(clip_len - sec * per_sec) {
+                    let s = sim.next_ecg();
+                    for (l, lead) in leads.iter_mut().enumerate() {
+                        lead.push(s[l]);
+                    }
+                }
+                rows.push(format!(
+                    "online,{:.1},{:.6},collect",
+                    window_end - window_s + (sec + 1) as f64 * window_s / secs as f64,
+                    t0.elapsed().as_secs_f64()
+                ));
+            }
+            clock.sleep_until_sim(window_end);
+            let q = Query {
+                patient: 0,
+                window_id: w as u64,
+                sim_end: window_end,
+                leads,
+                emitted: Instant::now(),
+            };
+            let pred = pipeline.query(q)?;
+            rows.push(format!(
+                "online,{window_end:.1},{:.6},infer",
+                pred.e2e.as_secs_f64()
+            ));
+        }
+    }
+
+    // ---- batch: accumulate everything, evaluate once at the hour mark
+    {
+        let cfg = SynthConfig::from(&zoo.manifest.calibration);
+        let mut sim = PatientSim::new(0, 42, cfg);
+        let n_windows = (horizon_s / window_s) as usize;
+        let mut windows: Vec<Vec<f32>> = Vec::with_capacity(n_windows);
+        let lead = zoo.model(best).lead;
+        for _ in 0..n_windows {
+            let mut clip = Vec::with_capacity(clip_len);
+            for _ in 0..clip_len {
+                clip.push(sim.next_ecg()[lead]);
+            }
+            windows.push(clip);
+        }
+        // the hourly job: score the whole backlog in one batched pass
+        let t0 = Instant::now();
+        let batch = engine.batch_for(8);
+        let mut i = 0;
+        while i < windows.len() {
+            let take = (windows.len() - i).min(batch);
+            let mut input = vec![0.0f32; batch * clip_len];
+            for (slot, w) in windows[i..i + take].iter().enumerate() {
+                input[slot * clip_len..(slot + 1) * clip_len].copy_from_slice(w);
+            }
+            engine.execute_blocking((best, batch), input)?;
+            i += take;
+        }
+        let total = t0.elapsed().as_secs_f64();
+        rows.push(format!("batch,{horizon_s:.1},{total:.6},infer"));
+        println!("  batch job at t=60min: {total:.3}s for {n_windows} windows");
+    }
+
+    // summary
+    let online_infer: Vec<f64> = rows
+        .iter()
+        .filter(|r| r.starts_with("online") && r.ends_with("infer"))
+        .filter_map(|r| r.split(',').nth(2)?.parse().ok())
+        .collect();
+    let mean_online = online_infer.iter().sum::<f64>() / online_infer.len().max(1) as f64;
+    println!(
+        "  online evals: {} windows, mean latency {:.4}s",
+        online_infer.len(),
+        mean_online
+    );
+    write_csv(out, "fig9.csv", "mode,sim_time_s,latency_s,kind", &rows)?;
+    Ok(())
+}

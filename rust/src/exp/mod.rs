@@ -1,0 +1,63 @@
+//! Experiment harnesses — one per paper table/figure (DESIGN.md §5).
+//!
+//! Every harness regenerates the corresponding table rows / figure
+//! series from scratch (workload generation → search / serving →
+//! metrics) and writes `results/<id>.csv` plus a human-readable summary
+//! to stdout. EXPERIMENTS.md records paper-vs-measured shape.
+
+pub mod bedside;
+pub mod common;
+pub mod fig10_scalability;
+pub mod fig13_window;
+pub mod fig2_staleness;
+pub mod fig9_timeline;
+pub mod search_suite;
+
+use std::path::Path;
+
+use crate::Result;
+
+/// Write a CSV file (header + rows) under the results directory.
+pub fn write_csv(
+    out_dir: impl AsRef<Path>,
+    name: &str,
+    header: &str,
+    rows: &[String],
+) -> Result<std::path::PathBuf> {
+    let dir = out_dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    let mut text = String::with_capacity(rows.len() * 64 + header.len() + 1);
+    text.push_str(header);
+    text.push('\n');
+    for r in rows {
+        text.push_str(r);
+        text.push('\n');
+    }
+    std::fs::write(&path, text)?;
+    Ok(path)
+}
+
+/// Run every experiment (the `exp all` CLI subcommand / `make results`).
+pub fn run_all(artifacts: &Path, out: &Path, quick: bool) -> Result<()> {
+    let zoo = crate::zoo::Zoo::load(artifacts)?;
+    search_suite::run(&zoo, out, quick)?;
+    fig2_staleness::run(&zoo, out, quick)?;
+    fig9_timeline::run(&zoo, out, quick)?;
+    fig10_scalability::run(&zoo, out, quick)?;
+    fig13_window::run(&zoo, out, quick)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_csv_creates_file() {
+        let dir = std::env::temp_dir().join("holmes_csv_test");
+        let p = write_csv(&dir, "t.csv", "a,b", &["1,2".into(), "3,4".into()]).unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4\n");
+    }
+}

@@ -1,0 +1,248 @@
+//! Composer-search experiment suite: Table 2 and Figures 1, 6, 7, 8, 11,
+//! 12 all come from the same family of runs (five methods × seeds ×
+//! latency budgets), so one harness generates them coherently.
+
+use std::path::Path;
+
+use crate::composer::{Delta, SearchResult};
+use crate::config::ComposerConfig;
+use crate::metrics::mean_std;
+use crate::zoo::Zoo;
+use crate::Result;
+
+use super::common::{Method, SearchContext};
+use super::write_csv;
+
+pub fn run(zoo: &Zoo, out: &Path, quick: bool) -> Result<()> {
+    let system = super::common::search_system();
+    let ctx = SearchContext::new(zoo, system);
+    let cfg = if quick {
+        ComposerConfig { iterations: 8, warm_start: 12, explore_samples: 32, ..Default::default() }
+    } else {
+        ComposerConfig::default()
+    };
+    let budget = 0.2; // the paper's 200 ms constraint
+    let seeds: Vec<u64> = if quick { (0..3).collect() } else { (0..10).collect() };
+
+    // ---- all methods × seeds at the 200 ms budget
+    println!("== search suite: {} methods × {} seeds @ {budget}s ==", 5, seeds.len());
+    let mut runs: Vec<(Method, u64, SearchResult)> = Vec::new();
+    for &m in &Method::ALL {
+        for &s in &seeds {
+            runs.push((m, s, ctx.run(m, budget, s, &cfg)));
+        }
+    }
+
+    table2(&ctx, &runs, &seeds, out)?;
+    fig1(&runs, out)?;
+    fig6(&runs, budget, out)?;
+    fig8(&runs, out)?;
+    fig11(&runs, out)?;
+    fig12(&runs, budget, out)?;
+    fig7(&ctx, &cfg, &seeds, out, quick)?;
+    Ok(())
+}
+
+/// Table 2: mean ± std of the four metrics per method. The spread pools
+/// search-seed variance with validation-set bootstrap variance (the
+/// paper's ± comes from its 10-patient test cohort's sampling noise).
+fn table2(
+    ctx: &SearchContext,
+    runs: &[(Method, u64, SearchResult)],
+    seeds: &[u64],
+    out: &Path,
+) -> Result<()> {
+    use crate::metrics::{accuracy_at, bootstrap_metric, f1_at, pr_auc, roc_auc};
+    let mut rows = Vec::new();
+    println!("\nTable 2 (budget 200 ms, {} seeds):", seeds.len());
+    println!("{:<8} {:>18} {:>18} {:>18} {:>18}", "Method", "ROC-AUC", "PR-AUC", "F1", "Accuracy");
+    let labels = ctx.acc.labels().to_vec();
+    for &m in &Method::ALL {
+        let pick = |metric: fn(&[u8], &[f64]) -> f64| -> (f64, f64) {
+            // pool bootstrap draws across seeds
+            let mut means = Vec::new();
+            let mut vars = Vec::new();
+            for (_, s, r) in runs.iter().filter(|(mm, _, _)| *mm == m) {
+                let scores = ctx.acc.ensemble_scores(&r.best.selector);
+                let (mu, sd) = bootstrap_metric(&labels, &scores, metric, 64, 1000 + s);
+                means.push(mu);
+                vars.push(sd * sd);
+            }
+            let (mu, seed_sd) = mean_std(&means);
+            let boot_var = vars.iter().sum::<f64>() / vars.len().max(1) as f64;
+            (mu, (seed_sd * seed_sd + boot_var).sqrt())
+        };
+        let roc = pick(roc_auc);
+        let pr = pick(pr_auc);
+        let f1 = pick(|l, s| f1_at(l, s, 0.5));
+        let acc = pick(|l, s| accuracy_at(l, s, 0.5));
+        println!(
+            "{:<8} {:>8.4} ±{:>6.4} {:>9.4} ±{:>6.4} {:>9.4} ±{:>6.4} {:>9.4} ±{:>6.4}",
+            m.name(),
+            roc.0,
+            roc.1,
+            pr.0,
+            pr.1,
+            f1.0,
+            f1.1,
+            acc.0,
+            acc.1
+        );
+        rows.push(format!(
+            "{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6}",
+            m.name(),
+            roc.0,
+            roc.1,
+            pr.0,
+            pr.1,
+            f1.0,
+            f1.1,
+            acc.0,
+            acc.1
+        ));
+    }
+    write_csv(
+        out,
+        "table2.csv",
+        "method,roc_auc,roc_auc_std,pr_auc,pr_auc_std,f1,f1_std,accuracy,accuracy_std",
+        &rows,
+    )?;
+    Ok(())
+}
+
+/// Fig. 1: final (latency, ROC-AUC) point per method per seed.
+fn fig1(runs: &[(Method, u64, SearchResult)], out: &Path) -> Result<()> {
+    let rows: Vec<String> = runs
+        .iter()
+        .map(|(m, s, r)| {
+            format!("{},{},{:.6},{:.6}", m.name(), s, r.best.latency, r.best.accuracy.roc_auc)
+        })
+        .collect();
+    write_csv(out, "fig1.csv", "method,seed,latency_s,roc_auc", &rows)?;
+    Ok(())
+}
+
+/// Fig. 6: per-profiled-point trajectory (accuracy and latency of the
+/// newly profiled point + incumbent), seed 0 only.
+fn fig6(runs: &[(Method, u64, SearchResult)], budget: f64, out: &Path) -> Result<()> {
+    let mut rows = Vec::new();
+    for (m, s, r) in runs.iter().filter(|(_, s, _)| *s == 0) {
+        let traj = r.trajectory(budget, Delta::HardStep);
+        for (i, (p, (best_acc, best_lat))) in r.profile_set.iter().zip(&traj).enumerate() {
+            rows.push(format!(
+                "{},{},{},{:.6},{:.6},{:.6},{:.6}",
+                m.name(),
+                s,
+                i,
+                p.accuracy.roc_auc,
+                p.latency,
+                best_acc,
+                best_lat
+            ));
+        }
+    }
+    write_csv(
+        out,
+        "fig6.csv",
+        "method,seed,step,point_roc_auc,point_latency_s,best_roc_auc,best_latency_s",
+        &rows,
+    )?;
+    Ok(())
+}
+
+/// Fig. 7: ROC-AUC distributions of HOLMES vs NPO across latency budgets.
+fn fig7(
+    ctx: &SearchContext,
+    cfg: &ComposerConfig,
+    seeds: &[u64],
+    out: &Path,
+    quick: bool,
+) -> Result<()> {
+    let budgets: Vec<f64> =
+        if quick { vec![0.1, 0.2, 0.5] } else { vec![0.05, 0.1, 0.15, 0.2, 0.3, 0.5] };
+    let mut rows = Vec::new();
+    println!("\nFig 7 (ROC-AUC vs latency budget, HOLMES vs NPO):");
+    for &b in &budgets {
+        for &m in &[Method::Npo, Method::Holmes] {
+            let aucs: Vec<f64> = seeds
+                .iter()
+                .map(|&s| {
+                    let r = ctx.run(m, b, s, cfg);
+                    rows.push(format!(
+                        "{},{},{},{:.6},{:.6}",
+                        m.name(),
+                        b,
+                        s,
+                        r.best.accuracy.roc_auc,
+                        r.best.latency
+                    ));
+                    r.best.accuracy.roc_auc
+                })
+                .collect();
+            let (mu, sd) = mean_std(&aucs);
+            println!("  L={b:>5}s {:<7} AUC {mu:.4} ± {sd:.4}", m.name());
+        }
+    }
+    write_csv(out, "fig7.csv", "method,budget_s,seed,roc_auc,latency_s", &rows)?;
+    Ok(())
+}
+
+/// Fig. 8: surrogate R² vs iteration (HOLMES runs, all seeds).
+fn fig8(runs: &[(Method, u64, SearchResult)], out: &Path) -> Result<()> {
+    let mut rows = Vec::new();
+    for (_, s, r) in runs.iter().filter(|(m, _, _)| *m == Method::Holmes) {
+        for &(it, r2a, r2l) in &r.surrogate_r2 {
+            rows.push(format!("{s},{it},{r2a:.6},{r2l:.6}"));
+        }
+    }
+    write_csv(out, "fig8.csv", "seed,iteration,r2_accuracy,r2_latency", &rows)?;
+    Ok(())
+}
+
+/// Fig. 11: every explored point (latency, ROC-AUC) per algorithm, seed 0.
+fn fig11(runs: &[(Method, u64, SearchResult)], out: &Path) -> Result<()> {
+    let mut rows = Vec::new();
+    for (m, s, r) in runs.iter().filter(|(_, s, _)| *s == 0) {
+        for p in &r.profile_set {
+            rows.push(format!(
+                "{},{},{},{:.6},{:.6},{}",
+                m.name(),
+                s,
+                p.iteration,
+                p.latency,
+                p.accuracy.roc_auc,
+                p.selector.len()
+            ));
+        }
+    }
+    write_csv(
+        out,
+        "fig11.csv",
+        "method,seed,iteration,latency_s,roc_auc,ensemble_size",
+        &rows,
+    )?;
+    Ok(())
+}
+
+/// Fig. 12: utility-of-latency (budget − latency, clipped at 0) and
+/// accuracy of each method's optimum under the 0.2 s constraint.
+fn fig12(runs: &[(Method, u64, SearchResult)], budget: f64, out: &Path) -> Result<()> {
+    let mut rows = Vec::new();
+    for &m in &Method::ALL {
+        let rs: Vec<&SearchResult> =
+            runs.iter().filter(|(mm, _, _)| *mm == m).map(|(_, _, r)| r).collect();
+        let lat_util: Vec<f64> =
+            rs.iter().map(|r| (budget - r.best.latency).max(0.0)).collect();
+        let acc: Vec<f64> = rs.iter().map(|r| r.best.accuracy.roc_auc).collect();
+        let (lu, lus) = mean_std(&lat_util);
+        let (au, aus) = mean_std(&acc);
+        rows.push(format!("{},{lu:.6},{lus:.6},{au:.6},{aus:.6}", m.name()));
+    }
+    write_csv(
+        out,
+        "fig12.csv",
+        "method,latency_headroom_s,latency_headroom_std,roc_auc,roc_auc_std",
+        &rows,
+    )?;
+    Ok(())
+}

@@ -1,0 +1,261 @@
+//! Minimal HTTP/1.1 ingest server (paper Fig. 4: "the HTTP server that
+//! simplifies data ingest into the serving system").
+//!
+//! Endpoints:
+//! * `POST /ingest`  — JSON [`Frame`] body; forwarded to the pipeline's
+//!   aggregator stage.
+//! * `GET /stats`    — telemetry snapshot (JSON).
+//! * `GET /healthz`  — liveness.
+//!
+//! Hand-rolled on std TCP with a thread per connection: the request
+//! path needs exactly these three routes and zero framework overhead.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+use crate::ingest::Frame;
+use crate::json::Value;
+use crate::serving::Telemetry;
+use crate::{Error, Result};
+
+/// Running server handle; the listener thread stops accepting when this
+/// is dropped (connections in flight finish their current request).
+pub struct HttpServer {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock accept() with a dummy connection
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// Start the ingest server; frames are forwarded to `frame_tx`.
+/// Bind with port 0 to auto-pick.
+pub fn serve(
+    addr: &str,
+    frame_tx: mpsc::Sender<Frame>,
+    telemetry: Arc<Telemetry>,
+) -> Result<HttpServer> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    std::thread::Builder::new()
+        .name("http-accept".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let tx = frame_tx.clone();
+                let tel = Arc::clone(&telemetry);
+                std::thread::spawn(move || {
+                    let _ = handle_connection(stream, tx, tel);
+                });
+            }
+        })
+        .map_err(Error::Io)?;
+    Ok(HttpServer { addr: local, stop })
+}
+
+fn handle_connection(
+    mut stream: TcpStream,
+    frame_tx: mpsc::Sender<Frame>,
+    telemetry: Arc<Telemetry>,
+) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::with_capacity(4096);
+    loop {
+        // read until end of headers
+        let header_end = loop {
+            if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
+                break pos + 4;
+            }
+            let mut chunk = [0u8; 4096];
+            let n = stream.read(&mut chunk)?;
+            if n == 0 {
+                return Ok(()); // connection closed
+            }
+            buf.extend_from_slice(&chunk[..n]);
+            if buf.len() > 1 << 20 {
+                return Err(Error::serving("request headers too large"));
+            }
+        };
+        let head = String::from_utf8_lossy(&buf[..header_end]).to_string();
+        let mut lines = head.lines();
+        let request_line = lines.next().unwrap_or_default().to_string();
+        let content_length: usize = lines
+            .filter_map(|l| {
+                let (k, v) = l.split_once(':')?;
+                if k.eq_ignore_ascii_case("content-length") {
+                    v.trim().parse().ok()
+                } else {
+                    None
+                }
+            })
+            .next()
+            .unwrap_or(0);
+        // read the body
+        while buf.len() < header_end + content_length {
+            let mut chunk = [0u8; 4096];
+            let n = stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(Error::serving("truncated body"));
+            }
+            buf.extend_from_slice(&chunk[..n]);
+        }
+        let body = buf[header_end..header_end + content_length].to_vec();
+        buf.drain(..header_end + content_length);
+
+        let (status, payload) = route(&request_line, &body, &frame_tx, &telemetry);
+        let response = format!(
+            "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+            payload.len()
+        );
+        stream.write_all(response.as_bytes())?;
+        stream.write_all(payload.as_bytes())?;
+    }
+}
+
+fn route(
+    request_line: &str,
+    body: &[u8],
+    frame_tx: &mpsc::Sender<Frame>,
+    telemetry: &Telemetry,
+) -> (&'static str, String) {
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    match (method, path) {
+        ("POST", "/ingest") => {
+            let parsed = std::str::from_utf8(body)
+                .map_err(|_| Error::json("body not utf-8"))
+                .and_then(Value::parse)
+                .and_then(|v| Frame::from_json(&v));
+            match parsed {
+                Ok(frame) => {
+                    if frame_tx.send(frame).is_ok() {
+                        ("200 OK", "{\"ok\":true}".to_string())
+                    } else {
+                        ("503 Service Unavailable", "{\"error\":\"pipeline closed\"}".to_string())
+                    }
+                }
+                Err(e) => ("400 Bad Request", format!("{{\"error\":\"{e}\"}}")),
+            }
+        }
+        ("GET", "/stats") => ("200 OK", telemetry.snapshot().to_json().to_string()),
+        ("GET", "/healthz") => ("200 OK", "{\"status\":\"up\"}".to_string()),
+        _ => ("404 Not Found", "{\"error\":\"no such route\"}".to_string()),
+    }
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ingest::Modality;
+
+    #[test]
+    fn ingest_roundtrip_over_tcp() {
+        let (tx, rx) = mpsc::channel();
+        let tel = Arc::new(Telemetry::default());
+        let server = serve("127.0.0.1:0", tx, tel).unwrap();
+        let frame = Frame {
+            patient: 3,
+            modality: Modality::Ecg,
+            sim_time: 1.5,
+            values: vec![0.1, 0.2, 0.3],
+        };
+        let body = frame.to_json().to_string();
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        let req = format!(
+            "POST /ingest HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        s.write_all(req.as_bytes()).unwrap();
+        let mut resp = vec![0u8; 1024];
+        let n = s.read(&mut resp).unwrap();
+        assert!(String::from_utf8_lossy(&resp[..n]).starts_with("HTTP/1.1 200"));
+        let got = rx.recv().unwrap();
+        assert_eq!(got.patient, 3);
+        assert_eq!(got.values.len(), 3);
+    }
+
+    /// Read headers + full content-length body (may span TCP segments).
+    fn read_full_response(s: &mut TcpStream) -> String {
+        let mut buf = Vec::new();
+        let mut chunk = [0u8; 2048];
+        loop {
+            let n = s.read(&mut chunk).unwrap();
+            if n == 0 {
+                break;
+            }
+            buf.extend_from_slice(&chunk[..n]);
+            if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
+                let head = String::from_utf8_lossy(&buf[..pos]).to_string();
+                let clen: usize = head
+                    .lines()
+                    .filter_map(|l| {
+                        let (k, v) = l.split_once(':')?;
+                        k.eq_ignore_ascii_case("content-length")
+                            .then(|| v.trim().parse().ok())
+                            .flatten()
+                    })
+                    .next()
+                    .unwrap_or(0);
+                if buf.len() >= pos + 4 + clen {
+                    break;
+                }
+            }
+        }
+        String::from_utf8_lossy(&buf).to_string()
+    }
+
+    #[test]
+    fn stats_health_and_404_endpoints() {
+        let (tx, _rx) = mpsc::channel();
+        let tel = Arc::new(Telemetry::default());
+        let server = serve("127.0.0.1:0", tx, tel).unwrap();
+        for (path, expect) in [("/healthz", "up"), ("/stats", "e2e_p95"), ("/nope", "no such")] {
+            let mut s = TcpStream::connect(server.addr).unwrap();
+            let req = format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n");
+            s.write_all(req.as_bytes()).unwrap();
+            let text = read_full_response(&mut s);
+            assert!(text.contains(expect), "{path}: {text}");
+        }
+    }
+
+    #[test]
+    fn malformed_body_is_400() {
+        let (tx, _rx) = mpsc::channel();
+        let tel = Arc::new(Telemetry::default());
+        let server = serve("127.0.0.1:0", tx, tel).unwrap();
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        let body = "{not json";
+        let req = format!(
+            "POST /ingest HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        s.write_all(req.as_bytes()).unwrap();
+        let mut resp = vec![0u8; 1024];
+        let n = s.read(&mut resp).unwrap();
+        assert!(String::from_utf8_lossy(&resp[..n]).starts_with("HTTP/1.1 400"));
+    }
+
+    #[test]
+    fn find_subslice_works() {
+        assert_eq!(find_subslice(b"abc\r\n\r\ndef", b"\r\n\r\n"), Some(3));
+        assert_eq!(find_subslice(b"abc", b"xyz"), None);
+    }
+}

@@ -1,0 +1,81 @@
+//! Virtual clock: maps simulation time ↔ wall-clock time with an
+//! acceleration factor.
+//!
+//! Latency-measuring experiments (Fig. 10, Fig. 13) run at 1× — real
+//! 250 Hz pacing — so queueing is physically real. Long-horizon
+//! timelines (Fig. 9's 60-minute online-vs-batch comparison) run
+//! accelerated; EXPERIMENTS.md documents the factor per experiment.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct VirtualClock {
+    start: Instant,
+    /// simulated seconds per wall second (1.0 = real time).
+    speedup: f64,
+}
+
+impl VirtualClock {
+    pub fn new(speedup: f64) -> Self {
+        assert!(speedup > 0.0);
+        VirtualClock { start: Instant::now(), speedup }
+    }
+
+    pub fn real_time() -> Self {
+        Self::new(1.0)
+    }
+
+    pub fn speedup(&self) -> f64 {
+        self.speedup
+    }
+
+    /// Current simulation time (seconds since clock start).
+    pub fn now_sim(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * self.speedup
+    }
+
+    /// Wall-clock duration until the given simulation time (zero if past).
+    pub fn wall_until(&self, sim_time: f64) -> Duration {
+        let remaining = (sim_time - self.now_sim()) / self.speedup;
+        if remaining <= 0.0 {
+            Duration::ZERO
+        } else {
+            Duration::from_secs_f64(remaining)
+        }
+    }
+
+    /// Blocking sleep until a simulation instant.
+    pub fn sleep_until_sim(&self, sim_time: f64) {
+        let wall = self.wall_until(sim_time);
+        if !wall.is_zero() {
+            std::thread::sleep(wall);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_time_scales_with_speedup() {
+        let c = VirtualClock::new(100.0);
+        std::thread::sleep(Duration::from_millis(20));
+        let sim = c.now_sim();
+        assert!(sim > 1.0, "sim = {sim}"); // ≥ 2 simulated seconds expected
+    }
+
+    #[test]
+    fn wall_until_future_and_past() {
+        let c = VirtualClock::new(10.0);
+        let wall = c.wall_until(5.0);
+        assert!(wall <= Duration::from_millis(510) && wall > Duration::from_millis(300));
+        assert_eq!(c.wall_until(-1.0), Duration::ZERO);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_speedup_rejected() {
+        VirtualClock::new(0.0);
+    }
+}

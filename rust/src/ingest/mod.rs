@@ -1,0 +1,137 @@
+//! Patient data ingest: synthetic bedside monitors (the paper's client
+//! data generator), a virtual clock for accelerated long-horizon
+//! experiments, and open-loop stream drivers.
+
+pub mod clock;
+pub mod synth;
+
+pub use clock::VirtualClock;
+pub use synth::{PatientSim, PatientState, SynthConfig};
+
+use crate::json::Value;
+use crate::{Error, Result};
+
+/// One sample frame from a bedside monitor.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub patient: usize,
+    pub modality: Modality,
+    /// Simulation timestamp, seconds since stream start.
+    pub sim_time: f64,
+    /// Sample payload: one ECG sample per lead, or the vitals vector.
+    pub values: Vec<f32>,
+}
+
+impl Frame {
+    /// JSON body of the HTTP `/ingest` endpoint.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("patient", Value::Num(self.patient as f64)),
+            ("modality", Value::Str(self.modality.as_str().to_string())),
+            ("sim_time", Value::Num(self.sim_time)),
+            (
+                "values",
+                Value::Arr(self.values.iter().map(|&v| Value::Num(v as f64)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Frame> {
+        Ok(Frame {
+            patient: v
+                .req("patient")?
+                .as_usize()
+                .ok_or_else(|| Error::json("patient not a number"))?,
+            modality: Modality::from_str(
+                v.req("modality")?.as_str().ok_or_else(|| Error::json("modality not a string"))?,
+            )?,
+            sim_time: v
+                .req("sim_time")?
+                .as_f64()
+                .ok_or_else(|| Error::json("sim_time not a number"))?,
+            values: v.req("values")?.as_f64_vec()?.into_iter().map(|x| x as f32).collect(),
+        })
+    }
+}
+
+/// Data modalities of the CICU cohort (paper §4.1.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Modality {
+    /// 3-lead ECG waveform, 250 Hz.
+    Ecg,
+    /// 7 vital signs, 1 Hz.
+    Vitals,
+    /// 8 lab values, irregular (minutes–hours).
+    Labs,
+}
+
+impl Modality {
+    /// Nominal sampling frequency (Hz); labs are modelled at 1/300 Hz.
+    pub fn frequency(&self) -> f64 {
+        match self {
+            Modality::Ecg => 250.0,
+            Modality::Vitals => 1.0,
+            Modality::Labs => 1.0 / 300.0,
+        }
+    }
+
+    pub fn channels(&self) -> usize {
+        match self {
+            Modality::Ecg => 3,
+            Modality::Vitals => 7,
+            Modality::Labs => 8,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Modality::Ecg => "ecg",
+            Modality::Vitals => "vitals",
+            Modality::Labs => "labs",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<Modality> {
+        match s {
+            "ecg" => Ok(Modality::Ecg),
+            "vitals" => Ok(Modality::Vitals),
+            "labs" => Ok(Modality::Labs),
+            other => Err(Error::json(format!("unknown modality '{other}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_json_roundtrip() {
+        let f = Frame {
+            patient: 7,
+            modality: Modality::Vitals,
+            sim_time: 12.5,
+            values: vec![1.0, 2.5, -0.25],
+        };
+        let g = Frame::from_json(&Value::parse(&f.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(g.patient, 7);
+        assert_eq!(g.modality, Modality::Vitals);
+        assert_eq!(g.sim_time, 12.5);
+        assert_eq!(g.values, vec![1.0, 2.5, -0.25]);
+    }
+
+    #[test]
+    fn modality_str_roundtrip() {
+        for m in [Modality::Ecg, Modality::Vitals, Modality::Labs] {
+            assert_eq!(Modality::from_str(m.as_str()).unwrap(), m);
+        }
+        assert!(Modality::from_str("xray").is_err());
+    }
+
+    #[test]
+    fn modality_frequencies() {
+        assert_eq!(Modality::Ecg.frequency(), 250.0);
+        assert_eq!(Modality::Vitals.frequency(), 1.0);
+        assert_eq!(Modality::Ecg.channels(), 3);
+    }
+}

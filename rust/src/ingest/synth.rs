@@ -1,0 +1,333 @@
+//! Synthetic bedside-monitor simulator — the rust mirror of
+//! `python/compile/data.py` (shared calibration constants live in the
+//! zoo manifest; `tests` asserts agreement with them).
+//!
+//! Each patient carries a latent severity state s ∈ [0,1] that drives
+//! ECG morphology (heart rate, HRV, ST level, QRS width, noise/sensor
+//! dropouts), the 7 vitals, and the 8 labs. Critical patients (label 0)
+//! have high severity, stable ones (label 1) low, with overlapping
+//! supports — so the served models face the same distribution they were
+//! trained on.
+
+use super::{Frame, Modality};
+use crate::rng::Rng;
+use crate::zoo::Calibration;
+
+/// Generator configuration (defaults match `data.calibration_constants`).
+#[derive(Debug, Clone)]
+pub struct SynthConfig {
+    pub fs: f64,
+    pub lead_amp: [f64; 3],
+    pub lead_noise: [f64; 3],
+    pub hr_base: f64,
+    pub hr_sev_gain: f64,
+    pub hrv_base: f64,
+    pub hrv_stable_gain: f64,
+    pub st_depression: f64,
+    pub noise_base: f64,
+    pub noise_sev_gain: f64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        SynthConfig {
+            fs: 250.0,
+            lead_amp: [0.8, 1.0, 0.6],
+            lead_noise: [1.2, 0.8, 1.5],
+            hr_base: 95.0,
+            hr_sev_gain: 75.0,
+            hrv_base: 0.012,
+            hrv_stable_gain: 0.09,
+            st_depression: -0.18,
+            noise_base: 0.035,
+            noise_sev_gain: 0.09,
+        }
+    }
+}
+
+impl From<&Calibration> for SynthConfig {
+    fn from(c: &Calibration) -> Self {
+        SynthConfig {
+            fs: c.fs as f64,
+            lead_amp: [c.lead_amp[0], c.lead_amp[1], c.lead_amp[2]],
+            lead_noise: [c.lead_noise[0], c.lead_noise[1], c.lead_noise[2]],
+            hr_base: c.hr_base,
+            hr_sev_gain: c.hr_sev_gain,
+            hrv_base: c.hrv_base,
+            hrv_stable_gain: c.hrv_stable_gain,
+            st_depression: c.st_depression,
+            noise_base: c.noise_base,
+            noise_sev_gain: c.noise_sev_gain,
+        }
+    }
+}
+
+/// Latent patient state.
+#[derive(Debug, Clone, Copy)]
+pub struct PatientState {
+    /// Ground-truth outcome: 1 = stable (ready for step-down), 0 = critical.
+    pub label: u8,
+    /// Latent severity s ∈ [0,1].
+    pub severity: f64,
+}
+
+/// Streaming simulator for one patient: produces ECG frames at 250 Hz,
+/// vitals at 1 Hz and labs every ~5 min of *simulation* time.
+pub struct PatientSim {
+    pub id: usize,
+    pub state: PatientState,
+    cfg: SynthConfig,
+    rng: Rng,
+    // ECG phase machinery
+    rr_samples: f64,
+    beat_pos: f64, // samples since current beat start
+    hr: f64,
+    noise_sd: [f64; 3],
+    sample_idx: u64,
+    // sensor-dropout burst window (sample indices)
+    dropout_until: u64,
+}
+
+impl PatientSim {
+    pub fn new(id: usize, seed: u64, cfg: SynthConfig) -> Self {
+        let mut rng = Rng::seed_from_u64(seed.wrapping_mul(1_000_003).wrapping_add(id as u64));
+        let label = if rng.f64() < 0.45 { 1 } else { 0 };
+        let severity = severity_for_label(&mut rng, label);
+        Self::with_state(id, seed, cfg, PatientState { label, severity })
+    }
+
+    pub fn with_state(id: usize, seed: u64, cfg: SynthConfig, state: PatientState) -> Self {
+        let mut rng =
+            Rng::seed_from_u64(seed.wrapping_mul(1_000_003).wrapping_add(id as u64));
+        let hr = (cfg.hr_base + cfg.hr_sev_gain * state.severity + 6.0 * rng.normal())
+            .clamp(60.0, 220.0);
+        let mut noise_sd = [0.0; 3];
+        for lead in 0..3 {
+            noise_sd[lead] = (cfg.noise_base
+                + cfg.noise_sev_gain * state.severity * rng.range_f64(0.5, 1.5))
+                * cfg.lead_noise[lead];
+        }
+        let rr = cfg.fs * 60.0 / hr;
+        PatientSim {
+            id,
+            state,
+            cfg,
+            rng,
+            rr_samples: rr,
+            beat_pos: 0.0,
+            hr,
+            noise_sd,
+            sample_idx: 0,
+            dropout_until: 0,
+        }
+    }
+
+    /// Next ECG sample for all 3 leads (advance by 1/fs seconds).
+    pub fn next_ecg(&mut self) -> [f32; 3] {
+        let s = self.state.severity;
+        let phase = self.beat_pos / self.rr_samples;
+        let t_abs = self.sample_idx as f64 / self.cfg.fs;
+        let mut out = [0.0f32; 3];
+        let in_dropout = self.sample_idx < self.dropout_until;
+        for lead in 0..3 {
+            let v = if in_dropout {
+                0.02 * self.rng.normal()
+            } else {
+                beat_waveform(phase, s, self.cfg.st_depression) * self.cfg.lead_amp[lead]
+                    + 0.05 * (2.0 * std::f64::consts::PI * 0.25 * t_abs).sin()
+                    + self.noise_sd[lead] * self.rng.normal()
+            };
+            out[lead] = v as f32;
+        }
+        self.beat_pos += 1.0;
+        self.sample_idx += 1;
+        if self.beat_pos >= self.rr_samples {
+            self.beat_pos -= self.rr_samples;
+            // next RR interval with severity-dependent HRV
+            let hrv = self.cfg.hrv_stable_gain * (1.0 - s) + self.cfg.hrv_base;
+            self.rr_samples =
+                (self.cfg.fs * 60.0 / self.hr * (1.0 + hrv * self.rng.normal()))
+                    .max(self.cfg.fs * 60.0 / 230.0);
+            // occasional dropout burst, sicker ⇒ likelier
+            if self.rng.f64() < (0.002 + 0.006 * s) {
+                let len = self.rng.range_f64(0.2, 1.0) * self.cfg.fs;
+                self.dropout_until = self.sample_idx + len as u64;
+            }
+        }
+        out
+    }
+
+    /// Current 7-vitals vector (1 Hz): HR, mean BP, SpO2, RR, temp, CVP, perfusion.
+    pub fn next_vitals(&mut self) -> [f32; 7] {
+        let s = self.state.severity;
+        let n = |rng: &mut Rng, sd: f64| sd * rng.normal();
+        [
+            (self.hr + n(&mut self.rng, 3.0)) as f32,
+            (72.0 - 18.0 * s + n(&mut self.rng, 4.0)) as f32,
+            (98.0 - 9.0 * s + n(&mut self.rng, 1.0)) as f32,
+            (22.0 + 16.0 * s + n(&mut self.rng, 2.0)) as f32,
+            (36.8 + 0.8 * s + n(&mut self.rng, 0.2)) as f32,
+            (6.0 + 6.0 * s + n(&mut self.rng, 1.0)) as f32,
+            (1.4 - 0.9 * s + n(&mut self.rng, 0.15)) as f32,
+        ]
+    }
+
+    /// 8 lab values (irregular): pH, lactate, K, Na, Cr, BUN, Hgb, WBC.
+    pub fn next_labs(&mut self) -> [f32; 8] {
+        let s = self.state.severity;
+        let n = |rng: &mut Rng, sd: f64| sd * rng.normal();
+        [
+            (7.40 - 0.12 * s + n(&mut self.rng, 0.02)) as f32,
+            (1.0 + 4.0 * s + n(&mut self.rng, 0.4)) as f32,
+            (4.0 + 0.8 * s + n(&mut self.rng, 0.3)) as f32,
+            (140.0 - 3.0 * s + n(&mut self.rng, 2.0)) as f32,
+            (0.4 + 0.5 * s + n(&mut self.rng, 0.08)) as f32,
+            (12.0 + 14.0 * s + n(&mut self.rng, 2.0)) as f32,
+            (14.0 - 2.5 * s + n(&mut self.rng, 0.8)) as f32,
+            (9.0 + 7.0 * s + n(&mut self.rng, 1.5)) as f32,
+        ]
+    }
+
+    /// Produce a batch of ECG frames covering `n` samples from `t0_sim`.
+    pub fn ecg_frames(&mut self, t0_sim: f64, n: usize) -> Vec<Frame> {
+        (0..n)
+            .map(|i| {
+                let v = self.next_ecg();
+                Frame {
+                    patient: self.id,
+                    modality: Modality::Ecg,
+                    sim_time: t0_sim + i as f64 / self.cfg.fs,
+                    values: v.to_vec(),
+                }
+            })
+            .collect()
+    }
+}
+
+/// One cardiac cycle evaluated at normalised phase ∈ [0,1): sum of
+/// P-QRS-T gaussians with severity-dependent morphology (mirror of
+/// `data.beat_template`).
+pub fn beat_waveform(phase: f64, severity: f64, st_depression: f64) -> f64 {
+    let qrs_width = 0.018 * (1.0 + 0.9 * severity);
+    let t_amp = 0.30 * (1.0 - 0.45 * severity);
+    let st_level = st_depression * severity;
+    let g = |center: f64, width: f64, amp: f64| {
+        amp * (-0.5 * ((phase - center) / width).powi(2)).exp()
+    };
+    g(0.18, 0.025, 0.12) - g(0.385, qrs_width * 0.7, 0.22) + g(0.40, qrs_width, 1.00)
+        - g(0.42, qrs_width * 0.8, 0.28)
+        + g(0.62, 0.045, t_amp)
+        + st_level * g(0.51, 0.05, 1.0)
+}
+
+/// Severity prior: stable ~ Beta(2,5), critical ~ Beta(5,2).
+pub fn severity_for_label(rng: &mut Rng, label: u8) -> f64 {
+    let (a, b) = if label == 1 { (2.0, 5.0) } else { (5.0, 2.0) };
+    rng.beta(a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = PatientSim::new(3, 42, SynthConfig::default());
+        let mut b = PatientSim::new(3, 42, SynthConfig::default());
+        for _ in 0..500 {
+            assert_eq!(a.next_ecg(), b.next_ecg());
+        }
+    }
+
+    #[test]
+    fn different_patients_differ() {
+        let mut a = PatientSim::new(0, 42, SynthConfig::default());
+        let mut b = PatientSim::new(1, 42, SynthConfig::default());
+        let va: Vec<_> = (0..100).map(|_| a.next_ecg()[1]).collect();
+        let vb: Vec<_> = (0..100).map(|_| b.next_ecg()[1]).collect();
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn critical_patients_are_tachycardic() {
+        let cfg = SynthConfig::default();
+        let mut crit_hr = 0.0;
+        let mut stab_hr = 0.0;
+        let n = 40;
+        for i in 0..n {
+            let mut rng = Rng::seed_from_u64(i);
+            let sc = PatientSim::with_state(
+                i as usize,
+                i,
+                cfg.clone(),
+                PatientState { label: 0, severity: severity_for_label(&mut rng, 0) },
+            );
+            crit_hr += sc.hr;
+            let mut rng = Rng::seed_from_u64(i + 1000);
+            let ss = PatientSim::with_state(
+                i as usize,
+                i + 1000,
+                cfg.clone(),
+                PatientState { label: 1, severity: severity_for_label(&mut rng, 1) },
+            );
+            stab_hr += ss.hr;
+        }
+        assert!(crit_hr / n as f64 > stab_hr / n as f64 + 15.0);
+    }
+
+    #[test]
+    fn beat_waveform_r_peak_dominates() {
+        let r = beat_waveform(0.40, 0.2, -0.18);
+        let baseline = beat_waveform(0.95, 0.2, -0.18);
+        assert!(r > 0.7);
+        assert!(baseline.abs() < 0.1);
+    }
+
+    #[test]
+    fn st_depression_lowers_st_segment_when_severe() {
+        let healthy = beat_waveform(0.51, 0.0, -0.18);
+        let sick = beat_waveform(0.51, 1.0, -0.18);
+        assert!(sick < healthy);
+    }
+
+    #[test]
+    fn severity_prior_ordering() {
+        let mut rng = Rng::seed_from_u64(5);
+        let s1: f64 = (0..300).map(|_| severity_for_label(&mut rng, 1)).sum::<f64>() / 300.0;
+        let s0: f64 = (0..300).map(|_| severity_for_label(&mut rng, 0)).sum::<f64>() / 300.0;
+        assert!(s0 > s1 + 0.2, "critical {s0} vs stable {s1}");
+        // Beta(2,5) mean ≈ 0.286, Beta(5,2) mean ≈ 0.714
+        assert!((s1 - 0.286).abs() < 0.06);
+        assert!((s0 - 0.714).abs() < 0.06);
+    }
+
+    #[test]
+    fn vitals_and_labs_track_severity() {
+        let cfg = SynthConfig::default();
+        let mut sick = PatientSim::with_state(
+            0,
+            1,
+            cfg.clone(),
+            PatientState { label: 0, severity: 0.95 },
+        );
+        let mut well =
+            PatientSim::with_state(1, 2, cfg, PatientState { label: 1, severity: 0.05 });
+        let vs = sick.next_vitals();
+        let vw = well.next_vitals();
+        assert!(vs[2] < vw[2]); // SpO2 lower when sick
+        let ls = sick.next_labs();
+        let lw = well.next_labs();
+        assert!(ls[1] > lw[1]); // lactate higher when sick
+    }
+
+    #[test]
+    fn ecg_frames_timestamps_are_uniform() {
+        let mut p = PatientSim::new(0, 9, SynthConfig::default());
+        let frames = p.ecg_frames(10.0, 5);
+        assert_eq!(frames.len(), 5);
+        for (i, f) in frames.iter().enumerate() {
+            assert!((f.sim_time - (10.0 + i as f64 / 250.0)).abs() < 1e-9);
+            assert_eq!(f.values.len(), 3);
+        }
+    }
+}

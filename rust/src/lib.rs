@@ -1,0 +1,40 @@
+//! # HOLMES — Health OnLine Model Ensemble Serving
+//!
+//! Reproduction of *HOLMES: Health OnLine Model Ensemble Serving for Deep
+//! Learning Models in Intensive Care Units* (KDD 2020). Three components:
+//!
+//! * [`zoo`] — the model zoo: per-model Table-3 profiles, validation score
+//!   vectors, AOT-compiled HLO artifacts (built once by `make artifacts`).
+//! * [`composer`] — the ensemble composer: SMBO (Bayesian optimisation with
+//!   [`surrogate`] random-forest models) + genetic exploration (Algorithms
+//!   1 & 2) navigating the accuracy/latency trade-off (Eq. 1–3), plus the
+//!   paper's RD / AF / LF / NPO baselines.
+//! * [`serving`] — the real-time serving system: a tokio actor pipeline
+//!   (stateful data aggregators + stateless model actors, the paper's Ray
+//!   substrate) executing zoo models through the [`runtime`] PJRT engine,
+//!   with [`netcalc`]-based queueing-latency estimation (Fig. 5).
+//!
+//! Python/JAX/Pallas exist only on the build path; this crate is
+//! self-contained once `artifacts/` is present.
+
+pub mod bench;
+pub mod cli;
+pub mod composer;
+pub mod config;
+pub mod data;
+pub mod error;
+pub mod exp;
+pub mod http;
+pub mod ingest;
+pub mod json;
+pub mod metrics;
+pub mod mlcpu;
+pub mod netcalc;
+pub mod profiler;
+pub mod rng;
+pub mod runtime;
+pub mod serving;
+pub mod surrogate;
+pub mod zoo;
+
+pub use error::{Error, Result};

@@ -1,0 +1,208 @@
+//! HOLMES CLI — the L3 coordinator entrypoint.
+//!
+//! ```text
+//! holmes zoo                       inspect the model zoo
+//! holmes compose [--budget 0.2]    run the ensemble composer (+ baselines)
+//! holmes serve [--patients 64]     run the bedside serving simulation
+//! holmes profile [--models a,b]    measured latency profile of an ensemble
+//! holmes exp <id|all> [--quick]    regenerate a paper table/figure
+//! ```
+
+use std::path::PathBuf;
+
+use holmes::cli;
+use holmes::composer::baselines::best_feasible;
+use holmes::config::{ComposerConfig, SystemConfig};
+use holmes::exp;
+use holmes::exp::common::{Method, SearchContext};
+use holmes::runtime::Engine;
+use holmes::serving::profile::{profile_ensemble, ProfileEffort};
+use holmes::zoo::{Selector, Zoo};
+use holmes::{Error, Result};
+
+const USAGE: &str = "HOLMES: Health OnLine Model Ensemble Serving (KDD 2020 reproduction)
+
+USAGE: holmes [--artifacts DIR] <command> [options]
+
+COMMANDS:
+  zoo                      print the model-zoo inventory (Table 3 profiles)
+  compose                  run the ensemble composer and the RD/AF/LF/NPO baselines
+      --budget SECS          latency constraint L            [0.2]
+      --gpus N  --patients N system configuration c          [2, 64]
+      --servable-only        restrict to compiled models
+      --seed N               search seed                     [13]
+  serve                    end-to-end bedside serving simulation
+      --patients N --gpus N                                  [64, 2]
+      --window SECS          observation window ΔT           [30]
+      --speedup X            virtual-clock acceleration      [10]
+      --duration SECS        simulated duration              [120]
+      --http ADDR            also open an HTTP ingest server
+  profile                  measured latency profile (μ, T_s, T_q) of an ensemble
+      --models id1,id2,...   zoo model ids (default: HOLMES servable pick)
+      --gpus N --patients N                                  [2, 64]
+  exp <id|all>             regenerate paper experiments into --out
+      id ∈ search|table2|fig1|fig2|fig6..fig13|all
+      --out DIR              results directory               [results]
+      --quick                reduced-effort smoke mode
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        print!("{USAGE}");
+        return;
+    }
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = cli::parse(
+        argv,
+        &[
+            "artifacts", "budget", "gpus", "patients", "seed", "window", "speedup", "duration",
+            "http", "models", "out",
+        ],
+    )?;
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    match args.subcommand.as_deref() {
+        Some("zoo") => {
+            let zoo = Zoo::load(&artifacts)?;
+            println!(
+                "{:<16} {:>5} {:>6} {:>7} {:>12} {:>9} {:>8} {:>8}",
+                "id", "lead", "width", "blocks", "macs", "params", "val_auc", "trained"
+            );
+            for m in &zoo.manifest.models {
+                println!(
+                    "{:<16} {:>5} {:>6} {:>7} {:>12} {:>9} {:>8.4} {:>8}",
+                    m.id, m.lead, m.width, m.blocks, m.macs, m.params, m.val_auc, m.trained
+                );
+            }
+            println!(
+                "\n{} models ({} servable), clip_len={}, val_n={}",
+                zoo.n(),
+                zoo.servable_indices().len(),
+                zoo.manifest.clip_len,
+                zoo.manifest.val_n
+            );
+        }
+        Some("compose") => {
+            let zoo = Zoo::load(&artifacts)?;
+            let budget = args.f64_or("budget", 0.2)?;
+            let system = SystemConfig {
+                gpus: args.usize_or("gpus", 2)?,
+                patients: args.usize_or("patients", 64)?,
+                window_s: 30.0,
+            };
+            let seed = args.u64_or("seed", 13)?;
+            let ctx = SearchContext::new(&zoo, system);
+            let cfg = ComposerConfig {
+                servable_only: args.flag("servable-only"),
+                ..Default::default()
+            };
+            println!("budget {budget}s, c = {system:?}\n");
+            for m in Method::ALL {
+                let r = ctx.run(m, budget, seed, &cfg);
+                let best = best_feasible(&r.profile_set, budget);
+                println!(
+                    "{:<7} AUC {:.4}  PR {:.4}  F1 {:.4}  acc {:.4}  lat {:.4}s  |b|={}  calls={}",
+                    m.name(),
+                    best.accuracy.roc_auc,
+                    best.accuracy.pr_auc,
+                    best.accuracy.f1,
+                    best.accuracy.accuracy,
+                    best.latency,
+                    best.selector.len(),
+                    r.profiler_calls
+                );
+                if m == Method::Holmes {
+                    println!(
+                        "        ensemble: {:?}",
+                        best.selector
+                            .indices()
+                            .iter()
+                            .map(|&i| zoo.model(i).id.clone())
+                            .collect::<Vec<_>>()
+                    );
+                }
+            }
+        }
+        Some("serve") => {
+            let zoo = Zoo::load(&artifacts)?;
+            exp::bedside::run_bedside(
+                &zoo,
+                exp::bedside::BedsideConfig {
+                    patients: args.usize_or("patients", 64)?,
+                    gpus: args.usize_or("gpus", 2)?,
+                    window_s: args.f64_or("window", 30.0)?,
+                    speedup: args.f64_or("speedup", 10.0)?,
+                    duration_s: args.f64_or("duration", 120.0)?,
+                    http_addr: args.get("http").map(String::from),
+                    seed: args.u64_or("seed", 42)?,
+                },
+            )?;
+        }
+        Some("profile") => {
+            let zoo = Zoo::load(&artifacts)?;
+            let ensemble = match args.get("models") {
+                Some(spec) => {
+                    let idx: Vec<usize> = spec
+                        .split(',')
+                        .map(|id| {
+                            zoo.by_id(id.trim()).map(|m| m.index).ok_or_else(|| {
+                                Error::config(format!("unknown model id '{id}'"))
+                            })
+                        })
+                        .collect::<Result<_>>()?;
+                    Selector::from_indices(zoo.n(), idx)
+                }
+                None => exp::fig10_scalability::holmes_servable_ensemble(&zoo, 0.2),
+            };
+            println!(
+                "profiling ensemble: {:?}",
+                ensemble.indices().iter().map(|&i| zoo.model(i).id.clone()).collect::<Vec<_>>()
+            );
+            let gpus = args.usize_or("gpus", 2)?;
+            let engine = Engine::new(&zoo, gpus)?;
+            let system = SystemConfig {
+                gpus,
+                patients: args.usize_or("patients", 64)?,
+                window_s: 30.0,
+            };
+            let m = profile_ensemble(&zoo, &engine, &ensemble, &system, ProfileEffort::default())?;
+            println!(
+                "μ = {:.1} qps   T_s(p95) = {:.4}s (mean {:.4}s)   T_q ≤ {:.4}s   T̂ = {:.4}s",
+                m.mu, m.ts_p95, m.ts_mean, m.tq_bound, m.total
+            );
+        }
+        Some("exp") => {
+            let id = args
+                .positionals
+                .first()
+                .ok_or_else(|| Error::config("exp requires an id (or 'all')"))?
+                .clone();
+            let out = PathBuf::from(args.get_or("out", "results"));
+            let quick = args.flag("quick");
+            let zoo = Zoo::load(&artifacts)?;
+            match id.as_str() {
+                "all" => exp::run_all(&artifacts, &out, quick)?,
+                "search" | "table2" | "fig1" | "fig6" | "fig7" | "fig8" | "fig11" | "fig12" => {
+                    exp::search_suite::run(&zoo, &out, quick)?
+                }
+                "fig2" => exp::fig2_staleness::run(&zoo, &out, quick)?,
+                "fig9" => exp::fig9_timeline::run(&zoo, &out, quick)?,
+                "fig10" => exp::fig10_scalability::run(&zoo, &out, quick)?,
+                "fig13" => exp::fig13_window::run(&zoo, &out, quick)?,
+                other => return Err(Error::config(format!("unknown experiment id: {other}"))),
+            }
+            println!("\nresults written under {}", out.display());
+        }
+        Some(other) => {
+            return Err(Error::config(format!("unknown command '{other}' (try --help)")))
+        }
+        None => print!("{USAGE}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,294 @@
+//! Evaluation metrics used across the composer and the experiment
+//! harnesses: ROC-AUC, PR-AUC, F1, accuracy (Table 2 columns), R²
+//! (Fig. 8), plus small statistics helpers (mean ± std, percentiles).
+//!
+//! All metric functions take `labels: &[u8]` with values in {0, 1} and
+//! `scores: &[f64]` (higher = more likely positive).
+
+/// ROC-AUC via the Mann–Whitney rank statistic with midranks for ties.
+///
+/// Returns 0.5 when either class is absent (undefined AUC).
+pub fn roc_auc(labels: &[u8], scores: &[f64]) -> f64 {
+    assert_eq!(labels.len(), scores.len());
+    let n = labels.len();
+    if n == 0 {
+        return 0.5;
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    let mut ranks = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[order[j + 1]] == scores[order[i]] {
+            j += 1;
+        }
+        let midrank = (i + j + 2) as f64 / 2.0;
+        for &idx in &order[i..=j] {
+            ranks[idx] = midrank;
+        }
+        i = j + 1;
+    }
+    let n1 = labels.iter().filter(|&&l| l == 1).count() as f64;
+    let n0 = n as f64 - n1;
+    if n1 == 0.0 || n0 == 0.0 {
+        return 0.5;
+    }
+    let rank_sum: f64 = labels
+        .iter()
+        .zip(&ranks)
+        .filter(|(&l, _)| l == 1)
+        .map(|(_, &r)| r)
+        .sum();
+    (rank_sum - n1 * (n1 + 1.0) / 2.0) / (n1 * n0)
+}
+
+/// PR-AUC as average precision: AP = Σ (R_k − R_{k−1}) · P_k over the
+/// score-descending sweep (sklearn's `average_precision_score`).
+pub fn pr_auc(labels: &[u8], scores: &[f64]) -> f64 {
+    assert_eq!(labels.len(), scores.len());
+    let total_pos = labels.iter().filter(|&&l| l == 1).count() as f64;
+    if total_pos == 0.0 {
+        return 0.0;
+    }
+    let mut order: Vec<usize> = (0..labels.len()).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    let mut tp = 0.0f64;
+    let mut fp = 0.0f64;
+    let mut ap = 0.0f64;
+    let mut prev_recall = 0.0f64;
+    let mut k = 0;
+    while k < order.len() {
+        // advance over the tie group so P/R are computed per threshold
+        let mut j = k;
+        while j + 1 < order.len() && scores[order[j + 1]] == scores[order[k]] {
+            j += 1;
+        }
+        for &idx in &order[k..=j] {
+            if labels[idx] == 1 {
+                tp += 1.0;
+            } else {
+                fp += 1.0;
+            }
+        }
+        let precision = tp / (tp + fp);
+        let recall = tp / total_pos;
+        ap += (recall - prev_recall) * precision;
+        prev_recall = recall;
+        k = j + 1;
+    }
+    ap
+}
+
+/// Confusion counts at a decision threshold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Confusion {
+    pub tp: usize,
+    pub fp: usize,
+    pub tn: usize,
+    pub fn_: usize,
+}
+
+pub fn confusion_at(labels: &[u8], scores: &[f64], threshold: f64) -> Confusion {
+    let mut c = Confusion { tp: 0, fp: 0, tn: 0, fn_: 0 };
+    for (&l, &s) in labels.iter().zip(scores) {
+        match (l == 1, s >= threshold) {
+            (true, true) => c.tp += 1,
+            (false, true) => c.fp += 1,
+            (false, false) => c.tn += 1,
+            (true, false) => c.fn_ += 1,
+        }
+    }
+    c
+}
+
+/// F1 score at a threshold (default 0.5 in the harnesses).
+pub fn f1_at(labels: &[u8], scores: &[f64], threshold: f64) -> f64 {
+    let c = confusion_at(labels, scores, threshold);
+    let denom = 2 * c.tp + c.fp + c.fn_;
+    if denom == 0 {
+        return 0.0;
+    }
+    2.0 * c.tp as f64 / denom as f64
+}
+
+/// Classification accuracy at a threshold.
+pub fn accuracy_at(labels: &[u8], scores: &[f64], threshold: f64) -> f64 {
+    if labels.is_empty() {
+        return 0.0;
+    }
+    let c = confusion_at(labels, scores, threshold);
+    (c.tp + c.tn) as f64 / labels.len() as f64
+}
+
+/// Coefficient of determination R² (Fig. 8's surrogate-quality metric).
+pub fn r2(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    if y_true.is_empty() {
+        return 0.0;
+    }
+    let mean = y_true.iter().sum::<f64>() / y_true.len() as f64;
+    let ss_tot: f64 = y_true.iter().map(|y| (y - mean).powi(2)).sum();
+    let ss_res: f64 = y_true
+        .iter()
+        .zip(y_pred)
+        .map(|(y, p)| (y - p).powi(2))
+        .sum();
+    if ss_tot == 0.0 {
+        return if ss_res == 0.0 { 1.0 } else { 0.0 };
+    }
+    1.0 - ss_res / ss_tot
+}
+
+/// Sample mean and (population) standard deviation — Table 2's `a ± b`.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+    (mean, var.sqrt())
+}
+
+/// Bootstrap mean ± std of a metric over label/score resamples — the
+/// Table-2 `a ± b` uncertainty (the paper's spread comes from its tiny
+/// 10-patient test cohort; we expose the same sampling variance by
+/// resampling the validation set).
+pub fn bootstrap_metric(
+    labels: &[u8],
+    scores: &[f64],
+    metric: impl Fn(&[u8], &[f64]) -> f64,
+    n_boot: usize,
+    seed: u64,
+) -> (f64, f64) {
+    assert_eq!(labels.len(), scores.len());
+    if labels.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = labels.len();
+    let mut rng = crate::rng::Rng::seed_from_u64(seed);
+    let mut vals = Vec::with_capacity(n_boot);
+    let mut lb = vec![0u8; n];
+    let mut sb = vec![0f64; n];
+    for _ in 0..n_boot {
+        for i in 0..n {
+            let j = rng.range(0, n);
+            lb[i] = labels[j];
+            sb[i] = scores[j];
+        }
+        vals.push(metric(&lb, &sb));
+    }
+    mean_std(&vals)
+}
+
+/// Linear-interpolated percentile over an unsorted sample, p ∈ [0, 100].
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auc_perfect_and_inverted() {
+        let y = [0u8, 0, 1, 1];
+        assert_eq!(roc_auc(&y, &[0.1, 0.2, 0.8, 0.9]), 1.0);
+        assert_eq!(roc_auc(&y, &[0.9, 0.8, 0.2, 0.1]), 0.0);
+    }
+
+    #[test]
+    fn auc_ties_use_midranks() {
+        let y = [0u8, 1, 0, 1];
+        let s = [0.3, 0.3, 0.1, 0.9];
+        assert!((roc_auc(&y, &s) - 3.5 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_degenerate_classes() {
+        assert_eq!(roc_auc(&[1, 1], &[0.1, 0.9]), 0.5);
+        assert_eq!(roc_auc(&[], &[]), 0.5);
+    }
+
+    #[test]
+    fn pr_auc_perfect_is_one() {
+        let y = [0u8, 0, 1, 1];
+        assert!((pr_auc(&y, &[0.1, 0.2, 0.8, 0.9]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pr_auc_random_close_to_prevalence() {
+        // For constant scores, AP = prevalence.
+        let y = [1u8, 0, 0, 0];
+        assert!((pr_auc(&y, &[0.5; 4]) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_and_accuracy_hand_checked() {
+        let y = [1u8, 1, 0, 0];
+        let s = [0.9, 0.4, 0.6, 0.1];
+        // tp=1 fp=1 tn=1 fn=1
+        assert!((f1_at(&y, &s, 0.5) - 0.5).abs() < 1e-12);
+        assert!((accuracy_at(&y, &s, 0.5) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_empty_predictions() {
+        assert_eq!(f1_at(&[0, 0], &[0.1, 0.1], 0.5), 0.0);
+    }
+
+    #[test]
+    fn r2_perfect_and_mean_predictor() {
+        let y = [1.0, 2.0, 3.0];
+        assert!((r2(&y, &y) - 1.0).abs() < 1e-12);
+        assert!(r2(&y, &[2.0, 2.0, 2.0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[2.0, 4.0]);
+        assert_eq!(m, 3.0);
+        assert_eq!(s, 1.0);
+    }
+
+    #[test]
+    fn bootstrap_metric_centers_on_point_estimate() {
+        let labels: Vec<u8> = (0..200).map(|i| (i % 2) as u8).collect();
+        // overlapping classes so the AUC genuinely varies across resamples
+        let scores: Vec<f64> = labels
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| l as f64 * 0.5 + (i % 13) as f64 * 0.06)
+            .collect();
+        let point = roc_auc(&labels, &scores);
+        let (mean, std) = bootstrap_metric(&labels, &scores, roc_auc, 100, 3);
+        assert!((mean - point).abs() < 0.03, "mean {mean} vs point {point}");
+        assert!(std > 0.0 && std < 0.1);
+    }
+
+    #[test]
+    fn bootstrap_metric_empty_input() {
+        assert_eq!(bootstrap_metric(&[], &[], roc_auc, 10, 0), (0.0, 0.0));
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+        assert!((percentile(&v, 50.0) - 2.5).abs() < 1e-12);
+        assert!((percentile(&v, 95.0) - 3.85).abs() < 1e-9);
+    }
+}

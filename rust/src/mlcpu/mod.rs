@@ -1,0 +1,209 @@
+//! CPU side models (paper §4.1.1): a random forest per vital-sign block
+//! and a logistic regression for labs. They are *not* part of the model
+//! zoo (their CPU inference is negligible next to the deep models and is
+//! excluded from latency accounting, as in the paper), but their scores
+//! join the final bagging ensemble for accuracy.
+
+use crate::rng::Rng;
+use crate::surrogate::{Tree, TreeConfig};
+
+/// Random-forest binary classifier: bagged regression trees on {0,1}
+/// targets; predicted probability = mean leaf value.
+#[derive(Debug, Clone)]
+pub struct RandomForestClassifier {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub seed: u64,
+    trees: Vec<Tree>,
+}
+
+impl RandomForestClassifier {
+    pub fn new(n_trees: usize, max_depth: usize, seed: u64) -> Self {
+        RandomForestClassifier { n_trees, max_depth, seed, trees: Vec::new() }
+    }
+
+    pub fn fit(&mut self, x: &[Vec<f64>], y: &[u8]) {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        let targets: Vec<f64> = y.iter().map(|&l| l as f64).collect();
+        let n = x.len();
+        let n_features = x[0].len();
+        let cfg = TreeConfig {
+            max_depth: self.max_depth,
+            min_samples_leaf: 2,
+            mtry: Some(((n_features as f64).sqrt().ceil() as usize).max(1)),
+        };
+        let mut rng = Rng::seed_from_u64(self.seed);
+        self.trees = (0..self.n_trees)
+            .map(|_| {
+                let rows: Vec<usize> = (0..n).map(|_| rng.range(0, n)).collect();
+                Tree::fit(x, &targets, &rows, &cfg, &mut rng)
+            })
+            .collect();
+    }
+
+    pub fn predict_proba(&self, x: &[f64]) -> f64 {
+        if self.trees.is_empty() {
+            return 0.5;
+        }
+        self.trees.iter().map(|t| t.predict(x)).sum::<f64>() / self.trees.len() as f64
+    }
+}
+
+/// L2-regularised logistic regression trained with gradient descent on
+/// standardised features.
+#[derive(Debug, Clone)]
+pub struct LogisticRegression {
+    pub lr: f64,
+    pub l2: f64,
+    pub epochs: usize,
+    weights: Vec<f64>, // last = intercept
+    mean: Vec<f64>,
+    std: Vec<f64>,
+}
+
+impl LogisticRegression {
+    pub fn new(lr: f64, l2: f64, epochs: usize) -> Self {
+        LogisticRegression { lr, l2, epochs, weights: Vec::new(), mean: Vec::new(), std: Vec::new() }
+    }
+
+    pub fn fit(&mut self, x: &[Vec<f64>], y: &[u8]) {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        let d = x[0].len();
+        let n = x.len() as f64;
+        // feature standardisation
+        self.mean = vec![0.0; d];
+        self.std = vec![0.0; d];
+        for row in x {
+            for j in 0..d {
+                self.mean[j] += row[j] / n;
+            }
+        }
+        for row in x {
+            for j in 0..d {
+                self.std[j] += (row[j] - self.mean[j]).powi(2) / n;
+            }
+        }
+        for s in &mut self.std {
+            *s = s.sqrt().max(1e-9);
+        }
+        let xs: Vec<Vec<f64>> = x.iter().map(|row| self.scale(row)).collect();
+        self.weights = vec![0.0; d + 1];
+        for _ in 0..self.epochs {
+            let mut grad = vec![0.0; d + 1];
+            for (row, &label) in xs.iter().zip(y) {
+                let p = sigmoid(self.linear(row));
+                let err = p - label as f64;
+                for j in 0..d {
+                    grad[j] += err * row[j] / n;
+                }
+                grad[d] += err / n;
+            }
+            for j in 0..d {
+                grad[j] += self.l2 * self.weights[j];
+            }
+            for j in 0..=d {
+                self.weights[j] -= self.lr * grad[j];
+            }
+        }
+    }
+
+    fn scale(&self, x: &[f64]) -> Vec<f64> {
+        x.iter()
+            .zip(self.mean.iter().zip(&self.std))
+            .map(|(v, (m, s))| (v - m) / s)
+            .collect()
+    }
+
+    fn linear(&self, xs: &[f64]) -> f64 {
+        xs.iter().zip(&self.weights).map(|(x, w)| x * w).sum::<f64>()
+            + self.weights[self.weights.len() - 1]
+    }
+
+    pub fn predict_proba(&self, x: &[f64]) -> f64 {
+        if self.weights.is_empty() {
+            return 0.5;
+        }
+        sigmoid(self.linear(&self.scale(x)))
+    }
+}
+
+fn sigmoid(z: f64) -> f64 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// The full CPU side-model bundle: vitals RF + labs LR, trained together.
+#[derive(Debug, Clone)]
+pub struct SideModels {
+    pub vitals_rf: RandomForestClassifier,
+    pub labs_lr: LogisticRegression,
+}
+
+impl SideModels {
+    /// Train on a tabular cohort from `data::make_tabular`.
+    pub fn train(set: &crate::data::TabularSet, seed: u64) -> Self {
+        let mut vitals_rf = RandomForestClassifier::new(40, 8, seed);
+        vitals_rf.fit(&set.vitals, &set.labels);
+        let mut labs_lr = LogisticRegression::new(0.5, 1e-4, 300);
+        labs_lr.fit(&set.labs, &set.labels);
+        SideModels { vitals_rf, labs_lr }
+    }
+
+    /// Mean of the two side-model scores (their bagging contribution).
+    pub fn score(&self, vitals: &[f64], labs: &[f64]) -> f64 {
+        0.5 * (self.vitals_rf.predict_proba(vitals) + self.labs_lr.predict_proba(labs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::make_tabular;
+    use crate::ingest::synth::SynthConfig;
+    use crate::metrics::roc_auc;
+
+    #[test]
+    fn rf_classifier_learns_threshold_rule() {
+        let mut rng = Rng::seed_from_u64(0);
+        let x: Vec<Vec<f64>> = (0..200).map(|_| vec![rng.f64(), rng.f64()]).collect();
+        let y: Vec<u8> = x.iter().map(|r| (r[0] > 0.5) as u8).collect();
+        let mut rf = RandomForestClassifier::new(30, 6, 1);
+        rf.fit(&x, &y);
+        assert!(rf.predict_proba(&[0.9, 0.5]) > 0.8);
+        assert!(rf.predict_proba(&[0.1, 0.5]) < 0.2);
+    }
+
+    #[test]
+    fn logreg_learns_linear_boundary() {
+        let mut rng = Rng::seed_from_u64(2);
+        let x: Vec<Vec<f64>> = (0..300).map(|_| vec![rng.range_f64(-2.0, 2.0)]).collect();
+        let y: Vec<u8> = x.iter().map(|r| (r[0] > 0.0) as u8).collect();
+        let mut lr = LogisticRegression::new(1.0, 1e-5, 500);
+        lr.fit(&x, &y);
+        assert!(lr.predict_proba(&[1.5]) > 0.85);
+        assert!(lr.predict_proba(&[-1.5]) < 0.15);
+    }
+
+    #[test]
+    fn side_models_beat_chance_on_cohort() {
+        let cfg = SynthConfig::default();
+        let train = make_tabular(400, 11, &cfg);
+        let test = make_tabular(200, 12, &cfg);
+        let side = SideModels::train(&train, 3);
+        let scores: Vec<f64> = test
+            .vitals
+            .iter()
+            .zip(&test.labs)
+            .map(|(v, l)| side.score(v, l))
+            .collect();
+        let auc = roc_auc(&test.labels, &scores);
+        assert!(auc > 0.8, "side-model AUC = {auc}");
+    }
+
+    #[test]
+    fn unfitted_models_return_half() {
+        assert_eq!(RandomForestClassifier::new(5, 3, 0).predict_proba(&[1.0]), 0.5);
+        assert_eq!(LogisticRegression::new(0.1, 0.0, 10).predict_proba(&[1.0]), 0.5);
+    }
+}

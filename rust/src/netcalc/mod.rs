@@ -1,0 +1,226 @@
+//! Network-calculus queueing-latency bound (paper Fig. 5).
+//!
+//! HOLMES estimates the queueing component `T_q` of end-to-end response
+//! time by constructing an **arrival curve** α(Δt) — the maximum number
+//! of ensemble queries observed in any interval of length Δt during
+//! profiling — and an analytic **service curve** β(Δt) from the measured
+//! ensemble throughput capacity μ. The maximum *horizontal* distance
+//! between the two curves is a known tight upper bound on queueing delay
+//! for such a system.
+
+/// Empirical arrival curve: α(Δt) = max #events in any window of width Δt.
+#[derive(Debug, Clone)]
+pub struct ArrivalCurve {
+    /// (window length Δt seconds, max event count) sorted by Δt.
+    pub points: Vec<(f64, f64)>,
+}
+
+impl ArrivalCurve {
+    /// Build from event timestamps (seconds, any order) over a grid of
+    /// window lengths. O(|grid| · n) with a sliding two-pointer scan.
+    pub fn from_timestamps(timestamps: &[f64], windows: &[f64]) -> Self {
+        let mut ts = timestamps.to_vec();
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut points = Vec::with_capacity(windows.len());
+        for &dt in windows {
+            assert!(dt > 0.0, "window length must be positive");
+            let mut best = 0usize;
+            let mut lo = 0usize;
+            for hi in 0..ts.len() {
+                while ts[hi] - ts[lo] > dt {
+                    lo += 1;
+                }
+                best = best.max(hi - lo + 1);
+            }
+            points.push((dt, best as f64));
+        }
+        points.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        ArrivalCurve { points }
+    }
+
+    /// Exact arrival curve: the window grid is every distinct pairwise
+    /// span of the trace, so the queueing bound is *tight* (guaranteed ≥
+    /// any FIFO simulation of the same trace). O(n²) — use for profiling
+    /// traces (n ≲ 1000); fall back to `from_timestamps` + a grid above.
+    pub fn from_timestamps_exact(timestamps: &[f64]) -> Self {
+        let mut ts = timestamps.to_vec();
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut windows: Vec<f64> = Vec::with_capacity(ts.len() * (ts.len() - 1) / 2 + 1);
+        for i in 0..ts.len() {
+            for j in i + 1..ts.len() {
+                let span = ts[j] - ts[i];
+                if span > 0.0 {
+                    windows.push(span);
+                }
+            }
+        }
+        // include a near-zero window so instantaneous bursts count
+        windows.push(1e-9);
+        windows.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        windows.dedup();
+        Self::from_timestamps(&ts, &windows)
+    }
+
+    /// Token-bucket abstraction α(t) = burst + rate·t, for analytic use
+    /// (e.g. inside the composer's fast latency profiler where no trace
+    /// exists yet: `patients` periodic sources of `rate` qps each).
+    pub fn token_bucket(burst: f64, rate: f64, windows: &[f64]) -> Self {
+        let points = windows
+            .iter()
+            .map(|&dt| (dt, burst + rate * dt))
+            .collect();
+        ArrivalCurve { points }
+    }
+
+    /// Default window grid: log-spaced from 1 ms to `horizon` seconds.
+    pub fn default_windows(horizon: f64) -> Vec<f64> {
+        let mut w = Vec::new();
+        let mut dt = 1e-3;
+        while dt < horizon {
+            w.push(dt);
+            dt *= 1.5;
+        }
+        w.push(horizon);
+        w
+    }
+}
+
+/// Rate–latency service curve β(t) = rate · max(0, t − latency):
+/// `rate` = measured ensemble throughput capacity μ (qps), `latency` =
+/// per-query service time floor (the T_s the closed-loop probe measured).
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceCurve {
+    pub rate: f64,
+    pub latency: f64,
+}
+
+impl ServiceCurve {
+    pub fn new(rate: f64, latency: f64) -> Self {
+        assert!(rate > 0.0, "service rate must be positive");
+        assert!(latency >= 0.0);
+        ServiceCurve { rate, latency }
+    }
+
+    /// β(t)
+    pub fn eval(&self, t: f64) -> f64 {
+        self.rate * (t - self.latency).max(0.0)
+    }
+
+    /// Earliest t such that β(t) ≥ work.
+    pub fn inverse(&self, work: f64) -> f64 {
+        if work <= 0.0 {
+            return 0.0;
+        }
+        self.latency + work / self.rate
+    }
+}
+
+/// Max horizontal deviation sup_t { inf { d ≥ 0 : α(t) ≤ β(t + d) } } —
+/// the tight queueing-delay bound `T_q` (seconds).
+pub fn queueing_bound(arrival: &ArrivalCurve, service: &ServiceCurve) -> f64 {
+    let mut tq: f64 = 0.0;
+    for &(t, a) in &arrival.points {
+        let finish = service.inverse(a); // earliest time to serve α(t) work
+        tq = tq.max((finish - t).max(0.0));
+    }
+    tq
+}
+
+/// Convenience: `T_q` for `patients` periodic sources each issuing one
+/// ensemble query per `period` seconds (phase-aligned worst case: all
+/// queries of a window land in a burst), served at capacity `mu` qps
+/// with service floor `ts`.
+pub fn tq_periodic_sources(patients: usize, period: f64, mu: f64, ts: f64) -> f64 {
+    assert!(period > 0.0);
+    let windows = ArrivalCurve::default_windows(4.0 * period);
+    // worst case: the per-window queries of all patients arrive together
+    let arrival = ArrivalCurve::token_bucket(patients as f64, patients as f64 / period, &windows);
+    queueing_bound(&arrival, &ServiceCurve::new(mu, ts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_curve_counts_max_window() {
+        // bursts of 3 at t=0 and t=10
+        let ts = [0.0, 0.001, 0.002, 10.0, 10.001, 10.002];
+        let ac = ArrivalCurve::from_timestamps(&ts, &[0.01, 5.0, 20.0]);
+        assert_eq!(ac.points[0].1, 3.0);
+        assert_eq!(ac.points[1].1, 3.0);
+        assert_eq!(ac.points[2].1, 6.0);
+    }
+
+    #[test]
+    fn arrival_curve_monotone_in_window() {
+        let ts: Vec<f64> = (0..100).map(|i| (i as f64) * 0.013).collect();
+        let ac = ArrivalCurve::from_timestamps(&ts, &ArrivalCurve::default_windows(2.0));
+        for w in ac.points.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+    }
+
+    #[test]
+    fn service_curve_eval_inverse_roundtrip() {
+        let sc = ServiceCurve::new(100.0, 0.05);
+        assert_eq!(sc.eval(0.05), 0.0);
+        assert!((sc.eval(sc.inverse(42.0)) - 42.0).abs() < 1e-9);
+        assert_eq!(sc.inverse(0.0), 0.0);
+    }
+
+    #[test]
+    fn queueing_bound_zero_when_overprovisioned() {
+        // 1 query per second, capacity 1000 qps, no latency floor
+        let ts: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ac = ArrivalCurve::from_timestamps(&ts, &ArrivalCurve::default_windows(10.0));
+        let tq = queueing_bound(&ac, &ServiceCurve::new(1000.0, 0.0));
+        assert!(tq < 0.01, "tq = {tq}");
+    }
+
+    #[test]
+    fn queueing_bound_burst_over_rate() {
+        // burst of B jobs at t=0, rate μ ⇒ T_q ≈ B/μ + latency floor
+        let ts = vec![0.0; 64];
+        let ac = ArrivalCurve::from_timestamps(&ts, &[0.001]);
+        let tq = queueing_bound(&ac, &ServiceCurve::new(32.0, 0.1));
+        assert!((tq - (64.0 / 32.0 + 0.1 - 0.001)).abs() < 1e-6, "tq = {tq}");
+    }
+
+    #[test]
+    fn tq_periodic_scales_with_patients() {
+        let t1 = tq_periodic_sources(8, 30.0, 100.0, 0.01);
+        let t2 = tq_periodic_sources(64, 30.0, 100.0, 0.01);
+        assert!(t2 > t1);
+    }
+
+    #[test]
+    fn bound_dominates_fifo_simulation() {
+        // Simulate a FIFO queue fed by the same burst trace; the network-
+        // calculus bound must dominate every simulated waiting time.
+        let mut ts = Vec::new();
+        for burst in 0..5 {
+            for k in 0..10 {
+                ts.push(burst as f64 * 2.0 + k as f64 * 1e-4);
+            }
+        }
+        let mu = 20.0; // jobs/sec, deterministic service 50 ms
+        let service = 1.0 / mu;
+        let mut free_at: f64 = 0.0;
+        let mut max_delay: f64 = 0.0;
+        let mut sorted = ts.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for &t in &sorted {
+            let start = free_at.max(t);
+            let done = start + service;
+            max_delay = max_delay.max(done - t);
+            free_at = done;
+        }
+        let ac = ArrivalCurve::from_timestamps(&ts, &ArrivalCurve::default_windows(12.0));
+        let bound = queueing_bound(&ac, &ServiceCurve::new(mu, service));
+        assert!(
+            bound + 1e-9 >= max_delay,
+            "bound {bound} < simulated {max_delay}"
+        );
+    }
+}

@@ -1,0 +1,298 @@
+//! PJRT execution engine: loads the AOT-compiled HLO-text artifacts and
+//! runs them from the serving hot path.
+//!
+//! The `xla` crate's PJRT handles wrap raw C pointers (`!Send`), so all
+//! device interaction lives on dedicated **device worker threads**. Each
+//! worker owns its own `PjRtClient` plus a lazily-compiled executable
+//! cache, and pulls jobs from a shared FIFO — exactly the "number of
+//! GPUs" resource model of the paper's system configuration `c`:
+//! `workers = 1` reproduces the 1-GPU contention column of Fig. 10, and
+//! so on. Job replies travel over rendezvous channels, so any pipeline
+//! thread (batcher actors, profilers, benches) can submit and wait.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::zoo::Zoo;
+use crate::{Error, Result};
+
+/// Key of one compiled executable: (zoo model index, batch size).
+pub type ModelKey = (usize, usize);
+
+/// One inference job: a flattened `(batch, clip_len)` f32 input.
+struct Job {
+    key: ModelKey,
+    input: Vec<f32>,
+    reply: mpsc::SyncSender<Result<ExecOutput>>,
+}
+
+/// Pending-reply handle returned by [`Engine::submit`].
+pub type Pending = mpsc::Receiver<Result<ExecOutput>>;
+
+/// Result of one executable invocation.
+#[derive(Debug, Clone)]
+pub struct ExecOutput {
+    /// Sigmoid probabilities, one per batch slot.
+    pub scores: Vec<f32>,
+    /// On-device execution time (excludes queueing in the engine FIFO).
+    pub exec_time: Duration,
+    /// Which worker ran the job (for contention diagnostics).
+    pub worker: usize,
+}
+
+/// Aggregate engine counters (telemetry endpoint + benches).
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    pub jobs: AtomicU64,
+    pub busy_ns: AtomicU64,
+    pub compile_count: AtomicU64,
+}
+
+/// Handle to the device-worker pool. Cheap to clone; dropping the last
+/// clone shuts the workers down.
+#[derive(Clone)]
+pub struct Engine {
+    inner: Arc<EngineInner>,
+}
+
+struct EngineInner {
+    /// `None` after shutdown begins; workers exit when the last sender
+    /// clone drops (see `Drop` below — the Option lets drop order work).
+    tx: Mutex<Option<mpsc::Sender<Job>>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    n_workers: usize,
+    artifact_paths: HashMap<ModelKey, PathBuf>,
+    clip_len: usize,
+    batch_sizes: Vec<usize>,
+    stats: Arc<EngineStats>,
+}
+
+impl Engine {
+    /// Spin up `n_workers` device threads serving the zoo's servable
+    /// artifacts. Executables compile lazily on first use per worker.
+    pub fn new(zoo: &Zoo, n_workers: usize) -> Result<Self> {
+        assert!(n_workers >= 1, "need at least one device worker");
+        let mut artifact_paths = HashMap::new();
+        for &idx in &zoo.servable_indices() {
+            for &b in &zoo.manifest.batch_sizes {
+                artifact_paths.insert((idx, b), zoo.artifact_path(idx, b)?);
+            }
+        }
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stats = Arc::new(EngineStats::default());
+        let mut workers = Vec::with_capacity(n_workers);
+        for wid in 0..n_workers {
+            let rx = Arc::clone(&rx);
+            let paths = artifact_paths.clone();
+            let stats = Arc::clone(&stats);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("pjrt-worker-{wid}"))
+                    .spawn(move || worker_loop(wid, rx, paths, stats))
+                    .map_err(Error::Io)?,
+            );
+        }
+        Ok(Engine {
+            inner: Arc::new(EngineInner {
+                tx: Mutex::new(Some(tx)),
+                workers: Mutex::new(workers),
+                n_workers,
+                artifact_paths,
+                clip_len: zoo.manifest.clip_len,
+                batch_sizes: zoo.manifest.batch_sizes.clone(),
+                stats,
+            }),
+        })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.inner.n_workers
+    }
+
+    pub fn clip_len(&self) -> usize {
+        self.inner.clip_len
+    }
+
+    /// Supported batch sizes, ascending.
+    pub fn batch_sizes(&self) -> &[usize] {
+        &self.inner.batch_sizes
+    }
+
+    /// Smallest compiled batch size ≥ `n` (or the largest available).
+    pub fn batch_for(&self, n: usize) -> usize {
+        let mut sizes = self.inner.batch_sizes.clone();
+        sizes.sort_unstable();
+        for &b in &sizes {
+            if b >= n {
+                return b;
+            }
+        }
+        *sizes.last().expect("engine has no batch sizes")
+    }
+
+    pub fn has_model(&self, key: ModelKey) -> bool {
+        self.inner.artifact_paths.contains_key(&key)
+    }
+
+    pub fn stats(&self) -> &EngineStats {
+        &self.inner.stats
+    }
+
+    /// Submit a job and block for the reply.
+    pub fn execute_blocking(&self, key: ModelKey, input: Vec<f32>) -> Result<ExecOutput> {
+        let rx = self.submit(key, input)?;
+        rx.recv().map_err(|_| Error::serving("engine worker dropped reply"))?
+    }
+
+    /// Submit a job; the caller can collect the reply later (lets one
+    /// thread keep several models in flight across the worker pool).
+    pub fn submit(&self, key: ModelKey, input: Vec<f32>) -> Result<Pending> {
+        if !self.inner.artifact_paths.contains_key(&key) {
+            return Err(Error::artifact(format!(
+                "no artifact for model {} batch {}",
+                key.0, key.1
+            )));
+        }
+        let expect = key.1 * self.inner.clip_len;
+        if input.len() != expect {
+            return Err(Error::config(format!(
+                "input length {} != batch {} × clip_len {}",
+                input.len(),
+                key.1,
+                self.inner.clip_len
+            )));
+        }
+        let (tx, rx) = mpsc::sync_channel(1);
+        let guard = self.inner.tx.lock().expect("engine sender poisoned");
+        guard
+            .as_ref()
+            .ok_or_else(|| Error::serving("engine shut down"))?
+            .send(Job { key, input, reply: tx })
+            .map_err(|_| Error::serving("engine shut down"))?;
+        Ok(rx)
+    }
+
+    /// Measure single-job service time for (model, batch): median of
+    /// `reps` back-to-back executions with synthetic input (plus one
+    /// discarded warm-up that triggers compilation).
+    pub fn profile_model(&self, key: ModelKey, reps: usize) -> Result<Duration> {
+        let input = vec![0.1f32; key.1 * self.inner.clip_len];
+        self.execute_blocking(key, input.clone())?; // warm-up / compile
+        let mut times: Vec<Duration> = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            self.execute_blocking(key, input.clone())?;
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        Ok(times[times.len() / 2])
+    }
+}
+
+/// Compile an HLO-text file and time `reps` executions with a synthetic
+/// `(1, input_elems)` f32 input, inline on the calling thread (used by
+/// the Fig. 13 window-sweep harness and the runtime bench).
+pub fn bench_hlo_file(
+    path: &std::path::Path,
+    input_elems: usize,
+    reps: usize,
+) -> Result<Vec<Duration>> {
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| Error::artifact("non-utf8 path"))?,
+    )?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+    let input = vec![0.1f32; input_elems];
+    let lit = xla::Literal::vec1(&input).reshape(&[1, input_elems as i64])?;
+    exe.execute::<xla::Literal>(std::slice::from_ref(&lit))?; // warm-up
+    let mut out = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let r = exe.execute::<xla::Literal>(std::slice::from_ref(&lit))?;
+        let _ = r[0][0].to_literal_sync()?;
+        out.push(t0.elapsed());
+    }
+    Ok(out)
+}
+
+/// Device worker: own client, own executable cache, shared job FIFO.
+fn worker_loop(
+    wid: usize,
+    rx: Arc<Mutex<mpsc::Receiver<Job>>>,
+    paths: HashMap<ModelKey, PathBuf>,
+    stats: Arc<EngineStats>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("pjrt-worker-{wid}: client init failed: {e}");
+            return;
+        }
+    };
+    let mut cache: HashMap<ModelKey, xla::PjRtLoadedExecutable> = HashMap::new();
+    loop {
+        // lock-recv: the free worker picks up the next job (GPU-pool model)
+        let job = {
+            let guard = rx.lock().expect("engine queue poisoned");
+            match guard.recv() {
+                Ok(j) => j,
+                Err(_) => return, // engine dropped
+            }
+        };
+        let result = run_job(&client, &mut cache, &paths, &job, wid, &stats);
+        let _ = job.reply.send(result);
+    }
+}
+
+fn run_job(
+    client: &xla::PjRtClient,
+    cache: &mut HashMap<ModelKey, xla::PjRtLoadedExecutable>,
+    paths: &HashMap<ModelKey, PathBuf>,
+    job: &Job,
+    wid: usize,
+    stats: &EngineStats,
+) -> Result<ExecOutput> {
+    if !cache.contains_key(&job.key) {
+        let path = paths
+            .get(&job.key)
+            .ok_or_else(|| Error::artifact(format!("unknown model key {:?}", job.key)))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::artifact("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        stats.compile_count.fetch_add(1, Ordering::Relaxed);
+        cache.insert(job.key, exe);
+    }
+    let exe = cache.get(&job.key).expect("just inserted");
+    let (batch, clip_len) = (job.key.1 as i64, (job.input.len() / job.key.1) as i64);
+    let lit = xla::Literal::vec1(&job.input).reshape(&[batch, clip_len])?;
+    let t0 = Instant::now();
+    let out = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+    let exec_time = t0.elapsed();
+    // aot.py lowers with return_tuple=True → 1-tuple of (batch,) probs
+    let scores = out.to_tuple1()?.to_vec::<f32>()?;
+    stats.jobs.fetch_add(1, Ordering::Relaxed);
+    stats.busy_ns.fetch_add(exec_time.as_nanos() as u64, Ordering::Relaxed);
+    Ok(ExecOutput { scores, exec_time, worker: wid })
+}
+
+impl Drop for EngineInner {
+    fn drop(&mut self) {
+        // Drop the sender FIRST so worker `recv()` unblocks, then join to
+        // release PJRT state deterministically.
+        if let Ok(mut tx) = self.tx.lock() {
+            tx.take();
+        }
+        if let Ok(mut ws) = self.workers.lock() {
+            for w in ws.drain(..) {
+                let _ = w.join();
+            }
+        }
+    }
+}

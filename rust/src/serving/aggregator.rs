@@ -1,0 +1,235 @@
+//! Stateful data aggregator (paper §3.4 "Support for stateful compute").
+//!
+//! One aggregator per patient buffers the multi-rate streams (ECG
+//! 250 Hz, vitals 1 Hz) and releases a synchronized ensemble query when
+//! a full observation window ΔT has been collected — so every model in
+//! the ensemble sees the *same* interval of time across sensors.
+
+use crate::ingest::{Frame, Modality};
+
+/// Synchronized multi-modal window ready for the ensemble.
+#[derive(Debug, Clone)]
+pub struct WindowData {
+    pub patient: usize,
+    /// Monotone per-patient window sequence number.
+    pub window_id: u64,
+    /// Simulation time of the window end.
+    pub sim_end: f64,
+    /// ECG leads, `clip_len` samples each.
+    pub leads: [Vec<f32>; 3],
+    /// Mean vitals over the window (7 values; empty if none arrived).
+    pub vitals: Vec<f32>,
+    /// Latest labs seen (8 values; empty if none arrived).
+    pub labs: Vec<f32>,
+}
+
+/// Ring-buffering aggregator for one patient.
+#[derive(Debug)]
+pub struct WindowAggregator {
+    patient: usize,
+    /// ECG samples per emitted window (= clip_len of the zoo models).
+    window_samples: usize,
+    leads: [Vec<f32>; 3],
+    vitals_acc: Vec<f64>,
+    vitals_count: usize,
+    last_labs: Vec<f32>,
+    window_id: u64,
+    dropped: u64,
+}
+
+impl WindowAggregator {
+    pub fn new(patient: usize, window_samples: usize) -> Self {
+        assert!(window_samples > 0);
+        WindowAggregator {
+            patient,
+            window_samples,
+            leads: [
+                Vec::with_capacity(window_samples),
+                Vec::with_capacity(window_samples),
+                Vec::with_capacity(window_samples),
+            ],
+            vitals_acc: vec![0.0; 7],
+            vitals_count: 0,
+            last_labs: Vec::new(),
+            window_id: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn patient(&self) -> usize {
+        self.patient
+    }
+
+    /// Samples currently buffered toward the next window.
+    pub fn fill(&self) -> usize {
+        self.leads[0].len()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Push one frame; returns a completed window when ΔT fills up.
+    pub fn push(&mut self, frame: &Frame) -> Option<WindowData> {
+        if frame.patient != self.patient {
+            self.dropped += 1;
+            return None;
+        }
+        match frame.modality {
+            Modality::Ecg => {
+                if frame.values.len() != 3 {
+                    self.dropped += 1;
+                    return None;
+                }
+                for (lead, &v) in self.leads.iter_mut().zip(frame.values.iter()) {
+                    lead.push(v);
+                }
+                if self.leads[0].len() >= self.window_samples {
+                    return Some(self.emit(frame.sim_time));
+                }
+                None
+            }
+            Modality::Vitals => {
+                if frame.values.len() == 7 {
+                    for (a, &v) in self.vitals_acc.iter_mut().zip(frame.values.iter()) {
+                        *a += v as f64;
+                    }
+                    self.vitals_count += 1;
+                } else {
+                    self.dropped += 1;
+                }
+                None
+            }
+            Modality::Labs => {
+                if frame.values.len() == 8 {
+                    self.last_labs = frame.values.clone();
+                } else {
+                    self.dropped += 1;
+                }
+                None
+            }
+        }
+    }
+
+    fn emit(&mut self, sim_end: f64) -> WindowData {
+        let leads = [
+            std::mem::take(&mut self.leads[0]),
+            std::mem::take(&mut self.leads[1]),
+            std::mem::take(&mut self.leads[2]),
+        ];
+        let vitals = if self.vitals_count > 0 {
+            self.vitals_acc
+                .iter()
+                .map(|a| (*a / self.vitals_count as f64) as f32)
+                .collect()
+        } else {
+            Vec::new()
+        };
+        self.vitals_acc.iter_mut().for_each(|a| *a = 0.0);
+        self.vitals_count = 0;
+        let id = self.window_id;
+        self.window_id += 1;
+        WindowData {
+            patient: self.patient,
+            window_id: id,
+            sim_end,
+            leads,
+            vitals,
+            labs: self.last_labs.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ecg_frame(patient: usize, t: f64, v: f32) -> Frame {
+        Frame { patient, modality: Modality::Ecg, sim_time: t, values: vec![v, v + 1.0, v + 2.0] }
+    }
+
+    #[test]
+    fn emits_exactly_at_window_boundary() {
+        let mut agg = WindowAggregator::new(0, 4);
+        for i in 0..3 {
+            assert!(agg.push(&ecg_frame(0, i as f64, i as f32)).is_none());
+        }
+        let w = agg.push(&ecg_frame(0, 3.0, 3.0)).expect("window due");
+        assert_eq!(w.window_id, 0);
+        assert_eq!(w.leads[0], vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(w.leads[2], vec![2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(agg.fill(), 0, "buffer reset after emit");
+    }
+
+    #[test]
+    fn windows_do_not_overlap() {
+        let mut agg = WindowAggregator::new(0, 2);
+        let w1 = [agg.push(&ecg_frame(0, 0.0, 0.0)), agg.push(&ecg_frame(0, 1.0, 1.0))];
+        let w2 = [agg.push(&ecg_frame(0, 2.0, 2.0)), agg.push(&ecg_frame(0, 3.0, 3.0))];
+        let w1 = w1[1].as_ref().unwrap();
+        let w2 = w2[1].as_ref().unwrap();
+        assert_eq!(w1.window_id + 1, w2.window_id);
+        assert_eq!(w1.leads[0], vec![0.0, 1.0]);
+        assert_eq!(w2.leads[0], vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn wrong_patient_frames_are_dropped() {
+        let mut agg = WindowAggregator::new(1, 2);
+        assert!(agg.push(&ecg_frame(0, 0.0, 0.0)).is_none());
+        assert_eq!(agg.dropped(), 1);
+        assert_eq!(agg.fill(), 0);
+    }
+
+    #[test]
+    fn vitals_are_averaged_per_window() {
+        let mut agg = WindowAggregator::new(0, 2);
+        agg.push(&Frame {
+            patient: 0,
+            modality: Modality::Vitals,
+            sim_time: 0.0,
+            values: vec![100.0, 70.0, 98.0, 20.0, 37.0, 6.0, 1.4],
+        });
+        agg.push(&Frame {
+            patient: 0,
+            modality: Modality::Vitals,
+            sim_time: 0.5,
+            values: vec![110.0, 72.0, 97.0, 22.0, 37.2, 7.0, 1.2],
+        });
+        agg.push(&ecg_frame(0, 0.0, 0.0));
+        let w = agg.push(&ecg_frame(0, 1.0, 1.0)).unwrap();
+        assert!((w.vitals[0] - 105.0).abs() < 1e-6);
+        // next window starts with a fresh vitals accumulator
+        agg.push(&ecg_frame(0, 2.0, 0.0));
+        let w2 = agg.push(&ecg_frame(0, 3.0, 1.0)).unwrap();
+        assert!(w2.vitals.is_empty());
+    }
+
+    #[test]
+    fn malformed_frames_counted_dropped() {
+        let mut agg = WindowAggregator::new(0, 4);
+        agg.push(&Frame { patient: 0, modality: Modality::Ecg, sim_time: 0.0, values: vec![1.0] });
+        agg.push(&Frame {
+            patient: 0,
+            modality: Modality::Vitals,
+            sim_time: 0.0,
+            values: vec![1.0, 2.0],
+        });
+        assert_eq!(agg.dropped(), 2);
+    }
+
+    #[test]
+    fn labs_latched_across_windows() {
+        let mut agg = WindowAggregator::new(0, 1);
+        agg.push(&Frame {
+            patient: 0,
+            modality: Modality::Labs,
+            sim_time: 0.0,
+            values: vec![7.4, 1.0, 4.0, 140.0, 0.4, 12.0, 14.0, 9.0],
+        });
+        let w1 = agg.push(&ecg_frame(0, 0.0, 0.0)).unwrap();
+        let w2 = agg.push(&ecg_frame(0, 1.0, 0.0)).unwrap();
+        assert_eq!(w1.labs.len(), 8);
+        assert_eq!(w1.labs, w2.labs, "labs persist until a new result arrives");
+    }
+}

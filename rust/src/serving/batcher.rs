@@ -1,0 +1,163 @@
+//! Per-model dynamic batcher actor: coalesces queries from many patients
+//! into one device batch (up to `max_batch`, or after `timeout`), pads
+//! to the nearest compiled batch size, executes through the engine and
+//! fans per-slot scores back to the collector.
+//!
+//! One OS thread per selected model — the rust analogue of the paper's
+//! per-model Ray actor with its queue.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::runtime::Engine;
+use crate::{Error, Result};
+
+/// One unit of work for a model actor.
+#[derive(Debug)]
+pub struct BatchItem {
+    pub query_id: u64,
+    /// Raw (un-normalised) window for this model's lead; normalisation is
+    /// baked into the HLO graph.
+    pub input: Vec<f32>,
+    /// When the parent query was emitted by its aggregator.
+    pub enqueued: Instant,
+}
+
+/// Score report back to the collector.
+#[derive(Debug, Clone)]
+pub struct ModelScore {
+    pub query_id: u64,
+    pub model_index: usize,
+    pub score: f32,
+    /// Time the item waited before its batch started executing.
+    pub queue_wait: Duration,
+    /// Device execution time of the batch that carried the item.
+    pub exec_time: Duration,
+}
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub timeout: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        // §Perf iteration 1: a 5 ms fill-wait dominated single-query
+        // latency (measured 5.4 ms pipeline overhead on an 0.3 ms model).
+        // Bursts arrive within µs of each other, so an immediate drain +
+        // one short wait captures them; 1 ms caps the idle-path penalty.
+        BatchPolicy { max_batch: 8, timeout: Duration::from_millis(1) }
+    }
+}
+
+/// Run one model's batch loop until the input channel closes. `out` is
+/// called once per scored item; it returns Err when the collector is
+/// gone, which terminates the loop.
+pub fn model_batch_loop(
+    model_index: usize,
+    engine: Engine,
+    rx: mpsc::Receiver<BatchItem>,
+    mut out: impl FnMut(ModelScore) -> Result<()>,
+    policy: BatchPolicy,
+) -> Result<()> {
+    let clip_len = engine.clip_len();
+    let max_take = policy.max_batch.min(largest_batch(&engine)).max(1);
+    let mut pending: Vec<BatchItem> = Vec::with_capacity(max_take);
+    loop {
+        // fill phase: block for the first item, then wait up to `timeout`
+        // for the batch to fill
+        if pending.is_empty() {
+            match rx.recv() {
+                Ok(item) => pending.push(item),
+                Err(_) => break, // channel closed, nothing buffered
+            }
+        }
+        // fast path: drain whatever is already queued (bursts land in µs)
+        let mut closed = false;
+        while pending.len() < max_take {
+            match rx.try_recv() {
+                Ok(item) => pending.push(item),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    closed = true;
+                    break;
+                }
+            }
+        }
+        // not full yet: ONE bounded wait for stragglers, then drain again
+        if !closed && pending.len() < max_take && !policy.timeout.is_zero() {
+            match rx.recv_timeout(policy.timeout) {
+                Ok(item) => {
+                    pending.push(item);
+                    while pending.len() < max_take {
+                        match rx.try_recv() {
+                            Ok(item) => pending.push(item),
+                            Err(mpsc::TryRecvError::Empty) => break,
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                closed = true;
+                                break;
+                            }
+                        }
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => closed = true,
+            }
+        }
+        flush(model_index, &engine, clip_len, &mut pending, &mut out, max_take)?;
+        if closed && pending.is_empty() {
+            break;
+        }
+    }
+    // final drain
+    while !pending.is_empty() {
+        flush(model_index, &engine, clip_len, &mut pending, &mut out, max_take)?;
+    }
+    Ok(())
+}
+
+fn flush(
+    model_index: usize,
+    engine: &Engine,
+    clip_len: usize,
+    pending: &mut Vec<BatchItem>,
+    out: &mut impl FnMut(ModelScore) -> Result<()>,
+    max_take: usize,
+) -> Result<()> {
+    if pending.is_empty() {
+        return Ok(());
+    }
+    let take = pending.len().min(max_take);
+    let items: Vec<BatchItem> = pending.drain(..take).collect();
+    let batch = engine.batch_for(items.len());
+    let mut input = vec![0.0f32; batch * clip_len];
+    for (slot, item) in items.iter().enumerate() {
+        if item.input.len() != clip_len {
+            return Err(Error::config(format!(
+                "batch item clip length {} != {}",
+                item.input.len(),
+                clip_len
+            )));
+        }
+        input[slot * clip_len..(slot + 1) * clip_len].copy_from_slice(&item.input);
+    }
+    let started = Instant::now();
+    let result = engine.execute_blocking((model_index, batch), input)?;
+    for (slot, item) in items.into_iter().enumerate() {
+        let report = ModelScore {
+            query_id: item.query_id,
+            model_index,
+            score: result.scores[slot],
+            queue_wait: started.duration_since(item.enqueued),
+            exec_time: result.exec_time,
+        };
+        out(report)?;
+    }
+    Ok(())
+}
+
+fn largest_batch(engine: &Engine) -> usize {
+    engine.batch_sizes().iter().copied().max().unwrap_or(1)
+}

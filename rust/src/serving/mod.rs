@@ -1,0 +1,31 @@
+//! Real-time ensemble serving (paper §3.4, Fig. 4).
+//!
+//! The pipeline is a set of tokio actors — the rust substitute for the
+//! Ray layer the paper builds on:
+//!
+//! ```text
+//!  bedside streams ──► HTTP server / in-process ingest
+//!        │ 250 Hz ECG, 1 Hz vitals
+//!        ▼
+//!  [stateful]  per-patient WindowAggregator actors
+//!        │ one ensemble Query per ΔT window
+//!        ▼
+//!  dispatcher ──► per-model Batcher actors ──► PJRT Engine workers
+//!        │                                        ("GPUs")
+//!        ▼
+//!  [stateless]  collector: bagging mean (Eq. 5) + telemetry
+//! ```
+//!
+//! Stateful compute (aggregation) and stateless compute (model
+//! inference) are separated exactly as the paper requires of its
+//! serving platform.
+
+pub mod aggregator;
+pub mod batcher;
+pub mod pipeline;
+pub mod profile;
+pub mod telemetry;
+
+pub use aggregator::WindowAggregator;
+pub use pipeline::{Pipeline, PipelineConfig, Prediction, Query};
+pub use telemetry::{LatencyHistogram, Telemetry};

@@ -1,0 +1,295 @@
+//! The ensemble serving pipeline: router + per-model batcher actors +
+//! bagging collector, wired over std channels (Fig. 4).
+//!
+//! Thread topology (the rust substitute for the paper's Ray actors):
+//!
+//! ```text
+//!  Pipeline handles ──queries──► router thread ──items──► batcher threads
+//!                                   │ register                │ scores
+//!                                   ▼                         ▼
+//!                         shared pending table ◄──── collector thread
+//! ```
+//!
+//! Shutdown is acyclic: dropping the last `Pipeline` handle closes the
+//! query channel → the router exits and drops the per-model item
+//! senders → batchers drain and exit, dropping the score sender → the
+//! collector exits. No thread outlives the pipeline.
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::batcher::{model_batch_loop, BatchItem, BatchPolicy, ModelScore};
+use super::telemetry::Telemetry;
+use crate::runtime::Engine;
+use crate::zoo::{Selector, Zoo};
+use crate::{Error, Result};
+
+/// One ensemble query: a synchronized multi-lead observation window.
+#[derive(Debug, Clone)]
+pub struct Query {
+    pub patient: usize,
+    pub window_id: u64,
+    pub sim_end: f64,
+    pub leads: [Vec<f32>; 3],
+    /// Wall-clock emission instant (set by the aggregator).
+    pub emitted: Instant,
+}
+
+impl Query {
+    pub fn from_window(w: super::aggregator::WindowData) -> Self {
+        Query {
+            patient: w.patient,
+            window_id: w.window_id,
+            sim_end: w.sim_end,
+            leads: w.leads,
+            emitted: Instant::now(),
+        }
+    }
+}
+
+/// Bagging-ensemble prediction (Eq. 5) with latency breakdown.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    pub patient: usize,
+    pub window_id: u64,
+    pub sim_end: f64,
+    /// Mean probability over the ensemble members.
+    pub score: f64,
+    pub n_models: usize,
+    /// End-to-end: emission → all members scored (T_q + T_s).
+    pub e2e: Duration,
+    /// Min model queue-wait ≈ the queueing component T_q.
+    pub queueing: Duration,
+}
+
+/// Receiver for one query's prediction (oneshot semantics).
+pub type PredictionRx = mpsc::Receiver<Prediction>;
+
+/// Pipeline construction parameters.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub ensemble: Selector,
+    pub policy: BatchPolicy,
+}
+
+impl PipelineConfig {
+    pub fn new(ensemble: Selector) -> Self {
+        PipelineConfig { ensemble, policy: BatchPolicy::default() }
+    }
+}
+
+struct PendingQuery {
+    patient: usize,
+    window_id: u64,
+    sim_end: f64,
+    emitted: Instant,
+    remaining: usize,
+    sum: f64,
+    n_models: usize,
+    min_queue_wait: Duration,
+    reply: Option<mpsc::SyncSender<Prediction>>,
+}
+
+type PendingTable = Arc<Mutex<HashMap<u64, PendingQuery>>>;
+
+/// Handle to a running pipeline. Cheap to clone. Dropping all handles
+/// shuts the pipeline down (batchers drain, engine stays alive).
+#[derive(Clone)]
+pub struct Pipeline {
+    tx: mpsc::Sender<(Query, Option<mpsc::SyncSender<Prediction>>)>,
+    telemetry: Arc<Telemetry>,
+    ensemble: Selector,
+    clip_len: usize,
+}
+
+impl Pipeline {
+    /// Spawn the pipeline for `ensemble` on the given engine. Every
+    /// selected model must be servable (compiled artifacts present).
+    pub fn spawn(zoo: &Zoo, engine: &Engine, cfg: PipelineConfig) -> Result<Pipeline> {
+        if cfg.ensemble.is_empty() {
+            return Err(Error::config("cannot serve an empty ensemble"));
+        }
+        for &i in cfg.ensemble.indices() {
+            if !engine.has_model((i, engine.batch_for(1))) {
+                return Err(Error::artifact(format!(
+                    "ensemble member {} ({}) has no compiled artifact",
+                    i,
+                    zoo.model(i).id
+                )));
+            }
+        }
+        let telemetry = Arc::new(Telemetry::default());
+        let pending: PendingTable = Arc::new(Mutex::new(HashMap::new()));
+        let (score_tx, score_rx) = mpsc::channel::<ModelScore>();
+
+        // batcher actor per selected model
+        let mut model_txs: HashMap<usize, mpsc::Sender<BatchItem>> = HashMap::new();
+        for &i in cfg.ensemble.indices() {
+            let (btx, brx) = mpsc::channel::<BatchItem>();
+            model_txs.insert(i, btx);
+            let engine = engine.clone();
+            let policy = cfg.policy;
+            let stx = score_tx.clone();
+            std::thread::Builder::new()
+                .name(format!("batcher-{i}"))
+                .spawn(move || {
+                    let out = |s: ModelScore| {
+                        stx.send(s).map_err(|_| Error::serving("collector gone"))
+                    };
+                    if let Err(e) = model_batch_loop(i, engine, brx, out, policy) {
+                        eprintln!("model batcher {i} exited: {e}");
+                    }
+                })
+                .map_err(Error::Io)?;
+        }
+        drop(score_tx); // collector ends when the last batcher exits
+
+        // collector thread
+        {
+            let pending = Arc::clone(&pending);
+            let telemetry = Arc::clone(&telemetry);
+            std::thread::Builder::new()
+                .name("collector".into())
+                .spawn(move || collector_loop(score_rx, pending, telemetry))
+                .map_err(Error::Io)?;
+        }
+
+        // router thread
+        let (tx, query_rx) =
+            mpsc::channel::<(Query, Option<mpsc::SyncSender<Prediction>>)>();
+        {
+            let pending = Arc::clone(&pending);
+            let leads: HashMap<usize, usize> =
+                cfg.ensemble.indices().iter().map(|&i| (i, zoo.model(i).lead)).collect();
+            let ensemble = cfg.ensemble.clone();
+            std::thread::Builder::new()
+                .name("router".into())
+                .spawn(move || router_loop(query_rx, model_txs, leads, ensemble, pending))
+                .map_err(Error::Io)?;
+        }
+
+        Ok(Pipeline {
+            tx,
+            telemetry,
+            ensemble: cfg.ensemble,
+            clip_len: zoo.manifest.clip_len,
+        })
+    }
+
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.telemetry
+    }
+
+    pub fn ensemble(&self) -> &Selector {
+        &self.ensemble
+    }
+
+    pub fn clip_len(&self) -> usize {
+        self.clip_len
+    }
+
+    /// Submit a query; receive the prediction on the returned channel.
+    pub fn submit(&self, query: Query) -> Result<PredictionRx> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send((query, Some(tx)))
+            .map_err(|_| Error::serving("pipeline shut down"))?;
+        Ok(rx)
+    }
+
+    /// Submit a query and block for the prediction.
+    pub fn query(&self, query: Query) -> Result<Prediction> {
+        let rx = self.submit(query)?;
+        rx.recv().map_err(|_| Error::serving("pipeline dropped query"))
+    }
+
+    /// Fire-and-forget submission (open-loop load generation); telemetry
+    /// still records the prediction.
+    pub fn submit_nowait(&self, query: Query) -> Result<()> {
+        self.tx
+            .send((query, None))
+            .map_err(|_| Error::serving("pipeline shut down"))
+    }
+}
+
+fn router_loop(
+    rx: mpsc::Receiver<(Query, Option<mpsc::SyncSender<Prediction>>)>,
+    model_txs: HashMap<usize, mpsc::Sender<BatchItem>>,
+    leads: HashMap<usize, usize>,
+    ensemble: Selector,
+    pending: PendingTable,
+) {
+    let mut next_id: u64 = 0;
+    for (q, reply) in rx {
+        let id = next_id;
+        next_id += 1;
+        pending.lock().expect("pending table poisoned").insert(
+            id,
+            PendingQuery {
+                patient: q.patient,
+                window_id: q.window_id,
+                sim_end: q.sim_end,
+                emitted: q.emitted,
+                remaining: ensemble.len(),
+                sum: 0.0,
+                n_models: ensemble.len(),
+                min_queue_wait: Duration::MAX,
+                reply,
+            },
+        );
+        for &m in ensemble.indices() {
+            let item = BatchItem {
+                query_id: id,
+                input: q.leads[leads[&m]].clone(),
+                enqueued: q.emitted,
+            };
+            if model_txs[&m].send(item).is_err() {
+                // batcher died: fail the query (reply hangs up on drop)
+                pending.lock().expect("pending table poisoned").remove(&id);
+                break;
+            }
+        }
+    }
+    // router exit drops model_txs → batchers drain and exit
+}
+
+fn collector_loop(rx: mpsc::Receiver<ModelScore>, pending: PendingTable, telemetry: Arc<Telemetry>) {
+    for s in rx {
+        telemetry.exec.record(s.exec_time);
+        telemetry.model_jobs.fetch_add(1, Ordering::Relaxed);
+        let done = {
+            let mut table = pending.lock().expect("pending table poisoned");
+            let Some(entry) = table.get_mut(&s.query_id) else { continue };
+            entry.sum += s.score as f64;
+            entry.remaining -= 1;
+            if s.queue_wait < entry.min_queue_wait {
+                entry.min_queue_wait = s.queue_wait;
+            }
+            if entry.remaining == 0 {
+                table.remove(&s.query_id)
+            } else {
+                None
+            }
+        };
+        if let Some(entry) = done {
+            let e2e = entry.emitted.elapsed();
+            telemetry.e2e.record(e2e);
+            telemetry.queueing.record(entry.min_queue_wait);
+            telemetry.queries.fetch_add(1, Ordering::Relaxed);
+            let prediction = Prediction {
+                patient: entry.patient,
+                window_id: entry.window_id,
+                sim_end: entry.sim_end,
+                score: entry.sum / entry.n_models as f64,
+                n_models: entry.n_models,
+                e2e,
+                queueing: entry.min_queue_wait,
+            };
+            if let Some(reply) = entry.reply {
+                let _ = reply.send(prediction);
+            }
+        }
+    }
+}

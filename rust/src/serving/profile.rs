@@ -1,0 +1,138 @@
+//! Measured latency profiling (paper §3.4 "Latency profiling"):
+//! exposes `f_l(V, c, b)` over the *real* pipeline.
+//!
+//! 1. **μ (throughput capacity)**: closed-loop inference on the deployed
+//!    ensemble — `n_workers` closed loops on separate threads, each
+//!    issuing the next query as soon as the previous returns, averaged
+//!    over K queries.
+//! 2. **T_s**: open-loop load at the configured ingest rate λ ≤ μ; the
+//!    95th-percentile end-to-end latency.
+//! 3. **T_q**: network-calculus bound from the arrival curve observed
+//!    during the open-loop run and the rate-latency service curve
+//!    (μ, T_s) — Fig. 5's construction.
+
+use std::time::Instant;
+
+use crate::config::SystemConfig;
+use crate::data;
+use crate::ingest::synth::SynthConfig;
+use crate::netcalc::{queueing_bound, ArrivalCurve, ServiceCurve};
+use crate::runtime::Engine;
+use crate::serving::pipeline::{Pipeline, PipelineConfig, Query};
+use crate::zoo::{Selector, Zoo};
+use crate::{Error, Result};
+
+/// Output of one measured profiling run.
+#[derive(Debug, Clone, Copy)]
+pub struct MeasuredLatency {
+    /// Ensemble throughput capacity, queries/s.
+    pub mu: f64,
+    /// p95 end-to-end latency under open-loop load (seconds) — T_s.
+    pub ts_p95: f64,
+    /// Mean end-to-end latency under open-loop load.
+    pub ts_mean: f64,
+    /// Network-calculus queueing bound (seconds) — T_q.
+    pub tq_bound: f64,
+    /// The profiler's latency estimate T̂ = T_q + T_s.
+    pub total: f64,
+}
+
+/// Profiling effort knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ProfileEffort {
+    /// Closed-loop queries for μ.
+    pub closed_loop_queries: usize,
+    /// Open-loop queries for T_s / the arrival curve.
+    pub open_loop_queries: usize,
+}
+
+impl Default for ProfileEffort {
+    fn default() -> Self {
+        ProfileEffort { closed_loop_queries: 24, open_loop_queries: 48 }
+    }
+}
+
+/// Measure `f_l` for ensemble `b` under system configuration `c`.
+pub fn profile_ensemble(
+    zoo: &Zoo,
+    engine: &Engine,
+    b: &Selector,
+    c: &SystemConfig,
+    effort: ProfileEffort,
+) -> Result<MeasuredLatency> {
+    if b.is_empty() {
+        return Err(Error::config("cannot profile an empty ensemble"));
+    }
+    let pipeline = Pipeline::spawn(zoo, engine, PipelineConfig::new(b.clone()))?;
+    let clip_len = zoo.manifest.clip_len;
+    // one representative clip, reused for every probe query
+    let clips = data::make_clips(1, clip_len, 1234, &SynthConfig::default());
+    let leads = clips.clips[0].clone();
+
+    // warm compile every (model, batch) variant out of the measurement
+    for &m in b.indices() {
+        for &bs in engine.batch_sizes() {
+            engine.profile_model((m, bs), 1)?;
+        }
+    }
+
+    // ---- closed loop: throughput capacity μ
+    let loops = engine.n_workers().max(1);
+    let per_loop = (effort.closed_loop_queries / loops).max(1);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..loops {
+            let pipeline = pipeline.clone();
+            let leads = leads.clone();
+            scope.spawn(move || {
+                for w in 0..per_loop {
+                    let q = Query {
+                        patient: 0,
+                        window_id: w as u64,
+                        sim_end: 0.0,
+                        leads: leads.clone(),
+                        emitted: Instant::now(),
+                    };
+                    let _ = pipeline.query(q);
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let mu = (per_loop * loops) as f64 / elapsed.max(1e-9);
+
+    // ---- open loop at λ = query_rate (capped at 0.9 μ, as the paper
+    // requires λ ≤ μ) — collect e2e samples + arrival timestamps
+    let lambda = c.query_rate().min(0.9 * mu).max(0.1);
+    let gap = std::time::Duration::from_secs_f64(1.0 / lambda);
+    let mut arrivals: Vec<f64> = Vec::with_capacity(effort.open_loop_queries);
+    let start = Instant::now();
+    let mut replies = Vec::new();
+    for w in 0..effort.open_loop_queries {
+        let q = Query {
+            patient: w % c.patients.max(1),
+            window_id: w as u64,
+            sim_end: 0.0,
+            leads: leads.clone(),
+            emitted: Instant::now(),
+        };
+        arrivals.push(start.elapsed().as_secs_f64());
+        replies.push(pipeline.submit(q)?);
+        std::thread::sleep(gap);
+    }
+    let mut e2e: Vec<f64> = Vec::with_capacity(replies.len());
+    for r in replies {
+        if let Ok(p) = r.recv() {
+            e2e.push(p.e2e.as_secs_f64());
+        }
+    }
+    let ts_p95 = crate::metrics::percentile(&e2e, 95.0);
+    let ts_mean = e2e.iter().sum::<f64>() / e2e.len().max(1) as f64;
+
+    // ---- T_q via network calculus on the observed arrivals
+    let arrival = ArrivalCurve::from_timestamps_exact(&arrivals);
+    let service = ServiceCurve::new(mu.max(1e-6), ts_mean.max(1e-6));
+    let tq_bound = queueing_bound(&arrival, &service);
+
+    Ok(MeasuredLatency { mu, ts_p95, ts_mean, tq_bound, total: ts_p95 + tq_bound })
+}

@@ -1,0 +1,213 @@
+//! Serving telemetry: latency histograms with percentile queries, stage
+//! breakdown (queueing vs execution — the paper's T_q / T_s split), and
+//! throughput counters. Lock-light: one mutex per histogram, updated
+//! once per query.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Fixed-boundary log-scale histogram from 1 µs to ~100 s, plus an exact
+/// reservoir of recent samples for precise percentiles in experiments.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+    samples: Mutex<Vec<f64>>, // seconds; capped reservoir
+    cap: usize,
+}
+
+const BUCKETS_PER_DECADE: usize = 10;
+const DECADES: usize = 8; // 1 µs .. 100 s
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new(100_000)
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new(sample_cap: usize) -> Self {
+        LatencyHistogram {
+            buckets: (0..BUCKETS_PER_DECADE * DECADES).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+            samples: Mutex::new(Vec::new()),
+            cap: sample_cap,
+        }
+    }
+
+    fn bucket_index(ns: u64) -> usize {
+        let us = (ns as f64 / 1000.0).max(1.0);
+        let idx = (us.log10() * BUCKETS_PER_DECADE as f64) as usize;
+        idx.min(BUCKETS_PER_DECADE * DECADES - 1)
+    }
+
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos() as u64;
+        self.buckets[Self::bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+        let mut s = self.samples.lock().expect("telemetry poisoned");
+        if s.len() < self.cap {
+            s.push(d.as_secs_f64());
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64 / 1e9
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Exact percentile over the retained sample reservoir.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let s = self.samples.lock().expect("telemetry poisoned");
+        crate::metrics::percentile(&s, p)
+    }
+
+    /// Drain retained samples (for experiment CSVs).
+    pub fn take_samples(&self) -> Vec<f64> {
+        std::mem::take(&mut *self.samples.lock().expect("telemetry poisoned"))
+    }
+}
+
+/// Pipeline-wide telemetry.
+#[derive(Debug, Default)]
+pub struct Telemetry {
+    /// End-to-end: window emitted → prediction ready (T_q + T_s).
+    pub e2e: LatencyHistogram,
+    /// Queueing component: window emitted → first model starts executing.
+    pub queueing: LatencyHistogram,
+    /// Device execution per model job.
+    pub exec: LatencyHistogram,
+    /// Data-collection latency: frame ingest → aggregator push done.
+    pub ingest: LatencyHistogram,
+    pub queries: AtomicU64,
+    pub model_jobs: AtomicU64,
+    pub frames: AtomicU64,
+}
+
+impl Telemetry {
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            queries: self.queries.load(Ordering::Relaxed),
+            model_jobs: self.model_jobs.load(Ordering::Relaxed),
+            frames: self.frames.load(Ordering::Relaxed),
+            e2e_mean: self.e2e.mean(),
+            e2e_p50: self.e2e.percentile(50.0),
+            e2e_p95: self.e2e.percentile(95.0),
+            e2e_p99: self.e2e.percentile(99.0),
+            e2e_max: self.e2e.max(),
+            queueing_mean: self.queueing.mean(),
+            queueing_p95: self.queueing.percentile(95.0),
+            exec_mean: self.exec.mean(),
+            ingest_p95: self.ingest.percentile(95.0),
+        }
+    }
+}
+
+/// Plain-old-data snapshot for the /stats endpoint and CSVs.
+#[derive(Debug, Clone)]
+pub struct TelemetrySnapshot {
+    pub queries: u64,
+    pub model_jobs: u64,
+    pub frames: u64,
+    pub e2e_mean: f64,
+    pub e2e_p50: f64,
+    pub e2e_p95: f64,
+    pub e2e_p99: f64,
+    pub e2e_max: f64,
+    pub queueing_mean: f64,
+    pub queueing_p95: f64,
+    pub exec_mean: f64,
+    pub ingest_p95: f64,
+}
+
+impl TelemetrySnapshot {
+    pub fn to_json(&self) -> crate::json::Value {
+        use crate::json::Value;
+        Value::obj(vec![
+            ("queries", Value::Num(self.queries as f64)),
+            ("model_jobs", Value::Num(self.model_jobs as f64)),
+            ("frames", Value::Num(self.frames as f64)),
+            ("e2e_mean", Value::Num(self.e2e_mean)),
+            ("e2e_p50", Value::Num(self.e2e_p50)),
+            ("e2e_p95", Value::Num(self.e2e_p95)),
+            ("e2e_p99", Value::Num(self.e2e_p99)),
+            ("e2e_max", Value::Num(self.e2e_max)),
+            ("queueing_mean", Value::Num(self.queueing_mean)),
+            ("queueing_p95", Value::Num(self.queueing_p95)),
+            ("exec_mean", Value::Num(self.exec_mean)),
+            ("ingest_p95", Value::Num(self.ingest_p95)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_mean() {
+        let h = LatencyHistogram::default();
+        h.record(Duration::from_millis(10));
+        h.record(Duration::from_millis(30));
+        assert_eq!(h.count(), 2);
+        assert!((h.mean() - 0.020).abs() < 1e-9);
+        assert!((h.max() - 0.030).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_from_reservoir() {
+        let h = LatencyHistogram::default();
+        for i in 1..=100 {
+            h.record(Duration::from_millis(i));
+        }
+        assert!((h.percentile(50.0) - 0.0505).abs() < 0.002);
+        assert!((h.percentile(95.0) - 0.09505).abs() < 0.002);
+    }
+
+    #[test]
+    fn bucket_index_monotone_and_bounded() {
+        let mut last = 0;
+        for ns in [1u64, 1_000, 10_000, 1_000_000, 10_000_000_000, u64::MAX / 2] {
+            let b = LatencyHistogram::bucket_index(ns);
+            assert!(b >= last);
+            assert!(b < BUCKETS_PER_DECADE * DECADES);
+            last = b;
+        }
+    }
+
+    #[test]
+    fn reservoir_respects_cap() {
+        let h = LatencyHistogram::new(10);
+        for _ in 0..100 {
+            h.record(Duration::from_micros(5));
+        }
+        assert_eq!(h.take_samples().len(), 10);
+        assert_eq!(h.count(), 100);
+    }
+
+    #[test]
+    fn snapshot_is_serializable() {
+        let t = Telemetry::default();
+        t.e2e.record(Duration::from_millis(1));
+        let s = t.snapshot().to_json().to_string();
+        assert!(s.contains("e2e_p95"));
+    }
+}

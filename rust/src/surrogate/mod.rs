@@ -1,0 +1,245 @@
+//! Surrogate probability models for the SMBO composer (paper §3.3.2b).
+//!
+//! HOLMES fits two random forests [6] on the profiled set B — one
+//! approximating the accuracy profiler `f̂_a`, one the latency profiler
+//! `f̂_l` — so the genetic explorer can rank candidate ensembles without
+//! spending profiler-call budget. Implemented from scratch: bootstrap-
+//! bagged CART variance-reduction trees with feature subsampling.
+
+mod tree;
+
+pub use tree::{Tree, TreeConfig};
+
+use crate::rng::Rng;
+
+/// Common interface the composer uses for `f̂_a` / `f̂_l`.
+pub trait Surrogate {
+    /// Fit on row-major features and targets (replaces prior fit).
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]);
+    /// Point prediction for one feature vector.
+    fn predict(&self, x: &[f64]) -> f64;
+    /// True once `fit` has been called with ≥1 sample.
+    fn is_fitted(&self) -> bool;
+}
+
+/// Random-forest regressor (the paper's surrogate choice).
+#[derive(Debug, Clone)]
+pub struct RandomForest {
+    pub config: ForestConfig,
+    trees: Vec<Tree>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct ForestConfig {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    /// Features per split; None → ceil(sqrt(n_features)).
+    pub mtry: Option<usize>,
+    pub seed: u64,
+}
+
+impl Default for ForestConfig {
+    fn default() -> Self {
+        ForestConfig { n_trees: 60, max_depth: 14, min_samples_leaf: 2, mtry: None, seed: 17 }
+    }
+}
+
+impl RandomForest {
+    pub fn new(config: ForestConfig) -> Self {
+        RandomForest { config, trees: Vec::new() }
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+impl Surrogate for RandomForest {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert_eq!(x.len(), y.len());
+        self.trees.clear();
+        if x.is_empty() {
+            return;
+        }
+        let n = x.len();
+        let n_features = x[0].len();
+        let mtry = self
+            .config
+            .mtry
+            .unwrap_or_else(|| (n_features as f64).sqrt().ceil() as usize);
+        let tree_cfg = TreeConfig {
+            max_depth: self.config.max_depth,
+            min_samples_leaf: self.config.min_samples_leaf,
+            mtry: Some(mtry),
+        };
+        let mut rng = Rng::seed_from_u64(self.config.seed);
+        for _ in 0..self.config.n_trees {
+            // bootstrap sample (with replacement)
+            let rows: Vec<usize> = (0..n).map(|_| rng.range(0, n)).collect();
+            self.trees.push(Tree::fit(x, y, &rows, &tree_cfg, &mut rng));
+        }
+    }
+
+    fn predict(&self, x: &[f64]) -> f64 {
+        if self.trees.is_empty() {
+            return 0.0;
+        }
+        self.trees.iter().map(|t| t.predict(x)).sum::<f64>() / self.trees.len() as f64
+    }
+
+    fn is_fitted(&self) -> bool {
+        !self.trees.is_empty()
+    }
+}
+
+/// Ridge linear regressor — a cheap alternative surrogate used in the
+/// ablation benches (DESIGN.md calls out surrogate choice as a design
+/// decision worth ablating).
+#[derive(Debug, Clone)]
+pub struct RidgeRegression {
+    pub l2: f64,
+    weights: Vec<f64>, // last entry = intercept
+}
+
+impl RidgeRegression {
+    pub fn new(l2: f64) -> Self {
+        RidgeRegression { l2, weights: Vec::new() }
+    }
+}
+
+impl Surrogate for RidgeRegression {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert_eq!(x.len(), y.len());
+        self.weights.clear();
+        if x.is_empty() {
+            return;
+        }
+        let d = x[0].len() + 1; // + intercept
+        // normal equations (XᵀX + λI) w = Xᵀy, Gaussian elimination
+        let mut a = vec![vec![0.0f64; d]; d];
+        let mut b = vec![0.0f64; d];
+        for (row, &target) in x.iter().zip(y) {
+            let aug: Vec<f64> = row.iter().copied().chain(std::iter::once(1.0)).collect();
+            for i in 0..d {
+                b[i] += aug[i] * target;
+                for j in 0..d {
+                    a[i][j] += aug[i] * aug[j];
+                }
+            }
+        }
+        for (i, row) in a.iter_mut().enumerate().take(d - 1) {
+            row[i] += self.l2; // don't regularise the intercept
+        }
+        self.weights = solve(a, b);
+    }
+
+    fn predict(&self, x: &[f64]) -> f64 {
+        if self.weights.is_empty() {
+            return 0.0;
+        }
+        x.iter()
+            .zip(&self.weights)
+            .map(|(xi, wi)| xi * wi)
+            .sum::<f64>()
+            + self.weights[self.weights.len() - 1]
+    }
+
+    fn is_fitted(&self) -> bool {
+        !self.weights.is_empty()
+    }
+}
+
+/// Gaussian elimination with partial pivoting.
+fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        // pivot
+        let piv = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let diag = a[col][col];
+        if diag.abs() < 1e-12 {
+            continue;
+        }
+        for row in col + 1..n {
+            let f = a[row][col] / diag;
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for col in row + 1..n {
+            acc -= a[row][col] * x[col];
+        }
+        x[row] = if a[row][row].abs() < 1e-12 { 0.0 } else { acc / a[row][row] };
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::r2;
+
+    fn grid_xy(f: impl Fn(&[f64]) -> f64, n_bits: usize, n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let x: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..n_bits).map(|_| rng.range(0, 2) as f64).collect())
+            .collect();
+        let y: Vec<f64> = x.iter().map(|r| f(r)).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn forest_learns_additive_binary_function() {
+        let f = |r: &[f64]| 2.0 * r[0] + r[3] - 0.5 * r[7];
+        let (x, y) = grid_xy(f, 10, 300, 1);
+        let mut rf = RandomForest::new(ForestConfig::default());
+        rf.fit(&x, &y);
+        let (xt, yt) = grid_xy(f, 10, 100, 2);
+        let pred: Vec<f64> = xt.iter().map(|r| rf.predict(r)).collect();
+        assert!(r2(&yt, &pred) > 0.9, "r2 = {}", r2(&yt, &pred));
+    }
+
+    #[test]
+    fn forest_is_deterministic_given_seed() {
+        let (x, y) = grid_xy(|r| r[0] + r[1], 4, 50, 3);
+        let mut a = RandomForest::new(ForestConfig::default());
+        let mut b = RandomForest::new(ForestConfig::default());
+        a.fit(&x, &y);
+        b.fit(&x, &y);
+        for row in &x {
+            assert_eq!(a.predict(row), b.predict(row));
+        }
+    }
+
+    #[test]
+    fn forest_unfitted_predicts_zero() {
+        let rf = RandomForest::new(ForestConfig::default());
+        assert!(!rf.is_fitted());
+        assert_eq!(rf.predict(&[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn ridge_recovers_linear_coefficients() {
+        let (x, y) = grid_xy(|r| 3.0 * r[0] - 2.0 * r[1] + 1.0, 2, 80, 5);
+        let mut lr = RidgeRegression::new(1e-6);
+        lr.fit(&x, &y);
+        assert!((lr.predict(&[1.0, 0.0]) - 4.0).abs() < 1e-3);
+        assert!((lr.predict(&[0.0, 1.0]) + 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn solve_identity() {
+        let a = vec![vec![1.0, 0.0], vec![0.0, 2.0]];
+        let x = solve(a, vec![3.0, 8.0]);
+        assert!((x[0] - 3.0).abs() < 1e-12 && (x[1] - 4.0).abs() < 1e-12);
+    }
+}

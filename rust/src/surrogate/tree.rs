@@ -1,0 +1,248 @@
+//! CART regression tree — variance-reduction splits, the building block
+//! of the random-forest surrogates (and of the vitals-side RF
+//! classifier, which regresses on {0,1} labels).
+
+use crate::rng::Rng;
+
+/// Flat array-of-nodes tree; `left == usize::MAX` marks a leaf.
+#[derive(Debug, Clone)]
+pub struct Tree {
+    nodes: Vec<Node>,
+}
+
+#[derive(Debug, Clone)]
+struct Node {
+    feature: usize,
+    threshold: f64,
+    left: usize,
+    right: usize,
+    value: f64, // leaf prediction (mean of targets)
+}
+
+const LEAF: usize = usize::MAX;
+
+/// Tree growth hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TreeConfig {
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    /// Number of random features tried per split (None = all).
+    pub mtry: Option<usize>,
+}
+
+impl Default for TreeConfig {
+    fn default() -> Self {
+        TreeConfig { max_depth: 16, min_samples_leaf: 2, mtry: None }
+    }
+}
+
+impl Tree {
+    /// Fit on row-major features `x[i]` with targets `y[i]`, restricted to
+    /// the `rows` index subset (the caller's bootstrap sample).
+    pub fn fit(
+        x: &[Vec<f64>],
+        y: &[f64],
+        rows: &[usize],
+        cfg: &TreeConfig,
+        rng: &mut Rng,
+    ) -> Self {
+        assert_eq!(x.len(), y.len());
+        assert!(!rows.is_empty(), "cannot fit a tree on zero rows");
+        let mut tree = Tree { nodes: Vec::new() };
+        let mut rows = rows.to_vec();
+        tree.grow(x, y, &mut rows, 0, cfg, rng);
+        tree
+    }
+
+    fn grow(
+        &mut self,
+        x: &[Vec<f64>],
+        y: &[f64],
+        rows: &mut [usize],
+        depth: usize,
+        cfg: &TreeConfig,
+        rng: &mut Rng,
+    ) -> usize {
+        let mean = rows.iter().map(|&r| y[r]).sum::<f64>() / rows.len() as f64;
+        let node_id = self.nodes.len();
+        self.nodes.push(Node { feature: 0, threshold: 0.0, left: LEAF, right: LEAF, value: mean });
+
+        if depth >= cfg.max_depth || rows.len() < 2 * cfg.min_samples_leaf {
+            return node_id;
+        }
+        let Some((feat, thr)) = best_split(x, y, rows, cfg, rng) else {
+            return node_id;
+        };
+        // partition in place
+        let mut split = 0;
+        for i in 0..rows.len() {
+            if x[rows[i]][feat] <= thr {
+                rows.swap(i, split);
+                split += 1;
+            }
+        }
+        if split == 0 || split == rows.len() {
+            return node_id;
+        }
+        let (l_rows, r_rows) = rows.split_at_mut(split);
+        let left = self.grow(x, y, l_rows, depth + 1, cfg, rng);
+        let right = self.grow(x, y, r_rows, depth + 1, cfg, rng);
+        self.nodes[node_id].feature = feat;
+        self.nodes[node_id].threshold = thr;
+        self.nodes[node_id].left = left;
+        self.nodes[node_id].right = right;
+        node_id
+    }
+
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        let mut i = 0;
+        loop {
+            let n = &self.nodes[i];
+            if n.left == LEAF {
+                return n.value;
+            }
+            i = if x[n.feature] <= n.threshold { n.left } else { n.right };
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// Exhaustive variance-reduction split over a random feature subset.
+/// For binary features (the selector bits) the only candidate threshold
+/// is 0.5; continuous profile features get midpoint candidates.
+fn best_split(
+    x: &[Vec<f64>],
+    y: &[f64],
+    rows: &[usize],
+    cfg: &TreeConfig,
+    rng: &mut Rng,
+) -> Option<(usize, f64)> {
+    let n_features = x[0].len();
+    let mtry = cfg.mtry.unwrap_or(n_features).min(n_features).max(1);
+    // sample features without replacement (partial Fisher–Yates)
+    let mut feats: Vec<usize> = (0..n_features).collect();
+    for i in 0..mtry {
+        let j = rng.range(i, n_features);
+        feats.swap(i, j);
+    }
+
+    let total: f64 = rows.iter().map(|&r| y[r]).sum();
+    let total_sq: f64 = rows.iter().map(|&r| y[r] * y[r]).sum();
+    let n = rows.len() as f64;
+    let base_sse = total_sq - total * total / n;
+
+    let mut best: Option<(usize, f64, f64)> = None; // (feat, thr, gain)
+    for &feat in &feats[..mtry] {
+        // candidate thresholds: midpoints of sorted unique values
+        let mut vals: Vec<f64> = rows.iter().map(|&r| x[r][feat]).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vals.dedup();
+        if vals.len() < 2 {
+            continue;
+        }
+        // incremental left/right statistics over the sorted rows
+        let mut sorted: Vec<usize> = rows.to_vec();
+        sorted.sort_by(|&a, &b| x[a][feat].partial_cmp(&x[b][feat]).unwrap());
+        let mut lsum = 0.0;
+        let mut lsq = 0.0;
+        let mut lcount = 0usize;
+        let mut vi = 0;
+        for w in 0..sorted.len() - 1 {
+            let r = sorted[w];
+            lsum += y[r];
+            lsq += y[r] * y[r];
+            lcount += 1;
+            // split only between distinct feature values
+            if x[sorted[w]][feat] == x[sorted[w + 1]][feat] {
+                continue;
+            }
+            while vi + 1 < vals.len() && vals[vi + 1] <= x[sorted[w]][feat] {
+                vi += 1;
+            }
+            let thr = 0.5 * (x[sorted[w]][feat] + x[sorted[w + 1]][feat]);
+            let rcount = rows.len() - lcount;
+            if lcount < cfg.min_samples_leaf || rcount < cfg.min_samples_leaf {
+                continue;
+            }
+            let rsum = total - lsum;
+            let rsq = total_sq - lsq;
+            let sse = (lsq - lsum * lsum / lcount as f64)
+                + (rsq - rsum * rsum / rcount as f64);
+            let gain = base_sse - sse;
+            if gain > best.map(|(_, _, g)| g).unwrap_or(1e-12) {
+                best = Some((feat, thr, gain));
+            }
+        }
+    }
+    best.map(|(f, t, _)| (f, t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    fn rng() -> Rng {
+        Rng::seed_from_u64(0)
+    }
+
+    #[test]
+    fn fits_a_step_function_exactly() {
+        let x: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..20).map(|i| if i < 10 { 1.0 } else { 5.0 }).collect();
+        let rows: Vec<usize> = (0..20).collect();
+        let t = Tree::fit(&x, &y, &rows, &TreeConfig { min_samples_leaf: 1, ..Default::default() }, &mut rng());
+        assert_eq!(t.predict(&[3.0]), 1.0);
+        assert_eq!(t.predict(&[15.0]), 5.0);
+    }
+
+    #[test]
+    fn constant_target_is_single_leaf() {
+        let x: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64]).collect();
+        let y = vec![2.5; 8];
+        let rows: Vec<usize> = (0..8).collect();
+        let t = Tree::fit(&x, &y, &rows, &TreeConfig::default(), &mut rng());
+        assert_eq!(t.n_nodes(), 1);
+        assert_eq!(t.predict(&[100.0]), 2.5);
+    }
+
+    #[test]
+    fn binary_features_split_on_half() {
+        // y = 3*b0 + b1 over all 4 binary combos, replicated
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..5 {
+            for b0 in 0..2 {
+                for b1 in 0..2 {
+                    x.push(vec![b0 as f64, b1 as f64]);
+                    y.push(3.0 * b0 as f64 + b1 as f64);
+                }
+            }
+        }
+        let rows: Vec<usize> = (0..x.len()).collect();
+        let t = Tree::fit(&x, &y, &rows, &TreeConfig { min_samples_leaf: 1, ..Default::default() }, &mut rng());
+        for b0 in 0..2 {
+            for b1 in 0..2 {
+                let want = 3.0 * b0 as f64 + b1 as f64;
+                assert!((t.predict(&[b0 as f64, b1 as f64]) - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn respects_min_samples_leaf() {
+        let x: Vec<Vec<f64>> = (0..6).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = vec![0.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let rows: Vec<usize> = (0..6).collect();
+        let t = Tree::fit(
+            &x,
+            &y,
+            &rows,
+            &TreeConfig { min_samples_leaf: 3, ..Default::default() },
+            &mut rng(),
+        );
+        // only the 3/3 split is admissible
+        assert!(t.n_nodes() <= 3);
+    }
+}

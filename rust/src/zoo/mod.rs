@@ -1,0 +1,557 @@
+//! Model zoo: Table-3 profiles, validation score vectors, artifact paths.
+//!
+//! The zoo is materialised by `make artifacts` (python, build-time) into
+//! `artifacts/zoo_manifest.json` + `artifacts/val_scores.json` +
+//! `artifacts/models/*.hlo.txt`. This module is the rust view of it: the
+//! profile matrix `V ∈ R^{n×m}` the composer searches over, and the
+//! per-model validation scores the accuracy profiler `f_a(V, b)`
+//! aggregates (paper Eq. 5).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::json::Value;
+use crate::{Error, Result};
+
+/// One zoo model's profile — the fields of the paper's Table 3.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub index: usize,
+    pub id: String,
+    pub lead: usize,
+    pub width: usize,
+    pub blocks: usize,
+    pub depth: usize,
+    pub cardinality: usize,
+    pub macs: u64,
+    pub params: u64,
+    pub memory_bytes: u64,
+    pub input_modality: String,
+    pub input_len: usize,
+    pub val_auc: f64,
+    /// True when real weights were trained and HLO artifacts exist.
+    pub trained: bool,
+    /// batch-size (as string key) → HLO path relative to the artifact dir.
+    pub artifacts: HashMap<String, String>,
+}
+
+impl ModelProfile {
+    fn from_json(v: &Value) -> Result<Self> {
+        let num = |k: &str| -> Result<f64> {
+            v.req(k)?.as_f64().ok_or_else(|| Error::json(format!("field '{k}' not numeric")))
+        };
+        let mut artifacts = HashMap::new();
+        if let Some(obj) = v.req("artifacts")?.as_obj() {
+            for (k, p) in obj {
+                artifacts.insert(
+                    k.clone(),
+                    p.as_str().ok_or_else(|| Error::json("artifact path not a string"))?.to_string(),
+                );
+            }
+        }
+        Ok(ModelProfile {
+            index: num("index")? as usize,
+            id: v.req("id")?.as_str().ok_or_else(|| Error::json("id"))?.to_string(),
+            lead: num("lead")? as usize,
+            width: num("width")? as usize,
+            blocks: num("blocks")? as usize,
+            depth: num("depth")? as usize,
+            cardinality: num("cardinality")? as usize,
+            macs: num("macs")? as u64,
+            params: num("params")? as u64,
+            memory_bytes: num("memory_bytes")? as u64,
+            input_modality: v
+                .req("input_modality")?
+                .as_str()
+                .ok_or_else(|| Error::json("input_modality"))?
+                .to_string(),
+            input_len: num("input_len")? as usize,
+            val_auc: num("val_auc")?,
+            trained: v.req("trained")?.as_bool().ok_or_else(|| Error::json("trained"))?,
+            artifacts,
+        })
+    }
+    /// Feature vector for the surrogate models: the profile columns that
+    /// describe model capacity/cost (not the binary selector itself).
+    pub fn feature_row(&self) -> Vec<f64> {
+        vec![
+            self.lead as f64,
+            (self.width as f64).log2(),
+            (self.blocks as f64).log2(),
+            (self.macs as f64).ln(),
+            self.val_auc,
+        ]
+    }
+
+    pub fn servable(&self) -> bool {
+        self.trained && !self.artifacts.is_empty()
+    }
+
+    pub fn artifact_for_batch(&self, batch: usize) -> Option<&str> {
+        self.artifacts.get(&batch.to_string()).map(|s| s.as_str())
+    }
+}
+
+/// Synthetic-generator calibration constants (mirror of python data.py).
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    pub fs: u32,
+    pub lead_amp: Vec<f64>,
+    pub lead_noise: Vec<f64>,
+    pub hr_base: f64,
+    pub hr_sev_gain: f64,
+    pub hrv_base: f64,
+    pub hrv_stable_gain: f64,
+    pub st_depression: f64,
+    pub noise_base: f64,
+    pub noise_sev_gain: f64,
+}
+
+impl Calibration {
+    fn from_json(v: &Value) -> Result<Self> {
+        let num = |k: &str| -> Result<f64> {
+            v.req(k)?.as_f64().ok_or_else(|| Error::json(format!("calibration '{k}'")))
+        };
+        Ok(Calibration {
+            fs: num("fs")? as u32,
+            lead_amp: v.req("lead_amp")?.as_f64_vec()?,
+            lead_noise: v.req("lead_noise")?.as_f64_vec()?,
+            hr_base: num("hr_base")?,
+            hr_sev_gain: num("hr_sev_gain")?,
+            hrv_base: num("hrv_base")?,
+            hrv_stable_gain: num("hrv_stable_gain")?,
+            st_depression: num("st_depression")?,
+            noise_base: num("noise_base")?,
+            noise_sev_gain: num("noise_sev_gain")?,
+        })
+    }
+}
+
+/// Fig.-13 window-sweep artifacts: one model lowered at several input
+/// lengths (`length → HLO path`).
+#[derive(Debug, Clone)]
+pub struct WindowSweep {
+    pub model_id: String,
+    pub artifacts: HashMap<String, String>,
+}
+
+/// `artifacts/zoo_manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub clip_len: usize,
+    pub fs: u32,
+    pub batch_sizes: Vec<usize>,
+    pub n_models: usize,
+    pub calibration: Calibration,
+    pub val_n: usize,
+    pub window_sweep: Option<WindowSweep>,
+    pub models: Vec<ModelProfile>,
+}
+
+impl Manifest {
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let v = Value::parse(text)?;
+        let num = |k: &str| -> Result<f64> {
+            v.req(k)?.as_f64().ok_or_else(|| Error::json(format!("manifest '{k}'")))
+        };
+        let models = v
+            .req("models")?
+            .as_arr()
+            .ok_or_else(|| Error::json("models not an array"))?
+            .iter()
+            .map(ModelProfile::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let window_sweep = match v.get("window_sweep") {
+            Some(Value::Obj(o)) => {
+                let mut artifacts = HashMap::new();
+                if let Some(a) = o.get("artifacts").and_then(|a| a.as_obj()) {
+                    for (k, p) in a {
+                        artifacts.insert(
+                            k.clone(),
+                            p.as_str().ok_or_else(|| Error::json("sweep path"))?.to_string(),
+                        );
+                    }
+                }
+                Some(WindowSweep {
+                    model_id: o
+                        .get("model_id")
+                        .and_then(|m| m.as_str())
+                        .ok_or_else(|| Error::json("sweep model_id"))?
+                        .to_string(),
+                    artifacts,
+                })
+            }
+            _ => None,
+        };
+        Ok(Manifest {
+            version: num("version")? as u32,
+            clip_len: num("clip_len")? as usize,
+            fs: num("fs")? as u32,
+            batch_sizes: v
+                .req("batch_sizes")?
+                .as_f64_vec()?
+                .into_iter()
+                .map(|b| b as usize)
+                .collect(),
+            n_models: num("n_models")? as usize,
+            calibration: Calibration::from_json(v.req("calibration")?)?,
+            val_n: num("val_n")? as usize,
+            window_sweep,
+            models,
+        })
+    }
+}
+
+/// `artifacts/val_scores.json`: per-model scores on the shared
+/// patient-held-out validation split.
+#[derive(Debug, Clone)]
+pub struct ValScores {
+    pub labels: Vec<u8>,
+    pub model_ids: Vec<String>,
+    pub scores: Vec<Vec<f64>>,
+}
+
+impl ValScores {
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let v = Value::parse(text)?;
+        Ok(ValScores {
+            labels: v
+                .req("labels")?
+                .as_f64_vec()?
+                .into_iter()
+                .map(|l| l as u8)
+                .collect(),
+            model_ids: v
+                .req("model_ids")?
+                .as_arr()
+                .ok_or_else(|| Error::json("model_ids"))?
+                .iter()
+                .map(|s| {
+                    s.as_str().map(String::from).ok_or_else(|| Error::json("model_id not str"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            scores: v
+                .req("scores")?
+                .as_arr()
+                .ok_or_else(|| Error::json("scores"))?
+                .iter()
+                .map(|row| row.as_f64_vec())
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+}
+
+/// The loaded zoo: manifest + scores + artifact root.
+#[derive(Debug, Clone)]
+pub struct Zoo {
+    pub root: PathBuf,
+    pub manifest: Manifest,
+    pub val: ValScores,
+}
+
+impl Zoo {
+    /// Load from an artifact directory (usually `artifacts/`).
+    pub fn load(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        let manifest =
+            Manifest::from_json_text(&std::fs::read_to_string(root.join("zoo_manifest.json"))?)?;
+        let val =
+            ValScores::from_json_text(&std::fs::read_to_string(root.join("val_scores.json"))?)?;
+        let zoo = Zoo { root, manifest, val };
+        zoo.validate()?;
+        Ok(zoo)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let n = self.manifest.models.len();
+        if n != self.manifest.n_models {
+            return Err(Error::artifact("manifest n_models mismatch"));
+        }
+        if self.val.scores.len() != n {
+            return Err(Error::artifact("val_scores rows != n_models"));
+        }
+        for (i, (m, s)) in self.manifest.models.iter().zip(&self.val.scores).enumerate() {
+            if m.index != i {
+                return Err(Error::artifact(format!("model {} index out of order", m.id)));
+            }
+            if s.len() != self.val.labels.len() {
+                return Err(Error::artifact(format!("score row {} length mismatch", m.id)));
+            }
+            if m.trained && m.artifacts.is_empty() {
+                return Err(Error::artifact(format!("trained model {} has no artifacts", m.id)));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn n(&self) -> usize {
+        self.manifest.models.len()
+    }
+
+    pub fn model(&self, index: usize) -> &ModelProfile {
+        &self.manifest.models[index]
+    }
+
+    pub fn by_id(&self, id: &str) -> Option<&ModelProfile> {
+        self.manifest.models.iter().find(|m| m.id == id)
+    }
+
+    /// Indices of models with compiled artifacts (deployable subset).
+    pub fn servable_indices(&self) -> Vec<usize> {
+        self.manifest
+            .models
+            .iter()
+            .filter(|m| m.servable())
+            .map(|m| m.index)
+            .collect()
+    }
+
+    /// Absolute path of a model's HLO artifact for a batch size.
+    pub fn artifact_path(&self, index: usize, batch: usize) -> Result<PathBuf> {
+        let m = self.model(index);
+        let rel = m.artifact_for_batch(batch).ok_or_else(|| {
+            Error::artifact(format!("model {} has no batch-{} artifact", m.id, batch))
+        })?;
+        Ok(self.root.join(rel))
+    }
+
+    /// The profile matrix V (n × m) as feature rows for surrogates.
+    pub fn profile_matrix(&self) -> Vec<Vec<f64>> {
+        self.manifest.models.iter().map(|m| m.feature_row()).collect()
+    }
+}
+
+/// A model ensemble: the binary selector b ∈ {0,1}^n (paper §3.3.1),
+/// stored as the set of selected indices plus the zoo size.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Selector {
+    n: usize,
+    selected: Vec<usize>, // sorted, unique
+}
+
+impl Selector {
+    pub fn empty(n: usize) -> Self {
+        Selector { n, selected: Vec::new() }
+    }
+
+    pub fn from_indices(n: usize, idx: impl IntoIterator<Item = usize>) -> Self {
+        let mut selected: Vec<usize> = idx.into_iter().filter(|&i| i < n).collect();
+        selected.sort_unstable();
+        selected.dedup();
+        Selector { n, selected }
+    }
+
+    pub fn from_bits(bits: &[bool]) -> Self {
+        Selector {
+            n: bits.len(),
+            selected: bits
+                .iter()
+                .enumerate()
+                .filter(|(_, &b)| b)
+                .map(|(i, _)| i)
+                .collect(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn indices(&self) -> &[usize] {
+        &self.selected
+    }
+
+    pub fn len(&self) -> usize {
+        self.selected.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.selected.is_empty()
+    }
+
+    pub fn contains(&self, i: usize) -> bool {
+        self.selected.binary_search(&i).is_ok()
+    }
+
+    pub fn insert(&mut self, i: usize) {
+        assert!(i < self.n);
+        if let Err(pos) = self.selected.binary_search(&i) {
+            self.selected.insert(pos, i);
+        }
+    }
+
+    pub fn remove(&mut self, i: usize) {
+        if let Ok(pos) = self.selected.binary_search(&i) {
+            self.selected.remove(pos);
+        }
+    }
+
+    pub fn flip(&mut self, i: usize) {
+        if self.contains(i) {
+            self.remove(i)
+        } else {
+            self.insert(i)
+        }
+    }
+
+    pub fn to_bits(&self) -> Vec<bool> {
+        let mut bits = vec![false; self.n];
+        for &i in &self.selected {
+            bits[i] = true;
+        }
+        bits
+    }
+
+    /// Binary feature vector (f64) — surrogate model input.
+    pub fn to_f64(&self) -> Vec<f64> {
+        self.to_bits().into_iter().map(|b| b as u8 as f64).collect()
+    }
+
+    /// Manhattan (Hamming) distance between two selectors.
+    pub fn hamming(&self, other: &Selector) -> usize {
+        assert_eq!(self.n, other.n);
+        let a = self.to_bits();
+        let b = other.to_bits();
+        a.iter().zip(&b).filter(|(x, y)| x != y).count()
+    }
+
+    /// Paper Eq. 4 recombination: b = concat(b1[..i], b2[i..]).
+    pub fn recombine(&self, other: &Selector, point: usize) -> Selector {
+        assert_eq!(self.n, other.n);
+        let a = self.to_bits();
+        let b = other.to_bits();
+        let bits: Vec<bool> = (0..self.n)
+            .map(|j| if j < point { a[j] } else { b[j] })
+            .collect();
+        Selector::from_bits(&bits)
+    }
+}
+
+/// Test/bench helpers: synthetic in-memory zoos (no artifact files).
+#[doc(hidden)]
+pub mod testkit {
+    use super::*;
+
+    /// A zoo of `n` profile-only models with a controllable accuracy
+    /// landscape: model i's scores mix an oracle margin with noise so
+    /// val AUC rises with index; MACs also rise with index so accuracy
+    /// and latency trade off, like the real zoo.
+    pub fn toy_zoo(n: usize, n_val: usize, seed: u64) -> Zoo {
+        let mut rng = crate::rng::Rng::seed_from_u64(seed);
+        let labels: Vec<u8> = (0..n_val).map(|_| rng.bool(0.5) as u8).collect();
+        let mut models = Vec::with_capacity(n);
+        let mut scores = Vec::with_capacity(n);
+        for i in 0..n {
+            let strength = 0.4 + 1.6 * (i as f64 / n.max(1) as f64);
+            let row: Vec<f64> = labels
+                .iter()
+                .map(|&l| {
+                    let z = strength * (2.0 * l as f64 - 1.0) + rng.normal();
+                    1.0 / (1.0 + (-z).exp())
+                })
+                .collect();
+            let auc = crate::metrics::roc_auc(&labels, &row);
+            models.push(ModelProfile {
+                index: i,
+                id: format!("m{i}"),
+                lead: i % 3,
+                width: 8 << (i % 4),
+                blocks: 2 << (i % 3),
+                depth: 6,
+                cardinality: 4,
+                macs: 2_000_000 * (i as u64 + 1),
+                params: 10_000 * (i as u64 + 1),
+                memory_bytes: 40_000,
+                input_modality: format!("ECG-lead-{}", i % 3),
+                input_len: 100,
+                val_auc: auc,
+                trained: true,
+                artifacts: [("1".to_string(), format!("models/m{i}_b1.hlo.txt"))]
+                    .into_iter()
+                    .collect(),
+            });
+            scores.push(row);
+        }
+        Zoo {
+            root: std::path::PathBuf::from("/nonexistent-toy-zoo"),
+            manifest: Manifest {
+                version: 1,
+                clip_len: 100,
+                fs: 250,
+                batch_sizes: vec![1],
+                n_models: n,
+                calibration: Calibration {
+                    fs: 250,
+                    lead_amp: vec![0.8, 1.0, 0.6],
+                    lead_noise: vec![1.2, 0.8, 1.5],
+                    hr_base: 95.0,
+                    hr_sev_gain: 75.0,
+                    hrv_base: 0.012,
+                    hrv_stable_gain: 0.09,
+                    st_depression: -0.18,
+                    noise_base: 0.035,
+                    noise_sev_gain: 0.09,
+                },
+                val_n: n_val,
+                window_sweep: None,
+                models,
+            },
+            val: ValScores {
+                labels,
+                model_ids: (0..n).map(|i| format!("m{i}")).collect(),
+                scores,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sel(n: usize, idx: &[usize]) -> Selector {
+        Selector::from_indices(n, idx.iter().copied())
+    }
+
+    #[test]
+    fn selector_roundtrip_bits() {
+        let s = sel(6, &[0, 3, 5]);
+        assert_eq!(Selector::from_bits(&s.to_bits()), s);
+        assert_eq!(s.len(), 3);
+        assert!(s.contains(3) && !s.contains(2));
+    }
+
+    #[test]
+    fn selector_flip_insert_remove() {
+        let mut s = sel(4, &[1]);
+        s.flip(1);
+        assert!(s.is_empty());
+        s.flip(2);
+        s.insert(2); // idempotent
+        assert_eq!(s.indices(), &[2]);
+        s.remove(3); // absent: no-op
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn selector_hamming() {
+        assert_eq!(sel(5, &[0, 1]).hamming(&sel(5, &[1, 2])), 2);
+        assert_eq!(sel(5, &[]).hamming(&sel(5, &[0, 1, 2, 3, 4])), 5);
+    }
+
+    #[test]
+    fn selector_recombination_point_semantics() {
+        let a = sel(4, &[0, 1]);
+        let b = sel(4, &[2, 3]);
+        assert_eq!(a.recombine(&b, 0), b);
+        assert_eq!(a.recombine(&b, 4), a);
+        assert_eq!(a.recombine(&b, 2), sel(4, &[0, 1, 2, 3]));
+    }
+
+    #[test]
+    fn selector_dedup_and_bound_filter() {
+        let s = Selector::from_indices(3, [2, 2, 9, 0]);
+        assert_eq!(s.indices(), &[0, 2]);
+    }
+}

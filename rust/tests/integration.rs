@@ -1,0 +1,236 @@
+//! Integration tests over the real AOT artifacts: zoo → PJRT engine →
+//! serving pipeline → composer, all layers composed.
+//!
+//! Requires `make artifacts` (the repo ships with them built); every
+//! test loads from `<manifest dir>/artifacts`.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use holmes::composer::baselines::best_feasible;
+use holmes::config::{ComposerConfig, SystemConfig};
+use holmes::data;
+use holmes::exp::common::{Method, SearchContext};
+use holmes::ingest::synth::SynthConfig;
+use holmes::profiler::ServiceTimes;
+use holmes::runtime::Engine;
+use holmes::serving::pipeline::{Pipeline, PipelineConfig, Query};
+use holmes::zoo::{Selector, Zoo};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn load_zoo() -> Zoo {
+    Zoo::load(artifacts_dir()).expect("run `make artifacts` first")
+}
+
+#[test]
+fn zoo_loads_and_validates() {
+    let zoo = load_zoo();
+    assert_eq!(zoo.n(), 60);
+    assert!(zoo.servable_indices().len() >= 3);
+    assert_eq!(zoo.val.labels.len(), zoo.manifest.val_n);
+    // Table-3 profile sanity: MACs monotone in width at fixed depth/lead
+    let small = zoo.by_id("lead0_w8_d2").unwrap();
+    let big = zoo.by_id("lead0_w128_d2").unwrap();
+    assert!(big.macs > 10 * small.macs);
+}
+
+#[test]
+fn engine_executes_every_servable_model() {
+    let zoo = load_zoo();
+    let engine = Engine::new(&zoo, 1).unwrap();
+    let clip_len = zoo.manifest.clip_len;
+    let input = vec![0.25f32; clip_len];
+    for &idx in &zoo.servable_indices() {
+        let out = engine.execute_blocking((idx, 1), input.clone()).unwrap();
+        assert_eq!(out.scores.len(), 1, "model {idx}");
+        let p = out.scores[0];
+        assert!((0.0..=1.0).contains(&p), "model {idx} emitted {p}");
+    }
+}
+
+#[test]
+fn batch8_slot0_matches_batch1() {
+    let zoo = load_zoo();
+    let engine = Engine::new(&zoo, 1).unwrap();
+    let clip_len = zoo.manifest.clip_len;
+    let idx = zoo.servable_indices()[0];
+    let clips = data::make_clips(1, clip_len, 5, &SynthConfig::default());
+    let clip = &clips.clips[0][zoo.model(idx).lead];
+
+    let single = engine.execute_blocking((idx, 1), clip.clone()).unwrap().scores[0];
+    let mut padded = vec![0.0f32; 8 * clip_len];
+    padded[..clip_len].copy_from_slice(clip);
+    let batch = engine.execute_blocking((idx, 8), padded).unwrap().scores[0];
+    assert!(
+        (single - batch).abs() < 1e-4,
+        "batch padding changed slot 0: {single} vs {batch}"
+    );
+}
+
+#[test]
+fn pipeline_end_to_end_single_query() {
+    let zoo = load_zoo();
+    let engine = Engine::new(&zoo, 2).unwrap();
+    let members: Vec<usize> = zoo.servable_indices().into_iter().take(3).collect();
+    let n_members = members.len();
+    let ensemble = Selector::from_indices(zoo.n(), members);
+    let pipeline = Pipeline::spawn(&zoo, &engine, PipelineConfig::new(ensemble)).unwrap();
+
+    let clips = data::make_clips(1, zoo.manifest.clip_len, 6, &SynthConfig::default());
+    let pred = pipeline
+        .query(Query {
+            patient: 3,
+            window_id: 9,
+            sim_end: 30.0,
+            leads: clips.clips[0].clone(),
+            emitted: Instant::now(),
+        })
+        .unwrap();
+    assert_eq!(pred.patient, 3);
+    assert_eq!(pred.window_id, 9);
+    assert_eq!(pred.n_models, n_members);
+    assert!((0.0..=1.0).contains(&pred.score));
+    assert!(pred.e2e.as_secs_f64() > 0.0);
+    assert!(pred.queueing <= pred.e2e);
+    let snap = pipeline.telemetry().snapshot();
+    assert_eq!(snap.queries, 1);
+    assert_eq!(snap.model_jobs as usize, n_members);
+}
+
+#[test]
+fn pipeline_handles_concurrent_burst() {
+    let zoo = load_zoo();
+    let engine = Engine::new(&zoo, 2).unwrap();
+    let members: Vec<usize> = zoo.servable_indices().into_iter().take(2).collect();
+    let ensemble = Selector::from_indices(zoo.n(), members);
+    let pipeline = Pipeline::spawn(&zoo, &engine, PipelineConfig::new(ensemble)).unwrap();
+    let clips = data::make_clips(4, zoo.manifest.clip_len, 8, &SynthConfig::default());
+
+    let n = 16;
+    let mut replies = Vec::new();
+    for i in 0..n {
+        replies.push(
+            pipeline
+                .submit(Query {
+                    patient: i,
+                    window_id: 0,
+                    sim_end: 0.0,
+                    leads: clips.clips[i % clips.len()].clone(),
+                    emitted: Instant::now(),
+                })
+                .unwrap(),
+        );
+    }
+    let mut got = 0;
+    for r in replies {
+        let p = r.recv().expect("prediction delivered exactly once");
+        assert!((0.0..=1.0).contains(&p.score));
+        got += 1;
+    }
+    assert_eq!(got, n);
+    assert_eq!(pipeline.telemetry().snapshot().queries, n as u64);
+}
+
+#[test]
+fn analytic_profiler_calibrates_against_engine() {
+    let zoo = load_zoo();
+    let engine = Engine::new(&zoo, 1).unwrap();
+    let times = ServiceTimes::calibrate(&zoo, &engine, 3).unwrap();
+    // measured times must be positive and roughly monotone in MACs
+    let servable = zoo.servable_indices();
+    let small = servable.iter().min_by_key(|&&i| zoo.model(i).macs).copied().unwrap();
+    let big = servable.iter().max_by_key(|&&i| zoo.model(i).macs).copied().unwrap();
+    assert!(times.seconds[small] > 0.0);
+    assert!(
+        times.seconds[big] > times.seconds[small],
+        "bigger model should be slower: {} vs {}",
+        times.seconds[big],
+        times.seconds[small]
+    );
+    // untrained profiles get extrapolated times, also positive
+    for (i, t) in times.seconds.iter().enumerate() {
+        assert!(*t > 0.0, "model {i} got non-positive service time");
+    }
+}
+
+#[test]
+fn composer_over_real_zoo_respects_budget_and_beats_lf() {
+    let zoo = load_zoo();
+    let system = SystemConfig { gpus: 2, patients: 32, window_s: 30.0 };
+    let ctx = SearchContext::new(&zoo, system);
+    let cfg = ComposerConfig::default();
+    let budget = 0.2;
+    let holmes = ctx.run(Method::Holmes, budget, 1, &cfg);
+    let lf = ctx.run(Method::Lf, budget, 1, &cfg);
+    let hb = best_feasible(&holmes.profile_set, budget);
+    assert!(hb.latency <= budget, "HOLMES best is infeasible: {}", hb.latency);
+    assert!(
+        hb.accuracy.roc_auc >= lf.best.accuracy.roc_auc - 1e-9,
+        "HOLMES ({}) worse than LF ({})",
+        hb.accuracy.roc_auc,
+        lf.best.accuracy.roc_auc
+    );
+}
+
+#[test]
+fn window_sweep_artifacts_execute() {
+    let zoo = load_zoo();
+    let Some(sweep) = &zoo.manifest.window_sweep else {
+        panic!("artifacts built without --window-sweep");
+    };
+    // smallest length only (keep the test fast)
+    let mut lengths: Vec<usize> =
+        sweep.artifacts.keys().filter_map(|k| k.parse().ok()).collect();
+    lengths.sort_unstable();
+    let len = lengths[0];
+    let path = zoo.root.join(&sweep.artifacts[&len.to_string()]);
+    let times = holmes::runtime::bench_hlo_file(&path, len, 2).unwrap();
+    assert_eq!(times.len(), 2);
+    assert!(times[0].as_nanos() > 0);
+}
+
+#[test]
+fn python_rust_numeric_parity() {
+    // the probe `aot.py` wrote: same input, same artifact, same score
+    let dir = artifacts_dir();
+    let text = std::fs::read_to_string(dir.join("parity.json")).expect("parity probe");
+    let v = holmes::json::Value::parse(&text).unwrap();
+    let model_id = v.req("model_id").unwrap().as_str().unwrap().to_string();
+    let input: Vec<f32> = v
+        .req("input")
+        .unwrap()
+        .as_f64_vec()
+        .unwrap()
+        .into_iter()
+        .map(|x| x as f32)
+        .collect();
+    let expected = v.req("expected_score").unwrap().as_f64().unwrap();
+    let tol = v.req("tolerance").unwrap().as_f64().unwrap();
+
+    let zoo = load_zoo();
+    let idx = zoo.by_id(&model_id).unwrap().index;
+    let engine = Engine::new(&zoo, 1).unwrap();
+    let got = engine.execute_blocking((idx, 1), input).unwrap().scores[0] as f64;
+    assert!(
+        (got - expected).abs() < tol,
+        "python {expected:.6} vs rust {got:.6} for {model_id}"
+    );
+}
+
+#[test]
+fn cli_binary_smoke() {
+    let exe = env!("CARGO_BIN_EXE_holmes");
+    let out = std::process::Command::new(exe)
+        .arg("--artifacts")
+        .arg(artifacts_dir())
+        .arg("zoo")
+        .output()
+        .expect("binary runs");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("lead1_w16_d4"));
+    assert!(text.contains("60 models"));
+}

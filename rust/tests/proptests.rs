@@ -1,0 +1,344 @@
+//! Property-based tests (hand-rolled: proptest is unavailable offline).
+//! Each property runs over many randomly generated instances from the
+//! in-tree [`holmes::rng`]; failures print the seed for reproduction.
+
+use holmes::composer::baselines::best_feasible;
+use holmes::composer::{explore, Delta};
+use holmes::config::{ComposerConfig, SystemConfig};
+use holmes::exp::common::{Method, SearchContext};
+use holmes::ingest::{Frame, Modality};
+use holmes::json::Value;
+use holmes::metrics::{accuracy_at, f1_at, pr_auc, r2, roc_auc};
+use holmes::netcalc::{queueing_bound, ArrivalCurve, ServiceCurve};
+use holmes::rng::Rng;
+use holmes::serving::aggregator::WindowAggregator;
+use holmes::surrogate::{ForestConfig, RandomForest, Surrogate};
+use holmes::zoo::{testkit, Selector};
+
+const CASES: usize = 40;
+
+fn rngs() -> impl Iterator<Item = (u64, Rng)> {
+    (0..CASES as u64).map(|s| (s, Rng::seed_from_u64(s * 97 + 5)))
+}
+
+// ---------------------------------------------------------------------------
+// Selector algebra
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_selector_bits_roundtrip() {
+    for (seed, mut rng) in rngs() {
+        let n = rng.range(1, 80);
+        let bits: Vec<bool> = (0..n).map(|_| rng.bool(0.3)).collect();
+        let s = Selector::from_bits(&bits);
+        assert_eq!(s.to_bits(), bits, "seed {seed}");
+        assert_eq!(s.len(), bits.iter().filter(|&&b| b).count());
+    }
+}
+
+#[test]
+fn prop_recombination_is_prefix_suffix() {
+    for (seed, mut rng) in rngs() {
+        let n = rng.range(2, 50);
+        let a: Vec<bool> = (0..n).map(|_| rng.bool(0.5)).collect();
+        let b: Vec<bool> = (0..n).map(|_| rng.bool(0.5)).collect();
+        let point = rng.range(0, n + 1);
+        let r = Selector::from_bits(&a).recombine(&Selector::from_bits(&b), point);
+        let bits = r.to_bits();
+        for j in 0..n {
+            let want = if j < point { a[j] } else { b[j] };
+            assert_eq!(bits[j], want, "seed {seed}, j {j}, point {point}");
+        }
+    }
+}
+
+#[test]
+fn prop_hamming_is_a_metric() {
+    for (seed, mut rng) in rngs() {
+        let n = rng.range(1, 40);
+        let mk = |rng: &mut Rng| {
+            let bits: Vec<bool> = (0..n).map(|_| rng.bool(0.4)).collect();
+            Selector::from_bits(&bits)
+        };
+        let (a, b, c) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        assert_eq!(a.hamming(&a), 0, "seed {seed}");
+        assert_eq!(a.hamming(&b), b.hamming(&a));
+        assert!(a.hamming(&c) <= a.hamming(&b) + b.hamming(&c), "triangle, seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Explorer (Algorithm 2)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_explore_unique_and_novel() {
+    for (seed, mut rng) in rngs() {
+        let n = rng.range(6, 64);
+        let n_seed_sel = rng.range(1, 8);
+        let b_set: Vec<Selector> = (0..n_seed_sel)
+            .map(|_| {
+                let bits: Vec<bool> = (0..n).map(|_| rng.bool(0.2)).collect();
+                Selector::from_bits(&bits)
+            })
+            .collect();
+        let m = rng.range(1, 40);
+        let s = rng.range(1, 6);
+        let out = explore(&b_set, n, m, s, 0.8, 0.5, None, &mut rng);
+        assert!(out.len() <= m);
+        let mut seen = std::collections::HashSet::new();
+        for c in &out {
+            assert!(seen.insert(c.clone()), "duplicate in B', seed {seed}");
+            assert!(!b_set.contains(c), "candidate already profiled, seed {seed}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Composer invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_composer_best_is_feasible_when_possible() {
+    for case in 0..8u64 {
+        let zoo = testkit::toy_zoo(20, 120, case);
+        let system = SystemConfig { gpus: 2, patients: 16, window_s: 30.0 };
+        let ctx = SearchContext::new(&zoo, system);
+        let cfg = ComposerConfig {
+            iterations: 5,
+            warm_start: 8,
+            explore_samples: 24,
+            top_k: 4,
+            seed: case,
+            ..Default::default()
+        };
+        let budget = 0.15;
+        let r = ctx.run(Method::Holmes, budget, case, &cfg);
+        let any_feasible = r.profile_set.iter().any(|p| p.latency <= budget);
+        let best = best_feasible(&r.profile_set, budget);
+        if any_feasible {
+            assert!(best.latency <= budget, "case {case}: infeasible best returned");
+        }
+        // the returned best maximises hard-δ utility over the profile set
+        for p in &r.profile_set {
+            assert!(
+                p.utility(budget, Delta::HardStep) <= best.utility(budget, Delta::HardStep) + 1e-12,
+                "case {case}: profile set contains a better point"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_trajectory_incumbent_utility_monotone() {
+    for case in 0..6u64 {
+        let zoo = testkit::toy_zoo(16, 100, case + 50);
+        let ctx = SearchContext::new(&zoo, SystemConfig { gpus: 2, patients: 16, window_s: 30.0 });
+        let cfg = ComposerConfig { iterations: 4, warm_start: 6, seed: case, ..Default::default() };
+        let r = ctx.run(Method::Holmes, 0.2, case, &cfg);
+        let traj = r.trajectory(0.2, Delta::Linear(1.0));
+        let mut last = f64::NEG_INFINITY;
+        for (acc, lat) in traj {
+            let u = holmes::composer::utility(acc, lat, 0.2, Delta::Linear(1.0));
+            assert!(u >= last - 1e-12, "incumbent utility decreased");
+            last = u;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Network calculus
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_netcalc_bound_dominates_fifo_simulation() {
+    for (seed, mut rng) in rngs() {
+        // random bursty trace
+        let bursts = rng.range(2, 8);
+        let mut ts: Vec<f64> = Vec::new();
+        for b in 0..bursts {
+            let t0 = b as f64 * rng.range_f64(0.5, 3.0);
+            for k in 0..rng.range(1, 12) {
+                ts.push(t0 + k as f64 * 1e-4);
+            }
+        }
+        let mu = rng.range_f64(5.0, 50.0);
+        let service = 1.0 / mu;
+        // FIFO simulation
+        let mut sorted = ts.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut free_at: f64 = 0.0;
+        let mut max_delay: f64 = 0.0;
+        for &t in &sorted {
+            let done = free_at.max(t) + service;
+            max_delay = max_delay.max(done - t);
+            free_at = done;
+        }
+        let ac = ArrivalCurve::from_timestamps_exact(&ts);
+        let bound = queueing_bound(&ac, &ServiceCurve::new(mu, service));
+        assert!(
+            bound + 1e-9 >= max_delay,
+            "seed {seed}: bound {bound} < simulated {max_delay}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Aggregator
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_aggregator_windows_partition_the_stream() {
+    for (seed, mut rng) in rngs() {
+        let window = rng.range(2, 50);
+        let n_frames = window * rng.range(1, 6) + rng.range(0, window);
+        let mut agg = WindowAggregator::new(0, window);
+        let mut emitted: Vec<Vec<f32>> = Vec::new();
+        let mut sent: Vec<f32> = Vec::new();
+        for i in 0..n_frames {
+            let v = i as f32;
+            sent.push(v);
+            let frame = Frame {
+                patient: 0,
+                modality: Modality::Ecg,
+                sim_time: i as f64,
+                values: vec![v, v, v],
+            };
+            if let Some(w) = agg.push(&frame) {
+                emitted.push(w.leads[0].clone());
+            }
+        }
+        // windows must partition the prefix of the stream, in order
+        let flat: Vec<f32> = emitted.iter().flatten().copied().collect();
+        assert_eq!(flat.len(), (n_frames / window) * window, "seed {seed}");
+        assert_eq!(&sent[..flat.len()], &flat[..], "seed {seed}: windows overlap or skip");
+        for w in &emitted {
+            assert_eq!(w.len(), window);
+        }
+        assert_eq!(agg.fill(), n_frames % window);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metrics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_auc_invariant_under_monotone_transform() {
+    for (seed, mut rng) in rngs() {
+        let n = rng.range(4, 200);
+        let labels: Vec<u8> = (0..n).map(|_| rng.bool(0.5) as u8).collect();
+        let scores: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let transformed: Vec<f64> = scores.iter().map(|s| (3.0 * s + 1.0).exp()).collect();
+        let a = roc_auc(&labels, &scores);
+        let b = roc_auc(&labels, &transformed);
+        assert!((a - b).abs() < 1e-12, "seed {seed}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn prop_metrics_bounded() {
+    for (seed, mut rng) in rngs() {
+        let n = rng.range(2, 150);
+        let labels: Vec<u8> = (0..n).map(|_| rng.bool(0.4) as u8).collect();
+        let scores: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        for v in [
+            roc_auc(&labels, &scores),
+            pr_auc(&labels, &scores),
+            f1_at(&labels, &scores, 0.5),
+            accuracy_at(&labels, &scores, 0.5),
+        ] {
+            assert!((0.0..=1.0 + 1e-12).contains(&v), "seed {seed}: metric {v} out of bounds");
+        }
+        assert!(r2(&scores, &scores) > 1.0 - 1e-12);
+    }
+}
+
+#[test]
+fn prop_auc_complement_symmetry() {
+    // AUC(y, s) + AUC(y, -s) == 1 when there are no ties
+    for (seed, mut rng) in rngs() {
+        let n = rng.range(4, 100);
+        let labels: Vec<u8> = (0..n).map(|i| (i % 2) as u8).collect();
+        let scores: Vec<f64> = (0..n).map(|i| i as f64 + rng.f64() * 0.5).collect();
+        let neg: Vec<f64> = scores.iter().map(|s| -s).collect();
+        let sum = roc_auc(&labels, &scores) + roc_auc(&labels, &neg);
+        assert!((sum - 1.0).abs() < 1e-9, "seed {seed}: {sum}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Surrogate
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_forest_prediction_within_target_range() {
+    for case in 0..10u64 {
+        let mut rng = Rng::seed_from_u64(case);
+        let n = rng.range(20, 120);
+        let d = rng.range(2, 10);
+        let x: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.range_f64(-3.0, 7.0)).collect();
+        let mut rf = RandomForest::new(ForestConfig { n_trees: 15, seed: case, ..Default::default() });
+        rf.fit(&x, &y);
+        let lo = y.iter().copied().fold(f64::INFINITY, f64::min);
+        let hi = y.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        for _ in 0..20 {
+            let q: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+            let p = rf.predict(&q);
+            assert!(
+                p >= lo - 1e-9 && p <= hi + 1e-9,
+                "case {case}: prediction {p} outside [{lo}, {hi}]"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Value {
+    match if depth == 0 { rng.range(0, 4) } else { rng.range(0, 6) } {
+        0 => Value::Null,
+        1 => Value::Bool(rng.bool(0.5)),
+        2 => Value::Num((rng.range_f64(-1e6, 1e6) * 100.0).round() / 100.0),
+        3 => {
+            let n = rng.range(0, 12);
+            Value::Str((0..n).map(|_| char::from(rng.range(32, 127) as u8)).collect())
+        }
+        4 => Value::Arr((0..rng.range(0, 5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Value::Obj(
+            (0..rng.range(0, 5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    for (seed, mut rng) in rngs() {
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = Value::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(back, v, "seed {seed}: {text}");
+    }
+}
+
+#[test]
+fn prop_frame_json_roundtrip() {
+    for (seed, mut rng) in rngs() {
+        let f = Frame {
+            patient: rng.range(0, 1000),
+            modality: [Modality::Ecg, Modality::Vitals, Modality::Labs][rng.range(0, 3)],
+            sim_time: (rng.range_f64(0.0, 1e5) * 1000.0).round() / 1000.0,
+            values: (0..rng.range(1, 9)).map(|_| (rng.f64() * 100.0).round() as f32 / 4.0).collect(),
+        };
+        let g = Frame::from_json(&Value::parse(&f.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(g.patient, f.patient, "seed {seed}");
+        assert_eq!(g.modality, f.modality);
+        assert_eq!(g.values, f.values);
+    }
+}

@@ -1,0 +1,150 @@
+//! Cross-language / cross-path accuracy agreement (DESIGN.md §6): the
+//! compiled HLO models, fed rust-generated ECG through the *serving
+//! path*, must reproduce the validation accuracy the python build
+//! reported — proving generator parity (python data.py ↔ rust synth)
+//! and numeric parity (ref path ↔ Pallas path ↔ PJRT execution).
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use holmes::data;
+use holmes::ingest::synth::SynthConfig;
+use holmes::metrics::roc_auc;
+use holmes::profiler::{AccuracyProfiler, ValidationAccuracyProfiler};
+use holmes::runtime::Engine;
+use holmes::serving::pipeline::{Pipeline, PipelineConfig, Query};
+use holmes::zoo::{Selector, Zoo};
+
+fn load_zoo() -> Zoo {
+    Zoo::load(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+        .expect("run `make artifacts` first")
+}
+
+/// Serve `n` fresh rust-synth clips through the pipeline; return
+/// (labels, ensemble scores).
+fn serve_cohort(
+    zoo: &Zoo,
+    engine: &Engine,
+    ensemble: &Selector,
+    n: usize,
+    seed: u64,
+) -> (Vec<u8>, Vec<f64>) {
+    let cfg = SynthConfig::from(&zoo.manifest.calibration);
+    let set = data::make_clips(n, zoo.manifest.clip_len, seed, &cfg);
+    let pipeline = Pipeline::spawn(zoo, engine, PipelineConfig::new(ensemble.clone())).unwrap();
+    let mut replies = Vec::with_capacity(n);
+    for (i, clip) in set.clips.iter().enumerate() {
+        replies.push(
+            pipeline
+                .submit(Query {
+                    patient: i,
+                    window_id: 0,
+                    sim_end: 0.0,
+                    leads: clip.clone(),
+                    emitted: Instant::now(),
+                })
+                .unwrap(),
+        );
+    }
+    let mut scores = vec![0.0f64; n];
+    let mut seen = vec![false; n];
+    for (i, r) in replies.into_iter().enumerate() {
+        let p = r.recv().expect("prediction");
+        scores[i] = p.score;
+        seen[i] = true;
+    }
+    assert!(seen.iter().all(|&s| s), "every query answered exactly once");
+    (set.labels, scores)
+}
+
+#[test]
+fn served_single_model_auc_matches_build_time_validation() {
+    let zoo = load_zoo();
+    let engine = Engine::new(&zoo, 2).unwrap();
+    // best trained model per the manifest
+    let best = zoo
+        .manifest
+        .models
+        .iter()
+        .filter(|m| m.servable())
+        .max_by(|a, b| a.val_auc.partial_cmp(&b.val_auc).unwrap())
+        .unwrap();
+    let ensemble = Selector::from_indices(zoo.n(), [best.index]);
+    let (labels, scores) = serve_cohort(&zoo, &engine, &ensemble, 150, 991);
+    let served_auc = roc_auc(&labels, &scores);
+    assert!(
+        (served_auc - best.val_auc).abs() < 0.10,
+        "served AUC {served_auc:.4} vs build-time {:.4} for {}",
+        best.val_auc,
+        best.id
+    );
+    assert!(served_auc > 0.85, "served AUC degenerate: {served_auc}");
+}
+
+#[test]
+fn served_ensemble_tracks_profiled_accuracy() {
+    let zoo = load_zoo();
+    let engine = Engine::new(&zoo, 2).unwrap();
+    // one trained model per lead (cross-modality bagging like the paper)
+    let mut members = Vec::new();
+    for lead in 0..3 {
+        let m = zoo
+            .manifest
+            .models
+            .iter()
+            .filter(|m| m.servable() && m.lead == lead)
+            .max_by(|a, b| a.val_auc.partial_cmp(&b.val_auc).unwrap())
+            .unwrap();
+        members.push(m.index);
+    }
+    let ensemble = Selector::from_indices(zoo.n(), members);
+    let profiler = ValidationAccuracyProfiler::from_zoo(&zoo);
+    let profiled = profiler.accuracy(&ensemble);
+
+    let (labels, scores) = serve_cohort(&zoo, &engine, &ensemble, 150, 777);
+    let served_auc = roc_auc(&labels, &scores);
+    assert!(
+        (served_auc - profiled.roc_auc).abs() < 0.10,
+        "served {served_auc:.4} vs profiled {:.4}",
+        profiled.roc_auc
+    );
+    // ensembling should not be (much) worse than the weakest member
+    let weakest = ensemble
+        .indices()
+        .iter()
+        .map(|&i| zoo.model(i).val_auc)
+        .fold(f64::INFINITY, f64::min);
+    assert!(served_auc > weakest - 0.08);
+}
+
+#[test]
+fn critical_patients_score_lower_than_stable() {
+    // the clinical direction of the score must be preserved end to end:
+    // P(stable) higher for stable (label 1) patients
+    let zoo = load_zoo();
+    let engine = Engine::new(&zoo, 2).unwrap();
+    let best = zoo
+        .manifest
+        .models
+        .iter()
+        .filter(|m| m.servable())
+        .max_by(|a, b| a.val_auc.partial_cmp(&b.val_auc).unwrap())
+        .unwrap();
+    let ensemble = Selector::from_indices(zoo.n(), [best.index]);
+    let (labels, scores) = serve_cohort(&zoo, &engine, &ensemble, 100, 313);
+    let mean = |l: u8| {
+        let v: Vec<f64> = labels
+            .iter()
+            .zip(&scores)
+            .filter(|(&lab, _)| lab == l)
+            .map(|(_, &s)| s)
+            .collect();
+        v.iter().sum::<f64>() / v.len().max(1) as f64
+    };
+    assert!(
+        mean(1) > mean(0) + 0.1,
+        "stable mean {:.3} vs critical mean {:.3}",
+        mean(1),
+        mean(0)
+    );
+}
