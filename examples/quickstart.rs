@@ -5,8 +5,6 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use std::time::Instant;
-
 use holmes::composer::Composer;
 use holmes::config::{ComposerConfig, SystemConfig};
 use holmes::data;
@@ -51,13 +49,8 @@ fn main() -> holmes::Result<()> {
 
     // 4. One synthetic patient window → bagging prediction (Eq. 5).
     let clip = data::make_clips(1, zoo.manifest.clip_len, 7, &SynthConfig::default());
-    let prediction = pipeline.query(Query {
-        patient: 0,
-        window_id: 0,
-        sim_end: 30.0,
-        leads: clip.clips[0].clone(),
-        emitted: Instant::now(),
-    })?;
+    let prediction =
+        pipeline.query(Query::from_vecs(0, 0, 30.0, clip.clips[0].clone()))?;
     println!(
         "prediction: P(stable) = {:.3} (label was {}), e2e latency {:?}",
         prediction.score, clip.labels[0], prediction.e2e

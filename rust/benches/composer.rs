@@ -16,8 +16,12 @@ fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let mut b = if quick { Bencher::quick() } else { Bencher::default() };
     println!("== composer benches ==");
-    let zoo = Zoo::load(std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
-        .expect("run `make artifacts` first");
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let zoo = if artifacts.join("zoo_manifest.json").exists() {
+        Zoo::load(&artifacts).expect("artifacts load")
+    } else {
+        holmes::zoo::testkit::toy_zoo(60, 200, 7)
+    };
     let system = SystemConfig { gpus: 2, patients: 32, window_s: 30.0 };
     let ctx = SearchContext::new(&zoo, system);
     let cfg = ComposerConfig::default();

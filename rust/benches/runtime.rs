@@ -1,19 +1,25 @@
-//! PJRT runtime benches: raw executable latency per zoo variant and
-//! batch size — the numbers behind the latency profiler's calibration
-//! and the Fig. 13 Timeit legend.
+//! Runtime benches: raw executable latency per zoo variant and batch
+//! size — the numbers behind the latency profiler's calibration and the
+//! Fig. 13 Timeit legend. Uses the feature-selected backend (PJRT with
+//! `--features xla`, the sim otherwise); without built artifacts it
+//! falls back to a toy zoo on the sim backend.
 //!
 //! `cargo bench --bench runtime`
 
 use holmes::bench::{black_box, Bencher};
 use holmes::runtime::{bench_hlo_file, Engine};
-use holmes::zoo::Zoo;
+use holmes::zoo::{testkit, Zoo};
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let mut b = if quick { Bencher::quick() } else { Bencher::default() };
     println!("== runtime benches ==");
-    let zoo = Zoo::load(std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
-        .expect("run `make artifacts` first");
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let zoo = if artifacts.join("zoo_manifest.json").exists() {
+        Zoo::load(&artifacts).expect("artifacts load")
+    } else {
+        testkit::toy_zoo_with(9, 64, 3, 2500, &[1, 8])
+    };
     let engine = Engine::new(&zoo, 1).expect("engine");
     let clip_len = zoo.manifest.clip_len;
 

@@ -2,28 +2,47 @@
 //! (the Fig.-10 hot path), aggregator ingest throughput, and the
 //! measured latency profiler.
 //!
-//! `cargo bench --bench serving`
+//! Runs entirely on the zero-latency [`SimBackend`], so what is being
+//! measured is the **data plane itself** (copies, locks, allocation,
+//! channel hops) — not model FLOPs. To track the perf trajectory, the
+//! bench also drives `legacy`, an in-bench replica of the pre-refactor
+//! plane (per-member window clones, one global pending mutex, a fresh
+//! padded allocation per flush), and writes all medians plus the
+//! new-vs-legacy speedups to `BENCH_serving.json` at the repo root.
+//!
+//! `cargo bench --bench serving [-- --quick]`
 
-use std::time::Instant;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use holmes::bench::{black_box, Bencher};
+use holmes::bench::{black_box, BenchResult, Bencher};
 use holmes::config::SystemConfig;
 use holmes::data;
 use holmes::ingest::synth::SynthConfig;
 use holmes::ingest::{Frame, Modality};
-use holmes::runtime::Engine;
+use holmes::json::Value;
+use holmes::runtime::{Engine, SimBackend};
 use holmes::serving::aggregator::WindowAggregator;
+use holmes::serving::batcher::BatchPolicy;
 use holmes::serving::pipeline::{Pipeline, PipelineConfig, Query};
 use holmes::serving::profile::{profile_ensemble, ProfileEffort};
-use holmes::zoo::{Selector, Zoo};
+use holmes::zoo::{testkit, Selector, Zoo};
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let mut b = if quick { Bencher::quick() } else { Bencher::default() };
     println!("== serving benches ==");
-    let zoo = Zoo::load(std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
-        .expect("run `make artifacts` first");
-    let engine = Engine::new(&zoo, 2).expect("engine");
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let zoo = if artifacts.join("zoo_manifest.json").exists() {
+        Zoo::load(&artifacts).expect("artifacts load")
+    } else {
+        // paper-shaped stand-in: 10 s × 250 Hz windows, batch-8 variants
+        testkit::toy_zoo_with(9, 64, 21, 2500, &[1, 8])
+    };
+    let engine =
+        Engine::with_backend(&zoo, 2, Arc::new(SimBackend::instant(&zoo))).expect("engine");
     let clip_len = zoo.manifest.clip_len;
 
     // ---- aggregator ingest throughput (pure L3, no device)
@@ -36,16 +55,20 @@ fn main() {
     };
     b.bench("aggregator/push_ecg_frame", || black_box(agg.push(&frame).is_some()));
 
-    // ---- pipeline end-to-end, 3-model cross-lead ensemble
+    // ---- pipeline end-to-end, 3-model cross-lead ensemble; zero fill
+    // wait so the measurement is pure data-plane overhead
     let members: Vec<usize> = zoo.servable_indices().into_iter().take(3).collect();
     let ensemble = Selector::from_indices(zoo.n(), members);
-    for &m in ensemble.indices() {
-        for &bs in engine.batch_sizes() {
-            engine.profile_model((m, bs), 1).unwrap();
-        }
-    }
-    let pipeline = Pipeline::spawn(&zoo, &engine, PipelineConfig::new(ensemble.clone())).unwrap();
+    let policy = BatchPolicy { max_batch: 8, timeout: Duration::ZERO };
     let clips = data::make_clips(4, clip_len, 21, &SynthConfig::default());
+    let shared = clips.shared();
+
+    let pipeline = Pipeline::spawn(
+        &zoo,
+        &engine,
+        PipelineConfig::new(ensemble.clone()).with_policy(policy),
+    )
+    .unwrap();
     let mut w = 0u64;
     b.bench("pipeline/query_e2e/3-models", || {
         w += 1;
@@ -54,7 +77,7 @@ fn main() {
                 patient: 0,
                 window_id: w,
                 sim_end: 0.0,
-                leads: clips.clips[(w as usize) % clips.len()].clone(),
+                leads: shared[(w as usize) % shared.len()].clone(),
                 emitted: Instant::now(),
             })
             .unwrap();
@@ -72,7 +95,7 @@ fn main() {
                         patient: i,
                         window_id: w,
                         sim_end: 0.0,
-                        leads: clips.clips[i % clips.len()].clone(),
+                        leads: shared[i % shared.len()].clone(),
                         emitted: Instant::now(),
                     })
                     .unwrap(),
@@ -86,8 +109,39 @@ fn main() {
     });
     drop(pipeline);
 
+    // ---- the same workload on the pre-refactor plane (see `legacy`)
+    let lp = legacy::LegacyPipeline::spawn(&zoo, &engine, ensemble.clone(), policy);
+    b.bench("legacy_pipeline/query_e2e/3-models", || {
+        w += 1;
+        let p = lp
+            .query(legacy::LegacyQuery {
+                leads: clips.clips[(w as usize) % clips.len()].clone(),
+                emitted: Instant::now(),
+            })
+            .unwrap();
+        black_box(p)
+    });
+    b.bench("legacy_pipeline/burst16/3-models", || {
+        let mut replies = Vec::with_capacity(16);
+        for i in 0..16usize {
+            replies.push(
+                lp.submit(legacy::LegacyQuery {
+                    leads: clips.clips[i % clips.len()].clone(),
+                    emitted: Instant::now(),
+                })
+                .unwrap(),
+            );
+        }
+        let mut acc = 0.0;
+        for r in replies {
+            acc += r.recv().unwrap();
+        }
+        black_box(acc)
+    });
+    drop(lp);
+
     // ---- measured latency profiler (one full μ/T_s/T_q cycle)
-    let system = SystemConfig { gpus: 2, patients: 16, window_s: 30.0 };
+    let system = SystemConfig { gpus: 2, patients: 64, window_s: 3.0 };
     let effort = ProfileEffort { closed_loop_queries: 8, open_loop_queries: 8 };
     let t0 = Instant::now();
     let m = profile_ensemble(&zoo, &engine, &ensemble, &system, effort).unwrap();
@@ -99,4 +153,257 @@ fn main() {
         m.ts_p95,
         m.tq_bound
     );
+
+    write_bench_json(b.results(), quick, engine.backend_name());
+}
+
+/// Emit medians + new-vs-legacy speedups to `<repo root>/BENCH_serving.json`.
+fn write_bench_json(results: &[BenchResult], quick: bool, backend: &str) {
+    let mut benches = BTreeMap::new();
+    for r in results {
+        benches.insert(
+            r.name.clone(),
+            Value::obj(vec![
+                ("median_ns", Value::Num(r.median.as_nanos() as f64)),
+                ("mean_ns", Value::Num(r.mean.as_nanos() as f64)),
+                ("p95_ns", Value::Num(r.p95.as_nanos() as f64)),
+                ("iters", Value::Num(r.iters as f64)),
+            ]),
+        );
+    }
+    let mut speedups = BTreeMap::new();
+    for r in results {
+        if let Some(stripped) = r.name.strip_prefix("legacy_") {
+            if let Some(new) = results.iter().find(|n| n.name == stripped) {
+                let ratio = r.median.as_secs_f64() / new.median.as_secs_f64().max(1e-12);
+                speedups.insert(stripped.to_string(), Value::Num((ratio * 1000.0).round() / 1000.0));
+            }
+        }
+    }
+    let doc = Value::obj(vec![
+        ("bench", Value::Str("serving".into())),
+        ("backend", Value::Str(backend.into())),
+        ("quick", Value::Bool(quick)),
+        (
+            "note",
+            Value::Str(
+                "medians of the zero-copy data plane vs the in-bench legacy replica; \
+                 regenerate with `cargo bench --bench serving -- --quick`"
+                    .into(),
+            ),
+        ),
+        ("benches", Value::Obj(benches)),
+        ("speedup_vs_legacy", Value::Obj(speedups)),
+    ]);
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_serving.json"))
+        .expect("manifest dir has a parent");
+    match std::fs::write(&path, doc.to_string() + "\n") {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}
+
+/// A faithful replica of the **pre-refactor** serving data plane, kept
+/// here (not in the library) purely as the perf baseline: per-member
+/// `Vec` window clones in the router, one global `Mutex<HashMap>`
+/// pending table shared by router and collector, and a freshly
+/// allocated padded batch buffer per flush via `execute_blocking`.
+mod legacy {
+    use std::collections::HashMap;
+    use std::sync::{mpsc, Arc, Mutex};
+    use std::time::Instant;
+
+    use holmes::runtime::Engine;
+    use holmes::serving::batcher::BatchPolicy;
+    use holmes::zoo::{Selector, Zoo};
+
+    pub struct LegacyQuery {
+        pub leads: [Vec<f32>; 3],
+        /// Never read — mirrors the real `Query` so the submission cost
+        /// matches the pre-refactor load generator.
+        #[allow(dead_code)]
+        pub emitted: Instant,
+    }
+
+    struct Item {
+        query_id: u64,
+        input: Vec<f32>,
+    }
+
+    struct Score {
+        query_id: u64,
+        score: f32,
+    }
+
+    struct PendingQuery {
+        remaining: usize,
+        sum: f64,
+        n_models: usize,
+        reply: Option<mpsc::SyncSender<f64>>,
+    }
+
+    type PendingTable = Arc<Mutex<HashMap<u64, PendingQuery>>>;
+
+    pub struct LegacyPipeline {
+        tx: mpsc::Sender<(LegacyQuery, Option<mpsc::SyncSender<f64>>)>,
+    }
+
+    impl LegacyPipeline {
+        pub fn spawn(
+            zoo: &Zoo,
+            engine: &Engine,
+            ensemble: Selector,
+            policy: BatchPolicy,
+        ) -> LegacyPipeline {
+            let pending: PendingTable = Arc::new(Mutex::new(HashMap::new()));
+            let (score_tx, score_rx) = mpsc::channel::<Score>();
+            let mut model_txs: HashMap<usize, mpsc::Sender<Item>> = HashMap::new();
+            for &i in ensemble.indices() {
+                let (btx, brx) = mpsc::channel::<Item>();
+                model_txs.insert(i, btx);
+                let engine = engine.clone();
+                let stx = score_tx.clone();
+                std::thread::spawn(move || batch_loop(i, engine, brx, stx, policy));
+            }
+            drop(score_tx);
+            {
+                let pending = Arc::clone(&pending);
+                std::thread::spawn(move || {
+                    for s in score_rx {
+                        let done = {
+                            let mut table = pending.lock().unwrap();
+                            let Some(entry) = table.get_mut(&s.query_id) else { continue };
+                            entry.sum += s.score as f64;
+                            entry.remaining -= 1;
+                            if entry.remaining == 0 { table.remove(&s.query_id) } else { None }
+                        };
+                        if let Some(entry) = done {
+                            if let Some(reply) = entry.reply {
+                                let _ = reply.send(entry.sum / entry.n_models as f64);
+                            }
+                        }
+                    }
+                });
+            }
+            let (tx, query_rx) =
+                mpsc::channel::<(LegacyQuery, Option<mpsc::SyncSender<f64>>)>();
+            {
+                let pending = Arc::clone(&pending);
+                let leads: HashMap<usize, usize> =
+                    ensemble.indices().iter().map(|&i| (i, zoo.model(i).lead)).collect();
+                std::thread::spawn(move || {
+                    let mut next_id = 0u64;
+                    for (q, reply) in query_rx {
+                        let id = next_id;
+                        next_id += 1;
+                        pending.lock().unwrap().insert(
+                            id,
+                            PendingQuery {
+                                remaining: ensemble.len(),
+                                sum: 0.0,
+                                n_models: ensemble.len(),
+                                reply,
+                            },
+                        );
+                        for &m in ensemble.indices() {
+                            // the copy the zero-copy plane eliminated:
+                            let item =
+                                Item { query_id: id, input: q.leads[leads[&m]].clone() };
+                            if model_txs[&m].send(item).is_err() {
+                                pending.lock().unwrap().remove(&id);
+                                break;
+                            }
+                        }
+                    }
+                });
+            }
+            LegacyPipeline { tx }
+        }
+
+        pub fn submit(&self, q: LegacyQuery) -> Result<mpsc::Receiver<f64>, ()> {
+            let (tx, rx) = mpsc::sync_channel(1);
+            self.tx.send((q, Some(tx))).map_err(|_| ())?;
+            Ok(rx)
+        }
+
+        pub fn query(&self, q: LegacyQuery) -> Result<f64, ()> {
+            self.submit(q)?.recv().map_err(|_| ())
+        }
+    }
+
+    fn batch_loop(
+        model_index: usize,
+        engine: Engine,
+        rx: mpsc::Receiver<Item>,
+        out: mpsc::Sender<Score>,
+        policy: BatchPolicy,
+    ) {
+        let clip_len = engine.clip_len();
+        let max_take = policy
+            .max_batch
+            .min(engine.batch_sizes().iter().copied().max().unwrap_or(1))
+            .max(1);
+        let mut pending: Vec<Item> = Vec::with_capacity(max_take);
+        loop {
+            if pending.is_empty() {
+                match rx.recv() {
+                    Ok(item) => pending.push(item),
+                    Err(_) => break,
+                }
+            }
+            let mut closed = false;
+            while pending.len() < max_take {
+                match rx.try_recv() {
+                    Ok(item) => pending.push(item),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        closed = true;
+                        break;
+                    }
+                }
+            }
+            if !closed && pending.len() < max_take && !policy.timeout.is_zero() {
+                if let Ok(item) = rx.recv_timeout(policy.timeout) {
+                    pending.push(item);
+                }
+            }
+            flush(model_index, &engine, clip_len, &mut pending, &out, max_take);
+            if closed && pending.is_empty() {
+                break;
+            }
+        }
+        while !pending.is_empty() {
+            flush(model_index, &engine, clip_len, &mut pending, &out, max_take);
+        }
+    }
+
+    fn flush(
+        model_index: usize,
+        engine: &Engine,
+        clip_len: usize,
+        pending: &mut Vec<Item>,
+        out: &mpsc::Sender<Score>,
+        max_take: usize,
+    ) {
+        if pending.is_empty() {
+            return;
+        }
+        let take = pending.len().min(max_take);
+        let items: Vec<Item> = pending.drain(..take).collect();
+        let batch = engine.batch_for(items.len());
+        // fresh allocation per flush — the pre-refactor behaviour
+        let mut input = vec![0.0f32; batch * clip_len];
+        for (slot, item) in items.iter().enumerate() {
+            input[slot * clip_len..(slot + 1) * clip_len].copy_from_slice(&item.input);
+        }
+        let Ok(result) = engine.execute_blocking((model_index, batch), input) else {
+            return;
+        };
+        for (slot, item) in items.into_iter().enumerate() {
+            let _ = out.send(Score { query_id: item.query_id, score: result.scores[slot] });
+        }
+    }
+
 }

@@ -86,7 +86,7 @@ impl Bencher {
             }
             batch_means.push(t.elapsed().as_secs_f64() / iters_per_batch as f64);
         }
-        batch_means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        batch_means.sort_by(f64::total_cmp);
         let mean = batch_means.iter().sum::<f64>() / batch_means.len() as f64;
         let median = batch_means[batch_means.len() / 2];
         let p95 = batch_means[(batch_means.len() as f64 * 0.95) as usize - 1];

@@ -289,8 +289,10 @@ impl<'a, A: AccuracyProfiler, L: LatencyProfiler> Composer<'a, A, L> {
                     (u, b)
                 })
                 .collect();
-            // top-K by approximated utility (line 19, argsort_K)
-            scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            // top-K by approximated utility (line 19, argsort_K) —
+            // total_cmp so a NaN surrogate prediction ranks last
+            // instead of panicking mid-search
+            scored.sort_by(|a, b| b.0.total_cmp(&a.0));
             for (_, b) in scored.into_iter().take(self.cfg.top_k) {
                 add(b, it, &mut seen, &mut profile_set, &mut profiler_calls);
             }
@@ -301,8 +303,7 @@ impl<'a, A: AccuracyProfiler, L: LatencyProfiler> Composer<'a, A, L> {
             .iter()
             .max_by(|a, b| {
                 a.utility(self.cfg.latency_budget, self.delta)
-                    .partial_cmp(&b.utility(self.cfg.latency_budget, self.delta))
-                    .unwrap()
+                    .total_cmp(&b.utility(self.cfg.latency_budget, self.delta))
             })
             .expect("profile set cannot be empty")
             .clone();

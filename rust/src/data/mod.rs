@@ -23,6 +23,22 @@ impl ClipSet {
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }
+
+    /// Copy the clips into shared storage once; load generators then
+    /// build [`crate::serving::Query`]s by cloning `Arc` handles instead
+    /// of waveforms.
+    pub fn shared(&self) -> Vec<[std::sync::Arc<[f32]>; 3]> {
+        self.clips
+            .iter()
+            .map(|c| {
+                [
+                    std::sync::Arc::from(c[0].as_slice()),
+                    std::sync::Arc::from(c[1].as_slice()),
+                    std::sync::Arc::from(c[2].as_slice()),
+                ]
+            })
+            .collect()
+    }
 }
 
 /// Generate `n` labelled clips of `clip_len` samples (one synthetic

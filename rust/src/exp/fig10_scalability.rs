@@ -110,8 +110,9 @@ fn drive_open_loop(
 ) -> Result<(f64, f64, f64)> {
     let clip_len = zoo.manifest.clip_len;
     let cfg = SynthConfig::from(&zoo.manifest.calibration);
-    // pre-generate a pool of windows to avoid synth cost in the loop
-    let pool = data::make_clips(8, clip_len, 99, &cfg);
+    // pre-generate a pool of windows (shared storage) to avoid synth
+    // and copy cost in the loop
+    let pool = data::make_clips(8, clip_len, 99, &cfg).shared();
 
     let pipeline = Pipeline::spawn(zoo, engine, PipelineConfig::new(ensemble.clone()))?;
     let start = Instant::now();
@@ -128,7 +129,7 @@ fn drive_open_loop(
                 patient: p,
                 window_id: round as u64,
                 sim_end: round as f64 * window_s,
-                leads: pool.clips[p % pool.len()].clone(),
+                leads: pool[p % pool.len()].clone(),
                 emitted: Instant::now(),
             };
             replies.push(pipeline.submit(q)?);

@@ -85,8 +85,11 @@ fn pipeline_overhead(zoo: &Zoo, probes: usize) -> Result<f64> {
         &engine,
         PipelineConfig::new(Selector::from_indices(zoo.n(), [best])),
     )?;
-    let leads: [Vec<f32>; 3] =
-        [vec![0.1; clip_len], vec![0.1; clip_len], vec![0.1; clip_len]];
+    let leads = crate::serving::share_leads([
+        vec![0.1; clip_len],
+        vec![0.1; clip_len],
+        vec![0.1; clip_len],
+    ]);
     let mut diffs = Vec::with_capacity(probes);
     for w in 0..probes {
         let q = Query {

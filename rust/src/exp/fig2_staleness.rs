@@ -35,20 +35,22 @@ pub fn run(zoo: &Zoo, out: &Path, quick: bool) -> Result<()> {
     );
 
     let mut rows = Vec::new();
+    let batch = engine.batch_for(8);
+    // one persistent padded buffer for every scoring pass
+    let mut input = vec![0.0f32; batch * clip_len];
     for &d in &delays {
         let set = data::staleness_clips(n_clips, clip_len, d, 77, &cfg);
         let mut scores = vec![0.0f64; set.len()];
         for &m in &members {
             let lead = zoo.model(m).lead;
-            let batch = engine.batch_for(8);
             let mut i = 0;
             while i < set.len() {
                 let take = (set.len() - i).min(batch);
-                let mut input = vec![0.0f32; batch * clip_len];
+                input.iter_mut().for_each(|x| *x = 0.0);
                 for (slot, clip) in set.clips[i..i + take].iter().enumerate() {
                     input[slot * clip_len..(slot + 1) * clip_len].copy_from_slice(&clip[lead]);
                 }
-                let outz = engine.execute_blocking((m, batch), input)?;
+                let outz = engine.execute_batch((m, batch), &mut input)?;
                 for (slot, s) in scores[i..i + take].iter_mut().enumerate() {
                     *s += outz.scores[slot] as f64 / members.len() as f64;
                 }

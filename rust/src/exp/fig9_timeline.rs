@@ -68,14 +68,7 @@ pub fn run(zoo: &Zoo, out: &Path, quick: bool) -> Result<()> {
                 ));
             }
             clock.sleep_until_sim(window_end);
-            let q = Query {
-                patient: 0,
-                window_id: w as u64,
-                sim_end: window_end,
-                leads,
-                emitted: Instant::now(),
-            };
-            let pred = pipeline.query(q)?;
+            let pred = pipeline.query(Query::from_vecs(0, w as u64, window_end, leads))?;
             rows.push(format!(
                 "online,{window_end:.1},{:.6},infer",
                 pred.e2e.as_secs_f64()
@@ -98,16 +91,18 @@ pub fn run(zoo: &Zoo, out: &Path, quick: bool) -> Result<()> {
             windows.push(clip);
         }
         // the hourly job: score the whole backlog in one batched pass
+        // (one persistent padded buffer, recycled through the engine)
         let t0 = Instant::now();
         let batch = engine.batch_for(8);
+        let mut input = vec![0.0f32; batch * clip_len];
         let mut i = 0;
         while i < windows.len() {
             let take = (windows.len() - i).min(batch);
-            let mut input = vec![0.0f32; batch * clip_len];
+            input.iter_mut().for_each(|x| *x = 0.0);
             for (slot, w) in windows[i..i + take].iter().enumerate() {
                 input[slot * clip_len..(slot + 1) * clip_len].copy_from_slice(w);
             }
-            engine.execute_blocking((best, batch), input)?;
+            engine.execute_batch((best, batch), &mut input)?;
             i += take;
         }
         let total = t0.elapsed().as_secs_f64();

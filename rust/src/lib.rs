@@ -9,13 +9,27 @@
 //!   [`surrogate`] random-forest models) + genetic exploration (Algorithms
 //!   1 & 2) navigating the accuracy/latency trade-off (Eq. 1–3), plus the
 //!   paper's RD / AF / LF / NPO baselines.
-//! * [`serving`] — the real-time serving system: a tokio actor pipeline
+//! * [`serving`] — the real-time serving system: an actor pipeline
 //!   (stateful data aggregators + stateless model actors, the paper's Ray
-//!   substrate) executing zoo models through the [`runtime`] PJRT engine,
-//!   with [`netcalc`]-based queueing-latency estimation (Fig. 5).
+//!   substrate) over a zero-copy data plane — `Arc<[f32]>` lead windows
+//!   shared across ensemble members, a striped pending table, persistent
+//!   padded batch buffers — executing zoo models through the [`runtime`]
+//!   engine, with [`netcalc`]-based queueing-latency estimation (Fig. 5).
+//!
+//! ## Execution backend feature matrix
+//!
+//! | cargo features | engine backend                                   | needs |
+//! |----------------|--------------------------------------------------|-------|
+//! | *(default)*    | [`runtime::SimBackend`] — deterministic scores + MACs-calibrated service times | nothing (offline) |
+//! | `xla`          | [`runtime::pjrt::PjrtBackend`] — AOT-compiled HLO through PJRT | the `xla` crate + `make artifacts` |
+//!
+//! The whole pipeline, the test suite and the benches run on the
+//! default sim backend; `--features xla` swaps in real model execution
+//! behind the same [`runtime::ExecBackend`] trait.
 //!
 //! Python/JAX/Pallas exist only on the build path; this crate is
-//! self-contained once `artifacts/` is present.
+//! self-contained once `artifacts/` is present (and runs without it on
+//! the sim backend).
 
 pub mod bench;
 pub mod cli;

@@ -15,7 +15,7 @@ pub fn roc_auc(labels: &[u8], scores: &[f64]) -> f64 {
         return 0.5;
     }
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    order.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
     let mut ranks = vec![0.0f64; n];
     let mut i = 0;
     while i < n {
@@ -52,7 +52,7 @@ pub fn pr_auc(labels: &[u8], scores: &[f64]) -> f64 {
         return 0.0;
     }
     let mut order: Vec<usize> = (0..labels.len()).collect();
-    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
     let mut tp = 0.0f64;
     let mut fp = 0.0f64;
     let mut ap = 0.0f64;
@@ -187,7 +187,7 @@ pub fn percentile(samples: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v = samples.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;

@@ -199,14 +199,14 @@ impl AnalyticLatencyProfiler {
     /// each ensemble query fans out to every selected model.
     pub fn serving_time(&self, b: &Selector, gpus: usize) -> f64 {
         let mut ts: Vec<f64> = b.indices().iter().map(|&i| self.times.seconds[i]).collect();
-        ts.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        ts.sort_by(|a, b| b.total_cmp(a));
         let mut loads = vec![0.0f64; gpus.max(1)];
         for t in ts {
             // assign to least-loaded worker
             let k = loads
                 .iter()
                 .enumerate()
-                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .min_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(i, _)| i)
                 .unwrap();
             loads[k] += t;

@@ -1,0 +1,215 @@
+//! Pluggable execution backends for the serving [`Engine`](super::Engine).
+//!
+//! The engine owns the worker pool, the job FIFO and the stats; a
+//! backend only supplies the per-worker execution state. Two impls:
+//!
+//! * [`SimBackend`] (this module, always available) — a pure-Rust
+//!   simulator: deterministic per-window scores plus MACs-calibrated
+//!   service times (reusing [`crate::profiler::ServiceTimes`]), so the
+//!   full pipeline, tests and benches run with no XLA toolchain while
+//!   preserving the contention behaviour of a real device pool.
+//! * [`PjrtBackend`](super::pjrt::PjrtBackend) (`--features xla`) — the
+//!   AOT-compiled HLO artifacts executed through PJRT.
+
+use std::collections::HashSet;
+use std::time::Duration;
+
+use super::ModelKey;
+use crate::profiler::ServiceTimes;
+use crate::zoo::Zoo;
+use crate::Result;
+
+/// Result of one backend execution (before the engine stamps worker id
+/// and stats).
+#[derive(Debug, Clone)]
+pub struct BackendOutput {
+    /// Sigmoid probabilities, one per batch slot.
+    pub scores: Vec<f32>,
+    /// On-device (or simulated) execution time for the whole batch.
+    pub exec_time: Duration,
+    /// True when this call compiled/loaded the executable (first use).
+    pub compiled: bool,
+}
+
+/// Factory for per-worker execution state. Implementations must be
+/// shareable across the pool; the workers they create never leave the
+/// thread that called [`ExecBackend::worker`] (PJRT handles are !Send).
+pub trait ExecBackend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Create the execution state for device worker `wid`. Called on
+    /// the worker's own thread.
+    fn worker(&self, wid: usize) -> Result<Box<dyn ExecWorker>>;
+}
+
+/// One worker's execution state (e.g. a PJRT client + executable cache).
+pub trait ExecWorker {
+    /// Run `(model, batch)` over a flattened `(batch, clip_len)` f32
+    /// input. The engine has already validated key and input length.
+    fn run(&mut self, key: ModelKey, input: &[f32], clip_len: usize) -> Result<BackendOutput>;
+}
+
+// ---------------------------------------------------------------------------
+// SimBackend
+// ---------------------------------------------------------------------------
+
+/// Deterministic score for one model over one lead window: an FNV-1a
+/// hash of the model index and the raw sample bits, mapped into (0, 1).
+/// Depends only on (model, window) — never on batch size or slot — so
+/// the batched path reproduces the single-query path bit for bit.
+pub fn sim_score(model_index: usize, window: &[f32]) -> f32 {
+    const PRIME: u64 = 0x100000001b3;
+    let mut h: u64 = 0xcbf29ce484222325 ^ (model_index as u64).wrapping_mul(PRIME);
+    for &v in window {
+        h = (h ^ v.to_bits() as u64).wrapping_mul(PRIME);
+    }
+    // top 53 bits → uniform strictly inside (0, 1)
+    (((h >> 11) as f64 + 0.5) / (1u64 << 53) as f64) as f32
+}
+
+/// Pure-Rust execution backend: deterministic scores + calibrated
+/// service times. `scale` multiplies the simulated service times
+/// (1.0 = realistic pacing, 0.0 = no sleeping — data-plane benches).
+#[derive(Debug, Clone)]
+pub struct SimBackend {
+    /// Batch-1 service time per zoo model index (seconds).
+    seconds: std::sync::Arc<Vec<f64>>,
+    scale: f64,
+    /// Fault injection: executing this model index always errors
+    /// (exercises the pipeline's fail/evict path in tests).
+    fail_model: Option<usize>,
+}
+
+impl SimBackend {
+    /// MACs-calibrated service times (same coefficients as the analytic
+    /// latency profiler's default cost model).
+    pub fn from_zoo(zoo: &Zoo) -> Self {
+        Self::with_times(ServiceTimes::from_macs(zoo, 5e-4, 2e10), 1.0)
+    }
+
+    /// Zero service time: pure data-plane cost (benches, fast tests).
+    pub fn instant(zoo: &Zoo) -> Self {
+        Self::with_times(ServiceTimes::from_macs(zoo, 5e-4, 2e10), 0.0)
+    }
+
+    pub fn with_times(times: ServiceTimes, scale: f64) -> Self {
+        SimBackend {
+            seconds: std::sync::Arc::new(times.seconds),
+            scale: scale.max(0.0),
+            fail_model: None,
+        }
+    }
+
+    /// Fault injection: every execution of `model_index` fails.
+    pub fn failing_model(mut self, model_index: usize) -> Self {
+        self.fail_model = Some(model_index);
+        self
+    }
+
+    /// Simulated service time of one `(model, batch)` execution:
+    /// sub-linear in batch (half the per-slot cost amortises away),
+    /// mirroring the measured batching gain of the PJRT path.
+    fn service_time(&self, key: ModelKey) -> f64 {
+        let t1 = self
+            .seconds
+            .get(key.0)
+            .copied()
+            .unwrap_or(1e-4)
+            .max(0.0);
+        t1 * (0.5 + 0.5 * key.1 as f64)
+    }
+}
+
+impl ExecBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn worker(&self, _wid: usize) -> Result<Box<dyn ExecWorker>> {
+        Ok(Box::new(SimWorker { backend: self.clone(), warmed: HashSet::new() }))
+    }
+}
+
+struct SimWorker {
+    backend: SimBackend,
+    /// Keys executed at least once (mimics the lazy compile cache).
+    warmed: HashSet<ModelKey>,
+}
+
+impl ExecWorker for SimWorker {
+    fn run(&mut self, key: ModelKey, input: &[f32], clip_len: usize) -> Result<BackendOutput> {
+        if self.backend.fail_model == Some(key.0) {
+            return Err(crate::Error::serving(format!(
+                "sim backend: injected failure for model {}",
+                key.0
+            )));
+        }
+        let compiled = self.warmed.insert(key);
+        let mut scores = Vec::with_capacity(key.1);
+        for slot in 0..key.1 {
+            scores.push(sim_score(key.0, &input[slot * clip_len..(slot + 1) * clip_len]));
+        }
+        let secs = self.backend.service_time(key) * self.backend.scale;
+        let exec_time = Duration::from_secs_f64(secs);
+        if secs > 0.0 {
+            std::thread::sleep(exec_time);
+        }
+        Ok(BackendOutput { scores, exec_time, compiled })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo::testkit;
+
+    #[test]
+    fn sim_score_deterministic_and_bounded() {
+        let w: Vec<f32> = (0..100).map(|i| (i as f32).sin()).collect();
+        let a = sim_score(3, &w);
+        let b = sim_score(3, &w);
+        assert_eq!(a.to_bits(), b.to_bits());
+        assert!(a > 0.0 && a < 1.0);
+        // different model or different window → different score
+        assert_ne!(sim_score(4, &w).to_bits(), a.to_bits());
+        let mut w2 = w.clone();
+        w2[50] += 1.0;
+        assert_ne!(sim_score(3, &w2).to_bits(), a.to_bits());
+    }
+
+    #[test]
+    fn sim_worker_batch_slots_are_independent() {
+        let zoo = testkit::toy_zoo(4, 16, 1);
+        let backend = SimBackend::instant(&zoo);
+        let mut worker = backend.worker(0).unwrap();
+        let clip = 10usize;
+        let a: Vec<f32> = (0..clip).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..clip).map(|i| (i as f32) * 0.5 - 1.0).collect();
+        let mut batch = a.clone();
+        batch.extend_from_slice(&b);
+        let out = worker.run((2, 2), &batch, clip).unwrap();
+        assert_eq!(out.scores.len(), 2);
+        assert_eq!(out.scores[0].to_bits(), sim_score(2, &a).to_bits());
+        assert_eq!(out.scores[1].to_bits(), sim_score(2, &b).to_bits());
+    }
+
+    #[test]
+    fn injected_failure_errors() {
+        let zoo = testkit::toy_zoo(4, 16, 1);
+        let backend = SimBackend::instant(&zoo).failing_model(1);
+        let mut worker = backend.worker(0).unwrap();
+        let input = vec![0.0f32; 10];
+        assert!(worker.run((1, 1), &input, 10).is_err());
+        assert!(worker.run((0, 1), &input, 10).is_ok());
+    }
+
+    #[test]
+    fn service_time_scales_with_batch_and_macs() {
+        let zoo = testkit::toy_zoo(6, 16, 2);
+        let b = SimBackend::from_zoo(&zoo);
+        assert!(b.service_time((5, 1)) > b.service_time((0, 1)));
+        assert!(b.service_time((0, 8)) > b.service_time((0, 1)));
+        // sub-linear: batch 8 costs less than 8× batch 1
+        assert!(b.service_time((0, 8)) < 8.0 * b.service_time((0, 1)));
+    }
+}

@@ -1,17 +1,32 @@
-//! PJRT execution engine: loads the AOT-compiled HLO-text artifacts and
-//! runs them from the serving hot path.
+//! Execution engine: a device-worker pool over a pluggable
+//! [`ExecBackend`].
 //!
-//! The `xla` crate's PJRT handles wrap raw C pointers (`!Send`), so all
-//! device interaction lives on dedicated **device worker threads**. Each
-//! worker owns its own `PjRtClient` plus a lazily-compiled executable
-//! cache, and pulls jobs from a shared FIFO — exactly the "number of
-//! GPUs" resource model of the paper's system configuration `c`:
-//! `workers = 1` reproduces the 1-GPU contention column of Fig. 10, and
-//! so on. Job replies travel over rendezvous channels, so any pipeline
-//! thread (batcher actors, profilers, benches) can submit and wait.
+//! The engine owns the job FIFO, the worker threads and the stats; the
+//! backend supplies per-worker execution state. Workers pull jobs from
+//! a shared FIFO — exactly the "number of GPUs" resource model of the
+//! paper's system configuration `c`: `workers = 1` reproduces the 1-GPU
+//! contention column of Fig. 10, and so on. Job replies travel over
+//! rendezvous channels, so any pipeline thread (batcher actors,
+//! profilers, benches) can submit and wait.
+//!
+//! Backends:
+//!
+//! | feature    | backend                        | needs XLA | scores            |
+//! |------------|--------------------------------|-----------|-------------------|
+//! | default    | [`SimBackend`]                 | no        | deterministic sim |
+//! | `xla`      | [`pjrt::PjrtBackend`]          | yes       | real HLO models   |
+//!
+//! [`Engine::new`] picks the feature-selected default;
+//! [`Engine::with_backend`] injects any implementation (tests inject a
+//! fault-injecting sim, benches a zero-latency one).
 
-use std::collections::HashMap;
-use std::path::PathBuf;
+pub mod backend;
+#[cfg(feature = "xla")]
+pub mod pjrt;
+
+pub use backend::{BackendOutput, ExecBackend, ExecWorker, SimBackend};
+
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -22,15 +37,36 @@ use crate::{Error, Result};
 /// Key of one compiled executable: (zoo model index, batch size).
 pub type ModelKey = (usize, usize);
 
+/// Reply payload: the result plus (optionally) the recycled input
+/// buffer, so batcher flushes reuse one persistent allocation.
+type Reply = (Result<ExecOutput>, Option<Vec<f32>>);
+
 /// One inference job: a flattened `(batch, clip_len)` f32 input.
 struct Job {
     key: ModelKey,
     input: Vec<f32>,
-    reply: mpsc::SyncSender<Result<ExecOutput>>,
+    /// Send the input buffer back with the reply (buffer recycling).
+    want_input_back: bool,
+    reply: mpsc::SyncSender<Reply>,
 }
 
 /// Pending-reply handle returned by [`Engine::submit`].
-pub type Pending = mpsc::Receiver<Result<ExecOutput>>;
+pub struct Pending {
+    rx: mpsc::Receiver<Reply>,
+}
+
+impl Pending {
+    /// Block for the job's result.
+    pub fn wait(self) -> Result<ExecOutput> {
+        self.wait_full().0
+    }
+
+    fn wait_full(self) -> Reply {
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| (Err(Error::serving("engine worker dropped reply")), None))
+    }
+}
 
 /// Result of one executable invocation.
 #[derive(Debug, Clone)]
@@ -64,35 +100,67 @@ struct EngineInner {
     tx: Mutex<Option<mpsc::Sender<Job>>>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     n_workers: usize,
-    artifact_paths: HashMap<ModelKey, PathBuf>,
+    backend_name: &'static str,
+    /// Servable (model, batch) keys per the zoo manifest.
+    model_keys: HashSet<ModelKey>,
     clip_len: usize,
+    /// Sorted ascending, deduped once at construction — `batch_for` is
+    /// on the per-flush hot path and must not clone/sort.
     batch_sizes: Vec<usize>,
     stats: Arc<EngineStats>,
 }
 
 impl Engine {
-    /// Spin up `n_workers` device threads serving the zoo's servable
-    /// artifacts. Executables compile lazily on first use per worker.
+    /// Spin up `n_workers` device threads on the feature-selected
+    /// default backend: PJRT with `--features xla`, the pure-Rust
+    /// simulator otherwise.
     pub fn new(zoo: &Zoo, n_workers: usize) -> Result<Self> {
+        #[cfg(feature = "xla")]
+        let backend: Arc<dyn ExecBackend> = Arc::new(pjrt::PjrtBackend::from_zoo(zoo)?);
+        #[cfg(not(feature = "xla"))]
+        let backend: Arc<dyn ExecBackend> = Arc::new(SimBackend::from_zoo(zoo));
+        Self::with_backend(zoo, n_workers, backend)
+    }
+
+    /// Spin up the pool on an explicit backend implementation.
+    pub fn with_backend(
+        zoo: &Zoo,
+        n_workers: usize,
+        backend: Arc<dyn ExecBackend>,
+    ) -> Result<Self> {
         assert!(n_workers >= 1, "need at least one device worker");
-        let mut artifact_paths = HashMap::new();
+        let mut model_keys = HashSet::new();
         for &idx in &zoo.servable_indices() {
             for &b in &zoo.manifest.batch_sizes {
-                artifact_paths.insert((idx, b), zoo.artifact_path(idx, b)?);
+                // fail fast at startup: a missing batch variant would
+                // otherwise surface mid-serving when a burst first picks
+                // that batch size, killing the member's batcher
+                if zoo.model(idx).artifact_for_batch(b).is_none() {
+                    return Err(Error::artifact(format!(
+                        "servable model {} has no batch-{b} artifact",
+                        zoo.model(idx).id
+                    )));
+                }
+                model_keys.insert((idx, b));
             }
         }
+        let mut batch_sizes = zoo.manifest.batch_sizes.clone();
+        batch_sizes.sort_unstable();
+        batch_sizes.dedup();
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let stats = Arc::new(EngineStats::default());
+        let clip_len = zoo.manifest.clip_len;
+        let backend_name = backend.name();
         let mut workers = Vec::with_capacity(n_workers);
         for wid in 0..n_workers {
             let rx = Arc::clone(&rx);
-            let paths = artifact_paths.clone();
             let stats = Arc::clone(&stats);
+            let backend = Arc::clone(&backend);
             workers.push(
                 std::thread::Builder::new()
-                    .name(format!("pjrt-worker-{wid}"))
-                    .spawn(move || worker_loop(wid, rx, paths, stats))
+                    .name(format!("{backend_name}-worker-{wid}"))
+                    .spawn(move || worker_loop(wid, rx, backend, stats, clip_len))
                     .map_err(Error::Io)?,
             );
         }
@@ -101,9 +169,10 @@ impl Engine {
                 tx: Mutex::new(Some(tx)),
                 workers: Mutex::new(workers),
                 n_workers,
-                artifact_paths,
-                clip_len: zoo.manifest.clip_len,
-                batch_sizes: zoo.manifest.batch_sizes.clone(),
+                backend_name,
+                model_keys,
+                clip_len,
+                batch_sizes,
                 stats,
             }),
         })
@@ -111,6 +180,11 @@ impl Engine {
 
     pub fn n_workers(&self) -> usize {
         self.inner.n_workers
+    }
+
+    /// Backend identifier (`"sim"` / `"pjrt"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.inner.backend_name
     }
 
     pub fn clip_len(&self) -> usize {
@@ -123,69 +197,87 @@ impl Engine {
     }
 
     /// Smallest compiled batch size ≥ `n` (or the largest available).
+    /// Sizes are pre-sorted at construction — no per-call allocation.
     pub fn batch_for(&self, n: usize) -> usize {
-        let mut sizes = self.inner.batch_sizes.clone();
-        sizes.sort_unstable();
-        for &b in &sizes {
-            if b >= n {
-                return b;
-            }
+        let sizes = &self.inner.batch_sizes;
+        match sizes.iter().find(|&&b| b >= n) {
+            Some(&b) => b,
+            None => *sizes.last().expect("engine has no batch sizes"),
         }
-        *sizes.last().expect("engine has no batch sizes")
     }
 
     pub fn has_model(&self, key: ModelKey) -> bool {
-        self.inner.artifact_paths.contains_key(&key)
+        self.inner.model_keys.contains(&key)
     }
 
     pub fn stats(&self) -> &EngineStats {
         &self.inner.stats
     }
 
-    /// Submit a job and block for the reply.
-    pub fn execute_blocking(&self, key: ModelKey, input: Vec<f32>) -> Result<ExecOutput> {
-        let rx = self.submit(key, input)?;
-        rx.recv().map_err(|_| Error::serving("engine worker dropped reply"))?
-    }
-
-    /// Submit a job; the caller can collect the reply later (lets one
-    /// thread keep several models in flight across the worker pool).
-    pub fn submit(&self, key: ModelKey, input: Vec<f32>) -> Result<Pending> {
-        if !self.inner.artifact_paths.contains_key(&key) {
+    fn validate(&self, key: ModelKey, input_len: usize) -> Result<()> {
+        if !self.inner.model_keys.contains(&key) {
             return Err(Error::artifact(format!(
                 "no artifact for model {} batch {}",
                 key.0, key.1
             )));
         }
         let expect = key.1 * self.inner.clip_len;
-        if input.len() != expect {
+        if input_len != expect {
             return Err(Error::config(format!(
                 "input length {} != batch {} × clip_len {}",
-                input.len(),
-                key.1,
-                self.inner.clip_len
+                input_len, key.1, self.inner.clip_len
             )));
         }
+        Ok(())
+    }
+
+    fn send_job(&self, key: ModelKey, input: Vec<f32>, want_input_back: bool) -> Result<Pending> {
         let (tx, rx) = mpsc::sync_channel(1);
         let guard = self.inner.tx.lock().expect("engine sender poisoned");
         guard
             .as_ref()
             .ok_or_else(|| Error::serving("engine shut down"))?
-            .send(Job { key, input, reply: tx })
+            .send(Job { key, input, want_input_back, reply: tx })
             .map_err(|_| Error::serving("engine shut down"))?;
-        Ok(rx)
+        Ok(Pending { rx })
+    }
+
+    /// Submit a job and block for the reply.
+    pub fn execute_blocking(&self, key: ModelKey, input: Vec<f32>) -> Result<ExecOutput> {
+        self.submit(key, input)?.wait()
+    }
+
+    /// Submit a job over a caller-owned buffer and block for the reply;
+    /// the buffer's allocation is returned to `buf` afterwards so the
+    /// caller (the batcher flush path) never re-allocates per batch.
+    pub fn execute_batch(&self, key: ModelKey, buf: &mut Vec<f32>) -> Result<ExecOutput> {
+        self.validate(key, buf.len())?;
+        let input = std::mem::take(buf);
+        let pending = self.send_job(key, input, true)?;
+        let (result, recycled) = pending.wait_full();
+        if let Some(v) = recycled {
+            *buf = v;
+        }
+        result
+    }
+
+    /// Submit a job; the caller can collect the reply later (lets one
+    /// thread keep several models in flight across the worker pool).
+    pub fn submit(&self, key: ModelKey, input: Vec<f32>) -> Result<Pending> {
+        self.validate(key, input.len())?;
+        self.send_job(key, input, false)
     }
 
     /// Measure single-job service time for (model, batch): median of
     /// `reps` back-to-back executions with synthetic input (plus one
     /// discarded warm-up that triggers compilation).
     pub fn profile_model(&self, key: ModelKey, reps: usize) -> Result<Duration> {
-        let input = vec![0.1f32; key.1 * self.inner.clip_len];
-        self.execute_blocking(key, input.clone())?; // warm-up / compile
+        let mut buf = vec![0.1f32; key.1 * self.inner.clip_len];
+        self.execute_batch(key, &mut buf)?; // warm-up / compile
         let mut times: Vec<Duration> = Vec::with_capacity(reps);
         for _ in 0..reps {
             let t0 = Instant::now();
-            self.execute_blocking(key, input.clone())?;
+            self.execute_batch(key, &mut buf)?;
             times.push(t0.elapsed());
         }
         times.sort();
@@ -193,48 +285,22 @@ impl Engine {
     }
 }
 
-/// Compile an HLO-text file and time `reps` executions with a synthetic
-/// `(1, input_elems)` f32 input, inline on the calling thread (used by
-/// the Fig. 13 window-sweep harness and the runtime bench).
-pub fn bench_hlo_file(
-    path: &std::path::Path,
-    input_elems: usize,
-    reps: usize,
-) -> Result<Vec<Duration>> {
-    let client = xla::PjRtClient::cpu()?;
-    let proto = xla::HloModuleProto::from_text_file(
-        path.to_str().ok_or_else(|| Error::artifact("non-utf8 path"))?,
-    )?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    let exe = client.compile(&comp)?;
-    let input = vec![0.1f32; input_elems];
-    let lit = xla::Literal::vec1(&input).reshape(&[1, input_elems as i64])?;
-    exe.execute::<xla::Literal>(std::slice::from_ref(&lit))?; // warm-up
-    let mut out = Vec::with_capacity(reps);
-    for _ in 0..reps {
-        let t0 = Instant::now();
-        let r = exe.execute::<xla::Literal>(std::slice::from_ref(&lit))?;
-        let _ = r[0][0].to_literal_sync()?;
-        out.push(t0.elapsed());
-    }
-    Ok(out)
-}
-
-/// Device worker: own client, own executable cache, shared job FIFO.
+/// Device worker: backend-provided execution state + shared job FIFO.
 fn worker_loop(
     wid: usize,
     rx: Arc<Mutex<mpsc::Receiver<Job>>>,
-    paths: HashMap<ModelKey, PathBuf>,
+    backend: Arc<dyn ExecBackend>,
     stats: Arc<EngineStats>,
+    clip_len: usize,
 ) {
-    let client = match xla::PjRtClient::cpu() {
-        Ok(c) => c,
+    // Per-worker state (e.g. the PJRT client) lives on this thread only.
+    let mut worker = match backend.worker(wid) {
+        Ok(w) => w,
         Err(e) => {
-            eprintln!("pjrt-worker-{wid}: client init failed: {e}");
+            eprintln!("{}-worker-{wid}: backend init failed: {e}", backend.name());
             return;
         }
     };
-    let mut cache: HashMap<ModelKey, xla::PjRtLoadedExecutable> = HashMap::new();
     loop {
         // lock-recv: the free worker picks up the next job (GPU-pool model)
         let job = {
@@ -244,48 +310,67 @@ fn worker_loop(
                 Err(_) => return, // engine dropped
             }
         };
-        let result = run_job(&client, &mut cache, &paths, &job, wid, &stats);
-        let _ = job.reply.send(result);
+        let Job { key, input, want_input_back, reply } = job;
+        let result = worker.run(key, &input, clip_len).map(|out| {
+            if out.compiled {
+                stats.compile_count.fetch_add(1, Ordering::Relaxed);
+            }
+            stats.jobs.fetch_add(1, Ordering::Relaxed);
+            stats
+                .busy_ns
+                .fetch_add(out.exec_time.as_nanos() as u64, Ordering::Relaxed);
+            ExecOutput { scores: out.scores, exec_time: out.exec_time, worker: wid }
+        });
+        let recycled = want_input_back.then_some(input);
+        let _ = reply.send((result, recycled));
     }
 }
 
-fn run_job(
-    client: &xla::PjRtClient,
-    cache: &mut HashMap<ModelKey, xla::PjRtLoadedExecutable>,
-    paths: &HashMap<ModelKey, PathBuf>,
-    job: &Job,
-    wid: usize,
-    stats: &EngineStats,
-) -> Result<ExecOutput> {
-    if !cache.contains_key(&job.key) {
-        let path = paths
-            .get(&job.key)
-            .ok_or_else(|| Error::artifact(format!("unknown model key {:?}", job.key)))?;
+/// Compile an HLO-text file and time `reps` executions with a synthetic
+/// `(1, input_elems)` f32 input, inline on the calling thread (used by
+/// the Fig. 13 window-sweep harness and the runtime bench).
+///
+/// Without the `xla` feature this returns *modelled* durations from the
+/// same linear cost model the sim backend uses (overhead + c·elems) —
+/// a stand-in so the window-sweep harnesses still produce their curves
+/// offline; it is not a measurement.
+pub fn bench_hlo_file(
+    path: &std::path::Path,
+    input_elems: usize,
+    reps: usize,
+) -> Result<Vec<Duration>> {
+    #[cfg(feature = "xla")]
+    {
+        let client = xla::PjRtClient::cpu()?;
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().ok_or_else(|| Error::artifact("non-utf8 path"))?,
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = client.compile(&comp)?;
-        stats.compile_count.fetch_add(1, Ordering::Relaxed);
-        cache.insert(job.key, exe);
+        let input = vec![0.1f32; input_elems];
+        let lit = xla::Literal::vec1(&input).reshape(&[1, input_elems as i64])?;
+        exe.execute::<xla::Literal>(std::slice::from_ref(&lit))?; // warm-up
+        let mut out = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let r = exe.execute::<xla::Literal>(std::slice::from_ref(&lit))?;
+            let _ = r[0][0].to_literal_sync()?;
+            out.push(t0.elapsed());
+        }
+        Ok(out)
     }
-    let exe = cache.get(&job.key).expect("just inserted");
-    let (batch, clip_len) = (job.key.1 as i64, (job.input.len() / job.key.1) as i64);
-    let lit = xla::Literal::vec1(&job.input).reshape(&[batch, clip_len])?;
-    let t0 = Instant::now();
-    let out = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-    let exec_time = t0.elapsed();
-    // aot.py lowers with return_tuple=True → 1-tuple of (batch,) probs
-    let scores = out.to_tuple1()?.to_vec::<f32>()?;
-    stats.jobs.fetch_add(1, Ordering::Relaxed);
-    stats.busy_ns.fetch_add(exec_time.as_nanos() as u64, Ordering::Relaxed);
-    Ok(ExecOutput { scores, exec_time, worker: wid })
+    #[cfg(not(feature = "xla"))]
+    {
+        let _ = path;
+        let secs = 2e-4 + input_elems as f64 * 4e-9;
+        Ok(vec![Duration::from_secs_f64(secs); reps])
+    }
 }
 
 impl Drop for EngineInner {
     fn drop(&mut self) {
         // Drop the sender FIRST so worker `recv()` unblocks, then join to
-        // release PJRT state deterministically.
+        // release backend state deterministically.
         if let Ok(mut tx) = self.tx.lock() {
             tx.take();
         }
@@ -294,5 +379,57 @@ impl Drop for EngineInner {
                 let _ = w.join();
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo::testkit;
+
+    fn sim_engine(workers: usize) -> (Zoo, Engine) {
+        let zoo = testkit::toy_zoo_with(6, 32, 3, 40, &[1, 8]);
+        let engine =
+            Engine::with_backend(&zoo, workers, Arc::new(SimBackend::instant(&zoo))).unwrap();
+        (zoo, engine)
+    }
+
+    #[test]
+    fn batch_for_is_smallest_fit() {
+        let (_zoo, engine) = sim_engine(1);
+        assert_eq!(engine.batch_for(1), 1);
+        assert_eq!(engine.batch_for(2), 8);
+        assert_eq!(engine.batch_for(8), 8);
+        assert_eq!(engine.batch_for(20), 8); // saturates at the largest
+    }
+
+    #[test]
+    fn execute_batch_recycles_the_buffer() {
+        let (_zoo, engine) = sim_engine(1);
+        let clip = engine.clip_len();
+        let mut buf = vec![0.25f32; clip];
+        let ptr = buf.as_ptr();
+        let out = engine.execute_batch((0, 1), &mut buf).unwrap();
+        assert_eq!(out.scores.len(), 1);
+        assert_eq!(buf.len(), clip, "buffer returned");
+        assert_eq!(buf.as_ptr(), ptr, "same allocation reused");
+    }
+
+    #[test]
+    fn validation_rejects_bad_key_and_length() {
+        let (_zoo, engine) = sim_engine(1);
+        let clip = engine.clip_len();
+        assert!(engine.execute_blocking((99, 1), vec![0.0; clip]).is_err());
+        assert!(engine.execute_blocking((0, 1), vec![0.0; clip + 1]).is_err());
+    }
+
+    #[test]
+    fn stats_count_jobs() {
+        let (_zoo, engine) = sim_engine(2);
+        let clip = engine.clip_len();
+        for _ in 0..4 {
+            engine.execute_blocking((1, 1), vec![0.5; clip]).unwrap();
+        }
+        assert_eq!(engine.stats().jobs.load(Ordering::Relaxed), 4);
     }
 }

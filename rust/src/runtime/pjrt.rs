@@ -1,0 +1,80 @@
+//! PJRT execution backend (`--features xla`): loads the AOT-compiled
+//! HLO-text artifacts and runs them on the worker threads.
+//!
+//! The `xla` crate's PJRT handles wrap raw C pointers (`!Send`), so
+//! every worker builds its own `PjRtClient` plus a lazily-compiled
+//! executable cache on its own thread — the backend itself only carries
+//! the artifact path inventory.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use super::backend::{BackendOutput, ExecBackend, ExecWorker};
+use super::ModelKey;
+use crate::zoo::Zoo;
+use crate::{Error, Result};
+
+/// PJRT-backed execution: (model, batch) → compiled HLO artifact.
+pub struct PjrtBackend {
+    paths: HashMap<ModelKey, PathBuf>,
+}
+
+impl PjrtBackend {
+    /// Inventory every servable `(model, batch)` artifact of the zoo;
+    /// errors at construction if any batch variant is missing.
+    pub fn from_zoo(zoo: &Zoo) -> Result<Self> {
+        let mut paths = HashMap::new();
+        for &idx in &zoo.servable_indices() {
+            for &b in &zoo.manifest.batch_sizes {
+                paths.insert((idx, b), zoo.artifact_path(idx, b)?);
+            }
+        }
+        Ok(PjrtBackend { paths })
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn worker(&self, _wid: usize) -> Result<Box<dyn ExecWorker>> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Box::new(PjrtWorker { client, cache: HashMap::new(), paths: self.paths.clone() }))
+    }
+}
+
+struct PjrtWorker {
+    client: xla::PjRtClient,
+    cache: HashMap<ModelKey, xla::PjRtLoadedExecutable>,
+    paths: HashMap<ModelKey, PathBuf>,
+}
+
+impl ExecWorker for PjrtWorker {
+    fn run(&mut self, key: ModelKey, input: &[f32], _clip_len: usize) -> Result<BackendOutput> {
+        let mut compiled = false;
+        if !self.cache.contains_key(&key) {
+            let path = self
+                .paths
+                .get(&key)
+                .ok_or_else(|| Error::artifact(format!("unknown model key {key:?}")))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::artifact("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(key, exe);
+            compiled = true;
+        }
+        let exe = self.cache.get(&key).expect("just inserted");
+        let (batch, clip_len) = (key.1 as i64, (input.len() / key.1) as i64);
+        let lit = xla::Literal::vec1(input).reshape(&[batch, clip_len])?;
+        let t0 = Instant::now();
+        let out = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let exec_time = t0.elapsed();
+        // aot.py lowers with return_tuple=True → 1-tuple of (batch,) probs
+        let scores = out.to_tuple1()?.to_vec::<f32>()?;
+        Ok(BackendOutput { scores, exec_time, compiled })
+    }
+}

@@ -5,6 +5,8 @@
 //! a full observation window ΔT has been collected — so every model in
 //! the ensemble sees the *same* interval of time across sensors.
 
+use std::sync::Arc;
+
 use crate::ingest::{Frame, Modality};
 
 /// Synchronized multi-modal window ready for the ensemble.
@@ -15,8 +17,10 @@ pub struct WindowData {
     pub window_id: u64,
     /// Simulation time of the window end.
     pub sim_end: f64,
-    /// ECG leads, `clip_len` samples each.
-    pub leads: [Vec<f32>; 3],
+    /// ECG leads, `clip_len` samples each, in shared storage: the whole
+    /// serving data plane (router fan-out, batchers) borrows these
+    /// windows instead of cloning them per ensemble member.
+    pub leads: [Arc<[f32]>; 3],
     /// Mean vitals over the window (7 values; empty if none arrived).
     pub vitals: Vec<f32>,
     /// Latest labs seen (8 values; empty if none arrived).
@@ -112,11 +116,16 @@ impl WindowAggregator {
     }
 
     fn emit(&mut self, sim_end: f64) -> WindowData {
-        let leads = [
-            std::mem::take(&mut self.leads[0]),
-            std::mem::take(&mut self.leads[1]),
-            std::mem::take(&mut self.leads[2]),
+        // move each collected lead into shared storage once; downstream
+        // (router → every member's batcher) only clones the Arc handle
+        let leads: [Arc<[f32]>; 3] = [
+            Arc::from(std::mem::take(&mut self.leads[0])),
+            Arc::from(std::mem::take(&mut self.leads[1])),
+            Arc::from(std::mem::take(&mut self.leads[2])),
         ];
+        for lead in self.leads.iter_mut() {
+            lead.reserve(self.window_samples);
+        }
         let vitals = if self.vitals_count > 0 {
             self.vitals_acc
                 .iter()
@@ -156,8 +165,8 @@ mod tests {
         }
         let w = agg.push(&ecg_frame(0, 3.0, 3.0)).expect("window due");
         assert_eq!(w.window_id, 0);
-        assert_eq!(w.leads[0], vec![0.0, 1.0, 2.0, 3.0]);
-        assert_eq!(w.leads[2], vec![2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(w.leads[0].as_ref(), &[0.0, 1.0, 2.0, 3.0][..]);
+        assert_eq!(w.leads[2].as_ref(), &[2.0, 3.0, 4.0, 5.0][..]);
         assert_eq!(agg.fill(), 0, "buffer reset after emit");
     }
 
@@ -169,8 +178,8 @@ mod tests {
         let w1 = w1[1].as_ref().unwrap();
         let w2 = w2[1].as_ref().unwrap();
         assert_eq!(w1.window_id + 1, w2.window_id);
-        assert_eq!(w1.leads[0], vec![0.0, 1.0]);
-        assert_eq!(w2.leads[0], vec![2.0, 3.0]);
+        assert_eq!(w1.leads[0].as_ref(), &[0.0, 1.0][..]);
+        assert_eq!(w2.leads[0].as_ref(), &[2.0, 3.0][..]);
     }
 
     #[test]

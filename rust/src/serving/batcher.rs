@@ -1,12 +1,20 @@
 //! Per-model dynamic batcher actor: coalesces queries from many patients
 //! into one device batch (up to `max_batch`, or after `timeout`), pads
-//! to the nearest compiled batch size, executes through the engine and
-//! fans per-slot scores back to the collector.
+//! into a **persistent** batch buffer (reused across flushes — the only
+//! copy on the whole data plane), executes through the engine and fans
+//! per-slot scores back to the collector.
 //!
 //! One OS thread per selected model — the rust analogue of the paper's
-//! per-model Ray actor with its queue.
+//! per-model Ray actor with its queue. Items carry `Arc<[f32]>` windows
+//! shared with every other member's batcher; nothing is cloned here.
+//!
+//! Failure semantics: when an execution fails, every item of the batch
+//! is reported as [`ModelReport::Failed`] (the collector evicts the
+//! queries so blocked `submit()` callers error out instead of hanging),
+//! the still-queued backlog is drained and failed the same way, and the
+//! loop exits with the original error.
 
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::runtime::Engine;
@@ -16,9 +24,10 @@ use crate::{Error, Result};
 #[derive(Debug)]
 pub struct BatchItem {
     pub query_id: u64,
-    /// Raw (un-normalised) window for this model's lead; normalisation is
+    /// Raw (un-normalised) window for this model's lead, shared with the
+    /// aggregator and the other members' batchers; normalisation is
     /// baked into the HLO graph.
-    pub input: Vec<f32>,
+    pub input: Arc<[f32]>,
     /// When the parent query was emitted by its aggregator.
     pub enqueued: Instant,
 }
@@ -33,6 +42,15 @@ pub struct ModelScore {
     pub queue_wait: Duration,
     /// Device execution time of the batch that carried the item.
     pub exec_time: Duration,
+}
+
+/// One batcher → collector message.
+#[derive(Debug, Clone)]
+pub enum ModelReport {
+    Score(ModelScore),
+    /// The member could not score this query (engine error, bad input):
+    /// the collector evicts the pending entry and fails the caller.
+    Failed { query_id: u64, model_index: usize },
 }
 
 /// Batching policy knobs.
@@ -52,19 +70,31 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Why a flush could not complete.
+enum FlushError {
+    /// The collector hung up — pipeline shutdown, nothing to report.
+    Sink,
+    /// The engine (or input validation) failed; items were reported as
+    /// Failed already.
+    Exec(Error),
+}
+
 /// Run one model's batch loop until the input channel closes. `out` is
-/// called once per scored item; it returns Err when the collector is
-/// gone, which terminates the loop.
+/// called once per item (score or failure); it returns Err when the
+/// collector is gone, which terminates the loop.
 pub fn model_batch_loop(
     model_index: usize,
     engine: Engine,
     rx: mpsc::Receiver<BatchItem>,
-    mut out: impl FnMut(ModelScore) -> Result<()>,
+    mut out: impl FnMut(ModelReport) -> Result<()>,
     policy: BatchPolicy,
 ) -> Result<()> {
     let clip_len = engine.clip_len();
     let max_take = policy.max_batch.min(largest_batch(&engine)).max(1);
     let mut pending: Vec<BatchItem> = Vec::with_capacity(max_take);
+    // persistent padded batch buffer: allocated once, recycled through
+    // Engine::execute_batch on every flush
+    let mut buf: Vec<f32> = Vec::new();
     loop {
         // fill phase: block for the first item, then wait up to `timeout`
         // for the batch to fill
@@ -106,14 +136,28 @@ pub fn model_batch_loop(
                 Err(mpsc::RecvTimeoutError::Disconnected) => closed = true,
             }
         }
-        flush(model_index, &engine, clip_len, &mut pending, &mut out, max_take)?;
+        match flush(model_index, &engine, clip_len, &mut pending, &mut buf, &mut out, max_take) {
+            Ok(()) => {}
+            Err(FlushError::Sink) => return Err(Error::serving("collector gone")),
+            Err(FlushError::Exec(e)) => {
+                drain_and_fail(model_index, &mut pending, &rx, &mut out);
+                return Err(e);
+            }
+        }
         if closed && pending.is_empty() {
             break;
         }
     }
     // final drain
     while !pending.is_empty() {
-        flush(model_index, &engine, clip_len, &mut pending, &mut out, max_take)?;
+        match flush(model_index, &engine, clip_len, &mut pending, &mut buf, &mut out, max_take) {
+            Ok(()) => {}
+            Err(FlushError::Sink) => return Err(Error::serving("collector gone")),
+            Err(FlushError::Exec(e)) => {
+                drain_and_fail(model_index, &mut pending, &rx, &mut out);
+                return Err(e);
+            }
+        }
     }
     Ok(())
 }
@@ -123,39 +167,83 @@ fn flush(
     engine: &Engine,
     clip_len: usize,
     pending: &mut Vec<BatchItem>,
-    out: &mut impl FnMut(ModelScore) -> Result<()>,
+    buf: &mut Vec<f32>,
+    out: &mut impl FnMut(ModelReport) -> Result<()>,
     max_take: usize,
-) -> Result<()> {
+) -> std::result::Result<(), FlushError> {
+    // weed out malformed items per item (cannot happen via Pipeline,
+    // which validates lead lengths at the router; defensive for direct
+    // users of model_batch_loop) — a bad query must not kill the member
+    // or fail its co-batched neighbours
+    let mut i = 0;
+    while i < pending.len() {
+        if pending[i].input.len() != clip_len {
+            let item = pending.remove(i);
+            let _ = out(ModelReport::Failed { query_id: item.query_id, model_index });
+        } else {
+            i += 1;
+        }
+    }
     if pending.is_empty() {
         return Ok(());
     }
     let take = pending.len().min(max_take);
-    let items: Vec<BatchItem> = pending.drain(..take).collect();
-    let batch = engine.batch_for(items.len());
-    let mut input = vec![0.0f32; batch * clip_len];
-    for (slot, item) in items.iter().enumerate() {
-        if item.input.len() != clip_len {
-            return Err(Error::config(format!(
-                "batch item clip length {} != {}",
-                item.input.len(),
-                clip_len
-            )));
-        }
-        input[slot * clip_len..(slot + 1) * clip_len].copy_from_slice(&item.input);
+    let batch = engine.batch_for(take);
+    buf.clear();
+    buf.resize(batch * clip_len, 0.0);
+    for (slot, item) in pending[..take].iter().enumerate() {
+        buf[slot * clip_len..(slot + 1) * clip_len].copy_from_slice(&item.input);
     }
     let started = Instant::now();
-    let result = engine.execute_blocking((model_index, batch), input)?;
-    for (slot, item) in items.into_iter().enumerate() {
-        let report = ModelScore {
-            query_id: item.query_id,
-            model_index,
-            score: result.scores[slot],
-            queue_wait: started.duration_since(item.enqueued),
-            exec_time: result.exec_time,
-        };
-        out(report)?;
+    match engine.execute_batch((model_index, batch), buf) {
+        Ok(result) => {
+            for (slot, item) in pending.drain(..take).enumerate() {
+                let report = ModelScore {
+                    query_id: item.query_id,
+                    model_index,
+                    score: result.scores[slot],
+                    queue_wait: started.duration_since(item.enqueued),
+                    exec_time: result.exec_time,
+                };
+                out(ModelReport::Score(report)).map_err(|_| FlushError::Sink)?;
+            }
+            Ok(())
+        }
+        Err(e) => {
+            fail_batch(model_index, pending, take, out);
+            Err(FlushError::Exec(e))
+        }
     }
-    Ok(())
+}
+
+/// Report the first `take` buffered items as failed (collector may
+/// already be gone — ignore send errors, we are on the way out).
+fn fail_batch(
+    model_index: usize,
+    pending: &mut Vec<BatchItem>,
+    take: usize,
+    out: &mut impl FnMut(ModelReport) -> Result<()>,
+) {
+    for item in pending.drain(..take) {
+        let _ = out(ModelReport::Failed { query_id: item.query_id, model_index });
+    }
+}
+
+/// Terminal eviction after an execution error: fail everything still
+/// buffered plus everything that keeps arriving until the router hangs
+/// up, so no registered query is left dangling in the pending table.
+fn drain_and_fail(
+    model_index: usize,
+    pending: &mut Vec<BatchItem>,
+    rx: &mpsc::Receiver<BatchItem>,
+    out: &mut impl FnMut(ModelReport) -> Result<()>,
+) {
+    for item in pending.drain(..) {
+        let _ = out(ModelReport::Failed { query_id: item.query_id, model_index });
+    }
+    for item in rx.iter() {
+        let _ = out(ModelReport::Failed { query_id: item.query_id, model_index });
+    }
 }
 
 fn largest_batch(engine: &Engine) -> usize {

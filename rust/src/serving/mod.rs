@@ -19,6 +19,15 @@
 //! Stateful compute (aggregation) and stateless compute (model
 //! inference) are separated exactly as the paper requires of its
 //! serving platform.
+//!
+//! The data plane is zero-copy end to end: aggregators emit lead
+//! windows as `Arc<[f32]>`, the dispatcher fans references (not
+//! copies) to every member's batcher, per-query bagging state lives in
+//! a striped pending table, and each batcher pads into one persistent
+//! reusable buffer — see [`pipeline`] for the architecture diagram.
+//! Model execution goes through the pluggable
+//! [`ExecBackend`](crate::runtime::ExecBackend) (sim by default, PJRT
+//! with `--features xla`).
 
 pub mod aggregator;
 pub mod batcher;
@@ -27,5 +36,5 @@ pub mod profile;
 pub mod telemetry;
 
 pub use aggregator::WindowAggregator;
-pub use pipeline::{Pipeline, PipelineConfig, Prediction, Query};
+pub use pipeline::{share_leads, Pipeline, PipelineConfig, Prediction, Query};
 pub use telemetry::{LatencyHistogram, Telemetry};

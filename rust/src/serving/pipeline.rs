@@ -1,18 +1,40 @@
 //! The ensemble serving pipeline: router + per-model batcher actors +
 //! bagging collector, wired over std channels (Fig. 4).
 //!
-//! Thread topology (the rust substitute for the paper's Ray actors):
+//! ## Data-plane architecture (zero-copy, shard-parallel)
 //!
 //! ```text
 //!  Pipeline handles ──queries──► router thread ──items──► batcher threads
-//!                                   │ register                │ scores
-//!                                   ▼                         ▼
-//!                         shared pending table ◄──── collector thread
+//!        │                          │ register               │  persistent
+//!        │  leads: [Arc<[f32]>; 3]  │                        │  padded buffer
+//!        │  (shared, never cloned)  ▼                        ▼
+//!        │                 striped pending table        ExecBackend engine
+//!        │               (N mutexes, keyed id % N)      (sim | pjrt workers)
+//!        │                          ▲                        │ scores
+//!        ▼                          │                        ▼
+//!      reply rx ◄─────────── collector thread ◄──────────────┘
 //! ```
+//!
+//! * **Zero-copy windows** — the aggregator emits each lead window once
+//!   as `Arc<[f32]>`; the router hands every ensemble member a
+//!   reference, and the only remaining copy is the single slot-write
+//!   into the batcher's persistent padded batch buffer.
+//! * **Striped pending table** — per-query bagging state is sharded
+//!   over [`PENDING_STRIPES`] mutexes keyed by `query_id`, so the
+//!   router (registering) and the collector (scoring) contend only when
+//!   they touch the same stripe, not on one global lock.
+//! * **Deterministic bagging** — member scores are accumulated per
+//!   model and summed in model-index order at completion, so a query's
+//!   ensemble score is bit-for-bit identical regardless of batch
+//!   composition or arrival order.
+//! * **Failure eviction** — when a member cannot score a query (engine
+//!   error, dead batcher), the entry is evicted and the caller's reply
+//!   channel drops, so `submit()` callers fail fast instead of leaking
+//!   entries with `remaining > 0` forever.
 //!
 //! Shutdown is acyclic: dropping the last `Pipeline` handle closes the
 //! query channel → the router exits and drops the per-model item
-//! senders → batchers drain and exit, dropping the score sender → the
+//! senders → batchers drain and exit, dropping the report sender → the
 //! collector exits. No thread outlives the pipeline.
 
 use std::collections::HashMap;
@@ -20,19 +42,33 @@ use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::batcher::{model_batch_loop, BatchItem, BatchPolicy, ModelScore};
+use super::batcher::{model_batch_loop, BatchItem, BatchPolicy, ModelReport};
 use super::telemetry::Telemetry;
 use crate::runtime::Engine;
 use crate::zoo::{Selector, Zoo};
 use crate::{Error, Result};
 
+/// Number of pending-table shards (power of two; a query lives in
+/// stripe `query_id % PENDING_STRIPES`).
+pub const PENDING_STRIPES: usize = 16;
+
+/// Move a triple of freshly collected lead windows into shared storage:
+/// one allocation per lead, after which every ensemble member borrows
+/// the same samples.
+pub fn share_leads(leads: [Vec<f32>; 3]) -> [Arc<[f32]>; 3] {
+    let [a, b, c] = leads;
+    [Arc::from(a), Arc::from(b), Arc::from(c)]
+}
+
 /// One ensemble query: a synchronized multi-lead observation window.
+/// Leads are reference-counted slices shared across the whole data
+/// plane — cloning a `Query` never copies samples.
 #[derive(Debug, Clone)]
 pub struct Query {
     pub patient: usize,
     pub window_id: u64,
     pub sim_end: f64,
-    pub leads: [Vec<f32>; 3],
+    pub leads: [Arc<[f32]>; 3],
     /// Wall-clock emission instant (set by the aggregator).
     pub emitted: Instant,
 }
@@ -47,6 +83,17 @@ impl Query {
             emitted: Instant::now(),
         }
     }
+
+    /// Build a query from owned lead vectors (load generators, tests).
+    pub fn from_vecs(patient: usize, window_id: u64, sim_end: f64, leads: [Vec<f32>; 3]) -> Self {
+        Query {
+            patient,
+            window_id,
+            sim_end,
+            leads: share_leads(leads),
+            emitted: Instant::now(),
+        }
+    }
 }
 
 /// Bagging-ensemble prediction (Eq. 5) with latency breakdown.
@@ -55,7 +102,8 @@ pub struct Prediction {
     pub patient: usize,
     pub window_id: u64,
     pub sim_end: f64,
-    /// Mean probability over the ensemble members.
+    /// Mean probability over the ensemble members (summed in
+    /// model-index order — deterministic across batchings).
     pub score: f64,
     pub n_models: usize,
     /// End-to-end: emission → all members scored (T_q + T_s).
@@ -78,6 +126,11 @@ impl PipelineConfig {
     pub fn new(ensemble: Selector) -> Self {
         PipelineConfig { ensemble, policy: BatchPolicy::default() }
     }
+
+    pub fn with_policy(mut self, policy: BatchPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
 }
 
 struct PendingQuery {
@@ -86,13 +139,54 @@ struct PendingQuery {
     sim_end: f64,
     emitted: Instant,
     remaining: usize,
-    sum: f64,
+    /// (model index, score) per member already collected; summed in
+    /// model-index order at completion for a deterministic bagging mean.
+    member_scores: Vec<(usize, f32)>,
     n_models: usize,
     min_queue_wait: Duration,
     reply: Option<mpsc::SyncSender<Prediction>>,
 }
 
-type PendingTable = Arc<Mutex<HashMap<u64, PendingQuery>>>;
+/// Sharded pending-query table: router and collector operate on
+/// different queries almost always, so striping removes the single
+/// global lock from the hot path.
+struct PendingTable {
+    stripes: Vec<Mutex<HashMap<u64, PendingQuery>>>,
+}
+
+impl PendingTable {
+    fn new() -> Self {
+        PendingTable {
+            stripes: (0..PENDING_STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    fn stripe(&self, query_id: u64) -> &Mutex<HashMap<u64, PendingQuery>> {
+        &self.stripes[(query_id % PENDING_STRIPES as u64) as usize]
+    }
+
+    fn insert(&self, query_id: u64, entry: PendingQuery) {
+        self.stripe(query_id)
+            .lock()
+            .expect("pending stripe poisoned")
+            .insert(query_id, entry);
+    }
+
+    fn remove(&self, query_id: u64) -> Option<PendingQuery> {
+        self.stripe(query_id)
+            .lock()
+            .expect("pending stripe poisoned")
+            .remove(&query_id)
+    }
+
+    /// Total in-flight queries (diagnostics + leak assertions in tests).
+    fn len(&self) -> usize {
+        self.stripes
+            .iter()
+            .map(|s| s.lock().expect("pending stripe poisoned").len())
+            .sum()
+    }
+}
 
 /// Handle to a running pipeline. Cheap to clone. Dropping all handles
 /// shuts the pipeline down (batchers drain, engine stays alive).
@@ -100,6 +194,7 @@ type PendingTable = Arc<Mutex<HashMap<u64, PendingQuery>>>;
 pub struct Pipeline {
     tx: mpsc::Sender<(Query, Option<mpsc::SyncSender<Prediction>>)>,
     telemetry: Arc<Telemetry>,
+    pending: Arc<PendingTable>,
     ensemble: Selector,
     clip_len: usize,
 }
@@ -121,8 +216,8 @@ impl Pipeline {
             }
         }
         let telemetry = Arc::new(Telemetry::default());
-        let pending: PendingTable = Arc::new(Mutex::new(HashMap::new()));
-        let (score_tx, score_rx) = mpsc::channel::<ModelScore>();
+        let pending = Arc::new(PendingTable::new());
+        let (report_tx, report_rx) = mpsc::channel::<ModelReport>();
 
         // batcher actor per selected model
         let mut model_txs: HashMap<usize, mpsc::Sender<BatchItem>> = HashMap::new();
@@ -131,12 +226,12 @@ impl Pipeline {
             model_txs.insert(i, btx);
             let engine = engine.clone();
             let policy = cfg.policy;
-            let stx = score_tx.clone();
+            let stx = report_tx.clone();
             std::thread::Builder::new()
                 .name(format!("batcher-{i}"))
                 .spawn(move || {
-                    let out = |s: ModelScore| {
-                        stx.send(s).map_err(|_| Error::serving("collector gone"))
+                    let out = |r: ModelReport| {
+                        stx.send(r).map_err(|_| Error::serving("collector gone"))
                     };
                     if let Err(e) = model_batch_loop(i, engine, brx, out, policy) {
                         eprintln!("model batcher {i} exited: {e}");
@@ -144,7 +239,7 @@ impl Pipeline {
                 })
                 .map_err(Error::Io)?;
         }
-        drop(score_tx); // collector ends when the last batcher exits
+        drop(report_tx); // collector ends when the last batcher exits
 
         // collector thread
         {
@@ -152,7 +247,7 @@ impl Pipeline {
             let telemetry = Arc::clone(&telemetry);
             std::thread::Builder::new()
                 .name("collector".into())
-                .spawn(move || collector_loop(score_rx, pending, telemetry))
+                .spawn(move || collector_loop(report_rx, pending, telemetry))
                 .map_err(Error::Io)?;
         }
 
@@ -161,18 +256,23 @@ impl Pipeline {
             mpsc::channel::<(Query, Option<mpsc::SyncSender<Prediction>>)>();
         {
             let pending = Arc::clone(&pending);
+            let telemetry = Arc::clone(&telemetry);
             let leads: HashMap<usize, usize> =
                 cfg.ensemble.indices().iter().map(|&i| (i, zoo.model(i).lead)).collect();
             let ensemble = cfg.ensemble.clone();
+            let clip_len = zoo.manifest.clip_len;
             std::thread::Builder::new()
                 .name("router".into())
-                .spawn(move || router_loop(query_rx, model_txs, leads, ensemble, pending))
+                .spawn(move || {
+                    router_loop(query_rx, model_txs, leads, ensemble, clip_len, pending, telemetry)
+                })
                 .map_err(Error::Io)?;
         }
 
         Ok(Pipeline {
             tx,
             telemetry,
+            pending,
             ensemble: cfg.ensemble,
             clip_len: zoo.manifest.clip_len,
         })
@@ -190,7 +290,14 @@ impl Pipeline {
         self.clip_len
     }
 
+    /// Queries currently registered and not yet completed/evicted.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
     /// Submit a query; receive the prediction on the returned channel.
+    /// If the query fails (a member's engine execution errors), the
+    /// channel hangs up without a message.
     pub fn submit(&self, query: Query) -> Result<PredictionRx> {
         let (tx, rx) = mpsc::sync_channel(1);
         self.tx
@@ -219,35 +326,53 @@ fn router_loop(
     model_txs: HashMap<usize, mpsc::Sender<BatchItem>>,
     leads: HashMap<usize, usize>,
     ensemble: Selector,
-    pending: PendingTable,
+    clip_len: usize,
+    pending: Arc<PendingTable>,
+    telemetry: Arc<Telemetry>,
 ) {
     let mut next_id: u64 = 0;
     for (q, reply) in rx {
+        // reject malformed windows before registering anything: the
+        // reply sender drops here, so the caller errors immediately and
+        // no batcher ever sees a wrong-length input
+        if q.leads.iter().any(|l| l.len() != clip_len) {
+            telemetry.failures.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
         let id = next_id;
         next_id += 1;
-        pending.lock().expect("pending table poisoned").insert(
+        let n_models = ensemble.len();
+        pending.insert(
             id,
             PendingQuery {
                 patient: q.patient,
                 window_id: q.window_id,
                 sim_end: q.sim_end,
                 emitted: q.emitted,
-                remaining: ensemble.len(),
-                sum: 0.0,
-                n_models: ensemble.len(),
+                remaining: n_models,
+                member_scores: Vec::with_capacity(n_models),
+                n_models,
                 min_queue_wait: Duration::MAX,
                 reply,
             },
         );
         for &m in ensemble.indices() {
+            // zero-copy fan-out: every member shares the same window
             let item = BatchItem {
                 query_id: id,
-                input: q.leads[leads[&m]].clone(),
+                input: Arc::clone(&q.leads[leads[&m]]),
                 enqueued: q.emitted,
             };
             if model_txs[&m].send(item).is_err() {
-                // batcher died: fail the query (reply hangs up on drop)
-                pending.lock().expect("pending table poisoned").remove(&id);
+                // batcher died: evict the query; members already
+                // dispatched find no entry and are skipped. Count before
+                // dropping the entry so the failure is visible by the
+                // time the caller's reply channel hangs up.
+                let evicted = pending.remove(id);
+                if evicted.is_some() {
+                    telemetry.failures.fetch_add(1, Ordering::Relaxed);
+                }
+                drop(evicted);
                 break;
             }
         }
@@ -255,41 +380,72 @@ fn router_loop(
     // router exit drops model_txs → batchers drain and exit
 }
 
-fn collector_loop(rx: mpsc::Receiver<ModelScore>, pending: PendingTable, telemetry: Arc<Telemetry>) {
-    for s in rx {
-        telemetry.exec.record(s.exec_time);
-        telemetry.model_jobs.fetch_add(1, Ordering::Relaxed);
-        let done = {
-            let mut table = pending.lock().expect("pending table poisoned");
-            let Some(entry) = table.get_mut(&s.query_id) else { continue };
-            entry.sum += s.score as f64;
-            entry.remaining -= 1;
-            if s.queue_wait < entry.min_queue_wait {
-                entry.min_queue_wait = s.queue_wait;
+fn collector_loop(
+    rx: mpsc::Receiver<ModelReport>,
+    pending: Arc<PendingTable>,
+    telemetry: Arc<Telemetry>,
+) {
+    for report in rx {
+        match report {
+            ModelReport::Score(s) => {
+                telemetry.exec.record(s.exec_time);
+                telemetry.model_jobs.fetch_add(1, Ordering::Relaxed);
+                let done = {
+                    let mut table =
+                        pending.stripe(s.query_id).lock().expect("pending stripe poisoned");
+                    let Some(entry) = table.get_mut(&s.query_id) else { continue };
+                    entry.member_scores.push((s.model_index, s.score));
+                    entry.remaining -= 1;
+                    if s.queue_wait < entry.min_queue_wait {
+                        entry.min_queue_wait = s.queue_wait;
+                    }
+                    if entry.remaining == 0 {
+                        table.remove(&s.query_id)
+                    } else {
+                        None
+                    }
+                };
+                if let Some(entry) = done {
+                    finish(entry, &telemetry);
+                }
             }
-            if entry.remaining == 0 {
-                table.remove(&s.query_id)
-            } else {
-                None
-            }
-        };
-        if let Some(entry) = done {
-            let e2e = entry.emitted.elapsed();
-            telemetry.e2e.record(e2e);
-            telemetry.queueing.record(entry.min_queue_wait);
-            telemetry.queries.fetch_add(1, Ordering::Relaxed);
-            let prediction = Prediction {
-                patient: entry.patient,
-                window_id: entry.window_id,
-                sim_end: entry.sim_end,
-                score: entry.sum / entry.n_models as f64,
-                n_models: entry.n_models,
-                e2e,
-                queueing: entry.min_queue_wait,
-            };
-            if let Some(reply) = entry.reply {
-                let _ = reply.send(prediction);
+            ModelReport::Failed { query_id, .. } => {
+                // Evict: dropping the entry drops its reply sender, so a
+                // blocked submit()/query() caller unblocks with an error
+                // instead of waiting on `remaining > 0` forever. Count
+                // one failure per evicted query (not per failing member),
+                // and count before dropping so it is visible by the time
+                // the caller observes the hang-up.
+                let evicted = pending.remove(query_id);
+                if evicted.is_some() {
+                    telemetry.failures.fetch_add(1, Ordering::Relaxed);
+                }
+                drop(evicted);
             }
         }
+    }
+}
+
+/// Complete one query: deterministic bagging mean + telemetry + reply.
+fn finish(mut entry: PendingQuery, telemetry: &Telemetry) {
+    let e2e = entry.emitted.elapsed();
+    telemetry.e2e.record(e2e);
+    telemetry.queueing.record(entry.min_queue_wait);
+    telemetry.queries.fetch_add(1, Ordering::Relaxed);
+    // sum in model-index order so the bagging mean does not depend on
+    // score arrival order (f64 addition is not associative)
+    entry.member_scores.sort_unstable_by_key(|&(m, _)| m);
+    let sum: f64 = entry.member_scores.iter().map(|&(_, s)| s as f64).sum();
+    let prediction = Prediction {
+        patient: entry.patient,
+        window_id: entry.window_id,
+        sim_end: entry.sim_end,
+        score: sum / entry.n_models as f64,
+        n_models: entry.n_models,
+        e2e,
+        queueing: entry.min_queue_wait,
+    };
+    if let Some(reply) = entry.reply {
+        let _ = reply.send(prediction);
     }
 }

@@ -65,9 +65,10 @@ pub fn profile_ensemble(
     }
     let pipeline = Pipeline::spawn(zoo, engine, PipelineConfig::new(b.clone()))?;
     let clip_len = zoo.manifest.clip_len;
-    // one representative clip, reused for every probe query
+    // one representative clip in shared storage, reused (by reference)
+    // for every probe query
     let clips = data::make_clips(1, clip_len, 1234, &SynthConfig::default());
-    let leads = clips.clips[0].clone();
+    let leads = clips.shared().swap_remove(0);
 
     // warm compile every (model, batch) variant out of the measurement
     for &m in b.indices() {

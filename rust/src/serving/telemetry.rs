@@ -100,6 +100,8 @@ pub struct Telemetry {
     pub queries: AtomicU64,
     pub model_jobs: AtomicU64,
     pub frames: AtomicU64,
+    /// Queries evicted because a member could not score them.
+    pub failures: AtomicU64,
 }
 
 impl Telemetry {
@@ -108,6 +110,7 @@ impl Telemetry {
             queries: self.queries.load(Ordering::Relaxed),
             model_jobs: self.model_jobs.load(Ordering::Relaxed),
             frames: self.frames.load(Ordering::Relaxed),
+            failures: self.failures.load(Ordering::Relaxed),
             e2e_mean: self.e2e.mean(),
             e2e_p50: self.e2e.percentile(50.0),
             e2e_p95: self.e2e.percentile(95.0),
@@ -127,6 +130,7 @@ pub struct TelemetrySnapshot {
     pub queries: u64,
     pub model_jobs: u64,
     pub frames: u64,
+    pub failures: u64,
     pub e2e_mean: f64,
     pub e2e_p50: f64,
     pub e2e_p95: f64,
@@ -145,6 +149,7 @@ impl TelemetrySnapshot {
             ("queries", Value::Num(self.queries as f64)),
             ("model_jobs", Value::Num(self.model_jobs as f64)),
             ("frames", Value::Num(self.frames as f64)),
+            ("failures", Value::Num(self.failures as f64)),
             ("e2e_mean", Value::Num(self.e2e_mean)),
             ("e2e_p50", Value::Num(self.e2e_p50)),
             ("e2e_p95", Value::Num(self.e2e_p95)),

@@ -438,6 +438,19 @@ pub mod testkit {
     /// val AUC rises with index; MACs also rise with index so accuracy
     /// and latency trade off, like the real zoo.
     pub fn toy_zoo(n: usize, n_val: usize, seed: u64) -> Zoo {
+        toy_zoo_with(n, n_val, seed, 100, &[1])
+    }
+
+    /// [`toy_zoo`] with explicit clip length and compiled batch sizes —
+    /// the serving/engine tests and benches need multi-batch zoos with
+    /// realistically sized windows.
+    pub fn toy_zoo_with(
+        n: usize,
+        n_val: usize,
+        seed: u64,
+        clip_len: usize,
+        batch_sizes: &[usize],
+    ) -> Zoo {
         let mut rng = crate::rng::Rng::seed_from_u64(seed);
         let labels: Vec<u8> = (0..n_val).map(|_| rng.bool(0.5) as u8).collect();
         let mut models = Vec::with_capacity(n);
@@ -464,11 +477,12 @@ pub mod testkit {
                 params: 10_000 * (i as u64 + 1),
                 memory_bytes: 40_000,
                 input_modality: format!("ECG-lead-{}", i % 3),
-                input_len: 100,
+                input_len: clip_len,
                 val_auc: auc,
                 trained: true,
-                artifacts: [("1".to_string(), format!("models/m{i}_b1.hlo.txt"))]
-                    .into_iter()
+                artifacts: batch_sizes
+                    .iter()
+                    .map(|&b| (b.to_string(), format!("models/m{i}_b{b}.hlo.txt")))
                     .collect(),
             });
             scores.push(row);
@@ -477,9 +491,9 @@ pub mod testkit {
             root: std::path::PathBuf::from("/nonexistent-toy-zoo"),
             manifest: Manifest {
                 version: 1,
-                clip_len: 100,
+                clip_len,
                 fs: 250,
-                batch_sizes: vec![1],
+                batch_sizes: batch_sizes.to_vec(),
                 n_models: n,
                 calibration: Calibration {
                     fs: 250,

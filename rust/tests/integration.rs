@@ -1,8 +1,11 @@
-//! Integration tests over the real AOT artifacts: zoo → PJRT engine →
+//! Integration tests over the real AOT artifacts: zoo → engine →
 //! serving pipeline → composer, all layers composed.
 //!
-//! Requires `make artifacts` (the repo ships with them built); every
-//! test loads from `<manifest dir>/artifacts`.
+//! Requires `make artifacts`; when the artifact directory is absent
+//! (e.g. a fresh offline checkout) every test here skips — the
+//! artifact-free data-plane coverage lives in `tests/sim_pipeline.rs`.
+//! Tests that depend on real HLO numerics are additionally gated on
+//! `--features xla`.
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -21,13 +24,28 @@ fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-fn load_zoo() -> Zoo {
-    Zoo::load(artifacts_dir()).expect("run `make artifacts` first")
+fn try_load_zoo() -> Option<Zoo> {
+    let dir = artifacts_dir();
+    if !dir.join("zoo_manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Zoo::load(dir).expect("artifacts load"))
+}
+
+/// Skip the test (early return) when the artifacts are not built.
+macro_rules! require_zoo {
+    () => {
+        match try_load_zoo() {
+            Some(zoo) => zoo,
+            None => return,
+        }
+    };
 }
 
 #[test]
 fn zoo_loads_and_validates() {
-    let zoo = load_zoo();
+    let zoo = require_zoo!();
     assert_eq!(zoo.n(), 60);
     assert!(zoo.servable_indices().len() >= 3);
     assert_eq!(zoo.val.labels.len(), zoo.manifest.val_n);
@@ -39,7 +57,7 @@ fn zoo_loads_and_validates() {
 
 #[test]
 fn engine_executes_every_servable_model() {
-    let zoo = load_zoo();
+    let zoo = require_zoo!();
     let engine = Engine::new(&zoo, 1).unwrap();
     let clip_len = zoo.manifest.clip_len;
     let input = vec![0.25f32; clip_len];
@@ -53,7 +71,7 @@ fn engine_executes_every_servable_model() {
 
 #[test]
 fn batch8_slot0_matches_batch1() {
-    let zoo = load_zoo();
+    let zoo = require_zoo!();
     let engine = Engine::new(&zoo, 1).unwrap();
     let clip_len = zoo.manifest.clip_len;
     let idx = zoo.servable_indices()[0];
@@ -72,7 +90,7 @@ fn batch8_slot0_matches_batch1() {
 
 #[test]
 fn pipeline_end_to_end_single_query() {
-    let zoo = load_zoo();
+    let zoo = require_zoo!();
     let engine = Engine::new(&zoo, 2).unwrap();
     let members: Vec<usize> = zoo.servable_indices().into_iter().take(3).collect();
     let n_members = members.len();
@@ -81,13 +99,7 @@ fn pipeline_end_to_end_single_query() {
 
     let clips = data::make_clips(1, zoo.manifest.clip_len, 6, &SynthConfig::default());
     let pred = pipeline
-        .query(Query {
-            patient: 3,
-            window_id: 9,
-            sim_end: 30.0,
-            leads: clips.clips[0].clone(),
-            emitted: Instant::now(),
-        })
+        .query(Query::from_vecs(3, 9, 30.0, clips.clips[0].clone()))
         .unwrap();
     assert_eq!(pred.patient, 3);
     assert_eq!(pred.window_id, 9);
@@ -98,16 +110,18 @@ fn pipeline_end_to_end_single_query() {
     let snap = pipeline.telemetry().snapshot();
     assert_eq!(snap.queries, 1);
     assert_eq!(snap.model_jobs as usize, n_members);
+    assert_eq!(pipeline.pending_len(), 0);
 }
 
 #[test]
 fn pipeline_handles_concurrent_burst() {
-    let zoo = load_zoo();
+    let zoo = require_zoo!();
     let engine = Engine::new(&zoo, 2).unwrap();
     let members: Vec<usize> = zoo.servable_indices().into_iter().take(2).collect();
     let ensemble = Selector::from_indices(zoo.n(), members);
     let pipeline = Pipeline::spawn(&zoo, &engine, PipelineConfig::new(ensemble)).unwrap();
     let clips = data::make_clips(4, zoo.manifest.clip_len, 8, &SynthConfig::default());
+    let shared = clips.shared();
 
     let n = 16;
     let mut replies = Vec::new();
@@ -118,7 +132,7 @@ fn pipeline_handles_concurrent_burst() {
                     patient: i,
                     window_id: 0,
                     sim_end: 0.0,
-                    leads: clips.clips[i % clips.len()].clone(),
+                    leads: shared[i % shared.len()].clone(),
                     emitted: Instant::now(),
                 })
                 .unwrap(),
@@ -132,11 +146,12 @@ fn pipeline_handles_concurrent_burst() {
     }
     assert_eq!(got, n);
     assert_eq!(pipeline.telemetry().snapshot().queries, n as u64);
+    assert_eq!(pipeline.pending_len(), 0);
 }
 
 #[test]
 fn analytic_profiler_calibrates_against_engine() {
-    let zoo = load_zoo();
+    let zoo = require_zoo!();
     let engine = Engine::new(&zoo, 1).unwrap();
     let times = ServiceTimes::calibrate(&zoo, &engine, 3).unwrap();
     // measured times must be positive and roughly monotone in MACs
@@ -158,7 +173,7 @@ fn analytic_profiler_calibrates_against_engine() {
 
 #[test]
 fn composer_over_real_zoo_respects_budget_and_beats_lf() {
-    let zoo = load_zoo();
+    let zoo = require_zoo!();
     let system = SystemConfig { gpus: 2, patients: 32, window_s: 30.0 };
     let ctx = SearchContext::new(&zoo, system);
     let cfg = ComposerConfig::default();
@@ -177,7 +192,7 @@ fn composer_over_real_zoo_respects_budget_and_beats_lf() {
 
 #[test]
 fn window_sweep_artifacts_execute() {
-    let zoo = load_zoo();
+    let zoo = require_zoo!();
     let Some(sweep) = &zoo.manifest.window_sweep else {
         panic!("artifacts built without --window-sweep");
     };
@@ -192,10 +207,17 @@ fn window_sweep_artifacts_execute() {
     assert!(times[0].as_nanos() > 0);
 }
 
+/// Real-HLO numeric parity against the python probe — meaningless on
+/// the sim backend, so gated on the PJRT feature.
+#[cfg(feature = "xla")]
 #[test]
 fn python_rust_numeric_parity() {
     // the probe `aot.py` wrote: same input, same artifact, same score
     let dir = artifacts_dir();
+    if !dir.join("parity.json").exists() {
+        eprintln!("skipping: parity probe not built");
+        return;
+    }
     let text = std::fs::read_to_string(dir.join("parity.json")).expect("parity probe");
     let v = holmes::json::Value::parse(&text).unwrap();
     let model_id = v.req("model_id").unwrap().as_str().unwrap().to_string();
@@ -210,7 +232,7 @@ fn python_rust_numeric_parity() {
     let expected = v.req("expected_score").unwrap().as_f64().unwrap();
     let tol = v.req("tolerance").unwrap().as_f64().unwrap();
 
-    let zoo = load_zoo();
+    let zoo = require_zoo!();
     let idx = zoo.by_id(&model_id).unwrap().index;
     let engine = Engine::new(&zoo, 1).unwrap();
     let got = engine.execute_blocking((idx, 1), input).unwrap().scores[0] as f64;
@@ -222,6 +244,9 @@ fn python_rust_numeric_parity() {
 
 #[test]
 fn cli_binary_smoke() {
+    if try_load_zoo().is_none() {
+        return;
+    }
     let exe = env!("CARGO_BIN_EXE_holmes");
     let out = std::process::Command::new(exe)
         .arg("--artifacts")

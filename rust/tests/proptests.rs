@@ -193,7 +193,7 @@ fn prop_aggregator_windows_partition_the_stream() {
         let window = rng.range(2, 50);
         let n_frames = window * rng.range(1, 6) + rng.range(0, window);
         let mut agg = WindowAggregator::new(0, window);
-        let mut emitted: Vec<Vec<f32>> = Vec::new();
+        let mut emitted: Vec<std::sync::Arc<[f32]>> = Vec::new();
         let mut sent: Vec<f32> = Vec::new();
         for i in 0..n_frames {
             let v = i as f32;
@@ -209,7 +209,7 @@ fn prop_aggregator_windows_partition_the_stream() {
             }
         }
         // windows must partition the prefix of the stream, in order
-        let flat: Vec<f32> = emitted.iter().flatten().copied().collect();
+        let flat: Vec<f32> = emitted.iter().flat_map(|w| w.iter().copied()).collect();
         assert_eq!(flat.len(), (n_frames / window) * window, "seed {seed}");
         assert_eq!(&sent[..flat.len()], &flat[..], "seed {seed}: windows overlap or skip");
         for w in &emitted {

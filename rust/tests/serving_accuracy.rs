@@ -3,9 +3,13 @@
 //! path*, must reproduce the validation accuracy the python build
 //! reported — proving generator parity (python data.py ↔ rust synth)
 //! and numeric parity (ref path ↔ Pallas path ↔ PJRT execution).
+//!
+//! Real-HLO numerics only: gated on `--features xla` (the sim backend's
+//! deterministic scores carry no clinical signal by design).
+
+#![cfg(feature = "xla")]
 
 use std::path::PathBuf;
-use std::time::Instant;
 
 use holmes::data;
 use holmes::ingest::synth::SynthConfig;
@@ -18,6 +22,11 @@ use holmes::zoo::{Selector, Zoo};
 fn load_zoo() -> Zoo {
     Zoo::load(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
         .expect("run `make artifacts` first")
+}
+
+/// Queries in this file are built from owned clip vectors.
+fn query_from(patient: usize, leads: [Vec<f32>; 3]) -> Query {
+    Query::from_vecs(patient, 0, 0.0, leads)
 }
 
 /// Serve `n` fresh rust-synth clips through the pipeline; return
@@ -34,17 +43,7 @@ fn serve_cohort(
     let pipeline = Pipeline::spawn(zoo, engine, PipelineConfig::new(ensemble.clone())).unwrap();
     let mut replies = Vec::with_capacity(n);
     for (i, clip) in set.clips.iter().enumerate() {
-        replies.push(
-            pipeline
-                .submit(Query {
-                    patient: i,
-                    window_id: 0,
-                    sim_end: 0.0,
-                    leads: clip.clone(),
-                    emitted: Instant::now(),
-                })
-                .unwrap(),
-        );
+        replies.push(pipeline.submit(query_from(i, clip.clone())).unwrap());
     }
     let mut scores = vec![0.0f64; n];
     let mut seen = vec![false; n];

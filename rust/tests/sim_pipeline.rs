@@ -1,0 +1,187 @@
+//! Artifact-free integration tests of the zero-copy serving data plane
+//! on the pure-Rust [`SimBackend`]: these run on the tier-1 default
+//! feature set (no XLA toolchain, no `make artifacts`).
+//!
+//! Covered invariants:
+//! * a 64-patient burst yields exactly one prediction per submitted
+//!   query, bit-for-bit equal to the single-query path (deterministic
+//!   member-order bagging), and leaves the pending table empty;
+//! * a failing ensemble member evicts its queries instead of leaking
+//!   pending entries / hanging `submit()` callers forever.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use holmes::runtime::backend::sim_score;
+use holmes::runtime::{Engine, SimBackend};
+use holmes::serving::batcher::BatchPolicy;
+use holmes::serving::pipeline::{Pipeline, PipelineConfig, Query};
+use holmes::zoo::{testkit, Selector, Zoo};
+
+const CLIP: usize = 400;
+
+fn toy() -> Zoo {
+    testkit::toy_zoo_with(9, 64, 5, CLIP, &[1, 8])
+}
+
+fn instant_engine(zoo: &Zoo, workers: usize) -> Engine {
+    Engine::with_backend(zoo, workers, Arc::new(SimBackend::instant(zoo))).unwrap()
+}
+
+/// Deterministic, pairwise-distinct 3-lead window per (patient, window).
+fn window(patient: usize, w: u64) -> [Vec<f32>; 3] {
+    let mut leads: [Vec<f32>; 3] = Default::default();
+    for (l, lead) in leads.iter_mut().enumerate() {
+        *lead = (0..CLIP)
+            .map(|i| ((patient * 31 + l * 7 + i) as f32 * 0.01 + w as f32).sin())
+            .collect();
+    }
+    leads
+}
+
+/// Mirror of the collector's bagging rule: member scores summed in
+/// model-index order, then the mean.
+fn expected_score(members: &[usize], zoo: &Zoo, leads: &[Vec<f32>; 3]) -> f64 {
+    let sum: f64 = members
+        .iter()
+        .map(|&m| sim_score(m, &leads[zoo.model(m).lead]) as f64)
+        .sum();
+    sum / members.len() as f64
+}
+
+#[test]
+fn burst_of_64_patients_scores_every_query_exactly_once() {
+    let zoo = toy();
+    let engine = instant_engine(&zoo, 2);
+    let members = vec![0usize, 1, 2]; // one per lead, ascending
+    let ensemble = Selector::from_indices(zoo.n(), members.iter().copied());
+    let pipeline = Pipeline::spawn(&zoo, &engine, PipelineConfig::new(ensemble)).unwrap();
+
+    let n = 64usize;
+    let windows: Vec<[Vec<f32>; 3]> = (0..n).map(|p| window(p, 0)).collect();
+
+    // burst path: all 64 beds fire at once
+    let mut replies = Vec::with_capacity(n);
+    for (p, leads) in windows.iter().enumerate() {
+        replies.push(
+            pipeline
+                .submit(Query::from_vecs(p, 0, 0.0, leads.clone()))
+                .unwrap(),
+        );
+    }
+    let mut burst_scores = Vec::with_capacity(n);
+    for (p, rx) in replies.into_iter().enumerate() {
+        let pred = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("every submitted query gets a prediction");
+        assert_eq!(pred.patient, p);
+        assert_eq!(pred.n_models, 3);
+        // exactly once: the oneshot channel must now be disconnected
+        assert!(matches!(
+            rx.recv_timeout(Duration::from_millis(10)),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected)
+        ));
+        burst_scores.push(pred.score);
+    }
+    assert_eq!(pipeline.pending_len(), 0, "pending table must be empty after the burst");
+
+    // single-query path: the same windows one at a time must reproduce
+    // the burst scores bit for bit (batch composition cannot matter)
+    for (p, leads) in windows.iter().enumerate() {
+        let pred = pipeline
+            .query(Query::from_vecs(p, 1, 0.0, leads.clone()))
+            .unwrap();
+        assert_eq!(
+            pred.score.to_bits(),
+            burst_scores[p].to_bits(),
+            "patient {p}: burst {} vs single {}",
+            burst_scores[p],
+            pred.score
+        );
+        // and both must equal the analytically expected bagging mean
+        let want = expected_score(&members, &zoo, leads);
+        assert_eq!(pred.score.to_bits(), want.to_bits(), "patient {p}");
+    }
+    assert_eq!(pipeline.pending_len(), 0);
+    let snap = pipeline.telemetry().snapshot();
+    assert_eq!(snap.queries, 2 * n as u64);
+    assert_eq!(snap.model_jobs, 2 * 3 * n as u64);
+    assert_eq!(snap.failures, 0);
+}
+
+#[test]
+fn engine_scores_are_batch_invariant() {
+    let zoo = toy();
+    let engine = instant_engine(&zoo, 1);
+    let leads = window(7, 3);
+    let single = engine.execute_blocking((2, 1), leads[2].clone()).unwrap().scores[0];
+    let mut padded = vec![0.0f32; 8 * CLIP];
+    padded[..CLIP].copy_from_slice(&leads[2]);
+    let batched = engine.execute_blocking((2, 8), padded).unwrap().scores[0];
+    assert_eq!(single.to_bits(), batched.to_bits());
+}
+
+#[test]
+fn failing_member_evicts_queries_instead_of_leaking() {
+    let zoo = toy();
+    let backend = SimBackend::instant(&zoo).failing_model(1);
+    let engine = Engine::with_backend(&zoo, 2, Arc::new(backend)).unwrap();
+    let ensemble = Selector::from_indices(zoo.n(), [0usize, 1, 2]);
+    let cfg = PipelineConfig::new(ensemble)
+        .with_policy(BatchPolicy { max_batch: 8, timeout: Duration::from_millis(1) });
+    let pipeline = Pipeline::spawn(&zoo, &engine, cfg).unwrap();
+
+    // the failing member must fail the whole query: the reply channel
+    // hangs up instead of blocking the caller forever
+    let rx = pipeline
+        .submit(Query::from_vecs(0, 0, 0.0, window(0, 0)))
+        .unwrap();
+    match rx.recv_timeout(Duration::from_secs(30)) {
+        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {}
+        other => panic!("expected eviction (disconnect), got {other:?}"),
+    }
+
+    // later queries fail fast too (dead batcher keeps evicting), and
+    // nothing accumulates in the pending table
+    for w in 1..8u64 {
+        let rx = pipeline
+            .submit(Query::from_vecs(0, w, 0.0, window(0, w)))
+            .unwrap();
+        assert!(
+            matches!(
+                rx.recv_timeout(Duration::from_secs(30)),
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected)
+            ),
+            "query {w} should be evicted"
+        );
+    }
+    // eviction is triggered by the collector; all replies have hung up,
+    // so the entries are gone — and each evicted query counts once even
+    // though healthy members also reported scores for it
+    assert_eq!(pipeline.pending_len(), 0, "evicted queries must not leak");
+    assert_eq!(pipeline.telemetry().snapshot().failures, 8);
+    assert_eq!(pipeline.telemetry().snapshot().queries, 0);
+}
+
+#[test]
+fn malformed_window_is_rejected_at_the_router() {
+    let zoo = toy();
+    let engine = instant_engine(&zoo, 1);
+    let ensemble = Selector::from_indices(zoo.n(), [0usize, 1, 2]);
+    let pipeline = Pipeline::spawn(&zoo, &engine, PipelineConfig::new(ensemble)).unwrap();
+
+    // one lead too short: rejected before registration, caller errors
+    let bad = [vec![0.1f32; CLIP], vec![0.1f32; CLIP - 1], vec![0.1f32; CLIP]];
+    let rx = pipeline.submit(Query::from_vecs(0, 0, 0.0, bad)).unwrap();
+    assert!(matches!(
+        rx.recv_timeout(Duration::from_secs(30)),
+        Err(std::sync::mpsc::RecvTimeoutError::Disconnected)
+    ));
+    assert_eq!(pipeline.pending_len(), 0);
+    assert_eq!(pipeline.telemetry().snapshot().failures, 1);
+
+    // the pipeline (and every member) stays healthy afterwards
+    let pred = pipeline.query(Query::from_vecs(0, 1, 0.0, window(0, 1))).unwrap();
+    assert_eq!(pred.n_models, 3);
+    assert_eq!(pipeline.pending_len(), 0);
+}
