@@ -1,14 +1,24 @@
-//! Serving-pipeline benches: end-to-end query latency, burst handling
-//! (the Fig.-10 hot path), aggregator ingest throughput, and the
-//! measured latency profiler.
+//! Serving-pipeline benches: per-layer admission-path measurements
+//! (ingest decode, pending-table admission, batch packing), end-to-end
+//! query latency, burst handling (the Fig.-10 hot path), aggregator
+//! ingest throughput, and the measured latency profiler.
 //!
 //! Runs entirely on the zero-latency [`SimBackend`], so what is being
 //! measured is the **data plane itself** (copies, locks, allocation,
 //! channel hops) — not model FLOPs. To track the perf trajectory, the
 //! bench also drives `legacy`, an in-bench replica of the pre-refactor
-//! plane (per-member window clones, one global pending mutex, a fresh
-//! padded allocation per flush), and writes all medians plus the
-//! new-vs-legacy speedups to `BENCH_serving.json` at the repo root.
+//! plane (JSON-parsed ingest frames, per-member window clones,
+//! mutex-striped pending table, a fresh padded allocation per flush),
+//! and writes all medians plus the new-vs-legacy speedups to
+//! `BENCH_serving.json` at the repo root. Layer groups:
+//!
+//! * `ingest/decode_frame`  — binary wire decode vs recursive-descent
+//!   JSON (`legacy_ingest/...`), one 3-sample ECG frame each.
+//! * `admission/insert_remove/8-threads` — lock-free pending slot
+//!   arena vs the mutex-striped table (`legacy_admission/...`) under
+//!   8-thread insert+score+remove contention.
+//! * `pack/batch8` — chunked copy into the persistent 64-byte-aligned
+//!   arena vs a fresh `vec![0.0; n]` per flush (`legacy_pack/...`).
 //!
 //! `cargo bench --bench serving [-- --quick]`
 
@@ -23,10 +33,10 @@ use holmes::data;
 use holmes::ingest::synth::SynthConfig;
 use holmes::ingest::{Frame, Modality};
 use holmes::json::Value;
-use holmes::runtime::{Engine, SimBackend};
+use holmes::runtime::{AlignedBatch, Engine, SimBackend};
 use holmes::serving::aggregator::WindowAggregator;
 use holmes::serving::batcher::BatchPolicy;
-use holmes::serving::pipeline::{Pipeline, PipelineConfig, Query};
+use holmes::serving::pipeline::{PendingMeta, PendingSlots, Pipeline, PipelineConfig, Query};
 use holmes::serving::profile::{profile_ensemble, ProfileEffort};
 use holmes::zoo::{testkit, Selector, Zoo};
 
@@ -54,6 +64,57 @@ fn main() {
         values: vec![0.1, 0.2, 0.3],
     };
     b.bench("aggregator/push_ecg_frame", || black_box(agg.push(&frame).is_some()));
+
+    // ---- layer 1: ingest decode — binary wire vs JSON, one ECG frame
+    let wire_frame = Frame {
+        patient: 12,
+        modality: Modality::Ecg,
+        sim_time: 3.252,
+        values: vec![0.215, -0.083, 0.127],
+    };
+    let wire_bytes = wire_frame.to_bytes();
+    let json_text = wire_frame.to_json().to_string();
+    b.bench("ingest/decode_frame", || {
+        let (f, used) = Frame::from_bytes(&wire_bytes).expect("wire decode");
+        black_box((f.patient, used))
+    });
+    b.bench("legacy_ingest/decode_frame", || {
+        let f = Frame::from_json(&Value::parse(&json_text).expect("json parse"))
+            .expect("json decode");
+        black_box(f.patient)
+    });
+
+    // ---- layer 2: admission — lock-free slot arena vs mutex-striped
+    // table, 8 threads each doing insert + per-member score + remove
+    let slots = PendingSlots::new(ADM_MEMBERS);
+    b.bench("admission/insert_remove/8-threads", || {
+        admission_round_lockfree(&slots);
+        black_box(slots.len())
+    });
+    let striped = legacy::StripedPending::new(ADM_MEMBERS);
+    b.bench("legacy_admission/insert_remove/8-threads", || {
+        admission_round_striped(&striped);
+        black_box(striped.len())
+    });
+
+    // ---- layer 3: batch packing — persistent aligned arena (chunked
+    // copy) vs a fresh padded allocation per flush
+    let window = vec![0.37f32; clip_len];
+    let mut arena = AlignedBatch::new();
+    b.bench("pack/batch8", || {
+        arena.reset(8 * clip_len);
+        for slot in 0..8 {
+            arena.pack_slot(slot, clip_len, &window);
+        }
+        black_box(arena.as_slice()[7 * clip_len])
+    });
+    b.bench("legacy_pack/batch8", || {
+        let mut buf = vec![0.0f32; 8 * clip_len];
+        for slot in 0..8 {
+            buf[slot * clip_len..(slot + 1) * clip_len].copy_from_slice(&window);
+        }
+        black_box(buf[7 * clip_len])
+    });
 
     // ---- pipeline end-to-end, 3-model cross-lead ensemble; zero fill
     // wait so the measurement is pure data-plane overhead
@@ -157,6 +218,59 @@ fn main() {
     write_bench_json(b.results(), quick, engine.backend_name());
 }
 
+/// Admission-bench shape: 8 threads × 2048 queries × 3 members. With
+/// 1024 slots the 16k ids per round wrap the arena repeatedly, so the
+/// round exercises genuine inter-thread contention on the arena (and
+/// on the stripes of the legacy table). The per-thread query count is
+/// deliberately large so the ~8 thread spawns + joins per measured
+/// round (hundreds of µs) are noise next to the ~65k admission ops
+/// being compared.
+const ADM_THREADS: usize = 8;
+const ADM_QUERIES_PER_THREAD: usize = 2048;
+const ADM_MEMBERS: usize = 3;
+
+fn adm_meta() -> PendingMeta {
+    PendingMeta { patient: 0, window_id: 0, sim_end: 0.0, emitted: Instant::now(), reply: None }
+}
+
+/// One contention round on the lock-free arena: every thread inserts
+/// its own ids and scores all members (the last score removes).
+fn admission_round_lockfree(slots: &PendingSlots) {
+    std::thread::scope(|s| {
+        for t in 0..ADM_THREADS {
+            s.spawn(move || {
+                for q in 0..ADM_QUERIES_PER_THREAD {
+                    let id = (t * ADM_QUERIES_PER_THREAD + q) as u64;
+                    slots.insert(id, adm_meta());
+                    for pos in 0..ADM_MEMBERS {
+                        black_box(matches!(
+                            slots.score(id, pos, 0.5, Duration::ZERO),
+                            holmes::serving::ScoreOutcome::Completed(_)
+                        ));
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// The same round on the in-bench mutex-striped replica.
+fn admission_round_striped(table: &legacy::StripedPending) {
+    std::thread::scope(|s| {
+        for t in 0..ADM_THREADS {
+            s.spawn(move || {
+                for q in 0..ADM_QUERIES_PER_THREAD {
+                    let id = (t * ADM_QUERIES_PER_THREAD + q) as u64;
+                    table.insert(id);
+                    for m in 0..ADM_MEMBERS {
+                        black_box(table.score(id, m, 0.5).is_some());
+                    }
+                }
+            });
+        }
+    });
+}
+
 /// Emit medians + new-vs-legacy speedups to `<repo root>/BENCH_serving.json`.
 fn write_bench_json(results: &[BenchResult], quick: bool, backend: &str) {
     let mut benches = BTreeMap::new();
@@ -187,8 +301,10 @@ fn write_bench_json(results: &[BenchResult], quick: bool, backend: &str) {
         (
             "note",
             Value::Str(
-                "medians of the zero-copy data plane vs the in-bench legacy replica; \
-                 regenerate with `cargo bench --bench serving -- --quick`"
+                "medians of the lock-free zero-copy data plane vs the in-bench legacy \
+                 replica, per admission layer (ingest decode, pending-table admission, \
+                 batch packing) and end to end; regenerate with \
+                 `cargo bench --bench serving -- --quick`"
                     .into(),
             ),
         ),
@@ -225,6 +341,64 @@ mod legacy {
         /// matches the pre-refactor load generator.
         #[allow(dead_code)]
         pub emitted: Instant,
+    }
+
+    /// Replica of the pre-refactor pending table — 16 mutex stripes
+    /// over `HashMap<u64, entry>`, a `Vec<(model, score)>` per entry,
+    /// sorted + summed at completion — kept as the admission-bench
+    /// baseline now that the library uses the lock-free slot arena.
+    pub struct StripedPending {
+        stripes: Vec<Mutex<HashMap<u64, StripedEntry>>>,
+        n_models: usize,
+    }
+
+    struct StripedEntry {
+        remaining: usize,
+        member_scores: Vec<(usize, f32)>,
+    }
+
+    const STRIPES: usize = 16;
+
+    impl StripedPending {
+        pub fn new(n_models: usize) -> Self {
+            StripedPending {
+                stripes: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
+                n_models,
+            }
+        }
+
+        fn stripe(&self, id: u64) -> &Mutex<HashMap<u64, StripedEntry>> {
+            &self.stripes[(id % STRIPES as u64) as usize]
+        }
+
+        pub fn insert(&self, id: u64) {
+            self.stripe(id).lock().unwrap().insert(
+                id,
+                StripedEntry {
+                    remaining: self.n_models,
+                    member_scores: Vec::with_capacity(self.n_models),
+                },
+            );
+        }
+
+        /// Record one member score; returns the deterministic bagging
+        /// sum when the last member lands (and removes the entry).
+        pub fn score(&self, id: u64, model: usize, score: f32) -> Option<f64> {
+            let mut table = self.stripe(id).lock().unwrap();
+            let entry = table.get_mut(&id)?;
+            entry.member_scores.push((model, score));
+            entry.remaining -= 1;
+            if entry.remaining > 0 {
+                return None;
+            }
+            let mut entry = table.remove(&id)?;
+            entry.member_scores.sort_unstable_by_key(|&(m, _)| m);
+            Some(entry.member_scores.iter().map(|&(_, s)| s as f64).sum())
+        }
+
+        pub fn len(&self) -> usize {
+            self.stripes.iter().map(|s| s.lock().unwrap().len()).sum()
+        }
     }
 
     struct Item {

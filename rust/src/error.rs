@@ -17,6 +17,8 @@ pub enum Error {
     Serving(String),
     /// Invalid configuration or argument.
     Config(String),
+    /// Binary ingest wire-format problems (bad magic, truncation...).
+    Wire(String),
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
@@ -30,6 +32,7 @@ impl fmt::Display for Error {
             Error::Artifact(e) => write!(f, "artifact error: {e}"),
             Error::Serving(e) => write!(f, "serving error: {e}"),
             Error::Config(e) => write!(f, "config error: {e}"),
+            Error::Wire(e) => write!(f, "wire error: {e}"),
         }
     }
 }
@@ -61,5 +64,8 @@ impl Error {
     }
     pub fn json(msg: impl Into<String>) -> Self {
         Error::Json2(msg.into())
+    }
+    pub fn wire(msg: impl Into<String>) -> Self {
+        Error::Wire(msg.into())
     }
 }

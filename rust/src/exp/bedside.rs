@@ -3,6 +3,12 @@
 //! ensemble pipeline — the full Fig. 4 path, used by `holmes serve` and
 //! the `bedside_sim` example, and the source of the headline "64-bed,
 //! sub-second p95" number.
+//!
+//! With `http_addr` set the patient generators become real network
+//! clients: each opens one keep-alive connection and streams its
+//! frames as binary `POST /ingest.bin` bodies (one body per simulated
+//! second — 251 wire frames), exercising the full 25k frames/s ingest
+//! edge instead of an in-process channel.
 
 use std::collections::HashMap;
 use std::sync::{mpsc, Arc};
@@ -82,12 +88,13 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
     let telemetry = Arc::clone(pipeline.telemetry());
     let (frame_tx, frame_rx) = mpsc::channel::<Frame>();
 
-    // optional HTTP ingest (frames can also arrive over the wire)
-    let mut _http = None;
+    // optional HTTP ingest: generators stream binary wire frames over
+    // keep-alive connections instead of the in-process channel
+    let mut http = None;
     if let Some(addr) = &cfg.http_addr {
         let server = crate::http::serve(addr, frame_tx.clone(), Arc::clone(&telemetry))?;
-        println!("HTTP ingest listening on {}", server.addr);
-        _http = Some(server);
+        println!("HTTP ingest listening on {} (binary /ingest.bin)", server.addr);
+        http = Some(server);
     }
 
     // patient stream generator threads (in-process clients, open loop)
@@ -99,27 +106,45 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
         labels.insert(sim.id, sim.state.label);
     }
     let mut gen_handles = Vec::new();
+    let http_addr = http.as_ref().map(|s| s.addr);
     for mut sim in sims.drain(..) {
         let tx = frame_tx.clone();
         let clock = VirtualClock::new(cfg.speedup);
         let duration = cfg.duration_s;
         gen_handles.push(std::thread::spawn(move || {
+            // over-the-wire mode: one keep-alive binary ingest client
+            // per bedside monitor, one POST per simulated second
+            let mut client = match http_addr {
+                Some(addr) => match crate::http::IngestClient::connect(addr) {
+                    Ok(c) => Some(c),
+                    Err(e) => {
+                        eprintln!("patient {}: ingest connect failed: {e}", sim.id);
+                        return;
+                    }
+                },
+                None => None,
+            };
+            let mut batch: Vec<Frame> = Vec::with_capacity(251);
             let mut sim_t = 0.0f64;
             while sim_t < duration {
                 // one simulated second per tick: 250 ECG samples + 1 vitals
                 clock.sleep_until_sim(sim_t);
-                for f in sim.ecg_frames(sim_t, 250) {
-                    if tx.send(f).is_err() {
-                        return;
-                    }
-                }
+                batch.clear();
+                batch.extend(sim.ecg_frames(sim_t, 250));
                 let v = sim.next_vitals();
-                let _ = tx.send(Frame {
+                batch.push(Frame {
                     patient: sim.id,
                     modality: Modality::Vitals,
                     sim_time: sim_t,
                     values: v.to_vec(),
                 });
+                let delivered = match client.as_mut() {
+                    Some(c) => c.send_frames(&batch).is_ok(),
+                    None => batch.drain(..).all(|f| tx.send(f).is_ok()),
+                };
+                if !delivered {
+                    return;
+                }
                 sim_t += 1.0;
             }
         }));
@@ -172,6 +197,10 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
     for h in gen_handles {
         let _ = h.join();
     }
+    // stop the HTTP server BEFORE joining the router: its accept thread
+    // holds a frame_tx clone, so the aggregator loop (and thus the
+    // router join below) would otherwise never see the channel close
+    drop(http);
     router.join().map_err(|_| crate::Error::serving("router panicked"))?;
     drop(pipeline);
     let pred_rows = sink.join().map_err(|_| crate::Error::serving("sink panicked"))?;

@@ -37,7 +37,7 @@ pub fn run(zoo: &Zoo, out: &Path, quick: bool) -> Result<()> {
     let mut rows = Vec::new();
     let batch = engine.batch_for(8);
     // one persistent padded buffer for every scoring pass
-    let mut input = vec![0.0f32; batch * clip_len];
+    let mut input = crate::runtime::AlignedBatch::new();
     for &d in &delays {
         let set = data::staleness_clips(n_clips, clip_len, d, 77, &cfg);
         let mut scores = vec![0.0f64; set.len()];
@@ -46,9 +46,9 @@ pub fn run(zoo: &Zoo, out: &Path, quick: bool) -> Result<()> {
             let mut i = 0;
             while i < set.len() {
                 let take = (set.len() - i).min(batch);
-                input.iter_mut().for_each(|x| *x = 0.0);
+                input.reset(batch * clip_len);
                 for (slot, clip) in set.clips[i..i + take].iter().enumerate() {
-                    input[slot * clip_len..(slot + 1) * clip_len].copy_from_slice(&clip[lead]);
+                    input.pack_slot(slot, clip_len, &clip[lead]);
                 }
                 let outz = engine.execute_batch((m, batch), &mut input)?;
                 for (slot, s) in scores[i..i + take].iter_mut().enumerate() {

@@ -94,13 +94,13 @@ pub fn run(zoo: &Zoo, out: &Path, quick: bool) -> Result<()> {
         // (one persistent padded buffer, recycled through the engine)
         let t0 = Instant::now();
         let batch = engine.batch_for(8);
-        let mut input = vec![0.0f32; batch * clip_len];
+        let mut input = crate::runtime::AlignedBatch::new();
         let mut i = 0;
         while i < windows.len() {
             let take = (windows.len() - i).min(batch);
-            input.iter_mut().for_each(|x| *x = 0.0);
+            input.reset(batch * clip_len);
             for (slot, w) in windows[i..i + take].iter().enumerate() {
-                input[slot * clip_len..(slot + 1) * clip_len].copy_from_slice(w);
+                input.pack_slot(slot, clip_len, w);
             }
             engine.execute_batch((best, batch), &mut input)?;
             i += take;

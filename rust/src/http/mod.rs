@@ -2,23 +2,59 @@
 //! simplifies data ingest into the serving system").
 //!
 //! Endpoints:
-//! * `POST /ingest`  — JSON [`Frame`] body; forwarded to the pipeline's
-//!   aggregator stage.
-//! * `GET /stats`    — telemetry snapshot (JSON).
-//! * `GET /healthz`  — liveness.
+//! * `POST /ingest`      — JSON [`Frame`] body; NaN / non-finite
+//!   payloads are rejected with `400` at the boundary.
+//! * `POST /ingest.bin`  — binary body of one or more back-to-back
+//!   wire-encoded frames (see below); the hot path at 25k frames/s.
+//! * `GET /stats`        — telemetry snapshot (JSON).
+//! * `GET /healthz`      — liveness.
 //!
 //! Hand-rolled on std TCP with a thread per connection: the request
-//! path needs exactly these three routes and zero framework overhead.
+//! path needs exactly these routes and zero framework overhead.
+//! Connections are **keep-alive by default** (HTTP/1.1): a bedside
+//! load generator pays one TCP handshake per stream, not one per
+//! frame. `Connection: close` (or HTTP/1.0 without an explicit
+//! keep-alive) closes after the response. Request bodies are bounded
+//! by [`MAX_BODY_BYTES`]; oversized requests get `413` and the
+//! connection is closed (the unread body would desynchronise framing).
+//!
+//! ## Binary wire format (`/ingest.bin`)
+//!
+//! Each frame is self-delimiting, little-endian throughout (full
+//! reference: [`crate::ingest::wire`]):
+//!
+//! ```text
+//!  offset  size  field
+//!  0       4     magic     = b"HLM1"
+//!  4       1     version   = 1
+//!  5       1     modality  (0 = ecg, 1 = vitals, 2 = labs)
+//!  6       2     reserved  = 0
+//!  8       8     patient   (u64)
+//!  16      8     sim_time  (f64, finite)
+//!  24      4     n_values  (u32)
+//!  28      4·n   values    (f32 each, finite)
+//! ```
+//!
+//! A body may concatenate any number of frames; the route decodes all
+//! of them or rejects the whole body with `400` (malformed, truncated,
+//! or non-finite input — nothing partial is admitted). The response is
+//! `{"ok":true,"frames":N}`.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 
-use crate::ingest::Frame;
+use crate::ingest::{wire, Frame};
 use crate::json::Value;
 use crate::serving::Telemetry;
 use crate::{Error, Result};
+
+/// Largest accepted request body; larger requests are refused with
+/// `413 Payload Too Large`. A one-second 64-bed binary burst
+/// (64 × 251 frames ≈ 400 KiB) fits with an order of magnitude to
+/// spare.
+pub const MAX_BODY_BYTES: usize = 4 << 20;
 
 /// Running server handle; the listener thread stops accepting when this
 /// is dropped (connections in flight finish their current request).
@@ -90,17 +126,70 @@ fn handle_connection(
         let head = String::from_utf8_lossy(&buf[..header_end]).to_string();
         let mut lines = head.lines();
         let request_line = lines.next().unwrap_or_default().to_string();
-        let content_length: usize = lines
-            .filter_map(|l| {
-                let (k, v) = l.split_once(':')?;
-                if k.eq_ignore_ascii_case("content-length") {
-                    v.trim().parse().ok()
-                } else {
-                    None
+        let mut content_length: usize = 0;
+        let mut bad_framing = false;
+        let mut close_requested = false;
+        let mut keep_alive_requested = false;
+        for l in lines {
+            let Some((k, v)) = l.split_once(':') else { continue };
+            let v = v.trim();
+            if k.eq_ignore_ascii_case("content-length") {
+                match v.parse() {
+                    Ok(n) => content_length = n,
+                    // an unparseable length (e.g. duplicate headers
+                    // merged to "123, 123") must not default to 0: the
+                    // body bytes would be re-parsed as the next request
+                    // on this keep-alive connection
+                    Err(_) => bad_framing = true,
                 }
-            })
-            .next()
-            .unwrap_or(0);
+            } else if k.eq_ignore_ascii_case("transfer-encoding") {
+                bad_framing = true; // chunked bodies are unsupported
+            } else if k.eq_ignore_ascii_case("connection") {
+                close_requested = v.eq_ignore_ascii_case("close");
+                keep_alive_requested = v.eq_ignore_ascii_case("keep-alive");
+            }
+        }
+        // HTTP/1.1 defaults to keep-alive; HTTP/1.0 must opt in
+        let http10 = request_line.ends_with("HTTP/1.0");
+        let keep_alive = !close_requested && (!http10 || keep_alive_requested);
+
+        // body framing we cannot trust → 400 and close (we don't know
+        // where this request's body ends, so the connection cannot be
+        // reused)
+        if bad_framing {
+            write_response(
+                &mut stream,
+                "400 Bad Request",
+                "{\"error\":\"unsupported or malformed body framing\"}",
+                false,
+            )?;
+            return Ok(());
+        }
+
+        // refuse oversized bodies before buffering them; the unread
+        // body bytes would desync request framing, so close afterwards
+        if content_length > MAX_BODY_BYTES {
+            write_response(
+                &mut stream,
+                "413 Payload Too Large",
+                &format!("{{\"error\":\"body exceeds {MAX_BODY_BYTES} bytes\"}}"),
+                false,
+            )?;
+            // drain (bounded) what the client already sent: closing
+            // with unread data in the receive queue makes the kernel
+            // RST the connection, which can discard the queued 413
+            // before the client reads it
+            let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(250)));
+            let mut sink = [0u8; 4096];
+            let mut drained = buf.len().saturating_sub(header_end);
+            while drained < content_length.min(2 * MAX_BODY_BYTES) {
+                match stream.read(&mut sink) {
+                    Ok(0) | Err(_) => break,
+                    Ok(n) => drained += n,
+                }
+            }
+            return Ok(());
+        }
         // read the body
         while buf.len() < header_end + content_length {
             let mut chunk = [0u8; 4096];
@@ -114,13 +203,27 @@ fn handle_connection(
         buf.drain(..header_end + content_length);
 
         let (status, payload) = route(&request_line, &body, &frame_tx, &telemetry);
-        let response = format!(
-            "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
-            payload.len()
-        );
-        stream.write_all(response.as_bytes())?;
-        stream.write_all(payload.as_bytes())?;
+        write_response(&mut stream, status, &payload, keep_alive)?;
+        if !keep_alive {
+            return Ok(());
+        }
     }
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: &str,
+    payload: &str,
+    keep_alive: bool,
+) -> Result<()> {
+    let connection = if keep_alive { "keep-alive" } else { "close" };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {connection}\r\n\r\n",
+        payload.len()
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.write_all(payload.as_bytes())?;
+    Ok(())
 }
 
 fn route(
@@ -149,6 +252,21 @@ fn route(
                 Err(e) => ("400 Bad Request", format!("{{\"error\":\"{e}\"}}")),
             }
         }
+        ("POST", "/ingest.bin") => match wire::decode_stream(body) {
+            Ok(frames) => {
+                let n = frames.len();
+                for frame in frames {
+                    if frame_tx.send(frame).is_err() {
+                        return (
+                            "503 Service Unavailable",
+                            "{\"error\":\"pipeline closed\"}".to_string(),
+                        );
+                    }
+                }
+                ("200 OK", format!("{{\"ok\":true,\"frames\":{n}}}"))
+            }
+            Err(e) => ("400 Bad Request", format!("{{\"error\":\"{e}\"}}")),
+        },
         ("GET", "/stats") => ("200 OK", telemetry.snapshot().to_json().to_string()),
         ("GET", "/healthz") => ("200 OK", "{\"status\":\"up\"}".to_string()),
         _ => ("404 Not Found", "{\"error\":\"no such route\"}".to_string()),
@@ -159,16 +277,106 @@ fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
     haystack.windows(needle.len()).position(|w| w == needle)
 }
 
+/// Keep-alive binary ingest client for load generators and `exp/`
+/// drivers: one TCP connection per stream, one `POST /ingest.bin`
+/// request per batch of frames, one encode buffer reused across
+/// batches.
+pub struct IngestClient {
+    stream: TcpStream,
+    body: Vec<u8>,
+    resp: Vec<u8>,
+}
+
+impl IngestClient {
+    pub fn connect(addr: SocketAddr) -> Result<IngestClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(IngestClient { stream, body: Vec::with_capacity(16 * 1024), resp: Vec::new() })
+    }
+
+    /// POST one batch of frames as a single binary body and wait for
+    /// the response. Errors on transport failure or a non-2xx status.
+    pub fn send_frames(&mut self, frames: &[Frame]) -> Result<()> {
+        self.body.clear();
+        for f in frames {
+            f.write_bytes(&mut self.body);
+        }
+        let head = format!(
+            "POST /ingest.bin HTTP/1.1\r\nHost: ingest\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            self.body.len()
+        );
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(&self.body)?;
+        let status = self.read_response()?;
+        if (200..300).contains(&status) {
+            Ok(())
+        } else {
+            Err(Error::serving(format!("ingest server replied {status}")))
+        }
+    }
+
+    pub fn send_frame(&mut self, frame: &Frame) -> Result<()> {
+        let one = std::slice::from_ref(frame);
+        self.send_frames(one)
+    }
+
+    /// Read one full response (headers + content-length body) off the
+    /// connection so the next request starts on a clean framing
+    /// boundary; returns the status code.
+    fn read_response(&mut self) -> Result<u16> {
+        self.resp.clear();
+        let mut chunk = [0u8; 2048];
+        let header_end = loop {
+            if let Some(pos) = find_subslice(&self.resp, b"\r\n\r\n") {
+                break pos + 4;
+            }
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(Error::serving("ingest server closed mid-response"));
+            }
+            self.resp.extend_from_slice(&chunk[..n]);
+        };
+        let head = String::from_utf8_lossy(&self.resp[..header_end]).to_string();
+        let status: u16 = head
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| Error::serving("malformed response status line"))?;
+        let content_length: usize = head
+            .lines()
+            .filter_map(|l| {
+                let (k, v) = l.split_once(':')?;
+                k.eq_ignore_ascii_case("content-length")
+                    .then(|| v.trim().parse().ok())
+                    .flatten()
+            })
+            .next()
+            .unwrap_or(0);
+        while self.resp.len() < header_end + content_length {
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(Error::serving("ingest server closed mid-body"));
+            }
+            self.resp.extend_from_slice(&chunk[..n]);
+        }
+        Ok(status)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::ingest::Modality;
 
-    #[test]
-    fn ingest_roundtrip_over_tcp() {
+    fn test_server() -> (HttpServer, mpsc::Receiver<Frame>) {
         let (tx, rx) = mpsc::channel();
         let tel = Arc::new(Telemetry::default());
-        let server = serve("127.0.0.1:0", tx, tel).unwrap();
+        (serve("127.0.0.1:0", tx, tel).unwrap(), rx)
+    }
+
+    #[test]
+    fn ingest_roundtrip_over_tcp() {
+        let (server, rx) = test_server();
         let frame = Frame {
             patient: 3,
             modality: Modality::Ecg,
@@ -189,6 +397,92 @@ mod tests {
         let got = rx.recv().unwrap();
         assert_eq!(got.patient, 3);
         assert_eq!(got.values.len(), 3);
+    }
+
+    #[test]
+    fn binary_ingest_multi_frame_keep_alive() {
+        let (server, rx) = test_server();
+        let mut client = IngestClient::connect(server.addr).unwrap();
+        // two requests over ONE connection, multi-frame bodies
+        for round in 0..2u64 {
+            let frames: Vec<Frame> = (0..5usize)
+                .map(|i| Frame {
+                    patient: i,
+                    modality: Modality::Ecg,
+                    sim_time: round as f64 + i as f64 * 0.004,
+                    values: vec![0.5, -0.25, 1.0],
+                })
+                .collect();
+            client.send_frames(&frames).unwrap();
+            for i in 0..5usize {
+                let got = rx.recv().unwrap();
+                assert_eq!(got.patient, i, "round {round}");
+                assert_eq!(got.values, vec![0.5, -0.25, 1.0]);
+            }
+        }
+    }
+
+    #[test]
+    fn binary_ingest_rejects_corrupt_and_nan_bodies() {
+        let (server, rx) = test_server();
+        let frame = Frame {
+            patient: 1,
+            modality: Modality::Vitals,
+            sim_time: 2.0,
+            values: vec![f32::NAN],
+        };
+        let mut client = IngestClient::connect(server.addr).unwrap();
+        // NaN payload → 400, nothing admitted
+        assert!(client.send_frames(std::slice::from_ref(&frame)).is_err());
+        // corrupt magic → 400 (reconnect: a 400 keeps the connection,
+        // but exercise a fresh one anyway)
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        let body = vec![0xDEu8; 40];
+        let req = format!(
+            "POST /ingest.bin HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        );
+        s.write_all(req.as_bytes()).unwrap();
+        s.write_all(&body).unwrap();
+        let mut resp = vec![0u8; 1024];
+        let n = s.read(&mut resp).unwrap();
+        assert!(String::from_utf8_lossy(&resp[..n]).starts_with("HTTP/1.1 400"));
+        assert!(rx.try_recv().is_err(), "no frame may be admitted");
+    }
+
+    #[test]
+    fn json_nan_payload_is_400() {
+        let (server, rx) = test_server();
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        // 1e39 overflows f32 to +inf — must be refused at the boundary
+        let body = r#"{"patient":1,"modality":"ecg","sim_time":0.0,"values":[1e39]}"#;
+        let req = format!(
+            "POST /ingest HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        s.write_all(req.as_bytes()).unwrap();
+        let mut resp = vec![0u8; 1024];
+        let n = s.read(&mut resp).unwrap();
+        assert!(String::from_utf8_lossy(&resp[..n]).starts_with("HTTP/1.1 400"));
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn oversized_body_is_413_and_connection_closes() {
+        let (server, _rx) = test_server();
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        let req = format!(
+            "POST /ingest.bin HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        s.write_all(req.as_bytes()).unwrap();
+        let text = read_full_response(&mut s);
+        assert!(text.starts_with("HTTP/1.1 413"), "{text}");
+        assert!(text.contains("Connection: close"));
+        // server closed its side: further reads hit EOF
+        let mut rest = [0u8; 64];
+        assert_eq!(s.read(&mut rest).unwrap_or(0), 0);
     }
 
     /// Read headers + full content-length body (may span TCP segments).
@@ -222,13 +516,25 @@ mod tests {
     }
 
     #[test]
+    fn malformed_content_length_is_400_and_closes() {
+        let (server, rx) = test_server();
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        // a proxy merging duplicate Content-Length headers produces
+        // exactly this shape; trusting "0" would desync the connection
+        let req = "POST /ingest.bin HTTP/1.1\r\nHost: x\r\nContent-Length: 12, 12\r\n\r\n";
+        s.write_all(req.as_bytes()).unwrap();
+        let text = read_full_response(&mut s);
+        assert!(text.starts_with("HTTP/1.1 400"), "{text}");
+        assert!(text.contains("Connection: close"));
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
     fn stats_health_and_404_endpoints() {
-        let (tx, _rx) = mpsc::channel();
-        let tel = Arc::new(Telemetry::default());
-        let server = serve("127.0.0.1:0", tx, tel).unwrap();
+        let (server, _rx) = test_server();
         for (path, expect) in [("/healthz", "up"), ("/stats", "e2e_p95"), ("/nope", "no such")] {
             let mut s = TcpStream::connect(server.addr).unwrap();
-            let req = format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n");
+            let req = format!("GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n");
             s.write_all(req.as_bytes()).unwrap();
             let text = read_full_response(&mut s);
             assert!(text.contains(expect), "{path}: {text}");
@@ -237,9 +543,7 @@ mod tests {
 
     #[test]
     fn malformed_body_is_400() {
-        let (tx, _rx) = mpsc::channel();
-        let tel = Arc::new(Telemetry::default());
-        let server = serve("127.0.0.1:0", tx, tel).unwrap();
+        let (server, _rx) = test_server();
         let mut s = TcpStream::connect(server.addr).unwrap();
         let body = "{not json";
         let req = format!(

@@ -4,9 +4,13 @@
 
 pub mod clock;
 pub mod synth;
+pub mod wire;
 
 pub use clock::VirtualClock;
 pub use synth::{PatientSim, PatientState, SynthConfig};
+pub use wire::{decode_stream, MAX_WIRE_VALUES, WIRE_HEADER_LEN, WIRE_MAGIC, WIRE_VERSION};
+
+use std::str::FromStr;
 
 use crate::json::Value;
 use crate::{Error, Result};
@@ -36,7 +40,30 @@ impl Frame {
         ])
     }
 
+    /// Parse the JSON ingest body. The boundary is strict: `sim_time`
+    /// must be finite and every payload value must be a finite f64 that
+    /// stays finite as f32 — a silent `f64 → f32` cast used to admit
+    /// NaN and turn out-of-range magnitudes into ±inf, poisoning every
+    /// downstream score that touched the window.
     pub fn from_json(v: &Value) -> Result<Frame> {
+        let sim_time = v
+            .req("sim_time")?
+            .as_f64()
+            .ok_or_else(|| Error::json("sim_time not a number"))?;
+        if !sim_time.is_finite() {
+            return Err(Error::json("sim_time not finite"));
+        }
+        let raw = v.req("values")?.as_f64_vec()?;
+        let mut values = Vec::with_capacity(raw.len());
+        for (i, x) in raw.into_iter().enumerate() {
+            let y = x as f32;
+            if !y.is_finite() {
+                return Err(Error::json(format!(
+                    "values[{i}] = {x} is not representable as a finite f32"
+                )));
+            }
+            values.push(y);
+        }
         Ok(Frame {
             patient: v
                 .req("patient")?
@@ -45,11 +72,8 @@ impl Frame {
             modality: Modality::from_str(
                 v.req("modality")?.as_str().ok_or_else(|| Error::json("modality not a string"))?,
             )?,
-            sim_time: v
-                .req("sim_time")?
-                .as_f64()
-                .ok_or_else(|| Error::json("sim_time not a number"))?,
-            values: v.req("values")?.as_f64_vec()?.into_iter().map(|x| x as f32).collect(),
+            sim_time,
+            values,
         })
     }
 }
@@ -90,8 +114,12 @@ impl Modality {
             Modality::Labs => "labs",
         }
     }
+}
 
-    pub fn from_str(s: &str) -> Result<Modality> {
+impl std::str::FromStr for Modality {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Modality> {
         match s {
             "ecg" => Ok(Modality::Ecg),
             "vitals" => Ok(Modality::Vitals),
@@ -118,6 +146,24 @@ mod tests {
         assert_eq!(g.modality, Modality::Vitals);
         assert_eq!(g.sim_time, 12.5);
         assert_eq!(g.values, vec![1.0, 2.5, -0.25]);
+    }
+
+    #[test]
+    fn from_json_rejects_nan_and_out_of_range_values() {
+        // NaN payload value
+        let body = r#"{"patient":1,"modality":"ecg","sim_time":0.5,"values":[1.0,null,2.0]}"#;
+        assert!(
+            Value::parse(body).is_err()
+                || Frame::from_json(&Value::parse(body).unwrap()).is_err()
+        );
+        // magnitude beyond f32 range would cast to +inf — rejected
+        let big = r#"{"patient":1,"modality":"ecg","sim_time":0.5,"values":[1e39]}"#;
+        assert!(Frame::from_json(&Value::parse(big).unwrap()).is_err());
+        // non-finite sim_time encoded as a huge exponent
+        let t = r#"{"patient":1,"modality":"ecg","sim_time":1e999,"values":[1.0]}"#;
+        if let Ok(v) = Value::parse(t) {
+            assert!(Frame::from_json(&v).is_err());
+        }
     }
 
     #[test]

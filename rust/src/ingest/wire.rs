@@ -1,0 +1,254 @@
+//! Dependency-free little-endian wire codec for [`Frame`] — the binary
+//! framing behind the HTTP `POST /ingest.bin` route.
+//!
+//! At 100 beds × 250 Hz the ingest edge sees ~25k frames/s; parsing
+//! each frame through the recursive-descent JSON parser costs one
+//! `Value` tree plus several `Vec` allocations per sample. The wire
+//! format decodes with zero intermediate allocation (one `Vec<f32>` for
+//! the payload, which the [`Frame`] needs anyway).
+//!
+//! ## Frame layout (all integers/floats little-endian)
+//!
+//! ```text
+//!  offset  size  field
+//!  0       4     magic     = b"HLM1"
+//!  4       1     version   = 1
+//!  5       1     modality  (0 = ecg, 1 = vitals, 2 = labs)
+//!  6       2     reserved  = 0
+//!  8       8     patient   (u64)
+//!  16      8     sim_time  (f64, finite)
+//!  24      4     n_values  (u32, ≤ MAX_WIRE_VALUES)
+//!  28      4·n   values    (f32 each, finite — NaN/±inf rejected)
+//! ```
+//!
+//! A request body may carry any number of frames back to back
+//! ([`decode_stream`]); each frame is self-delimiting via `n_values`.
+//! Decoding is total: truncated or corrupt buffers return
+//! [`Error::Wire`], never panic, and never allocate more than
+//! `n_values` admits after the length check.
+
+use super::{Frame, Modality};
+use crate::{Error, Result};
+
+/// First four body bytes of every wire frame.
+pub const WIRE_MAGIC: [u8; 4] = *b"HLM1";
+
+/// Current wire-format version.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Fixed header size preceding the f32 payload.
+pub const WIRE_HEADER_LEN: usize = 28;
+
+/// Upper bound on `n_values` — caps the decode-side allocation so a
+/// hostile length prefix cannot balloon memory (a million samples is
+/// orders of magnitude above any real frame).
+pub const MAX_WIRE_VALUES: usize = 1 << 20;
+
+impl Modality {
+    /// Wire-format discriminant.
+    pub fn wire_code(&self) -> u8 {
+        match self {
+            Modality::Ecg => 0,
+            Modality::Vitals => 1,
+            Modality::Labs => 2,
+        }
+    }
+
+    /// Inverse of [`Modality::wire_code`].
+    pub fn from_wire_code(code: u8) -> Result<Modality> {
+        match code {
+            0 => Ok(Modality::Ecg),
+            1 => Ok(Modality::Vitals),
+            2 => Ok(Modality::Labs),
+            other => Err(Error::wire(format!("unknown modality code {other}"))),
+        }
+    }
+}
+
+impl Frame {
+    /// Encoded size of this frame on the wire.
+    pub fn wire_len(&self) -> usize {
+        WIRE_HEADER_LEN + 4 * self.values.len()
+    }
+
+    /// Append the wire encoding to `out` (streaming multi-frame bodies
+    /// reuse one buffer across frames).
+    pub fn write_bytes(&self, out: &mut Vec<u8>) {
+        out.reserve(self.wire_len());
+        out.extend_from_slice(&WIRE_MAGIC);
+        out.push(WIRE_VERSION);
+        out.push(self.modality.wire_code());
+        out.extend_from_slice(&[0u8; 2]); // reserved
+        out.extend_from_slice(&(self.patient as u64).to_le_bytes());
+        out.extend_from_slice(&self.sim_time.to_le_bytes());
+        out.extend_from_slice(&(self.values.len() as u32).to_le_bytes());
+        for v in &self.values {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Encode into a fresh buffer.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_len());
+        self.write_bytes(&mut out);
+        out
+    }
+
+    /// Decode one frame from the front of `buf`; returns the frame and
+    /// the number of bytes consumed. Total: truncated, corrupt, or
+    /// non-finite input yields `Err`, never a panic.
+    pub fn from_bytes(buf: &[u8]) -> Result<(Frame, usize)> {
+        if buf.len() < WIRE_HEADER_LEN {
+            return Err(Error::wire(format!(
+                "truncated header: {} of {WIRE_HEADER_LEN} bytes",
+                buf.len()
+            )));
+        }
+        if buf[..4] != WIRE_MAGIC {
+            return Err(Error::wire("bad magic (expected HLM1)"));
+        }
+        if buf[4] != WIRE_VERSION {
+            return Err(Error::wire(format!("unsupported wire version {}", buf[4])));
+        }
+        let modality = Modality::from_wire_code(buf[5])?;
+        if buf[6] != 0 || buf[7] != 0 {
+            return Err(Error::wire("nonzero reserved bytes"));
+        }
+        let patient = u64::from_le_bytes(take8(buf, 8)) as usize;
+        let sim_time = f64::from_le_bytes(take8(buf, 16));
+        if !sim_time.is_finite() {
+            return Err(Error::wire("non-finite sim_time"));
+        }
+        let n = u32::from_le_bytes(take4(buf, 24)) as usize;
+        if n > MAX_WIRE_VALUES {
+            return Err(Error::wire(format!("payload length {n} exceeds {MAX_WIRE_VALUES}")));
+        }
+        let total = WIRE_HEADER_LEN + 4 * n;
+        if buf.len() < total {
+            return Err(Error::wire(format!(
+                "truncated payload: {} of {total} bytes",
+                buf.len()
+            )));
+        }
+        let mut values = Vec::with_capacity(n);
+        for (i, chunk) in buf[WIRE_HEADER_LEN..total].chunks_exact(4).enumerate() {
+            let v = f32::from_le_bytes(chunk.try_into().expect("chunks_exact(4)"));
+            if !v.is_finite() {
+                return Err(Error::wire(format!("non-finite payload value at index {i}")));
+            }
+            values.push(v);
+        }
+        Ok((Frame { patient, modality, sim_time, values }, total))
+    }
+}
+
+/// Decode a whole request body of back-to-back frames. Errors if any
+/// frame is malformed or if trailing bytes remain after the last frame.
+pub fn decode_stream(mut buf: &[u8]) -> Result<Vec<Frame>> {
+    let mut frames = Vec::new();
+    while !buf.is_empty() {
+        let (frame, used) = Frame::from_bytes(buf)?;
+        frames.push(frame);
+        buf = &buf[used..];
+    }
+    Ok(frames)
+}
+
+fn take4(buf: &[u8], at: usize) -> [u8; 4] {
+    buf[at..at + 4].try_into().expect("bounds checked by caller")
+}
+
+fn take8(buf: &[u8], at: usize) -> [u8; 8] {
+    buf[at..at + 8].try_into().expect("bounds checked by caller")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame() -> Frame {
+        Frame {
+            patient: 42,
+            modality: Modality::Ecg,
+            sim_time: 12.375,
+            values: vec![0.5, -1.25, 3.0],
+        }
+    }
+
+    #[test]
+    fn roundtrip_single_frame() {
+        let f = frame();
+        let bytes = f.to_bytes();
+        assert_eq!(bytes.len(), f.wire_len());
+        let (g, used) = Frame::from_bytes(&bytes).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(g.patient, f.patient);
+        assert_eq!(g.modality, f.modality);
+        assert_eq!(g.sim_time.to_bits(), f.sim_time.to_bits());
+        assert_eq!(g.values, f.values);
+    }
+
+    #[test]
+    fn roundtrip_multi_frame_stream() {
+        let mut body = Vec::new();
+        for i in 0..5usize {
+            let mut f = frame();
+            f.patient = i;
+            f.write_bytes(&mut body);
+        }
+        let frames = decode_stream(&body).unwrap();
+        assert_eq!(frames.len(), 5);
+        for (i, f) in frames.iter().enumerate() {
+            assert_eq!(f.patient, i);
+        }
+    }
+
+    #[test]
+    fn every_truncation_errors_without_panic() {
+        let bytes = frame().to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(Frame::from_bytes(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn corrupt_header_fields_error() {
+        let good = frame().to_bytes();
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xff;
+        assert!(Frame::from_bytes(&bad_magic).is_err());
+        let mut bad_version = good.clone();
+        bad_version[4] = 9;
+        assert!(Frame::from_bytes(&bad_version).is_err());
+        let mut bad_modality = good.clone();
+        bad_modality[5] = 7;
+        assert!(Frame::from_bytes(&bad_modality).is_err());
+        let mut bad_len = good.clone();
+        bad_len[24..28].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(Frame::from_bytes(&bad_len).is_err());
+    }
+
+    #[test]
+    fn nan_payload_is_rejected() {
+        let mut f = frame();
+        f.values[1] = f32::NAN;
+        assert!(Frame::from_bytes(&f.to_bytes()).is_err());
+        f.values[1] = f32::INFINITY;
+        assert!(Frame::from_bytes(&f.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_in_stream_errors() {
+        let mut body = frame().to_bytes();
+        body.push(0x00);
+        assert!(decode_stream(&body).is_err());
+    }
+
+    #[test]
+    fn modality_wire_codes_roundtrip() {
+        for m in [Modality::Ecg, Modality::Vitals, Modality::Labs] {
+            assert_eq!(Modality::from_wire_code(m.wire_code()).unwrap(), m);
+        }
+        assert!(Modality::from_wire_code(3).is_err());
+    }
+}

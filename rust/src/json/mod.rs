@@ -108,13 +108,7 @@ impl Value {
         Value::Arr(xs.iter().map(|&x| Value::Num(x)).collect())
     }
 
-    // -- serialization ----------------------------------------------------
-
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
+    // -- serialization (via `Display`; `.to_string()` serializes) --------
 
     fn write(&self, out: &mut String) {
         match self {
@@ -152,6 +146,15 @@ impl Value {
                 out.push('}');
             }
         }
+    }
+}
+
+impl std::fmt::Display for Value {
+    /// Compact JSON serialization (what `.to_string()` produces).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 

@@ -1,0 +1,166 @@
+//! 64-byte-aligned batch arena — the persistent padded input buffer
+//! recycled through [`Engine::execute_batch`](super::Engine::execute_batch).
+//!
+//! Batch inputs are flattened `(batch, clip_len)` f32 planes. Backing
+//! them with cache-line-aligned storage (one [`Lane`] = 16 f32 = 64 B)
+//! keeps every slot write inside whole cache lines and lets the
+//! chunked [`AlignedBatch::pack_slot`] copy loop autovectorize to
+//! full-width vector moves: the compiler sees fixed 64-float chunks
+//! via `chunks_exact`, so the inner loop lowers to straight-line SIMD
+//! loads/stores with a single scalar remainder tail (verified by
+//! `cargo bench --bench serving`, `pack/*` group, against a fresh
+//! `vec![0.0; n]` + `copy_from_slice` per flush).
+//!
+//! The arena round-trips through the engine by value (moved into the
+//! job, recycled back with the reply) so the batcher flush path never
+//! re-allocates.
+
+/// One cache line of samples.
+#[repr(C, align(64))]
+#[derive(Clone, Copy)]
+struct Lane([f32; FLOATS_PER_LANE]);
+
+/// f32 elements per 64-byte lane.
+pub const FLOATS_PER_LANE: usize = 16;
+
+const ZERO_LANE: Lane = Lane([0.0; FLOATS_PER_LANE]);
+
+/// A 64-byte-aligned, zero-padded f32 batch buffer.
+#[derive(Default)]
+pub struct AlignedBatch {
+    lanes: Vec<Lane>,
+    len: usize,
+}
+
+impl AlignedBatch {
+    pub fn new() -> Self {
+        AlignedBatch { lanes: Vec::new(), len: 0 }
+    }
+
+    /// Aligned copy of a flat slice (convenience entry points that
+    /// accept `Vec<f32>` go through this).
+    pub fn from_slice(src: &[f32]) -> Self {
+        let mut buf = AlignedBatch::new();
+        buf.reset(src.len());
+        buf.as_mut_slice().copy_from_slice(src);
+        buf
+    }
+
+    /// `len` copies of `value` (profiling warm-ups, tests).
+    pub fn filled(len: usize, value: f32) -> Self {
+        let mut buf = AlignedBatch::new();
+        buf.reset(len);
+        buf.as_mut_slice().fill(value);
+        buf
+    }
+
+    /// Resize to `len` floats, all zero — the per-flush padding reset.
+    /// Keeps the allocation once grown (clear + resize reuse capacity).
+    pub fn reset(&mut self, len: usize) {
+        let lanes = len.div_ceil(FLOATS_PER_LANE);
+        self.lanes.clear();
+        self.lanes.resize(lanes, ZERO_LANE);
+        self.len = len;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        // SAFETY: `lanes` owns `lanes.len() * FLOATS_PER_LANE ≥ len`
+        // contiguous, initialized f32s; `Lane` is `repr(C)` over
+        // `[f32; 16]`, so the cast preserves layout and the pointer is
+        // valid (and properly aligned) even when the Vec is empty.
+        unsafe { std::slice::from_raw_parts(self.lanes.as_ptr().cast::<f32>(), self.len) }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: as for `as_slice`; `&mut self` gives unique access.
+        unsafe { std::slice::from_raw_parts_mut(self.lanes.as_mut_ptr().cast::<f32>(), self.len) }
+    }
+
+    /// Copy one query window into batch slot `slot` with a chunked
+    /// copy: fixed 64-float (4-lane) chunks keep the loop
+    /// straight-line vectorizable, the remainder is a single short
+    /// tail copy.
+    ///
+    /// Panics (debug) if the slot does not fit — the batcher sizes the
+    /// arena as `batch * clip_len` before packing.
+    pub fn pack_slot(&mut self, slot: usize, clip_len: usize, src: &[f32]) {
+        debug_assert_eq!(src.len(), clip_len, "window length must equal clip_len");
+        let start = slot * clip_len;
+        let dst = &mut self.as_mut_slice()[start..start + src.len()];
+        const CHUNK: usize = 4 * FLOATS_PER_LANE;
+        let mut src_chunks = src.chunks_exact(CHUNK);
+        let mut dst_chunks = dst.chunks_exact_mut(CHUNK);
+        for (d, s) in dst_chunks.by_ref().zip(src_chunks.by_ref()) {
+            d.copy_from_slice(s);
+        }
+        dst_chunks.into_remainder().copy_from_slice(src_chunks.remainder());
+    }
+}
+
+impl std::fmt::Debug for AlignedBatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AlignedBatch")
+            .field("len", &self.len)
+            .field("lanes", &self.lanes.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_pointer_is_64_byte_aligned() {
+        let mut buf = AlignedBatch::new();
+        buf.reset(100);
+        assert_eq!(buf.as_slice().as_ptr() as usize % 64, 0);
+        assert_eq!(buf.len(), 100);
+        assert!(buf.as_slice().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn reset_rezeros_and_keeps_capacity() {
+        let mut buf = AlignedBatch::new();
+        buf.reset(64);
+        buf.as_mut_slice().fill(7.0);
+        let ptr = buf.as_slice().as_ptr();
+        buf.reset(64);
+        assert_eq!(buf.as_slice().as_ptr(), ptr, "allocation reused");
+        assert!(buf.as_slice().iter().all(|&v| v == 0.0), "padding re-zeroed");
+    }
+
+    #[test]
+    fn pack_slot_places_windows_and_preserves_padding() {
+        // clip_len deliberately not a multiple of the lane width
+        let clip = 133usize;
+        let batch = 3usize;
+        let mut buf = AlignedBatch::new();
+        buf.reset(batch * clip);
+        let w0: Vec<f32> = (0..clip).map(|i| i as f32).collect();
+        let w2: Vec<f32> = (0..clip).map(|i| -(i as f32)).collect();
+        buf.pack_slot(0, clip, &w0);
+        buf.pack_slot(2, clip, &w2);
+        let s = buf.as_slice();
+        assert_eq!(&s[..clip], &w0[..]);
+        assert!(s[clip..2 * clip].iter().all(|&v| v == 0.0), "untouched slot stays zero");
+        assert_eq!(&s[2 * clip..], &w2[..]);
+    }
+
+    #[test]
+    fn from_slice_and_filled_match_their_sources() {
+        let src: Vec<f32> = (0..50).map(|i| i as f32 * 0.5).collect();
+        assert_eq!(AlignedBatch::from_slice(&src).as_slice(), &src[..]);
+        let f = AlignedBatch::filled(17, 0.25);
+        assert_eq!(f.len(), 17);
+        assert!(f.as_slice().iter().all(|&v| v == 0.25));
+    }
+}

@@ -21,10 +21,12 @@
 //! fault-injecting sim, benches a zero-latency one).
 
 pub mod backend;
+pub mod buf;
 #[cfg(feature = "xla")]
 pub mod pjrt;
 
 pub use backend::{BackendOutput, ExecBackend, ExecWorker, SimBackend};
+pub use buf::AlignedBatch;
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -38,13 +40,14 @@ use crate::{Error, Result};
 pub type ModelKey = (usize, usize);
 
 /// Reply payload: the result plus (optionally) the recycled input
-/// buffer, so batcher flushes reuse one persistent allocation.
-type Reply = (Result<ExecOutput>, Option<Vec<f32>>);
+/// arena, so batcher flushes reuse one persistent allocation.
+type Reply = (Result<ExecOutput>, Option<AlignedBatch>);
 
-/// One inference job: a flattened `(batch, clip_len)` f32 input.
+/// One inference job: a flattened `(batch, clip_len)` f32 input in a
+/// 64-byte-aligned arena.
 struct Job {
     key: ModelKey,
-    input: Vec<f32>,
+    input: AlignedBatch,
     /// Send the input buffer back with the reply (buffer recycling).
     want_input_back: bool,
     reply: mpsc::SyncSender<Reply>,
@@ -231,7 +234,12 @@ impl Engine {
         Ok(())
     }
 
-    fn send_job(&self, key: ModelKey, input: Vec<f32>, want_input_back: bool) -> Result<Pending> {
+    fn send_job(
+        &self,
+        key: ModelKey,
+        input: AlignedBatch,
+        want_input_back: bool,
+    ) -> Result<Pending> {
         let (tx, rx) = mpsc::sync_channel(1);
         let guard = self.inner.tx.lock().expect("engine sender poisoned");
         guard
@@ -247,10 +255,10 @@ impl Engine {
         self.submit(key, input)?.wait()
     }
 
-    /// Submit a job over a caller-owned buffer and block for the reply;
-    /// the buffer's allocation is returned to `buf` afterwards so the
-    /// caller (the batcher flush path) never re-allocates per batch.
-    pub fn execute_batch(&self, key: ModelKey, buf: &mut Vec<f32>) -> Result<ExecOutput> {
+    /// Submit a job over a caller-owned aligned arena and block for the
+    /// reply; the arena's allocation is returned to `buf` afterwards so
+    /// the caller (the batcher flush path) never re-allocates per batch.
+    pub fn execute_batch(&self, key: ModelKey, buf: &mut AlignedBatch) -> Result<ExecOutput> {
         self.validate(key, buf.len())?;
         let input = std::mem::take(buf);
         let pending = self.send_job(key, input, true)?;
@@ -263,16 +271,18 @@ impl Engine {
 
     /// Submit a job; the caller can collect the reply later (lets one
     /// thread keep several models in flight across the worker pool).
+    /// Copies `input` into an aligned arena — hot paths should hold an
+    /// [`AlignedBatch`] and use [`Engine::execute_batch`] instead.
     pub fn submit(&self, key: ModelKey, input: Vec<f32>) -> Result<Pending> {
         self.validate(key, input.len())?;
-        self.send_job(key, input, false)
+        self.send_job(key, AlignedBatch::from_slice(&input), false)
     }
 
     /// Measure single-job service time for (model, batch): median of
     /// `reps` back-to-back executions with synthetic input (plus one
     /// discarded warm-up that triggers compilation).
     pub fn profile_model(&self, key: ModelKey, reps: usize) -> Result<Duration> {
-        let mut buf = vec![0.1f32; key.1 * self.inner.clip_len];
+        let mut buf = AlignedBatch::filled(key.1 * self.inner.clip_len, 0.1);
         self.execute_batch(key, &mut buf)?; // warm-up / compile
         let mut times: Vec<Duration> = Vec::with_capacity(reps);
         for _ in 0..reps {
@@ -311,7 +321,7 @@ fn worker_loop(
             }
         };
         let Job { key, input, want_input_back, reply } = job;
-        let result = worker.run(key, &input, clip_len).map(|out| {
+        let result = worker.run(key, input.as_slice(), clip_len).map(|out| {
             if out.compiled {
                 stats.compile_count.fetch_add(1, Ordering::Relaxed);
             }
@@ -407,12 +417,12 @@ mod tests {
     fn execute_batch_recycles_the_buffer() {
         let (_zoo, engine) = sim_engine(1);
         let clip = engine.clip_len();
-        let mut buf = vec![0.25f32; clip];
-        let ptr = buf.as_ptr();
+        let mut buf = AlignedBatch::filled(clip, 0.25);
+        let ptr = buf.as_slice().as_ptr();
         let out = engine.execute_batch((0, 1), &mut buf).unwrap();
         assert_eq!(out.scores.len(), 1);
         assert_eq!(buf.len(), clip, "buffer returned");
-        assert_eq!(buf.as_ptr(), ptr, "same allocation reused");
+        assert_eq!(buf.as_slice().as_ptr(), ptr, "same allocation reused");
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! Per-model dynamic batcher actor: coalesces queries from many patients
-//! into one device batch (up to `max_batch`, or after `timeout`), pads
-//! into a **persistent** batch buffer (reused across flushes — the only
-//! copy on the whole data plane), executes through the engine and fans
-//! per-slot scores back to the collector.
+//! into one device batch (up to `max_batch`, or after `timeout`), packs
+//! into a **persistent 64-byte-aligned** batch arena (reused across
+//! flushes — the only copy on the whole data plane, chunked for SIMD;
+//! see [`crate::runtime::AlignedBatch`]), executes through the engine
+//! and fans per-slot scores back to the collector.
 //!
 //! One OS thread per selected model — the rust analogue of the paper's
 //! per-model Ray actor with its queue. Items carry `Arc<[f32]>` windows
@@ -17,7 +18,7 @@
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-use crate::runtime::Engine;
+use crate::runtime::{AlignedBatch, Engine};
 use crate::{Error, Result};
 
 /// One unit of work for a model actor.
@@ -92,9 +93,9 @@ pub fn model_batch_loop(
     let clip_len = engine.clip_len();
     let max_take = policy.max_batch.min(largest_batch(&engine)).max(1);
     let mut pending: Vec<BatchItem> = Vec::with_capacity(max_take);
-    // persistent padded batch buffer: allocated once, recycled through
-    // Engine::execute_batch on every flush
-    let mut buf: Vec<f32> = Vec::new();
+    // persistent padded batch arena (64-byte-aligned): allocated once,
+    // recycled through Engine::execute_batch on every flush
+    let mut buf = AlignedBatch::new();
     loop {
         // fill phase: block for the first item, then wait up to `timeout`
         // for the batch to fill
@@ -167,7 +168,7 @@ fn flush(
     engine: &Engine,
     clip_len: usize,
     pending: &mut Vec<BatchItem>,
-    buf: &mut Vec<f32>,
+    buf: &mut AlignedBatch,
     out: &mut impl FnMut(ModelReport) -> Result<()>,
     max_take: usize,
 ) -> std::result::Result<(), FlushError> {
@@ -189,14 +190,25 @@ fn flush(
     }
     let take = pending.len().min(max_take);
     let batch = engine.batch_for(take);
-    buf.clear();
-    buf.resize(batch * clip_len, 0.0);
+    buf.reset(batch * clip_len);
     for (slot, item) in pending[..take].iter().enumerate() {
-        buf[slot * clip_len..(slot + 1) * clip_len].copy_from_slice(&item.input);
+        buf.pack_slot(slot, clip_len, &item.input);
     }
     let started = Instant::now();
     match engine.execute_batch((model_index, batch), buf) {
         Ok(result) => {
+            // a backend returning fewer scores than batch slots must
+            // fail the batch, not panic the member thread: a dead
+            // batcher with unreported dequeued items would leak live
+            // pending-table entries (and stall their callers) forever
+            if result.scores.len() < take {
+                let e = Error::serving(format!(
+                    "model {model_index}: backend returned {} scores for a batch of {take}",
+                    result.scores.len()
+                ));
+                fail_batch(model_index, pending, take, out);
+                return Err(FlushError::Exec(e));
+            }
             for (slot, item) in pending.drain(..take).enumerate() {
                 let report = ModelScore {
                     query_id: item.query_id,

@@ -20,11 +20,13 @@
 //! inference) are separated exactly as the paper requires of its
 //! serving platform.
 //!
-//! The data plane is zero-copy end to end: aggregators emit lead
-//! windows as `Arc<[f32]>`, the dispatcher fans references (not
-//! copies) to every member's batcher, per-query bagging state lives in
-//! a striped pending table, and each batcher pads into one persistent
-//! reusable buffer — see [`pipeline`] for the architecture diagram.
+//! The data plane is zero-copy and lock-free end to end: aggregators
+//! emit lead windows as `Arc<[f32]>`, the dispatcher fans references
+//! (not copies) to every member's batcher, per-query bagging state
+//! lives in a preallocated generation-tagged slot arena updated purely
+//! with atomics ([`pipeline::PendingSlots`]), and each batcher packs
+//! into one persistent 64-byte-aligned batch arena — see [`pipeline`]
+//! for the architecture diagram.
 //! Model execution goes through the pluggable
 //! [`ExecBackend`](crate::runtime::ExecBackend) (sim by default, PJRT
 //! with `--features xla`).
@@ -36,5 +38,7 @@ pub mod profile;
 pub mod telemetry;
 
 pub use aggregator::WindowAggregator;
-pub use pipeline::{share_leads, Pipeline, PipelineConfig, Prediction, Query};
+pub use pipeline::{
+    share_leads, PendingSlots, Pipeline, PipelineConfig, Prediction, Query, ScoreOutcome,
+};
 pub use telemetry::{LatencyHistogram, Telemetry};

@@ -1,45 +1,52 @@
 //! The ensemble serving pipeline: router + per-model batcher actors +
 //! bagging collector, wired over std channels (Fig. 4).
 //!
-//! ## Data-plane architecture (zero-copy, shard-parallel)
+//! ## Data-plane architecture (zero-copy, lock-free admission)
 //!
 //! ```text
 //!  Pipeline handles ──queries──► router thread ──items──► batcher threads
-//!        │                          │ register               │  persistent
-//!        │  leads: [Arc<[f32]>; 3]  │                        │  padded buffer
-//!        │  (shared, never cloned)  ▼                        ▼
-//!        │                 striped pending table        ExecBackend engine
-//!        │               (N mutexes, keyed id % N)      (sim | pjrt workers)
-//!        │                          ▲                        │ scores
-//!        ▼                          │                        ▼
-//!      reply rx ◄─────────── collector thread ◄──────────────┘
+//!        │                          │ claim slot              │  persistent
+//!        │  leads: [Arc<[f32]>; 3]  │ (CAS, no mutex)         │  64B-aligned
+//!        │  (shared, never cloned)  ▼                         │  batch arena
+//!        │              pending slot arena                    ▼
+//!        │        (preallocated, generation-tagged;      ExecBackend engine
+//!        │         atomic remaining + per-member         (sim | pjrt workers)
+//!        │         score cells, CAS eviction)                 │ scores
+//!        ▼                          ▲                         ▼
+//!      reply rx ◄─────────── collector thread ◄───────────────┘
 //! ```
 //!
 //! * **Zero-copy windows** — the aggregator emits each lead window once
 //!   as `Arc<[f32]>`; the router hands every ensemble member a
 //!   reference, and the only remaining copy is the single slot-write
-//!   into the batcher's persistent padded batch buffer.
-//! * **Striped pending table** — per-query bagging state is sharded
-//!   over [`PENDING_STRIPES`] mutexes keyed by `query_id`, so the
-//!   router (registering) and the collector (scoring) contend only when
-//!   they touch the same stripe, not on one global lock.
-//! * **Deterministic bagging** — member scores are accumulated per
-//!   model and summed in model-index order at completion, so a query's
-//!   ensemble score is bit-for-bit identical regardless of batch
-//!   composition or arrival order.
+//!   into the batcher's persistent aligned batch arena.
+//! * **Lock-free pending slots** — per-query bagging state lives in a
+//!   preallocated arena of [`PENDING_SLOTS`] generation-tagged slots
+//!   (`query_id & (PENDING_SLOTS-1)` picks the slot, `query_id + 1` is
+//!   its generation tag). The router claims a slot with one CAS, the
+//!   collector updates `remaining` and per-member score cells with
+//!   atomics, and eviction is a CAS on the tag — router and collector
+//!   never block each other, even on the same query. See
+//!   [`PendingSlots`] for the full protocol.
+//! * **Deterministic bagging** — each member's score is written once
+//!   into its own cell and the cells are summed in model-index order at
+//!   completion, so a query's ensemble score is bit-for-bit identical
+//!   regardless of batch composition, arrival order, or which thread
+//!   completes the slot.
 //! * **Failure eviction** — when a member cannot score a query (engine
-//!   error, dead batcher), the entry is evicted and the caller's reply
-//!   channel drops, so `submit()` callers fail fast instead of leaking
-//!   entries with `remaining > 0` forever.
+//!   error, dead batcher), the slot is reclaimed via a tag CAS and the
+//!   caller's reply channel drops, so `submit()` callers fail fast
+//!   instead of leaking slots with `remaining > 0` forever.
 //!
 //! Shutdown is acyclic: dropping the last `Pipeline` handle closes the
 //! query channel → the router exits and drops the per-model item
 //! senders → batchers drain and exit, dropping the report sender → the
 //! collector exits. No thread outlives the pipeline.
 
+use std::cell::UnsafeCell;
 use std::collections::HashMap;
-use std::sync::atomic::Ordering;
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use super::batcher::{model_batch_loop, BatchItem, BatchPolicy, ModelReport};
@@ -48,9 +55,11 @@ use crate::runtime::Engine;
 use crate::zoo::{Selector, Zoo};
 use crate::{Error, Result};
 
-/// Number of pending-table shards (power of two; a query lives in
-/// stripe `query_id % PENDING_STRIPES`).
-pub const PENDING_STRIPES: usize = 16;
+/// Number of preallocated pending slots (power of two; a query lives in
+/// slot `query_id & (PENDING_SLOTS - 1)`). Also the in-flight admission
+/// bound: if the query that used a slot `PENDING_SLOTS` ids ago has not
+/// completed yet, the router briefly yields instead of growing memory.
+pub const PENDING_SLOTS: usize = 1024;
 
 /// Move a triple of freshly collected lead windows into shared storage:
 /// one allocation per lead, after which every ensemble member borrows
@@ -133,60 +142,337 @@ impl PipelineConfig {
     }
 }
 
-struct PendingQuery {
-    patient: usize,
-    window_id: u64,
-    sim_end: f64,
-    emitted: Instant,
-    remaining: usize,
-    /// (model index, score) per member already collected; summed in
-    /// model-index order at completion for a deterministic bagging mean.
-    member_scores: Vec<(usize, f32)>,
+// ---------------------------------------------------------------------------
+// Lock-free pending slot arena
+// ---------------------------------------------------------------------------
+
+/// Query metadata carried through a pending slot (everything the
+/// collector needs to build the [`Prediction`]).
+pub struct PendingMeta {
+    pub patient: usize,
+    pub window_id: u64,
+    pub sim_end: f64,
+    pub emitted: Instant,
+    pub reply: Option<mpsc::SyncSender<Prediction>>,
+}
+
+/// What [`PendingSlots::score`] observed.
+pub enum ScoreOutcome {
+    /// No live generation for this query id (never inserted, already
+    /// completed, or evicted) — the report is dropped.
+    Absent,
+    /// The score was recorded; other members are still outstanding.
+    Accepted,
+    /// This report was the last one: the caller now owns the completed
+    /// query state and must deliver the prediction.
+    Completed(CompletedQuery),
+}
+
+/// A fully scored query, handed to exactly one caller by
+/// [`PendingSlots::score`].
+pub struct CompletedQuery {
+    pub meta: PendingMeta,
+    /// Σ member scores, accumulated in model-index (cell) order — the
+    /// deterministic bagging numerator.
+    pub score_sum: f64,
+    pub min_queue_wait: Duration,
+}
+
+/// Generation tag of a free slot.
+const TAG_FREE: u64 = 0;
+/// Transient tag while one thread owns the slot exclusively (router
+/// filling it in, or the completer/evictor tearing it down).
+const TAG_BUSY: u64 = u64::MAX;
+
+/// One preallocated pending slot. The `tag` is the linearization point:
+/// `query_id + 1` while the query is live, [`TAG_FREE`] when the slot
+/// can be claimed, [`TAG_BUSY`] while exactly one thread owns it.
+struct Slot {
+    tag: AtomicU64,
+    /// Score reporters currently inside their (write cell → decrement
+    /// `remaining`) critical section. A slot is only recycled once this
+    /// drains to zero, so a reporter can never write into the next
+    /// generation's state.
+    writers: AtomicU32,
+    /// Members still outstanding for the live generation.
+    remaining: AtomicU32,
+    /// Min queue wait across members, nanoseconds (CAS-min).
+    min_wait_ns: AtomicU64,
+    /// One score cell per ensemble member, f32 bits, each written
+    /// exactly once per generation; summed in cell (= model-index)
+    /// order by the completer for deterministic bagging.
+    scores: Box<[AtomicU32]>,
+    /// Guarded by the tag protocol: only the thread that holds the
+    /// `TAG_BUSY` claim touches this.
+    meta: UnsafeCell<Option<PendingMeta>>,
+}
+
+// SAFETY: `meta` is the only non-atomic field. It is written while the
+// slot's tag is TAG_BUSY, which exactly one thread can hold at a time
+// (claimed by CAS), and read/taken only by the thread holding that
+// claim; the Release store that publishes the live tag (and the Acquire
+// CAS that reclaims it) order those accesses.
+unsafe impl Send for Slot {}
+unsafe impl Sync for Slot {}
+
+/// Preallocated, generation-tagged pending-query arena — the lock-free
+/// replacement for the old `Vec<Mutex<HashMap<u64, PendingQuery>>>`
+/// striped table. Router (insert/evict) and collector (score/evict)
+/// coordinate purely through per-slot atomics:
+///
+/// 1. **insert** — CAS the slot's tag `FREE → BUSY`, fill metadata,
+///    reset `remaining` and the score cells, then publish with a
+///    Release store of `query_id + 1`.
+/// 2. **score** — check the tag, enter the writer window
+///    (`writers += 1`, re-check the tag), write this member's score
+///    cell, CAS-min the queue wait, decrement `remaining`, leave the
+///    writer window. Whoever decrements `remaining` to zero claims the
+///    slot (`tag: id+1 → BUSY`), waits out the writer window, sums the
+///    cells in model-index order, frees the slot and returns
+///    [`ScoreOutcome::Completed`].
+/// 3. **evict** — CAS the tag `id+1 → BUSY`; on success wait out the
+///    writer window, drop the metadata (hanging up the caller's reply
+///    channel) and free the slot.
+///
+/// Score cells written before the `remaining` decrement are visible to
+/// the completer through the release sequence on `remaining`, so the
+/// deterministic model-index-order summation reads fully published
+/// values.
+pub struct PendingSlots {
+    slots: Box<[Slot]>,
+    mask: u64,
     n_models: usize,
-    min_queue_wait: Duration,
-    reply: Option<mpsc::SyncSender<Prediction>>,
+    in_flight: AtomicUsize,
 }
 
-/// Sharded pending-query table: router and collector operate on
-/// different queries almost always, so striping removes the single
-/// global lock from the hot path.
-struct PendingTable {
-    stripes: Vec<Mutex<HashMap<u64, PendingQuery>>>,
-}
+impl PendingSlots {
+    /// Arena with the default [`PENDING_SLOTS`] capacity.
+    pub fn new(n_models: usize) -> Self {
+        Self::with_capacity(PENDING_SLOTS, n_models)
+    }
 
-impl PendingTable {
-    fn new() -> Self {
-        PendingTable {
-            stripes: (0..PENDING_STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
+    /// `capacity` must be a power of two (it is a mask, not a modulus).
+    pub fn with_capacity(capacity: usize, n_models: usize) -> Self {
+        assert!(capacity.is_power_of_two(), "slot capacity must be a power of two");
+        assert!(n_models > 0, "an ensemble has at least one member");
+        let slots = (0..capacity)
+            .map(|_| Slot {
+                tag: AtomicU64::new(TAG_FREE),
+                writers: AtomicU32::new(0),
+                remaining: AtomicU32::new(0),
+                min_wait_ns: AtomicU64::new(u64::MAX),
+                scores: (0..n_models).map(|_| AtomicU32::new(0)).collect(),
+                meta: UnsafeCell::new(None),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        PendingSlots { slots, mask: capacity as u64 - 1, n_models, in_flight: AtomicUsize::new(0) }
+    }
+
+    fn slot(&self, query_id: u64) -> &Slot {
+        &self.slots[(query_id & self.mask) as usize]
+    }
+
+    /// Live tag for a query id (`u64::MAX` is reserved for BUSY, so ids
+    /// may span the entire practical range).
+    fn tag_of(query_id: u64) -> u64 {
+        query_id.wrapping_add(1)
+    }
+
+    /// Ensemble members per query (fixed for the pipeline's lifetime).
+    pub fn n_models(&self) -> usize {
+        self.n_models
+    }
+
+    /// How long `insert` backpressures on an occupied slot before
+    /// concluding the occupant is stuck (a member report was lost) and
+    /// force-evicting it. Orders of magnitude above any sane service
+    /// time, so a legitimate in-flight query is never stolen.
+    const STALE_EVICT_AFTER: Duration = Duration::from_secs(2);
+
+    /// Register a query. If the slot is still held by the query from
+    /// `capacity` ids ago, this spins (admission backpressure bounded
+    /// by the arena size) — with 1024 slots and sub-second service
+    /// times that path is effectively never taken. As a failsafe, an
+    /// occupant that has not resolved after [`Self::STALE_EVICT_AFTER`]
+    /// is evicted (its caller's reply channel drops), so a single lost
+    /// member report degrades to one failed query instead of stalling
+    /// admission forever once ids wrap the arena.
+    ///
+    /// Returns the number of stale occupants force-evicted while
+    /// claiming the slot (0 in every healthy schedule) so the caller
+    /// can account for the failed queries — eviction itself is
+    /// telemetry-agnostic.
+    pub fn insert(&self, query_id: u64, meta: PendingMeta) -> usize {
+        let slot = self.slot(query_id);
+        let mut wait_started: Option<Instant> = None;
+        let mut force_evicted = 0usize;
+        while slot
+            .tag
+            .compare_exchange(TAG_FREE, TAG_BUSY, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            let started = *wait_started.get_or_insert_with(Instant::now);
+            if started.elapsed() >= Self::STALE_EVICT_AFTER {
+                let occupant = slot.tag.load(Ordering::Acquire);
+                if occupant != TAG_FREE
+                    && occupant != TAG_BUSY
+                    && self.evict(occupant.wrapping_sub(1))
+                {
+                    // tag = occupant id + 1; eviction is a no-op if the
+                    // occupant resolves concurrently
+                    force_evicted += 1;
+                }
+                wait_started = None; // re-arm for the next occupant
+            }
+            std::thread::yield_now();
         }
+        slot.remaining.store(self.n_models as u32, Ordering::Relaxed);
+        slot.min_wait_ns.store(u64::MAX, Ordering::Relaxed);
+        for cell in slot.scores.iter() {
+            cell.store(0, Ordering::Relaxed);
+        }
+        // SAFETY: we hold the TAG_BUSY claim — no other thread touches
+        // `meta` until the Release store below publishes the live tag.
+        unsafe { *slot.meta.get() = Some(meta) };
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+        slot.tag.store(Self::tag_of(query_id), Ordering::Release);
+        force_evicted
     }
 
-    fn stripe(&self, query_id: u64) -> &Mutex<HashMap<u64, PendingQuery>> {
-        &self.stripes[(query_id % PENDING_STRIPES as u64) as usize]
+    /// Record one member's score for `query_id`. `member_pos` is the
+    /// member's position in model-index order (its score cell).
+    pub fn score(
+        &self,
+        query_id: u64,
+        member_pos: usize,
+        score: f32,
+        queue_wait: Duration,
+    ) -> ScoreOutcome {
+        debug_assert!(member_pos < self.n_models);
+        let slot = self.slot(query_id);
+        let tag = Self::tag_of(query_id);
+        if slot.tag.load(Ordering::Acquire) != tag {
+            return ScoreOutcome::Absent;
+        }
+        // writer window: once inside (and the tag re-checked), the slot
+        // cannot be recycled under us — completer/evictor spin on
+        // `writers == 0` before freeing. SeqCst on both sides of the
+        // handshake (this fetch_add + re-load here, the claim CAS +
+        // writers load in teardown) closes the store-buffering
+        // interleaving where the reporter still sees the live tag while
+        // the claimer already sees writers == 0.
+        slot.writers.fetch_add(1, Ordering::SeqCst);
+        if slot.tag.load(Ordering::SeqCst) != tag {
+            slot.writers.fetch_sub(1, Ordering::Release);
+            return ScoreOutcome::Absent;
+        }
+        slot.scores[member_pos].store(score.to_bits(), Ordering::Relaxed);
+        let ns = u64::try_from(queue_wait.as_nanos()).unwrap_or(u64::MAX);
+        let mut cur = slot.min_wait_ns.load(Ordering::Relaxed);
+        while ns < cur {
+            match slot.min_wait_ns.compare_exchange_weak(
+                cur,
+                ns,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        let was_remaining = slot.remaining.fetch_sub(1, Ordering::AcqRel);
+        slot.writers.fetch_sub(1, Ordering::Release);
+        debug_assert!(was_remaining >= 1);
+        if was_remaining != 1 {
+            return ScoreOutcome::Accepted;
+        }
+        // last member: claim the slot for completion (a concurrent
+        // evictor may win instead, in which case the query is theirs)
+        if slot
+            .tag
+            .compare_exchange(tag, TAG_BUSY, Ordering::SeqCst, Ordering::Relaxed)
+            .is_err()
+        {
+            return ScoreOutcome::Accepted;
+        }
+        let completed = self.teardown(slot, true);
+        ScoreOutcome::Completed(completed.expect("claimed live slot carries metadata"))
     }
 
-    fn insert(&self, query_id: u64, entry: PendingQuery) {
-        self.stripe(query_id)
-            .lock()
-            .expect("pending stripe poisoned")
-            .insert(query_id, entry);
+    /// Evict a live query (member failure, dead batcher): reclaims the
+    /// slot and drops the reply sender so blocked callers unhang.
+    /// Returns false if the query was not live (already completed or
+    /// evicted — eviction is idempotent).
+    pub fn evict(&self, query_id: u64) -> bool {
+        let slot = self.slot(query_id);
+        if slot
+            .tag
+            .compare_exchange(Self::tag_of(query_id), TAG_BUSY, Ordering::SeqCst, Ordering::Relaxed)
+            .is_err()
+        {
+            return false;
+        }
+        drop(self.teardown(slot, false));
+        true
     }
 
-    fn remove(&self, query_id: u64) -> Option<PendingQuery> {
-        self.stripe(query_id)
-            .lock()
-            .expect("pending stripe poisoned")
-            .remove(&query_id)
+    /// Shared tail of completion and eviction: the caller holds the
+    /// TAG_BUSY claim. Waits for in-flight reporters to leave the
+    /// writer window, extracts the state, and frees the slot.
+    fn teardown(&self, slot: &Slot, completed: bool) -> Option<CompletedQuery> {
+        // The writer window is a handful of instructions, so this spin
+        // is normally zero iterations; yield after a short burst in
+        // case a reporter thread was preempted inside the window.
+        // SeqCst pairs with the reporter's fetch_add + tag re-load (see
+        // `score`): in the single total order either our claim CAS
+        // precedes the fetch_add (the reporter re-reads the tag and
+        // backs out) or the fetch_add precedes this load (we observe
+        // the reporter and wait).
+        let mut spins = 0u32;
+        while slot.writers.load(Ordering::SeqCst) != 0 {
+            spins += 1;
+            if spins < 64 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        // SAFETY: TAG_BUSY claim is exclusive; reporters are all out of
+        // the writer window.
+        let meta = unsafe { (*slot.meta.get()).take() };
+        let out = if completed {
+            let score_sum: f64 = slot
+                .scores
+                .iter()
+                .map(|cell| f32::from_bits(cell.load(Ordering::Relaxed)) as f64)
+                .sum();
+            let ns = slot.min_wait_ns.load(Ordering::Relaxed);
+            let min_queue_wait =
+                if ns == u64::MAX { Duration::MAX } else { Duration::from_nanos(ns) };
+            meta.map(|meta| CompletedQuery { meta, score_sum, min_queue_wait })
+        } else {
+            drop(meta);
+            None
+        };
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+        slot.tag.store(TAG_FREE, Ordering::Release);
+        out
     }
 
-    /// Total in-flight queries (diagnostics + leak assertions in tests).
-    fn len(&self) -> usize {
-        self.stripes
-            .iter()
-            .map(|s| s.lock().expect("pending stripe poisoned").len())
-            .sum()
+    /// Queries currently registered and not yet completed/evicted.
+    pub fn len(&self) -> usize {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
+
+// ---------------------------------------------------------------------------
+// Pipeline
+// ---------------------------------------------------------------------------
 
 /// Handle to a running pipeline. Cheap to clone. Dropping all handles
 /// shuts the pipeline down (batchers drain, engine stays alive).
@@ -194,7 +480,7 @@ impl PendingTable {
 pub struct Pipeline {
     tx: mpsc::Sender<(Query, Option<mpsc::SyncSender<Prediction>>)>,
     telemetry: Arc<Telemetry>,
-    pending: Arc<PendingTable>,
+    pending: Arc<PendingSlots>,
     ensemble: Selector,
     clip_len: usize,
 }
@@ -216,7 +502,7 @@ impl Pipeline {
             }
         }
         let telemetry = Arc::new(Telemetry::default());
-        let pending = Arc::new(PendingTable::new());
+        let pending = Arc::new(PendingSlots::new(cfg.ensemble.len()));
         let (report_tx, report_rx) = mpsc::channel::<ModelReport>();
 
         // batcher actor per selected model
@@ -245,9 +531,17 @@ impl Pipeline {
         {
             let pending = Arc::clone(&pending);
             let telemetry = Arc::clone(&telemetry);
+            // model index → score-cell position (model-index order)
+            let member_pos: HashMap<usize, usize> = cfg
+                .ensemble
+                .indices()
+                .iter()
+                .enumerate()
+                .map(|(pos, &m)| (m, pos))
+                .collect();
             std::thread::Builder::new()
                 .name("collector".into())
-                .spawn(move || collector_loop(report_rx, pending, telemetry))
+                .spawn(move || collector_loop(report_rx, pending, member_pos, telemetry))
                 .map_err(Error::Io)?;
         }
 
@@ -327,11 +621,13 @@ fn router_loop(
     leads: HashMap<usize, usize>,
     ensemble: Selector,
     clip_len: usize,
-    pending: Arc<PendingTable>,
+    pending: Arc<PendingSlots>,
     telemetry: Arc<Telemetry>,
 ) {
-    let mut next_id: u64 = 0;
-    for (q, reply) in rx {
+    // the submission sequence number is the query id; it picks the
+    // pending slot (id mod capacity) and its generation tag (id + 1)
+    for (seq, (q, reply)) in rx.into_iter().enumerate() {
+        let id = seq as u64;
         // reject malformed windows before registering anything: the
         // reply sender drops here, so the caller errors immediately and
         // no batcher ever sees a wrong-length input
@@ -339,23 +635,21 @@ fn router_loop(
             telemetry.failures.fetch_add(1, Ordering::Relaxed);
             continue;
         }
-        let id = next_id;
-        next_id += 1;
-        let n_models = ensemble.len();
-        pending.insert(
+        let force_evicted = pending.insert(
             id,
-            PendingQuery {
+            PendingMeta {
                 patient: q.patient,
                 window_id: q.window_id,
                 sim_end: q.sim_end,
                 emitted: q.emitted,
-                remaining: n_models,
-                member_scores: Vec::with_capacity(n_models),
-                n_models,
-                min_queue_wait: Duration::MAX,
                 reply,
             },
         );
+        if force_evicted > 0 {
+            // stale occupants killed by the arena's insert failsafe:
+            // their callers saw a hang-up, so make the failures visible
+            telemetry.failures.fetch_add(force_evicted as u64, Ordering::Relaxed);
+        }
         for &m in ensemble.indices() {
             // zero-copy fan-out: every member shares the same window
             let item = BatchItem {
@@ -365,14 +659,15 @@ fn router_loop(
             };
             if model_txs[&m].send(item).is_err() {
                 // batcher died: evict the query; members already
-                // dispatched find no entry and are skipped. Count before
-                // dropping the entry so the failure is visible by the
-                // time the caller's reply channel hangs up.
-                let evicted = pending.remove(id);
-                if evicted.is_some() {
-                    telemetry.failures.fetch_add(1, Ordering::Relaxed);
+                // dispatched find a freed slot and are skipped. Count
+                // the failure BEFORE evict() drops the reply sender so
+                // it is visible by the time the caller observes the
+                // hang-up; if a concurrent collector eviction beat us
+                // to the slot (and counted it), undo our count.
+                telemetry.failures.fetch_add(1, Ordering::Relaxed);
+                if !pending.evict(id) {
+                    telemetry.failures.fetch_sub(1, Ordering::Relaxed);
                 }
-                drop(evicted);
                 break;
             }
         }
@@ -382,70 +677,142 @@ fn router_loop(
 
 fn collector_loop(
     rx: mpsc::Receiver<ModelReport>,
-    pending: Arc<PendingTable>,
+    pending: Arc<PendingSlots>,
+    member_pos: HashMap<usize, usize>,
     telemetry: Arc<Telemetry>,
 ) {
+    let n_models = pending.n_models();
     for report in rx {
         match report {
             ModelReport::Score(s) => {
                 telemetry.exec.record(s.exec_time);
                 telemetry.model_jobs.fetch_add(1, Ordering::Relaxed);
-                let done = {
-                    let mut table =
-                        pending.stripe(s.query_id).lock().expect("pending stripe poisoned");
-                    let Some(entry) = table.get_mut(&s.query_id) else { continue };
-                    entry.member_scores.push((s.model_index, s.score));
-                    entry.remaining -= 1;
-                    if s.queue_wait < entry.min_queue_wait {
-                        entry.min_queue_wait = s.queue_wait;
-                    }
-                    if entry.remaining == 0 {
-                        table.remove(&s.query_id)
-                    } else {
-                        None
-                    }
-                };
-                if let Some(entry) = done {
-                    finish(entry, &telemetry);
+                let Some(&pos) = member_pos.get(&s.model_index) else { continue };
+                match pending.score(s.query_id, pos, s.score, s.queue_wait) {
+                    ScoreOutcome::Completed(done) => finish(done, n_models, &telemetry),
+                    ScoreOutcome::Accepted | ScoreOutcome::Absent => {}
                 }
             }
             ModelReport::Failed { query_id, .. } => {
-                // Evict: dropping the entry drops its reply sender, so a
-                // blocked submit()/query() caller unblocks with an error
-                // instead of waiting on `remaining > 0` forever. Count
-                // one failure per evicted query (not per failing member),
-                // and count before dropping so it is visible by the time
-                // the caller observes the hang-up.
-                let evicted = pending.remove(query_id);
-                if evicted.is_some() {
-                    telemetry.failures.fetch_add(1, Ordering::Relaxed);
+                // Evict: reclaiming the slot drops its reply sender, so
+                // a blocked submit()/query() caller unblocks with an
+                // error instead of waiting on `remaining > 0` forever.
+                // Count one failure per evicted query (not per failing
+                // member), before the reply sender drops (evict drops
+                // it) — the count is visible by the time the caller
+                // observes the hang-up because we count first.
+                telemetry.failures.fetch_add(1, Ordering::Relaxed);
+                if !pending.evict(query_id) {
+                    telemetry.failures.fetch_sub(1, Ordering::Relaxed);
                 }
-                drop(evicted);
             }
         }
     }
 }
 
 /// Complete one query: deterministic bagging mean + telemetry + reply.
-fn finish(mut entry: PendingQuery, telemetry: &Telemetry) {
-    let e2e = entry.emitted.elapsed();
+fn finish(done: CompletedQuery, n_models: usize, telemetry: &Telemetry) {
+    let e2e = done.meta.emitted.elapsed();
     telemetry.e2e.record(e2e);
-    telemetry.queueing.record(entry.min_queue_wait);
+    telemetry.queueing.record(done.min_queue_wait);
     telemetry.queries.fetch_add(1, Ordering::Relaxed);
-    // sum in model-index order so the bagging mean does not depend on
-    // score arrival order (f64 addition is not associative)
-    entry.member_scores.sort_unstable_by_key(|&(m, _)| m);
-    let sum: f64 = entry.member_scores.iter().map(|&(_, s)| s as f64).sum();
     let prediction = Prediction {
-        patient: entry.patient,
-        window_id: entry.window_id,
-        sim_end: entry.sim_end,
-        score: sum / entry.n_models as f64,
-        n_models: entry.n_models,
+        patient: done.meta.patient,
+        window_id: done.meta.window_id,
+        sim_end: done.meta.sim_end,
+        score: done.score_sum / n_models as f64,
+        n_models,
         e2e,
-        queueing: entry.min_queue_wait,
+        queueing: done.min_queue_wait,
     };
-    if let Some(reply) = entry.reply {
+    if let Some(reply) = done.meta.reply {
         let _ = reply.send(prediction);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> PendingMeta {
+        PendingMeta {
+            patient: 0,
+            window_id: 0,
+            sim_end: 0.0,
+            emitted: Instant::now(),
+            reply: None,
+        }
+    }
+
+    #[test]
+    fn single_thread_insert_score_complete() {
+        let slots = PendingSlots::with_capacity(4, 3);
+        slots.insert(7, meta());
+        assert_eq!(slots.len(), 1);
+        assert!(matches!(
+            slots.score(7, 0, 0.25, Duration::from_millis(3)),
+            ScoreOutcome::Accepted
+        ));
+        assert!(matches!(
+            slots.score(7, 2, 0.5, Duration::from_millis(1)),
+            ScoreOutcome::Accepted
+        ));
+        match slots.score(7, 1, 0.125, Duration::from_millis(2)) {
+            ScoreOutcome::Completed(done) => {
+                // cells summed in model-index order: 0.25 + 0.125 + 0.5
+                let want = 0.25f32 as f64 + 0.125f32 as f64 + 0.5f32 as f64;
+                assert_eq!(done.score_sum.to_bits(), want.to_bits());
+                assert_eq!(done.min_queue_wait, Duration::from_millis(1));
+            }
+            _ => panic!("third member must complete the query"),
+        }
+        assert_eq!(slots.len(), 0);
+        // late duplicate for the freed generation is dropped
+        assert!(matches!(
+            slots.score(7, 0, 0.9, Duration::ZERO),
+            ScoreOutcome::Absent
+        ));
+    }
+
+    #[test]
+    fn evict_is_idempotent_and_drops_reply() {
+        let slots = PendingSlots::with_capacity(4, 2);
+        let (tx, rx) = mpsc::sync_channel::<Prediction>(1);
+        slots.insert(
+            3,
+            PendingMeta {
+                patient: 1,
+                window_id: 2,
+                sim_end: 0.0,
+                emitted: Instant::now(),
+                reply: Some(tx),
+            },
+        );
+        assert!(matches!(slots.score(3, 0, 0.5, Duration::ZERO), ScoreOutcome::Accepted));
+        assert!(slots.evict(3));
+        assert!(!slots.evict(3), "second evict must be a no-op");
+        assert_eq!(slots.len(), 0);
+        // the reply sender dropped: the caller sees a hang-up
+        assert!(rx.recv().is_err());
+        // a straggler member score for the evicted query is dropped
+        assert!(matches!(slots.score(3, 1, 0.5, Duration::ZERO), ScoreOutcome::Absent));
+    }
+
+    #[test]
+    fn slot_reuse_across_generations() {
+        let slots = PendingSlots::with_capacity(2, 1);
+        // ids 0, 2, 4 all hash to slot 0; each generation completes
+        // before the next insert, so reuse is immediate
+        for g in 0..3u64 {
+            let id = g * 2;
+            slots.insert(id, meta());
+            match slots.score(id, 0, g as f32, Duration::ZERO) {
+                ScoreOutcome::Completed(done) => {
+                    assert_eq!(done.score_sum, g as f64);
+                }
+                _ => panic!("single-member query completes on first score"),
+            }
+        }
+        assert_eq!(slots.len(), 0);
     }
 }

@@ -1,0 +1,211 @@
+//! Concurrency stress tests for the lock-free pending slot arena
+//! ([`PendingSlots`]) — the admission-path core shared by the router
+//! (insert/evict) and the collector (score/evict).
+//!
+//! Covered invariants:
+//! * hammering ONE slot (capacity 1) from concurrent router/scorer
+//!   threads across many generations loses no member score, counts no
+//!   score twice, and yields the deterministic model-index-order sum
+//!   bit for bit;
+//! * every generation completes exactly once (exactly one thread
+//!   receives [`ScoreOutcome::Completed`]);
+//! * the arena ends empty and a full-arena wraparound (ids spanning
+//!   many multiples of the capacity) never misdelivers a score.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use holmes::serving::pipeline::{PendingMeta, PendingSlots, ScoreOutcome};
+use holmes::serving::Prediction;
+
+fn meta(reply: Option<mpsc::SyncSender<Prediction>>) -> PendingMeta {
+    PendingMeta { patient: 0, window_id: 0, sim_end: 0.0, emitted: Instant::now(), reply }
+}
+
+/// Deterministic per-(generation, member) score with an irregular
+/// mantissa so summation-order mistakes change the bits.
+fn member_score(generation: u64, pos: usize) -> f32 {
+    ((generation as f32) * 0.3713 + (pos as f32) * 1.7177).sin()
+}
+
+/// The expected deterministic bagging numerator: member cells summed in
+/// model-index (cell) order.
+fn expected_sum(generation: u64, n_members: usize) -> f64 {
+    (0..n_members).map(|pos| member_score(generation, pos) as f64).sum()
+}
+
+#[test]
+fn one_slot_hammered_from_many_threads_never_loses_or_double_counts() {
+    const N_MEMBERS: usize = 8;
+    const SCORER_THREADS: usize = 4; // 2 member positions each
+    const GENERATIONS: u64 = 20_000;
+
+    // capacity 1: every generation reuses the SAME slot, so insert,
+    // score, completion, and recycling all collide maximally
+    let slots = PendingSlots::with_capacity(1, N_MEMBERS);
+    let completions = AtomicU64::new(0);
+
+    std::thread::scope(|s| {
+        // router: inserts generation g as soon as the slot frees up
+        // (insert spins on the occupied slot — admission backpressure)
+        s.spawn(|| {
+            for g in 0..GENERATIONS {
+                slots.insert(g, meta(None));
+            }
+        });
+        // scorers: thread t owns member positions t and t + SCORER_THREADS
+        for t in 0..SCORER_THREADS {
+            let slots = &slots;
+            let completions = &completions;
+            s.spawn(move || {
+                for g in 0..GENERATIONS {
+                    for pos in [t, t + SCORER_THREADS] {
+                        // spin until the router has published generation
+                        // g; `Absent` cannot mean "already gone" here
+                        // because g cannot complete without this member
+                        loop {
+                            match slots.score(
+                                g,
+                                pos,
+                                member_score(g, pos),
+                                Duration::from_nanos(g + pos as u64),
+                            ) {
+                                ScoreOutcome::Absent => std::thread::yield_now(),
+                                ScoreOutcome::Accepted => break,
+                                ScoreOutcome::Completed(done) => {
+                                    completions.fetch_add(1, Ordering::Relaxed);
+                                    let want = expected_sum(g, N_MEMBERS);
+                                    assert_eq!(
+                                        done.score_sum.to_bits(),
+                                        want.to_bits(),
+                                        "generation {g}: sum {} != expected {want} — a \
+                                         member score was lost, double-counted, or summed \
+                                         out of order",
+                                        done.score_sum
+                                    );
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    assert_eq!(
+        completions.load(Ordering::Relaxed),
+        GENERATIONS,
+        "every generation must complete exactly once"
+    );
+    assert_eq!(slots.len(), 0, "arena must end empty");
+}
+
+#[test]
+fn wraparound_ids_on_a_small_arena_stay_isolated() {
+    const N_MEMBERS: usize = 3;
+    const CAPACITY: usize = 4;
+    const GENERATIONS: u64 = 5_000;
+
+    let slots = PendingSlots::with_capacity(CAPACITY, N_MEMBERS);
+    // two independent insert+score workers interleave on the 4 slots;
+    // worker w owns ids where (id / CAPACITY) % 2 == w parity, so both
+    // continually wrap the arena without ever sharing an id
+    std::thread::scope(|s| {
+        for w in 0..2u64 {
+            let slots = &slots;
+            s.spawn(move || {
+                for round in 0..GENERATIONS {
+                    let base = (round * 2 + w) * CAPACITY as u64;
+                    for k in 0..CAPACITY as u64 {
+                        let id = base + k;
+                        slots.insert(id, meta(None));
+                        let mut completed = false;
+                        for pos in 0..N_MEMBERS {
+                            if let ScoreOutcome::Completed(done) =
+                                slots.score(id, pos, member_score(id, pos), Duration::ZERO)
+                            {
+                                let want = expected_sum(id, N_MEMBERS);
+                                assert_eq!(done.score_sum.to_bits(), want.to_bits(), "id {id}");
+                                completed = true;
+                            }
+                        }
+                        assert!(completed, "id {id} must complete after all member scores");
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(slots.len(), 0);
+}
+
+#[test]
+fn eviction_races_with_scoring_without_leaks() {
+    const N_MEMBERS: usize = 4;
+    const GENERATIONS: u64 = 5_000;
+
+    let slots = PendingSlots::with_capacity(2, N_MEMBERS);
+    let completed = AtomicU64::new(0);
+    let evicted = AtomicU64::new(0);
+
+    // single driver inserts; a scorer scores all members; an evictor
+    // tries to steal every other generation — exactly one of
+    // (completion, eviction) must win per generation
+    for g in 0..GENERATIONS {
+        let (tx, rx) = mpsc::sync_channel::<Prediction>(1);
+        slots.insert(g, meta(Some(tx)));
+        std::thread::scope(|s| {
+            let slots = &slots;
+            let completed = &completed;
+            let evicted = &evicted;
+            s.spawn(move || {
+                for pos in 0..N_MEMBERS {
+                    if let ScoreOutcome::Completed(done) =
+                        slots.score(g, pos, member_score(g, pos), Duration::ZERO)
+                    {
+                        assert_eq!(
+                            done.score_sum.to_bits(),
+                            expected_sum(g, N_MEMBERS).to_bits(),
+                            "generation {g}"
+                        );
+                        completed.fetch_add(1, Ordering::Relaxed);
+                        // completion owns the meta: deliver the reply
+                        // like the collector's finish() would
+                        if let Some(reply) = done.meta.reply {
+                            let _ = reply.send(Prediction {
+                                patient: 0,
+                                window_id: 0,
+                                sim_end: 0.0,
+                                score: done.score_sum / N_MEMBERS as f64,
+                                n_models: N_MEMBERS,
+                                e2e: Duration::ZERO,
+                                queueing: Duration::ZERO,
+                            });
+                        }
+                    }
+                }
+            });
+            if g % 2 == 0 {
+                s.spawn(move || {
+                    if slots.evict(g) {
+                        evicted.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        // exactly one outcome: a prediction or a hang-up
+        match rx.recv() {
+            Ok(p) => assert_eq!(p.n_models, N_MEMBERS, "generation {g}"),
+            Err(_) => { /* evicted: reply sender dropped */ }
+        }
+        assert_eq!(slots.len(), 0, "generation {g} must not leak");
+    }
+    assert_eq!(
+        completed.load(Ordering::Relaxed) + evicted.load(Ordering::Relaxed),
+        GENERATIONS,
+        "every generation resolves exactly once (completed {} + evicted {})",
+        completed.load(Ordering::Relaxed),
+        evicted.load(Ordering::Relaxed)
+    );
+}

@@ -342,3 +342,95 @@ fn prop_frame_json_roundtrip() {
         assert_eq!(g.values, f.values);
     }
 }
+
+// ---------------------------------------------------------------------------
+// Binary ingest wire codec
+// ---------------------------------------------------------------------------
+
+fn random_frame(rng: &mut Rng) -> Frame {
+    Frame {
+        patient: rng.range(0, 1 << 20),
+        modality: [Modality::Ecg, Modality::Vitals, Modality::Labs][rng.range(0, 3)],
+        sim_time: rng.range_f64(0.0, 1e6),
+        // arbitrary finite f32 bit patterns, not just round numbers
+        values: (0..rng.range(0, 40))
+            .map(|_| {
+                let v = (rng.range_f64(-1e6, 1e6)) as f32;
+                if v.is_finite() { v } else { 0.0 }
+            })
+            .collect(),
+    }
+}
+
+#[test]
+fn prop_frame_wire_roundtrip_is_exact() {
+    for (seed, mut rng) in rngs() {
+        let f = random_frame(&mut rng);
+        let bytes = f.to_bytes();
+        assert_eq!(bytes.len(), f.wire_len(), "seed {seed}");
+        let (g, used) = Frame::from_bytes(&bytes)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(used, bytes.len(), "seed {seed}");
+        assert_eq!(g.patient, f.patient, "seed {seed}");
+        assert_eq!(g.modality, f.modality, "seed {seed}");
+        // bit-exact, not approximate: the wire carries raw IEEE bits
+        assert_eq!(g.sim_time.to_bits(), f.sim_time.to_bits(), "seed {seed}");
+        assert_eq!(g.values.len(), f.values.len(), "seed {seed}");
+        for (a, b) in g.values.iter().zip(&f.values) {
+            assert_eq!(a.to_bits(), b.to_bits(), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_wire_stream_roundtrip() {
+    for (seed, mut rng) in rngs() {
+        let frames: Vec<Frame> = (0..rng.range(1, 8)).map(|_| random_frame(&mut rng)).collect();
+        let mut body = Vec::new();
+        for f in &frames {
+            f.write_bytes(&mut body);
+        }
+        let back = holmes::ingest::decode_stream(&body)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(back.len(), frames.len(), "seed {seed}");
+        for (a, b) in back.iter().zip(&frames) {
+            assert_eq!(a.patient, b.patient, "seed {seed}");
+            assert_eq!(a.values, b.values, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_wire_truncation_always_errors_never_panics() {
+    for (seed, mut rng) in rngs() {
+        let bytes = random_frame(&mut rng).to_bytes();
+        // cut ≥ 1: an empty body is legitimately zero frames for
+        // decode_stream, not a truncation
+        let cut = rng.range(1, bytes.len());
+        assert!(
+            Frame::from_bytes(&bytes[..cut]).is_err(),
+            "seed {seed}: truncation at {cut} must error"
+        );
+        assert!(holmes::ingest::decode_stream(&bytes[..cut]).is_err(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_wire_corruption_never_panics() {
+    for (seed, mut rng) in rngs() {
+        let mut bytes = random_frame(&mut rng).to_bytes();
+        // flip 1..4 random bytes anywhere in the buffer
+        for _ in 0..rng.range(1, 5) {
+            let at = rng.range(0, bytes.len());
+            bytes[at] ^= (rng.range(1, 256)) as u8;
+        }
+        // decoding must be total: Ok or Err, never a panic, and a
+        // successful decode must report in-bounds consumption
+        if let Ok((f, used)) = Frame::from_bytes(&bytes) {
+            assert!(used <= bytes.len(), "seed {seed}");
+            assert!(f.values.iter().all(|v| v.is_finite()), "seed {seed}");
+            assert!(f.sim_time.is_finite(), "seed {seed}");
+        }
+        let _ = holmes::ingest::decode_stream(&bytes);
+    }
+}
