@@ -1,23 +1,36 @@
 //! 64-bed CICU serving simulation — the paper's headline workload.
 //!
 //! Streams 3-lead 250 Hz ECG + 1 Hz vitals from 64 simulated post-Norwood
-//! patients through the full Fig.-4 pipeline (stateful aggregators →
-//! ensemble queue → stateless model actors on 2 device workers) and
-//! reports p50/p95/p99 end-to-end latency plus step-down-readiness
-//! ROC-AUC against the simulator's ground-truth labels.
+//! patients through the full Fig.-4 pipeline (sharded stateful
+//! aggregators → ensemble queue → stateless model actors on 2 device
+//! workers, collector-less direct completion) and reports p50/p95/p99
+//! end-to-end latency plus step-down-readiness ROC-AUC against the
+//! simulator's ground-truth labels.
+//!
+//! Without compiled artifacts on disk it falls back to a paper-shaped
+//! toy zoo on the deterministic sim backend — so the full serving path
+//! is exercisable anywhere (CI smoke runs use exactly this).
 //!
 //! ```bash
-//! cargo run --release --example bedside_sim [patients] [speedup]
+//! cargo run --release --example bedside_sim [patients] [speedup] [duration_s]
 //! ```
 
 use holmes::exp::bedside::{run_bedside, BedsideConfig};
-use holmes::zoo::Zoo;
+use holmes::zoo::{testkit, Zoo};
 
 fn main() -> holmes::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let patients: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
     let speedup: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8.0);
-    let zoo = Zoo::load("artifacts")?;
+    // enough simulated time for several windows per patient
+    let duration_s: f64 = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(16.0);
+    let zoo = match Zoo::load("artifacts") {
+        Ok(zoo) => zoo,
+        Err(_) => {
+            println!("no compiled artifacts found — using the toy zoo on the sim backend");
+            testkit::toy_zoo_with(9, 64, 21, 2500, &[1, 8])
+        }
+    };
     let report = run_bedside(
         &zoo,
         BedsideConfig {
@@ -25,10 +38,10 @@ fn main() -> holmes::Result<()> {
             gpus: 2,
             window_s: 30.0,
             speedup,
-            // enough simulated time for several windows per patient
-            duration_s: 16.0,
+            duration_s,
             http_addr: None,
             seed: 42,
+            shards: 0,
         },
     )?;
     // the paper's claim: sub-second p95 at 64 beds

@@ -14,17 +14,26 @@
 //!
 //! * `ingest/decode_frame`  — binary wire decode vs recursive-descent
 //!   JSON (`legacy_ingest/...`), one 3-sample ECG frame each.
+//! * `aggregate/shard-fanin` — sharded aggregation front-end (patients
+//!   partitioned over N workers on bounded channels) vs the single
+//!   `mpsc::Sender<Frame>` + one aggregation loop
+//!   (`legacy_aggregate/...`), same multi-producer frame trace.
 //! * `admission/insert_remove/8-threads` — lock-free pending slot
 //!   arena vs the mutex-striped table (`legacy_admission/...`) under
 //!   8-thread insert+score+remove contention.
+//! * `complete/direct-vs-collector` — batcher threads completing slots
+//!   directly through `Completer` (inline finish) vs funneling every
+//!   member report through one MPSC channel into a single collector
+//!   thread (`legacy_complete/...`).
 //! * `pack/batch8` — chunked copy into the persistent 64-byte-aligned
 //!   arena vs a fresh `vec![0.0; n]` per flush (`legacy_pack/...`).
 //!
 //! `cargo bench --bench serving [-- --quick]`
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use holmes::bench::{black_box, BenchResult, Bencher};
@@ -34,10 +43,14 @@ use holmes::ingest::synth::SynthConfig;
 use holmes::ingest::{Frame, Modality};
 use holmes::json::Value;
 use holmes::runtime::{AlignedBatch, Engine, SimBackend};
-use holmes::serving::aggregator::WindowAggregator;
+use holmes::serving::aggregator::{WindowAggregator, WindowData};
 use holmes::serving::batcher::BatchPolicy;
-use holmes::serving::pipeline::{PendingMeta, PendingSlots, Pipeline, PipelineConfig, Query};
+use holmes::serving::pipeline::{
+    Completer, PendingMeta, PendingSlots, Pipeline, PipelineConfig, Query,
+};
 use holmes::serving::profile::{profile_ensemble, ProfileEffort};
+use holmes::serving::shards::{ShardConfig, ShardRouter};
+use holmes::serving::Telemetry;
 use holmes::zoo::{testkit, Selector, Zoo};
 
 fn main() {
@@ -61,16 +74,20 @@ fn main() {
         patient: 0,
         modality: Modality::Ecg,
         sim_time: 0.0,
-        values: vec![0.1, 0.2, 0.3],
+        values: [0.1, 0.2, 0.3].into(),
     };
     b.bench("aggregator/push_ecg_frame", || black_box(agg.push(&frame).is_some()));
+
+    // ---- layer 0: aggregation fan-in — sharded front-end vs the
+    // single-channel single-loop plane, same multi-producer trace
+    bench_shard_fanin(&mut b);
 
     // ---- layer 1: ingest decode — binary wire vs JSON, one ECG frame
     let wire_frame = Frame {
         patient: 12,
         modality: Modality::Ecg,
         sim_time: 3.252,
-        values: vec![0.215, -0.083, 0.127],
+        values: [0.215, -0.083, 0.127].into(),
     };
     let wire_bytes = wire_frame.to_bytes();
     let json_text = wire_frame.to_json().to_string();
@@ -96,6 +113,10 @@ fn main() {
         admission_round_striped(&striped);
         black_box(striped.len())
     });
+
+    // ---- layer 2b: completion — direct inline finish on the scoring
+    // thread vs one collector thread draining an MPSC fan-in
+    bench_direct_vs_collector(&mut b);
 
     // ---- layer 3: batch packing — persistent aligned arena (chunked
     // copy) vs a fresh padded allocation per flush
@@ -254,6 +275,216 @@ fn admission_round_lockfree(slots: &PendingSlots) {
     });
 }
 
+/// Fan-in bench shape: 2 producer threads stream one 250-sample window
+/// per patient for 64 patients (16k frames/round). The sharded plane
+/// spreads aggregation over 2 workers on bounded channels; the legacy
+/// plane funnels every frame through ONE `mpsc::Sender` into ONE
+/// aggregation loop — the serial choke point this PR removes. Both
+/// routers persist across bench rounds (aggregators keep state, each
+/// round completes exactly one window per patient) and a round ends
+/// when the consumer side has emitted all 64 windows, so consumer lag
+/// is inside the measurement. The shape is kept at 2+2 threads (vs the
+/// admission bench's 8) so CI's ≥ 1.0× gate measures the fan-in, not
+/// oversubscription noise on a 4-core shared runner.
+const FANIN_PRODUCERS: usize = 2;
+const FANIN_PATIENTS: usize = 64;
+const FANIN_WINDOW: usize = 250;
+const FANIN_SHARDS: usize = 2;
+
+fn fanin_traces() -> Vec<Vec<Frame>> {
+    (0..FANIN_PATIENTS)
+        .map(|pid| {
+            (0..FANIN_WINDOW)
+                .map(|i| Frame {
+                    patient: pid,
+                    modality: Modality::Ecg,
+                    sim_time: i as f64 / 250.0,
+                    values: [0.21, -0.08, 0.12].into(),
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// One multi-producer round: producer p streams the full trace of every
+/// patient with `pid % FANIN_PRODUCERS == p` (frames are `Copy` — each
+/// send is a stack copy into the routing layer under test).
+fn fanin_round<S: Fn(Frame) + Sync>(traces: &[Vec<Frame>], send: S) {
+    std::thread::scope(|s| {
+        for p in 0..FANIN_PRODUCERS {
+            let send = &send;
+            s.spawn(move || {
+                for trace in traces.iter().skip(p).step_by(FANIN_PRODUCERS) {
+                    for f in trace {
+                        send(*f);
+                    }
+                }
+            });
+        }
+    });
+}
+
+fn wait_for(counter: &AtomicU64, target: u64) {
+    while counter.load(Ordering::Acquire) < target {
+        std::thread::yield_now();
+    }
+}
+
+fn bench_shard_fanin(b: &mut Bencher) {
+    let traces = fanin_traces();
+
+    // sharded plane: FANIN_SHARDS aggregation workers, bounded queues;
+    // producer p owns patients ≡ p (mod FANIN_PRODUCERS), which with
+    // FANIN_SHARDS == FANIN_PRODUCERS pairs each producer with one
+    // shard — the per-patient affinity a real bedside fleet has
+    let windows_sharded = Arc::new(AtomicU64::new(0));
+    let (shard_router, shard_tx) = ShardRouter::spawn(
+        ShardConfig { shards: FANIN_SHARDS, ..ShardConfig::default() },
+        FANIN_WINDOW,
+        Arc::new(Telemetry::default()),
+        |_shard| {
+            let done = Arc::clone(&windows_sharded);
+            move |w: WindowData| {
+                black_box(w.window_id);
+                done.fetch_add(1, Ordering::Release);
+            }
+        },
+    )
+    .expect("shard router");
+    let mut expected = 0u64;
+    b.bench("aggregate/shard-fanin", || {
+        fanin_round(&traces, |f| {
+            shard_tx.send(f).expect("shard plane alive");
+        });
+        expected += FANIN_PATIENTS as u64;
+        wait_for(&windows_sharded, expected);
+        black_box(expected)
+    });
+    drop(shard_tx);
+    shard_router.join().expect("shard join");
+
+    // legacy plane: every producer contends on one channel, one thread
+    // aggregates every frame
+    let windows_legacy = Arc::new(AtomicU64::new(0));
+    let (ltx, lrx) = mpsc::channel::<Frame>();
+    let legacy_loop = {
+        let done = Arc::clone(&windows_legacy);
+        std::thread::spawn(move || {
+            let mut aggs: HashMap<usize, WindowAggregator> = HashMap::new();
+            for frame in lrx {
+                let agg = aggs
+                    .entry(frame.patient)
+                    .or_insert_with(|| WindowAggregator::new(frame.patient, FANIN_WINDOW));
+                if let Some(w) = agg.push(&frame) {
+                    black_box(w.window_id);
+                    done.fetch_add(1, Ordering::Release);
+                }
+            }
+        })
+    };
+    let mut expected = 0u64;
+    b.bench("legacy_aggregate/shard-fanin", || {
+        fanin_round(&traces, |f| {
+            ltx.send(f).expect("legacy aggregation loop alive");
+        });
+        expected += FANIN_PATIENTS as u64;
+        wait_for(&windows_legacy, expected);
+        black_box(expected)
+    });
+    drop(ltx);
+    legacy_loop.join().expect("legacy aggregation join");
+}
+
+/// Completion bench shape: 4 threads × 1024 queries × 3 members. The
+/// direct plane scores through per-member `Completer`s — whichever
+/// thread lands the last member runs the finish inline, fully parallel.
+/// The legacy plane sends every member report through one MPSC channel
+/// to a single collector thread that does the scoring + finishing — the
+/// fan-in this PR deletes. A round ends when every query of the round
+/// has completed.
+const CMP_THREADS: usize = 4;
+const CMP_QUERIES_PER_THREAD: usize = 1024;
+const CMP_MEMBERS: usize = 3;
+
+fn bench_direct_vs_collector(b: &mut Bencher) {
+    // direct: batcher-side completion handles, one per member
+    let pending = Arc::new(PendingSlots::new(CMP_MEMBERS));
+    let telemetry = Arc::new(Telemetry::default());
+    let completers: Vec<Completer> = (0..CMP_MEMBERS)
+        .map(|pos| Completer::new(Arc::clone(&pending), Arc::clone(&telemetry), pos))
+        .collect();
+    b.bench("complete/direct-vs-collector", || {
+        std::thread::scope(|s| {
+            for t in 0..CMP_THREADS {
+                let pending = &pending;
+                let completers = &completers;
+                s.spawn(move || {
+                    for q in 0..CMP_QUERIES_PER_THREAD {
+                        let id = (t * CMP_QUERIES_PER_THREAD + q) as u64;
+                        pending.insert(id, adm_meta());
+                        for c in completers {
+                            c.score(id, 0.5, Duration::ZERO, Duration::ZERO);
+                        }
+                    }
+                });
+            }
+        });
+        black_box(pending.len())
+    });
+
+    // legacy: identical insert+score work, but every report crosses one
+    // channel into one collector thread (replica of the pre-refactor
+    // collector_loop: telemetry + score + finish, serialized)
+    let lg_pending = Arc::new(PendingSlots::new(CMP_MEMBERS));
+    let lg_tel = Arc::new(Telemetry::default());
+    let lg_done = Arc::new(AtomicU64::new(0));
+    let (report_tx, report_rx) = mpsc::channel::<(u64, usize, f32)>();
+    let collector = {
+        let pending = Arc::clone(&lg_pending);
+        let tel = Arc::clone(&lg_tel);
+        let done = Arc::clone(&lg_done);
+        std::thread::spawn(move || {
+            for (id, pos, score) in report_rx {
+                tel.exec.record(Duration::ZERO);
+                tel.model_jobs.fetch_add(1, Ordering::Relaxed);
+                if let holmes::serving::ScoreOutcome::Completed(c) =
+                    pending.score(id, pos, score, Duration::ZERO)
+                {
+                    // finish() replica: bagging mean + telemetry
+                    tel.e2e.record(c.meta.emitted.elapsed());
+                    tel.queueing.record(c.min_queue_wait);
+                    tel.queries.fetch_add(1, Ordering::Relaxed);
+                    black_box(c.score_sum / CMP_MEMBERS as f64);
+                    done.fetch_add(1, Ordering::Release);
+                }
+            }
+        })
+    };
+    let mut expected = 0u64;
+    b.bench("legacy_complete/direct-vs-collector", || {
+        std::thread::scope(|s| {
+            for t in 0..CMP_THREADS {
+                let pending = &lg_pending;
+                let report_tx = report_tx.clone();
+                s.spawn(move || {
+                    for q in 0..CMP_QUERIES_PER_THREAD {
+                        let id = (t * CMP_QUERIES_PER_THREAD + q) as u64;
+                        pending.insert(id, adm_meta());
+                        for pos in 0..CMP_MEMBERS {
+                            report_tx.send((id, pos, 0.5)).expect("collector alive");
+                        }
+                    }
+                });
+            }
+        });
+        expected += (CMP_THREADS * CMP_QUERIES_PER_THREAD) as u64;
+        wait_for(&lg_done, expected);
+        black_box(lg_pending.len())
+    });
+    drop(report_tx);
+    collector.join().expect("collector join");
+}
+
 /// The same round on the in-bench mutex-striped replica.
 fn admission_round_striped(table: &legacy::StripedPending) {
     std::thread::scope(|s| {
@@ -302,8 +533,9 @@ fn write_bench_json(results: &[BenchResult], quick: bool, backend: &str) {
             "note",
             Value::Str(
                 "medians of the lock-free zero-copy data plane vs the in-bench legacy \
-                 replica, per admission layer (ingest decode, pending-table admission, \
-                 batch packing) and end to end; regenerate with \
+                 replica, per layer (sharded aggregation fan-in, ingest decode, \
+                 pending-table admission, direct vs collector completion, batch \
+                 packing) and end to end; regenerate with \
                  `cargo bench --bench serving -- --quick`"
                     .into(),
             ),

@@ -1,8 +1,14 @@
 //! End-to-end bedside serving simulation: N patients stream 250 Hz ECG
-//! (+1 Hz vitals) through per-patient stateful aggregators into the
-//! ensemble pipeline — the full Fig. 4 path, used by `holmes serve` and
-//! the `bedside_sim` example, and the source of the headline "64-bed,
-//! sub-second p95" number.
+//! (+1 Hz vitals) through the **sharded** per-patient aggregation plane
+//! into the ensemble pipeline — the full Fig. 4 path, used by
+//! `holmes serve` and the `bedside_sim` example, and the source of the
+//! headline "64-bed, sub-second p95" number.
+//!
+//! Frames route through a [`ShardSender`] (`patient % shards`, bounded
+//! per-shard queues) onto N aggregation workers, each owning its
+//! patients' [`WindowAggregator`]s — no single thread touches every
+//! frame. Completed windows are submitted straight into the pipeline
+//! from the shard threads.
 //!
 //! With `http_addr` set the patient generators become real network
 //! clients: each opens one keep-alive connection and streams its
@@ -18,8 +24,8 @@ use crate::ingest::synth::{PatientSim, SynthConfig};
 use crate::ingest::{Frame, Modality, VirtualClock};
 use crate::metrics::roc_auc;
 use crate::runtime::Engine;
-use crate::serving::aggregator::WindowAggregator;
 use crate::serving::pipeline::{Pipeline, PipelineConfig, Query};
+use crate::serving::shards::{ShardConfig, ShardRouter};
 use crate::serving::Telemetry;
 use crate::zoo::Zoo;
 use crate::Result;
@@ -33,6 +39,9 @@ pub struct BedsideConfig {
     pub duration_s: f64,
     pub http_addr: Option<String>,
     pub seed: u64,
+    /// Aggregation shards; 0 = core-count heuristic
+    /// ([`crate::serving::default_shards`]).
+    pub shards: usize,
 }
 
 impl Default for BedsideConfig {
@@ -45,6 +54,7 @@ impl Default for BedsideConfig {
             duration_s: 120.0,
             http_addr: None,
             seed: 42,
+            shards: 0,
         }
     }
 }
@@ -53,6 +63,11 @@ impl Default for BedsideConfig {
 pub struct BedsideReport {
     pub predictions: usize,
     pub frames: u64,
+    /// Frames the aggregation plane discarded (malformed / mismatched),
+    /// summed over shards — nonzero means silent data loss upstream.
+    pub frames_dropped: u64,
+    /// Per-shard breakdown of `frames_dropped`.
+    pub dropped_per_shard: Vec<u64>,
     pub e2e_p50: f64,
     pub e2e_p95: f64,
     pub e2e_p99: f64,
@@ -63,9 +78,11 @@ pub struct BedsideReport {
 /// Run the simulation to completion and report latency + accuracy.
 pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
     let ensemble = super::fig10_scalability::holmes_servable_ensemble(zoo, 0.2);
+    let n_shards =
+        if cfg.shards == 0 { crate::serving::default_shards() } else { cfg.shards };
     println!(
-        "bedside sim: {} patients, {} gpus, ΔT={}s, speedup {}×, {}s sim",
-        cfg.patients, cfg.gpus, cfg.window_s, cfg.speedup, cfg.duration_s
+        "bedside sim: {} patients, {} gpus, {} aggregation shards, ΔT={}s, speedup {}×, {}s sim",
+        cfg.patients, cfg.gpus, n_shards, cfg.window_s, cfg.speedup, cfg.duration_s
     );
     println!(
         "ensemble ({} models): {:?}",
@@ -86,10 +103,37 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
 
     let pipeline = Pipeline::spawn(zoo, &engine, PipelineConfig::new(ensemble.clone()))?;
     let telemetry = Arc::clone(pipeline.telemetry());
-    let (frame_tx, frame_rx) = mpsc::channel::<Frame>();
+
+    // sharded aggregation front-end: each shard owns its patients'
+    // aggregators and submits completed windows from its own thread;
+    // replies are collected by small detached waiter threads so a shard
+    // never blocks on inference
+    let (pred_tx, pred_rx) = mpsc::channel::<(usize, f64)>();
+    let (shard_router, frame_tx) = ShardRouter::spawn(
+        ShardConfig { shards: n_shards, ..ShardConfig::default() },
+        clip_len,
+        Arc::clone(&telemetry),
+        |_shard| {
+            let pipeline = pipeline.clone();
+            let pred_tx = pred_tx.clone();
+            move |window| {
+                let q = Query::from_window(window);
+                let patient = q.patient;
+                if let Ok(rx) = pipeline.submit(q) {
+                    let pred_tx = pred_tx.clone();
+                    std::thread::spawn(move || {
+                        if let Ok(p) = rx.recv() {
+                            let _ = pred_tx.send((patient, p.score));
+                        }
+                    });
+                }
+            }
+        },
+    )?;
+    drop(pred_tx); // live clones: shard sinks + in-flight waiters
 
     // optional HTTP ingest: generators stream binary wire frames over
-    // keep-alive connections instead of the in-process channel
+    // keep-alive connections instead of the in-process shard sender
     let mut http = None;
     if let Some(addr) = &cfg.http_addr {
         let server = crate::http::serve(addr, frame_tx.clone(), Arc::clone(&telemetry))?;
@@ -136,11 +180,13 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
                     patient: sim.id,
                     modality: Modality::Vitals,
                     sim_time: sim_t,
-                    values: v.to_vec(),
+                    values: v.into(),
                 });
                 let delivered = match client.as_mut() {
                     Some(c) => c.send_frames(&batch).is_ok(),
-                    None => batch.drain(..).all(|f| tx.send(f).is_ok()),
+                    // frames are Copy: routing to a shard is a stack
+                    // copy, never an allocation
+                    None => batch.iter().all(|f| tx.send(*f).is_ok()),
                 };
                 if !delivered {
                     return;
@@ -150,40 +196,6 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
         }));
     }
     drop(frame_tx);
-
-    // aggregator router thread: frames → per-patient windows → queries
-    let (pred_tx, pred_rx) = mpsc::channel::<(usize, f64)>();
-    let router_pipeline = pipeline.clone();
-    let router_tel = Arc::clone(&telemetry);
-    let router = std::thread::spawn(move || {
-        let mut aggs: HashMap<usize, WindowAggregator> = HashMap::new();
-        let mut waiters = Vec::new();
-        for frame in frame_rx {
-            let t0 = Instant::now();
-            router_tel.frames.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            let agg = aggs
-                .entry(frame.patient)
-                .or_insert_with(|| WindowAggregator::new(frame.patient, clip_len));
-            if let Some(window) = agg.push(&frame) {
-                let q = Query::from_window(window);
-                let patient = q.patient;
-                if let Ok(rx) = router_pipeline.submit(q) {
-                    let pred_tx = pred_tx.clone();
-                    // collect replies on a small helper thread so the
-                    // router never blocks on inference
-                    waiters.push(std::thread::spawn(move || {
-                        if let Ok(p) = rx.recv() {
-                            let _ = pred_tx.send((patient, p.score));
-                        }
-                    }));
-                }
-            }
-            router_tel.ingest.record(t0.elapsed());
-        }
-        for w in waiters {
-            let _ = w.join();
-        }
-    });
 
     // prediction sink on this thread
     let sink = std::thread::spawn(move || {
@@ -197,14 +209,16 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
     for h in gen_handles {
         let _ = h.join();
     }
-    // stop the HTTP server BEFORE joining the router: its accept thread
-    // holds a frame_tx clone, so the aggregator loop (and thus the
-    // router join below) would otherwise never see the channel close
+    // stop the HTTP server BEFORE joining the shard plane: its accept
+    // thread holds a ShardSender clone, so the shard workers (and thus
+    // the join below) would otherwise never see their channels close
     drop(http);
-    router.join().map_err(|_| crate::Error::serving("router panicked"))?;
+    let dropped_per_shard = shard_router.join()?;
     drop(pipeline);
     let pred_rows = sink.join().map_err(|_| crate::Error::serving("sink panicked"))?;
     let frames = telemetry.frames.load(std::sync::atomic::Ordering::Relaxed);
+    let frames_dropped =
+        telemetry.frames_dropped.load(std::sync::atomic::Ordering::Relaxed);
 
     let wall_s = t_start.elapsed().as_secs_f64();
     // accuracy against ground-truth patient labels
@@ -218,6 +232,8 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
     let report = BedsideReport {
         predictions: pred_rows.len(),
         frames,
+        frames_dropped,
+        dropped_per_shard,
         e2e_p50: telemetry.e2e.percentile(50.0),
         e2e_p95: telemetry.e2e.percentile(95.0),
         e2e_p99: telemetry.e2e.percentile(99.0),
@@ -231,6 +247,7 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
 fn print_report(r: &BedsideReport, telemetry: &Telemetry) {
     println!("\n── bedside report ──────────────────────────");
     println!("frames ingested      {:>12}", r.frames);
+    println!("frames dropped       {:>12}  (per shard: {:?})", r.frames_dropped, r.dropped_per_shard);
     println!("ensemble predictions {:>12}", r.predictions);
     println!("e2e latency p50      {:>11.4}s", r.e2e_p50);
     println!("e2e latency p95      {:>11.4}s", r.e2e_p95);

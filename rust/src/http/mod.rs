@@ -17,6 +17,16 @@
 //! keep-alive) closes after the response. Request bodies are bounded
 //! by [`MAX_BODY_BYTES`]; oversized requests get `413` and the
 //! connection is closed (the unread body would desynchronise framing).
+//! The thread-per-connection spawn is gated by an atomic connection
+//! count ([`HttpConfig::max_connections`]): past the limit the accept
+//! loop answers `503 Service Unavailable` + `Connection: close`
+//! without spawning anything, so a connection flood cannot exhaust the
+//! serving box.
+//!
+//! Admitted frames are routed into the sharded aggregation front-end
+//! through a [`ShardSender`] (`patient % shards`, bounded per-shard
+//! queues): many connection threads ingest concurrently without any
+//! single channel seeing every frame.
 //!
 //! ## Binary wire format (`/ingest.bin`)
 //!
@@ -42,12 +52,12 @@
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use crate::ingest::{wire, Frame};
 use crate::json::Value;
-use crate::serving::Telemetry;
+use crate::serving::{ShardSender, Telemetry};
 use crate::{Error, Result};
 
 /// Largest accepted request body; larger requests are refused with
@@ -55,6 +65,22 @@ use crate::{Error, Result};
 /// (64 × 251 frames ≈ 400 KiB) fits with an order of magnitude to
 /// spare.
 pub const MAX_BODY_BYTES: usize = 4 << 20;
+
+/// Server tunables.
+#[derive(Debug, Clone, Copy)]
+pub struct HttpConfig {
+    /// Concurrent-connection cap: connection `max_connections + 1`
+    /// gets `503 Service Unavailable` + `Connection: close` instead of
+    /// a handler thread. Plenty for 100 keep-alive bedside streams,
+    /// small enough that a flood cannot exhaust the 64-bed box.
+    pub max_connections: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig { max_connections: 256 }
+    }
+}
 
 /// Running server handle; the listener thread stops accepting when this
 /// is dropped (connections in flight finish their current request).
@@ -71,17 +97,35 @@ impl Drop for HttpServer {
     }
 }
 
-/// Start the ingest server; frames are forwarded to `frame_tx`.
-/// Bind with port 0 to auto-pick.
-pub fn serve(
+/// Decrements the live-connection gate when a handler thread exits,
+/// however it exits.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Start the ingest server with default [`HttpConfig`]; admitted frames
+/// are routed into the sharded aggregation plane through `sink`. Bind
+/// with port 0 to auto-pick.
+pub fn serve(addr: &str, sink: ShardSender, telemetry: Arc<Telemetry>) -> Result<HttpServer> {
+    serve_with(addr, sink, telemetry, HttpConfig::default())
+}
+
+/// [`serve`] with explicit tunables.
+pub fn serve_with(
     addr: &str,
-    frame_tx: mpsc::Sender<Frame>,
+    sink: ShardSender,
     telemetry: Arc<Telemetry>,
+    cfg: HttpConfig,
 ) -> Result<HttpServer> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
     let stop2 = Arc::clone(&stop);
+    let active = Arc::new(AtomicUsize::new(0));
     std::thread::Builder::new()
         .name("http-accept".into())
         .spawn(move || {
@@ -89,10 +133,49 @@ pub fn serve(
                 if stop2.load(Ordering::SeqCst) {
                     break;
                 }
-                let Ok(stream) = stream else { continue };
-                let tx = frame_tx.clone();
+                let Ok(mut stream) = stream else { continue };
+                // connection gate: refuse before spawning. The accept
+                // loop is the only incrementer, so add-then-check is
+                // race-free; handler threads decrement via ConnGuard.
+                if active.fetch_add(1, Ordering::Relaxed) >= cfg.max_connections {
+                    active.fetch_sub(1, Ordering::Relaxed);
+                    // best-effort refusal: bound the write so a
+                    // non-reading client cannot stall the accept loop
+                    let _ = stream
+                        .set_write_timeout(Some(std::time::Duration::from_millis(250)));
+                    if write_response(
+                        &mut stream,
+                        "503 Service Unavailable",
+                        "{\"error\":\"connection limit reached\"}",
+                        false,
+                    )
+                    .is_ok()
+                    {
+                        // a flooding client usually wrote its request
+                        // right after connect; closing with those bytes
+                        // unread makes the kernel RST the connection,
+                        // which can discard the queued 503 before the
+                        // client reads it (same failure mode the 413
+                        // path drains for). Drain what is already
+                        // buffered — non-blocking, so the accept loop
+                        // never waits on a silent peer.
+                        let _ = stream.set_nonblocking(true);
+                        let mut sink = [0u8; 4096];
+                        let mut drained = 0usize;
+                        while drained < 64 * 1024 {
+                            match stream.read(&mut sink) {
+                                Ok(0) | Err(_) => break,
+                                Ok(n) => drained += n,
+                            }
+                        }
+                    }
+                    continue;
+                }
+                let guard = ConnGuard(Arc::clone(&active));
+                let tx = sink.clone();
                 let tel = Arc::clone(&telemetry);
                 std::thread::spawn(move || {
+                    let _guard = guard;
                     let _ = handle_connection(stream, tx, tel);
                 });
             }
@@ -103,7 +186,7 @@ pub fn serve(
 
 fn handle_connection(
     mut stream: TcpStream,
-    frame_tx: mpsc::Sender<Frame>,
+    frame_tx: ShardSender,
     telemetry: Arc<Telemetry>,
 ) -> Result<()> {
     let mut buf: Vec<u8> = Vec::with_capacity(4096);
@@ -229,7 +312,7 @@ fn write_response(
 fn route(
     request_line: &str,
     body: &[u8],
-    frame_tx: &mpsc::Sender<Frame>,
+    frame_tx: &ShardSender,
     telemetry: &Telemetry,
 ) -> (&'static str, String) {
     let mut parts = request_line.split_whitespace();
@@ -367,11 +450,13 @@ impl IngestClient {
 mod tests {
     use super::*;
     use crate::ingest::Modality;
+    use std::sync::mpsc;
 
+    /// Single-shard sink: every admitted frame lands on one receiver.
     fn test_server() -> (HttpServer, mpsc::Receiver<Frame>) {
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = mpsc::sync_channel(1024);
         let tel = Arc::new(Telemetry::default());
-        (serve("127.0.0.1:0", tx, tel).unwrap(), rx)
+        (serve("127.0.0.1:0", ShardSender::from_senders(vec![tx]), tel).unwrap(), rx)
     }
 
     #[test]
@@ -381,7 +466,7 @@ mod tests {
             patient: 3,
             modality: Modality::Ecg,
             sim_time: 1.5,
-            values: vec![0.1, 0.2, 0.3],
+            values: [0.1, 0.2, 0.3].into(),
         };
         let body = frame.to_json().to_string();
         let mut s = TcpStream::connect(server.addr).unwrap();
@@ -410,7 +495,7 @@ mod tests {
                     patient: i,
                     modality: Modality::Ecg,
                     sim_time: round as f64 + i as f64 * 0.004,
-                    values: vec![0.5, -0.25, 1.0],
+                    values: [0.5, -0.25, 1.0].into(),
                 })
                 .collect();
             client.send_frames(&frames).unwrap();
@@ -429,7 +514,7 @@ mod tests {
             patient: 1,
             modality: Modality::Vitals,
             sim_time: 2.0,
-            values: vec![f32::NAN],
+            values: crate::ingest::FrameValues::from_slice(&[f32::NAN]).unwrap(),
         };
         let mut client = IngestClient::connect(server.addr).unwrap();
         // NaN payload → 400, nothing admitted
@@ -513,6 +598,57 @@ mod tests {
             }
         }
         String::from_utf8_lossy(&buf).to_string()
+    }
+
+    #[test]
+    fn connection_flood_is_rejected_with_503_and_recovers() {
+        let (tx, _rx) = mpsc::sync_channel(16);
+        let tel = Arc::new(Telemetry::default());
+        let server = serve_with(
+            "127.0.0.1:0",
+            ShardSender::from_senders(vec![tx]),
+            tel,
+            HttpConfig { max_connections: 2 },
+        )
+        .unwrap();
+
+        // two keep-alive connections occupy the whole budget; a request
+        // each proves they were accepted (not just queued in the kernel)
+        let mut held = Vec::new();
+        for _ in 0..2 {
+            let mut s = TcpStream::connect(server.addr).unwrap();
+            s.write_all(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+            let mut resp = [0u8; 512];
+            let n = s.read(&mut resp).unwrap();
+            assert!(String::from_utf8_lossy(&resp[..n]).starts_with("HTTP/1.1 200"));
+            held.push(s);
+        }
+
+        // the third connection is refused at the accept gate
+        let mut s3 = TcpStream::connect(server.addr).unwrap();
+        let text = read_full_response(&mut s3);
+        assert!(text.starts_with("HTTP/1.1 503"), "{text}");
+        assert!(text.contains("Connection: close"), "{text}");
+        assert!(text.contains("connection limit"), "{text}");
+
+        // releasing a slot lets new connections in again (the handler
+        // notices the close asynchronously, so poll briefly)
+        drop(held.pop());
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            let mut s = TcpStream::connect(server.addr).unwrap();
+            s.write_all(b"GET /healthz HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n")
+                .unwrap();
+            let text = read_full_response(&mut s);
+            if text.starts_with("HTTP/1.1 200") {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "freed connection slot never became available: {text}"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
     }
 
     #[test]

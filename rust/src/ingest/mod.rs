@@ -15,15 +15,140 @@ use std::str::FromStr;
 use crate::json::Value;
 use crate::{Error, Result};
 
-/// One sample frame from a bedside monitor.
-#[derive(Debug, Clone)]
+/// Widest per-frame payload across all modalities: ECG carries 3 lead
+/// samples, vitals 7 values, labs 8 — so 8 slots cover every frame the
+/// system admits. The cap is what makes [`FrameValues`] (and therefore
+/// [`Frame`]) a fixed-size inline value with **zero heap traffic**: at
+/// 100 beds × 250 Hz the ingest edge moves ~25k frames/s, and a
+/// `Vec<f32>` payload used to cost one allocation per frame on wire
+/// decode, JSON decode, synth generation, and every channel hop.
+pub const MAX_FRAME_VALUES: usize = 8;
+
+/// Inline fixed-capacity payload buffer of a [`Frame`]: up to
+/// [`MAX_FRAME_VALUES`] f32 values stored by value, no heap. Derefs to
+/// `&[f32]` of the live length, so call sites read it like a slice.
+#[derive(Clone, Copy, Default)]
+pub struct FrameValues {
+    len: u8,
+    buf: [f32; MAX_FRAME_VALUES],
+}
+
+impl FrameValues {
+    /// Empty payload (push values in with [`FrameValues::push`]).
+    pub const fn new() -> Self {
+        FrameValues { len: 0, buf: [0.0; MAX_FRAME_VALUES] }
+    }
+
+    /// Copy a slice in; errors if it exceeds [`MAX_FRAME_VALUES`].
+    pub fn from_slice(values: &[f32]) -> Result<Self> {
+        if values.len() > MAX_FRAME_VALUES {
+            return Err(Error::json(format!(
+                "frame carries {} values, max is {MAX_FRAME_VALUES}",
+                values.len()
+            )));
+        }
+        let mut out = FrameValues::new();
+        out.buf[..values.len()].copy_from_slice(values);
+        out.len = values.len() as u8;
+        Ok(out)
+    }
+
+    /// Append one value; `false` (payload unchanged) when full.
+    #[must_use]
+    pub fn push(&mut self, v: f32) -> bool {
+        if (self.len as usize) < MAX_FRAME_VALUES {
+            self.buf[self.len as usize] = v;
+            self.len += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.buf[..self.len as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Copy out to a `Vec` (window emission, CSVs — cold paths only).
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.as_slice().to_vec()
+    }
+}
+
+impl std::ops::Deref for FrameValues {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl std::fmt::Debug for FrameValues {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
+
+impl<'a> IntoIterator for &'a FrameValues {
+    type Item = &'a f32;
+    type IntoIter = std::slice::Iter<'a, f32>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+/// Compares only the live prefix — slots past `len` are dont-care.
+impl PartialEq for FrameValues {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<[f32]> for FrameValues {
+    fn eq(&self, other: &[f32]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<Vec<f32>> for FrameValues {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+/// Infallible payloads from the fixed-arity generators (ECG [f32; 3],
+/// vitals [f32; 7], labs [f32; 8]).
+impl<const N: usize> From<[f32; N]> for FrameValues {
+    fn from(values: [f32; N]) -> Self {
+        const { assert!(N <= MAX_FRAME_VALUES, "payload wider than MAX_FRAME_VALUES") };
+        let mut out = FrameValues::new();
+        out.buf[..N].copy_from_slice(&values);
+        out.len = N as u8;
+        out
+    }
+}
+
+/// One sample frame from a bedside monitor. `Copy`: the payload is an
+/// inline fixed-capacity buffer ([`FrameValues`]), so moving a frame
+/// through channels, shard queues, and decode loops is a ~64-byte
+/// stack copy — never an allocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Frame {
     pub patient: usize,
     pub modality: Modality,
     /// Simulation timestamp, seconds since stream start.
     pub sim_time: f64,
     /// Sample payload: one ECG sample per lead, or the vitals vector.
-    pub values: Vec<f32>,
+    pub values: FrameValues,
 }
 
 impl Frame {
@@ -44,7 +169,9 @@ impl Frame {
     /// must be finite and every payload value must be a finite f64 that
     /// stays finite as f32 — a silent `f64 → f32` cast used to admit
     /// NaN and turn out-of-range magnitudes into ±inf, poisoning every
-    /// downstream score that touched the window.
+    /// downstream score that touched the window. Values land straight
+    /// in the frame's inline buffer (no intermediate `Vec`), and more
+    /// than [`MAX_FRAME_VALUES`] of them is a malformed frame.
     pub fn from_json(v: &Value) -> Result<Frame> {
         let sim_time = v
             .req("sim_time")?
@@ -53,16 +180,24 @@ impl Frame {
         if !sim_time.is_finite() {
             return Err(Error::json("sim_time not finite"));
         }
-        let raw = v.req("values")?.as_f64_vec()?;
-        let mut values = Vec::with_capacity(raw.len());
-        for (i, x) in raw.into_iter().enumerate() {
+        let raw = v
+            .req("values")?
+            .as_arr()
+            .ok_or_else(|| Error::json("values not an array"))?;
+        let mut values = FrameValues::new();
+        for (i, item) in raw.iter().enumerate() {
+            let x = item.as_f64().ok_or_else(|| Error::json("expected number"))?;
             let y = x as f32;
             if !y.is_finite() {
                 return Err(Error::json(format!(
                     "values[{i}] = {x} is not representable as a finite f32"
                 )));
             }
-            values.push(y);
+            if !values.push(y) {
+                return Err(Error::json(format!(
+                    "frame carries more than {MAX_FRAME_VALUES} values"
+                )));
+            }
         }
         Ok(Frame {
             patient: v
@@ -139,13 +274,53 @@ mod tests {
             patient: 7,
             modality: Modality::Vitals,
             sim_time: 12.5,
-            values: vec![1.0, 2.5, -0.25],
+            values: [1.0, 2.5, -0.25].into(),
         };
         let g = Frame::from_json(&Value::parse(&f.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(g.patient, 7);
         assert_eq!(g.modality, Modality::Vitals);
         assert_eq!(g.sim_time, 12.5);
         assert_eq!(g.values, vec![1.0, 2.5, -0.25]);
+    }
+
+    #[test]
+    fn frame_values_inline_buffer_semantics() {
+        let mut v = FrameValues::new();
+        assert!(v.is_empty());
+        for i in 0..MAX_FRAME_VALUES {
+            assert!(v.push(i as f32), "push {i} fits");
+        }
+        assert!(!v.push(99.0), "push past capacity is refused");
+        assert_eq!(v.len(), MAX_FRAME_VALUES);
+        assert_eq!(v[3], 3.0, "deref indexes the live prefix");
+        // equality ignores dead slots past len
+        let a = FrameValues::from_slice(&[1.0, 2.0]).unwrap();
+        let mut b = FrameValues::from_slice(&[1.0, 2.0, 7.0]).unwrap();
+        assert_ne!(a, b);
+        let c = FrameValues::from_slice(&[1.0, 2.0]).unwrap();
+        assert_eq!(a, c);
+        assert!(FrameValues::from_slice(&[0.0; MAX_FRAME_VALUES + 1]).is_err());
+        // a frame is Copy: mutating the copy leaves the original alone
+        let copy = b;
+        assert!(b.push(8.0));
+        assert_eq!(copy.len(), 3);
+    }
+
+    #[test]
+    fn from_json_rejects_oversized_payload() {
+        let wide: Vec<String> = (0..MAX_FRAME_VALUES + 1).map(|i| format!("{i}.0")).collect();
+        let body = format!(
+            r#"{{"patient":1,"modality":"labs","sim_time":0.5,"values":[{}]}}"#,
+            wide.join(",")
+        );
+        assert!(Frame::from_json(&Value::parse(&body).unwrap()).is_err());
+        // exactly MAX_FRAME_VALUES (a labs frame) is fine
+        let body = format!(
+            r#"{{"patient":1,"modality":"labs","sim_time":0.5,"values":[{}]}}"#,
+            wide[..MAX_FRAME_VALUES].join(",")
+        );
+        let f = Frame::from_json(&Value::parse(&body).unwrap()).unwrap();
+        assert_eq!(f.values.len(), MAX_FRAME_VALUES);
     }
 
     #[test]

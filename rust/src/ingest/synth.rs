@@ -189,6 +189,8 @@ impl PatientSim {
     }
 
     /// Produce a batch of ECG frames covering `n` samples from `t0_sim`.
+    /// Each frame's payload is the inline fixed-capacity buffer — the
+    /// generator allocates nothing per frame.
     pub fn ecg_frames(&mut self, t0_sim: f64, n: usize) -> Vec<Frame> {
         (0..n)
             .map(|i| {
@@ -197,7 +199,7 @@ impl PatientSim {
                     patient: self.id,
                     modality: Modality::Ecg,
                     sim_time: t0_sim + i as f64 / self.cfg.fs,
-                    values: v.to_vec(),
+                    values: v.into(),
                 }
             })
             .collect()

@@ -4,8 +4,9 @@
 //! At 100 beds × 250 Hz the ingest edge sees ~25k frames/s; parsing
 //! each frame through the recursive-descent JSON parser costs one
 //! `Value` tree plus several `Vec` allocations per sample. The wire
-//! format decodes with zero intermediate allocation (one `Vec<f32>` for
-//! the payload, which the [`Frame`] needs anyway).
+//! format decodes with **zero allocation**: the payload lands directly
+//! in the frame's inline fixed-capacity buffer
+//! ([`FrameValues`](super::FrameValues)).
 //!
 //! ## Frame layout (all integers/floats little-endian)
 //!
@@ -17,17 +18,16 @@
 //!  6       2     reserved  = 0
 //!  8       8     patient   (u64)
 //!  16      8     sim_time  (f64, finite)
-//!  24      4     n_values  (u32, ≤ MAX_WIRE_VALUES)
+//!  24      4     n_values  (u32, ≤ MAX_WIRE_VALUES = 8)
 //!  28      4·n   values    (f32 each, finite — NaN/±inf rejected)
 //! ```
 //!
 //! A request body may carry any number of frames back to back
 //! ([`decode_stream`]); each frame is self-delimiting via `n_values`.
 //! Decoding is total: truncated or corrupt buffers return
-//! [`Error::Wire`], never panic, and never allocate more than
-//! `n_values` admits after the length check.
+//! [`Error::Wire`], never panic, and never allocate.
 
-use super::{Frame, Modality};
+use super::{Frame, FrameValues, Modality, MAX_FRAME_VALUES};
 use crate::{Error, Result};
 
 /// First four body bytes of every wire frame.
@@ -39,10 +39,12 @@ pub const WIRE_VERSION: u8 = 1;
 /// Fixed header size preceding the f32 payload.
 pub const WIRE_HEADER_LEN: usize = 28;
 
-/// Upper bound on `n_values` — caps the decode-side allocation so a
-/// hostile length prefix cannot balloon memory (a million samples is
-/// orders of magnitude above any real frame).
-pub const MAX_WIRE_VALUES: usize = 1 << 20;
+/// Upper bound on `n_values` — the widest real payload is the 8-value
+/// labs vector ([`MAX_FRAME_VALUES`]), and the decode target is an
+/// inline buffer of exactly that capacity, so a hostile length prefix
+/// cannot touch memory at all (it fails the bound check before any
+/// payload byte is read).
+pub const MAX_WIRE_VALUES: usize = MAX_FRAME_VALUES;
 
 impl Modality {
     /// Wire-format discriminant.
@@ -82,7 +84,7 @@ impl Frame {
         out.extend_from_slice(&(self.patient as u64).to_le_bytes());
         out.extend_from_slice(&self.sim_time.to_le_bytes());
         out.extend_from_slice(&(self.values.len() as u32).to_le_bytes());
-        for v in &self.values {
+        for v in self.values.iter() {
             out.extend_from_slice(&v.to_le_bytes());
         }
     }
@@ -130,13 +132,14 @@ impl Frame {
                 buf.len()
             )));
         }
-        let mut values = Vec::with_capacity(n);
+        let mut values = FrameValues::new();
         for (i, chunk) in buf[WIRE_HEADER_LEN..total].chunks_exact(4).enumerate() {
             let v = f32::from_le_bytes(chunk.try_into().expect("chunks_exact(4)"));
             if !v.is_finite() {
                 return Err(Error::wire(format!("non-finite payload value at index {i}")));
             }
-            values.push(v);
+            // cannot overflow: n ≤ MAX_WIRE_VALUES = the buffer capacity
+            let _ = values.push(v);
         }
         Ok((Frame { patient, modality, sim_time, values }, total))
     }
@@ -171,7 +174,7 @@ mod tests {
             patient: 42,
             modality: Modality::Ecg,
             sim_time: 12.375,
-            values: vec![0.5, -1.25, 3.0],
+            values: [0.5, -1.25, 3.0].into(),
         }
     }
 
@@ -229,11 +232,40 @@ mod tests {
     }
 
     #[test]
+    fn payload_wider_than_the_inline_buffer_is_rejected() {
+        // hand-assemble a frame claiming MAX_WIRE_VALUES + 1 values,
+        // with the payload bytes actually present: the length bound
+        // itself must reject it, not a truncation check
+        let n = MAX_WIRE_VALUES + 1;
+        let mut body = Vec::new();
+        body.extend_from_slice(&WIRE_MAGIC);
+        body.push(WIRE_VERSION);
+        body.push(Modality::Labs.wire_code());
+        body.extend_from_slice(&[0u8; 2]);
+        body.extend_from_slice(&7u64.to_le_bytes());
+        body.extend_from_slice(&1.0f64.to_le_bytes());
+        body.extend_from_slice(&(n as u32).to_le_bytes());
+        for _ in 0..n {
+            body.extend_from_slice(&1.0f32.to_le_bytes());
+        }
+        assert!(Frame::from_bytes(&body).is_err());
+        // the full 8-value labs payload is exactly at the cap
+        let labs = Frame {
+            patient: 7,
+            modality: Modality::Labs,
+            sim_time: 1.0,
+            values: [7.4, 1.0, 4.0, 140.0, 0.4, 12.0, 14.0, 9.0].into(),
+        };
+        let (back, _) = Frame::from_bytes(&labs.to_bytes()).unwrap();
+        assert_eq!(back.values.len(), MAX_WIRE_VALUES);
+    }
+
+    #[test]
     fn nan_payload_is_rejected() {
         let mut f = frame();
-        f.values[1] = f32::NAN;
+        f.values = super::FrameValues::from_slice(&[0.5, f32::NAN, 3.0]).unwrap();
         assert!(Frame::from_bytes(&f.to_bytes()).is_err());
-        f.values[1] = f32::INFINITY;
+        f.values = super::FrameValues::from_slice(&[0.5, f32::INFINITY, 3.0]).unwrap();
         assert!(Frame::from_bytes(&f.to_bytes()).is_err());
     }
 

@@ -11,12 +11,14 @@
 //!   paper's RD / AF / LF / NPO baselines.
 //! * [`serving`] — the real-time serving system: an actor pipeline
 //!   (stateful data aggregators + stateless model actors, the paper's Ray
-//!   substrate) over a zero-copy, lock-free data plane — `Arc<[f32]>`
-//!   lead windows shared across ensemble members, a generation-tagged
-//!   pending slot arena updated purely with atomics, persistent
-//!   64-byte-aligned batch arenas, binary HTTP ingest framing —
-//!   executing zoo models through the [`runtime`] engine, with
-//!   [`netcalc`]-based queueing-latency estimation (Fig. 5).
+//!   substrate) over a zero-copy, lock-free, fan-in-free data plane —
+//!   patients sharded over N aggregation workers, `Arc<[f32]>` lead
+//!   windows shared across ensemble members, a generation-tagged
+//!   pending slot arena updated purely with atomics with collector-less
+//!   direct completion, allocation-free inline frame payloads,
+//!   persistent 64-byte-aligned batch arenas, binary HTTP ingest
+//!   framing — executing zoo models through the [`runtime`] engine,
+//!   with [`netcalc`]-based queueing-latency estimation (Fig. 5).
 //!
 //! ## Execution backend feature matrix
 //!

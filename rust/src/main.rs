@@ -37,6 +37,7 @@ COMMANDS:
       --speedup X            virtual-clock acceleration      [10]
       --duration SECS        simulated duration              [120]
       --http ADDR            also open an HTTP ingest server
+      --shards N             aggregation shards (0 = auto)   [0]
   profile                  measured latency profile (μ, T_s, T_q) of an ensemble
       --models id1,id2,...   zoo model ids (default: HOLMES servable pick)
       --gpus N --patients N                                  [2, 64]
@@ -63,7 +64,7 @@ fn run(argv: &[String]) -> Result<()> {
         argv,
         &[
             "artifacts", "budget", "gpus", "patients", "seed", "window", "speedup", "duration",
-            "http", "models", "out",
+            "http", "models", "out", "shards",
         ],
     )?;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -141,6 +142,7 @@ fn run(argv: &[String]) -> Result<()> {
                     duration_s: args.f64_or("duration", 120.0)?,
                     http_addr: args.get("http").map(String::from),
                     seed: args.u64_or("seed", 42)?,
+                    shards: args.usize_or("shards", 0)?,
                 },
             )?;
         }

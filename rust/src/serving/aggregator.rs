@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use crate::ingest::{Frame, Modality};
+use crate::ingest::{Frame, FrameValues, Modality};
 
 /// Synchronized multi-modal window ready for the ensemble.
 #[derive(Debug, Clone)]
@@ -36,7 +36,7 @@ pub struct WindowAggregator {
     leads: [Vec<f32>; 3],
     vitals_acc: Vec<f64>,
     vitals_count: usize,
-    last_labs: Vec<f32>,
+    last_labs: FrameValues,
     window_id: u64,
     dropped: u64,
 }
@@ -54,7 +54,7 @@ impl WindowAggregator {
             ],
             vitals_acc: vec![0.0; 7],
             vitals_count: 0,
-            last_labs: Vec::new(),
+            last_labs: FrameValues::new(),
             window_id: 0,
             dropped: 0,
         }
@@ -106,7 +106,8 @@ impl WindowAggregator {
             }
             Modality::Labs => {
                 if frame.values.len() == 8 {
-                    self.last_labs = frame.values.clone();
+                    // inline buffer: latching labs is a plain copy
+                    self.last_labs = frame.values;
                 } else {
                     self.dropped += 1;
                 }
@@ -144,7 +145,7 @@ impl WindowAggregator {
             sim_end,
             leads,
             vitals,
-            labs: self.last_labs.clone(),
+            labs: self.last_labs.to_vec(),
         }
     }
 }
@@ -154,7 +155,12 @@ mod tests {
     use super::*;
 
     fn ecg_frame(patient: usize, t: f64, v: f32) -> Frame {
-        Frame { patient, modality: Modality::Ecg, sim_time: t, values: vec![v, v + 1.0, v + 2.0] }
+        Frame {
+            patient,
+            modality: Modality::Ecg,
+            sim_time: t,
+            values: [v, v + 1.0, v + 2.0].into(),
+        }
     }
 
     #[test]
@@ -197,13 +203,13 @@ mod tests {
             patient: 0,
             modality: Modality::Vitals,
             sim_time: 0.0,
-            values: vec![100.0, 70.0, 98.0, 20.0, 37.0, 6.0, 1.4],
+            values: [100.0, 70.0, 98.0, 20.0, 37.0, 6.0, 1.4].into(),
         });
         agg.push(&Frame {
             patient: 0,
             modality: Modality::Vitals,
             sim_time: 0.5,
-            values: vec![110.0, 72.0, 97.0, 22.0, 37.2, 7.0, 1.2],
+            values: [110.0, 72.0, 97.0, 22.0, 37.2, 7.0, 1.2].into(),
         });
         agg.push(&ecg_frame(0, 0.0, 0.0));
         let w = agg.push(&ecg_frame(0, 1.0, 1.0)).unwrap();
@@ -217,12 +223,17 @@ mod tests {
     #[test]
     fn malformed_frames_counted_dropped() {
         let mut agg = WindowAggregator::new(0, 4);
-        agg.push(&Frame { patient: 0, modality: Modality::Ecg, sim_time: 0.0, values: vec![1.0] });
+        agg.push(&Frame {
+            patient: 0,
+            modality: Modality::Ecg,
+            sim_time: 0.0,
+            values: [1.0].into(),
+        });
         agg.push(&Frame {
             patient: 0,
             modality: Modality::Vitals,
             sim_time: 0.0,
-            values: vec![1.0, 2.0],
+            values: [1.0, 2.0].into(),
         });
         assert_eq!(agg.dropped(), 2);
     }
@@ -234,7 +245,7 @@ mod tests {
             patient: 0,
             modality: Modality::Labs,
             sim_time: 0.0,
-            values: vec![7.4, 1.0, 4.0, 140.0, 0.4, 12.0, 14.0, 9.0],
+            values: [7.4, 1.0, 4.0, 140.0, 0.4, 12.0, 14.0, 9.0].into(),
         });
         let w1 = agg.push(&ecg_frame(0, 0.0, 0.0)).unwrap();
         let w2 = agg.push(&ecg_frame(0, 1.0, 0.0)).unwrap();

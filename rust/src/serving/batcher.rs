@@ -3,21 +3,29 @@
 //! into a **persistent 64-byte-aligned** batch arena (reused across
 //! flushes — the only copy on the whole data plane, chunked for SIMD;
 //! see [`crate::runtime::AlignedBatch`]), executes through the engine
-//! and fans per-slot scores back to the collector.
+//! and completes each slot **directly** through the lock-free pending
+//! arena via its [`Completer`] — there is no collector thread and no
+//! report channel; the batcher thread that records the last member's
+//! score finishes the query inline.
 //!
 //! One OS thread per selected model — the rust analogue of the paper's
 //! per-model Ray actor with its queue. Items carry `Arc<[f32]>` windows
 //! shared with every other member's batcher; nothing is cloned here.
 //!
 //! Failure semantics: when an execution fails, every item of the batch
-//! is reported as [`ModelReport::Failed`] (the collector evicts the
-//! queries so blocked `submit()` callers error out instead of hanging),
-//! the still-queued backlog is drained and failed the same way, and the
-//! loop exits with the original error.
+//! is failed through [`Completer::fail`] (evicting the query from the
+//! pending arena so blocked `submit()` callers error out instead of
+//! hanging), the still-queued backlog is drained and failed the same
+//! way, and the loop exits with the original error. Determinism is
+//! unaffected by who completes a slot: member scores live in per-model
+//! cells and are summed in model-index order, so the ensemble score is
+//! bit-for-bit identical whether the last report lands on this batcher
+//! thread or any other.
 
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
+use super::pipeline::Completer;
 use crate::runtime::{AlignedBatch, Engine};
 use crate::{Error, Result};
 
@@ -31,27 +39,6 @@ pub struct BatchItem {
     pub input: Arc<[f32]>,
     /// When the parent query was emitted by its aggregator.
     pub enqueued: Instant,
-}
-
-/// Score report back to the collector.
-#[derive(Debug, Clone)]
-pub struct ModelScore {
-    pub query_id: u64,
-    pub model_index: usize,
-    pub score: f32,
-    /// Time the item waited before its batch started executing.
-    pub queue_wait: Duration,
-    /// Device execution time of the batch that carried the item.
-    pub exec_time: Duration,
-}
-
-/// One batcher → collector message.
-#[derive(Debug, Clone)]
-pub enum ModelReport {
-    Score(ModelScore),
-    /// The member could not score this query (engine error, bad input):
-    /// the collector evicts the pending entry and fails the caller.
-    Failed { query_id: u64, model_index: usize },
 }
 
 /// Batching policy knobs.
@@ -71,23 +58,15 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Why a flush could not complete.
-enum FlushError {
-    /// The collector hung up — pipeline shutdown, nothing to report.
-    Sink,
-    /// The engine (or input validation) failed; items were reported as
-    /// Failed already.
-    Exec(Error),
-}
-
-/// Run one model's batch loop until the input channel closes. `out` is
-/// called once per item (score or failure); it returns Err when the
-/// collector is gone, which terminates the loop.
+/// Run one model's batch loop until the input channel closes. `done` is
+/// this member's direct-completion handle into the pending arena (and
+/// pipeline telemetry); every dequeued item is resolved through it
+/// exactly once — scored, or failed (which evicts the query).
 pub fn model_batch_loop(
     model_index: usize,
     engine: Engine,
     rx: mpsc::Receiver<BatchItem>,
-    mut out: impl FnMut(ModelReport) -> Result<()>,
+    done: Completer,
     policy: BatchPolicy,
 ) -> Result<()> {
     let clip_len = engine.clip_len();
@@ -137,13 +116,10 @@ pub fn model_batch_loop(
                 Err(mpsc::RecvTimeoutError::Disconnected) => closed = true,
             }
         }
-        match flush(model_index, &engine, clip_len, &mut pending, &mut buf, &mut out, max_take) {
-            Ok(()) => {}
-            Err(FlushError::Sink) => return Err(Error::serving("collector gone")),
-            Err(FlushError::Exec(e)) => {
-                drain_and_fail(model_index, &mut pending, &rx, &mut out);
-                return Err(e);
-            }
+        if let Err(e) = flush(model_index, &engine, clip_len, &mut pending, &mut buf, &done, max_take)
+        {
+            drain_and_fail(&mut pending, &rx, &done);
+            return Err(e);
         }
         if closed && pending.is_empty() {
             break;
@@ -151,13 +127,10 @@ pub fn model_batch_loop(
     }
     // final drain
     while !pending.is_empty() {
-        match flush(model_index, &engine, clip_len, &mut pending, &mut buf, &mut out, max_take) {
-            Ok(()) => {}
-            Err(FlushError::Sink) => return Err(Error::serving("collector gone")),
-            Err(FlushError::Exec(e)) => {
-                drain_and_fail(model_index, &mut pending, &rx, &mut out);
-                return Err(e);
-            }
+        if let Err(e) = flush(model_index, &engine, clip_len, &mut pending, &mut buf, &done, max_take)
+        {
+            drain_and_fail(&mut pending, &rx, &done);
+            return Err(e);
         }
     }
     Ok(())
@@ -169,9 +142,9 @@ fn flush(
     clip_len: usize,
     pending: &mut Vec<BatchItem>,
     buf: &mut AlignedBatch,
-    out: &mut impl FnMut(ModelReport) -> Result<()>,
+    done: &Completer,
     max_take: usize,
-) -> std::result::Result<(), FlushError> {
+) -> Result<()> {
     // weed out malformed items per item (cannot happen via Pipeline,
     // which validates lead lengths at the router; defensive for direct
     // users of model_batch_loop) — a bad query must not kill the member
@@ -180,7 +153,7 @@ fn flush(
     while i < pending.len() {
         if pending[i].input.len() != clip_len {
             let item = pending.remove(i);
-            let _ = out(ModelReport::Failed { query_id: item.query_id, model_index });
+            done.fail(item.query_id);
         } else {
             i += 1;
         }
@@ -199,62 +172,52 @@ fn flush(
         Ok(result) => {
             // a backend returning fewer scores than batch slots must
             // fail the batch, not panic the member thread: a dead
-            // batcher with unreported dequeued items would leak live
+            // batcher with unresolved dequeued items would leak live
             // pending-table entries (and stall their callers) forever
             if result.scores.len() < take {
                 let e = Error::serving(format!(
                     "model {model_index}: backend returned {} scores for a batch of {take}",
                     result.scores.len()
                 ));
-                fail_batch(model_index, pending, take, out);
-                return Err(FlushError::Exec(e));
+                fail_batch(pending, take, done);
+                return Err(e);
             }
             for (slot, item) in pending.drain(..take).enumerate() {
-                let report = ModelScore {
-                    query_id: item.query_id,
-                    model_index,
-                    score: result.scores[slot],
-                    queue_wait: started.duration_since(item.enqueued),
-                    exec_time: result.exec_time,
-                };
-                out(ModelReport::Score(report)).map_err(|_| FlushError::Sink)?;
+                // direct completion: write this member's score cell; if
+                // that was the last outstanding member, finish() runs
+                // right here on this batcher thread
+                done.score(
+                    item.query_id,
+                    result.scores[slot],
+                    started.duration_since(item.enqueued),
+                    result.exec_time,
+                );
             }
             Ok(())
         }
         Err(e) => {
-            fail_batch(model_index, pending, take, out);
-            Err(FlushError::Exec(e))
+            fail_batch(pending, take, done);
+            Err(e)
         }
     }
 }
 
-/// Report the first `take` buffered items as failed (collector may
-/// already be gone — ignore send errors, we are on the way out).
-fn fail_batch(
-    model_index: usize,
-    pending: &mut Vec<BatchItem>,
-    take: usize,
-    out: &mut impl FnMut(ModelReport) -> Result<()>,
-) {
+/// Fail (evict) the first `take` buffered items.
+fn fail_batch(pending: &mut Vec<BatchItem>, take: usize, done: &Completer) {
     for item in pending.drain(..take) {
-        let _ = out(ModelReport::Failed { query_id: item.query_id, model_index });
+        done.fail(item.query_id);
     }
 }
 
 /// Terminal eviction after an execution error: fail everything still
 /// buffered plus everything that keeps arriving until the router hangs
 /// up, so no registered query is left dangling in the pending table.
-fn drain_and_fail(
-    model_index: usize,
-    pending: &mut Vec<BatchItem>,
-    rx: &mpsc::Receiver<BatchItem>,
-    out: &mut impl FnMut(ModelReport) -> Result<()>,
-) {
+fn drain_and_fail(pending: &mut Vec<BatchItem>, rx: &mpsc::Receiver<BatchItem>, done: &Completer) {
     for item in pending.drain(..) {
-        let _ = out(ModelReport::Failed { query_id: item.query_id, model_index });
+        done.fail(item.query_id);
     }
     for item in rx.iter() {
-        let _ = out(ModelReport::Failed { query_id: item.query_id, model_index });
+        done.fail(item.query_id);
     }
 }
 

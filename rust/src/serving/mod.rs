@@ -1,33 +1,41 @@
 //! Real-time ensemble serving (paper §3.4, Fig. 4).
 //!
-//! The pipeline is a set of tokio actors — the rust substitute for the
+//! The pipeline is a set of actor threads — the rust substitute for the
 //! Ray layer the paper builds on:
 //!
 //! ```text
 //!  bedside streams ──► HTTP server / in-process ingest
-//!        │ 250 Hz ECG, 1 Hz vitals
+//!        │ 250 Hz ECG, 1 Hz vitals   (ShardSender: patient % N)
 //!        ▼
-//!  [stateful]  per-patient WindowAggregator actors
+//!  [stateful]  N aggregation shards, each owning its patients'
+//!        │     WindowAggregators (bounded per-shard frame queues)
 //!        │ one ensemble Query per ΔT window
 //!        ▼
 //!  dispatcher ──► per-model Batcher actors ──► PJRT Engine workers
-//!        │                                        ("GPUs")
-//!        ▼
-//!  [stateless]  collector: bagging mean (Eq. 5) + telemetry
+//!        │              │                         ("GPUs")
+//!        ▼              ▼ Completer (direct, collector-less)
+//!  [stateless]  whichever batcher records a query's last member score
+//!               finishes it inline: bagging mean (Eq. 5) + telemetry
 //! ```
 //!
 //! Stateful compute (aggregation) and stateless compute (model
 //! inference) are separated exactly as the paper requires of its
 //! serving platform.
 //!
-//! The data plane is zero-copy and lock-free end to end: aggregators
-//! emit lead windows as `Arc<[f32]>`, the dispatcher fans references
-//! (not copies) to every member's batcher, per-query bagging state
-//! lives in a preallocated generation-tagged slot arena updated purely
-//! with atomics ([`pipeline::PendingSlots`]), and each batcher packs
-//! into one persistent 64-byte-aligned batch arena — see [`pipeline`]
-//! for the architecture diagram.
-//! Model execution goes through the pluggable
+//! The data plane is zero-copy, lock-free, and **fan-in free** end to
+//! end: no single thread touches every frame (patients are sharded over
+//! N aggregation workers, [`shards`]) and no single thread touches
+//! every score (batchers complete queries directly through the
+//! lock-free pending arena, [`pipeline::Completer`] — the old collector
+//! thread and its MPSC fan-in are gone). Aggregators emit lead windows
+//! as `Arc<[f32]>`, the dispatcher fans references (not copies) to
+//! every member's batcher, per-query bagging state lives in a
+//! preallocated generation-tagged slot arena updated purely with
+//! atomics ([`pipeline::PendingSlots`]), each batcher packs into one
+//! persistent 64-byte-aligned batch arena, and frames themselves carry
+//! their payload inline ([`crate::ingest::FrameValues`] — no per-frame
+//! heap traffic anywhere). See [`pipeline`] for the architecture
+//! diagram. Model execution goes through the pluggable
 //! [`ExecBackend`](crate::runtime::ExecBackend) (sim by default, PJRT
 //! with `--features xla`).
 
@@ -35,10 +43,13 @@ pub mod aggregator;
 pub mod batcher;
 pub mod pipeline;
 pub mod profile;
+pub mod shards;
 pub mod telemetry;
 
 pub use aggregator::WindowAggregator;
 pub use pipeline::{
-    share_leads, PendingSlots, Pipeline, PipelineConfig, Prediction, Query, ScoreOutcome,
+    share_leads, Completer, PendingSlots, Pipeline, PipelineConfig, Prediction, Query,
+    ScoreOutcome,
 };
+pub use shards::{default_shards, ShardConfig, ShardRouter, ShardSender};
 pub use telemetry::{LatencyHistogram, Telemetry};

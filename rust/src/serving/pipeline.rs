@@ -1,7 +1,8 @@
-//! The ensemble serving pipeline: router + per-model batcher actors +
-//! bagging collector, wired over std channels (Fig. 4).
+//! The ensemble serving pipeline: router + per-model batcher actors
+//! with **direct, collector-less completion**, wired over std channels
+//! (Fig. 4).
 //!
-//! ## Data-plane architecture (zero-copy, lock-free admission)
+//! ## Data-plane architecture (zero-copy, lock-free, no serial fan-in)
 //!
 //! ```text
 //!  Pipeline handles ──queries──► router thread ──items──► batcher threads
@@ -12,8 +13,12 @@
 //!        │        (preallocated, generation-tagged;      ExecBackend engine
 //!        │         atomic remaining + per-member         (sim | pjrt workers)
 //!        │         score cells, CAS eviction)                 │ scores
-//!        ▼                          ▲                         ▼
-//!      reply rx ◄─────────── collector thread ◄───────────────┘
+//!        │                          ▲                         │
+//!        │                          │ Completer::score        │
+//!        │                          │ (atomic cell write,     │
+//!        │                          │  last member finishes   │
+//!        ▼                          │  the slot INLINE)       ▼
+//!      reply rx ◄───────────── batcher threads ◄──────────────┘
 //! ```
 //!
 //! * **Zero-copy windows** — the aggregator emits each lead window once
@@ -23,16 +28,23 @@
 //! * **Lock-free pending slots** — per-query bagging state lives in a
 //!   preallocated arena of [`PENDING_SLOTS`] generation-tagged slots
 //!   (`query_id & (PENDING_SLOTS-1)` picks the slot, `query_id + 1` is
-//!   its generation tag). The router claims a slot with one CAS, the
-//!   collector updates `remaining` and per-member score cells with
-//!   atomics, and eviction is a CAS on the tag — router and collector
-//!   never block each other, even on the same query. See
-//!   [`PendingSlots`] for the full protocol.
+//!   its generation tag). The router claims a slot with one CAS,
+//!   batcher threads update `remaining` and per-member score cells with
+//!   atomics, and eviction is a CAS on the tag — no two threads ever
+//!   block each other, even on the same query. See [`PendingSlots`]
+//!   for the full protocol.
+//! * **Collector-less completion** — there is no collector thread and
+//!   no report channel: each batcher resolves its items through its
+//!   [`Completer`], and whichever batcher thread records the last
+//!   outstanding member runs `finish()` (bagging mean, telemetry,
+//!   reply delivery) inline. No single thread touches every score, so
+//!   completion throughput scales with the ensemble instead of
+//!   serializing on one MPSC fan-in.
 //! * **Deterministic bagging** — each member's score is written once
 //!   into its own cell and the cells are summed in model-index order at
 //!   completion, so a query's ensemble score is bit-for-bit identical
 //!   regardless of batch composition, arrival order, or which thread
-//!   completes the slot.
+//!   completes the slot — the completion *order* carries no state.
 //! * **Failure eviction** — when a member cannot score a query (engine
 //!   error, dead batcher), the slot is reclaimed via a tag CAS and the
 //!   caller's reply channel drops, so `submit()` callers fail fast
@@ -40,8 +52,8 @@
 //!
 //! Shutdown is acyclic: dropping the last `Pipeline` handle closes the
 //! query channel → the router exits and drops the per-model item
-//! senders → batchers drain and exit, dropping the report sender → the
-//! collector exits. No thread outlives the pipeline.
+//! senders → batchers drain, complete their last slots, and exit. No
+//! thread outlives the pipeline.
 
 use std::cell::UnsafeCell;
 use std::collections::HashMap;
@@ -49,7 +61,7 @@ use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-use super::batcher::{model_batch_loop, BatchItem, BatchPolicy, ModelReport};
+use super::batcher::{model_batch_loop, BatchItem, BatchPolicy};
 use super::telemetry::Telemetry;
 use crate::runtime::Engine;
 use crate::zoo::{Selector, Zoo};
@@ -147,7 +159,7 @@ impl PipelineConfig {
 // ---------------------------------------------------------------------------
 
 /// Query metadata carried through a pending slot (everything the
-/// collector needs to build the [`Prediction`]).
+/// completing thread needs to build the [`Prediction`]).
 pub struct PendingMeta {
     pub patient: usize,
     pub window_id: u64,
@@ -217,8 +229,9 @@ unsafe impl Sync for Slot {}
 
 /// Preallocated, generation-tagged pending-query arena — the lock-free
 /// replacement for the old `Vec<Mutex<HashMap<u64, PendingQuery>>>`
-/// striped table. Router (insert/evict) and collector (score/evict)
-/// coordinate purely through per-slot atomics:
+/// striped table. Router (insert/evict) and the batcher threads
+/// (score/evict, via their [`Completer`]s) coordinate purely through
+/// per-slot atomics:
 ///
 /// 1. **insert** — CAS the slot's tag `FREE → BUSY`, fill metadata,
 ///    reset `remaining` and the score cells, then publish with a
@@ -471,6 +484,59 @@ impl PendingSlots {
 }
 
 // ---------------------------------------------------------------------------
+// Direct (collector-less) completion
+// ---------------------------------------------------------------------------
+
+/// One ensemble member's direct-completion handle: the batcher-side
+/// replacement for the old `ModelReport` channel + collector thread.
+/// `score()` writes the member's cell in the pending arena and — when
+/// this report was the last one outstanding — runs the query's
+/// `finish()` (deterministic bagging mean, telemetry, reply delivery)
+/// inline on the calling thread. `fail()` evicts the query and counts
+/// the failure exactly once, no matter how many members fail it.
+#[derive(Clone)]
+pub struct Completer {
+    pending: Arc<PendingSlots>,
+    telemetry: Arc<Telemetry>,
+    /// This member's position in model-index order (its score cell).
+    member_pos: usize,
+}
+
+impl Completer {
+    pub fn new(pending: Arc<PendingSlots>, telemetry: Arc<Telemetry>, member_pos: usize) -> Self {
+        assert!(member_pos < pending.n_models(), "member_pos out of ensemble range");
+        Completer { pending, telemetry, member_pos }
+    }
+
+    /// Record this member's score for `query_id`; completes the query
+    /// inline if every other member has already reported.
+    pub fn score(&self, query_id: u64, score: f32, queue_wait: Duration, exec_time: Duration) {
+        self.telemetry.exec.record(exec_time);
+        self.telemetry.model_jobs.fetch_add(1, Ordering::Relaxed);
+        match self.pending.score(query_id, self.member_pos, score, queue_wait) {
+            ScoreOutcome::Completed(done) => {
+                finish(done, self.pending.n_models(), &self.telemetry)
+            }
+            ScoreOutcome::Accepted | ScoreOutcome::Absent => {}
+        }
+    }
+
+    /// This member could not score the query (engine error, bad input):
+    /// evict it so the blocked `submit()` caller errors out instead of
+    /// hanging. Counts one failure per evicted query (not per failing
+    /// member), and counts it BEFORE the eviction drops the reply
+    /// sender, so the count is visible by the time the caller observes
+    /// the hang-up; if another thread evicted first (and counted), the
+    /// provisional count is undone.
+    pub fn fail(&self, query_id: u64) {
+        self.telemetry.failures.fetch_add(1, Ordering::Relaxed);
+        if !self.pending.evict(query_id) {
+            self.telemetry.failures.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Pipeline
 // ---------------------------------------------------------------------------
 
@@ -503,45 +569,24 @@ impl Pipeline {
         }
         let telemetry = Arc::new(Telemetry::default());
         let pending = Arc::new(PendingSlots::new(cfg.ensemble.len()));
-        let (report_tx, report_rx) = mpsc::channel::<ModelReport>();
 
-        // batcher actor per selected model
+        // batcher actor per selected model; each holds its own direct
+        // Completer (member_pos = position in model-index order) — no
+        // collector thread, no report channel
         let mut model_txs: HashMap<usize, mpsc::Sender<BatchItem>> = HashMap::new();
-        for &i in cfg.ensemble.indices() {
+        for (pos, &i) in cfg.ensemble.indices().iter().enumerate() {
             let (btx, brx) = mpsc::channel::<BatchItem>();
             model_txs.insert(i, btx);
             let engine = engine.clone();
             let policy = cfg.policy;
-            let stx = report_tx.clone();
+            let done = Completer::new(Arc::clone(&pending), Arc::clone(&telemetry), pos);
             std::thread::Builder::new()
                 .name(format!("batcher-{i}"))
                 .spawn(move || {
-                    let out = |r: ModelReport| {
-                        stx.send(r).map_err(|_| Error::serving("collector gone"))
-                    };
-                    if let Err(e) = model_batch_loop(i, engine, brx, out, policy) {
+                    if let Err(e) = model_batch_loop(i, engine, brx, done, policy) {
                         eprintln!("model batcher {i} exited: {e}");
                     }
                 })
-                .map_err(Error::Io)?;
-        }
-        drop(report_tx); // collector ends when the last batcher exits
-
-        // collector thread
-        {
-            let pending = Arc::clone(&pending);
-            let telemetry = Arc::clone(&telemetry);
-            // model index → score-cell position (model-index order)
-            let member_pos: HashMap<usize, usize> = cfg
-                .ensemble
-                .indices()
-                .iter()
-                .enumerate()
-                .map(|(pos, &m)| (m, pos))
-                .collect();
-            std::thread::Builder::new()
-                .name("collector".into())
-                .spawn(move || collector_loop(report_rx, pending, member_pos, telemetry))
                 .map_err(Error::Io)?;
         }
 
@@ -662,7 +707,7 @@ fn router_loop(
                 // dispatched find a freed slot and are skipped. Count
                 // the failure BEFORE evict() drops the reply sender so
                 // it is visible by the time the caller observes the
-                // hang-up; if a concurrent collector eviction beat us
+                // hang-up; if a concurrent batcher eviction beat us
                 // to the slot (and counted it), undo our count.
                 telemetry.failures.fetch_add(1, Ordering::Relaxed);
                 if !pending.evict(id) {
@@ -675,42 +720,9 @@ fn router_loop(
     // router exit drops model_txs → batchers drain and exit
 }
 
-fn collector_loop(
-    rx: mpsc::Receiver<ModelReport>,
-    pending: Arc<PendingSlots>,
-    member_pos: HashMap<usize, usize>,
-    telemetry: Arc<Telemetry>,
-) {
-    let n_models = pending.n_models();
-    for report in rx {
-        match report {
-            ModelReport::Score(s) => {
-                telemetry.exec.record(s.exec_time);
-                telemetry.model_jobs.fetch_add(1, Ordering::Relaxed);
-                let Some(&pos) = member_pos.get(&s.model_index) else { continue };
-                match pending.score(s.query_id, pos, s.score, s.queue_wait) {
-                    ScoreOutcome::Completed(done) => finish(done, n_models, &telemetry),
-                    ScoreOutcome::Accepted | ScoreOutcome::Absent => {}
-                }
-            }
-            ModelReport::Failed { query_id, .. } => {
-                // Evict: reclaiming the slot drops its reply sender, so
-                // a blocked submit()/query() caller unblocks with an
-                // error instead of waiting on `remaining > 0` forever.
-                // Count one failure per evicted query (not per failing
-                // member), before the reply sender drops (evict drops
-                // it) — the count is visible by the time the caller
-                // observes the hang-up because we count first.
-                telemetry.failures.fetch_add(1, Ordering::Relaxed);
-                if !pending.evict(query_id) {
-                    telemetry.failures.fetch_sub(1, Ordering::Relaxed);
-                }
-            }
-        }
-    }
-}
-
 /// Complete one query: deterministic bagging mean + telemetry + reply.
+/// Runs inline on whichever batcher thread recorded the last member's
+/// score (see [`Completer::score`]).
 fn finish(done: CompletedQuery, n_models: usize, telemetry: &Telemetry) {
     let e2e = done.meta.emitted.elapsed();
     telemetry.e2e.record(e2e);

@@ -1,0 +1,338 @@
+//! Sharded patient-aggregation front-end: the stage between frame
+//! ingest and query admission, with **no thread that touches every
+//! frame**.
+//!
+//! The pre-shard plane funneled every frame — 64 beds × 251 frames/s,
+//! ~25k/s at the paper's 100-bed target — through one
+//! `mpsc::Sender<Frame>` into one aggregation loop. That single
+//! consumer capped ingest throughput regardless of core count. Here
+//! patients are partitioned over N aggregation workers
+//! (`patient % N`, N defaulting to a core-count heuristic); each shard
+//! owns the [`WindowAggregator`]s of its patients and submits completed
+//! windows straight into the serving pipeline via its sink. Producers
+//! (HTTP connection threads, bedside generators) route frames through a
+//! cheap clonable [`ShardSender`] onto **bounded** per-shard channels,
+//! so a hot edge backpressures instead of ballooning memory.
+//!
+//! Sharding preserves the serving semantics bit for bit: a patient's
+//! frames all land on one shard in arrival order, so window contents
+//! and `window_id`s are identical for any shard count, and the
+//! ensemble's deterministic model-index-order bagging makes the final
+//! predictions independent of how windows were interleaved across
+//! shards (see `tests/shards.rs`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use super::aggregator::{WindowAggregator, WindowData};
+use super::telemetry::Telemetry;
+use crate::ingest::Frame;
+use crate::{Error, Result};
+
+/// Default bound of each shard's frame queue: ~2 s of a busy shard's
+/// traffic (8 shards × 64 beds × 251 frames/s ≈ 2k frames/s/shard).
+/// A full queue blocks the producer — admission backpressure, not OOM.
+pub const DEFAULT_SHARD_QUEUE: usize = 4096;
+
+/// Default bound on distinct patients per shard. The aggregator map is
+/// keyed by the **untrusted** wire patient id, and each aggregator
+/// preallocates 3 × `window_samples` lead buffers (~30 KB at the
+/// paper's clip length) — without a cap, one 4 MiB `/ingest.bin` body
+/// of minimal frames with distinct ids could pin gigabytes. 1024
+/// patients/shard is 10× the paper's 100-bed target even on a single
+/// shard; frames for patients past the cap are counted as dropped.
+pub const DEFAULT_SHARD_PATIENTS: usize = 1024;
+
+/// Shard-plane construction parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardConfig {
+    /// Number of aggregation workers; 0 = auto ([`default_shards`]).
+    pub shards: usize,
+    /// Capacity of each shard's bounded frame channel.
+    pub queue_depth: usize,
+    /// Max distinct patients tracked per shard; frames for further
+    /// patient ids are dropped (and counted), bounding aggregator
+    /// memory against hostile ids.
+    pub max_patients: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            shards: 0,
+            queue_depth: DEFAULT_SHARD_QUEUE,
+            max_patients: DEFAULT_SHARD_PATIENTS,
+        }
+    }
+}
+
+/// Core-count heuristic for the shard count: half the available
+/// parallelism (the other half belongs to batchers + engine workers),
+/// clamped to [1, 8] — aggregation is cheap per frame, so more than 8
+/// shards only adds channels.
+pub fn default_shards() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2)
+        .div_ceil(2)
+        .clamp(1, 8)
+}
+
+/// Clonable routing handle held by every frame producer (HTTP
+/// connection threads, bedside generators): `patient % shards` picks
+/// the shard, and the send blocks on a full queue (bounded
+/// backpressure). All clones dropping closes the shard channels and
+/// lets the workers drain and exit.
+#[derive(Clone)]
+pub struct ShardSender {
+    txs: Arc<[mpsc::SyncSender<Frame>]>,
+}
+
+impl ShardSender {
+    /// Build from raw per-shard senders (tests and benches; production
+    /// code gets one from [`ShardRouter::spawn`]).
+    pub fn from_senders(txs: Vec<mpsc::SyncSender<Frame>>) -> Self {
+        assert!(!txs.is_empty(), "at least one shard");
+        ShardSender { txs: txs.into() }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Route one frame to its patient's shard. Errors only when the
+    /// shard plane has shut down.
+    pub fn send(&self, frame: Frame) -> Result<()> {
+        let shard = frame.patient % self.txs.len();
+        self.txs[shard]
+            .send(frame)
+            .map_err(|_| Error::serving("aggregation shard closed"))
+    }
+}
+
+/// Handle to the running shard workers. Dropping it does NOT stop the
+/// workers (they run until every [`ShardSender`] clone is gone) — call
+/// [`ShardRouter::join`] after dropping the senders to wait for the
+/// drain and collect per-shard drop totals.
+pub struct ShardRouter {
+    workers: Vec<std::thread::JoinHandle<()>>,
+    dropped: Arc<[AtomicU64]>,
+}
+
+impl ShardRouter {
+    /// Spawn the shard plane. `make_sink(shard)` builds each worker's
+    /// window sink, called once per shard at spawn time; the sink runs
+    /// on the shard thread for every completed window.
+    pub fn spawn<S, F>(
+        cfg: ShardConfig,
+        window_samples: usize,
+        telemetry: Arc<Telemetry>,
+        mut make_sink: F,
+    ) -> Result<(ShardRouter, ShardSender)>
+    where
+        S: FnMut(WindowData) + Send + 'static,
+        F: FnMut(usize) -> S,
+    {
+        let n = if cfg.shards == 0 { default_shards() } else { cfg.shards };
+        let dropped: Arc<[AtomicU64]> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let mut txs = Vec::with_capacity(n);
+        let mut workers = Vec::with_capacity(n);
+        for shard in 0..n {
+            let (tx, rx) = mpsc::sync_channel::<Frame>(cfg.queue_depth.max(1));
+            txs.push(tx);
+            let telemetry = Arc::clone(&telemetry);
+            let dropped = Arc::clone(&dropped);
+            let sink = make_sink(shard);
+            let max_patients = cfg.max_patients.max(1);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("agg-shard-{shard}"))
+                    .spawn(move || {
+                        shard_loop(shard, rx, window_samples, max_patients, telemetry, dropped, sink)
+                    })
+                    .map_err(Error::Io)?,
+            );
+        }
+        Ok((ShardRouter { workers, dropped }, ShardSender::from_senders(txs)))
+    }
+
+    pub fn shards(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Live per-shard dropped/malformed frame totals (also summed into
+    /// `Telemetry::frames_dropped` for the `/stats` snapshot).
+    pub fn dropped_per_shard(&self) -> Vec<u64> {
+        self.dropped.iter().map(|d| d.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Wait for every worker to drain and exit (all [`ShardSender`]
+    /// clones must be dropped first, or this blocks forever); returns
+    /// the final per-shard dropped totals.
+    pub fn join(self) -> Result<Vec<u64>> {
+        for w in self.workers {
+            w.join().map_err(|_| Error::serving("aggregation shard panicked"))?;
+        }
+        Ok(self.dropped.iter().map(|d| d.load(Ordering::Relaxed)).collect())
+    }
+}
+
+/// One shard's loop: own the aggregators of `patient % shards == shard`
+/// patients, push frames, hand completed windows to the sink.
+fn shard_loop<S: FnMut(WindowData)>(
+    shard: usize,
+    rx: mpsc::Receiver<Frame>,
+    window_samples: usize,
+    max_patients: usize,
+    telemetry: Arc<Telemetry>,
+    dropped: Arc<[AtomicU64]>,
+    mut sink: S,
+) {
+    let mut aggs: HashMap<usize, WindowAggregator> = HashMap::new();
+    for frame in rx {
+        let t0 = Instant::now();
+        telemetry.frames.fetch_add(1, Ordering::Relaxed);
+        // bound aggregator state against hostile/garbage patient ids:
+        // past `max_patients` distinct ids, further ids are dropped
+        // (and counted) instead of allocating a fresh aggregator
+        if !aggs.contains_key(&frame.patient) {
+            if aggs.len() >= max_patients {
+                dropped[shard].fetch_add(1, Ordering::Relaxed);
+                telemetry.frames_dropped.fetch_add(1, Ordering::Relaxed);
+                telemetry.ingest.record(t0.elapsed());
+                continue;
+            }
+            aggs.insert(frame.patient, WindowAggregator::new(frame.patient, window_samples));
+        }
+        let agg = aggs.get_mut(&frame.patient).expect("inserted above");
+        let dropped_before = agg.dropped();
+        let window = agg.push(&frame);
+        let delta = agg.dropped() - dropped_before;
+        if delta > 0 {
+            dropped[shard].fetch_add(delta, Ordering::Relaxed);
+            telemetry.frames_dropped.fetch_add(delta, Ordering::Relaxed);
+        }
+        if let Some(w) = window {
+            sink(w);
+        }
+        telemetry.ingest.record(t0.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ingest::Modality;
+    use std::sync::Mutex;
+
+    fn ecg(patient: usize, v: f32) -> Frame {
+        Frame {
+            patient,
+            modality: Modality::Ecg,
+            sim_time: 0.0,
+            values: [v, v, v].into(),
+        }
+    }
+
+    #[test]
+    fn frames_route_by_patient_modulo_shards() {
+        let tel = Arc::new(Telemetry::default());
+        let windows = Arc::new(Mutex::new(Vec::new()));
+        let (router, tx) = ShardRouter::spawn(
+            ShardConfig { shards: 3, queue_depth: 16, ..ShardConfig::default() },
+            2,
+            Arc::clone(&tel),
+            |shard| {
+                let windows = Arc::clone(&windows);
+                move |w: WindowData| windows.lock().unwrap().push((shard, w.patient, w.window_id))
+            },
+        )
+        .unwrap();
+        assert_eq!(tx.shards(), 3);
+        assert_eq!(router.shards(), 3);
+        // patients 0..6, two ECG frames each → one window per patient
+        for v in 0..2 {
+            for p in 0..6 {
+                tx.send(ecg(p, v as f32)).unwrap();
+            }
+        }
+        drop(tx);
+        let dropped = router.join().unwrap();
+        assert_eq!(dropped, vec![0, 0, 0]);
+        let mut got = windows.lock().unwrap().clone();
+        got.sort_unstable();
+        // every patient produced window 0 on its home shard
+        let mut want: Vec<(usize, usize, u64)> = (0..6).map(|p| (p % 3, p, 0)).collect();
+        want.sort_unstable();
+        assert_eq!(got, want);
+        assert_eq!(tel.frames.load(Ordering::Relaxed), 12);
+        assert_eq!(tel.frames_dropped.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn malformed_frames_count_per_shard_and_globally() {
+        let tel = Arc::new(Telemetry::default());
+        let (router, tx) = ShardRouter::spawn(
+            ShardConfig { shards: 2, queue_depth: 16, ..ShardConfig::default() },
+            4,
+            Arc::clone(&tel),
+            |_| |_w: WindowData| {},
+        )
+        .unwrap();
+        // patient 1 → shard 1; a 1-value ECG frame is malformed
+        let bad = Frame {
+            patient: 1,
+            modality: Modality::Ecg,
+            sim_time: 0.0,
+            values: [0.5].into(),
+        };
+        tx.send(bad).unwrap();
+        tx.send(bad).unwrap();
+        tx.send(ecg(0, 1.0)).unwrap(); // healthy frame on shard 0
+        drop(tx);
+        let dropped = router.join().unwrap();
+        assert_eq!(dropped, vec![0, 2]);
+        assert_eq!(tel.frames_dropped.load(Ordering::Relaxed), 2);
+        assert_eq!(tel.frames.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn patient_cap_bounds_aggregator_state() {
+        let tel = Arc::new(Telemetry::default());
+        let windows = Arc::new(Mutex::new(Vec::new()));
+        let (router, tx) = ShardRouter::spawn(
+            ShardConfig { shards: 1, queue_depth: 64, max_patients: 2 },
+            1,
+            Arc::clone(&tel),
+            |_| {
+                let windows = Arc::clone(&windows);
+                move |w: WindowData| windows.lock().unwrap().push(w.patient)
+            },
+        )
+        .unwrap();
+        // patients 0 and 1 claim the two slots; a flood of fresh ids
+        // (a hostile wire body) is refused, not allocated
+        for p in 0..2 {
+            tx.send(ecg(p, 1.0)).unwrap();
+        }
+        for hostile in 100..140 {
+            tx.send(ecg(hostile, 9.9)).unwrap();
+        }
+        // known patients keep serving: window_samples = 1 → a window
+        // per accepted ECG frame
+        tx.send(ecg(0, 2.0)).unwrap();
+        drop(tx);
+        let dropped = router.join().unwrap();
+        assert_eq!(dropped, vec![40], "every over-cap id counts as dropped");
+        assert_eq!(tel.frames_dropped.load(Ordering::Relaxed), 40);
+        assert_eq!(*windows.lock().unwrap(), vec![0usize, 1, 0]);
+    }
+
+    #[test]
+    fn default_shard_count_is_sane() {
+        let n = default_shards();
+        assert!((1..=8).contains(&n));
+    }
+}

@@ -3,7 +3,7 @@
 //! throughput counters. Lock-light: one mutex per histogram, updated
 //! once per query.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -16,6 +16,10 @@ pub struct LatencyHistogram {
     sum_ns: AtomicU64,
     max_ns: AtomicU64,
     samples: Mutex<Vec<f64>>, // seconds; capped reservoir
+    /// Relaxed mirror of `samples.len()`: recorders check it before
+    /// touching the mutex, so a full reservoir costs zero lock traffic
+    /// on the (now multi-threaded, collector-less) completion path.
+    sampled: AtomicUsize,
     cap: usize,
 }
 
@@ -36,6 +40,7 @@ impl LatencyHistogram {
             sum_ns: AtomicU64::new(0),
             max_ns: AtomicU64::new(0),
             samples: Mutex::new(Vec::new()),
+            sampled: AtomicUsize::new(0),
             cap: sample_cap,
         }
     }
@@ -52,9 +57,16 @@ impl LatencyHistogram {
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_ns.fetch_add(ns, Ordering::Relaxed);
         self.max_ns.fetch_max(ns, Ordering::Relaxed);
+        // reservoir fast path: once full, recorders never take the lock
+        // again (the authoritative cap check stays inside the lock —
+        // `sampled` may lag behind, never run ahead)
+        if self.sampled.load(Ordering::Relaxed) >= self.cap {
+            return;
+        }
         let mut s = self.samples.lock().expect("telemetry poisoned");
         if s.len() < self.cap {
             s.push(d.as_secs_f64());
+            self.sampled.store(s.len(), Ordering::Relaxed);
         }
     }
 
@@ -80,9 +92,13 @@ impl LatencyHistogram {
         crate::metrics::percentile(&s, p)
     }
 
-    /// Drain retained samples (for experiment CSVs).
+    /// Drain retained samples (for experiment CSVs); re-arms the
+    /// reservoir.
     pub fn take_samples(&self) -> Vec<f64> {
-        std::mem::take(&mut *self.samples.lock().expect("telemetry poisoned"))
+        let mut s = self.samples.lock().expect("telemetry poisoned");
+        let out = std::mem::take(&mut *s);
+        self.sampled.store(0, Ordering::Relaxed);
+        out
     }
 }
 
@@ -100,6 +116,11 @@ pub struct Telemetry {
     pub queries: AtomicU64,
     pub model_jobs: AtomicU64,
     pub frames: AtomicU64,
+    /// Frames the aggregation front-end discarded (malformed payload,
+    /// wrong patient) — silent data loss made visible; per-shard
+    /// breakdowns live on the shard router
+    /// ([`super::shards::ShardRouter::dropped_per_shard`]).
+    pub frames_dropped: AtomicU64,
     /// Queries evicted because a member could not score them.
     pub failures: AtomicU64,
 }
@@ -110,6 +131,7 @@ impl Telemetry {
             queries: self.queries.load(Ordering::Relaxed),
             model_jobs: self.model_jobs.load(Ordering::Relaxed),
             frames: self.frames.load(Ordering::Relaxed),
+            frames_dropped: self.frames_dropped.load(Ordering::Relaxed),
             failures: self.failures.load(Ordering::Relaxed),
             e2e_mean: self.e2e.mean(),
             e2e_p50: self.e2e.percentile(50.0),
@@ -130,6 +152,7 @@ pub struct TelemetrySnapshot {
     pub queries: u64,
     pub model_jobs: u64,
     pub frames: u64,
+    pub frames_dropped: u64,
     pub failures: u64,
     pub e2e_mean: f64,
     pub e2e_p50: f64,
@@ -149,6 +172,7 @@ impl TelemetrySnapshot {
             ("queries", Value::Num(self.queries as f64)),
             ("model_jobs", Value::Num(self.model_jobs as f64)),
             ("frames", Value::Num(self.frames as f64)),
+            ("frames_dropped", Value::Num(self.frames_dropped as f64)),
             ("failures", Value::Num(self.failures as f64)),
             ("e2e_mean", Value::Num(self.e2e_mean)),
             ("e2e_p50", Value::Num(self.e2e_p50)),

@@ -202,7 +202,7 @@ fn prop_aggregator_windows_partition_the_stream() {
                 patient: 0,
                 modality: Modality::Ecg,
                 sim_time: i as f64,
-                values: vec![v, v, v],
+                values: [v, v, v].into(),
             };
             if let Some(w) = agg.push(&frame) {
                 emitted.push(w.leads[0].clone());
@@ -327,14 +327,29 @@ fn prop_json_roundtrip() {
     }
 }
 
+/// Random payload within the inline-buffer capacity (1..=8 values).
+fn random_values(rng: &mut Rng, max_len: usize) -> holmes::ingest::FrameValues {
+    let n = rng.range(0, max_len + 1);
+    let mut values = holmes::ingest::FrameValues::new();
+    for _ in 0..n {
+        let v = (rng.range_f64(-1e6, 1e6)) as f32;
+        assert!(values.push(if v.is_finite() { v } else { 0.0 }));
+    }
+    values
+}
+
 #[test]
 fn prop_frame_json_roundtrip() {
     for (seed, mut rng) in rngs() {
+        let mut values = holmes::ingest::FrameValues::new();
+        for _ in 0..rng.range(1, 9) {
+            assert!(values.push((rng.f64() * 100.0).round() as f32 / 4.0));
+        }
         let f = Frame {
             patient: rng.range(0, 1000),
             modality: [Modality::Ecg, Modality::Vitals, Modality::Labs][rng.range(0, 3)],
             sim_time: (rng.range_f64(0.0, 1e5) * 1000.0).round() / 1000.0,
-            values: (0..rng.range(1, 9)).map(|_| (rng.f64() * 100.0).round() as f32 / 4.0).collect(),
+            values,
         };
         let g = Frame::from_json(&Value::parse(&f.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(g.patient, f.patient, "seed {seed}");
@@ -352,13 +367,9 @@ fn random_frame(rng: &mut Rng) -> Frame {
         patient: rng.range(0, 1 << 20),
         modality: [Modality::Ecg, Modality::Vitals, Modality::Labs][rng.range(0, 3)],
         sim_time: rng.range_f64(0.0, 1e6),
-        // arbitrary finite f32 bit patterns, not just round numbers
-        values: (0..rng.range(0, 40))
-            .map(|_| {
-                let v = (rng.range_f64(-1e6, 1e6)) as f32;
-                if v.is_finite() { v } else { 0.0 }
-            })
-            .collect(),
+        // arbitrary finite f32 bit patterns, not just round numbers,
+        // up to the inline-buffer capacity (the wire cap)
+        values: random_values(rng, holmes::ingest::MAX_WIRE_VALUES),
     }
 }
 

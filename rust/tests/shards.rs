@@ -1,0 +1,169 @@
+//! Shard-invariance tests: the sharded aggregation front-end and the
+//! collector-less completion path must be pure plumbing — the SAME
+//! frame trace must produce bit-for-bit identical ensemble predictions
+//! (and identical `window_id`s per patient) no matter how many
+//! aggregation shards carry it, and no matter which thread completes
+//! each slot.
+//!
+//! The analytic reference below applies the pre-refactor completion
+//! rule exactly: member scores summed in model-index order, then the
+//! bagging mean. The old collector thread applied reports in arrival
+//! order but summed cells in that same fixed order at completion, so
+//! matching the reference bit for bit proves the collector-less plane
+//! (where ANY batcher thread may run the finish) preserves the
+//! pre-refactor completion semantics.
+
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc};
+
+use holmes::ingest::{Frame, Modality};
+use holmes::runtime::backend::sim_score;
+use holmes::runtime::{Engine, SimBackend};
+use holmes::serving::pipeline::{Pipeline, PipelineConfig, Query};
+use holmes::serving::shards::{ShardConfig, ShardRouter};
+use holmes::zoo::{testkit, Selector, Zoo};
+
+const CLIP: usize = 400;
+const PATIENTS: usize = 6;
+const WINDOWS: usize = 2;
+const MEMBERS: [usize; 3] = [0, 1, 2]; // one per lead, model-index order
+
+fn toy() -> Zoo {
+    testkit::toy_zoo_with(9, 64, 5, CLIP, &[1, 8])
+}
+
+/// Deterministic, pairwise-distinct ECG sample for (patient, lead, i).
+fn lead_sample(patient: usize, lead: usize, i: usize) -> f32 {
+    ((patient * 31 + lead * 7 + i) as f32 * 0.01).sin()
+}
+
+/// The full frame trace, interleaved round-robin across patients so
+/// every shard count splits it differently — per-patient order (the
+/// only order that matters) is identical regardless.
+fn trace() -> Vec<Frame> {
+    let mut frames = Vec::with_capacity(CLIP * WINDOWS * PATIENTS);
+    for i in 0..CLIP * WINDOWS {
+        for p in 0..PATIENTS {
+            frames.push(Frame {
+                patient: p,
+                modality: Modality::Ecg,
+                sim_time: i as f64 / 250.0,
+                values: [
+                    lead_sample(p, 0, i),
+                    lead_sample(p, 1, i),
+                    lead_sample(p, 2, i),
+                ]
+                .into(),
+            });
+        }
+    }
+    frames
+}
+
+/// Drive the trace through an `n_shards` aggregation plane into a fresh
+/// pipeline; returns (patient, window_id) → prediction score bits.
+fn run_trace(n_shards: usize) -> HashMap<(usize, u64), u64> {
+    let zoo = toy();
+    let engine = Engine::with_backend(&zoo, 2, Arc::new(SimBackend::instant(&zoo))).unwrap();
+    let ensemble = Selector::from_indices(zoo.n(), MEMBERS);
+    let pipeline = Pipeline::spawn(&zoo, &engine, PipelineConfig::new(ensemble)).unwrap();
+    let telemetry = Arc::clone(pipeline.telemetry());
+
+    let (pred_tx, pred_rx) = mpsc::channel::<(usize, u64, u64)>();
+    let (router, tx) = ShardRouter::spawn(
+        ShardConfig { shards: n_shards, ..ShardConfig::default() },
+        CLIP,
+        Arc::clone(&telemetry),
+        |_shard| {
+            let pipeline = pipeline.clone();
+            let pred_tx = pred_tx.clone();
+            move |window| {
+                let q = Query::from_window(window);
+                let (patient, window_id) = (q.patient, q.window_id);
+                let rx = pipeline.submit(q).expect("pipeline alive");
+                let pred_tx = pred_tx.clone();
+                std::thread::spawn(move || {
+                    let p = rx.recv().expect("every window predicts");
+                    let _ = pred_tx.send((patient, window_id, p.score.to_bits()));
+                });
+            }
+        },
+    )
+    .unwrap();
+    drop(pred_tx);
+
+    for frame in trace() {
+        tx.send(frame).unwrap();
+    }
+    drop(tx);
+    let dropped = router.join().unwrap();
+    assert_eq!(dropped.iter().sum::<u64>(), 0, "clean trace must drop nothing");
+    drop(pipeline);
+
+    let mut out = HashMap::new();
+    for (patient, window_id, bits) in pred_rx {
+        let prev = out.insert((patient, window_id), bits);
+        assert!(prev.is_none(), "duplicate prediction for patient {patient} window {window_id}");
+    }
+    out
+}
+
+/// Pre-refactor completion rule: member scores summed in model-index
+/// order, then the bagging mean — computed analytically per window.
+fn reference() -> HashMap<(usize, u64), u64> {
+    let zoo = toy();
+    let mut out = HashMap::new();
+    for p in 0..PATIENTS {
+        for w in 0..WINDOWS {
+            let leads: Vec<Vec<f32>> = (0..3)
+                .map(|l| (w * CLIP..(w + 1) * CLIP).map(|i| lead_sample(p, l, i)).collect())
+                .collect();
+            let sum: f64 = MEMBERS
+                .iter()
+                .map(|&m| sim_score(m, &leads[zoo.model(m).lead]) as f64)
+                .sum();
+            out.insert((p, w as u64), (sum / MEMBERS.len() as f64).to_bits());
+        }
+    }
+    out
+}
+
+#[test]
+fn predictions_are_bit_identical_across_1_2_and_8_shards() {
+    let want = reference();
+    for n_shards in [1usize, 2, 8] {
+        let got = run_trace(n_shards);
+        assert_eq!(
+            got.len(),
+            PATIENTS * WINDOWS,
+            "{n_shards} shards: every (patient, window) must predict exactly once"
+        );
+        for (&(p, w), &bits) in &want {
+            let g = got.get(&(p, w)).unwrap_or_else(|| {
+                panic!("{n_shards} shards: missing prediction for patient {p} window {w}")
+            });
+            assert_eq!(
+                *g,
+                bits,
+                "{n_shards} shards: patient {p} window {w}: {} != reference {}",
+                f64::from_bits(*g),
+                f64::from_bits(bits)
+            );
+        }
+    }
+}
+
+#[test]
+fn window_ids_are_contiguous_per_patient_for_any_shard_count() {
+    for n_shards in [1usize, 3] {
+        let got = run_trace(n_shards);
+        for p in 0..PATIENTS {
+            for w in 0..WINDOWS as u64 {
+                assert!(
+                    got.contains_key(&(p, w)),
+                    "{n_shards} shards: patient {p} must emit window_id {w}"
+                );
+            }
+        }
+    }
+}

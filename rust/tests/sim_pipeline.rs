@@ -39,7 +39,7 @@ fn window(patient: usize, w: u64) -> [Vec<f32>; 3] {
     leads
 }
 
-/// Mirror of the collector's bagging rule: member scores summed in
+/// Mirror of the completion bagging rule: member scores summed in
 /// model-index order, then the mean.
 fn expected_score(members: &[usize], zoo: &Zoo, leads: &[Vec<f32>; 3]) -> f64 {
     let sum: f64 = members
@@ -155,9 +155,9 @@ fn failing_member_evicts_queries_instead_of_leaking() {
             "query {w} should be evicted"
         );
     }
-    // eviction is triggered by the collector; all replies have hung up,
-    // so the entries are gone — and each evicted query counts once even
-    // though healthy members also reported scores for it
+    // eviction is triggered by the failing batcher's Completer; all
+    // replies have hung up, so the entries are gone — and each evicted
+    // query counts once even though healthy members also scored it
     assert_eq!(pipeline.pending_len(), 0, "evicted queries must not leak");
     assert_eq!(pipeline.telemetry().snapshot().failures, 8);
     assert_eq!(pipeline.telemetry().snapshot().queries, 0);
