@@ -12,7 +12,7 @@
 //! is exercisable anywhere (CI smoke runs use exactly this).
 //!
 //! ```bash
-//! cargo run --release --example bedside_sim [patients] [speedup] [duration_s]
+//! cargo run --release --example bedside_sim [patients] [speedup] [duration_s] [workers]
 //! ```
 
 use holmes::exp::bedside::{run_bedside, BedsideConfig};
@@ -24,6 +24,8 @@ fn main() -> holmes::Result<()> {
     let speedup: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8.0);
     // enough simulated time for several windows per patient
     let duration_s: f64 = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(16.0);
+    // executor pool threads (0 = core-count default)
+    let workers: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(0);
     let zoo = match Zoo::load("artifacts") {
         Ok(zoo) => zoo,
         Err(_) => {
@@ -42,6 +44,7 @@ fn main() -> holmes::Result<()> {
             http_addr: None,
             seed: 42,
             shards: 0,
+            workers,
         },
     )?;
     // the paper's claim: sub-second p95 at 64 beds

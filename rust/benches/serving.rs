@@ -21,10 +21,20 @@
 //! * `admission/insert_remove/8-threads` — lock-free pending slot
 //!   arena vs the mutex-striped table (`legacy_admission/...`) under
 //!   8-thread insert+score+remove contention.
-//! * `complete/direct-vs-collector` — batcher threads completing slots
+//! * `complete/direct-vs-collector` — worker threads completing slots
 //!   directly through `Completer` (inline finish) vs funneling every
 //!   member report through one MPSC channel into a single collector
 //!   thread (`legacy_complete/...`).
+//! * `execute/steal-vs-thread-per-model/{1,4,16}-models` — the
+//!   work-stealing executor (fixed 4-worker pool, lock-free lanes,
+//!   inline `DirectWorker` execution) vs one OS thread per model
+//!   looping recv → pack → `execute_batch` through the engine FIFO
+//!   (`legacy_execute/...`), identical query load per model count. The
+//!   16-model case is the headline: 4 threads instead of 16.
+//! * `aggregate/pooled-vs-alloc` — window aggregation into recycled
+//!   per-shard slab buffers (`LeadPool` leases, dropped → reused) vs
+//!   the old emit path allocating fresh `Vec` + `Arc<[f32]>` per lead
+//!   per window (`legacy_aggregate/pooled-vs-alloc`).
 //! * `pack/batch8` — chunked copy into the persistent 64-byte-aligned
 //!   arena vs a fresh `vec![0.0; n]` per flush (`legacy_pack/...`).
 //!
@@ -44,7 +54,9 @@ use holmes::ingest::{Frame, Modality};
 use holmes::json::Value;
 use holmes::runtime::{AlignedBatch, Engine, SimBackend};
 use holmes::serving::aggregator::{WindowAggregator, WindowData};
-use holmes::serving::batcher::BatchPolicy;
+use holmes::serving::arena::{LeadPool, WindowLease};
+use holmes::serving::batcher::{BatchItem, BatchPolicy};
+use holmes::serving::executor::Executor;
 use holmes::serving::pipeline::{
     Completer, PendingMeta, PendingSlots, Pipeline, PipelineConfig, Query,
 };
@@ -117,6 +129,14 @@ fn main() {
     // ---- layer 2b: completion — direct inline finish on the scoring
     // thread vs one collector thread draining an MPSC fan-in
     bench_direct_vs_collector(&mut b);
+
+    // ---- layer 2c: execution — work-stealing worker pool vs one OS
+    // thread per model, 1/4/16-model ensembles at a fixed pool size
+    bench_steal_vs_thread_per_model(&mut b);
+
+    // ---- layer 0b: window arenas — pooled slab buffers vs a fresh
+    // Vec + Arc allocation per emitted lead window
+    bench_pooled_vs_alloc(&mut b);
 
     // ---- layer 3: batch packing — persistent aligned arena (chunked
     // copy) vs a fresh padded allocation per flush
@@ -485,6 +505,154 @@ fn bench_direct_vs_collector(b: &mut Bencher) {
     collector.join().expect("collector join");
 }
 
+/// Execution-layer bench shape: one round submits [`EXE_QUERIES`]
+/// ensemble queries (each fanning to every member) and waits for all
+/// predictions. Both planes share the lock-free pending arena and
+/// direct `Completer` completion — what differs is purely the execution
+/// layer: a fixed [`EXE_WORKERS`]-thread work-stealing pool running
+/// models inline vs one OS thread per model blocking on the engine's
+/// job FIFO. At 16 models the legacy plane runs 16 threads (plus the
+/// engine pool); the executor still runs 4.
+const EXE_WORKERS: usize = 4;
+const EXE_QUERIES: usize = 128;
+const EXE_CLIP: usize = 400;
+const EXE_MODEL_COUNTS: [usize; 3] = [1, 4, 16];
+
+fn exe_round<F: FnMut(usize, BatchItem)>(
+    pending: &PendingSlots,
+    leads: &[WindowLease; 3],
+    lane_leads: &[usize],
+    next_id: &mut u64,
+    mut push: F,
+) -> f64 {
+    let m = lane_leads.len();
+    let mut replies = Vec::with_capacity(EXE_QUERIES);
+    for _ in 0..EXE_QUERIES {
+        let id = *next_id;
+        *next_id += 1;
+        let (tx, rx) = mpsc::sync_channel(1);
+        pending.insert(
+            id,
+            PendingMeta {
+                patient: 0,
+                window_id: id,
+                sim_end: 0.0,
+                emitted: Instant::now(),
+                reply: Some(tx),
+            },
+        );
+        for pos in 0..m {
+            push(
+                pos,
+                BatchItem {
+                    query_id: id,
+                    input: leads[lane_leads[pos]].clone(),
+                    enqueued: Instant::now(),
+                },
+            );
+        }
+        replies.push(rx);
+    }
+    let mut acc = 0.0;
+    for rx in replies {
+        acc += rx.recv().expect("every query predicts").score;
+    }
+    acc
+}
+
+fn bench_steal_vs_thread_per_model(b: &mut Bencher) {
+    // fixed paper-shaped toy zoo (the executor bench must not depend on
+    // which artifacts are on disk): 16 models over 3 leads
+    let zoo = testkit::toy_zoo_with(16, 16, 7, EXE_CLIP, &[1, 8]);
+    let engine =
+        Engine::with_backend(&zoo, 2, Arc::new(SimBackend::instant(&zoo))).expect("engine");
+    let policy = BatchPolicy { max_batch: 8, timeout: Duration::ZERO };
+    let leads: [WindowLease; 3] = [
+        WindowLease::from_vec((0..EXE_CLIP).map(|i| (i as f32 * 0.01).sin()).collect()),
+        WindowLease::from_vec((0..EXE_CLIP).map(|i| (i as f32 * 0.02).cos()).collect()),
+        WindowLease::from_vec((0..EXE_CLIP).map(|i| (i as f32 * 0.03).sin()).collect()),
+    ];
+    for m in EXE_MODEL_COUNTS {
+        let lane_leads: Vec<usize> = (0..m).map(|i| zoo.model(i).lead).collect();
+
+        // work-stealing pool, driven through the executor's lane API
+        let pending = Arc::new(PendingSlots::new(m));
+        let telemetry = Arc::new(Telemetry::default());
+        let members: Vec<(usize, Completer)> = (0..m)
+            .map(|pos| {
+                (pos, Completer::new(Arc::clone(&pending), Arc::clone(&telemetry), pos))
+            })
+            .collect();
+        let (exec, lanes) =
+            Executor::spawn(&engine, members, policy, EXE_WORKERS).expect("executor");
+        let mut next_id = 0u64;
+        b.bench(&format!("execute/steal-vs-thread-per-model/{m}-models"), || {
+            black_box(exe_round(&pending, &leads, &lane_leads, &mut next_id, |pos, item| {
+                lanes.push(pos, item).expect("lane alive")
+            }))
+        });
+        drop(lanes);
+        drop(exec);
+
+        // thread-per-model replica: the pre-refactor execution layer
+        let pending = Arc::new(PendingSlots::new(m));
+        let telemetry = Arc::new(Telemetry::default());
+        let plane = legacy::ThreadPerModel::spawn(&engine, &pending, &telemetry, m, policy);
+        let mut next_id = 0u64;
+        b.bench(&format!("legacy_execute/steal-vs-thread-per-model/{m}-models"), || {
+            black_box(exe_round(&pending, &leads, &lane_leads, &mut next_id, |pos, item| {
+                plane.push(pos, item)
+            }))
+        });
+        plane.shutdown();
+    }
+}
+
+/// Window-arena bench shape: one round streams [`ARENA_ROUND_WINDOWS`]
+/// full ECG windows through one aggregator; the sink drops each window
+/// immediately (as the executor does once a batch is packed), so the
+/// pooled plane recycles its three lead buffers every window while the
+/// legacy replica pays `Vec` + `Arc<[f32]>` allocations and a full copy
+/// per lead per window.
+const ARENA_WINDOW: usize = 2500; // the paper's 10 s × 250 Hz clip
+const ARENA_ROUND_WINDOWS: usize = 4;
+
+fn arena_frame(i: usize) -> Frame {
+    Frame {
+        patient: 0,
+        modality: Modality::Ecg,
+        sim_time: i as f64 / 250.0,
+        values: [0.21, -0.08, 0.12].into(),
+    }
+}
+
+fn bench_pooled_vs_alloc(b: &mut Bencher) {
+    let pool = LeadPool::new(ARENA_WINDOW);
+    let mut agg = WindowAggregator::with_pool(0, ARENA_WINDOW, pool);
+    b.bench("aggregate/pooled-vs-alloc", || {
+        let mut emitted = 0usize;
+        for i in 0..ARENA_WINDOW * ARENA_ROUND_WINDOWS {
+            if let Some(w) = agg.push(&arena_frame(i)) {
+                black_box(w.leads[2][ARENA_WINDOW - 1]);
+                emitted += 1; // dropping `w` returns the buffers
+            }
+        }
+        black_box(emitted)
+    });
+
+    let mut lagg = legacy::AllocAggregator::new(ARENA_WINDOW);
+    b.bench("legacy_aggregate/pooled-vs-alloc", || {
+        let mut emitted = 0usize;
+        for i in 0..ARENA_WINDOW * ARENA_ROUND_WINDOWS {
+            if let Some(leads) = lagg.push(&arena_frame(i)) {
+                black_box(leads[2][ARENA_WINDOW - 1]);
+                emitted += 1;
+            }
+        }
+        black_box(emitted)
+    });
+}
+
 /// The same round on the in-bench mutex-striped replica.
 fn admission_round_striped(table: &legacy::StripedPending) {
     std::thread::scope(|s| {
@@ -533,9 +701,10 @@ fn write_bench_json(results: &[BenchResult], quick: bool, backend: &str) {
             "note",
             Value::Str(
                 "medians of the lock-free zero-copy data plane vs the in-bench legacy \
-                 replica, per layer (sharded aggregation fan-in, ingest decode, \
-                 pending-table admission, direct vs collector completion, batch \
-                 packing) and end to end; regenerate with \
+                 replica, per layer (sharded aggregation fan-in, pooled window \
+                 arenas, ingest decode, pending-table admission, direct vs \
+                 collector completion, work-stealing executor vs thread-per-model, \
+                 batch packing) and end to end; regenerate with \
                  `cargo bench --bench serving -- --quick`"
                     .into(),
             ),
@@ -563,9 +732,184 @@ mod legacy {
     use std::sync::{mpsc, Arc, Mutex};
     use std::time::Instant;
 
-    use holmes::runtime::Engine;
-    use holmes::serving::batcher::BatchPolicy;
+    use holmes::runtime::{AlignedBatch, Engine};
+    use holmes::serving::batcher::{BatchItem, BatchPolicy};
+    use holmes::serving::pipeline::{Completer, PendingSlots};
+    use holmes::serving::Telemetry;
     use holmes::zoo::{Selector, Zoo};
+
+    /// Replica of the pre-refactor **execution layer**: one OS thread
+    /// per ensemble member looping recv → fill → pack → blocking
+    /// `Engine::execute_batch` through the engine's job FIFO, completing
+    /// directly through its `Completer` (completion was already direct
+    /// before this PR — only the threading model is under test).
+    pub struct ThreadPerModel {
+        txs: Vec<mpsc::Sender<BatchItem>>,
+        threads: Vec<std::thread::JoinHandle<()>>,
+    }
+
+    impl ThreadPerModel {
+        pub fn spawn(
+            engine: &Engine,
+            pending: &Arc<PendingSlots>,
+            telemetry: &Arc<Telemetry>,
+            n_models: usize,
+            policy: BatchPolicy,
+        ) -> Self {
+            let mut txs = Vec::with_capacity(n_models);
+            let mut threads = Vec::with_capacity(n_models);
+            for pos in 0..n_models {
+                let (tx, rx) = mpsc::channel::<BatchItem>();
+                let done = Completer::new(Arc::clone(pending), Arc::clone(telemetry), pos);
+                let engine = engine.clone();
+                threads.push(std::thread::spawn(move || {
+                    actor_batch_loop(pos, engine, rx, done, policy)
+                }));
+                txs.push(tx);
+            }
+            ThreadPerModel { txs, threads }
+        }
+
+        pub fn push(&self, pos: usize, item: BatchItem) {
+            self.txs[pos].send(item).expect("model actor alive");
+        }
+
+        pub fn shutdown(self) {
+            drop(self.txs);
+            for t in self.threads {
+                let _ = t.join();
+            }
+        }
+    }
+
+    /// The pre-refactor per-model actor loop, verbatim in shape:
+    /// blocking first recv, fast drain, one bounded straggler wait,
+    /// flush through the engine FIFO.
+    fn actor_batch_loop(
+        model_index: usize,
+        engine: Engine,
+        rx: mpsc::Receiver<BatchItem>,
+        done: Completer,
+        policy: BatchPolicy,
+    ) {
+        let clip_len = engine.clip_len();
+        let max_take = policy
+            .max_batch
+            .min(engine.batch_sizes().iter().copied().max().unwrap_or(1))
+            .max(1);
+        let mut pending: Vec<BatchItem> = Vec::with_capacity(max_take);
+        let mut buf = AlignedBatch::new();
+        loop {
+            if pending.is_empty() {
+                match rx.recv() {
+                    Ok(item) => pending.push(item),
+                    Err(_) => break,
+                }
+            }
+            let mut closed = false;
+            while pending.len() < max_take {
+                match rx.try_recv() {
+                    Ok(item) => pending.push(item),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        closed = true;
+                        break;
+                    }
+                }
+            }
+            if !closed && pending.len() < max_take && !policy.timeout.is_zero() {
+                if let Ok(item) = rx.recv_timeout(policy.timeout) {
+                    pending.push(item);
+                }
+            }
+            actor_flush(model_index, &engine, clip_len, &mut pending, &mut buf, &done, max_take);
+            if closed && pending.is_empty() {
+                break;
+            }
+        }
+        while !pending.is_empty() {
+            actor_flush(model_index, &engine, clip_len, &mut pending, &mut buf, &done, max_take);
+        }
+    }
+
+    fn actor_flush(
+        model_index: usize,
+        engine: &Engine,
+        clip_len: usize,
+        pending: &mut Vec<BatchItem>,
+        buf: &mut AlignedBatch,
+        done: &Completer,
+        max_take: usize,
+    ) {
+        if pending.is_empty() {
+            return;
+        }
+        let take = pending.len().min(max_take);
+        let batch = engine.batch_for(take);
+        buf.reset(batch * clip_len);
+        for (slot, item) in pending[..take].iter().enumerate() {
+            buf.pack_slot(slot, clip_len, &item.input);
+        }
+        let started = Instant::now();
+        match engine.execute_batch((model_index, batch), buf) {
+            Ok(result) => {
+                for (slot, item) in pending.drain(..take).enumerate() {
+                    done.score(
+                        item.query_id,
+                        result.scores[slot],
+                        started.duration_since(item.enqueued),
+                        result.exec_time,
+                    );
+                }
+            }
+            Err(_) => {
+                for item in pending.drain(..take) {
+                    done.fail(item.query_id);
+                }
+            }
+        }
+    }
+
+    /// Replica of the pre-refactor aggregator **emit path**: collect
+    /// into `Vec`s, move each into a fresh `Arc<[f32]>` per window
+    /// (alloc + full copy), re-grow the vecs — the per-window churn the
+    /// pooled slab removes.
+    pub struct AllocAggregator {
+        window: usize,
+        leads: [Vec<f32>; 3],
+    }
+
+    impl AllocAggregator {
+        pub fn new(window: usize) -> Self {
+            AllocAggregator {
+                window,
+                leads: [
+                    Vec::with_capacity(window),
+                    Vec::with_capacity(window),
+                    Vec::with_capacity(window),
+                ],
+            }
+        }
+
+        pub fn push(&mut self, frame: &holmes::ingest::Frame) -> Option<[Arc<[f32]>; 3]> {
+            for (lead, &v) in self.leads.iter_mut().zip(frame.values.iter()) {
+                lead.push(v);
+            }
+            if self.leads[0].len() >= self.window {
+                let out: [Arc<[f32]>; 3] = [
+                    Arc::from(std::mem::take(&mut self.leads[0])),
+                    Arc::from(std::mem::take(&mut self.leads[1])),
+                    Arc::from(std::mem::take(&mut self.leads[2])),
+                ];
+                for lead in self.leads.iter_mut() {
+                    lead.reserve(self.window);
+                }
+                Some(out)
+            } else {
+                None
+            }
+        }
+    }
 
     pub struct LegacyQuery {
         pub leads: [Vec<f32>; 3],

@@ -25,16 +25,17 @@ impl ClipSet {
     }
 
     /// Copy the clips into shared storage once; load generators then
-    /// build [`crate::serving::Query`]s by cloning `Arc` handles instead
-    /// of waveforms.
-    pub fn shared(&self) -> Vec<[std::sync::Arc<[f32]>; 3]> {
+    /// build [`crate::serving::Query`]s by cloning lease handles
+    /// instead of waveforms.
+    pub fn shared(&self) -> Vec<[crate::serving::WindowLease; 3]> {
+        use crate::serving::WindowLease;
         self.clips
             .iter()
             .map(|c| {
                 [
-                    std::sync::Arc::from(c[0].as_slice()),
-                    std::sync::Arc::from(c[1].as_slice()),
-                    std::sync::Arc::from(c[2].as_slice()),
+                    WindowLease::from_vec(c[0].clone()),
+                    WindowLease::from_vec(c[1].clone()),
+                    WindowLease::from_vec(c[2].clone()),
                 ]
             })
             .collect()

@@ -42,6 +42,10 @@ pub struct BedsideConfig {
     /// Aggregation shards; 0 = core-count heuristic
     /// ([`crate::serving::default_shards`]).
     pub shards: usize,
+    /// Executor pool threads; 0 = core-count default
+    /// ([`crate::serving::default_workers`]). Independent of the
+    /// ensemble size — the point of the work-stealing executor.
+    pub workers: usize,
 }
 
 impl Default for BedsideConfig {
@@ -55,6 +59,7 @@ impl Default for BedsideConfig {
             http_addr: None,
             seed: 42,
             shards: 0,
+            workers: 0,
         }
     }
 }
@@ -68,6 +73,9 @@ pub struct BedsideReport {
     pub frames_dropped: u64,
     /// Per-shard breakdown of `frames_dropped`.
     pub dropped_per_shard: Vec<u64>,
+    /// Device batches executed by each executor pool worker — a skewed
+    /// vector means the work-stealing pool was imbalanced.
+    pub batches_per_worker: Vec<u64>,
     pub e2e_p50: f64,
     pub e2e_p95: f64,
     pub e2e_p99: f64,
@@ -80,9 +88,12 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
     let ensemble = super::fig10_scalability::holmes_servable_ensemble(zoo, 0.2);
     let n_shards =
         if cfg.shards == 0 { crate::serving::default_shards() } else { cfg.shards };
+    let n_workers =
+        if cfg.workers == 0 { crate::serving::default_workers() } else { cfg.workers };
     println!(
-        "bedside sim: {} patients, {} gpus, {} aggregation shards, ΔT={}s, speedup {}×, {}s sim",
-        cfg.patients, cfg.gpus, n_shards, cfg.window_s, cfg.speedup, cfg.duration_s
+        "bedside sim: {} patients, {} gpus, {} aggregation shards, {} executor workers, \
+         ΔT={}s, speedup {}×, {}s sim",
+        cfg.patients, cfg.gpus, n_shards, n_workers, cfg.window_s, cfg.speedup, cfg.duration_s
     );
     println!(
         "ensemble ({} models): {:?}",
@@ -101,7 +112,11 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
     let synth_cfg = SynthConfig::from(&zoo.manifest.calibration);
     let t_start = Instant::now();
 
-    let pipeline = Pipeline::spawn(zoo, &engine, PipelineConfig::new(ensemble.clone()))?;
+    let pipeline = Pipeline::spawn(
+        zoo,
+        &engine,
+        PipelineConfig::new(ensemble.clone()).with_workers(n_workers),
+    )?;
     let telemetry = Arc::clone(pipeline.telemetry());
 
     // sharded aggregation front-end: each shard owns its patients'
@@ -229,11 +244,16 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
         scores_v.push(*score);
     }
     let auc = roc_auc(&labels_v, &scores_v);
+    let batches_per_worker = telemetry
+        .executor()
+        .map(|g| g.worker_batches())
+        .unwrap_or_default();
     let report = BedsideReport {
         predictions: pred_rows.len(),
         frames,
         frames_dropped,
         dropped_per_shard,
+        batches_per_worker,
         e2e_p50: telemetry.e2e.percentile(50.0),
         e2e_p95: telemetry.e2e.percentile(95.0),
         e2e_p99: telemetry.e2e.percentile(99.0),
@@ -249,6 +269,14 @@ fn print_report(r: &BedsideReport, telemetry: &Telemetry) {
     println!("frames ingested      {:>12}", r.frames);
     println!("frames dropped       {:>12}  (per shard: {:?})", r.frames_dropped, r.dropped_per_shard);
     println!("ensemble predictions {:>12}", r.predictions);
+    println!(
+        "executor batches     {:>12}  (per worker: {:?})",
+        r.batches_per_worker.iter().sum::<u64>(),
+        r.batches_per_worker
+    );
+    if let Some(g) = telemetry.executor() {
+        println!("model queue depths   {:>12?}  (end of run)", g.queue_depths());
+    }
     println!("e2e latency p50      {:>11.4}s", r.e2e_p50);
     println!("e2e latency p95      {:>11.4}s", r.e2e_p95);
     println!("e2e latency p99      {:>11.4}s", r.e2e_p99);

@@ -9,15 +9,18 @@
 //!   [`surrogate`] random-forest models) + genetic exploration (Algorithms
 //!   1 & 2) navigating the accuracy/latency trade-off (Eq. 1–3), plus the
 //!   paper's RD / AF / LF / NPO baselines.
-//! * [`serving`] — the real-time serving system: an actor pipeline
-//!   (stateful data aggregators + stateless model actors, the paper's Ray
-//!   substrate) over a zero-copy, lock-free, fan-in-free data plane —
-//!   patients sharded over N aggregation workers, `Arc<[f32]>` lead
-//!   windows shared across ensemble members, a generation-tagged
-//!   pending slot arena updated purely with atomics with collector-less
-//!   direct completion, allocation-free inline frame payloads,
+//! * [`serving`] — the real-time serving system: stateful data
+//!   aggregators + a stateless work-stealing model executor (the
+//!   paper's Ray substrate, with the actor-per-model layer replaced by
+//!   a fixed `--workers` pool) over a zero-copy, lock-free, fan-in-free
+//!   data plane — patients sharded over N aggregation workers, pooled
+//!   `WindowLease` lead windows recycled through per-shard slabs and
+//!   shared across ensemble members, a generation-tagged pending slot
+//!   arena updated purely with atomics with collector-less direct
+//!   completion, allocation-free inline frame payloads, per-worker
 //!   persistent 64-byte-aligned batch arenas, binary HTTP ingest
-//!   framing — executing zoo models through the [`runtime`] engine,
+//!   framing — executing zoo models inline through the [`runtime`]
+//!   engine's `DirectWorker` handles under GPU-count device permits,
 //!   with [`netcalc`]-based queueing-latency estimation (Fig. 5).
 //!
 //! ## Execution backend feature matrix

@@ -38,6 +38,7 @@ COMMANDS:
       --duration SECS        simulated duration              [120]
       --http ADDR            also open an HTTP ingest server
       --shards N             aggregation shards (0 = auto)   [0]
+      --workers N            executor pool threads (0 = auto) [0]
   profile                  measured latency profile (μ, T_s, T_q) of an ensemble
       --models id1,id2,...   zoo model ids (default: HOLMES servable pick)
       --gpus N --patients N                                  [2, 64]
@@ -64,7 +65,7 @@ fn run(argv: &[String]) -> Result<()> {
         argv,
         &[
             "artifacts", "budget", "gpus", "patients", "seed", "window", "speedup", "duration",
-            "http", "models", "out", "shards",
+            "http", "models", "out", "shards", "workers",
         ],
     )?;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -143,6 +144,7 @@ fn run(argv: &[String]) -> Result<()> {
                     http_addr: args.get("http").map(String::from),
                     seed: args.u64_or("seed", 42)?,
                     shards: args.usize_or("shards", 0)?,
+                    workers: args.usize_or("workers", 0)?,
                 },
             )?;
         }

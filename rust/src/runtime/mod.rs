@@ -1,13 +1,18 @@
-//! Execution engine: a device-worker pool over a pluggable
-//! [`ExecBackend`].
+//! Execution engine: a shareable execution handle over a pluggable
+//! [`ExecBackend`], with two ways to run a job.
 //!
-//! The engine owns the job FIFO, the worker threads and the stats; the
-//! backend supplies per-worker execution state. Workers pull jobs from
-//! a shared FIFO — exactly the "number of GPUs" resource model of the
-//! paper's system configuration `c`: `workers = 1` reproduces the 1-GPU
-//! contention column of Fig. 10, and so on. Job replies travel over
-//! rendezvous channels, so any pipeline thread (batcher actors,
-//! profilers, benches) can submit and wait.
+//! * **FIFO pool** (profilers, figure drivers, `submit`-style callers):
+//!   the engine owns `n_workers` device threads pulling from a shared
+//!   job queue; replies travel over rendezvous channels.
+//! * **Inline handles** ([`Engine::direct_worker`] — the serving hot
+//!   path): an executor pool thread owns its own backend worker state
+//!   and runs jobs on itself, no job channel and no reply rendezvous.
+//!   Device parallelism stays bounded by the same resource model: every
+//!   inline execution holds one of `n_workers` **device permits** while
+//!   it runs, so `n_workers` is still exactly the "number of GPUs" of
+//!   the paper's system configuration `c` (`workers = 1` reproduces the
+//!   1-GPU contention column of Fig. 10) no matter how many threads the
+//!   serving executor spins.
 //!
 //! Backends:
 //!
@@ -103,6 +108,13 @@ struct EngineInner {
     tx: Mutex<Option<mpsc::Sender<Job>>>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     n_workers: usize,
+    /// Backend factory, retained so inline [`DirectWorker`] handles can
+    /// be minted after construction (the FIFO workers hold clones too).
+    backend: Arc<dyn ExecBackend>,
+    /// Device permits for inline execution: at most `n_workers` inline
+    /// jobs run concurrently, preserving the GPU-count resource model
+    /// independently of the serving executor's thread count.
+    device: Semaphore,
     backend_name: &'static str,
     /// Servable (model, batch) keys per the zoo manifest.
     model_keys: HashSet<ModelKey>,
@@ -172,6 +184,8 @@ impl Engine {
                 tx: Mutex::new(Some(tx)),
                 workers: Mutex::new(workers),
                 n_workers,
+                backend,
+                device: Semaphore::new(n_workers),
                 backend_name,
                 model_keys,
                 clip_len,
@@ -278,6 +292,24 @@ impl Engine {
         self.send_job(key, AlignedBatch::from_slice(&input), false)
     }
 
+    /// Mint an inline execution handle for (executor-pool) worker
+    /// `wid`: the calling thread owns the backend state and runs jobs
+    /// on itself under the engine's device permits — the serving hot
+    /// path, with no job channel and no reply rendezvous.
+    ///
+    /// Known cost: backend worker state is **per handle**, so a pool of
+    /// N threads on the PJRT backend holds N clients/executable caches
+    /// while only `n_workers` permits ever execute at once (free on the
+    /// sim backend, whose worker state is a few hundred bytes). Sharing
+    /// compiled executables across inline handles is a ROADMAP item.
+    pub fn direct_worker(&self, wid: usize) -> Result<DirectWorker> {
+        Ok(DirectWorker {
+            worker: self.inner.backend.worker(wid)?,
+            engine: self.clone(),
+            wid,
+        })
+    }
+
     /// Measure single-job service time for (model, batch): median of
     /// `reps` back-to-back executions with synthetic input (plus one
     /// discarded warm-up that triggers compilation).
@@ -292,6 +324,79 @@ impl Engine {
         }
         times.sort();
         Ok(times[times.len() / 2])
+    }
+}
+
+/// Counting semaphore bounding concurrent *inline* executions to the
+/// engine's device count (std has none; this one is ~20 lines and only
+/// sits on the execute path, where a job is orders of magnitude more
+/// work than an uncontended lock).
+struct Semaphore {
+    permits: Mutex<usize>,
+    available: std::sync::Condvar,
+}
+
+impl Semaphore {
+    fn new(permits: usize) -> Self {
+        Semaphore { permits: Mutex::new(permits), available: std::sync::Condvar::new() }
+    }
+
+    fn acquire(&self) -> SemaphoreGuard<'_> {
+        let mut n = self.permits.lock().expect("device permits poisoned");
+        while *n == 0 {
+            n = self.available.wait(n).expect("device permits poisoned");
+        }
+        *n -= 1;
+        SemaphoreGuard(self)
+    }
+}
+
+struct SemaphoreGuard<'a>(&'a Semaphore);
+
+impl Drop for SemaphoreGuard<'_> {
+    fn drop(&mut self) {
+        *self.0.permits.lock().expect("device permits poisoned") += 1;
+        self.0.available.notify_one();
+    }
+}
+
+/// Thread-owned inline execution handle (see [`Engine::direct_worker`]):
+/// backend worker state living on the calling thread, validated and
+/// accounted through the shared engine, throttled by its device
+/// permits. Created once per serving-executor worker; `!Sync` backend
+/// state (e.g. a PJRT client) never leaves the owning thread.
+pub struct DirectWorker {
+    worker: Box<dyn ExecWorker>,
+    engine: Engine,
+    wid: usize,
+}
+
+impl DirectWorker {
+    /// The shared engine this handle executes against (batch-size and
+    /// artifact queries on the flush path).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Run one job inline on the calling thread. Borrows the caller's
+    /// aligned arena — nothing moves, nothing is recycled through a
+    /// channel; the arena is reusable the moment this returns.
+    pub fn execute(&mut self, key: ModelKey, buf: &AlignedBatch) -> Result<ExecOutput> {
+        let inner = &self.engine.inner;
+        self.engine.validate(key, buf.len())?;
+        // hold a device permit for exactly the backend-run span: packing
+        // and completion on the executor threads stay unthrottled
+        let _permit = inner.device.acquire();
+        let out = self.worker.run(key, buf.as_slice(), inner.clip_len)?;
+        if out.compiled {
+            inner.stats.compile_count.fetch_add(1, Ordering::Relaxed);
+        }
+        inner.stats.jobs.fetch_add(1, Ordering::Relaxed);
+        inner
+            .stats
+            .busy_ns
+            .fetch_add(out.exec_time.as_nanos() as u64, Ordering::Relaxed);
+        Ok(ExecOutput { scores: out.scores, exec_time: out.exec_time, worker: self.wid })
     }
 }
 
@@ -431,6 +536,24 @@ mod tests {
         let clip = engine.clip_len();
         assert!(engine.execute_blocking((99, 1), vec![0.0; clip]).is_err());
         assert!(engine.execute_blocking((0, 1), vec![0.0; clip + 1]).is_err());
+    }
+
+    #[test]
+    fn direct_worker_matches_pool_path_and_counts_jobs() {
+        let (_zoo, engine) = sim_engine(1);
+        let clip = engine.clip_len();
+        let input: Vec<f32> = (0..clip).map(|i| (i as f32 * 0.1).sin()).collect();
+        let pooled = engine.execute_blocking((0, 1), input.clone()).unwrap().scores[0];
+        let mut dev = engine.direct_worker(7).unwrap();
+        let buf = AlignedBatch::from_slice(&input);
+        let inline = dev.execute((0, 1), &buf).unwrap();
+        assert_eq!(inline.scores[0].to_bits(), pooled.to_bits());
+        assert_eq!(inline.worker, 7);
+        // both paths land in the same stats
+        assert_eq!(engine.stats().jobs.load(Ordering::Relaxed), 2);
+        // validation applies inline too
+        let short = AlignedBatch::filled(clip - 1, 0.0);
+        assert!(dev.execute((0, 1), &short).is_err());
     }
 
     #[test]

@@ -4,9 +4,15 @@
 //! 250 Hz, vitals 1 Hz) and releases a synchronized ensemble query when
 //! a full observation window ΔT has been collected — so every model in
 //! the ensemble sees the *same* interval of time across sensors.
+//!
+//! Lead samples are written straight into recyclable [`LeadSlot`]
+//! buffers (per-shard [`LeadPool`] slabs when constructed through
+//! [`WindowAggregator::with_pool`]); emitting a window seals the slots
+//! into shared [`WindowLease`]s without copying a sample, and the
+//! buffers return to the pool when the last batcher drops them — the
+//! steady-state aggregation plane does no per-window buffer allocation.
 
-use std::sync::Arc;
-
+use super::arena::{LeadPool, LeadSlot, WindowLease};
 use crate::ingest::{Frame, FrameValues, Modality};
 
 /// Synchronized multi-modal window ready for the ensemble.
@@ -17,10 +23,11 @@ pub struct WindowData {
     pub window_id: u64,
     /// Simulation time of the window end.
     pub sim_end: f64,
-    /// ECG leads, `clip_len` samples each, in shared storage: the whole
-    /// serving data plane (router fan-out, batchers) borrows these
-    /// windows instead of cloning them per ensemble member.
-    pub leads: [Arc<[f32]>; 3],
+    /// ECG leads, `clip_len` samples each, as shared pooled leases: the
+    /// whole serving data plane (router fan-out, executor workers)
+    /// borrows these windows instead of cloning them per ensemble
+    /// member, and the buffers recycle on last drop.
+    pub leads: [WindowLease; 3],
     /// Mean vitals over the window (7 values; empty if none arrived).
     pub vitals: Vec<f32>,
     /// Latest labs seen (8 values; empty if none arrived).
@@ -33,7 +40,13 @@ pub struct WindowAggregator {
     patient: usize,
     /// ECG samples per emitted window (= clip_len of the zoo models).
     window_samples: usize,
-    leads: [Vec<f32>; 3],
+    /// Exclusive write-stage buffers for the window being collected.
+    leads: [LeadSlot; 3],
+    /// Samples written into each lead so far (all three fill in step).
+    fill: usize,
+    /// Where replacement buffers come from at emit time; `None` falls
+    /// back to fresh owned buffers (tests, pool-less callers).
+    pool: Option<LeadPool>,
     vitals_acc: Vec<f64>,
     vitals_count: usize,
     last_labs: FrameValues,
@@ -43,15 +56,29 @@ pub struct WindowAggregator {
 
 impl WindowAggregator {
     pub fn new(patient: usize, window_samples: usize) -> Self {
+        Self::build(patient, window_samples, None)
+    }
+
+    /// Aggregator drawing its lead buffers from a shared (per-shard)
+    /// pool instead of allocating per window.
+    pub fn with_pool(patient: usize, window_samples: usize, pool: LeadPool) -> Self {
+        assert_eq!(pool.samples(), window_samples, "pool buffer size must match the window");
+        Self::build(patient, window_samples, Some(pool))
+    }
+
+    fn build(patient: usize, window_samples: usize, pool: Option<LeadPool>) -> Self {
         assert!(window_samples > 0);
+        let mut fresh = || match &pool {
+            Some(p) => p.slot(),
+            None => LeadSlot::zeroed(window_samples),
+        };
+        let leads = [fresh(), fresh(), fresh()];
         WindowAggregator {
             patient,
             window_samples,
-            leads: [
-                Vec::with_capacity(window_samples),
-                Vec::with_capacity(window_samples),
-                Vec::with_capacity(window_samples),
-            ],
+            leads,
+            fill: 0,
+            pool,
             vitals_acc: vec![0.0; 7],
             vitals_count: 0,
             last_labs: FrameValues::new(),
@@ -66,7 +93,7 @@ impl WindowAggregator {
 
     /// Samples currently buffered toward the next window.
     pub fn fill(&self) -> usize {
-        self.leads[0].len()
+        self.fill
     }
 
     pub fn dropped(&self) -> u64 {
@@ -85,10 +112,12 @@ impl WindowAggregator {
                     self.dropped += 1;
                     return None;
                 }
+                let at = self.fill;
                 for (lead, &v) in self.leads.iter_mut().zip(frame.values.iter()) {
-                    lead.push(v);
+                    lead.as_mut_slice()[at] = v;
                 }
-                if self.leads[0].len() >= self.window_samples {
+                self.fill += 1;
+                if self.fill >= self.window_samples {
                     return Some(self.emit(frame.sim_time));
                 }
                 None
@@ -117,16 +146,19 @@ impl WindowAggregator {
     }
 
     fn emit(&mut self, sim_end: f64) -> WindowData {
-        // move each collected lead into shared storage once; downstream
-        // (router → every member's batcher) only clones the Arc handle
-        let leads: [Arc<[f32]>; 3] = [
-            Arc::from(std::mem::take(&mut self.leads[0])),
-            Arc::from(std::mem::take(&mut self.leads[1])),
-            Arc::from(std::mem::take(&mut self.leads[2])),
+        // seal each filled slot into a shared lease (no sample copy)
+        // and stage a replacement buffer — recycled from the pool when
+        // one is free, so steady state allocates nothing per window
+        let mut fresh = || match &self.pool {
+            Some(p) => p.slot(),
+            None => LeadSlot::zeroed(self.window_samples),
+        };
+        let leads: [WindowLease; 3] = [
+            std::mem::replace(&mut self.leads[0], fresh()).share(),
+            std::mem::replace(&mut self.leads[1], fresh()).share(),
+            std::mem::replace(&mut self.leads[2], fresh()).share(),
         ];
-        for lead in self.leads.iter_mut() {
-            lead.reserve(self.window_samples);
-        }
+        self.fill = 0;
         let vitals = if self.vitals_count > 0 {
             self.vitals_acc
                 .iter()
@@ -171,8 +203,8 @@ mod tests {
         }
         let w = agg.push(&ecg_frame(0, 3.0, 3.0)).expect("window due");
         assert_eq!(w.window_id, 0);
-        assert_eq!(w.leads[0].as_ref(), &[0.0, 1.0, 2.0, 3.0][..]);
-        assert_eq!(w.leads[2].as_ref(), &[2.0, 3.0, 4.0, 5.0][..]);
+        assert_eq!(&w.leads[0][..], &[0.0, 1.0, 2.0, 3.0][..]);
+        assert_eq!(&w.leads[2][..], &[2.0, 3.0, 4.0, 5.0][..]);
         assert_eq!(agg.fill(), 0, "buffer reset after emit");
     }
 
@@ -184,8 +216,25 @@ mod tests {
         let w1 = w1[1].as_ref().unwrap();
         let w2 = w2[1].as_ref().unwrap();
         assert_eq!(w1.window_id + 1, w2.window_id);
-        assert_eq!(w1.leads[0].as_ref(), &[0.0, 1.0][..]);
-        assert_eq!(w2.leads[0].as_ref(), &[2.0, 3.0][..]);
+        assert_eq!(&w1.leads[0][..], &[0.0, 1.0][..]);
+        assert_eq!(&w2.leads[0][..], &[2.0, 3.0][..]);
+    }
+
+    #[test]
+    fn pooled_windows_recycle_and_stay_correct() {
+        let pool = LeadPool::new(2);
+        let mut agg = WindowAggregator::with_pool(0, 2, pool.clone());
+        agg.push(&ecg_frame(0, 0.0, 0.0));
+        let w1 = agg.push(&ecg_frame(0, 1.0, 1.0)).unwrap();
+        assert_eq!(&w1.leads[0][..], &[0.0, 1.0][..]);
+        drop(w1); // last drop → 3 lead buffers back on the free list
+        assert_eq!(pool.free_len(), 3);
+        // the next window reuses those buffers and still reads correctly
+        agg.push(&ecg_frame(0, 2.0, 5.0));
+        let w2 = agg.push(&ecg_frame(0, 3.0, 6.0)).unwrap();
+        assert_eq!(&w2.leads[0][..], &[5.0, 6.0][..]);
+        assert_eq!(&w2.leads[1][..], &[6.0, 7.0][..]);
+        assert!(pool.reused() >= 3, "recycled buffers must be picked up");
     }
 
     #[test]

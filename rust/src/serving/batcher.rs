@@ -1,42 +1,57 @@
-//! Per-model dynamic batcher actor: coalesces queries from many patients
-//! into one device batch (up to `max_batch`, or after `timeout`), packs
-//! into a **persistent 64-byte-aligned** batch arena (reused across
-//! flushes — the only copy on the whole data plane, chunked for SIMD;
-//! see [`crate::runtime::AlignedBatch`]), executes through the engine
-//! and completes each slot **directly** through the lock-free pending
-//! arena via its [`Completer`] — there is no collector thread and no
-//! report channel; the batcher thread that records the last member's
-//! score finishes the query inline.
+//! Per-model dynamic batching: the policy knobs and the flush core the
+//! work-stealing [`executor`](super::executor) runs on whichever pool
+//! worker claims a model.
 //!
-//! One OS thread per selected model — the rust analogue of the paper's
-//! per-model Ray actor with its queue. Items carry `Arc<[f32]>` windows
-//! shared with every other member's batcher; nothing is cloned here.
+//! Historically this module was an actor: one OS thread per selected
+//! model looping recv → fill → flush (the rust analogue of the paper's
+//! per-model Ray actor). That made the data plane's thread count
+//! proportional to the *ensemble size* — oversubscribed with many
+//! models on few cores, idle with few models on many. The loop is gone;
+//! what remains is the part that was never per-thread state:
 //!
-//! Failure semantics: when an execution fails, every item of the batch
-//! is failed through [`Completer::fail`] (evicting the query from the
-//! pending arena so blocked `submit()` callers error out instead of
-//! hanging), the still-queued backlog is drained and failed the same
-//! way, and the loop exits with the original error. Determinism is
-//! unaffected by who completes a slot: member scores live in per-model
-//! cells and are summed in model-index order, so the ensemble score is
-//! bit-for-bit identical whether the last report lands on this batcher
-//! thread or any other.
+//! * [`BatchItem`] — one unit of work (a shared [`WindowLease`] window,
+//!   nothing cloned on the fan-out path);
+//! * [`BatchPolicy`] — the fill/timeout knobs, enforced per model by
+//!   the executor's lane deadlines exactly as the actor loop enforced
+//!   them with its bounded `recv_timeout`;
+//! * [`flush_batch`] — pack up to `max_take` staged items into the
+//!   worker's persistent 64-byte-aligned arena, execute **inline** on
+//!   the worker's [`DirectWorker`] handle, and resolve every dequeued
+//!   item exactly once through the model's [`Completer`] (score, or
+//!   fail → evict).
+//!
+//! Malformed items (wrong window length — impossible via `Pipeline`,
+//! which validates at the router; defensive for direct users) are
+//! weeded out with a single-pass, order-preserving `retain` that fails
+//! each bad item exactly once — the old loop did this with
+//! `Vec::remove` inside a scan, O(n²) on a pathological batch.
+//!
+//! Failure semantics are unchanged from the actor era: when an
+//! execution fails, every item of the batch is failed through
+//! [`Completer::fail`] (evicting the query so blocked `submit()`
+//! callers error out instead of hanging) and the error propagates to
+//! the executor, which marks the model's lane dead and fails its
+//! backlog. Determinism is unaffected by who flushes a batch: member
+//! scores live in per-model cells and are summed in model-index order,
+//! so the ensemble score is bit-for-bit identical whichever worker ran
+//! the model.
 
-use std::sync::{mpsc, Arc};
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
+use super::arena::WindowLease;
 use super::pipeline::Completer;
-use crate::runtime::{AlignedBatch, Engine};
+use crate::runtime::{AlignedBatch, DirectWorker, Engine};
 use crate::{Error, Result};
 
-/// One unit of work for a model actor.
+/// One unit of work for a model lane.
 #[derive(Debug)]
 pub struct BatchItem {
     pub query_id: u64,
-    /// Raw (un-normalised) window for this model's lead, shared with the
-    /// aggregator and the other members' batchers; normalisation is
+    /// Raw (un-normalised) window for this model's lead, shared with
+    /// the aggregator and the other members' lanes; normalisation is
     /// baked into the HLO graph.
-    pub input: Arc<[f32]>,
+    pub input: WindowLease,
     /// When the parent query was emitted by its aggregator.
     pub enqueued: Instant,
 }
@@ -58,169 +73,106 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Run one model's batch loop until the input channel closes. `done` is
-/// this member's direct-completion handle into the pending arena (and
-/// pipeline telemetry); every dequeued item is resolved through it
-/// exactly once — scored, or failed (which evicts the query).
-pub fn model_batch_loop(
-    model_index: usize,
-    engine: Engine,
-    rx: mpsc::Receiver<BatchItem>,
-    done: Completer,
-    policy: BatchPolicy,
-) -> Result<()> {
-    let clip_len = engine.clip_len();
-    let max_take = policy.max_batch.min(largest_batch(&engine)).max(1);
-    let mut pending: Vec<BatchItem> = Vec::with_capacity(max_take);
-    // persistent padded batch arena (64-byte-aligned): allocated once,
-    // recycled through Engine::execute_batch on every flush
-    let mut buf = AlignedBatch::new();
-    loop {
-        // fill phase: block for the first item, then wait up to `timeout`
-        // for the batch to fill
-        if pending.is_empty() {
-            match rx.recv() {
-                Ok(item) => pending.push(item),
-                Err(_) => break, // channel closed, nothing buffered
-            }
-        }
-        // fast path: drain whatever is already queued (bursts land in µs)
-        let mut closed = false;
-        while pending.len() < max_take {
-            match rx.try_recv() {
-                Ok(item) => pending.push(item),
-                Err(mpsc::TryRecvError::Empty) => break,
-                Err(mpsc::TryRecvError::Disconnected) => {
-                    closed = true;
-                    break;
-                }
-            }
-        }
-        // not full yet: ONE bounded wait for stragglers, then drain again
-        if !closed && pending.len() < max_take && !policy.timeout.is_zero() {
-            match rx.recv_timeout(policy.timeout) {
-                Ok(item) => {
-                    pending.push(item);
-                    while pending.len() < max_take {
-                        match rx.try_recv() {
-                            Ok(item) => pending.push(item),
-                            Err(mpsc::TryRecvError::Empty) => break,
-                            Err(mpsc::TryRecvError::Disconnected) => {
-                                closed = true;
-                                break;
-                            }
-                        }
-                    }
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                Err(mpsc::RecvTimeoutError::Disconnected) => closed = true,
-            }
-        }
-        if let Err(e) = flush(model_index, &engine, clip_len, &mut pending, &mut buf, &done, max_take)
-        {
-            drain_and_fail(&mut pending, &rx, &done);
-            return Err(e);
-        }
-        if closed && pending.is_empty() {
-            break;
-        }
-    }
-    // final drain
-    while !pending.is_empty() {
-        if let Err(e) = flush(model_index, &engine, clip_len, &mut pending, &mut buf, &done, max_take)
-        {
-            drain_and_fail(&mut pending, &rx, &done);
-            return Err(e);
-        }
-    }
-    Ok(())
+/// Largest compiled batch size — the hard ceiling on `max_batch`.
+pub(crate) fn largest_batch(engine: &Engine) -> usize {
+    engine.batch_sizes().iter().copied().max().unwrap_or(1)
 }
 
-fn flush(
+/// What one [`flush_batch`] call did.
+pub(crate) struct FlushOutcome {
+    /// Items taken off `staged` (scored or failed) — keeps the lane's
+    /// live depth gauge honest even on the error path.
+    pub resolved: usize,
+    /// Whether a device batch actually executed (per-worker gauge).
+    pub executed: bool,
+    pub result: Result<()>,
+}
+
+impl FlushOutcome {
+    fn new(resolved: usize, executed: bool, result: Result<()>) -> Self {
+        FlushOutcome { resolved, executed, result }
+    }
+}
+
+/// Flush one batch from the front of `staged`: weed malformed items
+/// (single pass, each failed exactly once), pack up to `max_take` into
+/// the worker's arena, execute inline, complete each flushed slot.
+pub(crate) fn flush_batch(
     model_index: usize,
-    engine: &Engine,
+    dev: &mut DirectWorker,
     clip_len: usize,
-    pending: &mut Vec<BatchItem>,
+    staged: &mut VecDeque<BatchItem>,
     buf: &mut AlignedBatch,
     done: &Completer,
     max_take: usize,
-) -> Result<()> {
-    // weed out malformed items per item (cannot happen via Pipeline,
-    // which validates lead lengths at the router; defensive for direct
-    // users of model_batch_loop) — a bad query must not kill the member
-    // or fail its co-batched neighbours
-    let mut i = 0;
-    while i < pending.len() {
-        if pending[i].input.len() != clip_len {
-            let item = pending.remove(i);
+) -> FlushOutcome {
+    let mut resolved = 0usize;
+    // single-pass, order-preserving weed-out: a bad query must not kill
+    // the member or fail its co-batched neighbours
+    staged.retain(|item| {
+        if item.input.len() != clip_len {
             done.fail(item.query_id);
+            resolved += 1;
+            false
         } else {
-            i += 1;
+            true
         }
+    });
+    if staged.is_empty() {
+        return FlushOutcome::new(resolved, false, Ok(()));
     }
-    if pending.is_empty() {
-        return Ok(());
-    }
-    let take = pending.len().min(max_take);
+    let take = staged.len().min(max_take);
+    let engine = dev.engine();
     let batch = engine.batch_for(take);
     buf.reset(batch * clip_len);
-    for (slot, item) in pending[..take].iter().enumerate() {
+    for (slot, item) in staged.iter().take(take).enumerate() {
         buf.pack_slot(slot, clip_len, &item.input);
     }
     let started = Instant::now();
-    match engine.execute_batch((model_index, batch), buf) {
+    match dev.execute((model_index, batch), buf) {
         Ok(result) => {
             // a backend returning fewer scores than batch slots must
-            // fail the batch, not panic the member thread: a dead
-            // batcher with unresolved dequeued items would leak live
-            // pending-table entries (and stall their callers) forever
+            // fail the batch, not panic the worker: unresolved dequeued
+            // items would leak live pending-table entries (and stall
+            // their callers) forever
             if result.scores.len() < take {
                 let e = Error::serving(format!(
                     "model {model_index}: backend returned {} scores for a batch of {take}",
                     result.scores.len()
                 ));
-                fail_batch(pending, take, done);
-                return Err(e);
+                resolved += fail_front(staged, take, done);
+                return FlushOutcome::new(resolved, false, Err(e));
             }
-            for (slot, item) in pending.drain(..take).enumerate() {
+            for (slot, item) in staged.drain(..take).enumerate() {
                 // direct completion: write this member's score cell; if
                 // that was the last outstanding member, finish() runs
-                // right here on this batcher thread
+                // right here on this worker thread
                 done.score(
                     item.query_id,
                     result.scores[slot],
                     started.duration_since(item.enqueued),
                     result.exec_time,
                 );
+                resolved += 1;
             }
-            Ok(())
+            FlushOutcome::new(resolved, true, Ok(()))
         }
         Err(e) => {
-            fail_batch(pending, take, done);
-            Err(e)
+            resolved += fail_front(staged, take, done);
+            FlushOutcome::new(resolved, false, Err(e))
         }
     }
 }
 
-/// Fail (evict) the first `take` buffered items.
-fn fail_batch(pending: &mut Vec<BatchItem>, take: usize, done: &Completer) {
-    for item in pending.drain(..take) {
+/// Fail (evict) the first `take` staged items; returns how many.
+pub(crate) fn fail_front(
+    staged: &mut VecDeque<BatchItem>,
+    take: usize,
+    done: &Completer,
+) -> usize {
+    let take = take.min(staged.len());
+    for item in staged.drain(..take) {
         done.fail(item.query_id);
     }
-}
-
-/// Terminal eviction after an execution error: fail everything still
-/// buffered plus everything that keeps arriving until the router hangs
-/// up, so no registered query is left dangling in the pending table.
-fn drain_and_fail(pending: &mut Vec<BatchItem>, rx: &mpsc::Receiver<BatchItem>, done: &Completer) {
-    for item in pending.drain(..) {
-        done.fail(item.query_id);
-    }
-    for item in rx.iter() {
-        done.fail(item.query_id);
-    }
-}
-
-fn largest_batch(engine: &Engine) -> usize {
-    engine.batch_sizes().iter().copied().max().unwrap_or(1)
+    take
 }

@@ -1,0 +1,790 @@
+//! Work-stealing model executor: a fixed pool of workers serving every
+//! ensemble member, replacing the one-OS-thread-per-model batcher
+//! actors.
+//!
+//! The paper's deployment runs one Ray actor per selected model; the
+//! old rust analogue spawned one thread per model. That makes tail
+//! latency a function of *ensemble size*: 16 models on 4 cores thrash,
+//! 3 models on 64 cores idle. Here the thread count is a tunable
+//! (`--workers`, core-count default) independent of how many models the
+//! composer picked:
+//!
+//! * **Lanes** — one per ensemble member: a lock-free injection queue
+//!   (Treiber stack, drained FIFO by the claiming worker), a staged
+//!   batch (exclusive to the claim holder), a flush deadline, and the
+//!   member's [`Completer`]. The router pushes items; it never blocks
+//!   on a busy model.
+//! * **Ready check** — a lane is claimable when it has work that is
+//!   *due*: a full batch, an elapsed fill deadline ([`BatchPolicy`]
+//!   semantics, per model, exactly as the actor loop enforced them),
+//!   a dead lane with backlog to fail, or shutdown drain.
+//! * **Claim → flush → release** — any worker CASes the lane's claim
+//!   flag, drains the injection queue into the staged batch, packs into
+//!   its own persistent 64-byte-aligned arena, executes **inline** on
+//!   its [`DirectWorker`](crate::runtime::DirectWorker) handle
+//!   (bounded by the engine's device
+//!   permits, so the GPU-count resource model survives), and completes
+//!   every slot directly through the lane's `Completer`. Crucially a
+//!   worker never sleeps holding a lane: a partially filled batch gets
+//!   a deadline and the worker moves to the next ready lane.
+//!
+//! Determinism: member scores land in per-model cells summed in
+//! model-index order at completion, so predictions are bit-for-bit
+//! identical for any worker count (`tests/executor.rs` proves 1, 2 and
+//! 8 workers against the analytic reference).
+//!
+//! Failure: an execution error fails the flushed batch through
+//! [`Completer::fail`] (evicting those queries), marks the lane dead,
+//! and fails its backlog; subsequent router pushes to the dead lane
+//! error so the router evicts exactly the affected queries — the same
+//! contract the dying batcher thread used to provide.
+//!
+//! Shutdown: dropping the last [`LaneSender`] (the router exiting)
+//! closes the executor; workers drain every lane — partial batches
+//! flush regardless of deadline (final-drain semantics) — and exit once
+//! all lanes are empty.
+
+use std::cell::UnsafeCell;
+use std::collections::VecDeque;
+use std::ptr;
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::batcher::{fail_front, flush_batch, largest_batch, BatchItem, BatchPolicy};
+use super::pipeline::Completer;
+use crate::runtime::{AlignedBatch, Engine};
+use crate::{Error, Result};
+
+/// Core-count default for the worker pool, clamped to [1, 16]: beyond
+/// the device-permit count extra workers only overlap packing and
+/// completion, which saturates quickly.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 16)
+}
+
+// ---------------------------------------------------------------------------
+// Lock-free injection queue
+// ---------------------------------------------------------------------------
+
+struct Node {
+    item: BatchItem,
+    next: *mut Node,
+}
+
+/// Treiber-stack MPSC injection queue: producers push with a CAS; the
+/// (single, claim-holding) consumer detaches the whole stack with one
+/// swap and replays it oldest-first. No locks anywhere on the path.
+struct InjectQueue {
+    head: AtomicPtr<Node>,
+}
+
+impl InjectQueue {
+    fn new() -> Self {
+        InjectQueue { head: AtomicPtr::new(ptr::null_mut()) }
+    }
+
+    fn push(&self, item: BatchItem) {
+        let node = Box::into_raw(Box::new(Node { item, next: ptr::null_mut() }));
+        let mut head = self.head.load(Ordering::Relaxed);
+        loop {
+            // SAFETY: `node` is ours until the CAS publishes it.
+            unsafe { (*node).next = head };
+            match self
+                .head
+                .compare_exchange_weak(head, node, Ordering::Release, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => head = seen,
+            }
+        }
+    }
+
+    /// Detach everything pushed so far and append it to `staged` in
+    /// FIFO order; returns how many items moved. Allocation-free: the
+    /// detached chain is reversed in place (the stack is newest-first)
+    /// and then walked oldest-first.
+    fn drain_into(&self, staged: &mut VecDeque<BatchItem>) -> usize {
+        let mut p = self.head.swap(ptr::null_mut(), Ordering::Acquire);
+        if p.is_null() {
+            return 0;
+        }
+        // SAFETY (whole function): nodes were leaked by `push` and the
+        // swap above gave this thread exclusive ownership of the chain.
+        let mut prev: *mut Node = ptr::null_mut();
+        while !p.is_null() {
+            let next = unsafe { (*p).next };
+            unsafe { (*p).next = prev };
+            prev = p;
+            p = next;
+        }
+        let mut n = 0;
+        while !prev.is_null() {
+            let node = unsafe { Box::from_raw(prev) };
+            prev = node.next;
+            staged.push_back(node.item);
+            n += 1;
+        }
+        n
+    }
+}
+
+impl Drop for InjectQueue {
+    fn drop(&mut self) {
+        let mut orphans = VecDeque::new();
+        self.drain_into(&mut orphans); // frees the nodes; items drop here
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lanes
+// ---------------------------------------------------------------------------
+
+/// One ensemble member's work lane.
+struct Lane {
+    model_index: usize,
+    queue: InjectQueue,
+    /// Claim flag: the worker that CASes `false → true` owns `staged`
+    /// (and the queue's consumer side) until it stores `false` back.
+    claimed: AtomicBool,
+    /// Set on execution failure; a dead lane fails everything it is
+    /// handed instead of executing.
+    dead: AtomicBool,
+    /// Flush deadline for the batch being filled, in nanos since the
+    /// executor epoch; 0 = unset (an unset deadline on a non-empty lane
+    /// means "due now" — see the scheduling notes on `lane_due`).
+    deadline_ns: AtomicU64,
+    /// Items drained but not yet flushed. Exclusive to the claim
+    /// holder.
+    staged: UnsafeCell<VecDeque<BatchItem>>,
+    done: Completer,
+}
+
+// SAFETY: `staged` is the only non-Sync field. It is touched solely by
+// the thread holding the `claimed` flag, which is acquired with an
+// Acquire CAS and released with a Release store — exclusive, ordered
+// access, same protocol the pending-slot arena uses for its metadata.
+unsafe impl Send for Lane {}
+unsafe impl Sync for Lane {}
+
+// ---------------------------------------------------------------------------
+// Shared executor state
+// ---------------------------------------------------------------------------
+
+struct Shared {
+    lanes: Box<[Lane]>,
+    /// Per-lane live depth: items admitted and not yet resolved
+    /// (scored/failed). Also the `/stats` queue-depth gauge.
+    depths: Arc<[AtomicUsize]>,
+    /// Per-worker executed-batch counters (imbalance gauge).
+    batches: Arc<[AtomicU64]>,
+    engine: Engine,
+    policy: BatchPolicy,
+    max_take: usize,
+    clip_len: usize,
+    epoch: Instant,
+    /// Live [`LaneSender`] clones; 0 ⇒ `closed`.
+    producers: AtomicUsize,
+    closed: AtomicBool,
+    /// Workers whose backend state initialized; when the last one
+    /// fails, every lane is marked dead so admitted queries are evicted
+    /// instead of hanging (see `worker_loop`).
+    live_workers: AtomicUsize,
+    /// Eventcount generation: bumped (then the sleep mutex is touched)
+    /// on every wake-worthy transition so a worker checking the
+    /// generation under the mutex can never miss a signal.
+    wake_gen: AtomicU64,
+    sleep: Mutex<()>,
+    wake: Condvar,
+}
+
+impl Shared {
+    fn now_ns(&self) -> u64 {
+        u64::try_from(self.epoch.elapsed().as_nanos()).unwrap_or(u64::MAX)
+    }
+
+    fn deadline_from(&self, now_ns: u64) -> u64 {
+        let t = u64::try_from(self.policy.timeout.as_nanos()).unwrap_or(u64::MAX);
+        now_ns.saturating_add(t).max(1) // 0 is the "unset" sentinel
+    }
+
+    fn wake_one(&self) {
+        self.wake_gen.fetch_add(1, Ordering::SeqCst);
+        drop(self.sleep.lock().expect("executor sleep lock poisoned"));
+        self.wake.notify_one();
+    }
+
+    fn wake_all(&self) {
+        self.wake_gen.fetch_add(1, Ordering::SeqCst);
+        drop(self.sleep.lock().expect("executor sleep lock poisoned"));
+        self.wake.notify_all();
+    }
+
+    /// Park until a wake signal, an optional deadline, or (as a
+    /// safety net while draining) a short poll tick.
+    fn park(&self, seen_gen: u64, until: Option<Duration>) {
+        let guard = self.sleep.lock().expect("executor sleep lock poisoned");
+        if self.wake_gen.load(Ordering::SeqCst) != seen_gen {
+            return; // something happened since the scan started
+        }
+        match until {
+            Some(d) => {
+                let _ = self.wake.wait_timeout(guard, d);
+            }
+            None => {
+                let _ = self.wake.wait(guard);
+            }
+        }
+    }
+
+    /// Is the lane claimable work right now?
+    fn lane_due(&self, i: usize, now_ns: u64, closed: bool) -> bool {
+        if self.depths[i].load(Ordering::Acquire) == 0 {
+            return false;
+        }
+        let lane = &self.lanes[i];
+        if lane.dead.load(Ordering::Relaxed) || closed || self.policy.timeout.is_zero() {
+            return true;
+        }
+        if self.depths[i].load(Ordering::Acquire) >= self.max_take {
+            return true;
+        }
+        let d = lane.deadline_ns.load(Ordering::Acquire);
+        d == 0 || now_ns >= d
+    }
+
+    fn all_empty(&self) -> bool {
+        self.depths.iter().all(|d| d.load(Ordering::Acquire) == 0)
+    }
+
+    /// Drain + flush one claimed lane until it is empty or its next
+    /// batch is not yet due. Returns true if anything was resolved.
+    /// Never sleeps: leftover partial batches get a deadline and the
+    /// worker moves on.
+    fn run_lane(
+        &self,
+        i: usize,
+        wid: usize,
+        dev: &mut crate::runtime::DirectWorker,
+        buf: &mut AlignedBatch,
+    ) -> bool {
+        let lane = &self.lanes[i];
+        // SAFETY: this worker holds the claim flag (see worker_loop).
+        let staged = unsafe { &mut *lane.staged.get() };
+        let mut did = false;
+        loop {
+            lane.queue.drain_into(staged);
+            if staged.is_empty() {
+                // depth may still be >0 for an in-flight push (counter
+                // increments before the queue insert); the worker loop
+                // re-checks after release so nothing starves
+                return did;
+            }
+            if lane.dead.load(Ordering::Relaxed) {
+                let n = fail_front(staged, staged.len(), &lane.done);
+                self.depths[i].fetch_sub(n, Ordering::AcqRel);
+                did = true;
+                continue; // re-drain: racing pushes fail promptly too
+            }
+            let closed = self.closed.load(Ordering::SeqCst);
+            let now = self.now_ns();
+            let deadline = lane.deadline_ns.load(Ordering::Acquire);
+            let due = closed
+                || self.policy.timeout.is_zero()
+                || staged.len() >= self.max_take
+                || deadline == 0
+                || now >= deadline;
+            if !due {
+                return did; // deadline stands; another worker (or we)
+                            // will be back when it elapses
+            }
+            let out = flush_batch(
+                lane.model_index,
+                dev,
+                self.clip_len,
+                staged,
+                buf,
+                &lane.done,
+                self.max_take,
+            );
+            if out.resolved > 0 {
+                self.depths[i].fetch_sub(out.resolved, Ordering::AcqRel);
+                did = true;
+            }
+            if out.executed {
+                self.batches[wid].fetch_add(1, Ordering::Relaxed);
+            }
+            match out.result {
+                Ok(()) => {
+                    if !staged.is_empty() && staged.len() < self.max_take {
+                        // leftover partial batch: its fill wait starts
+                        // now (the old actor's bounded recv_timeout,
+                        // restarted after each flush)
+                        lane.deadline_ns.store(self.deadline_from(self.now_ns()), Ordering::Release);
+                    }
+                    // full leftover loops straight into another flush
+                }
+                Err(e) => {
+                    if !lane.dead.swap(true, Ordering::SeqCst) {
+                        eprintln!("model lane {} (worker {wid}) failed: {e}", lane.model_index);
+                    }
+                    // loop continues: the dead branch fails the backlog
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Producer handle
+// ---------------------------------------------------------------------------
+
+/// Routing handle into the executor: one lane per ensemble member, in
+/// model-index order. Cloneable; the executor drains and shuts down
+/// when the last clone drops.
+pub struct LaneSender {
+    shared: Arc<Shared>,
+}
+
+impl LaneSender {
+    /// Number of lanes (= ensemble members).
+    pub fn lanes(&self) -> usize {
+        self.shared.lanes.len()
+    }
+
+    /// Push one item onto lane `pos` (member position in model-index
+    /// order). Errors if the lane is dead (its model cannot execute) —
+    /// the caller must evict the query, exactly as it did when the
+    /// per-model batcher thread had exited.
+    pub fn push(&self, pos: usize, item: BatchItem) -> Result<()> {
+        let shared = &self.shared;
+        let lane = &shared.lanes[pos];
+        if lane.dead.load(Ordering::Acquire) {
+            return Err(Error::serving(format!("model lane {} is dead", lane.model_index)));
+        }
+        let depth = &shared.depths[pos];
+        // starting a fresh batch: arm its fill deadline BEFORE the item
+        // becomes visible, so no worker can observe work without one
+        if depth.load(Ordering::Acquire) == 0 && !shared.policy.timeout.is_zero() {
+            lane.deadline_ns.store(shared.deadline_from(shared.now_ns()), Ordering::Release);
+        }
+        // depth rises before the queue insert: a worker may transiently
+        // see depth > queue (spurious scan, harmless) but never resolves
+        // more than it admitted (no underflow)
+        let prev = depth.fetch_add(1, Ordering::AcqRel);
+        lane.queue.push(item);
+        if prev == 0 || prev + 1 == self.shared.max_take || shared.policy.timeout.is_zero() {
+            shared.wake_one();
+        }
+        Ok(())
+    }
+}
+
+impl Clone for LaneSender {
+    fn clone(&self) -> Self {
+        self.shared.producers.fetch_add(1, Ordering::SeqCst);
+        LaneSender { shared: Arc::clone(&self.shared) }
+    }
+}
+
+impl Drop for LaneSender {
+    fn drop(&mut self) {
+        if self.shared.producers.fetch_sub(1, Ordering::SeqCst) == 1 {
+            self.shared.closed.store(true, Ordering::SeqCst);
+            self.shared.wake_all();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executor
+// ---------------------------------------------------------------------------
+
+/// Handle to the running worker pool. Dropping it joins the workers —
+/// which return once every producer handle is gone and every lane has
+/// drained, so a dropped pipeline leaves no thread behind.
+pub struct Executor {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Executor {
+    /// Spawn `workers` pool threads (0 = [`default_workers`]) over one
+    /// lane per `(model_index, completer)` pair, in member order.
+    pub fn spawn(
+        engine: &Engine,
+        members: Vec<(usize, Completer)>,
+        policy: BatchPolicy,
+        workers: usize,
+    ) -> Result<(Executor, LaneSender)> {
+        assert!(!members.is_empty(), "executor needs at least one lane");
+        let n_workers = if workers == 0 { default_workers() } else { workers };
+        let max_take = policy.max_batch.min(largest_batch(engine)).max(1);
+        let lanes: Box<[Lane]> = members
+            .into_iter()
+            .map(|(model_index, done)| Lane {
+                model_index,
+                queue: InjectQueue::new(),
+                claimed: AtomicBool::new(false),
+                dead: AtomicBool::new(false),
+                deadline_ns: AtomicU64::new(0),
+                staged: UnsafeCell::new(VecDeque::new()),
+                done,
+            })
+            .collect();
+        let depths: Arc<[AtomicUsize]> = (0..lanes.len()).map(|_| AtomicUsize::new(0)).collect();
+        let batches: Arc<[AtomicU64]> = (0..n_workers).map(|_| AtomicU64::new(0)).collect();
+        let shared = Arc::new(Shared {
+            lanes,
+            depths,
+            batches,
+            engine: engine.clone(),
+            policy,
+            max_take,
+            clip_len: engine.clip_len(),
+            epoch: Instant::now(),
+            producers: AtomicUsize::new(1),
+            closed: AtomicBool::new(false),
+            live_workers: AtomicUsize::new(n_workers),
+            wake_gen: AtomicU64::new(0),
+            sleep: Mutex::new(()),
+            wake: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(n_workers);
+        for wid in 0..n_workers {
+            let shared = Arc::clone(&shared);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("exec-worker-{wid}"))
+                    .spawn(move || worker_loop(wid, shared))
+                    .map_err(Error::Io)?,
+            );
+        }
+        Ok((
+            Executor { shared: Arc::clone(&shared), workers: handles },
+            LaneSender { shared },
+        ))
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Zoo model index per lane, in member order.
+    pub fn lane_models(&self) -> Vec<usize> {
+        self.shared.lanes.iter().map(|l| l.model_index).collect()
+    }
+
+    /// Shared per-lane depth gauges (items admitted, not yet resolved).
+    pub fn depth_gauges(&self) -> Arc<[AtomicUsize]> {
+        Arc::clone(&self.shared.depths)
+    }
+
+    /// Shared per-worker executed-batch counters.
+    pub fn batch_counters(&self) -> Arc<[AtomicU64]> {
+        Arc::clone(&self.shared.batches)
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        // Workers exit on their own once every LaneSender is gone and
+        // the lanes are empty; joining here makes "pipeline dropped" ⇒
+        // "every in-flight query resolved" an actual guarantee.
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(wid: usize, shared: Arc<Shared>) {
+    let mut dev = match shared.engine.direct_worker(wid) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("exec-worker-{wid}: backend init failed: {e}");
+            // a failed worker just shrinks the pool — unless it was the
+            // last one, in which case nothing could ever execute: mark
+            // every lane dead (pushes start erroring, so the router
+            // evicts) and stay behind to fail the already-admitted
+            // backlog instead of letting its callers hang forever
+            if shared.live_workers.fetch_sub(1, Ordering::SeqCst) == 1 {
+                for lane in shared.lanes.iter() {
+                    lane.dead.store(true, Ordering::SeqCst);
+                }
+                reaper_loop(&shared);
+            }
+            shared.wake_all();
+            return;
+        }
+    };
+    // the worker's persistent 64-byte-aligned batch arena: allocations
+    // scale with the worker count, not the ensemble size
+    let mut buf = AlignedBatch::new();
+    let n = shared.lanes.len();
+    let mut rotation = wid; // stagger scan starts across workers
+    loop {
+        let seen_gen = shared.wake_gen.load(Ordering::SeqCst);
+        let closed = shared.closed.load(Ordering::SeqCst);
+        let now = shared.now_ns();
+        let mut did = false;
+        for off in 0..n {
+            let i = (rotation + off) % n;
+            let lane = &shared.lanes[i];
+            if !shared.lane_due(i, now, closed) {
+                continue;
+            }
+            if lane
+                .claimed
+                .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+                .is_err()
+            {
+                continue; // another worker owns it — in good hands
+            }
+            did |= shared.run_lane(i, wid, &mut dev, &mut buf);
+            lane.claimed.store(false, Ordering::Release);
+            // an in-flight push may have raced our final drain (depth
+            // rises before the queue insert): if depth is still
+            // non-zero, stay hot so the item is picked up promptly
+            if shared.depths[i].load(Ordering::Acquire) > 0 {
+                did = true;
+            }
+        }
+        rotation = rotation.wrapping_add(1);
+        if did {
+            continue;
+        }
+        if closed {
+            if shared.all_empty() {
+                break;
+            }
+            // other workers are finishing their lanes; poll briefly so
+            // no exit signal is ever needed from them mid-drain
+            shared.park(seen_gen, Some(Duration::from_millis(1)));
+            continue;
+        }
+        // idle: sleep until a push signal or the nearest lane deadline
+        let mut nearest: Option<u64> = None;
+        let mut due_now = false;
+        for (i, lane) in shared.lanes.iter().enumerate() {
+            if shared.depths[i].load(Ordering::Acquire) == 0 {
+                continue;
+            }
+            if lane.claimed.load(Ordering::Relaxed) {
+                continue; // claim holder will re-arm or finish it
+            }
+            let d = lane.deadline_ns.load(Ordering::Acquire);
+            if d == 0 || d <= now {
+                due_now = true;
+                break;
+            }
+            nearest = Some(nearest.map_or(d, |m: u64| m.min(d)));
+        }
+        if due_now {
+            std::thread::yield_now(); // lost a claim race — rescan
+            continue;
+        }
+        let until = nearest.map(|d| Duration::from_nanos(d.saturating_sub(now)));
+        shared.park(seen_gen, until);
+    }
+    // wake any peers parked without a timeout so they re-check
+    // closed + empty and exit too
+    shared.wake_all();
+}
+
+/// Degraded-mode loop run by the last worker whose backend failed to
+/// initialize: every lane is dead, so all this does is claim lanes with
+/// backlog and fail their items (evicting the queries) until the
+/// producers hang up and everything is drained. Keeps the "no admitted
+/// query is ever left dangling" contract even with zero executable
+/// workers.
+fn reaper_loop(shared: &Shared) {
+    loop {
+        let seen_gen = shared.wake_gen.load(Ordering::SeqCst);
+        let closed = shared.closed.load(Ordering::SeqCst);
+        let mut did = false;
+        for (i, lane) in shared.lanes.iter().enumerate() {
+            if shared.depths[i].load(Ordering::Acquire) == 0 {
+                continue;
+            }
+            if lane
+                .claimed
+                .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+                .is_err()
+            {
+                continue;
+            }
+            // SAFETY: this thread holds the claim flag.
+            let staged = unsafe { &mut *lane.staged.get() };
+            loop {
+                lane.queue.drain_into(staged);
+                if staged.is_empty() {
+                    break;
+                }
+                let n = fail_front(staged, staged.len(), &lane.done);
+                shared.depths[i].fetch_sub(n, Ordering::AcqRel);
+                did = true;
+            }
+            lane.claimed.store(false, Ordering::Release);
+        }
+        if did {
+            continue;
+        }
+        if closed && shared.all_empty() {
+            return;
+        }
+        // short poll: failed-init is already the pathological path, and
+        // a bounded tick also covers the depth-vs-queue push race
+        shared.park(seen_gen, Some(Duration::from_millis(1)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::SimBackend;
+    use crate::serving::arena::WindowLease;
+    use crate::serving::pipeline::{PendingMeta, PendingSlots, Prediction};
+    use crate::serving::telemetry::Telemetry;
+    use crate::zoo::testkit;
+
+    fn harness(
+        n_models: usize,
+        workers: usize,
+        policy: BatchPolicy,
+    ) -> (Arc<PendingSlots>, Arc<Telemetry>, Executor, LaneSender, usize) {
+        let zoo = testkit::toy_zoo_with(6, 16, 3, 40, &[1, 8]);
+        let engine =
+            Engine::with_backend(&zoo, 2, Arc::new(SimBackend::instant(&zoo))).unwrap();
+        let pending = Arc::new(PendingSlots::new(n_models));
+        let telemetry = Arc::new(Telemetry::default());
+        let members = (0..n_models)
+            .map(|pos| (pos, Completer::new(Arc::clone(&pending), Arc::clone(&telemetry), pos)))
+            .collect();
+        let (exec, tx) = Executor::spawn(&engine, members, policy, workers).unwrap();
+        let clip = engine.clip_len();
+        (pending, telemetry, exec, tx, clip)
+    }
+
+    fn meta(reply: Option<std::sync::mpsc::SyncSender<Prediction>>) -> PendingMeta {
+        PendingMeta {
+            patient: 0,
+            window_id: 0,
+            sim_end: 0.0,
+            emitted: Instant::now(),
+            reply,
+        }
+    }
+
+    #[test]
+    fn pool_completes_queries_across_lanes() {
+        let policy = BatchPolicy { max_batch: 8, timeout: Duration::ZERO };
+        let (pending, telemetry, exec, tx, clip) = harness(3, 2, policy);
+        let mut replies = Vec::new();
+        for id in 0..32u64 {
+            let (ptx, prx) = std::sync::mpsc::sync_channel(1);
+            pending.insert(id, meta(Some(ptx)));
+            let lease = WindowLease::from_vec(vec![id as f32 * 0.01; clip]);
+            for pos in 0..3 {
+                tx.push(
+                    pos,
+                    BatchItem { query_id: id, input: lease.clone(), enqueued: Instant::now() },
+                )
+                .unwrap();
+            }
+            replies.push(prx);
+        }
+        for (id, rx) in replies.into_iter().enumerate() {
+            let p = rx
+                .recv_timeout(Duration::from_secs(30))
+                .unwrap_or_else(|e| panic!("query {id}: {e:?}"));
+            assert!((0.0..=1.0).contains(&p.score));
+        }
+        assert_eq!(pending.len(), 0);
+        assert_eq!(telemetry.model_jobs.load(Ordering::Relaxed), 3 * 32);
+        drop(tx);
+        drop(exec); // joins: all gauges final
+    }
+
+    #[test]
+    fn shutdown_drains_partial_batches() {
+        // generous timeout: the items must flush on CLOSE, not deadline
+        let policy = BatchPolicy { max_batch: 8, timeout: Duration::from_secs(60) };
+        let (pending, _tel, exec, tx, clip) = harness(1, 1, policy);
+        let (ptx, prx) = std::sync::mpsc::sync_channel(1);
+        pending.insert(5, meta(Some(ptx)));
+        let lease = WindowLease::from_vec(vec![0.25; clip]);
+        tx.push(0, BatchItem { query_id: 5, input: lease, enqueued: Instant::now() })
+            .unwrap();
+        drop(tx); // close → final drain must flush the 1-item batch
+        drop(exec);
+        assert!(prx.try_recv().is_ok(), "final drain must score the staged item");
+        assert_eq!(pending.len(), 0);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch_without_new_pushes() {
+        let policy = BatchPolicy { max_batch: 8, timeout: Duration::from_millis(5) };
+        let (pending, _tel, _exec, tx, clip) = harness(1, 2, policy);
+        let (ptx, prx) = std::sync::mpsc::sync_channel(1);
+        pending.insert(0, meta(Some(ptx)));
+        let lease = WindowLease::from_vec(vec![0.5; clip]);
+        tx.push(0, BatchItem { query_id: 0, input: lease, enqueued: Instant::now() })
+            .unwrap();
+        // no further pushes, no shutdown: the fill deadline alone must
+        // flush the batch
+        let p = prx.recv_timeout(Duration::from_secs(30)).expect("deadline flush");
+        assert!((0.0..=1.0).contains(&p.score));
+        assert_eq!(pending.len(), 0);
+    }
+
+    #[test]
+    fn dead_lane_rejects_pushes_and_fails_backlog() {
+        let zoo = testkit::toy_zoo_with(4, 16, 3, 40, &[1, 8]);
+        let backend = SimBackend::instant(&zoo).failing_model(0);
+        let engine = Engine::with_backend(&zoo, 1, Arc::new(backend)).unwrap();
+        let pending = Arc::new(PendingSlots::new(1));
+        let telemetry = Arc::new(Telemetry::default());
+        let members =
+            vec![(0usize, Completer::new(Arc::clone(&pending), Arc::clone(&telemetry), 0))];
+        let policy = BatchPolicy { max_batch: 8, timeout: Duration::ZERO };
+        let (exec, tx) = Executor::spawn(&engine, members, policy, 1).unwrap();
+        let clip = engine.clip_len();
+        pending.insert(0, meta(None));
+        tx.push(
+            0,
+            BatchItem {
+                query_id: 0,
+                input: WindowLease::from_vec(vec![0.1; clip]),
+                enqueued: Instant::now(),
+            },
+        )
+        .unwrap();
+        // the failing execution marks the lane dead; pushes start
+        // erroring (the router's cue to evict)
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            pending.insert(1, meta(None));
+            let r = tx.push(
+                0,
+                BatchItem {
+                    query_id: 1,
+                    input: WindowLease::from_vec(vec![0.2; clip]),
+                    enqueued: Instant::now(),
+                },
+            );
+            if r.is_err() {
+                pending.evict(1); // the router's job on push failure
+                break;
+            }
+            assert!(Instant::now() < deadline, "lane never died");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        drop(tx);
+        drop(exec);
+        assert_eq!(pending.len(), 0, "every admitted query must be resolved");
+        assert!(telemetry.failures.load(Ordering::Relaxed) >= 1);
+    }
+}

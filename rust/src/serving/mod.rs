@@ -1,55 +1,70 @@
 //! Real-time ensemble serving (paper §3.4, Fig. 4).
 //!
-//! The pipeline is a set of actor threads — the rust substitute for the
-//! Ray layer the paper builds on:
+//! The pipeline is the rust substitute for the Ray layer the paper
+//! builds on — with one deliberate inversion: where the paper (and the
+//! old plane here) dedicates an actor/thread per model, execution now
+//! runs on a **fixed work-stealing pool**, so thread count follows the
+//! hardware, not the ensemble:
 //!
 //! ```text
 //!  bedside streams ──► HTTP server / in-process ingest
 //!        │ 250 Hz ECG, 1 Hz vitals   (ShardSender: patient % N)
 //!        ▼
 //!  [stateful]  N aggregation shards, each owning its patients'
-//!        │     WindowAggregators (bounded per-shard frame queues)
-//!        │ one ensemble Query per ΔT window
+//!        │     WindowAggregators, filling pooled lead buffers
+//!        │     (per-shard LeadPool slab; buffers recycle on last drop)
+//!        │ one ensemble Query per ΔT window (WindowLease × 3)
 //!        ▼
-//!  dispatcher ──► per-model Batcher actors ──► PJRT Engine workers
-//!        │              │                         ("GPUs")
-//!        ▼              ▼ Completer (direct, collector-less)
-//!  [stateless]  whichever batcher records a query's last member score
-//!               finishes it inline: bagging mean (Eq. 5) + telemetry
+//!  dispatcher ──► per-model lanes ──► executor pool (--workers threads)
+//!        │        (lock-free queues,     │ claim ready lane, pack,
+//!        │         fill deadlines)       │ execute inline (DirectWorker,
+//!        ▼                               ▼ gpu-count device permits)
+//!  [stateless]  Completer (direct, collector-less): whichever worker
+//!               records a query's last member score finishes it
+//!               inline: bagging mean (Eq. 5) + telemetry
 //! ```
 //!
 //! Stateful compute (aggregation) and stateless compute (model
 //! inference) are separated exactly as the paper requires of its
 //! serving platform.
 //!
-//! The data plane is zero-copy, lock-free, and **fan-in free** end to
-//! end: no single thread touches every frame (patients are sharded over
-//! N aggregation workers, [`shards`]) and no single thread touches
-//! every score (batchers complete queries directly through the
-//! lock-free pending arena, [`pipeline::Completer`] — the old collector
-//! thread and its MPSC fan-in are gone). Aggregators emit lead windows
-//! as `Arc<[f32]>`, the dispatcher fans references (not copies) to
-//! every member's batcher, per-query bagging state lives in a
+//! The data plane is zero-copy, lock-free, **fan-in free**, and
+//! **allocation-recycling** end to end: no single thread touches every
+//! frame (patients are sharded over N aggregation workers, [`shards`])
+//! and no single thread touches every score (workers complete queries
+//! directly through the lock-free pending arena,
+//! [`pipeline::Completer`]). Aggregators fill recycled lead buffers
+//! from per-shard slabs ([`arena::LeadPool`]) and seal them into shared
+//! [`arena::WindowLease`]s; the dispatcher fans references (not copies)
+//! to every member's lane; per-query bagging state lives in a
 //! preallocated generation-tagged slot arena updated purely with
-//! atomics ([`pipeline::PendingSlots`]), each batcher packs into one
-//! persistent 64-byte-aligned batch arena, and frames themselves carry
-//! their payload inline ([`crate::ingest::FrameValues`] — no per-frame
-//! heap traffic anywhere). See [`pipeline`] for the architecture
-//! diagram. Model execution goes through the pluggable
-//! [`ExecBackend`](crate::runtime::ExecBackend) (sim by default, PJRT
-//! with `--features xla`).
+//! atomics ([`pipeline::PendingSlots`]); each executor worker packs
+//! into one persistent 64-byte-aligned batch arena and executes inline
+//! through [`DirectWorker`](crate::runtime::DirectWorker) under the
+//! engine's device permits; and frames themselves carry their payload
+//! inline ([`crate::ingest::FrameValues`]). Model-count no longer sets
+//! the thread count: the executor pool size is a CLI tunable
+//! (`--workers`), observable per lane and per worker through
+//! [`telemetry::ExecutorGauges`]. See [`pipeline`] for the architecture
+//! diagram and [`executor`] for the scheduling rules. Model execution
+//! goes through the pluggable [`ExecBackend`](crate::runtime::ExecBackend)
+//! (sim by default, PJRT with `--features xla`).
 
 pub mod aggregator;
+pub mod arena;
 pub mod batcher;
+pub mod executor;
 pub mod pipeline;
 pub mod profile;
 pub mod shards;
 pub mod telemetry;
 
 pub use aggregator::WindowAggregator;
+pub use arena::{LeadPool, LeadSlot, WindowLease};
+pub use executor::default_workers;
 pub use pipeline::{
     share_leads, Completer, PendingSlots, Pipeline, PipelineConfig, Prediction, Query,
     ScoreOutcome,
 };
 pub use shards::{default_shards, ShardConfig, ShardRouter, ShardSender};
-pub use telemetry::{LatencyHistogram, Telemetry};
+pub use telemetry::{ExecutorGauges, LatencyHistogram, Telemetry};

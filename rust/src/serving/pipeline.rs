@@ -1,68 +1,82 @@
-//! The ensemble serving pipeline: router + per-model batcher actors
-//! with **direct, collector-less completion**, wired over std channels
-//! (Fig. 4).
+//! The ensemble serving pipeline: router + a **work-stealing model
+//! executor** with **direct, collector-less completion** (Fig. 4).
 //!
-//! ## Data-plane architecture (zero-copy, lock-free, no serial fan-in)
+//! ## Data-plane architecture (zero-copy, lock-free, thread-count ∝ hardware)
 //!
 //! ```text
-//!  Pipeline handles ──queries──► router thread ──items──► batcher threads
-//!        │                          │ claim slot              │  persistent
-//!        │  leads: [Arc<[f32]>; 3]  │ (CAS, no mutex)         │  64B-aligned
-//!        │  (shared, never cloned)  ▼                         │  batch arena
-//!        │              pending slot arena                    ▼
-//!        │        (preallocated, generation-tagged;      ExecBackend engine
-//!        │         atomic remaining + per-member         (sim | pjrt workers)
-//!        │         score cells, CAS eviction)                 │ scores
-//!        │                          ▲                         │
-//!        │                          │ Completer::score        │
-//!        │                          │ (atomic cell write,     │
-//!        │                          │  last member finishes   │
-//!        ▼                          │  the slot INLINE)       ▼
-//!      reply rx ◄───────────── batcher threads ◄──────────────┘
+//!  Pipeline handles ──queries──► router thread ──items──► model lanes (one per
+//!        │                          │ claim slot            member: lock-free
+//!        │ leads: [WindowLease; 3]  │ (CAS, no mutex)       injection queue +
+//!        │ (pooled buffers, shared  ▼                       flush deadline)
+//!        │  by reference, recycled  pending slot arena          │ claim ready
+//!        │  on last drop)           (preallocated,              ▼ lane (CAS)
+//!        │                          generation-tagged;   ┌────────────────────┐
+//!        │                          atomic remaining +   │ executor pool:     │
+//!        │                          per-member score     │ --workers threads, │
+//!        │                          cells, CAS eviction) │ each: persistent   │
+//!        │                              ▲                │ 64B-aligned arena, │
+//!        │                              │ Completer::    │ inline ExecBackend │
+//!        │                              │ score (atomic  │ DirectWorker under │
+//!        │                              │ cell write;    │ n_gpus device      │
+//!        │                              │ last member    │ permits            │
+//!        ▼                              │ finishes the   └────────────────────┘
+//!      reply rx ◄──────────────────── slot INLINE on whichever worker
+//!                                     flushed the last member's batch
 //! ```
 //!
-//! * **Zero-copy windows** — the aggregator emits each lead window once
-//!   as `Arc<[f32]>`; the router hands every ensemble member a
-//!   reference, and the only remaining copy is the single slot-write
-//!   into the batcher's persistent aligned batch arena.
+//! * **Zero-copy, pooled windows** — the aggregator fills recycled lead
+//!   buffers from its shard's [`LeadPool`](super::arena::LeadPool) and
+//!   seals them into shared [`WindowLease`]s; the router hands every
+//!   ensemble member a reference, the only copy on the plane is the
+//!   single slot-write into a worker's aligned batch arena, and the
+//!   buffer returns to its pool when the last lane drops it.
+//! * **Work-stealing execution** — models no longer own threads. Each
+//!   member has a *lane* (lock-free injection queue + fill deadline);
+//!   a fixed pool of workers ([`PipelineConfig::workers`], core-count
+//!   default) claims whichever lane has a due batch, packs it, executes
+//!   inline through a [`DirectWorker`](crate::runtime::DirectWorker)
+//!   (device parallelism still bounded by the engine's GPU-count
+//!   permits), and completes the slots. Thread count is a hardware
+//!   tunable, not a function of ensemble size — 16 models on 2 workers
+//!   spawn 2 threads, not 16. See [`super::executor`].
 //! * **Lock-free pending slots** — per-query bagging state lives in a
 //!   preallocated arena of [`PENDING_SLOTS`] generation-tagged slots
 //!   (`query_id & (PENDING_SLOTS-1)` picks the slot, `query_id + 1` is
 //!   its generation tag). The router claims a slot with one CAS,
-//!   batcher threads update `remaining` and per-member score cells with
-//!   atomics, and eviction is a CAS on the tag — no two threads ever
-//!   block each other, even on the same query. See [`PendingSlots`]
-//!   for the full protocol.
+//!   executor workers update `remaining` and per-member score cells
+//!   with atomics, and eviction is a CAS on the tag — no two threads
+//!   ever block each other, even on the same query. See
+//!   [`PendingSlots`] for the full protocol.
 //! * **Collector-less completion** — there is no collector thread and
-//!   no report channel: each batcher resolves its items through its
-//!   [`Completer`], and whichever batcher thread records the last
-//!   outstanding member runs `finish()` (bagging mean, telemetry,
-//!   reply delivery) inline. No single thread touches every score, so
-//!   completion throughput scales with the ensemble instead of
-//!   serializing on one MPSC fan-in.
+//!   no report channel: workers resolve items through each lane's
+//!   [`Completer`], and whichever worker records the last outstanding
+//!   member runs `finish()` (bagging mean, telemetry, reply delivery)
+//!   inline. No single thread touches every score.
 //! * **Deterministic bagging** — each member's score is written once
 //!   into its own cell and the cells are summed in model-index order at
 //!   completion, so a query's ensemble score is bit-for-bit identical
-//!   regardless of batch composition, arrival order, or which thread
-//!   completes the slot — the completion *order* carries no state.
+//!   regardless of batch composition, arrival order, worker count, or
+//!   which thread completes the slot (`tests/executor.rs`).
 //! * **Failure eviction** — when a member cannot score a query (engine
-//!   error, dead batcher), the slot is reclaimed via a tag CAS and the
+//!   error, dead lane), the slot is reclaimed via a tag CAS and the
 //!   caller's reply channel drops, so `submit()` callers fail fast
 //!   instead of leaking slots with `remaining > 0` forever.
 //!
 //! Shutdown is acyclic: dropping the last `Pipeline` handle closes the
-//! query channel → the router exits and drops the per-model item
-//! senders → batchers drain, complete their last slots, and exit. No
-//! thread outlives the pipeline.
+//! query channel → the router exits and drops the lane sender → the
+//! executor workers flush every lane's final partial batch and exit →
+//! dropping the pipeline's executor handle joins them. No thread
+//! outlives the pipeline.
 
 use std::cell::UnsafeCell;
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-use super::batcher::{model_batch_loop, BatchItem, BatchPolicy};
-use super::telemetry::Telemetry;
+use super::arena::WindowLease;
+use super::batcher::{BatchItem, BatchPolicy};
+use super::executor::{Executor, LaneSender};
+use super::telemetry::{ExecutorGauges, Telemetry};
 use crate::runtime::Engine;
 use crate::zoo::{Selector, Zoo};
 use crate::{Error, Result};
@@ -74,22 +88,24 @@ use crate::{Error, Result};
 pub const PENDING_SLOTS: usize = 1024;
 
 /// Move a triple of freshly collected lead windows into shared storage:
-/// one allocation per lead, after which every ensemble member borrows
-/// the same samples.
-pub fn share_leads(leads: [Vec<f32>; 3]) -> [Arc<[f32]>; 3] {
+/// one lease per lead, after which every ensemble member borrows the
+/// same samples (load generators and tests; the aggregation plane gets
+/// its leases from the per-shard pools instead).
+pub fn share_leads(leads: [Vec<f32>; 3]) -> [WindowLease; 3] {
     let [a, b, c] = leads;
-    [Arc::from(a), Arc::from(b), Arc::from(c)]
+    [WindowLease::from_vec(a), WindowLease::from_vec(b), WindowLease::from_vec(c)]
 }
 
 /// One ensemble query: a synchronized multi-lead observation window.
-/// Leads are reference-counted slices shared across the whole data
-/// plane — cloning a `Query` never copies samples.
+/// Leads are reference-counted leases shared across the whole data
+/// plane — cloning a `Query` never copies samples, and pooled lease
+/// buffers recycle when the last holder drops them.
 #[derive(Debug, Clone)]
 pub struct Query {
     pub patient: usize,
     pub window_id: u64,
     pub sim_end: f64,
-    pub leads: [Arc<[f32]>; 3],
+    pub leads: [WindowLease; 3],
     /// Wall-clock emission instant (set by the aggregator).
     pub emitted: Instant,
 }
@@ -141,15 +157,24 @@ pub type PredictionRx = mpsc::Receiver<Prediction>;
 pub struct PipelineConfig {
     pub ensemble: Selector,
     pub policy: BatchPolicy,
+    /// Executor pool size; 0 = core-count default
+    /// ([`super::executor::default_workers`]). Independent of the
+    /// ensemble size by design.
+    pub workers: usize,
 }
 
 impl PipelineConfig {
     pub fn new(ensemble: Selector) -> Self {
-        PipelineConfig { ensemble, policy: BatchPolicy::default() }
+        PipelineConfig { ensemble, policy: BatchPolicy::default(), workers: 0 }
     }
 
     pub fn with_policy(mut self, policy: BatchPolicy) -> Self {
         self.policy = policy;
+        self
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
         self
     }
 }
@@ -540,15 +565,21 @@ impl Completer {
 // Pipeline
 // ---------------------------------------------------------------------------
 
-/// Handle to a running pipeline. Cheap to clone. Dropping all handles
-/// shuts the pipeline down (batchers drain, engine stays alive).
+/// Handle to a running pipeline. Cheap to clone. Dropping the last
+/// handle shuts the pipeline down: the router drains, the executor
+/// flushes every lane's final batch, and the workers are joined — so
+/// "pipeline dropped" implies "every admitted query resolved".
 #[derive(Clone)]
 pub struct Pipeline {
+    /// Declared before `executor` on purpose: dropping the last handle
+    /// must close the query channel (router exits, lane sender drops)
+    /// *before* the executor handle's drop joins the workers.
     tx: mpsc::Sender<(Query, Option<mpsc::SyncSender<Prediction>>)>,
     telemetry: Arc<Telemetry>,
     pending: Arc<PendingSlots>,
     ensemble: Selector,
     clip_len: usize,
+    executor: Arc<Executor>,
 }
 
 impl Pipeline {
@@ -570,25 +601,25 @@ impl Pipeline {
         let telemetry = Arc::new(Telemetry::default());
         let pending = Arc::new(PendingSlots::new(cfg.ensemble.len()));
 
-        // batcher actor per selected model; each holds its own direct
-        // Completer (member_pos = position in model-index order) — no
-        // collector thread, no report channel
-        let mut model_txs: HashMap<usize, mpsc::Sender<BatchItem>> = HashMap::new();
-        for (pos, &i) in cfg.ensemble.indices().iter().enumerate() {
-            let (btx, brx) = mpsc::channel::<BatchItem>();
-            model_txs.insert(i, btx);
-            let engine = engine.clone();
-            let policy = cfg.policy;
-            let done = Completer::new(Arc::clone(&pending), Arc::clone(&telemetry), pos);
-            std::thread::Builder::new()
-                .name(format!("batcher-{i}"))
-                .spawn(move || {
-                    if let Err(e) = model_batch_loop(i, engine, brx, done, policy) {
-                        eprintln!("model batcher {i} exited: {e}");
-                    }
-                })
-                .map_err(Error::Io)?;
-        }
+        // one executor lane per selected model, each holding its direct
+        // Completer (member_pos = position in model-index order); a
+        // fixed pool of workers serves every lane — no thread per model,
+        // no collector thread, no report channel
+        let members: Vec<(usize, Completer)> = cfg
+            .ensemble
+            .indices()
+            .iter()
+            .enumerate()
+            .map(|(pos, &i)| {
+                (i, Completer::new(Arc::clone(&pending), Arc::clone(&telemetry), pos))
+            })
+            .collect();
+        let (executor, lanes) = Executor::spawn(engine, members, cfg.policy, cfg.workers)?;
+        telemetry.install_executor(ExecutorGauges::new(
+            executor.lane_models(),
+            executor.depth_gauges(),
+            executor.batch_counters(),
+        ));
 
         // router thread
         let (tx, query_rx) =
@@ -596,14 +627,14 @@ impl Pipeline {
         {
             let pending = Arc::clone(&pending);
             let telemetry = Arc::clone(&telemetry);
-            let leads: HashMap<usize, usize> =
-                cfg.ensemble.indices().iter().map(|&i| (i, zoo.model(i).lead)).collect();
-            let ensemble = cfg.ensemble.clone();
+            // lead index per lane (= member position in model-index order)
+            let lane_leads: Vec<usize> =
+                cfg.ensemble.indices().iter().map(|&i| zoo.model(i).lead).collect();
             let clip_len = zoo.manifest.clip_len;
             std::thread::Builder::new()
                 .name("router".into())
                 .spawn(move || {
-                    router_loop(query_rx, model_txs, leads, ensemble, clip_len, pending, telemetry)
+                    router_loop(query_rx, lanes, lane_leads, clip_len, pending, telemetry)
                 })
                 .map_err(Error::Io)?;
         }
@@ -614,7 +645,13 @@ impl Pipeline {
             pending,
             ensemble: cfg.ensemble,
             clip_len: zoo.manifest.clip_len,
+            executor: Arc::new(executor),
         })
+    }
+
+    /// Executor pool size actually spawned.
+    pub fn n_workers(&self) -> usize {
+        self.executor.n_workers()
     }
 
     pub fn telemetry(&self) -> &Arc<Telemetry> {
@@ -662,9 +699,8 @@ impl Pipeline {
 
 fn router_loop(
     rx: mpsc::Receiver<(Query, Option<mpsc::SyncSender<Prediction>>)>,
-    model_txs: HashMap<usize, mpsc::Sender<BatchItem>>,
-    leads: HashMap<usize, usize>,
-    ensemble: Selector,
+    lanes: LaneSender,
+    lane_leads: Vec<usize>,
     clip_len: usize,
     pending: Arc<PendingSlots>,
     telemetry: Arc<Telemetry>,
@@ -675,7 +711,7 @@ fn router_loop(
         let id = seq as u64;
         // reject malformed windows before registering anything: the
         // reply sender drops here, so the caller errors immediately and
-        // no batcher ever sees a wrong-length input
+        // no model lane ever sees a wrong-length input
         if q.leads.iter().any(|l| l.len() != clip_len) {
             telemetry.failures.fetch_add(1, Ordering::Relaxed);
             continue;
@@ -695,20 +731,21 @@ fn router_loop(
             // their callers saw a hang-up, so make the failures visible
             telemetry.failures.fetch_add(force_evicted as u64, Ordering::Relaxed);
         }
-        for &m in ensemble.indices() {
+        for (pos, &lead) in lane_leads.iter().enumerate() {
             // zero-copy fan-out: every member shares the same window
             let item = BatchItem {
                 query_id: id,
-                input: Arc::clone(&q.leads[leads[&m]]),
+                input: q.leads[lead].clone(),
                 enqueued: q.emitted,
             };
-            if model_txs[&m].send(item).is_err() {
-                // batcher died: evict the query; members already
-                // dispatched find a freed slot and are skipped. Count
-                // the failure BEFORE evict() drops the reply sender so
-                // it is visible by the time the caller observes the
-                // hang-up; if a concurrent batcher eviction beat us
-                // to the slot (and counted it), undo our count.
+            if lanes.push(pos, item).is_err() {
+                // dead lane (its model cannot execute): evict the
+                // query; members already dispatched find a freed slot
+                // and are skipped. Count the failure BEFORE evict()
+                // drops the reply sender so it is visible by the time
+                // the caller observes the hang-up; if a concurrent lane
+                // eviction beat us to the slot (and counted it), undo
+                // our count.
                 telemetry.failures.fetch_add(1, Ordering::Relaxed);
                 if !pending.evict(id) {
                     telemetry.failures.fetch_sub(1, Ordering::Relaxed);
@@ -717,7 +754,7 @@ fn router_loop(
             }
         }
     }
-    // router exit drops model_txs → batchers drain and exit
+    // router exit drops the lane sender → the executor drains and stops
 }
 
 /// Complete one query: deterministic bagging mean + telemetry + reply.

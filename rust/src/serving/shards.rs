@@ -8,7 +8,9 @@
 //! consumer capped ingest throughput regardless of core count. Here
 //! patients are partitioned over N aggregation workers
 //! (`patient % N`, N defaulting to a core-count heuristic); each shard
-//! owns the [`WindowAggregator`]s of its patients and submits completed
+//! owns the [`WindowAggregator`]s of its patients — all filling pooled
+//! lead buffers from the shard's own [`LeadPool`] slab, recycled when
+//! the executor drops the emitted windows — and submits completed
 //! windows straight into the serving pipeline via its sink. Producers
 //! (HTTP connection threads, bedside generators) route frames through a
 //! cheap clonable [`ShardSender`] onto **bounded** per-shard channels,
@@ -27,6 +29,7 @@ use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use super::aggregator::{WindowAggregator, WindowData};
+use super::arena::LeadPool;
 use super::telemetry::Telemetry;
 use crate::ingest::Frame;
 use crate::{Error, Result};
@@ -190,6 +193,12 @@ fn shard_loop<S: FnMut(WindowData)>(
     dropped: Arc<[AtomicU64]>,
     mut sink: S,
 ) {
+    // per-shard window arena: every aggregator on this shard fills
+    // recycled lead buffers from one slab; the buffers come back when
+    // the last executor lane drops the emitted lease, so steady state
+    // does no per-window buffer allocation (and shards never contend
+    // on each other's free lists)
+    let pool = LeadPool::new(window_samples);
     let mut aggs: HashMap<usize, WindowAggregator> = HashMap::new();
     for frame in rx {
         let t0 = Instant::now();
@@ -204,7 +213,10 @@ fn shard_loop<S: FnMut(WindowData)>(
                 telemetry.ingest.record(t0.elapsed());
                 continue;
             }
-            aggs.insert(frame.patient, WindowAggregator::new(frame.patient, window_samples));
+            aggs.insert(
+                frame.patient,
+                WindowAggregator::with_pool(frame.patient, window_samples, pool.clone()),
+            );
         }
         let agg = aggs.get_mut(&frame.patient).expect("inserted above");
         let dropped_before = agg.dropped();

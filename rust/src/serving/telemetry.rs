@@ -4,7 +4,7 @@
 //! once per query.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Duration;
 
 /// Fixed-boundary log-scale histogram from 1 µs to ~100 s, plus an exact
@@ -102,6 +102,46 @@ impl LatencyHistogram {
     }
 }
 
+/// Live gauges of the work-stealing executor, shared with its lanes
+/// and workers (the counters themselves, not copies): per-model queue
+/// depth makes a hot model visible, per-worker executed-batch counts
+/// make pool imbalance visible. Installed into [`Telemetry`] by
+/// `Pipeline::spawn` so `/stats` and the bedside report see them.
+#[derive(Debug)]
+pub struct ExecutorGauges {
+    /// Zoo model index per lane, in member (model-index) order.
+    models: Vec<usize>,
+    /// Per-lane items admitted and not yet scored/failed.
+    depths: Arc<[AtomicUsize]>,
+    /// Per-worker device batches executed.
+    batches: Arc<[AtomicU64]>,
+}
+
+impl ExecutorGauges {
+    pub fn new(
+        models: Vec<usize>,
+        depths: Arc<[AtomicUsize]>,
+        batches: Arc<[AtomicU64]>,
+    ) -> Self {
+        assert_eq!(models.len(), depths.len(), "one depth gauge per lane");
+        ExecutorGauges { models, depths, batches }
+    }
+
+    pub fn models(&self) -> &[usize] {
+        &self.models
+    }
+
+    /// Current queue depth per lane (same order as [`Self::models`]).
+    pub fn queue_depths(&self) -> Vec<u64> {
+        self.depths.iter().map(|d| d.load(Ordering::Relaxed) as u64).collect()
+    }
+
+    /// Batches executed per pool worker so far.
+    pub fn worker_batches(&self) -> Vec<u64> {
+        self.batches.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+}
+
 /// Pipeline-wide telemetry.
 #[derive(Debug, Default)]
 pub struct Telemetry {
@@ -123,11 +163,35 @@ pub struct Telemetry {
     pub frames_dropped: AtomicU64,
     /// Queries evicted because a member could not score them.
     pub failures: AtomicU64,
+    /// Executor gauges, installed once by `Pipeline::spawn` (absent for
+    /// telemetry created outside a pipeline — benches, shard tests).
+    executor: OnceLock<ExecutorGauges>,
 }
 
 impl Telemetry {
+    /// Attach the executor's live gauges (once; later installs are
+    /// ignored, matching a pipeline's one-executor lifetime).
+    pub fn install_executor(&self, gauges: ExecutorGauges) {
+        let _ = self.executor.set(gauges);
+    }
+
+    pub fn executor(&self) -> Option<&ExecutorGauges> {
+        self.executor.get()
+    }
+
     pub fn snapshot(&self) -> TelemetrySnapshot {
+        let (models, queue_depths, worker_batches) = match self.executor.get() {
+            Some(g) => (
+                g.models().iter().map(|&m| m as u64).collect(),
+                g.queue_depths(),
+                g.worker_batches(),
+            ),
+            None => (Vec::new(), Vec::new(), Vec::new()),
+        };
         TelemetrySnapshot {
+            executor_models: models,
+            queue_depth_per_model: queue_depths,
+            batches_per_worker: worker_batches,
             queries: self.queries.load(Ordering::Relaxed),
             model_jobs: self.model_jobs.load(Ordering::Relaxed),
             frames: self.frames.load(Ordering::Relaxed),
@@ -149,6 +213,12 @@ impl Telemetry {
 /// Plain-old-data snapshot for the /stats endpoint and CSVs.
 #[derive(Debug, Clone)]
 pub struct TelemetrySnapshot {
+    /// Zoo model index per executor lane (empty without a pipeline).
+    pub executor_models: Vec<u64>,
+    /// Live queue depth per lane, same order as `executor_models`.
+    pub queue_depth_per_model: Vec<u64>,
+    /// Device batches executed per executor worker.
+    pub batches_per_worker: Vec<u64>,
     pub queries: u64,
     pub model_jobs: u64,
     pub frames: u64,
@@ -168,7 +238,11 @@ pub struct TelemetrySnapshot {
 impl TelemetrySnapshot {
     pub fn to_json(&self) -> crate::json::Value {
         use crate::json::Value;
+        let nums = |v: &[u64]| Value::Arr(v.iter().map(|&x| Value::Num(x as f64)).collect());
         Value::obj(vec![
+            ("executor_models", nums(&self.executor_models)),
+            ("queue_depth_per_model", nums(&self.queue_depth_per_model)),
+            ("batches_per_worker", nums(&self.batches_per_worker)),
             ("queries", Value::Num(self.queries as f64)),
             ("model_jobs", Value::Num(self.model_jobs as f64)),
             ("frames", Value::Num(self.frames as f64)),
@@ -238,5 +312,29 @@ mod tests {
         t.e2e.record(Duration::from_millis(1));
         let s = t.snapshot().to_json().to_string();
         assert!(s.contains("e2e_p95"));
+        assert!(s.contains("queue_depth_per_model"));
+        assert!(s.contains("batches_per_worker"));
+    }
+
+    #[test]
+    fn executor_gauges_surface_in_snapshot() {
+        let t = Telemetry::default();
+        assert!(t.executor().is_none());
+        let depths: Arc<[AtomicUsize]> = (0..2).map(|_| AtomicUsize::new(0)).collect();
+        let batches: Arc<[AtomicU64]> = (0..3).map(|_| AtomicU64::new(0)).collect();
+        t.install_executor(ExecutorGauges::new(
+            vec![4, 7],
+            Arc::clone(&depths),
+            Arc::clone(&batches),
+        ));
+        depths[1].store(5, Ordering::Relaxed);
+        batches[0].store(9, Ordering::Relaxed);
+        let snap = t.snapshot();
+        assert_eq!(snap.executor_models, vec![4, 7]);
+        assert_eq!(snap.queue_depth_per_model, vec![0, 5]);
+        assert_eq!(snap.batches_per_worker, vec![9, 0, 0]);
+        // the gauges are live views, not copies
+        depths[1].store(0, Ordering::Relaxed);
+        assert_eq!(t.snapshot().queue_depth_per_model, vec![0, 0]);
     }
 }

@@ -1,0 +1,279 @@
+//! Executor-invariance tests: the work-stealing pool and the pooled
+//! window arenas must be pure plumbing — the SAME queries must produce
+//! bit-for-bit identical ensemble predictions no matter how many pool
+//! workers execute them (1, 2 or 8), and no matter whether the lead
+//! windows live in fresh owned buffers (`Query::from_vecs`) or in
+//! recycled per-shard pool slabs (the aggregation plane's path).
+//!
+//! The analytic reference applies the completion rule exactly: member
+//! scores summed in model-index order, then the bagging mean. Matching
+//! it bit for bit for every worker count proves the executor's
+//! scheduling freedom (which worker claims which lane, in which order,
+//! with which batch composition) carries no state into the scores.
+//!
+//! Also here: worker-pool failure semantics — an execution error on one
+//! model's lane evicts exactly the queries that touch that model, and
+//! an ensemble that avoids the broken model on the same backend serves
+//! unharmed.
+
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use holmes::ingest::{Frame, Modality};
+use holmes::runtime::backend::sim_score;
+use holmes::runtime::{Engine, SimBackend};
+use holmes::serving::batcher::BatchPolicy;
+use holmes::serving::pipeline::{Pipeline, PipelineConfig, Query};
+use holmes::serving::shards::{ShardConfig, ShardRouter};
+use holmes::zoo::{testkit, Selector, Zoo};
+
+const CLIP: usize = 400;
+const PATIENTS: usize = 6;
+const WINDOWS: usize = 2;
+const MEMBERS: [usize; 3] = [0, 1, 2]; // one per lead, model-index order
+
+fn toy() -> Zoo {
+    testkit::toy_zoo_with(9, 64, 5, CLIP, &[1, 8])
+}
+
+/// Deterministic, pairwise-distinct ECG sample for (patient, lead, i).
+fn lead_sample(patient: usize, lead: usize, i: usize) -> f32 {
+    ((patient * 31 + lead * 7 + i) as f32 * 0.01).sin()
+}
+
+fn window_leads(patient: usize, w: usize) -> [Vec<f32>; 3] {
+    let mut leads: [Vec<f32>; 3] = Default::default();
+    for (l, lead) in leads.iter_mut().enumerate() {
+        *lead = (w * CLIP..(w + 1) * CLIP).map(|i| lead_sample(patient, l, i)).collect();
+    }
+    leads
+}
+
+/// The completion rule, applied analytically: member scores summed in
+/// model-index order, then the bagging mean.
+fn reference() -> HashMap<(usize, u64), u64> {
+    let zoo = toy();
+    let mut out = HashMap::new();
+    for p in 0..PATIENTS {
+        for w in 0..WINDOWS {
+            let leads = window_leads(p, w);
+            let sum: f64 = MEMBERS
+                .iter()
+                .map(|&m| sim_score(m, &leads[zoo.model(m).lead]) as f64)
+                .sum();
+            out.insert((p, w as u64), (sum / MEMBERS.len() as f64).to_bits());
+        }
+    }
+    out
+}
+
+fn spawn_pipeline(zoo: &Zoo, n_workers: usize) -> (Engine, Pipeline) {
+    let engine = Engine::with_backend(zoo, 2, Arc::new(SimBackend::instant(zoo))).unwrap();
+    let ensemble = Selector::from_indices(zoo.n(), MEMBERS);
+    let pipeline = Pipeline::spawn(
+        zoo,
+        &engine,
+        PipelineConfig::new(ensemble).with_workers(n_workers),
+    )
+    .unwrap();
+    assert_eq!(pipeline.n_workers(), n_workers);
+    (engine, pipeline)
+}
+
+/// Fresh owned buffers, submitted straight into the pipeline (all
+/// queries in flight at once, so batching/stealing actually interleave).
+fn run_fresh(n_workers: usize) -> HashMap<(usize, u64), u64> {
+    let zoo = toy();
+    let (_engine, pipeline) = spawn_pipeline(&zoo, n_workers);
+    let mut replies = Vec::new();
+    for p in 0..PATIENTS {
+        for w in 0..WINDOWS {
+            let q = Query::from_vecs(p, w as u64, 0.0, window_leads(p, w));
+            replies.push(((p, w as u64), pipeline.submit(q).unwrap()));
+        }
+    }
+    let mut out = HashMap::new();
+    for ((p, w), rx) in replies {
+        let pred = rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|e| panic!("{n_workers} workers: patient {p} window {w}: {e:?}"));
+        out.insert((p, w), pred.score.to_bits());
+    }
+    assert_eq!(pipeline.pending_len(), 0);
+    out
+}
+
+/// Pooled buffers: the same frame trace through a 2-shard aggregation
+/// plane whose aggregators fill recycled per-shard slab buffers.
+fn run_pooled(n_workers: usize) -> HashMap<(usize, u64), u64> {
+    let zoo = toy();
+    let (_engine, pipeline) = spawn_pipeline(&zoo, n_workers);
+    let telemetry = Arc::clone(pipeline.telemetry());
+
+    let (pred_tx, pred_rx) = mpsc::channel::<(usize, u64, u64)>();
+    let (router, tx) = ShardRouter::spawn(
+        ShardConfig { shards: 2, ..ShardConfig::default() },
+        CLIP,
+        telemetry,
+        |_shard| {
+            let pipeline = pipeline.clone();
+            let pred_tx = pred_tx.clone();
+            move |window| {
+                let q = Query::from_window(window);
+                let (patient, window_id) = (q.patient, q.window_id);
+                let rx = pipeline.submit(q).expect("pipeline alive");
+                let pred_tx = pred_tx.clone();
+                std::thread::spawn(move || {
+                    let p = rx.recv().expect("every window predicts");
+                    let _ = pred_tx.send((patient, window_id, p.score.to_bits()));
+                });
+            }
+        },
+    )
+    .unwrap();
+    drop(pred_tx);
+
+    // round-robin interleaving across patients: per-patient order (the
+    // only order that matters) is fixed, shard/executor interleaving is
+    // not
+    for i in 0..CLIP * WINDOWS {
+        for p in 0..PATIENTS {
+            tx.send(Frame {
+                patient: p,
+                modality: Modality::Ecg,
+                sim_time: i as f64 / 250.0,
+                values: [
+                    lead_sample(p, 0, i),
+                    lead_sample(p, 1, i),
+                    lead_sample(p, 2, i),
+                ]
+                .into(),
+            })
+            .unwrap();
+        }
+    }
+    drop(tx);
+    let dropped = router.join().unwrap();
+    assert_eq!(dropped.iter().sum::<u64>(), 0, "clean trace must drop nothing");
+    drop(pipeline);
+
+    let mut out = HashMap::new();
+    for (patient, window_id, bits) in pred_rx {
+        let prev = out.insert((patient, window_id), bits);
+        assert!(prev.is_none(), "duplicate prediction for patient {patient}");
+    }
+    out
+}
+
+#[test]
+fn predictions_bit_identical_for_1_2_and_8_workers() {
+    let want = reference();
+    for n_workers in [1usize, 2, 8] {
+        let got = run_fresh(n_workers);
+        assert_eq!(got.len(), PATIENTS * WINDOWS, "{n_workers} workers");
+        for (&(p, w), &bits) in &want {
+            let g = got[&(p, w)];
+            assert_eq!(
+                g,
+                bits,
+                "{n_workers} workers: patient {p} window {w}: {} != reference {}",
+                f64::from_bits(g),
+                f64::from_bits(bits)
+            );
+        }
+    }
+}
+
+#[test]
+fn pooled_window_buffers_match_fresh_buffers_bit_for_bit() {
+    let want = reference();
+    for n_workers in [1usize, 2, 8] {
+        let got = run_pooled(n_workers);
+        assert_eq!(
+            got.len(),
+            PATIENTS * WINDOWS,
+            "{n_workers} workers (pooled): every (patient, window) predicts exactly once"
+        );
+        for (&(p, w), &bits) in &want {
+            let g = got.get(&(p, w)).unwrap_or_else(|| {
+                panic!("{n_workers} workers (pooled): missing patient {p} window {w}")
+            });
+            assert_eq!(
+                *g,
+                bits,
+                "{n_workers} workers (pooled): patient {p} window {w} diverged from the \
+                 fresh-buffer reference"
+            );
+        }
+    }
+}
+
+#[test]
+fn worker_pool_failure_evicts_exactly_the_affected_queries() {
+    let zoo = toy();
+    let backend = SimBackend::instant(&zoo).failing_model(1);
+    let engine = Engine::with_backend(&zoo, 2, Arc::new(backend)).unwrap();
+
+    // ensemble touching the broken model: every query is affected and
+    // every one must be evicted (reply hangs up), none may leak
+    let cfg = PipelineConfig::new(Selector::from_indices(zoo.n(), MEMBERS))
+        .with_policy(BatchPolicy { max_batch: 8, timeout: Duration::from_millis(1) })
+        .with_workers(4);
+    let pipeline = Pipeline::spawn(&zoo, &engine, cfg).unwrap();
+    let n = 8u64;
+    for w in 0..n {
+        let rx = pipeline
+            .submit(Query::from_vecs(0, w, 0.0, window_leads(0, w as usize)))
+            .unwrap();
+        assert!(
+            matches!(
+                rx.recv_timeout(Duration::from_secs(30)),
+                Err(mpsc::RecvTimeoutError::Disconnected)
+            ),
+            "query {w} must be evicted, not answered or hung"
+        );
+    }
+    assert_eq!(pipeline.pending_len(), 0, "evicted queries must not leak");
+    let snap = pipeline.telemetry().snapshot();
+    assert_eq!(snap.failures, n, "exactly the affected queries count as failures");
+    assert_eq!(snap.queries, 0);
+    drop(pipeline);
+
+    // an ensemble avoiding the broken model, on the SAME backend and
+    // the same pool shape, is untouched: the blast radius is the lane
+    let healthy = PipelineConfig::new(Selector::from_indices(zoo.n(), [0usize, 2]))
+        .with_workers(4);
+    let pipeline = Pipeline::spawn(&zoo, &engine, healthy).unwrap();
+    for w in 0..n {
+        let pred = pipeline
+            .query(Query::from_vecs(1, w, 0.0, window_leads(1, w as usize)))
+            .unwrap();
+        assert_eq!(pred.n_models, 2);
+    }
+    let snap = pipeline.telemetry().snapshot();
+    assert_eq!(snap.failures, 0);
+    assert_eq!(snap.queries, n);
+}
+
+#[test]
+fn executor_gauges_report_depth_and_worker_batches() {
+    let zoo = toy();
+    let (_engine, pipeline) = spawn_pipeline(&zoo, 2);
+    for w in 0..4u64 {
+        let _ = pipeline.query(Query::from_vecs(0, w, 0.0, window_leads(0, w as usize)));
+    }
+    let snap = pipeline.telemetry().snapshot();
+    assert_eq!(snap.executor_models, vec![0, 1, 2]);
+    assert_eq!(snap.batches_per_worker.len(), 2);
+    assert!(
+        snap.batches_per_worker.iter().sum::<u64>() >= 4,
+        "4 sequential 3-member queries need at least 4 device batches: {:?}",
+        snap.batches_per_worker
+    );
+    assert_eq!(
+        snap.queue_depth_per_model,
+        vec![0, 0, 0],
+        "all lanes drained once every query completed"
+    );
+}

@@ -193,7 +193,7 @@ fn prop_aggregator_windows_partition_the_stream() {
         let window = rng.range(2, 50);
         let n_frames = window * rng.range(1, 6) + rng.range(0, window);
         let mut agg = WindowAggregator::new(0, window);
-        let mut emitted: Vec<std::sync::Arc<[f32]>> = Vec::new();
+        let mut emitted: Vec<holmes::serving::WindowLease> = Vec::new();
         let mut sent: Vec<f32> = Vec::new();
         for i in 0..n_frames {
             let v = i as f32;
