@@ -7,12 +7,13 @@
 //! * **Inline handles** ([`Engine::direct_worker`] — the serving hot
 //!   path): an executor pool thread owns its own backend worker state
 //!   and runs jobs on itself, no job channel and no reply rendezvous.
-//!   Device parallelism stays bounded by the same resource model: every
-//!   inline execution holds one of `n_workers` **device permits** while
-//!   it runs, so `n_workers` is still exactly the "number of GPUs" of
-//!   the paper's system configuration `c` (`workers = 1` reproduces the
-//!   1-GPU contention column of Fig. 10) no matter how many threads the
-//!   serving executor spins.
+//!   Device parallelism stays bounded by one resource model: every
+//!   backend execution — FIFO pool or inline — holds one of `n_workers`
+//!   **device permits** while it runs, so `n_workers` is still exactly
+//!   the "number of GPUs" of the paper's system configuration `c`
+//!   (`workers = 1` reproduces the 1-GPU contention column of Fig. 10)
+//!   no matter how many threads the serving executor spins or whether
+//!   profiling overlaps serving.
 //!
 //! Backends:
 //!
@@ -111,10 +112,13 @@ struct EngineInner {
     /// Backend factory, retained so inline [`DirectWorker`] handles can
     /// be minted after construction (the FIFO workers hold clones too).
     backend: Arc<dyn ExecBackend>,
-    /// Device permits for inline execution: at most `n_workers` inline
-    /// jobs run concurrently, preserving the GPU-count resource model
-    /// independently of the serving executor's thread count.
-    device: Semaphore,
+    /// Device permits: at most `n_workers` backend executions run
+    /// concurrently across BOTH paths — inline [`DirectWorker`] handles
+    /// and the FIFO pool threads each hold one while a job runs — so
+    /// the GPU-count resource model holds even when serving and
+    /// profiling overlap, independently of the serving executor's
+    /// thread count.
+    device: Arc<Semaphore>,
     backend_name: &'static str,
     /// Servable (model, batch) keys per the zoo manifest.
     model_keys: HashSet<ModelKey>,
@@ -165,6 +169,7 @@ impl Engine {
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let stats = Arc::new(EngineStats::default());
+        let device = Arc::new(Semaphore::new(n_workers));
         let clip_len = zoo.manifest.clip_len;
         let backend_name = backend.name();
         let mut workers = Vec::with_capacity(n_workers);
@@ -172,10 +177,11 @@ impl Engine {
             let rx = Arc::clone(&rx);
             let stats = Arc::clone(&stats);
             let backend = Arc::clone(&backend);
+            let device = Arc::clone(&device);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("{backend_name}-worker-{wid}"))
-                    .spawn(move || worker_loop(wid, rx, backend, stats, clip_len))
+                    .spawn(move || worker_loop(wid, rx, backend, stats, device, clip_len))
                     .map_err(Error::Io)?,
             );
         }
@@ -185,7 +191,7 @@ impl Engine {
                 workers: Mutex::new(workers),
                 n_workers,
                 backend,
-                device: Semaphore::new(n_workers),
+                device,
                 backend_name,
                 model_keys,
                 clip_len,
@@ -327,10 +333,10 @@ impl Engine {
     }
 }
 
-/// Counting semaphore bounding concurrent *inline* executions to the
-/// engine's device count (std has none; this one is ~20 lines and only
-/// sits on the execute path, where a job is orders of magnitude more
-/// work than an uncontended lock).
+/// Counting semaphore bounding concurrent backend executions (inline
+/// and FIFO-pool alike) to the engine's device count (std has none;
+/// this one is ~20 lines and only sits on the execute path, where a job
+/// is orders of magnitude more work than an uncontended lock).
 struct Semaphore {
     permits: Mutex<usize>,
     available: std::sync::Condvar,
@@ -406,6 +412,7 @@ fn worker_loop(
     rx: Arc<Mutex<mpsc::Receiver<Job>>>,
     backend: Arc<dyn ExecBackend>,
     stats: Arc<EngineStats>,
+    device: Arc<Semaphore>,
     clip_len: usize,
 ) {
     // Per-worker state (e.g. the PJRT client) lives on this thread only.
@@ -426,7 +433,14 @@ fn worker_loop(
             }
         };
         let Job { key, input, want_input_back, reply } = job;
-        let result = worker.run(key, input.as_slice(), clip_len).map(|out| {
+        // one device permit per backend run, same as the inline path —
+        // FIFO and DirectWorker executions draw from a single pool of
+        // n_workers permits, so overlapping use of the two paths cannot
+        // exceed the configured device count
+        let permit = device.acquire();
+        let run = worker.run(key, input.as_slice(), clip_len);
+        drop(permit);
+        let result = run.map(|out| {
             if out.compiled {
                 stats.compile_count.fetch_add(1, Ordering::Relaxed);
             }

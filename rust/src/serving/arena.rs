@@ -171,10 +171,13 @@ impl LeadSlot {
 
     /// Seal the window: the buffer becomes a shared read-only lease the
     /// router can fan out to every ensemble member by reference.
-    pub fn share(self) -> WindowLease {
-        WindowLease {
-            buf: Some(Arc::new(LeadBuf { data: self.data, pool: self.pool })),
-        }
+    pub fn share(mut self) -> WindowLease {
+        // Empty the slot before it drops: its Drop sees a taken pool and
+        // a zero-length buffer and no-ops, so the buffer is returned (or
+        // freed) exactly once — by the lease's last clone.
+        let data = std::mem::take(&mut self.data);
+        let pool = self.pool.take();
+        WindowLease { buf: Some(Arc::new(LeadBuf { data, pool })) }
     }
 }
 

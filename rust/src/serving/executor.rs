@@ -51,7 +51,7 @@ use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, AtomicUsize, Ordering}
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use super::batcher::{fail_front, flush_batch, largest_batch, BatchItem, BatchPolicy};
+use super::batcher::{fail_front, flush_batch, largest_batch, BatchItem, BatchPolicy, FlushOutcome};
 use super::pipeline::Completer;
 use crate::runtime::{AlignedBatch, Engine};
 use crate::{Error, Result};
@@ -260,6 +260,27 @@ impl Shared {
         self.depths.iter().all(|d| d.load(Ordering::Acquire) == 0)
     }
 
+    /// Fail (evict) everything currently visible on lane `i`, keeping
+    /// the depth gauge honest — THE dead-lane drain, shared by the
+    /// worker dead branch, the reaper, and the executor's final drop
+    /// sweep so the accounting invariant lives in one place. The caller
+    /// must hold the lane's claim flag. Returns how many items failed.
+    fn fail_backlog(&self, i: usize) -> usize {
+        let lane = &self.lanes[i];
+        // SAFETY: the caller holds the claim flag.
+        let staged = unsafe { &mut *lane.staged.get() };
+        let mut total = 0;
+        loop {
+            lane.queue.drain_into(staged);
+            if staged.is_empty() {
+                return total;
+            }
+            let n = fail_front(staged, staged.len(), &lane.done);
+            self.depths[i].fetch_sub(n, Ordering::AcqRel);
+            total += n;
+        }
+    }
+
     /// Drain + flush one claimed lane until it is empty or its next
     /// batch is not yet due. Returns true if anything was resolved.
     /// Never sleeps: leftover partial batches get a deadline and the
@@ -284,10 +305,12 @@ impl Shared {
                 return did;
             }
             if lane.dead.load(Ordering::Relaxed) {
-                let n = fail_front(staged, staged.len(), &lane.done);
-                self.depths[i].fetch_sub(n, Ordering::AcqRel);
-                did = true;
-                continue; // re-drain: racing pushes fail promptly too
+                // fails staged + re-drains until empty, so racing
+                // pushes fail promptly too
+                if self.fail_backlog(i) > 0 {
+                    did = true;
+                }
+                return did;
             }
             let closed = self.closed.load(Ordering::SeqCst);
             let now = self.now_ns();
@@ -301,15 +324,37 @@ impl Shared {
                 return did; // deadline stands; another worker (or we)
                             // will be back when it elapses
             }
-            let out = flush_batch(
-                lane.model_index,
-                dev,
-                self.clip_len,
-                staged,
-                buf,
-                &lane.done,
-                self.max_take,
-            );
+            // A panicking backend (or completion callback) must not
+            // wedge the pool: catch the unwind at the flush boundary and
+            // treat it as a failed execution (lane goes dead below, the
+            // dead branch fails the backlog, pushes start erroring).
+            // `flush_batch` only removes items from `staged` via drains
+            // that complete on unwind, so the before/after length gap is
+            // exactly what left the lane — the depth gauge stays honest
+            // and close-time `all_empty` still converges. Items the
+            // unwound flush dequeued without resolving leak their
+            // pending slots, precisely what the panicked per-model
+            // thread used to leak.
+            let staged_before = staged.len();
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                flush_batch(
+                    lane.model_index,
+                    dev,
+                    self.clip_len,
+                    staged,
+                    buf,
+                    &lane.done,
+                    self.max_take,
+                )
+            }));
+            let out = caught.unwrap_or_else(|_| FlushOutcome {
+                resolved: staged_before.saturating_sub(staged.len()),
+                executed: false,
+                result: Err(Error::serving(format!(
+                    "model {} execution panicked",
+                    lane.model_index
+                ))),
+            });
             if out.resolved > 0 {
                 self.depths[i].fetch_sub(out.resolved, Ordering::AcqRel);
                 did = true;
@@ -319,13 +364,17 @@ impl Shared {
             }
             match out.result {
                 Ok(()) => {
-                    if !staged.is_empty() && staged.len() < self.max_take {
-                        // leftover partial batch: its fill wait starts
-                        // now (the old actor's bounded recv_timeout,
-                        // restarted after each flush)
+                    // the next batch's fill window starts at this flush
+                    // (the old actor's bounded recv_timeout, restarted
+                    // after each flush): covers the leftover partial AND
+                    // a push that raced the flush — it read depth > 0 so
+                    // it skipped arming, and must not inherit the
+                    // just-flushed batch's elapsed deadline (premature
+                    // size-1 flush). A full leftover loops straight into
+                    // another flush regardless of the deadline.
+                    if !self.policy.timeout.is_zero() {
                         lane.deadline_ns.store(self.deadline_from(self.now_ns()), Ordering::Release);
                     }
-                    // full leftover loops straight into another flush
                 }
                 Err(e) => {
                     if !lane.dead.swap(true, Ordering::SeqCst) {
@@ -455,13 +504,24 @@ impl Executor {
         });
         let mut handles = Vec::with_capacity(n_workers);
         for wid in 0..n_workers {
-            let shared = Arc::clone(&shared);
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("exec-worker-{wid}"))
-                    .spawn(move || worker_loop(wid, shared))
-                    .map_err(Error::Io)?,
-            );
+            let worker_shared = Arc::clone(&shared);
+            let spawned = std::thread::Builder::new()
+                .name(format!("exec-worker-{wid}"))
+                .spawn(move || worker_loop(wid, worker_shared));
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // No LaneSender exists yet, so nothing else will ever
+                    // close the pool: shut down the workers already
+                    // running instead of leaking them parked forever.
+                    shared.closed.store(true, Ordering::SeqCst);
+                    shared.wake_all();
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(Error::Io(e));
+                }
+            }
         }
         Ok((
             Executor { shared: Arc::clone(&shared), workers: handles },
@@ -497,6 +557,74 @@ impl Drop for Executor {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // A worker killed by a panic that escaped the flush-boundary
+        // catch may have left admitted queries behind (its join above
+        // returns immediately); fail them so the guarantee holds even
+        // with zero surviving workers. No-op on the normal path, where
+        // workers only exited once every lane was empty.
+        for (i, lane) in self.shared.lanes.iter().enumerate() {
+            if self.shared.depths[i].load(Ordering::Acquire) == 0 {
+                continue;
+            }
+            if lane
+                .claimed
+                .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+                .is_ok()
+            {
+                self.shared.fail_backlog(i);
+                lane.claimed.store(false, Ordering::Release);
+            }
+        }
+    }
+}
+
+/// Accounts for a worker thread dying by panic (anything that escapes
+/// `run_lane`'s flush-boundary catch, e.g. an `eprintln!` to a closed
+/// stderr): decrements `live_workers`, and when the LAST live worker
+/// dies this way marks every lane dead so pushes error (the router
+/// evicts) instead of queueing onto a pool that can no longer execute.
+/// The backlog itself is failed by surviving workers (dead-lane branch)
+/// or, with none left, by `Executor::drop`'s final sweep. Normal exits
+/// skip all of this — they only happen once every lane is drained.
+struct WorkerGuard<'a> {
+    shared: &'a Shared,
+}
+
+impl Drop for WorkerGuard<'_> {
+    fn drop(&mut self) {
+        if !std::thread::panicking() {
+            return;
+        }
+        if self.shared.live_workers.fetch_sub(1, Ordering::SeqCst) == 1 {
+            for lane in self.shared.lanes.iter() {
+                lane.dead.store(true, Ordering::SeqCst);
+            }
+        }
+        self.shared.wake_all();
+    }
+}
+
+/// Releases a lane claim even if the holder unwinds. Execution panics
+/// are caught at the flush boundary in `run_lane`; this covers anything
+/// that escapes it — a panic that leaked the claim flag would otherwise
+/// strand the lane's queries forever and deadlock `Executor::drop`. On
+/// unwind the lane is also marked dead (pushes error → the router
+/// evicts) and the peers are woken so one of them fails the backlog.
+struct ClaimGuard<'a> {
+    shared: &'a Shared,
+    lane: usize,
+}
+
+impl Drop for ClaimGuard<'_> {
+    fn drop(&mut self) {
+        let lane = &self.shared.lanes[self.lane];
+        if std::thread::panicking() {
+            lane.dead.store(true, Ordering::SeqCst);
+        }
+        lane.claimed.store(false, Ordering::Release);
+        if std::thread::panicking() {
+            self.shared.wake_all();
+        }
     }
 }
 
@@ -520,6 +648,7 @@ fn worker_loop(wid: usize, shared: Arc<Shared>) {
             return;
         }
     };
+    let _death_watch = WorkerGuard { shared: shared.as_ref() };
     // the worker's persistent 64-byte-aligned batch arena: allocations
     // scale with the worker count, not the ensemble size
     let mut buf = AlignedBatch::new();
@@ -543,8 +672,9 @@ fn worker_loop(wid: usize, shared: Arc<Shared>) {
             {
                 continue; // another worker owns it — in good hands
             }
+            let claim = ClaimGuard { shared: shared.as_ref(), lane: i };
             did |= shared.run_lane(i, wid, &mut dev, &mut buf);
-            lane.claimed.store(false, Ordering::Release);
+            drop(claim);
             // an in-flight push may have raced our final drain (depth
             // rises before the queue insert): if depth is still
             // non-zero, stay hot so the item is picked up promptly
@@ -616,15 +746,7 @@ fn reaper_loop(shared: &Shared) {
             {
                 continue;
             }
-            // SAFETY: this thread holds the claim flag.
-            let staged = unsafe { &mut *lane.staged.get() };
-            loop {
-                lane.queue.drain_into(staged);
-                if staged.is_empty() {
-                    break;
-                }
-                let n = fail_front(staged, staged.len(), &lane.done);
-                shared.depths[i].fetch_sub(n, Ordering::AcqRel);
+            if shared.fail_backlog(i) > 0 {
                 did = true;
             }
             lane.claimed.store(false, Ordering::Release);
@@ -738,6 +860,78 @@ mod tests {
         let p = prx.recv_timeout(Duration::from_secs(30)).expect("deadline flush");
         assert!((0.0..=1.0).contains(&p.score));
         assert_eq!(pending.len(), 0);
+    }
+
+    struct PanicBackend;
+
+    impl crate::runtime::ExecBackend for PanicBackend {
+        fn name(&self) -> &'static str {
+            "panic"
+        }
+
+        fn worker(&self, _wid: usize) -> crate::Result<Box<dyn crate::runtime::ExecWorker>> {
+            Ok(Box::new(PanicWorker))
+        }
+    }
+
+    struct PanicWorker;
+
+    impl crate::runtime::ExecWorker for PanicWorker {
+        fn run(
+            &mut self,
+            _key: crate::runtime::ModelKey,
+            _input: &[f32],
+            _clip_len: usize,
+        ) -> crate::Result<crate::runtime::BackendOutput> {
+            panic!("injected backend panic")
+        }
+    }
+
+    #[test]
+    fn panicking_execution_marks_lane_dead_and_pool_survives() {
+        let zoo = testkit::toy_zoo_with(4, 16, 3, 40, &[1, 8]);
+        let engine = Engine::with_backend(&zoo, 1, Arc::new(PanicBackend)).unwrap();
+        let pending = Arc::new(PendingSlots::new(1));
+        let telemetry = Arc::new(Telemetry::default());
+        let members =
+            vec![(0usize, Completer::new(Arc::clone(&pending), Arc::clone(&telemetry), 0))];
+        let policy = BatchPolicy { max_batch: 8, timeout: Duration::ZERO };
+        let (exec, tx) = Executor::spawn(&engine, members, policy, 1).unwrap();
+        let clip = engine.clip_len();
+        pending.insert(0, meta(None));
+        tx.push(
+            0,
+            BatchItem {
+                query_id: 0,
+                input: WindowLease::from_vec(vec![0.1; clip]),
+                enqueued: Instant::now(),
+            },
+        )
+        .unwrap();
+        // the panic is caught at the flush boundary: the worker survives,
+        // the lane goes dead, and pushes start erroring
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            pending.insert(1, meta(None));
+            let r = tx.push(
+                0,
+                BatchItem {
+                    query_id: 1,
+                    input: WindowLease::from_vec(vec![0.2; clip]),
+                    enqueued: Instant::now(),
+                },
+            );
+            if r.is_err() {
+                pending.evict(1);
+                break;
+            }
+            assert!(Instant::now() < deadline, "lane never died after the panic");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        drop(tx);
+        drop(exec); // must not hang: claim released, depth reconciled
+        assert_eq!(pending.len(), 0, "panicked batch must evict its queries");
+        assert!(telemetry.failures.load(Ordering::Relaxed) >= 1);
     }
 
     #[test]
