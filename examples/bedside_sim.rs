@@ -12,20 +12,39 @@
 //! is exercisable anywhere (CI smoke runs use exactly this).
 //!
 //! ```bash
-//! cargo run --release --example bedside_sim [patients] [speedup] [duration_s] [workers]
+//! cargo run --release --example bedside_sim \
+//!     [patients] [speedup] [duration_s] [workers] \
+//!     [--adaptive-batch] [--slo-ms MS]
 //! ```
+//!
+//! `--adaptive-batch` swaps the static 1 ms batch fill deadline for the
+//! SLO-aware controller; an explicit `--slo-ms` turns the p95-vs-SLO
+//! comparison into a hard check (nonzero exit on violation) — this is
+//! how the CI smoke exercises the controller path on every PR.
 
 use holmes::exp::bedside::{run_bedside, BedsideConfig};
 use holmes::zoo::{testkit, Zoo};
 
 fn main() -> holmes::Result<()> {
-    let args: Vec<String> = std::env::args().collect();
-    let patients: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
-    let speedup: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8.0);
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    // the crate's own parser handles --flag, --opt value AND --opt=value
+    // (and errors on malformed forms instead of silently shifting the
+    // positionals, which would disable the SLO gate below)
+    let args = holmes::cli::parse(&argv, &["slo-ms"])?;
+    let adaptive = args.flag("adaptive-batch");
+    let slo_is_a_gate = args.get("slo-ms").is_some();
+    let slo_ms = args.f64_or("slo-ms", 1000.0)?;
+    // cli::parse files the first bare argument as a "subcommand" — for
+    // this example it is simply the first positional
+    let mut pos: Vec<String> = Vec::new();
+    pos.extend(args.subcommand.clone());
+    pos.extend(args.positionals.iter().cloned());
+    let patients: usize = pos.first().and_then(|s| s.parse().ok()).unwrap_or(64);
+    let speedup: f64 = pos.get(1).and_then(|s| s.parse().ok()).unwrap_or(8.0);
     // enough simulated time for several windows per patient
-    let duration_s: f64 = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(16.0);
-    // executor pool threads (0 = core-count default)
-    let workers: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(0);
+    let duration_s: f64 = pos.get(2).and_then(|s| s.parse().ok()).unwrap_or(16.0);
+    // executor pool threads (0 = device-permit-capped core default)
+    let workers: usize = pos.get(3).and_then(|s| s.parse().ok()).unwrap_or(0);
     let zoo = match Zoo::load("artifacts") {
         Ok(zoo) => zoo,
         Err(_) => {
@@ -45,6 +64,8 @@ fn main() -> holmes::Result<()> {
             seed: 42,
             shards: 0,
             workers,
+            slo_ms,
+            adaptive,
         },
     )?;
     // the paper's claim: sub-second p95 at 64 beds
@@ -52,6 +73,13 @@ fn main() -> holmes::Result<()> {
         println!("\n✓ within the paper's 1.15 s p95 envelope at {patients} beds");
     } else {
         println!("\n✗ above the paper's 1.15 s p95 envelope ({:.3}s)", report.e2e_p95);
+    }
+    if slo_is_a_gate && report.e2e_p95 > report.slo_s {
+        eprintln!(
+            "FAIL: e2e p95 {:.3}s exceeds the configured {:.0} ms SLO",
+            report.e2e_p95, slo_ms
+        );
+        std::process::exit(1);
     }
     Ok(())
 }

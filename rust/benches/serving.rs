@@ -31,6 +31,13 @@
 //!   looping recv → pack → `execute_batch` through the engine FIFO
 //!   (`legacy_execute/...`), identical query load per model count. The
 //!   16-model case is the headline: 4 threads instead of 16.
+//! * `execute/adaptive-vs-static/{burst,trickle}` — the SLO-aware
+//!   adaptive deadline controller vs the static fill window
+//!   (`legacy_execute/...`) on identical pools and loads: the burst
+//!   shape leaves a partial tail batch per lane, where the static
+//!   policy always waits the full window and the controller arms only
+//!   the depth-scaled remainder; the trickle shape checks the relaxed
+//!   (launch-amortizing) wait stays comparable.
 //! * `aggregate/pooled-vs-alloc` — window aggregation into recycled
 //!   per-shard slab buffers (`LeadPool` leases, dropped → reused) vs
 //!   the old emit path allocating fresh `Vec` + `Arc<[f32]>` per lead
@@ -56,6 +63,7 @@ use holmes::runtime::{AlignedBatch, Engine, SimBackend};
 use holmes::serving::aggregator::{WindowAggregator, WindowData};
 use holmes::serving::arena::{LeadPool, WindowLease};
 use holmes::serving::batcher::{BatchItem, BatchPolicy};
+use holmes::serving::control::DEFAULT_SLO;
 use holmes::serving::executor::Executor;
 use holmes::serving::pipeline::{
     Completer, PendingMeta, PendingSlots, Pipeline, PipelineConfig, Query,
@@ -134,6 +142,10 @@ fn main() {
     // thread per model, 1/4/16-model ensembles at a fixed pool size
     bench_steal_vs_thread_per_model(&mut b);
 
+    // ---- layer 2d: fill deadlines — SLO-aware adaptive controller vs
+    // the static policy, burst (tail-batch wait) and trickle shapes
+    bench_adaptive_vs_static(&mut b);
+
     // ---- layer 0b: window arenas — pooled slab buffers vs a fresh
     // Vec + Arc allocation per emitted lead window
     bench_pooled_vs_alloc(&mut b);
@@ -161,7 +173,7 @@ fn main() {
     // wait so the measurement is pure data-plane overhead
     let members: Vec<usize> = zoo.servable_indices().into_iter().take(3).collect();
     let ensemble = Selector::from_indices(zoo.n(), members);
-    let policy = BatchPolicy { max_batch: 8, timeout: Duration::ZERO };
+    let policy = BatchPolicy { max_batch: 8, timeout: Duration::ZERO, ..BatchPolicy::default() };
     let clips = data::make_clips(4, clip_len, 21, &SynthConfig::default());
     let shared = clips.shared();
 
@@ -566,7 +578,7 @@ fn bench_steal_vs_thread_per_model(b: &mut Bencher) {
     let zoo = testkit::toy_zoo_with(16, 16, 7, EXE_CLIP, &[1, 8]);
     let engine =
         Engine::with_backend(&zoo, 2, Arc::new(SimBackend::instant(&zoo))).expect("engine");
-    let policy = BatchPolicy { max_batch: 8, timeout: Duration::ZERO };
+    let policy = BatchPolicy { max_batch: 8, timeout: Duration::ZERO, ..BatchPolicy::default() };
     let leads: [WindowLease; 3] = [
         WindowLease::from_vec((0..EXE_CLIP).map(|i| (i as f32 * 0.01).sin()).collect()),
         WindowLease::from_vec((0..EXE_CLIP).map(|i| (i as f32 * 0.02).cos()).collect()),
@@ -584,7 +596,8 @@ fn bench_steal_vs_thread_per_model(b: &mut Bencher) {
             })
             .collect();
         let (exec, lanes) =
-            Executor::spawn(&engine, members, policy, EXE_WORKERS).expect("executor");
+            Executor::spawn(&engine, members, policy, EXE_WORKERS, DEFAULT_SLO, None)
+                .expect("executor");
         let mut next_id = 0u64;
         b.bench(&format!("execute/steal-vs-thread-per-model/{m}-models"), || {
             black_box(exe_round(&pending, &leads, &lane_leads, &mut next_id, |pos, item| {
@@ -605,6 +618,134 @@ fn bench_steal_vs_thread_per_model(b: &mut Bencher) {
             }))
         });
         plane.shutdown();
+    }
+}
+
+/// Deadline-controller bench shape: the SAME executor pool and load,
+/// differing only in the fill-deadline source — the SLO-aware
+/// [`DeadlineController`] (adaptive, `timeout_max` = the static
+/// timeout) vs the static [`BatchPolicy::timeout`] (`legacy_` prefix).
+///
+/// * **burst** — one round submits [`ADP_BURST`] queries back to back
+///   and waits for every prediction. `ADP_BURST % max_batch != 0`, so
+///   after the full batches drain each lane holds a partial tail: the
+///   static policy waits the whole 2 ms fill window for stragglers that
+///   never come, while the controller — seeing backlog burn down and a
+///   wide-open SLO — arms only the depth-scaled remainder.
+/// * **trickle** — closed loop, one query in flight at a time: depth
+///   never exceeds 1, so the controller relaxes toward the cap and both
+///   planes pay a comparable (deliberate, launch-amortizing) wait.
+const ADP_MODELS: usize = 3;
+const ADP_BURST: usize = 36; // 36 % 8 = 4 → a partial tail batch per lane
+const ADP_TRICKLE: usize = 4;
+const ADP_FILL: Duration = Duration::from_millis(2);
+
+/// Submit `n` queries over `m` lanes; `closed_loop` waits for each
+/// prediction before submitting the next (trickle), otherwise all are
+/// in flight together (burst).
+fn adp_round<F: FnMut(usize, BatchItem)>(
+    pending: &PendingSlots,
+    leads: &[WindowLease; 3],
+    lane_leads: &[usize],
+    next_id: &mut u64,
+    n: usize,
+    closed_loop: bool,
+    mut push: F,
+) -> f64 {
+    let m = lane_leads.len();
+    let mut acc = 0.0;
+    let mut replies = Vec::with_capacity(n);
+    for _ in 0..n {
+        let id = *next_id;
+        *next_id += 1;
+        let (tx, rx) = mpsc::sync_channel(1);
+        pending.insert(
+            id,
+            PendingMeta {
+                patient: 0,
+                window_id: id,
+                sim_end: 0.0,
+                emitted: Instant::now(),
+                reply: Some(tx),
+            },
+        );
+        for pos in 0..m {
+            push(
+                pos,
+                BatchItem {
+                    query_id: id,
+                    input: leads[lane_leads[pos]].clone(),
+                    enqueued: Instant::now(),
+                },
+            );
+        }
+        if closed_loop {
+            acc += rx.recv().expect("every query predicts").score;
+        } else {
+            replies.push(rx);
+        }
+    }
+    for rx in replies {
+        acc += rx.recv().expect("every query predicts").score;
+    }
+    acc
+}
+
+fn bench_adaptive_vs_static(b: &mut Bencher) {
+    let zoo = testkit::toy_zoo_with(ADP_MODELS, 16, 7, EXE_CLIP, &[1, 8]);
+    let engine =
+        Engine::with_backend(&zoo, 2, Arc::new(SimBackend::instant(&zoo))).expect("engine");
+    let leads: [WindowLease; 3] = [
+        WindowLease::from_vec((0..EXE_CLIP).map(|i| (i as f32 * 0.01).sin()).collect()),
+        WindowLease::from_vec((0..EXE_CLIP).map(|i| (i as f32 * 0.02).cos()).collect()),
+        WindowLease::from_vec((0..EXE_CLIP).map(|i| (i as f32 * 0.03).sin()).collect()),
+    ];
+    let lane_leads: Vec<usize> = (0..ADP_MODELS).map(|i| zoo.model(i).lead).collect();
+    let adaptive_policy = BatchPolicy {
+        max_batch: 8,
+        timeout: ADP_FILL,
+        timeout_min: Duration::ZERO,
+        timeout_max: ADP_FILL, // same cap as the static window: apples to apples
+        adaptive: true,
+    };
+    let static_policy = BatchPolicy { max_batch: 8, timeout: ADP_FILL, ..BatchPolicy::default() };
+    for (prefix, policy) in [("", adaptive_policy), ("legacy_", static_policy)] {
+        for (shape, n, closed_loop) in
+            [("burst", ADP_BURST, false), ("trickle", ADP_TRICKLE, true)]
+        {
+            let pending = Arc::new(PendingSlots::new(ADP_MODELS));
+            let telemetry = Arc::new(Telemetry::default());
+            let members: Vec<(usize, Completer)> = (0..ADP_MODELS)
+                .map(|pos| {
+                    (pos, Completer::new(Arc::clone(&pending), Arc::clone(&telemetry), pos))
+                })
+                .collect();
+            // the adaptive controller reads the live T_q/T_s split the
+            // completers record — the full feedback loop is in-bench
+            let (exec, lanes) = Executor::spawn(
+                &engine,
+                members,
+                policy,
+                EXE_WORKERS,
+                Duration::from_secs(1),
+                Some(Arc::clone(&telemetry)),
+            )
+            .expect("executor");
+            let mut next_id = 0u64;
+            b.bench(&format!("{prefix}execute/adaptive-vs-static/{shape}"), || {
+                black_box(adp_round(
+                    &pending,
+                    &leads,
+                    &lane_leads,
+                    &mut next_id,
+                    n,
+                    closed_loop,
+                    |pos, item| lanes.push(pos, item).expect("lane alive"),
+                ))
+            });
+            drop(lanes);
+            drop(exec);
+        }
     }
 }
 

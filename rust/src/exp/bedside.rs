@@ -42,10 +42,18 @@ pub struct BedsideConfig {
     /// Aggregation shards; 0 = core-count heuristic
     /// ([`crate::serving::default_shards`]).
     pub shards: usize,
-    /// Executor pool threads; 0 = core-count default
-    /// ([`crate::serving::default_workers`]). Independent of the
-    /// ensemble size — the point of the work-stealing executor.
+    /// Executor pool threads; 0 = core-count default capped by the
+    /// device-permit count ([`crate::serving::default_workers_for`]).
+    /// Independent of the ensemble size — the point of the
+    /// work-stealing executor.
     pub workers: usize,
+    /// End-to-end latency SLO in milliseconds (`--slo-ms`; the paper's
+    /// sub-second bound → 1000). Steers the adaptive deadline
+    /// controller and is reported against the measured p95.
+    pub slo_ms: f64,
+    /// Replace the static batch fill deadline with the SLO-aware
+    /// adaptive controller (`--adaptive-batch`).
+    pub adaptive: bool,
 }
 
 impl Default for BedsideConfig {
@@ -60,6 +68,8 @@ impl Default for BedsideConfig {
             seed: 42,
             shards: 0,
             workers: 0,
+            slo_ms: 1000.0,
+            adaptive: false,
         }
     }
 }
@@ -76,6 +86,13 @@ pub struct BedsideReport {
     /// Device batches executed by each executor pool worker — a skewed
     /// vector means the work-stealing pool was imbalanced.
     pub batches_per_worker: Vec<u64>,
+    /// Batch fill deadline last armed per ensemble member, ns: the
+    /// static policy timeout, or — under `--adaptive-batch` — where the
+    /// controller had steered each model's window by end of run.
+    pub fill_wait_ns_per_model: Vec<u64>,
+    /// The configured end-to-end SLO, seconds (p95 is judged against
+    /// it in the printed report).
+    pub slo_s: f64,
     pub e2e_p50: f64,
     pub e2e_p95: f64,
     pub e2e_p99: f64,
@@ -88,12 +105,22 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
     let ensemble = super::fig10_scalability::holmes_servable_ensemble(zoo, 0.2);
     let n_shards =
         if cfg.shards == 0 { crate::serving::default_shards() } else { cfg.shards };
+    // same rule Executor::spawn applies for workers == 0: the hardware
+    // heuristic capped at 2 threads per device permit
     let n_workers =
-        if cfg.workers == 0 { crate::serving::default_workers() } else { cfg.workers };
+        if cfg.workers == 0 { crate::serving::default_workers_for(cfg.gpus) } else { cfg.workers };
     println!(
         "bedside sim: {} patients, {} gpus, {} aggregation shards, {} executor workers, \
-         ΔT={}s, speedup {}×, {}s sim",
-        cfg.patients, cfg.gpus, n_shards, n_workers, cfg.window_s, cfg.speedup, cfg.duration_s
+         ΔT={}s, speedup {}×, {}s sim, batch deadlines {} (SLO {} ms)",
+        cfg.patients,
+        cfg.gpus,
+        n_shards,
+        n_workers,
+        cfg.window_s,
+        cfg.speedup,
+        cfg.duration_s,
+        if cfg.adaptive { "ADAPTIVE" } else { "static" },
+        cfg.slo_ms
     );
     println!(
         "ensemble ({} models): {:?}",
@@ -112,10 +139,18 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
     let synth_cfg = SynthConfig::from(&zoo.manifest.calibration);
     let t_start = Instant::now();
 
+    let mut policy = crate::serving::batcher::BatchPolicy::default();
+    if cfg.adaptive {
+        policy = policy.adaptive();
+    }
+    let slo = std::time::Duration::from_secs_f64((cfg.slo_ms / 1000.0).max(0.001));
     let pipeline = Pipeline::spawn(
         zoo,
         &engine,
-        PipelineConfig::new(ensemble.clone()).with_workers(n_workers),
+        PipelineConfig::new(ensemble.clone())
+            .with_workers(n_workers)
+            .with_policy(policy)
+            .with_slo(slo),
     )?;
     let telemetry = Arc::clone(pipeline.telemetry());
 
@@ -248,12 +283,18 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
         .executor()
         .map(|g| g.worker_batches())
         .unwrap_or_default();
+    let fill_wait_ns_per_model = telemetry
+        .executor()
+        .map(|g| g.fill_waits_ns())
+        .unwrap_or_default();
     let report = BedsideReport {
         predictions: pred_rows.len(),
         frames,
         frames_dropped,
         dropped_per_shard,
         batches_per_worker,
+        fill_wait_ns_per_model,
+        slo_s: slo.as_secs_f64(),
         e2e_p50: telemetry.e2e.percentile(50.0),
         e2e_p95: telemetry.e2e.percentile(95.0),
         e2e_p99: telemetry.e2e.percentile(99.0),
@@ -277,8 +318,19 @@ fn print_report(r: &BedsideReport, telemetry: &Telemetry) {
     if let Some(g) = telemetry.executor() {
         println!("model queue depths   {:>12?}  (end of run)", g.queue_depths());
     }
+    let waits_ms: Vec<f64> = r
+        .fill_wait_ns_per_model
+        .iter()
+        .map(|&ns| (ns as f64 / 1e6 * 1000.0).round() / 1000.0)
+        .collect();
+    println!("fill deadlines (ms)  {:>12?}  (per model, last armed)", waits_ms);
     println!("e2e latency p50      {:>11.4}s", r.e2e_p50);
-    println!("e2e latency p95      {:>11.4}s", r.e2e_p95);
+    println!(
+        "e2e latency p95      {:>11.4}s  ({} the {:.1}s SLO)",
+        r.e2e_p95,
+        if r.e2e_p95 <= r.slo_s { "within" } else { "ABOVE" },
+        r.slo_s
+    );
     println!("e2e latency p99      {:>11.4}s", r.e2e_p99);
     println!("queueing p95         {:>11.4}s", telemetry.queueing.percentile(95.0));
     println!("exec mean            {:>11.4}s", telemetry.exec.mean());

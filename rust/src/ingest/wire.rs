@@ -116,7 +116,14 @@ impl Frame {
         if buf[6] != 0 || buf[7] != 0 {
             return Err(Error::wire("nonzero reserved bytes"));
         }
-        let patient = u64::from_le_bytes(take8(buf, 8)) as usize;
+        // the wire field is a u64 but `Frame.patient` is a usize: a
+        // lossy `as` cast would silently alias two distinct patients
+        // into one aggregator on 32-bit targets — reject instead (the
+        // frame counts as malformed/dropped upstream)
+        let patient_raw = u64::from_le_bytes(take8(buf, 8));
+        let patient = usize::try_from(patient_raw).map_err(|_| {
+            Error::wire(format!("patient id {patient_raw} exceeds this platform's usize"))
+        })?;
         let sim_time = f64::from_le_bytes(take8(buf, 16));
         if !sim_time.is_finite() {
             return Err(Error::wire("non-finite sim_time"));
@@ -258,6 +265,27 @@ mod tests {
         };
         let (back, _) = Frame::from_bytes(&labs.to_bytes()).unwrap();
         assert_eq!(back.values.len(), MAX_WIRE_VALUES);
+    }
+
+    #[test]
+    fn patient_id_boundary_roundtrips_or_rejects() {
+        // the largest locally-representable id always survives a trip
+        let mut f = frame();
+        f.patient = usize::MAX;
+        let (g, _) = Frame::from_bytes(&f.to_bytes()).unwrap();
+        assert_eq!(g.patient, usize::MAX);
+        // a wire id beyond usize must be a decode error, never a
+        // truncated alias of another patient
+        let mut bytes = frame().to_bytes();
+        bytes[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        if (usize::MAX as u64) < u64::MAX {
+            // 32-bit target: u64::MAX is unrepresentable → rejected
+            assert!(Frame::from_bytes(&bytes).is_err());
+        } else {
+            // 64-bit target: the whole u64 space round-trips exactly
+            let (g, _) = Frame::from_bytes(&bytes).unwrap();
+            assert_eq!(g.patient as u64, u64::MAX);
+        }
     }
 
     #[test]

@@ -39,6 +39,9 @@ COMMANDS:
       --http ADDR            also open an HTTP ingest server
       --shards N             aggregation shards (0 = auto)   [0]
       --workers N            executor pool threads (0 = auto) [0]
+      --slo-ms MS            end-to-end latency SLO          [1000]
+      --adaptive-batch       SLO-aware adaptive batch fill deadlines
+                             (default: static 1 ms fill window)
   profile                  measured latency profile (μ, T_s, T_q) of an ensemble
       --models id1,id2,...   zoo model ids (default: HOLMES servable pick)
       --gpus N --patients N                                  [2, 64]
@@ -65,7 +68,7 @@ fn run(argv: &[String]) -> Result<()> {
         argv,
         &[
             "artifacts", "budget", "gpus", "patients", "seed", "window", "speedup", "duration",
-            "http", "models", "out", "shards", "workers",
+            "http", "models", "out", "shards", "workers", "slo-ms",
         ],
     )?;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -145,6 +148,8 @@ fn run(argv: &[String]) -> Result<()> {
                     seed: args.u64_or("seed", 42)?,
                     shards: args.usize_or("shards", 0)?,
                     workers: args.usize_or("workers", 0)?,
+                    slo_ms: args.f64_or("slo-ms", 1000.0)?,
+                    adaptive: args.flag("adaptive-batch"),
                 },
             )?;
         }

@@ -57,10 +57,27 @@ pub struct BatchItem {
 }
 
 /// Batching policy knobs.
+///
+/// With `adaptive` off (the default) only `max_batch` and `timeout`
+/// matter — the original static policy, unchanged. With `adaptive` on,
+/// `timeout` is replaced per arm by the
+/// [`DeadlineController`](super::control::DeadlineController)'s dynamic
+/// fill wait, bounded to `[timeout_min, timeout_max]` (burst/overload →
+/// toward `timeout_min`, trickle → toward `timeout_max`).
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
     pub max_batch: usize,
+    /// Static fill deadline; also the behavior `adaptive = false`
+    /// degrades to.
     pub timeout: Duration,
+    /// Floor of the adaptive fill wait (0 = flush immediately under
+    /// overload). Ignored when `adaptive` is off.
+    pub timeout_min: Duration,
+    /// Cap of the adaptive fill wait — what trickle load relaxes to.
+    /// Ignored when `adaptive` is off.
+    pub timeout_max: Duration,
+    /// Consult the deadline controller instead of the static `timeout`.
+    pub adaptive: bool,
 }
 
 impl Default for BatchPolicy {
@@ -69,7 +86,32 @@ impl Default for BatchPolicy {
         // latency (measured 5.4 ms pipeline overhead on an 0.3 ms model).
         // Bursts arrive within µs of each other, so an immediate drain +
         // one short wait captures them; 1 ms caps the idle-path penalty.
-        BatchPolicy { max_batch: 8, timeout: Duration::from_millis(1) }
+        // The adaptive bounds only engage with `--adaptive-batch`: the
+        // controller may then wait up to 5 ms under trickle load (five
+        // launch amortization windows) and not at all under pressure.
+        BatchPolicy {
+            max_batch: 8,
+            timeout: Duration::from_millis(1),
+            timeout_min: Duration::ZERO,
+            timeout_max: Duration::from_millis(5),
+            adaptive: false,
+        }
+    }
+}
+
+impl BatchPolicy {
+    /// Builder: switch the policy to SLO-aware adaptive deadlines.
+    pub fn adaptive(mut self) -> Self {
+        self.adaptive = true;
+        self
+    }
+
+    /// True when lanes never hold a fill window at all (static policy
+    /// with a zero timeout) — the executor's flush-immediately fast
+    /// path. An adaptive policy always goes through the controller,
+    /// whose wait may be zero at times but is recomputed per arm.
+    pub fn never_waits(&self) -> bool {
+        !self.adaptive && self.timeout.is_zero()
     }
 }
 

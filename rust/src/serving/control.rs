@@ -1,0 +1,373 @@
+//! SLO-aware adaptive batch-deadline controller.
+//!
+//! The paper's central claim is that ICU serving must navigate the
+//! accuracy/latency tradeoff *under a latency SLO while load varies*.
+//! Until this module, the executor's fill deadline was a compile-time
+//! constant ([`BatchPolicy::timeout`], 1 ms): right for the average
+//! case, wrong at both extremes — under a burst a partial tail batch
+//! still waits the full fill window (pure added queueing), and under a
+//! trickle the window is too short to amortize device launches.
+//!
+//! [`DeadlineController`] replaces the constant with a bounded dynamic
+//! fill wait computed from **live** signals:
+//!
+//! * the lane's queue depth (the executor's [`ExecutorGauges`] counter,
+//!   read at arm time) — a filling lane needs less patience, a full one
+//!   none at all;
+//! * the rolling T_q/T_s split (the `queueing`/`exec` histograms, whose
+//!   percentiles stay live forever now that they fall back to the
+//!   log-scale buckets once the sample reservoir saturates);
+//! * the configured end-to-end SLO (`--slo-ms`, default 1000 ms — the
+//!   paper's sub-second bound).
+//!
+//! ## Control law
+//!
+//! ```text
+//!   pressure = (T_q(p95) + T_s(p95)) / SLO          observed tail vs budget
+//!   scale    = clamp(1 − pressure, 0, 1)            1 = idle, 0 = at the SLO
+//!   wait     = min + (max − min) · scale · (B − depth)/B
+//! ```
+//!
+//! where `B` is the *effective* fill cap (the executor's `max_take` —
+//! `policy.max_batch` clamped to the largest compiled batch size), and
+//! the result is clamped to `[timeout_min, timeout_max]`: the moment
+//! `depth ≥ B` the wait collapses to the floor, `timeout_min` (0 by
+//! default — and the executor's due-check flushes a full batch
+//! immediately regardless of the armed wait, so a nonzero floor only
+//! shows up in the gauges, never as an actual full-batch delay). Under burst/overload
+//! both factors collapse the wait toward immediate flush: queueing is
+//! shed and batches grow to the fill cap on backlog alone. Under
+//! trickle load the wait relaxes toward `timeout_max`, amortizing
+//! device launches. The SLO term is refreshed at most once per
+//! millisecond (a cached permille scale behind one atomic), so the
+//! per-push cost is two relaxed loads.
+//!
+//! ## Determinism contract
+//!
+//! Adaptation changes *when* a lane's batch flushes — never which model
+//! scores a query, the per-member score cells, or the model-index-order
+//! summation. Predictions are bit-for-bit identical with adaptation on
+//! or off, for any worker count (`tests/executor.rs`).
+//!
+//! With [`BatchPolicy::adaptive`] unset the controller is inert: every
+//! query returns the static `timeout`, i.e. exactly the pre-controller
+//! policy.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::batcher::BatchPolicy;
+use super::telemetry::Telemetry;
+
+/// The paper's end-to-end serving bound: sub-second predictions.
+pub const DEFAULT_SLO: Duration = Duration::from_millis(1000);
+
+/// How stale the cached SLO-pressure scale may get before a caller
+/// recomputes it from the live histograms.
+const REFRESH_NS: u64 = 1_000_000; // 1 ms
+
+/// Per-lane adaptive fill-deadline controller (see the module docs for
+/// the control law). One instance per executor; shared with the
+/// pipeline so `/stats` and the bedside report can surface the adapted
+/// deadlines per model.
+pub struct DeadlineController {
+    adaptive: bool,
+    static_wait_ns: u64,
+    min_ns: u64,
+    max_ns: u64,
+    /// Depth at which a batch is *actually* full — the executor's
+    /// effective `max_take` (`policy.max_batch` clamped to the largest
+    /// compiled batch size), not the nominal policy knob.
+    max_fill: u64,
+    slo_ns: u64,
+    /// Live T_q/T_s source; `None` = depth-only adaptation (tests,
+    /// benches driving the executor without a pipeline).
+    telemetry: Option<Arc<Telemetry>>,
+    epoch: Instant,
+    /// Cached SLO-headroom scale, permille in `[0, 1000]`.
+    scale_pm: AtomicU64,
+    /// Nanos-since-epoch after which the scale must be recomputed.
+    refresh_at_ns: AtomicU64,
+    /// Last computed fill wait per lane, ns — the observability gauge
+    /// behind `/stats` `fill_wait_ns_per_model` and the bedside report.
+    lane_waits: Arc<[AtomicU64]>,
+}
+
+impl DeadlineController {
+    /// Controller for `n_lanes` ensemble members under `policy`, with
+    /// `slo` as the end-to-end budget. `max_fill` is the depth at which
+    /// a batch really flushes full — callers inside the executor pass
+    /// the effective `max_take` so the depth relaxation is calibrated
+    /// to actual flush sizes, not the nominal `policy.max_batch`.
+    /// `telemetry` feeds the rolling T_q/T_s split; without it the SLO
+    /// term stays at full headroom and only queue depth adapts the
+    /// wait.
+    pub fn new(
+        n_lanes: usize,
+        policy: &BatchPolicy,
+        max_fill: usize,
+        slo: Duration,
+        telemetry: Option<Arc<Telemetry>>,
+    ) -> Self {
+        let ns = |d: Duration| u64::try_from(d.as_nanos()).unwrap_or(u64::MAX);
+        let static_wait_ns = ns(policy.timeout);
+        let min_ns = ns(policy.timeout_min);
+        // a cap below the floor would make the clamp range empty
+        let max_ns = ns(policy.timeout_max).max(min_ns);
+        let lane_waits: Arc<[AtomicU64]> = (0..n_lanes)
+            .map(|_| AtomicU64::new(if policy.adaptive { max_ns } else { static_wait_ns }))
+            .collect();
+        DeadlineController {
+            adaptive: policy.adaptive,
+            static_wait_ns,
+            min_ns,
+            max_ns,
+            max_fill: max_fill.max(1) as u64,
+            slo_ns: ns(slo).max(1),
+            telemetry,
+            epoch: Instant::now(),
+            scale_pm: AtomicU64::new(1000),
+            refresh_at_ns: AtomicU64::new(0),
+            lane_waits,
+        }
+    }
+
+    /// Convenience for standalone callers (tests): nominal
+    /// `policy.max_batch` fill cap, default SLO, no telemetry — static
+    /// policies are exactly preserved and adaptive ones adapt on queue
+    /// depth alone.
+    pub fn for_policy(n_lanes: usize, policy: &BatchPolicy) -> Self {
+        Self::new(n_lanes, policy, policy.max_batch, DEFAULT_SLO, None)
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        self.adaptive
+    }
+
+    pub fn slo(&self) -> Duration {
+        Duration::from_nanos(self.slo_ns)
+    }
+
+    /// Number of lanes this controller was built for.
+    pub fn lanes(&self) -> usize {
+        self.lane_waits.len()
+    }
+
+    /// Shared per-lane gauges of the last computed fill wait (ns).
+    pub fn lane_waits(&self) -> Arc<[AtomicU64]> {
+        Arc::clone(&self.lane_waits)
+    }
+
+    /// The fill wait (ns) to arm for `lane` given its current queue
+    /// depth — the executor adds this to "now" to form the lane's flush
+    /// deadline. Static policies return `timeout` unconditionally.
+    pub fn fill_wait_ns(&self, lane: usize, depth: usize) -> u64 {
+        if !self.adaptive {
+            return self.static_wait_ns;
+        }
+        let wait = if depth as u64 >= self.max_fill {
+            // a full batch flushes now (the clamp below restores the
+            // configured floor if one is set)
+            0
+        } else {
+            let scale = self.scale_pm();
+            let span = self.max_ns - self.min_ns;
+            let fill = self.max_fill - depth as u64;
+            // headroom × linear depth relaxation, landing in [min, max]
+            let scaled =
+                span as u128 * scale as u128 * fill as u128 / (1000 * self.max_fill as u128);
+            self.min_ns.saturating_add(scaled as u64)
+        };
+        let wait = wait.clamp(self.min_ns, self.max_ns);
+        if let Some(g) = self.lane_waits.get(lane) {
+            g.store(wait, Ordering::Relaxed);
+        }
+        wait
+    }
+
+    /// Cached SLO-headroom scale (permille), recomputed from the live
+    /// histograms at most every [`REFRESH_NS`].
+    fn scale_pm(&self) -> u64 {
+        let Some(telemetry) = &self.telemetry else {
+            return 1000;
+        };
+        let now = u64::try_from(self.epoch.elapsed().as_nanos()).unwrap_or(u64::MAX);
+        let due = self.refresh_at_ns.load(Ordering::Relaxed);
+        if now >= due
+            && self
+                .refresh_at_ns
+                .compare_exchange(
+                    due,
+                    now.saturating_add(REFRESH_NS),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                )
+                .is_ok()
+        {
+            // exactly one caller per refresh window walks the buckets
+            let pm = Self::compute_scale_pm(telemetry, self.slo_ns);
+            self.scale_pm.store(pm, Ordering::Relaxed);
+            pm
+        } else {
+            self.scale_pm.load(Ordering::Relaxed)
+        }
+    }
+
+    fn compute_scale_pm(telemetry: &Telemetry, slo_ns: u64) -> u64 {
+        // rolling T_q/T_s split: queueing p95 + per-job execution p95.
+        // Deliberately the bucket-only estimator: this runs on the
+        // deadline-arm path, and the exact-reservoir path would clone +
+        // sort up to 100k samples under the recorder mutex per refresh.
+        if telemetry.queueing.count() == 0 && telemetry.exec.count() == 0 {
+            return 1000; // no traffic observed yet: full headroom
+        }
+        let tail_s =
+            telemetry.queueing.percentile_fast(95.0) + telemetry.exec.percentile_fast(95.0);
+        let pressure = tail_s / (slo_ns as f64 / 1e9);
+        ((1.0 - pressure).clamp(0.0, 1.0) * 1000.0) as u64
+    }
+}
+
+impl std::fmt::Debug for DeadlineController {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DeadlineController")
+            .field("adaptive", &self.adaptive)
+            .field("static_wait_ns", &self.static_wait_ns)
+            .field("min_ns", &self.min_ns)
+            .field("max_ns", &self.max_ns)
+            .field("max_fill", &self.max_fill)
+            .field("slo_ns", &self.slo_ns)
+            .field("scale_pm", &self.scale_pm.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn adaptive_policy() -> BatchPolicy {
+        BatchPolicy {
+            max_batch: 8,
+            timeout: Duration::from_millis(1),
+            timeout_min: Duration::ZERO,
+            timeout_max: Duration::from_millis(4),
+            adaptive: true,
+        }
+    }
+
+    #[test]
+    fn static_policy_is_inert() {
+        let policy = BatchPolicy { timeout: Duration::from_millis(3), ..BatchPolicy::default() };
+        let ctrl = DeadlineController::for_policy(2, &policy);
+        assert!(!ctrl.is_adaptive());
+        for depth in [0usize, 4, 8, 100] {
+            assert_eq!(ctrl.fill_wait_ns(0, depth), 3_000_000);
+        }
+    }
+
+    #[test]
+    fn trickle_relaxes_to_the_cap() {
+        let ctrl = DeadlineController::for_policy(1, &adaptive_policy());
+        // empty lane, no latency pressure: the full fill window
+        assert_eq!(ctrl.fill_wait_ns(0, 0), 4_000_000);
+        // and it is monotone non-increasing in depth
+        let mut last = u64::MAX;
+        for depth in 0..=8 {
+            let w = ctrl.fill_wait_ns(0, depth);
+            assert!(w <= last, "depth {depth}: {w} > {last}");
+            assert!(w <= 4_000_000);
+            last = w;
+        }
+    }
+
+    #[test]
+    fn burst_backlog_shrinks_the_deadline_to_zero() {
+        let ctrl = DeadlineController::for_policy(1, &adaptive_policy());
+        // a full (or over-full) batch never waits
+        assert_eq!(ctrl.fill_wait_ns(0, 8), 0);
+        assert_eq!(ctrl.fill_wait_ns(0, 64), 0);
+        // near-full: only a sliver of the window remains
+        assert!(ctrl.fill_wait_ns(0, 7) <= 4_000_000 / 8);
+    }
+
+    #[test]
+    fn slo_pressure_shrinks_the_deadline_toward_immediate_flush() {
+        let telemetry = Arc::new(Telemetry::default());
+        // observed tail latency already AT the SLO: zero headroom
+        for _ in 0..32 {
+            telemetry.queueing.record(Duration::from_millis(900));
+            telemetry.exec.record(Duration::from_millis(300));
+        }
+        let ctrl = DeadlineController::new(
+            1,
+            &adaptive_policy(),
+            8,
+            Duration::from_millis(1000),
+            Some(Arc::clone(&telemetry)),
+        );
+        // even an empty lane flushes (nearly) immediately under
+        // overload: wait collapses to timeout_min = 0
+        assert_eq!(ctrl.fill_wait_ns(0, 0), 0, "overload must shed queueing");
+    }
+
+    #[test]
+    fn slo_headroom_keeps_the_window_open() {
+        let telemetry = Arc::new(Telemetry::default());
+        for _ in 0..32 {
+            telemetry.queueing.record(Duration::from_micros(50));
+            telemetry.exec.record(Duration::from_micros(200));
+        }
+        let ctrl = DeadlineController::new(
+            1,
+            &adaptive_policy(),
+            8,
+            Duration::from_millis(1000),
+            Some(telemetry),
+        );
+        // tail ≈ 250 µs of a 1 s budget: essentially full headroom
+        assert!(ctrl.fill_wait_ns(0, 0) >= 3_900_000);
+    }
+
+    #[test]
+    fn effective_fill_cap_overrides_the_nominal_policy_knob() {
+        // policy asks for 32-deep batches but the engine only compiles
+        // batch-8: the executor hands the controller max_take = 8, so
+        // depth 7 is one item short of a REAL full flush — a sliver of
+        // the window — and depth 8 waits nothing at all
+        let policy = BatchPolicy { max_batch: 32, ..adaptive_policy() };
+        let ctrl = DeadlineController::new(1, &policy, 8, DEFAULT_SLO, None);
+        assert_eq!(ctrl.fill_wait_ns(0, 8), 0);
+        assert!(ctrl.fill_wait_ns(0, 7) <= 4_000_000 / 8);
+    }
+
+    #[test]
+    fn wait_is_always_inside_the_configured_bounds() {
+        let policy = BatchPolicy {
+            max_batch: 8,
+            timeout: Duration::from_millis(1),
+            timeout_min: Duration::from_micros(100),
+            timeout_max: Duration::from_millis(2),
+            adaptive: true,
+        };
+        let ctrl = DeadlineController::for_policy(1, &policy);
+        for depth in 0..=16 {
+            let w = ctrl.fill_wait_ns(0, depth);
+            assert!((100_000..=2_000_000).contains(&w), "depth {depth}: {w}");
+        }
+    }
+
+    #[test]
+    fn lane_gauges_expose_the_adapted_wait() {
+        let ctrl = DeadlineController::for_policy(2, &adaptive_policy());
+        let gauges = ctrl.lane_waits();
+        assert_eq!(gauges.len(), 2);
+        ctrl.fill_wait_ns(1, 8);
+        assert_eq!(gauges[1].load(Ordering::Relaxed), 0);
+        ctrl.fill_wait_ns(1, 0);
+        assert_eq!(gauges[1].load(Ordering::Relaxed), 4_000_000);
+        // lane 0 untouched: still the construction-time default (cap)
+        assert_eq!(gauges[0].load(Ordering::Relaxed), 4_000_000);
+    }
+}

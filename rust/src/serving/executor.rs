@@ -17,7 +17,14 @@
 //! * **Ready check** — a lane is claimable when it has work that is
 //!   *due*: a full batch, an elapsed fill deadline ([`BatchPolicy`]
 //!   semantics, per model, exactly as the actor loop enforced them),
-//!   a dead lane with backlog to fail, or shutdown drain.
+//!   a dead lane with backlog to fail, or shutdown drain. The fill
+//!   deadline itself comes from the lane's [`DeadlineController`]: the
+//!   static `policy.timeout` by default, or — with `--adaptive-batch` —
+//!   a bounded dynamic wait derived from the lane's live queue depth
+//!   and the rolling T_q/T_s tail versus the configured SLO (see
+//!   [`super::control`]). Adaptation moves *when* batches flush only;
+//!   scores and their summation order are untouched, so worker-count
+//!   (and adaptive-on/off) bit-invariance holds.
 //! * **Claim → flush → release** — any worker CASes the lane's claim
 //!   flag, drains the injection queue into the staged batch, packs into
 //!   its own persistent 64-byte-aligned arena, executes **inline** on
@@ -52,18 +59,37 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::batcher::{fail_front, flush_batch, largest_batch, BatchItem, BatchPolicy, FlushOutcome};
+use super::control::DeadlineController;
 use super::pipeline::Completer;
+use super::telemetry::Telemetry;
 use crate::runtime::{AlignedBatch, Engine};
 use crate::{Error, Result};
 
-/// Core-count default for the worker pool, clamped to [1, 16]: beyond
-/// the device-permit count extra workers only overlap packing and
-/// completion, which saturates quickly.
+/// Hardware-only core-count heuristic for the worker pool, clamped to
+/// [1, 16]. This knows nothing about the engine — the pipeline's
+/// *effective* default is [`default_workers_for`], which additionally
+/// caps at the configured device-permit count.
 pub fn default_workers() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)
         .clamp(1, 16)
+}
+
+/// Effective pool-size default for an engine configured with
+/// `device_permits` device permits (the paper's `n_gpus`): at most two
+/// workers per permit. Only `device_permits` backend executions ever
+/// run concurrently, so extra threads can only overlap packing and
+/// completion with execution — useful up to roughly one spare thread
+/// per busy device, pure scheduler pressure beyond that. (The old
+/// default clamped to a flat 16 while *claiming* permit saturation; a
+/// 2-GPU engine on a 16-core box spawned 16 workers for 2 permits.)
+///
+/// This caps the **default** only: an explicit worker count
+/// (`--workers N` / `PipelineConfig::workers`) is honored verbatim,
+/// above or below the cap.
+pub fn default_workers_for(device_permits: usize) -> usize {
+    default_workers().clamp(1, (2 * device_permits).max(1))
 }
 
 // ---------------------------------------------------------------------------
@@ -182,7 +208,12 @@ struct Shared {
     /// Per-worker executed-batch counters (imbalance gauge).
     batches: Arc<[AtomicU64]>,
     engine: Engine,
-    policy: BatchPolicy,
+    /// Fill-deadline source: static `policy.timeout` or the SLO-aware
+    /// adaptive wait, per [`DeadlineController`].
+    ctrl: Arc<DeadlineController>,
+    /// Static policy with a zero timeout — lanes are always "due" and
+    /// deadlines are never armed (precomputed fast path).
+    never_waits: bool,
     max_take: usize,
     clip_len: usize,
     epoch: Instant,
@@ -206,8 +237,13 @@ impl Shared {
         u64::try_from(self.epoch.elapsed().as_nanos()).unwrap_or(u64::MAX)
     }
 
-    fn deadline_from(&self, now_ns: u64) -> u64 {
-        let t = u64::try_from(self.policy.timeout.as_nanos()).unwrap_or(u64::MAX);
+    /// Flush deadline for lane `i`'s next batch: now + the controller's
+    /// fill wait (static `policy.timeout`, or the adaptive wait derived
+    /// from the lane's live queue depth and the rolling T_q/T_s-vs-SLO
+    /// headroom).
+    fn deadline_from(&self, i: usize, now_ns: u64) -> u64 {
+        let depth = self.depths[i].load(Ordering::Acquire);
+        let t = self.ctrl.fill_wait_ns(i, depth);
         now_ns.saturating_add(t).max(1) // 0 is the "unset" sentinel
     }
 
@@ -246,7 +282,7 @@ impl Shared {
             return false;
         }
         let lane = &self.lanes[i];
-        if lane.dead.load(Ordering::Relaxed) || closed || self.policy.timeout.is_zero() {
+        if lane.dead.load(Ordering::Relaxed) || closed || self.never_waits {
             return true;
         }
         if self.depths[i].load(Ordering::Acquire) >= self.max_take {
@@ -316,7 +352,7 @@ impl Shared {
             let now = self.now_ns();
             let deadline = lane.deadline_ns.load(Ordering::Acquire);
             let due = closed
-                || self.policy.timeout.is_zero()
+                || self.never_waits
                 || staged.len() >= self.max_take
                 || deadline == 0
                 || now >= deadline;
@@ -371,9 +407,13 @@ impl Shared {
                     // it skipped arming, and must not inherit the
                     // just-flushed batch's elapsed deadline (premature
                     // size-1 flush). A full leftover loops straight into
-                    // another flush regardless of the deadline.
-                    if !self.policy.timeout.is_zero() {
-                        lane.deadline_ns.store(self.deadline_from(self.now_ns()), Ordering::Release);
+                    // another flush regardless of the deadline. Under an
+                    // adaptive policy the controller sees the lane's
+                    // post-flush depth here — a deep backlog re-arms a
+                    // near-zero window, a drained lane the full one.
+                    if !self.never_waits {
+                        lane.deadline_ns
+                            .store(self.deadline_from(i, self.now_ns()), Ordering::Release);
                     }
                 }
                 Err(e) => {
@@ -417,15 +457,15 @@ impl LaneSender {
         let depth = &shared.depths[pos];
         // starting a fresh batch: arm its fill deadline BEFORE the item
         // becomes visible, so no worker can observe work without one
-        if depth.load(Ordering::Acquire) == 0 && !shared.policy.timeout.is_zero() {
-            lane.deadline_ns.store(shared.deadline_from(shared.now_ns()), Ordering::Release);
+        if depth.load(Ordering::Acquire) == 0 && !shared.never_waits {
+            lane.deadline_ns.store(shared.deadline_from(pos, shared.now_ns()), Ordering::Release);
         }
         // depth rises before the queue insert: a worker may transiently
         // see depth > queue (spurious scan, harmless) but never resolves
         // more than it admitted (no underflow)
         let prev = depth.fetch_add(1, Ordering::AcqRel);
         lane.queue.push(item);
-        if prev == 0 || prev + 1 == self.shared.max_take || shared.policy.timeout.is_zero() {
+        if prev == 0 || prev + 1 == self.shared.max_take || shared.never_waits {
             shared.wake_one();
         }
         Ok(())
@@ -461,17 +501,38 @@ pub struct Executor {
 }
 
 impl Executor {
-    /// Spawn `workers` pool threads (0 = [`default_workers`]) over one
-    /// lane per `(model_index, completer)` pair, in member order.
+    /// Spawn `workers` pool threads (0 = [`default_workers_for`] the
+    /// engine's device-permit count) over one lane per
+    /// `(model_index, completer)` pair, in member order.
+    ///
+    /// The fill-deadline [`DeadlineController`] is built HERE, from the
+    /// same `policy` the lanes run and calibrated to the effective
+    /// `max_take` (so a `max_batch` above the largest compiled batch
+    /// size cannot miscalibrate the depth relaxation) — callers cannot
+    /// hand the pool a controller derived from a different policy.
+    /// `slo`/`telemetry` only matter for adaptive policies: `telemetry`
+    /// feeds the controller's rolling T_q/T_s split (pass the
+    /// pipeline's instance; `None` = depth-only adaptation, fine for
+    /// benches and tests). Read it back via [`Executor::controller`].
     pub fn spawn(
         engine: &Engine,
         members: Vec<(usize, Completer)>,
         policy: BatchPolicy,
         workers: usize,
+        slo: Duration,
+        telemetry: Option<Arc<Telemetry>>,
     ) -> Result<(Executor, LaneSender)> {
         assert!(!members.is_empty(), "executor needs at least one lane");
-        let n_workers = if workers == 0 { default_workers() } else { workers };
+        let n_workers =
+            if workers == 0 { default_workers_for(engine.n_workers()) } else { workers };
         let max_take = policy.max_batch.min(largest_batch(engine)).max(1);
+        let ctrl = Arc::new(DeadlineController::new(
+            members.len(),
+            &policy,
+            max_take,
+            slo,
+            telemetry,
+        ));
         let lanes: Box<[Lane]> = members
             .into_iter()
             .map(|(model_index, done)| Lane {
@@ -486,12 +547,14 @@ impl Executor {
             .collect();
         let depths: Arc<[AtomicUsize]> = (0..lanes.len()).map(|_| AtomicUsize::new(0)).collect();
         let batches: Arc<[AtomicU64]> = (0..n_workers).map(|_| AtomicU64::new(0)).collect();
+        let never_waits = policy.never_waits();
         let shared = Arc::new(Shared {
             lanes,
             depths,
             batches,
             engine: engine.clone(),
-            policy,
+            ctrl,
+            never_waits,
             max_take,
             clip_len: engine.clip_len(),
             epoch: Instant::now(),
@@ -546,6 +609,11 @@ impl Executor {
     /// Shared per-worker executed-batch counters.
     pub fn batch_counters(&self) -> Arc<[AtomicU64]> {
         Arc::clone(&self.shared.batches)
+    }
+
+    /// The fill-deadline controller this pool consults.
+    pub fn controller(&self) -> &Arc<DeadlineController> {
+        &self.shared.ctrl
     }
 }
 
@@ -767,6 +835,7 @@ fn reaper_loop(shared: &Shared) {
 mod tests {
     use super::*;
     use crate::runtime::SimBackend;
+    use crate::serving::control::DEFAULT_SLO;
     use crate::serving::arena::WindowLease;
     use crate::serving::pipeline::{PendingMeta, PendingSlots, Prediction};
     use crate::serving::telemetry::Telemetry;
@@ -785,7 +854,8 @@ mod tests {
         let members = (0..n_models)
             .map(|pos| (pos, Completer::new(Arc::clone(&pending), Arc::clone(&telemetry), pos)))
             .collect();
-        let (exec, tx) = Executor::spawn(&engine, members, policy, workers).unwrap();
+        let (exec, tx) =
+            Executor::spawn(&engine, members, policy, workers, DEFAULT_SLO, None).unwrap();
         let clip = engine.clip_len();
         (pending, telemetry, exec, tx, clip)
     }
@@ -801,8 +871,30 @@ mod tests {
     }
 
     #[test]
+    fn default_pool_size_is_capped_by_device_permits() {
+        // the hardware heuristic alone may be up to 16; with 2 device
+        // permits the effective default must not exceed 4 workers
+        assert!(default_workers_for(2) <= 4);
+        assert_eq!(default_workers_for(2), default_workers().min(4));
+        assert_eq!(default_workers_for(0), 1, "degenerate permit count still spawns");
+        let zoo = testkit::toy_zoo_with(4, 16, 3, 40, &[1, 8]);
+        let engine = Engine::with_backend(&zoo, 1, Arc::new(SimBackend::instant(&zoo))).unwrap();
+        let pending = Arc::new(PendingSlots::new(1));
+        let telemetry = Arc::new(Telemetry::default());
+        let members =
+            vec![(0usize, Completer::new(Arc::clone(&pending), Arc::clone(&telemetry), 0))];
+        let policy = BatchPolicy::default();
+        // workers = 0 → the pipeline default: ≤ 2×(1 device permit)
+        let (exec, tx) =
+            Executor::spawn(&engine, members, policy, 0, DEFAULT_SLO, None).unwrap();
+        assert!(exec.n_workers() <= 2, "1-permit engine spawned {}", exec.n_workers());
+        drop(tx);
+        drop(exec);
+    }
+
+    #[test]
     fn pool_completes_queries_across_lanes() {
-        let policy = BatchPolicy { max_batch: 8, timeout: Duration::ZERO };
+        let policy = BatchPolicy { max_batch: 8, timeout: Duration::ZERO, ..BatchPolicy::default() };
         let (pending, telemetry, exec, tx, clip) = harness(3, 2, policy);
         let mut replies = Vec::new();
         for id in 0..32u64 {
@@ -833,7 +925,11 @@ mod tests {
     #[test]
     fn shutdown_drains_partial_batches() {
         // generous timeout: the items must flush on CLOSE, not deadline
-        let policy = BatchPolicy { max_batch: 8, timeout: Duration::from_secs(60) };
+        let policy = BatchPolicy {
+            max_batch: 8,
+            timeout: Duration::from_secs(60),
+            ..BatchPolicy::default()
+        };
         let (pending, _tel, exec, tx, clip) = harness(1, 1, policy);
         let (ptx, prx) = std::sync::mpsc::sync_channel(1);
         pending.insert(5, meta(Some(ptx)));
@@ -848,7 +944,11 @@ mod tests {
 
     #[test]
     fn deadline_flushes_partial_batch_without_new_pushes() {
-        let policy = BatchPolicy { max_batch: 8, timeout: Duration::from_millis(5) };
+        let policy = BatchPolicy {
+            max_batch: 8,
+            timeout: Duration::from_millis(5),
+            ..BatchPolicy::default()
+        };
         let (pending, _tel, _exec, tx, clip) = harness(1, 2, policy);
         let (ptx, prx) = std::sync::mpsc::sync_channel(1);
         pending.insert(0, meta(Some(ptx)));
@@ -895,8 +995,9 @@ mod tests {
         let telemetry = Arc::new(Telemetry::default());
         let members =
             vec![(0usize, Completer::new(Arc::clone(&pending), Arc::clone(&telemetry), 0))];
-        let policy = BatchPolicy { max_batch: 8, timeout: Duration::ZERO };
-        let (exec, tx) = Executor::spawn(&engine, members, policy, 1).unwrap();
+        let policy = BatchPolicy { max_batch: 8, timeout: Duration::ZERO, ..BatchPolicy::default() };
+        let (exec, tx) =
+            Executor::spawn(&engine, members, policy, 1, DEFAULT_SLO, None).unwrap();
         let clip = engine.clip_len();
         pending.insert(0, meta(None));
         tx.push(
@@ -943,8 +1044,9 @@ mod tests {
         let telemetry = Arc::new(Telemetry::default());
         let members =
             vec![(0usize, Completer::new(Arc::clone(&pending), Arc::clone(&telemetry), 0))];
-        let policy = BatchPolicy { max_batch: 8, timeout: Duration::ZERO };
-        let (exec, tx) = Executor::spawn(&engine, members, policy, 1).unwrap();
+        let policy = BatchPolicy { max_batch: 8, timeout: Duration::ZERO, ..BatchPolicy::default() };
+        let (exec, tx) =
+            Executor::spawn(&engine, members, policy, 1, DEFAULT_SLO, None).unwrap();
         let clip = engine.clip_len();
         pending.insert(0, meta(None));
         tx.push(

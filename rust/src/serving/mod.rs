@@ -17,12 +17,28 @@
 //!        ▼
 //!  dispatcher ──► per-model lanes ──► executor pool (--workers threads)
 //!        │        (lock-free queues,     │ claim ready lane, pack,
-//!        │         fill deadlines)       │ execute inline (DirectWorker,
-//!        ▼                               ▼ gpu-count device permits)
+//!        │         fill deadlines ◄──────│ execute inline (DirectWorker,
+//!        │         armed by the          ▼ gpu-count device permits)
+//!        │         DeadlineController)
 //!  [stateless]  Completer (direct, collector-less): whichever worker
 //!               records a query's last member score finishes it
 //!               inline: bagging mean (Eq. 5) + telemetry
 //! ```
+//!
+//! ## SLO-aware adaptive batch deadlines
+//!
+//! `holmes serve --adaptive-batch [--slo-ms 1000]` replaces the static
+//! per-lane batch fill deadline ([`batcher::BatchPolicy::timeout`])
+//! with a bounded dynamic wait from the [`control::DeadlineController`]:
+//! live lane queue depth and the rolling T_q/T_s tail (kept live
+//! forever by bucket-derived percentiles, [`LatencyHistogram`]) steer
+//! the wait inside `[timeout_min, timeout_max]` against the configured
+//! end-to-end SLO. Burst/overload → flush immediately and let backlog
+//! fill batches; trickle → wait the full cap to amortize device
+//! launches. Off by default; predictions are bit-for-bit identical with
+//! adaptation on or off (`tests/executor.rs`). The adapted deadline per
+//! model is observable via `/stats` (`fill_wait_ns_per_model`) and the
+//! bedside report.
 //!
 //! Stateful compute (aggregation) and stateless compute (model
 //! inference) are separated exactly as the paper requires of its
@@ -53,6 +69,7 @@
 pub mod aggregator;
 pub mod arena;
 pub mod batcher;
+pub mod control;
 pub mod executor;
 pub mod pipeline;
 pub mod profile;
@@ -61,7 +78,8 @@ pub mod telemetry;
 
 pub use aggregator::WindowAggregator;
 pub use arena::{LeadPool, LeadSlot, WindowLease};
-pub use executor::default_workers;
+pub use control::{DeadlineController, DEFAULT_SLO};
+pub use executor::{default_workers, default_workers_for};
 pub use pipeline::{
     share_leads, Completer, PendingSlots, Pipeline, PipelineConfig, Prediction, Query,
     ScoreOutcome,

@@ -19,9 +19,15 @@
 //!        │                              │ score (atomic  │ DirectWorker under │
 //!        │                              │ cell write;    │ n_gpus device      │
 //!        │                              │ last member    │ permits            │
-//!        ▼                              │ finishes the   └────────────────────┘
-//!      reply rx ◄──────────────────── slot INLINE on whichever worker
-//!                                     flushed the last member's batch
+//!        ▼                              │ finishes the   └─────────▲──────────┘
+//!      reply rx ◄──────────────────── slot INLINE on whichever      │ fill
+//!        │                            worker flushed the last       │ deadline
+//!        │ T_q/T_s percentiles        member's batch                │ per arm
+//!        ▼ (live: bucket-derived ┌──────────────────────────────────┴──┐
+//!   telemetry ──────────────────►│ DeadlineController (--adaptive-batch│
+//!        ▲ queue-depth gauges    │ --slo-ms): wait ∈ [min, max] from   │
+//!        └───────────────────────│ SLO headroom × lane fill level      │
+//!                                └─────────────────────────────────────┘
 //! ```
 //!
 //! * **Zero-copy, pooled windows** — the aggregator fills recycled lead
@@ -39,6 +45,17 @@
 //!   permits), and completes the slots. Thread count is a hardware
 //!   tunable, not a function of ensemble size — 16 models on 2 workers
 //!   spawn 2 threads, not 16. See [`super::executor`].
+//! * **SLO-aware fill deadlines** — each lane's batch fill window is
+//!   armed by a [`super::control::DeadlineController`]
+//!   (`--adaptive-batch`): bounded to
+//!   `[timeout_min, timeout_max]`, shrinking toward immediate flush as
+//!   queue depth grows or the observed T_q+T_s tail approaches the
+//!   configured SLO (`--slo-ms`, default 1000), relaxing toward the cap
+//!   under trickle load. Off by default — the static
+//!   [`BatchPolicy::timeout`] then applies verbatim. Deadlines decide
+//!   *when* a batch flushes, never how scores combine, so the
+//!   bit-invariance guarantees below are unaffected. See
+//!   [`super::control`].
 //! * **Lock-free pending slots** — per-query bagging state lives in a
 //!   preallocated arena of [`PENDING_SLOTS`] generation-tagged slots
 //!   (`query_id & (PENDING_SLOTS-1)` picks the slot, `query_id + 1` is
@@ -75,6 +92,7 @@ use std::time::{Duration, Instant};
 
 use super::arena::WindowLease;
 use super::batcher::{BatchItem, BatchPolicy};
+use super::control::DEFAULT_SLO;
 use super::executor::{Executor, LaneSender};
 use super::telemetry::{ExecutorGauges, Telemetry};
 use crate::runtime::Engine;
@@ -157,15 +175,25 @@ pub type PredictionRx = mpsc::Receiver<Prediction>;
 pub struct PipelineConfig {
     pub ensemble: Selector,
     pub policy: BatchPolicy,
-    /// Executor pool size; 0 = core-count default
-    /// ([`super::executor::default_workers`]). Independent of the
+    /// Executor pool size; 0 = core-count default capped by the
+    /// engine's device permits
+    /// ([`super::executor::default_workers_for`]). Independent of the
     /// ensemble size by design.
     pub workers: usize,
+    /// End-to-end latency SLO the adaptive deadline controller steers
+    /// against (`--slo-ms`; [`DEFAULT_SLO`] = the paper's 1000 ms).
+    /// Only consulted when `policy.adaptive` is set.
+    pub slo: Duration,
 }
 
 impl PipelineConfig {
     pub fn new(ensemble: Selector) -> Self {
-        PipelineConfig { ensemble, policy: BatchPolicy::default(), workers: 0 }
+        PipelineConfig {
+            ensemble,
+            policy: BatchPolicy::default(),
+            workers: 0,
+            slo: DEFAULT_SLO,
+        }
     }
 
     pub fn with_policy(mut self, policy: BatchPolicy) -> Self {
@@ -175,6 +203,11 @@ impl PipelineConfig {
 
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.workers = workers;
+        self
+    }
+
+    pub fn with_slo(mut self, slo: Duration) -> Self {
+        self.slo = slo;
         self
     }
 }
@@ -614,11 +647,24 @@ impl Pipeline {
                 (i, Completer::new(Arc::clone(&pending), Arc::clone(&telemetry), pos))
             })
             .collect();
-        let (executor, lanes) = Executor::spawn(engine, members, cfg.policy, cfg.workers)?;
+        // SLO-aware fill deadlines: the executor builds its deadline
+        // controller from this same policy, reading the live T_q/T_s
+        // split from this pipeline's telemetry and each lane's queue
+        // depth at arm time; with a static policy it is inert (every
+        // arm returns `policy.timeout`)
+        let (executor, lanes) = Executor::spawn(
+            engine,
+            members,
+            cfg.policy,
+            cfg.workers,
+            cfg.slo,
+            Some(Arc::clone(&telemetry)),
+        )?;
         telemetry.install_executor(ExecutorGauges::new(
             executor.lane_models(),
             executor.depth_gauges(),
             executor.batch_counters(),
+            executor.controller().lane_waits(),
         ));
 
         // router thread

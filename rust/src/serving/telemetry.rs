@@ -9,9 +9,18 @@ use std::time::Duration;
 
 /// Fixed-boundary log-scale histogram from 1 µs to ~100 s, plus an exact
 /// reservoir of recent samples for precise percentiles in experiments.
+///
+/// The buckets are a **rolling** estimator, not a lifetime tally: every
+/// [`BUCKET_DECAY_EVERY`] records, all bucket counts are halved, so old
+/// mass decays geometrically and a latency shift moves the bucket-derived
+/// percentiles within a few decay periods instead of having to outvote
+/// the server's entire history. `count`/`mean`/`max` stay cumulative
+/// (they feed throughput and lifetime stats, not the tail estimate).
 #[derive(Debug)]
 pub struct LatencyHistogram {
     buckets: Vec<AtomicU64>,
+    /// Records since the last bucket halving (see `record`).
+    bucket_ops: AtomicU64,
     count: AtomicU64,
     sum_ns: AtomicU64,
     max_ns: AtomicU64,
@@ -26,6 +35,13 @@ pub struct LatencyHistogram {
 const BUCKETS_PER_DECADE: usize = 10;
 const DECADES: usize = 8; // 1 µs .. 100 s
 
+/// Halve every bucket after this many records: bounds the weight of
+/// history in the bucket-derived percentiles to a geometric window of
+/// roughly `2 × BUCKET_DECAY_EVERY` recent samples, whatever the
+/// uptime. Count-based (not wall-clock) so the record path needs no
+/// clock and idle servers keep their last known shape.
+const BUCKET_DECAY_EVERY: u64 = 8192;
+
 impl Default for LatencyHistogram {
     fn default() -> Self {
         Self::new(100_000)
@@ -36,6 +52,7 @@ impl LatencyHistogram {
     pub fn new(sample_cap: usize) -> Self {
         LatencyHistogram {
             buckets: (0..BUCKETS_PER_DECADE * DECADES).map(|_| AtomicU64::new(0)).collect(),
+            bucket_ops: AtomicU64::new(0),
             count: AtomicU64::new(0),
             sum_ns: AtomicU64::new(0),
             max_ns: AtomicU64::new(0),
@@ -54,6 +71,23 @@ impl LatencyHistogram {
     pub fn record(&self, d: Duration) {
         let ns = d.as_nanos() as u64;
         self.buckets[Self::bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        // rolling window: exactly one recorder per decay period wins the
+        // CAS and halves the buckets (racing increments may be lost to a
+        // concurrent halving — estimation-grade accuracy by design)
+        let ops = self.bucket_ops.fetch_add(1, Ordering::Relaxed) + 1;
+        if ops >= BUCKET_DECAY_EVERY
+            && self
+                .bucket_ops
+                .compare_exchange(ops, 0, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+        {
+            for bucket in &self.buckets {
+                let v = bucket.load(Ordering::Relaxed);
+                if v > 0 {
+                    bucket.store(v / 2, Ordering::Relaxed);
+                }
+            }
+        }
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_ns.fetch_add(ns, Ordering::Relaxed);
         self.max_ns.fetch_max(ns, Ordering::Relaxed);
@@ -86,10 +120,70 @@ impl LatencyHistogram {
         self.max_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
 
-    /// Exact percentile over the retained sample reservoir.
+    /// Percentile of everything recorded so far. While the reservoir
+    /// still holds every sample (short experiment runs) this is exact;
+    /// once recording outruns the cap the reservoir is a frozen warm-up
+    /// snapshot, so the estimate switches to the log-scale buckets —
+    /// which every `record` keeps updating forever — with log-linear
+    /// interpolation inside the covering bucket. A long-running server
+    /// therefore reports *live* tail latencies, not its first 100k
+    /// samples; resolution is one bucket (10 per decade, ≤ ~26%).
     pub fn percentile(&self, p: f64) -> f64 {
-        let s = self.samples.lock().expect("telemetry poisoned");
-        crate::metrics::percentile(&s, p)
+        let total = self.count();
+        {
+            let s = self.samples.lock().expect("telemetry poisoned");
+            // `count` rises before the reservoir push, so `total` can
+            // transiently exceed `s.len()` by in-flight recorders — the
+            // bucket path absorbs that harmlessly
+            if total <= s.len() as u64 {
+                return crate::metrics::percentile(&s, p);
+            }
+        }
+        self.percentile_from_buckets(p)
+    }
+
+    /// Bucket-only percentile estimate: one lock-free pass over the 80
+    /// counters, never touching the reservoir mutex. This is the form
+    /// the adaptive deadline controller reads on the arm hot path —
+    /// until the reservoir saturates, [`Self::percentile`] holds the
+    /// sample mutex through a clone + sort (O(n log n) near the 100k
+    /// cap), which would stall recorders and the very tail the
+    /// controller is steering; permille-resolution control only needs
+    /// bucket accuracy anyway.
+    pub fn percentile_fast(&self, p: f64) -> f64 {
+        self.percentile_from_buckets(p)
+    }
+
+    /// Bucket-derived percentile over the decayed (rolling) bucket
+    /// window: find the bucket covering the rank, interpolate linearly
+    /// between its (log-spaced) boundaries by the rank's position
+    /// within the bucket count. The rank base is the buckets' own sum —
+    /// NOT the cumulative `count` — so halvings keep the estimate
+    /// anchored to recent traffic.
+    fn percentile_from_buckets(&self, p: f64) -> f64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        // same rank convention as `metrics::percentile`: p over [0, n-1]
+        let rank = (p / 100.0).clamp(0.0, 1.0) * (total - 1) as f64;
+        let mut below = 0u64;
+        for (i, &n) in counts.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            if rank < (below + n) as f64 {
+                let lo_us = 10f64.powf(i as f64 / BUCKETS_PER_DECADE as f64);
+                let hi_us = 10f64.powf((i + 1) as f64 / BUCKETS_PER_DECADE as f64);
+                let frac = ((rank - below as f64) / n as f64).clamp(0.0, 1.0);
+                return (lo_us + frac * (hi_us - lo_us)) * 1e-6;
+            }
+            below += n;
+        }
+        // unreachable with the snapshot above (rank < total by
+        // construction), kept as a defensive floor
+        self.max()
     }
 
     /// Drain retained samples (for experiment CSVs); re-arms the
@@ -115,6 +209,10 @@ pub struct ExecutorGauges {
     depths: Arc<[AtomicUsize]>,
     /// Per-worker device batches executed.
     batches: Arc<[AtomicU64]>,
+    /// Per-lane fill wait last armed by the deadline controller, ns —
+    /// the static `timeout` on a non-adaptive pipeline, the live
+    /// adapted deadline under `--adaptive-batch`.
+    fill_waits: Arc<[AtomicU64]>,
 }
 
 impl ExecutorGauges {
@@ -122,9 +220,11 @@ impl ExecutorGauges {
         models: Vec<usize>,
         depths: Arc<[AtomicUsize]>,
         batches: Arc<[AtomicU64]>,
+        fill_waits: Arc<[AtomicU64]>,
     ) -> Self {
         assert_eq!(models.len(), depths.len(), "one depth gauge per lane");
-        ExecutorGauges { models, depths, batches }
+        assert_eq!(models.len(), fill_waits.len(), "one fill-wait gauge per lane");
+        ExecutorGauges { models, depths, batches, fill_waits }
     }
 
     pub fn models(&self) -> &[usize] {
@@ -139,6 +239,12 @@ impl ExecutorGauges {
     /// Batches executed per pool worker so far.
     pub fn worker_batches(&self) -> Vec<u64> {
         self.batches.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Last armed fill wait per lane, ns (same order as
+    /// [`Self::models`]).
+    pub fn fill_waits_ns(&self) -> Vec<u64> {
+        self.fill_waits.iter().map(|w| w.load(Ordering::Relaxed)).collect()
     }
 }
 
@@ -180,18 +286,20 @@ impl Telemetry {
     }
 
     pub fn snapshot(&self) -> TelemetrySnapshot {
-        let (models, queue_depths, worker_batches) = match self.executor.get() {
+        let (models, queue_depths, worker_batches, fill_waits) = match self.executor.get() {
             Some(g) => (
                 g.models().iter().map(|&m| m as u64).collect(),
                 g.queue_depths(),
                 g.worker_batches(),
+                g.fill_waits_ns(),
             ),
-            None => (Vec::new(), Vec::new(), Vec::new()),
+            None => (Vec::new(), Vec::new(), Vec::new(), Vec::new()),
         };
         TelemetrySnapshot {
             executor_models: models,
             queue_depth_per_model: queue_depths,
             batches_per_worker: worker_batches,
+            fill_wait_ns_per_model: fill_waits,
             queries: self.queries.load(Ordering::Relaxed),
             model_jobs: self.model_jobs.load(Ordering::Relaxed),
             frames: self.frames.load(Ordering::Relaxed),
@@ -219,6 +327,9 @@ pub struct TelemetrySnapshot {
     pub queue_depth_per_model: Vec<u64>,
     /// Device batches executed per executor worker.
     pub batches_per_worker: Vec<u64>,
+    /// Last armed batch fill wait per lane, ns (static timeout, or the
+    /// adapted deadline under `--adaptive-batch`).
+    pub fill_wait_ns_per_model: Vec<u64>,
     pub queries: u64,
     pub model_jobs: u64,
     pub frames: u64,
@@ -243,6 +354,7 @@ impl TelemetrySnapshot {
             ("executor_models", nums(&self.executor_models)),
             ("queue_depth_per_model", nums(&self.queue_depth_per_model)),
             ("batches_per_worker", nums(&self.batches_per_worker)),
+            ("fill_wait_ns_per_model", nums(&self.fill_wait_ns_per_model)),
             ("queries", Value::Num(self.queries as f64)),
             ("model_jobs", Value::Num(self.model_jobs as f64)),
             ("frames", Value::Num(self.frames as f64)),
@@ -307,6 +419,72 @@ mod tests {
     }
 
     #[test]
+    fn percentiles_track_a_shifted_distribution_after_saturation() {
+        // the frozen-percentile bug: the reservoir fills during warm-up
+        // and /stats reports those latencies forever. Record cap samples
+        // from a fast distribution, then cap more from a 50× slower one
+        // — the tail must follow the shift via the live buckets.
+        let h = LatencyHistogram::new(100);
+        for _ in 0..100 {
+            h.record(Duration::from_millis(10));
+        }
+        // reservoir exact and still authoritative at the boundary
+        assert!((h.percentile(95.0) - 0.010).abs() < 0.004);
+        for _ in 0..100 {
+            h.record(Duration::from_millis(500));
+        }
+        let p95 = h.percentile(95.0);
+        assert!(
+            (0.3..0.8).contains(&p95),
+            "p95 must land in the 500 ms bucket, not freeze at warm-up: {p95}"
+        );
+        // the low quartile still sees the warm-up mass (≤ one bucket of
+        // log error above 10 ms)
+        let p25 = h.percentile(25.0);
+        assert!(p25 < 0.02, "p25 should stay near 10 ms: {p25}");
+        // draining the reservoir must not resurrect stale exactness
+        let drained = h.take_samples();
+        assert_eq!(drained.len(), 100);
+        let p95_after = h.percentile(95.0);
+        assert!((0.3..0.8).contains(&p95_after), "bucket path after drain: {p95_after}");
+    }
+
+    #[test]
+    fn bucket_window_decays_so_tails_follow_recent_traffic() {
+        // lifetime-cumulative buckets would need the slow samples to
+        // outvote the entire fast history before p95 moved; the rolling
+        // (halving) window must follow the shift within a few periods
+        let h = LatencyHistogram::new(4); // tiny reservoir: bucket path
+        for _ in 0..3 * BUCKET_DECAY_EVERY {
+            h.record(Duration::from_millis(1));
+        }
+        assert!(h.percentile(95.0) < 0.01, "fast-only history");
+        for _ in 0..2 * BUCKET_DECAY_EVERY {
+            h.record(Duration::from_millis(900));
+        }
+        let p95 = h.percentile(95.0);
+        assert!(
+            p95 > 0.5,
+            "p95 must track the overload within two decay periods: {p95}"
+        );
+    }
+
+    #[test]
+    fn bucket_percentiles_are_monotone() {
+        let h = LatencyHistogram::new(4); // saturate immediately
+        for ms in [1u64, 2, 5, 10, 50, 100, 300, 900] {
+            h.record(Duration::from_millis(ms));
+        }
+        let mut last = 0.0f64;
+        for p in [10.0, 25.0, 50.0, 75.0, 90.0, 99.0] {
+            let v = h.percentile(p);
+            assert!(v >= last, "p{p}: {v} < {last}");
+            last = v;
+        }
+        assert!(last <= h.max() * 1.3, "tail estimate stays near the true max");
+    }
+
+    #[test]
     fn snapshot_is_serializable() {
         let t = Telemetry::default();
         t.e2e.record(Duration::from_millis(1));
@@ -314,6 +492,7 @@ mod tests {
         assert!(s.contains("e2e_p95"));
         assert!(s.contains("queue_depth_per_model"));
         assert!(s.contains("batches_per_worker"));
+        assert!(s.contains("fill_wait_ns_per_model"));
     }
 
     #[test]
@@ -322,17 +501,21 @@ mod tests {
         assert!(t.executor().is_none());
         let depths: Arc<[AtomicUsize]> = (0..2).map(|_| AtomicUsize::new(0)).collect();
         let batches: Arc<[AtomicU64]> = (0..3).map(|_| AtomicU64::new(0)).collect();
+        let waits: Arc<[AtomicU64]> = (0..2).map(|_| AtomicU64::new(0)).collect();
         t.install_executor(ExecutorGauges::new(
             vec![4, 7],
             Arc::clone(&depths),
             Arc::clone(&batches),
+            Arc::clone(&waits),
         ));
         depths[1].store(5, Ordering::Relaxed);
         batches[0].store(9, Ordering::Relaxed);
+        waits[0].store(1_000_000, Ordering::Relaxed);
         let snap = t.snapshot();
         assert_eq!(snap.executor_models, vec![4, 7]);
         assert_eq!(snap.queue_depth_per_model, vec![0, 5]);
         assert_eq!(snap.batches_per_worker, vec![9, 0, 0]);
+        assert_eq!(snap.fill_wait_ns_per_model, vec![1_000_000, 0]);
         // the gauges are live views, not copies
         depths[1].store(0, Ordering::Relaxed);
         assert_eq!(t.snapshot().queue_depth_per_model, vec![0, 0]);

@@ -68,24 +68,34 @@ fn reference() -> HashMap<(usize, u64), u64> {
     out
 }
 
-fn spawn_pipeline(zoo: &Zoo, n_workers: usize) -> (Engine, Pipeline) {
+fn spawn_pipeline_with(
+    zoo: &Zoo,
+    n_workers: usize,
+    policy: Option<BatchPolicy>,
+) -> (Engine, Pipeline) {
     let engine = Engine::with_backend(zoo, 2, Arc::new(SimBackend::instant(zoo))).unwrap();
     let ensemble = Selector::from_indices(zoo.n(), MEMBERS);
-    let pipeline = Pipeline::spawn(
-        zoo,
-        &engine,
-        PipelineConfig::new(ensemble).with_workers(n_workers),
-    )
-    .unwrap();
+    let mut cfg = PipelineConfig::new(ensemble).with_workers(n_workers);
+    if let Some(policy) = policy {
+        cfg = cfg.with_policy(policy).with_slo(Duration::from_millis(1000));
+    }
+    let pipeline = Pipeline::spawn(zoo, &engine, cfg).unwrap();
     assert_eq!(pipeline.n_workers(), n_workers);
     (engine, pipeline)
 }
 
+fn spawn_pipeline(zoo: &Zoo, n_workers: usize) -> (Engine, Pipeline) {
+    spawn_pipeline_with(zoo, n_workers, None)
+}
+
 /// Fresh owned buffers, submitted straight into the pipeline (all
 /// queries in flight at once, so batching/stealing actually interleave).
-fn run_fresh(n_workers: usize) -> HashMap<(usize, u64), u64> {
+fn run_fresh_with(
+    n_workers: usize,
+    policy: Option<BatchPolicy>,
+) -> HashMap<(usize, u64), u64> {
     let zoo = toy();
-    let (_engine, pipeline) = spawn_pipeline(&zoo, n_workers);
+    let (_engine, pipeline) = spawn_pipeline_with(&zoo, n_workers, policy);
     let mut replies = Vec::new();
     for p in 0..PATIENTS {
         for w in 0..WINDOWS {
@@ -102,6 +112,10 @@ fn run_fresh(n_workers: usize) -> HashMap<(usize, u64), u64> {
     }
     assert_eq!(pipeline.pending_len(), 0);
     out
+}
+
+fn run_fresh(n_workers: usize) -> HashMap<(usize, u64), u64> {
+    run_fresh_with(n_workers, None)
 }
 
 /// Pooled buffers: the same frame trace through a 2-shard aggregation
@@ -186,6 +200,55 @@ fn predictions_bit_identical_for_1_2_and_8_workers() {
 }
 
 #[test]
+fn predictions_bit_identical_with_adaptive_deadlines_on_and_off() {
+    // the SLO-aware controller may reshape batches arbitrarily (shrunk
+    // deadlines flush earlier, relaxed ones merge more queries) — but
+    // it must be pure scheduling: every (worker count × adaptive
+    // on/off) combination matches the analytic reference bit for bit
+    let want = reference();
+    for n_workers in [1usize, 2, 8] {
+        for adaptive in [false, true] {
+            let policy = BatchPolicy {
+                max_batch: 8,
+                timeout: Duration::from_millis(1),
+                timeout_min: Duration::ZERO,
+                timeout_max: Duration::from_millis(2),
+                adaptive,
+            };
+            let got = run_fresh_with(n_workers, Some(policy));
+            assert_eq!(got.len(), PATIENTS * WINDOWS, "{n_workers} workers");
+            for (&(p, w), &bits) in &want {
+                let g = got[&(p, w)];
+                assert_eq!(
+                    g,
+                    bits,
+                    "{n_workers} workers, adaptive={adaptive}: patient {p} window {w}: \
+                     {} != reference {}",
+                    f64::from_bits(g),
+                    f64::from_bits(bits)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn adaptive_pipeline_reports_live_fill_deadlines() {
+    let zoo = toy();
+    let policy = BatchPolicy::default().adaptive();
+    let (_engine, pipeline) = spawn_pipeline_with(&zoo, 2, Some(policy));
+    for w in 0..4u64 {
+        let _ = pipeline.query(Query::from_vecs(0, w, 0.0, window_leads(0, w as usize)));
+    }
+    let snap = pipeline.telemetry().snapshot();
+    assert_eq!(snap.fill_wait_ns_per_model.len(), MEMBERS.len());
+    let max_ns = BatchPolicy::default().timeout_max.as_nanos() as u64;
+    for (lane, &w) in snap.fill_wait_ns_per_model.iter().enumerate() {
+        assert!(w <= max_ns, "lane {lane}: adapted wait {w} above the cap {max_ns}");
+    }
+}
+
+#[test]
 fn pooled_window_buffers_match_fresh_buffers_bit_for_bit() {
     let want = reference();
     for n_workers in [1usize, 2, 8] {
@@ -218,7 +281,11 @@ fn worker_pool_failure_evicts_exactly_the_affected_queries() {
     // ensemble touching the broken model: every query is affected and
     // every one must be evicted (reply hangs up), none may leak
     let cfg = PipelineConfig::new(Selector::from_indices(zoo.n(), MEMBERS))
-        .with_policy(BatchPolicy { max_batch: 8, timeout: Duration::from_millis(1) })
+        .with_policy(BatchPolicy {
+            max_batch: 8,
+            timeout: Duration::from_millis(1),
+            ..BatchPolicy::default()
+        })
         .with_workers(4);
     let pipeline = Pipeline::spawn(&zoo, &engine, cfg).unwrap();
     let n = 8u64;

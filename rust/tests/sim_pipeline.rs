@@ -128,7 +128,11 @@ fn failing_member_evicts_queries_instead_of_leaking() {
     let engine = Engine::with_backend(&zoo, 2, Arc::new(backend)).unwrap();
     let ensemble = Selector::from_indices(zoo.n(), [0usize, 1, 2]);
     let cfg = PipelineConfig::new(ensemble)
-        .with_policy(BatchPolicy { max_batch: 8, timeout: Duration::from_millis(1) });
+        .with_policy(BatchPolicy {
+            max_batch: 8,
+            timeout: Duration::from_millis(1),
+            ..BatchPolicy::default()
+        });
     let pipeline = Pipeline::spawn(&zoo, &engine, cfg).unwrap();
 
     // the failing member must fail the whole query: the reply channel
