@@ -14,13 +14,17 @@
 //! ```bash
 //! cargo run --release --example bedside_sim \
 //!     [patients] [speedup] [duration_s] [workers] \
-//!     [--adaptive-batch] [--slo-ms MS]
+//!     [--adaptive-batch] [--slo-ms MS] [--http]
 //! ```
 //!
 //! `--adaptive-batch` swaps the static 1 ms batch fill deadline for the
 //! SLO-aware controller; an explicit `--slo-ms` turns the p95-vs-SLO
 //! comparison into a hard check (nonzero exit on violation) — this is
 //! how the CI smoke exercises the controller path on every PR.
+//! `--http` routes every bedside stream over a real TCP connection
+//! into the event-driven ingest edge (`POST /ingest.bin`, keep-alive)
+//! and hard-checks the edge gauges afterwards: one accepted connection
+//! per patient, zero refusals — the CI smoke for the epoll edge.
 
 use holmes::exp::bedside::{run_bedside, BedsideConfig};
 use holmes::zoo::{testkit, Zoo};
@@ -32,6 +36,7 @@ fn main() -> holmes::Result<()> {
     // positionals, which would disable the SLO gate below)
     let args = holmes::cli::parse(&argv, &["slo-ms"])?;
     let adaptive = args.flag("adaptive-batch");
+    let over_http = args.flag("http");
     let slo_is_a_gate = args.get("slo-ms").is_some();
     let slo_ms = args.f64_or("slo-ms", 1000.0)?;
     // cli::parse files the first bare argument as a "subcommand" — for
@@ -60,7 +65,8 @@ fn main() -> holmes::Result<()> {
             window_s: 30.0,
             speedup,
             duration_s,
-            http_addr: None,
+            http_addr: over_http.then(|| "127.0.0.1:0".to_string()),
+            edge_threads: 0,
             seed: 42,
             shards: 0,
             workers,
@@ -68,6 +74,24 @@ fn main() -> holmes::Result<()> {
             adaptive,
         },
     )?;
+    if over_http {
+        // edge smoke: every bedside monitor held one keep-alive
+        // connection, none were refused, and frames flowed over TCP
+        if report.conns_accepted < patients as u64 || report.conns_refused != 0 {
+            eprintln!(
+                "FAIL: edge accepted {} connections (expected ≥ {patients}), refused {}",
+                report.conns_accepted, report.conns_refused
+            );
+            std::process::exit(1);
+        }
+        let ready: u64 = report.edge_ready_events.iter().sum();
+        println!(
+            "✓ HTTP edge: {} connections accepted, {} readiness events across {} loop(s)",
+            report.conns_accepted,
+            ready,
+            report.edge_ready_events.len().max(1)
+        );
+    }
     // the paper's claim: sub-second p95 at 64 beds
     if report.e2e_p95 < 1.15 {
         println!("\n✓ within the paper's 1.15 s p95 envelope at {patients} beds");

@@ -14,6 +14,13 @@
 //!
 //! * `ingest/decode_frame`  — binary wire decode vs recursive-descent
 //!   JSON (`legacy_ingest/...`), one 3-sample ECG frame each.
+//! * `ingest/edge-concurrency/{1k,10k}-conns` — the event-driven epoll
+//!   ingest edge vs the thread-per-connection edge
+//!   (`legacy_ingest/...`), N mostly-idle keep-alive connections held
+//!   open while a rotating 64-connection subset each posts one 16-frame
+//!   binary body per round. The legacy plane pays one OS thread per
+//!   held connection; the epoll plane serves the same load from a
+//!   fixed pool of event loops. (10k runs in full mode only.)
 //! * `aggregate/shard-fanin` — sharded aggregation front-end (patients
 //!   partitioned over N workers on bounded channels) vs the single
 //!   `mpsc::Sender<Frame>` + one aggregation loop
@@ -44,10 +51,15 @@
 //!   per window (`legacy_aggregate/pooled-vs-alloc`).
 //! * `pack/batch8` — chunked copy into the persistent 64-byte-aligned
 //!   arena vs a fresh `vec![0.0; n]` per flush (`legacy_pack/...`).
+//! * `pack/unroll/batch8-2500` — the 128-float (8-lane) `pack_slot`
+//!   chunking vs an in-bench replica of the previous 64-float (4-lane)
+//!   chunking, fixed paper-shaped 2500-float windows.
 //!
 //! `cargo bench --bench serving [-- --quick]`
 
 use std::collections::{BTreeMap, HashMap};
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -56,6 +68,7 @@ use std::time::{Duration, Instant};
 use holmes::bench::{black_box, BenchResult, Bencher};
 use holmes::config::SystemConfig;
 use holmes::data;
+use holmes::http::{serve_legacy_with, serve_with, HttpConfig, HttpServer};
 use holmes::ingest::synth::SynthConfig;
 use holmes::ingest::{Frame, Modality};
 use holmes::json::Value;
@@ -70,7 +83,7 @@ use holmes::serving::pipeline::{
 };
 use holmes::serving::profile::{profile_ensemble, ProfileEffort};
 use holmes::serving::shards::{ShardConfig, ShardRouter};
-use holmes::serving::Telemetry;
+use holmes::serving::{ShardSender, Telemetry};
 use holmes::zoo::{testkit, Selector, Zoo};
 
 fn main() {
@@ -121,6 +134,10 @@ fn main() {
         black_box(f.patient)
     });
 
+    // ---- layer 1b: the ingest edge itself — epoll readiness loops vs
+    // one OS thread per held keep-alive connection
+    bench_edge_concurrency(&mut b, quick);
+
     // ---- layer 2: admission — lock-free slot arena vs mutex-striped
     // table, 8 threads each doing insert + per-member score + remove
     let slots = PendingSlots::new(ADM_MEMBERS);
@@ -167,6 +184,27 @@ fn main() {
             buf[slot * clip_len..(slot + 1) * clip_len].copy_from_slice(&window);
         }
         black_box(buf[7 * clip_len])
+    });
+
+    // ---- layer 3b: pack_slot chunk width — the 128-float (8-lane)
+    // chunking vs the previous 64-float (4-lane) chunking, both through
+    // the same aligned arena on fixed paper-shaped 2500-float windows
+    let w2500 = vec![0.37f32; 2500];
+    let mut arena8 = AlignedBatch::new();
+    b.bench("pack/unroll/batch8-2500", || {
+        arena8.reset(8 * 2500);
+        for slot in 0..8 {
+            arena8.pack_slot(slot, 2500, &w2500);
+        }
+        black_box(arena8.as_slice()[7 * 2500])
+    });
+    let mut arena4 = AlignedBatch::new();
+    b.bench("legacy_pack/unroll/batch8-2500", || {
+        arena4.reset(8 * 2500);
+        for slot in 0..8 {
+            pack_slot_4lane(&mut arena4, slot, 2500, &w2500);
+        }
+        black_box(arena4.as_slice()[7 * 2500])
     });
 
     // ---- pipeline end-to-end, 3-model cross-lead ensemble; zero fill
@@ -305,6 +343,191 @@ fn admission_round_lockfree(slots: &PendingSlots) {
             });
         }
     });
+}
+
+/// The pre-PR `pack_slot` chunking: 64-float (4-lane) chunks through
+/// the same aligned arena — kept in-bench so the 8-lane change is
+/// measured, not assumed.
+fn pack_slot_4lane(buf: &mut AlignedBatch, slot: usize, clip_len: usize, src: &[f32]) {
+    let start = slot * clip_len;
+    let dst = &mut buf.as_mut_slice()[start..start + src.len()];
+    const CHUNK: usize = 64; // 4 lanes × 16 f32
+    let mut src_chunks = src.chunks_exact(CHUNK);
+    let mut dst_chunks = dst.chunks_exact_mut(CHUNK);
+    for (d, s) in dst_chunks.by_ref().zip(src_chunks.by_ref()) {
+        d.copy_from_slice(s);
+    }
+    dst_chunks.into_remainder().copy_from_slice(src_chunks.remainder());
+}
+
+/// Edge-concurrency bench shape: hold `N` keep-alive connections open
+/// against a live ingest server; one measured round picks a rotating
+/// [`EDGE_ACTIVE`]-connection subset, posts one
+/// [`EDGE_FRAMES_PER_BODY`]-frame binary body on each, then reads all
+/// the responses. The held-but-idle majority is what distinguishes the
+/// planes: the thread-per-connection edge (`legacy_`) keeps one parked
+/// OS thread per connection (all spawned during warm-up, outside the
+/// measured rounds), the epoll edge keeps a slab slot. Admitted frames
+/// drain through a channel into one counting thread, as in production.
+const EDGE_ACTIVE: usize = 64;
+const EDGE_FRAMES_PER_BODY: usize = 16;
+
+struct EdgeConn {
+    s: TcpStream,
+    resp: Vec<u8>,
+}
+
+impl EdgeConn {
+    fn connect(addr: std::net::SocketAddr) -> std::io::Result<EdgeConn> {
+        let s = TcpStream::connect(addr)?;
+        s.set_nodelay(true)?;
+        Ok(EdgeConn { s, resp: Vec::with_capacity(256) })
+    }
+
+    fn send(&mut self, request: &[u8]) {
+        self.s.write_all(request).expect("edge request write");
+    }
+
+    /// Read exactly one `200` response (headers + content-length body),
+    /// leaving the stream on a clean framing boundary.
+    fn read_response(&mut self) {
+        self.resp.clear();
+        let mut chunk = [0u8; 2048];
+        let header_end = loop {
+            if let Some(pos) = self.resp.windows(4).position(|w| w == b"\r\n\r\n") {
+                break pos + 4;
+            }
+            let n = self.s.read(&mut chunk).expect("edge response read");
+            assert!(n > 0, "edge closed mid-response");
+            self.resp.extend_from_slice(&chunk[..n]);
+        };
+        let content_length: usize = self.resp[..header_end]
+            .split(|&b| b == b'\n')
+            .filter_map(|l| {
+                let colon = l.iter().position(|&b| b == b':')?;
+                l[..colon]
+                    .eq_ignore_ascii_case(b"content-length")
+                    .then(|| std::str::from_utf8(&l[colon + 1..]).ok()?.trim().parse().ok())
+                    .flatten()
+            })
+            .next()
+            .unwrap_or(0);
+        while self.resp.len() < header_end + content_length {
+            let n = self.s.read(&mut chunk).expect("edge response read");
+            assert!(n > 0, "edge closed mid-body");
+            self.resp.extend_from_slice(&chunk[..n]);
+        }
+        assert!(
+            self.resp.starts_with(b"HTTP/1.1 200"),
+            "edge replied {}",
+            String::from_utf8_lossy(&self.resp[..header_end])
+        );
+    }
+}
+
+/// One round: `active` connections starting at `start` (wrapping) each
+/// send one request, then all responses are read back.
+fn edge_round(conns: &mut [EdgeConn], start: usize, active: usize, request: &[u8]) {
+    let n = conns.len();
+    for i in 0..active {
+        conns[(start + i) % n].send(request);
+    }
+    for i in 0..active {
+        conns[(start + i) % n].read_response();
+    }
+}
+
+fn bench_edge_concurrency(b: &mut Bencher, quick: bool) {
+    // each held connection costs two fds in this process (client end +
+    // server end); raise the limit and scale down — loudly — if the
+    // box still can't hold the full count
+    #[cfg(target_os = "linux")]
+    let fd_limit = holmes::http::sys::raise_nofile_limit();
+    #[cfg(not(target_os = "linux"))]
+    let fd_limit = 1024u64;
+    let budget = (fd_limit.saturating_sub(128) / 2) as usize;
+
+    let mut sizes: Vec<(usize, &str)> = vec![(1_000, "1k-conns")];
+    if !quick {
+        sizes.push((10_000, "10k-conns"));
+    }
+
+    // one binary request shared by every round
+    let frames: Vec<Frame> = (0..EDGE_FRAMES_PER_BODY)
+        .map(|i| Frame {
+            patient: i,
+            modality: Modality::Ecg,
+            sim_time: i as f64 * 0.004,
+            values: [0.21, -0.08, 0.12].into(),
+        })
+        .collect();
+    let mut body = Vec::new();
+    for f in &frames {
+        f.write_bytes(&mut body);
+    }
+    let mut request = format!(
+        "POST /ingest.bin HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+        body.len()
+    )
+    .into_bytes();
+    request.extend_from_slice(&body);
+
+    type ServeFn = fn(&str, ShardSender, Arc<Telemetry>, HttpConfig) -> holmes::Result<HttpServer>;
+    for (want, label) in sizes {
+        let n = want.min(budget.max(EDGE_ACTIVE));
+        if n < want {
+            println!("   (fd limit {fd_limit}: scaled {label} down to {n} connections)");
+        }
+        for (prefix, serve) in [("", serve_with as ServeFn), ("legacy_", serve_legacy_with)] {
+            let (tx, rx) = mpsc::sync_channel::<Frame>(1 << 15);
+            let drainer = std::thread::spawn(move || {
+                let mut acc = 0u64;
+                for f in rx {
+                    acc = acc.wrapping_add(f.patient as u64);
+                }
+                black_box(acc)
+            });
+            let tel = Arc::new(Telemetry::default());
+            let server = serve(
+                "127.0.0.1:0",
+                ShardSender::from_senders(vec![tx]),
+                Arc::clone(&tel),
+                HttpConfig {
+                    max_connections: n + EDGE_ACTIVE,
+                    // idle held connections must survive between their
+                    // turns in the rotation
+                    read_timeout: Duration::from_secs(120),
+                    edge_threads: 0,
+                },
+            )
+            .expect("edge server");
+            let mut conns: Vec<EdgeConn> = (0..n)
+                .map(|_| EdgeConn::connect(server.addr).expect("edge connect"))
+                .collect();
+            // warm-up: every connection serves one request — the legacy
+            // plane pays its per-connection thread spawns here, the
+            // epoll plane fills its slab, and both planes prove all n
+            // connections are truly accepted and working
+            for start in (0..n).step_by(EDGE_ACTIVE) {
+                edge_round(&mut conns, start, EDGE_ACTIVE.min(n - start), &request);
+            }
+            let mut round = 0usize;
+            b.bench(&format!("{prefix}ingest/edge-concurrency/{label}"), || {
+                let start = (round * EDGE_ACTIVE) % n;
+                round += 1;
+                edge_round(&mut conns, start, EDGE_ACTIVE, &request);
+                black_box(round)
+            });
+            assert_eq!(
+                tel.conns_refused.load(Ordering::Relaxed),
+                0,
+                "no held connection may be refused"
+            );
+            drop(conns);
+            drop(server);
+            drainer.join().expect("edge drainer");
+        }
+    }
 }
 
 /// Fan-in bench shape: 2 producer threads stream one 250-sample window
@@ -842,10 +1065,11 @@ fn write_bench_json(results: &[BenchResult], quick: bool, backend: &str) {
             "note",
             Value::Str(
                 "medians of the lock-free zero-copy data plane vs the in-bench legacy \
-                 replica, per layer (sharded aggregation fan-in, pooled window \
-                 arenas, ingest decode, pending-table admission, direct vs \
-                 collector completion, work-stealing executor vs thread-per-model, \
-                 batch packing) and end to end; regenerate with \
+                 replica, per layer (event-driven ingest edge vs thread-per-conn, \
+                 sharded aggregation fan-in, pooled window arenas, ingest decode, \
+                 pending-table admission, direct vs collector completion, \
+                 work-stealing executor vs thread-per-model, batch packing) and \
+                 end to end; regenerate with \
                  `cargo bench --bench serving -- --quick`"
                     .into(),
             ),

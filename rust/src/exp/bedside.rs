@@ -38,6 +38,10 @@ pub struct BedsideConfig {
     pub speedup: f64,
     pub duration_s: f64,
     pub http_addr: Option<String>,
+    /// Event-loop threads for the epoll ingest edge (`--edge-threads`;
+    /// 0 = auto, cores/4). Only meaningful with `http_addr` set, and
+    /// ignored by the thread-per-connection fallback.
+    pub edge_threads: usize,
     pub seed: u64,
     /// Aggregation shards; 0 = core-count heuristic
     /// ([`crate::serving::default_shards`]).
@@ -65,6 +69,7 @@ impl Default for BedsideConfig {
             speedup: 1.0,
             duration_s: 120.0,
             http_addr: None,
+            edge_threads: 0,
             seed: 42,
             shards: 0,
             workers: 0,
@@ -90,6 +95,18 @@ pub struct BedsideReport {
     /// static policy timeout, or — under `--adaptive-batch` — where the
     /// controller had steered each model's window by end of run.
     pub fill_wait_ns_per_model: Vec<u64>,
+    /// Connections accepted by the HTTP ingest edge (0 when the run
+    /// ingested in-process).
+    pub conns_accepted: u64,
+    /// Connections refused at the edge's connection gate.
+    pub conns_refused: u64,
+    /// Stalled connections reaped by the read-timeout sweep.
+    pub conns_reaped: u64,
+    /// Readiness events handled per epoll event loop — empty when the
+    /// run used in-process ingest or the thread-per-conn fallback. A
+    /// healthy edge shows every loop nonzero (EPOLLEXCLUSIVE spreads
+    /// accepts) under multi-connection load.
+    pub edge_ready_events: Vec<u64>,
     /// The configured end-to-end SLO, seconds (p95 is judged against
     /// it in the printed report).
     pub slo_s: f64,
@@ -186,7 +203,15 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
     // keep-alive connections instead of the in-process shard sender
     let mut http = None;
     if let Some(addr) = &cfg.http_addr {
-        let server = crate::http::serve(addr, frame_tx.clone(), Arc::clone(&telemetry))?;
+        let server = crate::http::serve_with(
+            addr,
+            frame_tx.clone(),
+            Arc::clone(&telemetry),
+            crate::http::HttpConfig {
+                edge_threads: cfg.edge_threads,
+                ..crate::http::HttpConfig::default()
+            },
+        )?;
         println!("HTTP ingest listening on {} (binary /ingest.bin)", server.addr);
         http = Some(server);
     }
@@ -287,6 +312,9 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
         .executor()
         .map(|g| g.fill_waits_ns())
         .unwrap_or_default();
+    // edge counters survive the server drop: the gauges live in the
+    // shared telemetry, not in the event loops
+    let ordering = std::sync::atomic::Ordering::Relaxed;
     let report = BedsideReport {
         predictions: pred_rows.len(),
         frames,
@@ -294,6 +322,10 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
         dropped_per_shard,
         batches_per_worker,
         fill_wait_ns_per_model,
+        conns_accepted: telemetry.conns_accepted.load(ordering),
+        conns_refused: telemetry.conns_refused.load(ordering),
+        conns_reaped: telemetry.conns_reaped.load(ordering),
+        edge_ready_events: telemetry.edge().map(|g| g.ready_events()).unwrap_or_default(),
         slo_s: slo.as_secs_f64(),
         e2e_p50: telemetry.e2e.percentile(50.0),
         e2e_p95: telemetry.e2e.percentile(95.0),
@@ -324,6 +356,15 @@ fn print_report(r: &BedsideReport, telemetry: &Telemetry) {
         .map(|&ns| (ns as f64 / 1e6 * 1000.0).round() / 1000.0)
         .collect();
     println!("fill deadlines (ms)  {:>12?}  (per model, last armed)", waits_ms);
+    if r.conns_accepted > 0 || !r.edge_ready_events.is_empty() {
+        println!(
+            "edge connections     {:>12}  (refused: {}, reaped: {})",
+            r.conns_accepted, r.conns_refused, r.conns_reaped
+        );
+        if !r.edge_ready_events.is_empty() {
+            println!("edge ready events    {:>12?}  (per event loop)", r.edge_ready_events);
+        }
+    }
     println!("e2e latency p50      {:>11.4}s", r.e2e_p50);
     println!(
         "e2e latency p95      {:>11.4}s  ({} the {:.1}s SLO)",

@@ -1,0 +1,795 @@
+//! Per-connection HTTP protocol core, shared by both ingest edges.
+//!
+//! Everything here is **pure state + bytes** — no sockets, no
+//! syscalls — so the exact production parsing and framing logic can be
+//! driven deterministically by tests at arbitrary fragmentation
+//! (`tests/edge.rs` replays requests split at every byte boundary).
+//!
+//! Three pieces:
+//!
+//! * [`RecvBuf`] — a compacting receive buffer that keeps unconsumed
+//!   bytes **contiguous**, so the wire decoder reads frames in place
+//!   (the single buffer a 250 Hz sample touches between the socket and
+//!   the shard-owned lead slot).
+//! * [`OutRing`] — a circular response buffer whose ≤ 2 contiguous
+//!   segments flush with one vectored write (`writev`), batching
+//!   pipelined keep-alive responses into single syscalls.
+//! * [`HttpConn`] — the incremental request state machine: head →
+//!   (streaming binary body | buffered body | drain), tolerant of any
+//!   read fragmentation, admitting `/ingest.bin` frames straight into
+//!   the [`ShardSender`] as their bytes complete.
+//!
+//! The steady-state `/ingest.bin` path allocates nothing: the receive
+//! buffer and output ring reuse their grown capacity, frames decode
+//! into inline [`Frame`](crate::ingest::Frame) values, responses are
+//! formatted with [`fmt_u64`] into stack scratch, and the bounded
+//! shard channels are preallocated. `tests/edge.rs` asserts this with
+//! a counting global allocator.
+
+use crate::ingest::wire::{self, DecodeStep};
+use crate::serving::{ShardSender, Telemetry};
+
+use super::{route_parsed, MAX_BODY_BYTES};
+
+/// Largest accepted request head (request line + headers).
+pub const MAX_HEAD_BYTES: usize = 1 << 20;
+
+/// Stop parsing further pipelined requests once this many response
+/// bytes are queued; parsing resumes after the ring flushes (TCP
+/// backpressure, bounded memory per connection).
+pub const OUT_BACKPRESSURE_BYTES: usize = 64 * 1024;
+
+/// Write `v` in decimal into `scratch`, returning the digits as a
+/// slice (no heap, no `format!` — the hot-path response formatter).
+pub fn fmt_u64(scratch: &mut [u8; 20], mut v: u64) -> &[u8] {
+    let mut i = scratch.len();
+    loop {
+        i -= 1;
+        scratch[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+        if v == 0 {
+            break;
+        }
+    }
+    &scratch[i..]
+}
+
+/// Compacting receive buffer: unconsumed bytes stay contiguous at
+/// [`RecvBuf::data`], consumed space is reclaimed by memmove (never by
+/// reallocation once capacity has grown).
+#[derive(Debug, Default)]
+pub struct RecvBuf {
+    buf: Vec<u8>,
+    start: usize,
+}
+
+impl RecvBuf {
+    pub fn with_capacity(n: usize) -> Self {
+        RecvBuf { buf: Vec::with_capacity(n), start: 0 }
+    }
+
+    /// Unconsumed bytes, contiguous.
+    pub fn data(&self) -> &[u8] {
+        &self.buf[self.start..]
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.len() == self.start
+    }
+
+    /// Discard `n` bytes from the front (they were processed in place).
+    pub fn consume(&mut self, n: usize) {
+        debug_assert!(n <= self.len());
+        self.start += n;
+        if self.start == self.buf.len() {
+            // everything consumed: reset without memmove, keep capacity
+            self.buf.clear();
+            self.start = 0;
+        }
+    }
+
+    /// Append bytes (copying path — tests, scratch-spill overflow).
+    pub fn extend(&mut self, bytes: &[u8]) {
+        if self.start > 0 && self.buf.len() + bytes.len() > self.buf.capacity() {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Expose the spare tail (≥ `min` bytes) for a kernel read,
+    /// compacting consumed space first and growing only when the live
+    /// bytes plus `min` genuinely exceed capacity. Returns the raw
+    /// window; pair with [`RecvBuf::commit`] after the read.
+    pub fn spare_ptr(&mut self, min: usize) -> (*mut u8, usize) {
+        if self.start > 0 && self.buf.len() + min > self.buf.capacity() {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        if self.buf.len() + min > self.buf.capacity() {
+            self.buf.reserve(min);
+        }
+        let len = self.buf.len();
+        let spare = self.buf.capacity() - len;
+        // SAFETY: pointer to the (possibly uninitialized) tail inside
+        // the Vec's allocation; `spare` bytes are owned and writable.
+        unsafe { (self.buf.as_mut_ptr().add(len), spare) }
+    }
+
+    /// Declare `n` tail bytes initialized (the kernel wrote them
+    /// through the pointer from [`RecvBuf::spare_ptr`]).
+    ///
+    /// # Safety
+    /// The first `n` spare bytes returned by the immediately preceding
+    /// [`RecvBuf::spare_ptr`] call must have been initialized, with no
+    /// intervening mutation of the buffer.
+    pub unsafe fn commit(&mut self, n: usize) {
+        debug_assert!(self.buf.len() + n <= self.buf.capacity());
+        unsafe { self.buf.set_len(self.buf.len() + n) };
+    }
+}
+
+/// Circular response buffer: appended bytes wrap around, and the live
+/// contents are exposed as at most two contiguous [`OutRing::segments`]
+/// for a single vectored write. Grows (linearizing) only when a
+/// response exceeds the remaining capacity; steady state recycles.
+#[derive(Debug)]
+pub struct OutRing {
+    buf: Box<[u8]>,
+    lo: usize,
+    len: usize,
+}
+
+impl Default for OutRing {
+    fn default() -> Self {
+        Self::with_capacity(4 * 1024)
+    }
+}
+
+impl OutRing {
+    pub fn with_capacity(n: usize) -> Self {
+        OutRing { buf: vec![0u8; n.max(64)].into_boxed_slice(), lo: 0, len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The queued bytes as (head, tail) — `tail` is empty unless the
+    /// live region wraps. `writev` both in one call.
+    pub fn segments(&self) -> (&[u8], &[u8]) {
+        let cap = self.buf.len();
+        let end = self.lo + self.len;
+        if end <= cap {
+            (&self.buf[self.lo..end], &self.buf[..0])
+        } else {
+            (&self.buf[self.lo..], &self.buf[..end - cap])
+        }
+    }
+
+    /// Drop `n` bytes from the front (they were written to the socket).
+    pub fn consume(&mut self, n: usize) {
+        debug_assert!(n <= self.len);
+        self.lo = (self.lo + n) % self.buf.len();
+        self.len -= n;
+        if self.len == 0 {
+            self.lo = 0;
+        }
+    }
+
+    pub fn append(&mut self, bytes: &[u8]) {
+        if self.len + bytes.len() > self.buf.len() {
+            self.grow(self.len + bytes.len());
+        }
+        let cap = self.buf.len();
+        let at = (self.lo + self.len) % cap;
+        let first = bytes.len().min(cap - at);
+        self.buf[at..at + first].copy_from_slice(&bytes[..first]);
+        self.buf[..bytes.len() - first].copy_from_slice(&bytes[first..]);
+        self.len += bytes.len();
+    }
+
+    fn grow(&mut self, need: usize) {
+        let new_cap = (self.buf.len() * 2).max(need.next_power_of_two());
+        let mut next = vec![0u8; new_cap].into_boxed_slice();
+        let (a, b) = self.segments();
+        next[..a.len()].copy_from_slice(a);
+        next[a.len()..a.len() + b.len()].copy_from_slice(b);
+        self.buf = next;
+        self.lo = 0;
+    }
+}
+
+/// The routes the edge serves (parsed from the request line in place,
+/// no `String`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    IngestJson,
+    IngestBin,
+    Stats,
+    Healthz,
+    Unknown,
+}
+
+/// Everything both edges need from a request head.
+#[derive(Debug, Clone, Copy)]
+pub struct HeadInfo {
+    pub route: Route,
+    pub content_length: usize,
+    /// Keep-alive after this request (HTTP/1.1 default, HTTP/1.0 must
+    /// opt in, `Connection: close` wins).
+    pub keep_alive: bool,
+    /// Body framing we cannot trust (chunked transfer encoding, or an
+    /// unparseable Content-Length): `400` + close.
+    pub bad_framing: bool,
+}
+
+fn parse_usize_ascii(b: &[u8]) -> Option<usize> {
+    if b.is_empty() {
+        return None;
+    }
+    let mut n: usize = 0;
+    for &c in b {
+        if !c.is_ascii_digit() {
+            return None;
+        }
+        n = n.checked_mul(10)?.checked_add((c - b'0') as usize)?;
+    }
+    Some(n)
+}
+
+/// Parse a complete request head (through the blank line) **in
+/// place** — byte-slice comparisons only, no allocation.
+pub fn parse_head(head: &[u8]) -> HeadInfo {
+    let mut lines = head.split(|&b| b == b'\n').map(|l| l.strip_suffix(b"\r").unwrap_or(l));
+    let request_line = lines.next().unwrap_or(b"");
+    let mut parts = request_line.split(|&b| b == b' ').filter(|p| !p.is_empty());
+    let method = parts.next().unwrap_or(b"");
+    let path = parts.next().unwrap_or(b"");
+    let route = match (method, path) {
+        (b"POST", b"/ingest") => Route::IngestJson,
+        (b"POST", b"/ingest.bin") => Route::IngestBin,
+        (b"GET", b"/stats") => Route::Stats,
+        (b"GET", b"/healthz") => Route::Healthz,
+        _ => Route::Unknown,
+    };
+    let http10 = request_line.ends_with(b"HTTP/1.0");
+
+    let mut content_length = 0usize;
+    let mut bad_framing = false;
+    let mut close_requested = false;
+    let mut keep_alive_requested = false;
+    for line in lines {
+        let Some(colon) = line.iter().position(|&b| b == b':') else { continue };
+        let name = &line[..colon];
+        let value = line[colon + 1..].trim_ascii();
+        if name.eq_ignore_ascii_case(b"content-length") {
+            match parse_usize_ascii(value) {
+                Some(n) => content_length = n,
+                // an unparseable length (e.g. duplicate headers merged
+                // to "123, 123") must not default to 0: the body bytes
+                // would be re-parsed as the next request
+                None => bad_framing = true,
+            }
+        } else if name.eq_ignore_ascii_case(b"transfer-encoding") {
+            bad_framing = true; // chunked bodies are unsupported
+        } else if name.eq_ignore_ascii_case(b"connection") {
+            close_requested = value.eq_ignore_ascii_case(b"close");
+            keep_alive_requested = value.eq_ignore_ascii_case(b"keep-alive");
+        }
+    }
+    HeadInfo {
+        route,
+        content_length,
+        keep_alive: !close_requested && (!http10 || keep_alive_requested),
+        bad_framing,
+    }
+}
+
+/// What went wrong inside a streaming `/ingest.bin` body (reported
+/// after the body is fully consumed, so keep-alive framing survives).
+#[derive(Debug)]
+enum BinError {
+    /// Malformed wire bytes — the message lands in the 400 payload.
+    /// (Error path only: this `String` never exists for valid input.)
+    Malformed(String),
+    /// The aggregation plane hung up: 503.
+    PipelineClosed,
+}
+
+#[derive(Debug)]
+enum Phase {
+    /// Accumulating the request head.
+    Head,
+    /// Streaming a `/ingest.bin` body: frames decode in place and go
+    /// straight to the shard sender as their bytes complete.
+    BinBody { remaining: usize, keep_alive: bool, frames: u64, err: Option<BinError> },
+    /// Buffering a (small, bounded) body for a non-streaming route.
+    BufBody { route: Route, remaining: usize, keep_alive: bool },
+    /// Discarding an oversized body (bounded) so the queued `413`
+    /// survives the close instead of being discarded by an RST.
+    Drain { remaining: usize },
+}
+
+/// Incremental per-connection HTTP state machine. I/O-free: the driver
+/// appends received bytes to [`HttpConn::recv_mut`], calls
+/// [`HttpConn::advance`], flushes [`HttpConn::out_mut`], and closes
+/// when [`HttpConn::ready_to_close`] says so.
+#[derive(Debug)]
+pub struct HttpConn {
+    recv: RecvBuf,
+    out: OutRing,
+    phase: Phase,
+    /// Request-head bytes already scanned for the blank line (the
+    /// `\r\n\r\n` search restarts near the fragmentation boundary, not
+    /// from zero).
+    head_scanned: usize,
+    /// Close once the output ring drains (error responses, explicit
+    /// `Connection: close`, header overflow).
+    close_after_out: bool,
+}
+
+impl Default for HttpConn {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HttpConn {
+    pub fn new() -> Self {
+        HttpConn {
+            recv: RecvBuf::with_capacity(8 * 1024),
+            out: OutRing::default(),
+            phase: Phase::Head,
+            head_scanned: 0,
+            close_after_out: false,
+        }
+    }
+
+    pub fn recv_mut(&mut self) -> &mut RecvBuf {
+        &mut self.recv
+    }
+
+    pub fn out_mut(&mut self) -> &mut OutRing {
+        &mut self.out
+    }
+
+    /// True once the connection should close as soon as the output
+    /// ring has flushed (and any drain obligation is met).
+    pub fn ready_to_close(&self) -> bool {
+        self.close_after_out
+            && self.out.is_empty()
+            && match self.phase {
+                Phase::Drain { remaining } => remaining == 0 || self.recv.is_empty(),
+                _ => true,
+            }
+    }
+
+    /// Whether the driver should keep reading from the socket — false
+    /// once the connection is closing and owes no drain.
+    pub fn wants_read(&self) -> bool {
+        !self.close_after_out || matches!(self.phase, Phase::Drain { .. })
+    }
+
+    fn respond(&mut self, status: &str, body: &[u8], keep_alive: bool) {
+        let mut scratch = [0u8; 20];
+        self.out.append(b"HTTP/1.1 ");
+        self.out.append(status.as_bytes());
+        self.out.append(b"\r\nContent-Type: application/json\r\nContent-Length: ");
+        let digits = fmt_u64(&mut scratch, body.len() as u64);
+        self.out.append(digits);
+        self.out.append(b"\r\nConnection: ");
+        self.out.append(if keep_alive { b"keep-alive" } else { b"close" });
+        self.out.append(b"\r\n\r\n");
+        self.out.append(body);
+        if !keep_alive {
+            self.close_after_out = true;
+        }
+    }
+
+    /// Run the state machine over whatever bytes are in the receive
+    /// buffer. Returns `true` if any input was consumed or output
+    /// produced (the driver loops while progress is being made).
+    pub fn advance(&mut self, sink: &ShardSender, telemetry: &Telemetry) -> bool {
+        let mut progressed = false;
+        loop {
+            match std::mem::replace(&mut self.phase, Phase::Head) {
+                Phase::Head => {
+                    if self.close_after_out || self.out.len() >= OUT_BACKPRESSURE_BYTES {
+                        break; // closing, or resume after the ring flushes
+                    }
+                    let data = self.recv.data();
+                    let from = self.head_scanned.saturating_sub(3);
+                    let found = data[from..]
+                        .windows(4)
+                        .position(|w| w == b"\r\n\r\n")
+                        .map(|p| from + p + 4);
+                    let Some(head_end) = found else {
+                        self.head_scanned = data.len();
+                        if self.recv.len() > MAX_HEAD_BYTES {
+                            // mirror the fallback edge: oversized heads
+                            // close without a response
+                            self.close_after_out = true;
+                            progressed = true;
+                        }
+                        break;
+                    };
+                    let info = parse_head(&self.recv.data()[..head_end]);
+                    self.recv.consume(head_end);
+                    self.head_scanned = 0;
+                    progressed = true;
+                    if info.bad_framing {
+                        self.respond(
+                            "400 Bad Request",
+                            b"{\"error\":\"unsupported or malformed body framing\"}",
+                            false,
+                        );
+                        break;
+                    }
+                    if info.content_length > MAX_BODY_BYTES {
+                        let body = format!("{{\"error\":\"body exceeds {MAX_BODY_BYTES} bytes\"}}");
+                        self.respond("413 Payload Too Large", body.as_bytes(), false);
+                        // drain (bounded) before the close so the
+                        // kernel doesn't RST the queued 413 away
+                        self.phase = Phase::Drain {
+                            remaining: info.content_length.min(2 * MAX_BODY_BYTES),
+                        };
+                        continue;
+                    }
+                    self.phase = match info.route {
+                        Route::IngestBin => Phase::BinBody {
+                            remaining: info.content_length,
+                            keep_alive: info.keep_alive,
+                            frames: 0,
+                            err: None,
+                        },
+                        route => Phase::BufBody {
+                            route,
+                            remaining: info.content_length,
+                            keep_alive: info.keep_alive,
+                        },
+                    };
+                }
+                Phase::BinBody { mut remaining, keep_alive, mut frames, mut err } => {
+                    // decode frames in place from the receive buffer as
+                    // their bytes complete; after an error the rest of
+                    // the body is still consumed, so keep-alive framing
+                    // survives a bad body
+                    while remaining > 0 && !self.recv.is_empty() {
+                        if err.is_some() {
+                            let discard = self.recv.len().min(remaining);
+                            self.recv.consume(discard);
+                            remaining -= discard;
+                            progressed = true;
+                            continue;
+                        }
+                        let avail = self.recv.len().min(remaining);
+                        match wire::decode_step(&self.recv.data()[..avail]) {
+                            Ok(DecodeStep::Frame(frame, used)) => {
+                                if sink.send(frame).is_err() {
+                                    err = Some(BinError::PipelineClosed);
+                                } else {
+                                    frames += 1;
+                                }
+                                self.recv.consume(used);
+                                remaining -= used;
+                                progressed = true;
+                            }
+                            Ok(DecodeStep::NeedMore(need)) => {
+                                if need > remaining {
+                                    // the frame cannot complete within
+                                    // this body: malformed
+                                    err = Some(BinError::Malformed(format!(
+                                        "truncated frame: body ends {} bytes short",
+                                        need - remaining
+                                    )));
+                                    continue;
+                                }
+                                break; // wait for more bytes
+                            }
+                            Err(e) => err = Some(BinError::Malformed(e.to_string())),
+                        }
+                    }
+                    if remaining > 0 {
+                        // body incomplete: park and wait for more bytes
+                        self.phase = Phase::BinBody { remaining, keep_alive, frames, err };
+                        break;
+                    }
+                    match err {
+                        None => {
+                            const PRE: &[u8] = b"{\"ok\":true,\"frames\":";
+                            let mut body = [0u8; 41];
+                            body[..PRE.len()].copy_from_slice(PRE);
+                            let mut scratch = [0u8; 20];
+                            let digits = fmt_u64(&mut scratch, frames);
+                            let end = PRE.len() + digits.len();
+                            body[PRE.len()..end].copy_from_slice(digits);
+                            body[end] = b'}';
+                            self.respond("200 OK", &body[..end + 1], keep_alive);
+                        }
+                        Some(BinError::Malformed(msg)) => {
+                            let body = format!("{{\"error\":\"{msg}\"}}");
+                            self.respond("400 Bad Request", body.as_bytes(), keep_alive);
+                        }
+                        Some(BinError::PipelineClosed) => {
+                            self.respond(
+                                "503 Service Unavailable",
+                                b"{\"error\":\"pipeline closed\"}",
+                                keep_alive,
+                            );
+                        }
+                    }
+                    progressed = true;
+                }
+                Phase::BufBody { route, remaining, keep_alive } => {
+                    if self.recv.len() < remaining {
+                        self.phase = Phase::BufBody { route, remaining, keep_alive };
+                        break; // body incomplete
+                    }
+                    let (status, payload) =
+                        route_parsed(route, &self.recv.data()[..remaining], sink, telemetry);
+                    self.recv.consume(remaining);
+                    self.respond(status, payload.as_bytes(), keep_alive);
+                    progressed = true;
+                }
+                Phase::Drain { mut remaining } => {
+                    let take = self.recv.len().min(remaining);
+                    if take > 0 {
+                        self.recv.consume(take);
+                        remaining -= take;
+                        progressed = true;
+                    }
+                    // bytes beyond the drain bound are abandoned — the
+                    // connection is closing anyway
+                    self.phase = Phase::Drain { remaining };
+                    break;
+                }
+            }
+        }
+        progressed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ingest::{Frame, Modality};
+    use std::sync::mpsc;
+
+    fn sink() -> (ShardSender, mpsc::Receiver<Frame>) {
+        let (tx, rx) = mpsc::sync_channel(1024);
+        (ShardSender::from_senders(vec![tx]), rx)
+    }
+
+    fn frame(patient: usize) -> Frame {
+        Frame {
+            patient,
+            modality: Modality::Ecg,
+            sim_time: 0.5,
+            values: [0.1, 0.2, 0.3].into(),
+        }
+    }
+
+    fn drain_out(conn: &mut HttpConn) -> String {
+        let (a, b) = conn.out_mut().segments();
+        let mut v = a.to_vec();
+        v.extend_from_slice(b);
+        let n = v.len();
+        conn.out_mut().consume(n);
+        String::from_utf8_lossy(&v).to_string()
+    }
+
+    #[test]
+    fn fmt_u64_formats_boundaries() {
+        let mut s = [0u8; 20];
+        assert_eq!(fmt_u64(&mut s, 0), b"0");
+        let mut s = [0u8; 20];
+        assert_eq!(fmt_u64(&mut s, 12345), b"12345");
+        let mut s = [0u8; 20];
+        assert_eq!(fmt_u64(&mut s, u64::MAX), u64::MAX.to_string().as_bytes());
+    }
+
+    #[test]
+    fn recv_buf_compacts_instead_of_growing() {
+        let mut r = RecvBuf::with_capacity(8);
+        r.extend(b"abcdefgh");
+        r.consume(6);
+        r.extend(b"1234"); // would overflow without compaction
+        assert_eq!(r.data(), b"gh1234");
+    }
+
+    #[test]
+    fn recv_buf_spare_ptr_commit_roundtrip() {
+        let mut r = RecvBuf::with_capacity(16);
+        r.extend(b"abc");
+        r.consume(2);
+        let (ptr, spare) = r.spare_ptr(8);
+        assert!(spare >= 8);
+        // simulate a kernel read of 4 bytes
+        unsafe {
+            for (i, &b) in b"wxyz".iter().enumerate() {
+                ptr.add(i).write(b);
+            }
+            r.commit(4);
+        }
+        assert_eq!(r.data(), b"cwxyz");
+    }
+
+    #[test]
+    fn out_ring_wraps_and_segments_cover_all_bytes() {
+        let mut o = OutRing::with_capacity(64);
+        o.append(&[1u8; 48]);
+        o.consume(40);
+        o.append(&[2u8; 40]); // wraps
+        let (a, b) = o.segments();
+        assert_eq!(a.len() + b.len(), 48);
+        assert!(!b.is_empty(), "live region must wrap");
+        let mut all = a.to_vec();
+        all.extend_from_slice(b);
+        assert_eq!(&all[..8], &[1u8; 8]);
+        assert_eq!(&all[8..], &[2u8; 40]);
+    }
+
+    #[test]
+    fn out_ring_grows_preserving_order() {
+        let mut o = OutRing::with_capacity(64);
+        o.append(&[1u8; 48]);
+        o.consume(40);
+        o.append(&[2u8; 100]); // forces growth while wrapped
+        let (a, b) = o.segments();
+        assert!(b.is_empty(), "growth linearizes");
+        assert_eq!(&a[..8], &[1u8; 8]);
+        assert_eq!(&a[8..], &[2u8; 100]);
+    }
+
+    #[test]
+    fn parse_head_extracts_framing() {
+        let h =
+            parse_head(b"POST /ingest.bin HTTP/1.1\r\nHost: x\r\nContent-Length: 42\r\n\r\n");
+        assert_eq!(h.route, Route::IngestBin);
+        assert_eq!(h.content_length, 42);
+        assert!(h.keep_alive);
+        assert!(!h.bad_framing);
+        // HTTP/1.0 must opt in to keep-alive
+        let h = parse_head(b"GET /healthz HTTP/1.0\r\n\r\n");
+        assert!(!h.keep_alive);
+        let h = parse_head(b"GET /healthz HTTP/1.0\r\nConnection: keep-alive\r\n\r\n");
+        assert!(h.keep_alive);
+        // merged duplicate content-length is bad framing, not zero
+        let h = parse_head(b"POST /ingest.bin HTTP/1.1\r\nContent-Length: 12, 12\r\n\r\n");
+        assert!(h.bad_framing);
+        let h = parse_head(b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n");
+        assert!(h.bad_framing);
+        assert_eq!(h.route, Route::Unknown);
+    }
+
+    #[test]
+    fn streaming_bin_body_admits_frames_at_any_fragmentation() {
+        let (sink, rx) = sink();
+        let tel = Telemetry::default();
+        let mut body = Vec::new();
+        for p in 0..3usize {
+            frame(p).write_bytes(&mut body);
+        }
+        let mut req = format!(
+            "POST /ingest.bin HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        )
+        .into_bytes();
+        req.extend_from_slice(&body);
+
+        // one byte at a time — worst-case fragmentation
+        let mut conn = HttpConn::new();
+        for &b in &req {
+            conn.recv_mut().extend(&[b]);
+            conn.advance(&sink, &tel);
+        }
+        let resp = drain_out(&mut conn);
+        assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+        assert!(resp.contains("\"frames\":3"), "{resp}");
+        for p in 0..3usize {
+            assert_eq!(rx.try_recv().unwrap().patient, p);
+        }
+        assert!(rx.try_recv().is_err());
+        assert!(!conn.ready_to_close(), "keep-alive survives");
+    }
+
+    #[test]
+    fn pipelined_requests_in_one_buffer_all_answer() {
+        let (sink, rx) = sink();
+        let tel = Telemetry::default();
+        let mut stream = Vec::new();
+        for p in 0..2usize {
+            let mut body = Vec::new();
+            frame(p).write_bytes(&mut body);
+            stream.extend_from_slice(
+                format!(
+                    "POST /ingest.bin HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n",
+                    body.len()
+                )
+                .as_bytes(),
+            );
+            stream.extend_from_slice(&body);
+        }
+        stream.extend_from_slice(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n");
+        let mut conn = HttpConn::new();
+        conn.recv_mut().extend(&stream);
+        conn.advance(&sink, &tel);
+        let resp = drain_out(&mut conn);
+        assert_eq!(resp.matches("HTTP/1.1 200").count(), 3, "{resp}");
+        assert!(resp.contains("\"status\":\"up\""));
+        assert_eq!(rx.try_recv().unwrap().patient, 0);
+        assert_eq!(rx.try_recv().unwrap().patient, 1);
+    }
+
+    #[test]
+    fn malformed_bin_body_is_400_and_connection_survives() {
+        let (sink, rx) = sink();
+        let tel = Telemetry::default();
+        let mut conn = HttpConn::new();
+        let body = vec![0xDEu8; 40];
+        let mut req = format!(
+            "POST /ingest.bin HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        )
+        .into_bytes();
+        req.extend_from_slice(&body);
+        // follow with a pipelined healthz: the 400 must not desync
+        req.extend_from_slice(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n");
+        conn.recv_mut().extend(&req);
+        conn.advance(&sink, &tel);
+        let resp = drain_out(&mut conn);
+        assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+        assert!(resp.contains("HTTP/1.1 200"), "{resp}");
+        assert!(rx.try_recv().is_err(), "nothing admitted from a corrupt body");
+        assert!(!conn.ready_to_close());
+    }
+
+    #[test]
+    fn bad_framing_and_oversize_close_the_connection() {
+        let (sink, _rx) = sink();
+        let tel = Telemetry::default();
+        let mut conn = HttpConn::new();
+        conn.recv_mut()
+            .extend(b"POST /ingest.bin HTTP/1.1\r\nContent-Length: 12, 12\r\n\r\n");
+        conn.advance(&sink, &tel);
+        let resp = drain_out(&mut conn);
+        assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+        assert!(resp.contains("Connection: close"));
+        assert!(conn.ready_to_close());
+
+        let mut conn = HttpConn::new();
+        let req =
+            format!("POST /ingest.bin HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        conn.recv_mut().extend(req.as_bytes());
+        conn.advance(&sink, &tel);
+        let resp = drain_out(&mut conn);
+        assert!(resp.starts_with("HTTP/1.1 413"), "{resp}");
+        assert!(resp.contains("Connection: close"));
+        // nothing left to drain → ready to close
+        assert!(conn.ready_to_close());
+    }
+
+    #[test]
+    fn oversized_head_closes_without_response() {
+        let (sink, _rx) = sink();
+        let tel = Telemetry::default();
+        let mut conn = HttpConn::new();
+        // endless header bytes, never a blank line
+        let chunk = vec![b'a'; 64 * 1024];
+        for _ in 0..20 {
+            conn.recv_mut().extend(&chunk);
+            conn.advance(&sink, &tel);
+        }
+        assert!(conn.ready_to_close());
+        assert!(conn.out_mut().is_empty(), "no response for a header flood");
+    }
+}

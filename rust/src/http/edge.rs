@@ -1,0 +1,418 @@
+//! Event-driven ingest edge: a fixed pool of epoll readiness loops
+//! replacing thread-per-connection.
+//!
+//! ```text
+//!   monitors ──► shared nonblocking listener
+//!                   │ EPOLLEXCLUSIVE accept (one loop wakes per conn)
+//!        ┌──────────┼──────────┐
+//!        ▼          ▼          ▼
+//!   edge loop 0  edge loop 1  …   (--edge-threads, default cores/4)
+//!   epoll + slab of per-connection states
+//!        │ edge-triggered readv → RecvBuf (contiguous, compacting)
+//!        │ in-place wire decode (decode_step, no body Vec)
+//!        ▼
+//!   ShardSender (patient % shards) ──► aggregation shards
+//!        ▲
+//!        └ responses: OutRing → writev (≤ 2 segments, pipelined)
+//! ```
+//!
+//! Scaling shape: thread count follows `--edge-threads`, not the
+//! connection count — 10k mostly-idle keep-alive monitors cost slab
+//! slots and buffers, not OS threads. Each loop owns its connections
+//! outright (slab, generation-tagged epoll tokens), so there is no
+//! cross-loop locking; the only shared state is the accept gate and
+//! the telemetry counters, both atomics.
+//!
+//! Backpressure is physical: a full shard queue blocks the owning
+//! loop's `ShardSender::send` (bounded channels), a full socket send
+//! buffer parks the response in the connection's [`OutRing`] until
+//! `EPOLLOUT`, and a client that stops reading eventually stalls its
+//! own connection only. Stalled *half-requests* are reaped by the
+//! idle sweep ([`HttpConfig::read_timeout`]), counted in
+//! `conns_reaped`.
+
+use std::net::TcpListener;
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::serving::{EdgeGauges, ShardSender, Telemetry};
+use crate::{Error, Result};
+
+use super::conn::HttpConn;
+use super::sys::{self, IoStep};
+use super::{HttpConfig, HttpServer};
+
+/// epoll token of the shared listener.
+const TOKEN_LISTEN: u64 = u64::MAX;
+/// epoll token of the per-loop wake eventfd.
+const TOKEN_WAKE: u64 = u64::MAX - 1;
+
+/// Refusal sent when the connection gate is full — byte-identical to
+/// the fallback edge's 503 (the flood test asserts the body text).
+const REFUSAL_503: &[u8] = b"HTTP/1.1 503 Service Unavailable\r\nContent-Type: application/json\r\nContent-Length: 36\r\nConnection: close\r\n\r\n{\"error\":\"connection limit reached\"}";
+
+/// Connection-slot token: slot index in the low 32 bits, a 31-bit
+/// generation above it (stale events for a recycled slot are dropped
+/// by the generation check; the top bit stays clear of the special
+/// tokens).
+fn token(slot: usize, gen: u32) -> u64 {
+    (((gen & 0x7fff_ffff) as u64) << 32) | slot as u64
+}
+
+/// Resolve `--edge-threads`: 0 = auto (a quarter of the cores,
+/// clamped to [1, 4] — ingest parsing is cheap relative to model
+/// execution, which owns the rest of the box).
+pub(crate) fn effective_edge_threads(requested: usize) -> usize {
+    if requested > 0 {
+        return requested.min(64);
+    }
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    (cores / 4).clamp(1, 4)
+}
+
+struct Slot {
+    conn: HttpConn,
+    fd: i32,
+    gen: u32,
+    open: bool,
+    /// Peer sent FIN: stop reading, close once the response flushes.
+    peer_eof: bool,
+    last_activity: Instant,
+}
+
+struct EdgeLoop {
+    ep: sys::Epoll,
+    waker: Arc<sys::EventFd>,
+    listener_fd: i32,
+    sink: ShardSender,
+    telemetry: Arc<Telemetry>,
+    stop: Arc<AtomicBool>,
+    ready_events: Arc<[AtomicU64]>,
+    loop_idx: usize,
+    max_connections: usize,
+    read_timeout: Duration,
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    scratch: Vec<u8>,
+}
+
+enum Flush {
+    Empty,
+    Pending,
+    Error,
+}
+
+impl EdgeLoop {
+    fn run(mut self) {
+        let tick = (self.read_timeout / 4)
+            .clamp(Duration::from_millis(10), Duration::from_secs(1));
+        let timeout_ms = tick.as_millis() as i32;
+        let mut events = [sys::EpollEvent { events: 0, data: 0 }; 256];
+        let mut last_sweep = Instant::now();
+        loop {
+            let ready = match self.ep.wait(&mut events, timeout_ms) {
+                Ok(r) => r,
+                Err(_) => break, // epoll itself failed: give up the loop
+            };
+            let n_ready = ready.len();
+            self.ready_events[self.loop_idx].fetch_add(n_ready as u64, Ordering::Relaxed);
+            for i in 0..n_ready {
+                // copy the (possibly packed) record fields by value
+                let (tok, mask) = (events[i].data, events[i].events);
+                match tok {
+                    TOKEN_WAKE => self.waker.drain(),
+                    TOKEN_LISTEN => self.accept_burst(),
+                    t => {
+                        let slot = (t & 0xffff_ffff) as usize;
+                        let gen = (t >> 32) as u32;
+                        if slot < self.slots.len()
+                            && self.slots[slot].open
+                            && self.slots[slot].gen & 0x7fff_ffff == gen
+                        {
+                            self.conn_event(slot, mask);
+                        }
+                    }
+                }
+            }
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            if last_sweep.elapsed() >= tick {
+                last_sweep = Instant::now();
+                self.sweep();
+            }
+        }
+        // orderly teardown: close every connection this loop owns
+        for i in 0..self.slots.len() {
+            if self.slots[i].open {
+                self.close(i, false);
+            }
+        }
+    }
+
+    fn accept_burst(&mut self) {
+        // bounded per readiness so one flood cannot starve live
+        // connections on this loop; leftover backlog re-arms
+        // (level-triggered listener registration)
+        for _ in 0..256 {
+            let fd = match sys::accept_nonblocking(self.listener_fd) {
+                Ok(Some(fd)) => fd,
+                Ok(None) | Err(_) => break,
+            };
+            // gate: add-then-check against the shared live count (the
+            // same counter is the `conns_active` gauge, so the gate
+            // and the observable metric cannot disagree)
+            if self.telemetry.conns_active.fetch_add(1, Ordering::Relaxed)
+                >= self.max_connections
+            {
+                self.telemetry.conns_active.fetch_sub(1, Ordering::Relaxed);
+                self.telemetry.conns_refused.fetch_add(1, Ordering::Relaxed);
+                sys::write_best_effort(fd, REFUSAL_503);
+                sys::drain_best_effort(fd, 64 * 1024);
+                sys::close_fd(fd);
+                continue;
+            }
+            self.telemetry.conns_accepted.fetch_add(1, Ordering::Relaxed);
+            sys::set_nodelay(fd);
+            let slot = match self.free.pop() {
+                Some(i) => {
+                    let s = &mut self.slots[i];
+                    s.conn = HttpConn::new();
+                    s.fd = fd;
+                    s.open = true;
+                    s.peer_eof = false;
+                    s.last_activity = Instant::now();
+                    i
+                }
+                None => {
+                    self.slots.push(Slot {
+                        conn: HttpConn::new(),
+                        fd,
+                        gen: 0,
+                        open: true,
+                        peer_eof: false,
+                        last_activity: Instant::now(),
+                    });
+                    self.slots.len() - 1
+                }
+            };
+            let tok = token(slot, self.slots[slot].gen);
+            let interest =
+                sys::EPOLLIN | sys::EPOLLOUT | sys::EPOLLRDHUP | sys::EPOLLET;
+            if self.ep.add(fd, interest, tok).is_err() {
+                self.close(slot, false);
+                continue;
+            }
+            // data may already be waiting (registration reports the
+            // initial readiness edge, but don't depend on it)
+            self.conn_event(slot, sys::EPOLLIN);
+        }
+    }
+
+    /// Drive one connection through read → parse/respond → flush until
+    /// it quiesces, closes, or blocks.
+    fn conn_event(&mut self, slot: usize, mask: u32) {
+        if mask & (sys::EPOLLHUP | sys::EPOLLERR) != 0 {
+            self.close(slot, false);
+            return;
+        }
+        self.slots[slot].last_activity = Instant::now();
+        loop {
+            // 1. drain the socket (edge-triggered: read to EAGAIN)
+            let mut read_any = false;
+            let mut eof = false;
+            let mut dead = false;
+            {
+                let s = &mut self.slots[slot];
+                if !s.peer_eof && s.conn.wants_read() {
+                    loop {
+                        let (ptr, len) = s.conn.recv_mut().spare_ptr(4096);
+                        let step = unsafe {
+                            sys::readv2(
+                                s.fd,
+                                ptr,
+                                len,
+                                self.scratch.as_mut_ptr(),
+                                self.scratch.len(),
+                            )
+                        };
+                        match step {
+                            IoStep::Done(0) => {
+                                eof = true;
+                                break;
+                            }
+                            IoStep::Done(n) => {
+                                let direct = n.min(len);
+                                // SAFETY: the kernel initialized
+                                // `direct` bytes of the spare window
+                                unsafe { s.conn.recv_mut().commit(direct) };
+                                if n > direct {
+                                    // burst overflowed into scratch:
+                                    // copy the spill in (rare)
+                                    s.conn.recv_mut().extend(&self.scratch[..n - direct]);
+                                }
+                                read_any = true;
+                                if n < len + self.scratch.len() {
+                                    break; // short read: socket drained
+                                }
+                            }
+                            IoStep::WouldBlock => break,
+                            IoStep::Err => {
+                                dead = true;
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+            if dead {
+                self.close(slot, false);
+                return;
+            }
+            if eof {
+                self.slots[slot].peer_eof = true;
+            }
+            // 2. parse and respond until quiescent or backpressured
+            loop {
+                let progressed = {
+                    let s = &mut self.slots[slot];
+                    s.conn.advance(&self.sink, &self.telemetry)
+                };
+                let flush = self.flush(slot);
+                if matches!(flush, Flush::Error) {
+                    self.close(slot, false);
+                    return;
+                }
+                if self.slots[slot].conn.ready_to_close() {
+                    self.close(slot, false);
+                    return;
+                }
+                if !progressed || matches!(flush, Flush::Pending) {
+                    break;
+                }
+            }
+            // 3. half-closed peer: once the response has flushed there
+            // is nothing left to do on this connection
+            if self.slots[slot].peer_eof && self.slots[slot].conn.out_mut().is_empty() {
+                self.close(slot, false);
+                return;
+            }
+            if !read_any {
+                return; // wait for the next readiness edge
+            }
+        }
+    }
+
+    fn flush(&mut self, slot: usize) -> Flush {
+        let s = &mut self.slots[slot];
+        loop {
+            if s.conn.out_mut().is_empty() {
+                return Flush::Empty;
+            }
+            let (a, b) = s.conn.out_mut().segments();
+            match sys::writev2(s.fd, a, b) {
+                IoStep::Done(0) => return Flush::Error,
+                IoStep::Done(n) => s.conn.out_mut().consume(n),
+                IoStep::WouldBlock => return Flush::Pending,
+                IoStep::Err => return Flush::Error,
+            }
+        }
+    }
+
+    fn close(&mut self, slot: usize, reaped: bool) {
+        let s = &mut self.slots[slot];
+        debug_assert!(s.open);
+        self.ep.del(s.fd);
+        sys::close_fd(s.fd);
+        s.open = false;
+        s.fd = -1;
+        s.gen = s.gen.wrapping_add(1);
+        self.free.push(slot);
+        self.telemetry.conns_active.fetch_sub(1, Ordering::Relaxed);
+        if reaped {
+            self.telemetry.conns_reaped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Reap connections idle past the read deadline — the slow-loris
+    /// guard: a drip-feeding or silent client frees its slot instead
+    /// of pinning it forever.
+    fn sweep(&mut self) {
+        let now = Instant::now();
+        for i in 0..self.slots.len() {
+            if self.slots[i].open
+                && now.duration_since(self.slots[i].last_activity) > self.read_timeout
+            {
+                self.close(i, true);
+            }
+        }
+    }
+}
+
+/// Spawn the epoll edge: bind, start `--edge-threads` event loops,
+/// return the server handle whose drop stops and joins them.
+pub(crate) fn serve_edge(
+    addr: &str,
+    sink: ShardSender,
+    telemetry: Arc<Telemetry>,
+    cfg: HttpConfig,
+) -> Result<HttpServer> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let listener_fd = listener.as_raw_fd();
+    sys::set_nonblocking(listener_fd).map_err(Error::Io)?;
+
+    let n_loops = effective_edge_threads(cfg.edge_threads);
+    let ready_events: Arc<[AtomicU64]> = (0..n_loops).map(|_| AtomicU64::new(0)).collect();
+    telemetry.install_edge(EdgeGauges::new(Arc::clone(&ready_events)));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let mut wakers: Vec<Arc<sys::EventFd>> = Vec::with_capacity(n_loops);
+    let mut joins = Vec::with_capacity(n_loops);
+    for i in 0..n_loops {
+        let ep = sys::Epoll::new().map_err(Error::Io)?;
+        let waker = Arc::new(sys::EventFd::new().map_err(Error::Io)?);
+        ep.add(waker.raw(), sys::EPOLLIN, TOKEN_WAKE).map_err(Error::Io)?;
+        // level-triggered + EPOLLEXCLUSIVE: exactly one sleeping loop
+        // wakes per connection burst, unconsumed backlog re-arms
+        ep.add(listener_fd, sys::EPOLLIN | sys::EPOLLEXCLUSIVE, TOKEN_LISTEN)
+            .map_err(Error::Io)?;
+        let lp = EdgeLoop {
+            ep,
+            waker: Arc::clone(&waker),
+            listener_fd,
+            sink: sink.clone(),
+            telemetry: Arc::clone(&telemetry),
+            stop: Arc::clone(&stop),
+            ready_events: Arc::clone(&ready_events),
+            loop_idx: i,
+            max_connections: cfg.max_connections,
+            read_timeout: cfg.read_timeout,
+            slots: Vec::new(),
+            free: Vec::new(),
+            scratch: vec![0u8; 64 * 1024],
+        };
+        wakers.push(waker);
+        joins.push(
+            std::thread::Builder::new()
+                .name(format!("http-edge-{i}"))
+                .spawn(move || lp.run())
+                .map_err(Error::Io)?,
+        );
+    }
+
+    let stop2 = Arc::clone(&stop);
+    let shutdown = Box::new(move || {
+        stop2.store(true, Ordering::SeqCst);
+        for w in &wakers {
+            w.notify();
+        }
+        for j in joins {
+            let _ = j.join();
+        }
+        drop(listener); // closed only after every loop has exited
+    });
+    Ok(HttpServer { addr: local, stop, shutdown: Some(shutdown) })
+}

@@ -9,24 +9,55 @@
 //! * `GET /stats`        — telemetry snapshot (JSON).
 //! * `GET /healthz`      — liveness.
 //!
-//! Hand-rolled on std TCP with a thread per connection: the request
-//! path needs exactly these routes and zero framework overhead.
+//! ## Two edges, one protocol core
+//!
+//! On Linux the edge is **event-driven** ([`edge`]): a fixed pool of
+//! epoll readiness loops (`--edge-threads`, default cores/4) shares one
+//! nonblocking listener via `EPOLLEXCLUSIVE`, and each loop owns a slab
+//! of connection states driven edge-triggered:
+//!
+//! ```text
+//!            shared nonblocking listener (EPOLLEXCLUSIVE)
+//!          ┌──────────────┼──────────────┐
+//!          ▼              ▼              ▼
+//!     edge loop 0    edge loop 1    edge loop k      (epoll_wait)
+//!     ┌ slab of HttpConn states, generation-tagged tokens
+//!     │  readv ──► RecvBuf (contiguous) ──► incremental parse
+//!     │                │ /ingest.bin: in-place wire decode
+//!     │                ▼   (Frame is Copy — no body Vec, no alloc)
+//!     │           ShardSender (patient % shards)
+//!     │  OutRing ◄── responses; flushed by writev (≤ 2 segments)
+//!     └ idle sweep: read_timeout reaps stalled half-requests
+//! ```
+//!
+//! Thread count follows the flag, not the connection count: 10k
+//! mostly-idle keep-alive bedside monitors cost slab slots and ring
+//! buffers, not OS threads. Everywhere else (and as the `legacy_`
+//! bench replica, [`serve_legacy_with`]) the original
+//! thread-per-connection edge remains: one blocking handler thread per
+//! accepted connection, same routes, same status/framing semantics,
+//! same [`conn::parse_head`] protocol core — the two edges are
+//! byte-compatible on the wire and bit-identical downstream.
+//!
 //! Connections are **keep-alive by default** (HTTP/1.1): a bedside
 //! load generator pays one TCP handshake per stream, not one per
 //! frame. `Connection: close` (or HTTP/1.0 without an explicit
 //! keep-alive) closes after the response. Request bodies are bounded
 //! by [`MAX_BODY_BYTES`]; oversized requests get `413` and the
 //! connection is closed (the unread body would desynchronise framing).
-//! The thread-per-connection spawn is gated by an atomic connection
-//! count ([`HttpConfig::max_connections`]): past the limit the accept
-//! loop answers `503 Service Unavailable` + `Connection: close`
-//! without spawning anything, so a connection flood cannot exhaust the
-//! serving box.
+//! Both edges gate admission on the same live-connection counter
+//! ([`HttpConfig::max_connections`], surfaced as the `conns_active`
+//! gauge): past the limit the connection is answered `503 Service
+//! Unavailable` + `Connection: close` without dedicating any state to
+//! it, so a connection flood cannot exhaust the serving box. A client
+//! that stalls mid-request is reaped after
+//! [`HttpConfig::read_timeout`] (`conns_reaped`) — the slow-loris
+//! guard.
 //!
 //! Admitted frames are routed into the sharded aggregation front-end
 //! through a [`ShardSender`] (`patient % shards`, bounded per-shard
-//! queues): many connection threads ingest concurrently without any
-//! single channel seeing every frame.
+//! queues): many connections ingest concurrently without any single
+//! channel seeing every frame.
 //!
 //! ## Binary wire format (`/ingest.bin`)
 //!
@@ -45,15 +76,25 @@
 //!  28      4·n   values    (f32 each, finite)
 //! ```
 //!
-//! A body may concatenate any number of frames; the route decodes all
-//! of them or rejects the whole body with `400` (malformed, truncated,
-//! or non-finite input — nothing partial is admitted). The response is
-//! `{"ok":true,"frames":N}`.
+//! A body may concatenate any number of frames. The fallback edge
+//! decodes all of them or rejects the whole body with `400` (nothing
+//! partial admitted); the event-driven edge decodes **streaming, in
+//! place** from the connection's receive buffer — frames preceding a
+//! malformed byte are already admitted when the `400` goes out (the
+//! response still reports the error, and the connection survives).
+//! The success response is `{"ok":true,"frames":N}` on both edges.
+
+pub mod conn;
+#[cfg(target_os = "linux")]
+mod edge;
+#[cfg(target_os = "linux")]
+pub mod sys;
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::ingest::{wire, Frame};
 use crate::json::Value;
@@ -71,39 +112,65 @@ pub const MAX_BODY_BYTES: usize = 4 << 20;
 pub struct HttpConfig {
     /// Concurrent-connection cap: connection `max_connections + 1`
     /// gets `503 Service Unavailable` + `Connection: close` instead of
-    /// a handler thread. Plenty for 100 keep-alive bedside streams,
-    /// small enough that a flood cannot exhaust the 64-bed box.
+    /// any per-connection state. Plenty for 100 keep-alive bedside
+    /// streams, small enough that a flood cannot exhaust the 64-bed
+    /// box.
     pub max_connections: usize,
+    /// Reap a connection whose request has stalled for this long
+    /// (slow-loris guard). The event-driven edge sweeps idle
+    /// connections against this deadline; the thread-per-connection
+    /// fallback applies it as the socket read timeout. Reaps count in
+    /// the `conns_reaped` gauge.
+    pub read_timeout: Duration,
+    /// Event-loop threads for the epoll edge (Linux). `0` = auto: a
+    /// quarter of the cores, clamped to `[1, 4]` — ingest parsing is
+    /// cheap next to model execution, which owns the rest of the box.
+    /// Ignored by the thread-per-connection fallback.
+    pub edge_threads: usize,
 }
 
 impl Default for HttpConfig {
     fn default() -> Self {
-        HttpConfig { max_connections: 256 }
+        HttpConfig {
+            max_connections: 256,
+            read_timeout: Duration::from_secs(30),
+            edge_threads: 0,
+        }
     }
 }
 
-/// Running server handle; the listener thread stops accepting when this
-/// is dropped (connections in flight finish their current request).
+/// Running server handle; dropping it stops the edge (event loops are
+/// joined; the fallback's accept thread stops accepting and
+/// connections in flight finish their current request).
 pub struct HttpServer {
     pub addr: SocketAddr,
     stop: Arc<AtomicBool>,
+    /// Edge-specific teardown (notify + join the event loops). `None`
+    /// for the fallback edge, which is unblocked by a dummy connect.
+    shutdown: Option<Box<dyn FnOnce() + Send>>,
 }
 
 impl Drop for HttpServer {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // unblock accept() with a dummy connection
-        let _ = TcpStream::connect(self.addr);
+        match self.shutdown.take() {
+            Some(f) => f(),
+            // unblock the fallback's blocking accept() with a dummy
+            // connection
+            None => {
+                let _ = TcpStream::connect(self.addr);
+            }
+        }
     }
 }
 
-/// Decrements the live-connection gate when a handler thread exits,
-/// however it exits.
-struct ConnGuard(Arc<AtomicUsize>);
+/// Decrements the live-connection gauge when a fallback handler thread
+/// exits, however it exits.
+struct ConnGuard(Arc<Telemetry>);
 
 impl Drop for ConnGuard {
     fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::Relaxed);
+        self.0.conns_active.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -114,8 +181,30 @@ pub fn serve(addr: &str, sink: ShardSender, telemetry: Arc<Telemetry>) -> Result
     serve_with(addr, sink, telemetry, HttpConfig::default())
 }
 
-/// [`serve`] with explicit tunables.
+/// [`serve`] with explicit tunables. On Linux this starts the
+/// event-driven epoll edge; elsewhere the thread-per-connection
+/// fallback ([`serve_legacy_with`]).
 pub fn serve_with(
+    addr: &str,
+    sink: ShardSender,
+    telemetry: Arc<Telemetry>,
+    cfg: HttpConfig,
+) -> Result<HttpServer> {
+    #[cfg(target_os = "linux")]
+    {
+        edge::serve_edge(addr, sink, telemetry, cfg)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        serve_legacy_with(addr, sink, telemetry, cfg)
+    }
+}
+
+/// The thread-per-connection edge: one blocking handler thread per
+/// accepted connection. The portable fallback on non-Linux targets,
+/// and the `legacy_` baseline the edge-concurrency benches measure the
+/// epoll edge against. Same routes, same status and framing semantics.
+pub fn serve_legacy_with(
     addr: &str,
     sink: ShardSender,
     telemetry: Arc<Telemetry>,
@@ -125,7 +214,6 @@ pub fn serve_with(
     let local = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
     let stop2 = Arc::clone(&stop);
-    let active = Arc::new(AtomicUsize::new(0));
     std::thread::Builder::new()
         .name("http-accept".into())
         .spawn(move || {
@@ -134,11 +222,15 @@ pub fn serve_with(
                     break;
                 }
                 let Ok(mut stream) = stream else { continue };
-                // connection gate: refuse before spawning. The accept
-                // loop is the only incrementer, so add-then-check is
-                // race-free; handler threads decrement via ConnGuard.
-                if active.fetch_add(1, Ordering::Relaxed) >= cfg.max_connections {
-                    active.fetch_sub(1, Ordering::Relaxed);
+                // connection gate: refuse before spawning. The gate and
+                // the `conns_active` gauge are the same atomic, so they
+                // cannot disagree; handler threads decrement via
+                // ConnGuard.
+                if telemetry.conns_active.fetch_add(1, Ordering::Relaxed)
+                    >= cfg.max_connections
+                {
+                    telemetry.conns_active.fetch_sub(1, Ordering::Relaxed);
+                    telemetry.conns_refused.fetch_add(1, Ordering::Relaxed);
                     // best-effort refusal: bound the write so a
                     // non-reading client cannot stall the accept loop
                     let _ = stream
@@ -171,17 +263,29 @@ pub fn serve_with(
                     }
                     continue;
                 }
-                let guard = ConnGuard(Arc::clone(&active));
+                telemetry.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                // slow-loris guard: a stalled read wakes the handler,
+                // which reaps the connection and frees the thread
+                let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+                let guard = ConnGuard(Arc::clone(&telemetry));
                 let tx = sink.clone();
                 let tel = Arc::clone(&telemetry);
                 std::thread::spawn(move || {
                     let _guard = guard;
-                    let _ = handle_connection(stream, tx, tel);
+                    if let Err(Error::Io(e)) = handle_connection(stream, tx, Arc::clone(&tel))
+                    {
+                        if matches!(
+                            e.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        ) {
+                            tel.conns_reaped.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
                 });
             }
         })
         .map_err(Error::Io)?;
-    Ok(HttpServer { addr: local, stop })
+    Ok(HttpServer { addr: local, stop, shutdown: None })
 }
 
 fn handle_connection(
@@ -202,44 +306,16 @@ fn handle_connection(
                 return Ok(()); // connection closed
             }
             buf.extend_from_slice(&chunk[..n]);
-            if buf.len() > 1 << 20 {
+            if buf.len() > conn::MAX_HEAD_BYTES {
                 return Err(Error::serving("request headers too large"));
             }
         };
-        let head = String::from_utf8_lossy(&buf[..header_end]).to_string();
-        let mut lines = head.lines();
-        let request_line = lines.next().unwrap_or_default().to_string();
-        let mut content_length: usize = 0;
-        let mut bad_framing = false;
-        let mut close_requested = false;
-        let mut keep_alive_requested = false;
-        for l in lines {
-            let Some((k, v)) = l.split_once(':') else { continue };
-            let v = v.trim();
-            if k.eq_ignore_ascii_case("content-length") {
-                match v.parse() {
-                    Ok(n) => content_length = n,
-                    // an unparseable length (e.g. duplicate headers
-                    // merged to "123, 123") must not default to 0: the
-                    // body bytes would be re-parsed as the next request
-                    // on this keep-alive connection
-                    Err(_) => bad_framing = true,
-                }
-            } else if k.eq_ignore_ascii_case("transfer-encoding") {
-                bad_framing = true; // chunked bodies are unsupported
-            } else if k.eq_ignore_ascii_case("connection") {
-                close_requested = v.eq_ignore_ascii_case("close");
-                keep_alive_requested = v.eq_ignore_ascii_case("keep-alive");
-            }
-        }
-        // HTTP/1.1 defaults to keep-alive; HTTP/1.0 must opt in
-        let http10 = request_line.ends_with("HTTP/1.0");
-        let keep_alive = !close_requested && (!http10 || keep_alive_requested);
+        let info = conn::parse_head(&buf[..header_end]);
 
         // body framing we cannot trust → 400 and close (we don't know
         // where this request's body ends, so the connection cannot be
         // reused)
-        if bad_framing {
+        if info.bad_framing {
             write_response(
                 &mut stream,
                 "400 Bad Request",
@@ -251,7 +327,7 @@ fn handle_connection(
 
         // refuse oversized bodies before buffering them; the unread
         // body bytes would desync request framing, so close afterwards
-        if content_length > MAX_BODY_BYTES {
+        if info.content_length > MAX_BODY_BYTES {
             write_response(
                 &mut stream,
                 "413 Payload Too Large",
@@ -265,7 +341,7 @@ fn handle_connection(
             let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(250)));
             let mut sink = [0u8; 4096];
             let mut drained = buf.len().saturating_sub(header_end);
-            while drained < content_length.min(2 * MAX_BODY_BYTES) {
+            while drained < info.content_length.min(2 * MAX_BODY_BYTES) {
                 match stream.read(&mut sink) {
                     Ok(0) | Err(_) => break,
                     Ok(n) => drained += n,
@@ -274,7 +350,7 @@ fn handle_connection(
             return Ok(());
         }
         // read the body
-        while buf.len() < header_end + content_length {
+        while buf.len() < header_end + info.content_length {
             let mut chunk = [0u8; 4096];
             let n = stream.read(&mut chunk)?;
             if n == 0 {
@@ -282,12 +358,12 @@ fn handle_connection(
             }
             buf.extend_from_slice(&chunk[..n]);
         }
-        let body = buf[header_end..header_end + content_length].to_vec();
-        buf.drain(..header_end + content_length);
+        let body = &buf[header_end..header_end + info.content_length];
 
-        let (status, payload) = route(&request_line, &body, &frame_tx, &telemetry);
-        write_response(&mut stream, status, &payload, keep_alive)?;
-        if !keep_alive {
+        let (status, payload) = route_parsed(info.route, body, &frame_tx, &telemetry);
+        buf.drain(..header_end + info.content_length);
+        write_response(&mut stream, status, &payload, info.keep_alive)?;
+        if !info.keep_alive {
             return Ok(());
         }
     }
@@ -309,17 +385,18 @@ fn write_response(
     Ok(())
 }
 
-fn route(
-    request_line: &str,
+/// Dispatch one fully-buffered request body on a parsed route. Shared
+/// by the fallback edge (every route) and the event-driven edge (every
+/// route except `/ingest.bin`, which decodes streaming and in place —
+/// see [`conn::HttpConn`]).
+pub(crate) fn route_parsed(
+    route: conn::Route,
     body: &[u8],
     frame_tx: &ShardSender,
     telemetry: &Telemetry,
 ) -> (&'static str, String) {
-    let mut parts = request_line.split_whitespace();
-    let method = parts.next().unwrap_or("");
-    let path = parts.next().unwrap_or("");
-    match (method, path) {
-        ("POST", "/ingest") => {
+    match route {
+        conn::Route::IngestJson => {
             let parsed = std::str::from_utf8(body)
                 .map_err(|_| Error::json("body not utf-8"))
                 .and_then(Value::parse)
@@ -335,7 +412,7 @@ fn route(
                 Err(e) => ("400 Bad Request", format!("{{\"error\":\"{e}\"}}")),
             }
         }
-        ("POST", "/ingest.bin") => match wire::decode_stream(body) {
+        conn::Route::IngestBin => match wire::decode_stream(body) {
             Ok(frames) => {
                 let n = frames.len();
                 for frame in frames {
@@ -350,9 +427,9 @@ fn route(
             }
             Err(e) => ("400 Bad Request", format!("{{\"error\":\"{e}\"}}")),
         },
-        ("GET", "/stats") => ("200 OK", telemetry.snapshot().to_json().to_string()),
-        ("GET", "/healthz") => ("200 OK", "{\"status\":\"up\"}".to_string()),
-        _ => ("404 Not Found", "{\"error\":\"no such route\"}".to_string()),
+        conn::Route::Stats => ("200 OK", telemetry.snapshot().to_json().to_string()),
+        conn::Route::Healthz => ("200 OK", "{\"status\":\"up\"}".to_string()),
+        conn::Route::Unknown => ("404 Not Found", "{\"error\":\"no such route\"}".to_string()),
     }
 }
 
@@ -453,6 +530,8 @@ mod tests {
     use std::sync::mpsc;
 
     /// Single-shard sink: every admitted frame lands on one receiver.
+    /// On Linux this exercises the event-driven edge; elsewhere the
+    /// fallback (same assertions hold for both).
     fn test_server() -> (HttpServer, mpsc::Receiver<Frame>) {
         let (tx, rx) = mpsc::sync_channel(1024);
         let tel = Arc::new(Telemetry::default());
@@ -607,8 +686,8 @@ mod tests {
         let server = serve_with(
             "127.0.0.1:0",
             ShardSender::from_senders(vec![tx]),
-            tel,
-            HttpConfig { max_connections: 2 },
+            Arc::clone(&tel),
+            HttpConfig { max_connections: 2, ..HttpConfig::default() },
         )
         .unwrap();
 
@@ -630,8 +709,10 @@ mod tests {
         assert!(text.starts_with("HTTP/1.1 503"), "{text}");
         assert!(text.contains("Connection: close"), "{text}");
         assert!(text.contains("connection limit"), "{text}");
+        assert!(tel.conns_refused.load(Ordering::Relaxed) >= 1);
+        assert!(tel.conns_accepted.load(Ordering::Relaxed) >= 2);
 
-        // releasing a slot lets new connections in again (the handler
+        // releasing a slot lets new connections in again (the edge
         // notices the close asynchronously, so poll briefly)
         drop(held.pop());
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
@@ -693,9 +774,38 @@ mod tests {
         assert!(String::from_utf8_lossy(&resp[..n]).starts_with("HTTP/1.1 400"));
     }
 
+    /// The fallback edge stays healthy on every platform — it is both
+    /// the non-Linux edge and the `legacy_` bench baseline.
+    #[test]
+    fn legacy_edge_roundtrip_and_stats() {
+        let (tx, rx) = mpsc::sync_channel(1024);
+        let tel = Arc::new(Telemetry::default());
+        let server = serve_legacy_with(
+            "127.0.0.1:0",
+            ShardSender::from_senders(vec![tx]),
+            Arc::clone(&tel),
+            HttpConfig::default(),
+        )
+        .unwrap();
+        let mut client = IngestClient::connect(server.addr).unwrap();
+        let frames: Vec<Frame> = (0..4usize)
+            .map(|i| Frame {
+                patient: i,
+                modality: Modality::Ecg,
+                sim_time: i as f64 * 0.004,
+                values: [1.0, 2.0].into(),
+            })
+            .collect();
+        client.send_frames(&frames).unwrap();
+        for i in 0..4usize {
+            assert_eq!(rx.recv().unwrap().patient, i);
+        }
+        assert_eq!(tel.conns_accepted.load(Ordering::Relaxed), 1);
+    }
+
     #[test]
     fn find_subslice_works() {
-        assert_eq!(find_subslice(b"abc\r\n\r\ndef", b"\r\n\r\n"), Some(3));
+        assert_eq!(find_subslice(b"abc\r\n\r\n", b"\r\n\r\n"), Some(3));
         assert_eq!(find_subslice(b"abc", b"xyz"), None);
     }
 }

@@ -26,6 +26,18 @@
 //! ([`decode_stream`]); each frame is self-delimiting via `n_values`.
 //! Decoding is total: truncated or corrupt buffers return
 //! [`Error::Wire`], never panic, and never allocate.
+//!
+//! ## Incremental decoding
+//!
+//! The event-driven ingest edge decodes frames **in place** from a
+//! per-connection receive buffer as bytes arrive, at arbitrary read
+//! fragmentation. [`decode_step`] is the resumable entry point: it
+//! distinguishes *"this prefix is fine, more bytes will complete it"*
+//! ([`DecodeStep::NeedMore`]) from *hard corruption* (`Err`), and it
+//! rejects bad magic/version/modality bytes as soon as they are
+//! visible — a drip-feeding client sending garbage is refused on the
+//! first bad byte, not after a full sham header. [`Frame::from_bytes`]
+//! is the one-shot wrapper (`NeedMore` becomes a truncation error).
 
 use super::{Frame, FrameValues, Modality, MAX_FRAME_VALUES};
 use crate::{Error, Result};
@@ -100,56 +112,84 @@ impl Frame {
     /// the number of bytes consumed. Total: truncated, corrupt, or
     /// non-finite input yields `Err`, never a panic.
     pub fn from_bytes(buf: &[u8]) -> Result<(Frame, usize)> {
-        if buf.len() < WIRE_HEADER_LEN {
-            return Err(Error::wire(format!(
-                "truncated header: {} of {WIRE_HEADER_LEN} bytes",
-                buf.len()
-            )));
-        }
-        if buf[..4] != WIRE_MAGIC {
-            return Err(Error::wire("bad magic (expected HLM1)"));
-        }
-        if buf[4] != WIRE_VERSION {
-            return Err(Error::wire(format!("unsupported wire version {}", buf[4])));
-        }
-        let modality = Modality::from_wire_code(buf[5])?;
-        if buf[6] != 0 || buf[7] != 0 {
-            return Err(Error::wire("nonzero reserved bytes"));
-        }
-        // the wire field is a u64 but `Frame.patient` is a usize: a
-        // lossy `as` cast would silently alias two distinct patients
-        // into one aggregator on 32-bit targets — reject instead (the
-        // frame counts as malformed/dropped upstream)
-        let patient_raw = u64::from_le_bytes(take8(buf, 8));
-        let patient = usize::try_from(patient_raw).map_err(|_| {
-            Error::wire(format!("patient id {patient_raw} exceeds this platform's usize"))
-        })?;
-        let sim_time = f64::from_le_bytes(take8(buf, 16));
-        if !sim_time.is_finite() {
-            return Err(Error::wire("non-finite sim_time"));
-        }
-        let n = u32::from_le_bytes(take4(buf, 24)) as usize;
-        if n > MAX_WIRE_VALUES {
-            return Err(Error::wire(format!("payload length {n} exceeds {MAX_WIRE_VALUES}")));
-        }
-        let total = WIRE_HEADER_LEN + 4 * n;
-        if buf.len() < total {
-            return Err(Error::wire(format!(
-                "truncated payload: {} of {total} bytes",
-                buf.len()
-            )));
-        }
-        let mut values = FrameValues::new();
-        for (i, chunk) in buf[WIRE_HEADER_LEN..total].chunks_exact(4).enumerate() {
-            let v = f32::from_le_bytes(chunk.try_into().expect("chunks_exact(4)"));
-            if !v.is_finite() {
-                return Err(Error::wire(format!("non-finite payload value at index {i}")));
+        match decode_step(buf)? {
+            DecodeStep::Frame(frame, used) => Ok((frame, used)),
+            DecodeStep::NeedMore(need) => {
+                Err(Error::wire(format!("truncated frame: {} of {need} bytes", buf.len())))
             }
-            // cannot overflow: n ≤ MAX_WIRE_VALUES = the buffer capacity
-            let _ = values.push(v);
         }
-        Ok((Frame { patient, modality, sim_time, values }, total))
     }
+}
+
+/// Outcome of one [`decode_step`] attempt on a (possibly partial)
+/// buffer prefix.
+#[derive(Debug, Clone, Copy)]
+pub enum DecodeStep {
+    /// A complete frame was decoded from the front of the buffer; the
+    /// `usize` is the number of bytes consumed.
+    Frame(Frame, usize),
+    /// The buffer holds a valid *prefix* of a frame but not a whole
+    /// one; the `usize` is the total byte count (from the buffer
+    /// start) at which the frame can complete. Resume once more bytes
+    /// arrive — no work is repeated beyond re-reading the header.
+    NeedMore(usize),
+}
+
+/// Resumable single-frame decode for incremental (event-driven)
+/// readers: distinguishes *need more bytes* ([`DecodeStep::NeedMore`])
+/// from hard corruption (`Err`). Every byte of the fixed header that
+/// is already present is validated, so corrupt input fails at the
+/// first offending byte even before the header completes.
+pub fn decode_step(buf: &[u8]) -> Result<DecodeStep> {
+    // validate whatever header prefix has arrived so far
+    let have = buf.len().min(WIRE_HEADER_LEN);
+    let magic = have.min(4);
+    if buf[..magic] != WIRE_MAGIC[..magic] {
+        return Err(Error::wire("bad magic (expected HLM1)"));
+    }
+    if have > 4 && buf[4] != WIRE_VERSION {
+        return Err(Error::wire(format!("unsupported wire version {}", buf[4])));
+    }
+    if have > 5 {
+        Modality::from_wire_code(buf[5])?;
+    }
+    if (have > 6 && buf[6] != 0) || (have > 7 && buf[7] != 0) {
+        return Err(Error::wire("nonzero reserved bytes"));
+    }
+    if buf.len() < WIRE_HEADER_LEN {
+        return Ok(DecodeStep::NeedMore(WIRE_HEADER_LEN));
+    }
+    let modality = Modality::from_wire_code(buf[5])?;
+    // the wire field is a u64 but `Frame.patient` is a usize: a
+    // lossy `as` cast would silently alias two distinct patients
+    // into one aggregator on 32-bit targets — reject instead (the
+    // frame counts as malformed/dropped upstream)
+    let patient_raw = u64::from_le_bytes(take8(buf, 8));
+    let patient = usize::try_from(patient_raw).map_err(|_| {
+        Error::wire(format!("patient id {patient_raw} exceeds this platform's usize"))
+    })?;
+    let sim_time = f64::from_le_bytes(take8(buf, 16));
+    if !sim_time.is_finite() {
+        return Err(Error::wire("non-finite sim_time"));
+    }
+    let n = u32::from_le_bytes(take4(buf, 24)) as usize;
+    if n > MAX_WIRE_VALUES {
+        return Err(Error::wire(format!("payload length {n} exceeds {MAX_WIRE_VALUES}")));
+    }
+    let total = WIRE_HEADER_LEN + 4 * n;
+    if buf.len() < total {
+        return Ok(DecodeStep::NeedMore(total));
+    }
+    let mut values = FrameValues::new();
+    for (i, chunk) in buf[WIRE_HEADER_LEN..total].chunks_exact(4).enumerate() {
+        let v = f32::from_le_bytes(chunk.try_into().expect("chunks_exact(4)"));
+        if !v.is_finite() {
+            return Err(Error::wire(format!("non-finite payload value at index {i}")));
+        }
+        // cannot overflow: n ≤ MAX_WIRE_VALUES = the buffer capacity
+        let _ = values.push(v);
+    }
+    Ok(DecodeStep::Frame(Frame { patient, modality, sim_time, values }, total))
 }
 
 /// Decode a whole request body of back-to-back frames. Errors if any
@@ -218,6 +258,45 @@ mod tests {
         let bytes = frame().to_bytes();
         for cut in 0..bytes.len() {
             assert!(Frame::from_bytes(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn decode_step_resumes_at_every_cut_of_a_valid_frame() {
+        let f = frame();
+        let bytes = f.to_bytes();
+        for cut in 0..bytes.len() {
+            match decode_step(&bytes[..cut]).unwrap_or_else(|e| panic!("cut {cut}: {e}")) {
+                DecodeStep::NeedMore(need) => {
+                    assert!(need > cut, "cut {cut}: need {need} must exceed what we have");
+                    assert!(need <= bytes.len(), "cut {cut}: need {need} within the frame");
+                }
+                DecodeStep::Frame(..) => panic!("cut {cut}: incomplete prefix decoded a frame"),
+            }
+        }
+        match decode_step(&bytes).unwrap() {
+            DecodeStep::Frame(g, used) => {
+                assert_eq!(used, bytes.len());
+                assert_eq!(g.patient, f.patient);
+                assert_eq!(g.sim_time.to_bits(), f.sim_time.to_bits());
+                assert_eq!(g.values, f.values);
+            }
+            DecodeStep::NeedMore(n) => panic!("complete frame reported NeedMore({n})"),
+        }
+    }
+
+    #[test]
+    fn decode_step_rejects_garbage_at_the_first_visible_byte() {
+        // corrupt magic is refused with a single byte in the buffer
+        assert!(decode_step(&[0xde]).is_err());
+        // corrupt version / modality / reserved are refused as soon as
+        // that byte arrives, well before the header completes
+        let good = frame().to_bytes();
+        for (at, bad) in [(4usize, 9u8), (5, 7), (6, 1), (7, 1)] {
+            let mut b = good.clone();
+            b[at] = bad;
+            assert!(decode_step(&b[..at + 1]).is_err(), "byte {at} not rejected early");
+            assert!(decode_step(&b).is_err(), "byte {at} not rejected in full");
         }
     }
 

@@ -37,6 +37,8 @@ COMMANDS:
       --speedup X            virtual-clock acceleration      [10]
       --duration SECS        simulated duration              [120]
       --http ADDR            also open an HTTP ingest server
+      --edge-threads N       epoll event-loop threads for the
+                             HTTP edge (0 = auto: cores/4)   [0]
       --shards N             aggregation shards (0 = auto)   [0]
       --workers N            executor pool threads (0 = auto) [0]
       --slo-ms MS            end-to-end latency SLO          [1000]
@@ -68,7 +70,7 @@ fn run(argv: &[String]) -> Result<()> {
         argv,
         &[
             "artifacts", "budget", "gpus", "patients", "seed", "window", "speedup", "duration",
-            "http", "models", "out", "shards", "workers", "slo-ms",
+            "http", "edge-threads", "models", "out", "shards", "workers", "slo-ms",
         ],
     )?;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -145,6 +147,7 @@ fn run(argv: &[String]) -> Result<()> {
                     speedup: args.f64_or("speedup", 10.0)?,
                     duration_s: args.f64_or("duration", 120.0)?,
                     http_addr: args.get("http").map(String::from),
+                    edge_threads: args.usize_or("edge-threads", 0)?,
                     seed: args.u64_or("seed", 42)?,
                     shards: args.usize_or("shards", 0)?,
                     workers: args.usize_or("workers", 0)?,

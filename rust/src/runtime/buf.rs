@@ -5,11 +5,12 @@
 //! them with cache-line-aligned storage (one [`Lane`] = 16 f32 = 64 B)
 //! keeps every slot write inside whole cache lines and lets the
 //! chunked [`AlignedBatch::pack_slot`] copy loop autovectorize to
-//! full-width vector moves: the compiler sees fixed 64-float chunks
-//! via `chunks_exact`, so the inner loop lowers to straight-line SIMD
-//! loads/stores with a single scalar remainder tail (verified by
-//! `cargo bench --bench serving`, `pack/*` group, against a fresh
-//! `vec![0.0; n]` + `copy_from_slice` per flush).
+//! full-width vector moves: the compiler sees fixed 128-float
+//! (8-lane) chunks via `chunks_exact`, so the inner loop lowers to
+//! straight-line SIMD loads/stores with a single scalar remainder
+//! tail (verified by `cargo bench --bench serving`, `pack/*` group,
+//! against a fresh `vec![0.0; n]` + `copy_from_slice` per flush, and
+//! against an in-bench 4-lane replica of the previous chunking).
 //!
 //! The arena round-trips through the engine by value (moved into the
 //! job, recycled back with the reply) so the batcher flush path never
@@ -85,9 +86,10 @@ impl AlignedBatch {
     }
 
     /// Copy one query window into batch slot `slot` with a chunked
-    /// copy: fixed 64-float (4-lane) chunks keep the loop
-    /// straight-line vectorizable, the remainder is a single short
-    /// tail copy.
+    /// copy: fixed 128-float (8-lane) chunks keep the loop
+    /// straight-line vectorizable — wide enough to fill 512-bit
+    /// vector units for several iterations per chunk — the remainder
+    /// is a single short tail copy.
     ///
     /// Panics (debug) if the slot does not fit — the batcher sizes the
     /// arena as `batch * clip_len` before packing.
@@ -95,7 +97,7 @@ impl AlignedBatch {
         debug_assert_eq!(src.len(), clip_len, "window length must equal clip_len");
         let start = slot * clip_len;
         let dst = &mut self.as_mut_slice()[start..start + src.len()];
-        const CHUNK: usize = 4 * FLOATS_PER_LANE;
+        const CHUNK: usize = 8 * FLOATS_PER_LANE;
         let mut src_chunks = src.chunks_exact(CHUNK);
         let mut dst_chunks = dst.chunks_exact_mut(CHUNK);
         for (d, s) in dst_chunks.by_ref().zip(src_chunks.by_ref()) {

@@ -7,7 +7,11 @@
 //! hardware, not the ensemble:
 //!
 //! ```text
-//!  bedside streams ──► HTTP server / in-process ingest
+//!  bedside streams ──► HTTP ingest edge / in-process ingest
+//!        │     (epoll event loops, --edge-threads of them: keep-alive
+//!        │      connections decode wire frames IN PLACE from their
+//!        │      receive buffers — no body buffer, no per-frame alloc —
+//!        │      see crate::http; gauges: conns_active/accepted/refused)
 //!        │ 250 Hz ECG, 1 Hz vitals   (ShardSender: patient % N)
 //!        ▼
 //!  [stateful]  N aggregation shards, each owning its patients'
@@ -85,4 +89,4 @@ pub use pipeline::{
     ScoreOutcome,
 };
 pub use shards::{default_shards, ShardConfig, ShardRouter, ShardSender};
-pub use telemetry::{ExecutorGauges, LatencyHistogram, Telemetry};
+pub use telemetry::{EdgeGauges, ExecutorGauges, LatencyHistogram, Telemetry};

@@ -248,6 +248,33 @@ impl ExecutorGauges {
     }
 }
 
+/// Live gauges of the event-driven ingest edge, shared with its event
+/// loops (the counters themselves, not copies): per-loop ready-event
+/// totals make loop imbalance visible the same way per-worker batch
+/// counts expose executor imbalance. Installed into [`Telemetry`] by
+/// the epoll edge at spawn.
+#[derive(Debug)]
+pub struct EdgeGauges {
+    /// epoll_wait readiness events handled per event loop.
+    ready_events: Arc<[AtomicU64]>,
+}
+
+impl EdgeGauges {
+    pub fn new(ready_events: Arc<[AtomicU64]>) -> Self {
+        EdgeGauges { ready_events }
+    }
+
+    /// Number of event-loop threads.
+    pub fn loops(&self) -> usize {
+        self.ready_events.len()
+    }
+
+    /// Readiness events handled so far, per loop.
+    pub fn ready_events(&self) -> Vec<u64> {
+        self.ready_events.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+}
+
 /// Pipeline-wide telemetry.
 #[derive(Debug, Default)]
 pub struct Telemetry {
@@ -269,9 +296,24 @@ pub struct Telemetry {
     pub frames_dropped: AtomicU64,
     /// Queries evicted because a member could not score them.
     pub failures: AtomicU64,
+    /// Live HTTP connections on the ingest edge. Doubles as the
+    /// connection gate: both edges increment at accept and refuse with
+    /// `503` past [`HttpConfig::max_connections`]
+    /// (crate::http::HttpConfig), so the gate and the gauge can never
+    /// disagree.
+    pub conns_active: AtomicUsize,
+    /// Connections accepted by the ingest edge, lifetime total.
+    pub conns_accepted: AtomicU64,
+    /// Connections refused with `503` at the gate, lifetime total.
+    pub conns_refused: AtomicU64,
+    /// Connections reaped by the idle/read deadline (slow-loris sweep).
+    pub conns_reaped: AtomicU64,
     /// Executor gauges, installed once by `Pipeline::spawn` (absent for
     /// telemetry created outside a pipeline — benches, shard tests).
     executor: OnceLock<ExecutorGauges>,
+    /// Ingest-edge gauges, installed once by the epoll edge (absent on
+    /// the thread-per-conn fallback and for non-HTTP ingestion).
+    edge: OnceLock<EdgeGauges>,
 }
 
 impl Telemetry {
@@ -283,6 +325,16 @@ impl Telemetry {
 
     pub fn executor(&self) -> Option<&ExecutorGauges> {
         self.executor.get()
+    }
+
+    /// Attach the ingest edge's live gauges (once; later installs are
+    /// ignored, matching a server's one-edge lifetime).
+    pub fn install_edge(&self, gauges: EdgeGauges) {
+        let _ = self.edge.set(gauges);
+    }
+
+    pub fn edge(&self) -> Option<&EdgeGauges> {
+        self.edge.get()
     }
 
     pub fn snapshot(&self) -> TelemetrySnapshot {
@@ -300,6 +352,11 @@ impl Telemetry {
             queue_depth_per_model: queue_depths,
             batches_per_worker: worker_batches,
             fill_wait_ns_per_model: fill_waits,
+            conns_active: self.conns_active.load(Ordering::Relaxed) as u64,
+            conns_accepted: self.conns_accepted.load(Ordering::Relaxed),
+            conns_refused: self.conns_refused.load(Ordering::Relaxed),
+            conns_reaped: self.conns_reaped.load(Ordering::Relaxed),
+            edge_ready_events: self.edge.get().map(|g| g.ready_events()).unwrap_or_default(),
             queries: self.queries.load(Ordering::Relaxed),
             model_jobs: self.model_jobs.load(Ordering::Relaxed),
             frames: self.frames.load(Ordering::Relaxed),
@@ -330,6 +387,15 @@ pub struct TelemetrySnapshot {
     /// Last armed batch fill wait per lane, ns (static timeout, or the
     /// adapted deadline under `--adaptive-batch`).
     pub fill_wait_ns_per_model: Vec<u64>,
+    /// Live HTTP connections on the ingest edge.
+    pub conns_active: u64,
+    /// Connections accepted / refused (503) / idle-reaped, lifetime.
+    pub conns_accepted: u64,
+    pub conns_refused: u64,
+    pub conns_reaped: u64,
+    /// Readiness events handled per event loop (empty on the
+    /// thread-per-conn fallback edge).
+    pub edge_ready_events: Vec<u64>,
     pub queries: u64,
     pub model_jobs: u64,
     pub frames: u64,
@@ -355,6 +421,11 @@ impl TelemetrySnapshot {
             ("queue_depth_per_model", nums(&self.queue_depth_per_model)),
             ("batches_per_worker", nums(&self.batches_per_worker)),
             ("fill_wait_ns_per_model", nums(&self.fill_wait_ns_per_model)),
+            ("conns_active", Value::Num(self.conns_active as f64)),
+            ("conns_accepted", Value::Num(self.conns_accepted as f64)),
+            ("conns_refused", Value::Num(self.conns_refused as f64)),
+            ("conns_reaped", Value::Num(self.conns_reaped as f64)),
+            ("edge_ready_events", nums(&self.edge_ready_events)),
             ("queries", Value::Num(self.queries as f64)),
             ("model_jobs", Value::Num(self.model_jobs as f64)),
             ("frames", Value::Num(self.frames as f64)),
@@ -493,6 +564,32 @@ mod tests {
         assert!(s.contains("queue_depth_per_model"));
         assert!(s.contains("batches_per_worker"));
         assert!(s.contains("fill_wait_ns_per_model"));
+        assert!(s.contains("conns_active"));
+        assert!(s.contains("conns_accepted"));
+        assert!(s.contains("edge_ready_events"));
+    }
+
+    #[test]
+    fn edge_gauges_surface_in_snapshot() {
+        let t = Telemetry::default();
+        assert!(t.edge().is_none());
+        assert!(t.snapshot().edge_ready_events.is_empty());
+        let ready: Arc<[AtomicU64]> = (0..2).map(|_| AtomicU64::new(0)).collect();
+        t.install_edge(EdgeGauges::new(Arc::clone(&ready)));
+        t.conns_active.store(3, Ordering::Relaxed);
+        t.conns_accepted.store(11, Ordering::Relaxed);
+        t.conns_refused.store(2, Ordering::Relaxed);
+        t.conns_reaped.store(1, Ordering::Relaxed);
+        ready[1].store(42, Ordering::Relaxed);
+        let snap = t.snapshot();
+        assert_eq!(snap.conns_active, 3);
+        assert_eq!(snap.conns_accepted, 11);
+        assert_eq!(snap.conns_refused, 2);
+        assert_eq!(snap.conns_reaped, 1);
+        assert_eq!(snap.edge_ready_events, vec![0, 42]);
+        // the gauges are live views, not copies
+        ready[0].store(7, Ordering::Relaxed);
+        assert_eq!(t.snapshot().edge_ready_events, vec![7, 42]);
     }
 
     #[test]

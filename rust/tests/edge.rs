@@ -1,0 +1,532 @@
+//! Ingest-edge invariants across the two HTTP edges and the protocol
+//! core they share:
+//!
+//! * **Fragmentation invariance** — a seeded pipelined request stream
+//!   (binary ingest, JSON ingest, health checks) produces byte-identical
+//!   responses and an identical admitted-frame sequence whether it
+//!   arrives in one buffer, one byte at a time, or in seeded random
+//!   chunks — through the bare [`HttpConn`] state machine and over real
+//!   TCP through both edges.
+//! * **Zero allocation on the binary hot path** — a warmed connection
+//!   streaming `/ingest.bin` frames performs no heap allocation at all,
+//!   asserted with a counting global allocator (per-thread counter, so
+//!   parallel tests don't pollute the measurement).
+//! * **Slow-loris reaping** — a stalled half-request is reaped after
+//!   `read_timeout` on both edges, counts in `conns_reaped`, and frees
+//!   its connection slot.
+//! * **Bit-identical predictions** — the same frame trace produces
+//!   bit-for-bit identical ensemble predictions whether it enters
+//!   through the event-driven edge, the thread-per-connection fallback,
+//!   or the shard sender directly, all matching the analytic reference.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use holmes::http::conn::HttpConn;
+use holmes::http::{serve_legacy_with, serve_with, HttpConfig, HttpServer, IngestClient};
+use holmes::ingest::{Frame, Modality};
+use holmes::rng::Rng;
+use holmes::runtime::backend::sim_score;
+use holmes::runtime::{Engine, SimBackend};
+use holmes::serving::pipeline::{Pipeline, PipelineConfig, Query};
+use holmes::serving::shards::{ShardConfig, ShardRouter};
+use holmes::serving::{ShardSender, Telemetry};
+use holmes::zoo::{testkit, Selector, Zoo};
+
+// ---------------------------------------------------------------- alloc
+
+/// Counting allocator: per-thread allocation counter over [`System`].
+/// Thread-local (const-init `Cell`, no destructor, so the TLS access
+/// itself never allocates) — other tests running in parallel threads
+/// cannot disturb a measurement on this thread.
+struct CountingAlloc;
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+// ------------------------------------------------------ request stream
+
+/// Both edge constructors share this shape — the tests below run every
+/// assertion against each edge.
+type ServeFn = fn(&str, ShardSender, Arc<Telemetry>, HttpConfig) -> holmes::Result<HttpServer>;
+
+fn single_sink() -> (ShardSender, mpsc::Receiver<Frame>) {
+    let (tx, rx) = mpsc::sync_channel(8192);
+    (ShardSender::from_senders(vec![tx]), rx)
+}
+
+fn rand_frame(rng: &mut Rng, seq: usize) -> Frame {
+    let values: Vec<f32> = (0..3).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    Frame {
+        patient: rng.range(0, 64),
+        modality: Modality::Ecg,
+        sim_time: seq as f64 * 0.004,
+        values: holmes::ingest::FrameValues::from_slice(&values).unwrap(),
+    }
+}
+
+fn post(target: &str, body: &[u8]) -> Vec<u8> {
+    let mut req = format!(
+        "POST {target} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    )
+    .into_bytes();
+    req.extend_from_slice(body);
+    req
+}
+
+/// A seeded pipelined request stream mixing multi-frame binary bodies,
+/// JSON ingest, and health checks; returns the raw bytes and the
+/// admitted-frame reference sequence.
+fn gen_stream(rng: &mut Rng, requests: usize) -> (Vec<u8>, Vec<Frame>) {
+    let mut stream = Vec::new();
+    let mut frames = Vec::new();
+    for _ in 0..requests {
+        match rng.range(0, 4) {
+            0 | 1 => {
+                let mut body = Vec::new();
+                for _ in 0..rng.range(1, 6) {
+                    let f = rand_frame(rng, frames.len());
+                    f.write_bytes(&mut body);
+                    frames.push(f);
+                }
+                stream.extend_from_slice(&post("/ingest.bin", &body));
+            }
+            2 => {
+                let f = rand_frame(rng, frames.len());
+                let body = f.to_json().to_string();
+                frames.push(f);
+                stream.extend_from_slice(&post("/ingest", body.as_bytes()));
+            }
+            _ => stream.extend_from_slice(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n"),
+        }
+    }
+    (stream, frames)
+}
+
+/// Seeded chunk sizes covering `total` bytes (each 1..=max).
+fn gen_chunks(rng: &mut Rng, total: usize, max: usize) -> Vec<usize> {
+    let mut sizes = Vec::new();
+    let mut left = total;
+    while left > 0 {
+        let n = rng.range(1, max + 1).min(left);
+        sizes.push(n);
+        left -= n;
+    }
+    sizes
+}
+
+/// Drive `stream` through a fresh [`HttpConn`] in the given chunk
+/// sizes; returns (response bytes, admitted frames).
+fn drive_state_machine(stream: &[u8], chunks: &[usize]) -> (Vec<u8>, Vec<Frame>) {
+    let (sink, rx) = single_sink();
+    let tel = Telemetry::default();
+    let mut conn = HttpConn::new();
+    let mut out = Vec::new();
+    let mut offset = 0usize;
+    for &n in chunks {
+        conn.recv_mut().extend(&stream[offset..offset + n]);
+        offset += n;
+        while conn.advance(&sink, &tel) {}
+        let (a, b) = conn.out_mut().segments();
+        out.extend_from_slice(a);
+        out.extend_from_slice(b);
+        let drained = a.len() + b.len();
+        conn.out_mut().consume(drained);
+    }
+    assert_eq!(offset, stream.len(), "chunks must cover the stream");
+    (out, rx.try_iter().collect())
+}
+
+#[test]
+fn state_machine_is_fragmentation_invariant() {
+    let mut rng = Rng::seed_from_u64(0x1025);
+    let (stream, want_frames) = gen_stream(&mut rng, 12);
+
+    // one-shot decode reference: the whole stream in a single buffer
+    let (ref_out, ref_frames) = drive_state_machine(&stream, &[stream.len()]);
+    assert_eq!(ref_frames, want_frames, "reference must admit every generated frame in order");
+    assert!(!ref_out.is_empty());
+
+    // worst case: split at every byte boundary
+    let (out, frames) = drive_state_machine(&stream, &vec![1; stream.len()]);
+    assert_eq!(frames, ref_frames, "byte-at-a-time must admit the same frames");
+    assert_eq!(out, ref_out, "byte-at-a-time must produce identical responses");
+
+    // seeded random fragmentation, coalescing across request boundaries
+    for round in 0..8u64 {
+        let mut crng = rng.fork(round);
+        let chunks = gen_chunks(&mut crng, stream.len(), 96);
+        let (out, frames) = drive_state_machine(&stream, &chunks);
+        assert_eq!(frames, ref_frames, "round {round}: admitted frames diverged");
+        assert_eq!(out, ref_out, "round {round}: response bytes diverged");
+    }
+}
+
+/// Write `stream` to the server in the given chunks and read every
+/// response until the server closes (the stream's final request asks
+/// for `Connection: close`).
+fn tcp_exchange(server: &HttpServer, stream: &[u8], chunks: &[usize]) -> Vec<u8> {
+    let mut s = TcpStream::connect(server.addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut offset = 0usize;
+    for (i, &n) in chunks.iter().enumerate() {
+        s.write_all(&stream[offset..offset + n]).unwrap();
+        offset += n;
+        // yield occasionally so the peer really observes fragmentation
+        if i % 64 == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    assert_eq!(offset, stream.len());
+    let mut out = Vec::new();
+    s.read_to_end(&mut out).unwrap();
+    out
+}
+
+#[test]
+fn both_edges_are_fragmentation_invariant_over_tcp() {
+    let mut rng = Rng::seed_from_u64(0x1026);
+    let (mut stream, want_frames) = gen_stream(&mut rng, 10);
+    // terminate with an explicit close so read_to_end sees EOF
+    stream.extend_from_slice(b"GET /healthz HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n");
+
+    // what the protocol core says the wire exchange must look like
+    let (ref_out, ref_frames) = drive_state_machine(&stream, &[stream.len()]);
+    assert_eq!(ref_frames, want_frames);
+
+    let spawn: [(&str, ServeFn); 2] =
+        [("event-driven", serve_with), ("thread-per-conn", serve_legacy_with)];
+    for (name, serve) in spawn {
+        let (sink, rx) = single_sink();
+        let tel = Arc::new(Telemetry::default());
+        let server =
+            serve("127.0.0.1:0", sink, Arc::clone(&tel), HttpConfig::default()).unwrap();
+
+        // one write: the coalesced extreme (all requests in one segment)
+        let out = tcp_exchange(&server, &stream, &[stream.len()]);
+        assert_eq!(out, ref_out, "{name}: coalesced responses diverged from the protocol core");
+        let got: Vec<Frame> = ref_frames.iter().map(|_| rx.recv().unwrap()).collect();
+        assert_eq!(got, ref_frames, "{name}: coalesced admitted frames diverged");
+
+        // seeded small chunks: the fragmented extreme
+        let chunks = gen_chunks(&mut rng.fork(99), stream.len(), 7);
+        let out = tcp_exchange(&server, &stream, &chunks);
+        assert_eq!(out, ref_out, "{name}: fragmented responses diverged from the protocol core");
+        let got: Vec<Frame> = ref_frames.iter().map(|_| rx.recv().unwrap()).collect();
+        assert_eq!(got, ref_frames, "{name}: fragmented admitted frames diverged");
+
+        assert!(rx.try_recv().is_err(), "{name}: nothing extra may be admitted");
+        assert_eq!(
+            tel.frames_dropped.load(Ordering::Relaxed),
+            0,
+            "{name}: valid traffic must not drop frames"
+        );
+        drop(server);
+    }
+}
+
+// ------------------------------------------------------ zero-alloc hot path
+
+#[test]
+fn binary_ingest_hot_path_allocates_nothing() {
+    let (sink, rx) = single_sink();
+    let tel = Telemetry::default();
+    let mut conn = HttpConn::new();
+
+    // build every request up front (16 frames per body, 64 requests)
+    let frame = Frame {
+        patient: 7,
+        modality: Modality::Ecg,
+        sim_time: 1.5,
+        values: [0.21, -0.08, 0.12].into(),
+    };
+    let mut body = Vec::new();
+    for _ in 0..16 {
+        frame.write_bytes(&mut body);
+    }
+    let request = post("/ingest.bin", &body);
+
+    // one full round through the state machine warms every buffer to
+    // its steady-state capacity (RecvBuf, OutRing, the shard channel)
+    let run_request = |conn: &mut HttpConn| {
+        for chunk in request.chunks(97) {
+            conn.recv_mut().extend(chunk);
+            while conn.advance(&sink, &tel) {}
+        }
+        let (a, b) = conn.out_mut().segments();
+        assert!(a.starts_with(b"HTTP/1.1 200"));
+        let drained = a.len() + b.len();
+        conn.out_mut().consume(drained);
+        let mut admitted = 0usize;
+        while rx.try_recv().is_ok() {
+            admitted += 1;
+        }
+        assert_eq!(admitted, 16);
+    };
+    run_request(&mut conn);
+
+    // measured: 64 keep-alive requests, 1024 frames — zero allocations
+    let before = thread_allocs();
+    for _ in 0..64 {
+        run_request(&mut conn);
+    }
+    let delta = thread_allocs() - before;
+    assert_eq!(
+        delta, 0,
+        "binary ingest hot path allocated {delta} times over 64 warmed requests \
+         (1024 frames) — the /ingest.bin path must be allocation-free"
+    );
+}
+
+// ------------------------------------------------------------ slow loris
+
+#[test]
+fn stalled_half_request_is_reaped_and_slot_freed_on_both_edges() {
+    let spawn: [(&str, ServeFn); 2] =
+        [("event-driven", serve_with), ("thread-per-conn", serve_legacy_with)];
+    for (name, serve) in spawn {
+        let (sink, _rx) = single_sink();
+        let tel = Arc::new(Telemetry::default());
+        let cfg = HttpConfig {
+            max_connections: 1,
+            read_timeout: Duration::from_millis(200),
+            ..HttpConfig::default()
+        };
+        let server = serve("127.0.0.1:0", sink, Arc::clone(&tel), cfg).unwrap();
+
+        // a slow-loris client: half a request head, then silence —
+        // with max_connections = 1 it occupies the whole budget
+        let mut loris = TcpStream::connect(server.addr).unwrap();
+        loris.write_all(b"POST /ingest.bin HTTP/1.1\r\nContent-Le").unwrap();
+        loris.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+        // the server reaps it after read_timeout: our end sees EOF (or
+        // a reset) instead of a response
+        let mut buf = [0u8; 64];
+        let n = loris.read(&mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "{name}: reaped connection must close without a response");
+
+        // the reap is counted and the slot is free again
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while tel.conns_reaped.load(Ordering::Relaxed) == 0 {
+            assert!(Instant::now() < deadline, "{name}: reap was never counted");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        loop {
+            let mut s = TcpStream::connect(server.addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+            s.write_all(b"GET /healthz HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n")
+                .unwrap();
+            let mut resp = Vec::new();
+            let _ = s.read_to_end(&mut resp);
+            if resp.starts_with(b"HTTP/1.1 200") {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "{name}: reaped slot never freed: {}",
+                String::from_utf8_lossy(&resp)
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        drop(server);
+    }
+}
+
+// ------------------------------------------- bit-identical predictions
+
+const CLIP: usize = 400;
+const PATIENTS: usize = 4;
+const WINDOWS: usize = 2;
+const MEMBERS: [usize; 3] = [0, 1, 2]; // one per lead, model-index order
+
+fn toy() -> Zoo {
+    testkit::toy_zoo_with(9, 64, 5, CLIP, &[1, 8])
+}
+
+/// Deterministic, pairwise-distinct ECG sample for (patient, lead, i).
+fn lead_sample(patient: usize, lead: usize, i: usize) -> f32 {
+    ((patient * 31 + lead * 7 + i) as f32 * 0.01).sin()
+}
+
+/// Per-patient frame trace (order within a patient is what matters).
+fn patient_trace(patient: usize) -> Vec<Frame> {
+    (0..CLIP * WINDOWS)
+        .map(|i| Frame {
+            patient,
+            modality: Modality::Ecg,
+            sim_time: i as f64 / 250.0,
+            values: [
+                lead_sample(patient, 0, i),
+                lead_sample(patient, 1, i),
+                lead_sample(patient, 2, i),
+            ]
+            .into(),
+        })
+        .collect()
+}
+
+enum Ingress {
+    Direct,
+    EventDriven,
+    ThreadPerConn,
+}
+
+/// Drive the trace into a 2-shard aggregation plane + pipeline through
+/// the chosen ingress; returns (patient, window_id) → score bits.
+fn run_ingress(ingress: Ingress) -> HashMap<(usize, u64), u64> {
+    let zoo = toy();
+    let engine = Engine::with_backend(&zoo, 2, Arc::new(SimBackend::instant(&zoo))).unwrap();
+    let ensemble = Selector::from_indices(zoo.n(), MEMBERS);
+    let pipeline = Pipeline::spawn(&zoo, &engine, PipelineConfig::new(ensemble)).unwrap();
+    let telemetry = Arc::clone(pipeline.telemetry());
+
+    let (pred_tx, pred_rx) = mpsc::channel::<(usize, u64, u64)>();
+    let (router, tx) = ShardRouter::spawn(
+        ShardConfig { shards: 2, ..ShardConfig::default() },
+        CLIP,
+        Arc::clone(&telemetry),
+        |_shard| {
+            let pipeline = pipeline.clone();
+            let pred_tx = pred_tx.clone();
+            move |window| {
+                let q = Query::from_window(window);
+                let (patient, window_id) = (q.patient, q.window_id);
+                let rx = pipeline.submit(q).expect("pipeline alive");
+                let pred_tx = pred_tx.clone();
+                std::thread::spawn(move || {
+                    let p = rx.recv().expect("every window predicts");
+                    let _ = pred_tx.send((patient, window_id, p.score.to_bits()));
+                });
+            }
+        },
+    )
+    .unwrap();
+    drop(pred_tx);
+
+    let server = match ingress {
+        Ingress::Direct => None,
+        Ingress::EventDriven => Some(
+            serve_with("127.0.0.1:0", tx.clone(), Arc::clone(&telemetry), HttpConfig::default())
+                .unwrap(),
+        ),
+        Ingress::ThreadPerConn => Some(
+            serve_legacy_with(
+                "127.0.0.1:0",
+                tx.clone(),
+                Arc::clone(&telemetry),
+                HttpConfig::default(),
+            )
+            .unwrap(),
+        ),
+    };
+    match &server {
+        None => {
+            for p in 0..PATIENTS {
+                for f in patient_trace(p) {
+                    tx.send(f).unwrap();
+                }
+            }
+        }
+        Some(server) => {
+            // one keep-alive connection per bedside monitor, batched
+            // binary bodies — the production ingest shape
+            for p in 0..PATIENTS {
+                let mut client = IngestClient::connect(server.addr).unwrap();
+                for batch in patient_trace(p).chunks(100) {
+                    client.send_frames(batch).unwrap();
+                }
+            }
+        }
+    }
+
+    let mut out = HashMap::new();
+    for _ in 0..PATIENTS * WINDOWS {
+        let (patient, window_id, bits) = pred_rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("every (patient, window) must predict");
+        let prev = out.insert((patient, window_id), bits);
+        assert!(prev.is_none(), "duplicate prediction for patient {patient} window {window_id}");
+    }
+    drop(server);
+    drop(tx);
+    let dropped = router.join().unwrap();
+    assert_eq!(dropped.iter().sum::<u64>(), 0, "clean trace must drop nothing");
+    out
+}
+
+/// Pre-refactor completion rule, computed analytically per window.
+fn reference() -> HashMap<(usize, u64), u64> {
+    let zoo = toy();
+    let mut out = HashMap::new();
+    for p in 0..PATIENTS {
+        for w in 0..WINDOWS {
+            let leads: Vec<Vec<f32>> = (0..3)
+                .map(|l| (w * CLIP..(w + 1) * CLIP).map(|i| lead_sample(p, l, i)).collect())
+                .collect();
+            let sum: f64 = MEMBERS
+                .iter()
+                .map(|&m| sim_score(m, &leads[zoo.model(m).lead]) as f64)
+                .sum();
+            out.insert((p, w as u64), (sum / MEMBERS.len() as f64).to_bits());
+        }
+    }
+    out
+}
+
+#[test]
+fn predictions_are_bit_identical_across_ingress_paths() {
+    let want = reference();
+    for (name, ingress) in [
+        ("direct", Ingress::Direct),
+        ("event-driven edge", Ingress::EventDriven),
+        ("thread-per-conn edge", Ingress::ThreadPerConn),
+    ] {
+        let got = run_ingress(ingress);
+        assert_eq!(got.len(), PATIENTS * WINDOWS, "{name}: prediction count");
+        for (&(p, w), &bits) in &want {
+            let g = got
+                .get(&(p, w))
+                .unwrap_or_else(|| panic!("{name}: missing prediction for patient {p} window {w}"));
+            assert_eq!(
+                *g,
+                bits,
+                "{name}: patient {p} window {w}: {} != reference {}",
+                f64::from_bits(*g),
+                f64::from_bits(bits)
+            );
+        }
+    }
+}
