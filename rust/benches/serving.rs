@@ -163,6 +163,10 @@ fn main() {
     // the static policy, burst (tail-batch wait) and trickle shapes
     bench_adaptive_vs_static(&mut b);
 
+    // ---- layer 2e: governed membership — epoch hot swaps stepping a
+    // round down to a two-lane floor mid-stream vs a static full set
+    bench_govern_swap_vs_static(&mut b);
+
     // ---- layer 0b: window arenas — pooled slab buffers vs a fresh
     // Vec + Arc allocation per emitted lead window
     bench_pooled_vs_alloc(&mut b);
@@ -969,6 +973,65 @@ fn bench_adaptive_vs_static(b: &mut Bencher) {
             drop(lanes);
             drop(exec);
         }
+    }
+}
+
+/// Governed-membership bench shape: [`GOV_ROUND`] closed-loop queries
+/// per round through a [`GOV_MODELS`]-lane pipeline. The governed arm
+/// hot-swaps membership twice per round (full universe for the first
+/// half, a two-lane degraded floor for the second — what the governor
+/// does under overload); the static arm serves the whole round on the
+/// full set. The floor half executes 2 model jobs per query instead of
+/// [`GOV_MODELS`], so governed throughput must beat static by more
+/// than the two router-FIFO installs cost — the `govern/swap-vs-static`
+/// ratio CI gates at ≥ 1.0×.
+const GOV_MODELS: usize = 5;
+const GOV_CLIP: usize = 256;
+const GOV_ROUND: usize = 64;
+
+fn gov_leads(w: u64) -> [Vec<f32>; 3] {
+    let mut leads: [Vec<f32>; 3] = Default::default();
+    for (l, lead) in leads.iter_mut().enumerate() {
+        *lead = (0..GOV_CLIP)
+            .map(|i| ((w as usize * 17 + l * 5 + i) as f32 * 0.01).sin())
+            .collect();
+    }
+    leads
+}
+
+fn bench_govern_swap_vs_static(b: &mut Bencher) {
+    let zoo = testkit::toy_zoo_with(GOV_MODELS, 16, 11, GOV_CLIP, &[1, 8]);
+    let engine =
+        Engine::with_backend(&zoo, 2, Arc::new(SimBackend::instant(&zoo))).expect("engine");
+    let ensemble = Selector::from_indices(zoo.n(), 0..GOV_MODELS);
+    for (name, swap) in
+        [("govern/swap-vs-static", true), ("legacy_govern/swap-vs-static", false)]
+    {
+        let pipeline =
+            Pipeline::spawn(&zoo, &engine, PipelineConfig::new(ensemble.clone()))
+                .expect("pipeline");
+        let mut w = 0u64;
+        b.bench(name, || {
+            let mut acc = 0.0f64;
+            for half in 0..2usize {
+                if swap {
+                    let members: Vec<usize> =
+                        if half == 0 { (0..GOV_MODELS).collect() } else { vec![0, 1] };
+                    pipeline.install_membership(&members).expect("install");
+                }
+                let mut replies = Vec::with_capacity(GOV_ROUND / 2);
+                for _ in 0..GOV_ROUND / 2 {
+                    w += 1;
+                    replies
+                        .push(pipeline.submit(Query::from_vecs(0, w, 0.0, gov_leads(w))).unwrap());
+                }
+                for r in replies {
+                    acc += r.recv().unwrap().score;
+                }
+            }
+            black_box(acc)
+        });
+        drop(pipeline);
     }
 }
 

@@ -15,20 +15,45 @@
 //! frames as binary `POST /ingest.bin` bodies (one body per simulated
 //! second — 251 wire frames), exercising the full 25k frames/s ingest
 //! edge instead of an in-process channel.
+//!
+//! With `govern` set the run spawns the [`Governor`] control plane
+//! over the pipeline; with `chaos` set it becomes the CI chaos smoke:
+//! the sim backend runs with service times scaled up
+//! ([`CHAOS_TIME_SCALE`]×) so load genuinely saturates the device
+//! permits, a scripted backend fault kills the ensemble's first lane
+//! just before the one-third mark, and a thundering herd of
+//! [`CHAOS_GHOSTS_PER_PATIENT`]× ghost patients streams exactly one
+//! window starting at that mark — driving the tail past the SLO. The
+//! report then carries what the governor did about it (degrade swaps,
+//! canary reinstatements) plus an `unresolved` count proving no
+//! admitted query was dropped on the floor.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::ingest::synth::{PatientSim, SynthConfig};
 use crate::ingest::{Frame, Modality, VirtualClock};
 use crate::metrics::roc_auc;
-use crate::runtime::Engine;
+use crate::profiler::ServiceTimes;
+use crate::runtime::{Engine, SimBackend};
 use crate::serving::pipeline::{Pipeline, PipelineConfig, Query};
 use crate::serving::shards::{ShardConfig, ShardRouter};
-use crate::serving::Telemetry;
+use crate::serving::{Governor, GovernorConfig, Telemetry};
 use crate::zoo::Zoo;
 use crate::Result;
+
+/// Chaos mode: multiplier on the sim backend's calibrated service
+/// times. Large enough that the ghost storm's backlog drains over
+/// ~1.5 s of wall (past a 1 s SLO → the governor must degrade), small
+/// enough to stay clear of the pending arena's 2 s stale-evict
+/// failsafe.
+pub const CHAOS_TIME_SCALE: f64 = 32.0;
+
+/// Chaos mode: ghost admission-storm size, as a multiple of the
+/// configured patient count.
+pub const CHAOS_GHOSTS_PER_PATIENT: usize = 4;
 
 #[derive(Debug, Clone)]
 pub struct BedsideConfig {
@@ -58,6 +83,20 @@ pub struct BedsideConfig {
     /// Replace the static batch fill deadline with the SLO-aware
     /// adaptive controller (`--adaptive-batch`).
     pub adaptive: bool,
+    /// Spawn the ensemble governor control plane over the pipeline
+    /// (`--govern`): live re-composition, degraded-mode floor, backend
+    /// quarantine/recovery.
+    pub govern: bool,
+    /// Governor control-loop period in milliseconds
+    /// (`--control-tick-ms`).
+    pub control_tick_ms: f64,
+    /// Degraded-mode accuracy floor — the minimum ensemble validation
+    /// ROC-AUC the stepped-down member set must clear (`--floor-acc`).
+    pub floor_acc: f64,
+    /// Chaos harness (`--chaos`): scaled-up sim service times, a
+    /// scripted mid-run backend fault, and a ghost admission storm —
+    /// the CI smoke for degrade → quarantine → reinstate.
+    pub chaos: bool,
 }
 
 impl Default for BedsideConfig {
@@ -75,6 +114,10 @@ impl Default for BedsideConfig {
             workers: 0,
             slo_ms: 1000.0,
             adaptive: false,
+            govern: false,
+            control_tick_ms: 100.0,
+            floor_acc: 0.80,
+            chaos: false,
         }
     }
 }
@@ -115,6 +158,25 @@ pub struct BedsideReport {
     pub e2e_p99: f64,
     pub roc_auc: f64,
     pub wall_s: f64,
+    /// Idle patient aggregators evicted (least-recently-updated) to
+    /// admit new patients past the shard cap — admission churn, not
+    /// silent starvation.
+    pub patients_evicted: u64,
+    /// Transient backend errors absorbed by the bounded in-flush retry,
+    /// summed over lanes.
+    pub exec_retries: u64,
+    /// Queries the shard plane successfully admitted into the pipeline.
+    pub submitted: u64,
+    /// Admitted queries never accounted as completed or failed — must
+    /// be 0 on every run; anything else is a dropped in-flight query.
+    pub unresolved: u64,
+    /// Governor state at end of run (all zero on an ungoverned run).
+    pub governor_epoch: u64,
+    pub governor_swaps: u64,
+    pub governor_degraded_entered: u64,
+    pub governor_probes: u64,
+    pub governor_reinstated: u64,
+    pub governor_quarantined: u64,
 }
 
 /// Run the simulation to completion and report latency + accuracy.
@@ -139,12 +201,33 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
         if cfg.adaptive { "ADAPTIVE" } else { "static" },
         cfg.slo_ms
     );
+    if cfg.govern || cfg.chaos {
+        println!(
+            "control plane: governor {} (tick {} ms, floor AUC {}), chaos {}",
+            if cfg.govern { "ON" } else { "off" },
+            cfg.control_tick_ms,
+            cfg.floor_acc,
+            if cfg.chaos { "ON" } else { "off" },
+        );
+    }
     println!(
         "ensemble ({} models): {:?}",
         ensemble.len(),
         ensemble.indices().iter().map(|&i| zoo.model(i).id.clone()).collect::<Vec<_>>()
     );
-    let engine = Engine::new(zoo, cfg.gpus)?;
+    // chaos mode swaps the default backend for a slowed, scriptable
+    // one: service times scaled so load genuinely saturates the device
+    // permits, plus a fault switch on the ensemble's first lane that a
+    // driver thread flips across the storm window
+    let fault_flag = Arc::new(AtomicBool::new(false));
+    let engine = if cfg.chaos {
+        let times = ServiceTimes::from_macs(zoo, 5e-4, 2e10);
+        let backend = SimBackend::with_times(times, CHAOS_TIME_SCALE)
+            .faulty_when(ensemble.indices()[0], Arc::clone(&fault_flag));
+        Engine::with_backend(zoo, cfg.gpus, Arc::new(backend))?
+    } else {
+        Engine::new(zoo, cfg.gpus)?
+    };
     // warm compile outside the measured run
     for &m in ensemble.indices() {
         for &b in engine.batch_sizes() {
@@ -171,10 +254,25 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
     )?;
     let telemetry = Arc::clone(pipeline.telemetry());
 
+    // the governor control plane: rides the running pipeline, stopped
+    // (dropped) only after the data plane has fully drained below
+    let governor = if cfg.govern {
+        let gcfg = GovernorConfig {
+            tick: Duration::from_secs_f64((cfg.control_tick_ms / 1000.0).max(0.001)),
+            floor_acc: cfg.floor_acc,
+            slo,
+            ..GovernorConfig::default()
+        };
+        Some(Governor::spawn(zoo, &pipeline, gcfg)?)
+    } else {
+        None
+    };
+
     // sharded aggregation front-end: each shard owns its patients'
     // aggregators and submits completed windows from its own thread;
     // replies are collected by small detached waiter threads so a shard
     // never blocks on inference
+    let submitted = Arc::new(AtomicU64::new(0));
     let (pred_tx, pred_rx) = mpsc::channel::<(usize, f64)>();
     let (shard_router, frame_tx) = ShardRouter::spawn(
         ShardConfig { shards: n_shards, ..ShardConfig::default() },
@@ -183,10 +281,12 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
         |_shard| {
             let pipeline = pipeline.clone();
             let pred_tx = pred_tx.clone();
+            let submitted = Arc::clone(&submitted);
             move |window| {
                 let q = Query::from_window(window);
                 let patient = q.patient;
                 if let Ok(rx) = pipeline.submit(q) {
+                    submitted.fetch_add(1, Ordering::Relaxed);
                     let pred_tx = pred_tx.clone();
                     std::thread::spawn(move || {
                         if let Ok(p) = rx.recv() {
@@ -270,6 +370,54 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
             }
         }));
     }
+
+    // chaos: a scripted backend fault just ahead of the one-third mark
+    // (so a live window boundary faults the lane and the governor must
+    // quarantine it), then a ghost thundering herd — 4× the bed count,
+    // each streaming exactly one aggregation window starting at that
+    // mark, all emitting their queries at the same instant
+    if cfg.chaos {
+        let storm_start = (cfg.duration_s / 3.0).floor().max(1.0);
+        // one full window (clip_len samples at fs) plus a second of
+        // margin, so every ghost completes exactly one query
+        let storm_span = clip_len as f64 / zoo.manifest.fs as f64 + 1.0;
+        for g in 0..CHAOS_GHOSTS_PER_PATIENT * cfg.patients {
+            let mut sim = PatientSim::new(cfg.patients + g, cfg.seed, synth_cfg.clone());
+            labels.insert(sim.id, sim.state.label);
+            let tx = frame_tx.clone();
+            let clock = VirtualClock::new(cfg.speedup);
+            gen_handles.push(std::thread::spawn(move || {
+                let mut batch: Vec<Frame> = Vec::with_capacity(251);
+                let mut sim_t = storm_start;
+                while sim_t < storm_start + storm_span {
+                    clock.sleep_until_sim(sim_t);
+                    batch.clear();
+                    batch.extend(sim.ecg_frames(sim_t, 250));
+                    let v = sim.next_vitals();
+                    batch.push(Frame {
+                        patient: sim.id,
+                        modality: Modality::Vitals,
+                        sim_time: sim_t,
+                        values: v.into(),
+                    });
+                    if !batch.iter().all(|f| tx.send(*f).is_ok()) {
+                        return;
+                    }
+                    sim_t += 1.0;
+                }
+            }));
+        }
+        let flag = Arc::clone(&fault_flag);
+        let clock = VirtualClock::new(cfg.speedup);
+        let fault_on = (storm_start - 1.5).max(0.0);
+        let fault_off = storm_start + storm_span * 0.5;
+        gen_handles.push(std::thread::spawn(move || {
+            clock.sleep_until_sim(fault_on);
+            flag.store(true, Ordering::Relaxed);
+            clock.sleep_until_sim(fault_off);
+            flag.store(false, Ordering::Relaxed);
+        }));
+    }
     drop(frame_tx);
 
     // prediction sink on this thread
@@ -289,6 +437,22 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
     // the join below) would otherwise never see their channels close
     drop(http);
     let dropped_per_shard = shard_router.join()?;
+    // drain the data plane BEFORE stopping the control plane: a chaos
+    // storm leaves seconds of backlog behind the generators, and the
+    // governor must keep observing (and reacting to) it to the end —
+    // also guarantees every admitted query is accounted below
+    let drain_deadline = Instant::now() + Duration::from_secs(60);
+    while pipeline.pending_len() > 0 && Instant::now() < drain_deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    if governor.is_some() {
+        // a few extra control ticks so the loop records the drained
+        // end state before it is joined
+        std::thread::sleep(Duration::from_secs_f64(
+            (cfg.control_tick_ms / 1000.0).max(0.001) * 4.0,
+        ));
+    }
+    drop(governor);
     drop(pipeline);
     let pred_rows = sink.join().map_err(|_| crate::Error::serving("sink panicked"))?;
     let frames = telemetry.frames.load(std::sync::atomic::Ordering::Relaxed);
@@ -315,6 +479,13 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
     // edge counters survive the server drop: the gauges live in the
     // shared telemetry, not in the event loops
     let ordering = std::sync::atomic::Ordering::Relaxed;
+    let submitted_n = submitted.load(ordering);
+    let resolved = telemetry.queries.load(ordering) + telemetry.failures.load(ordering);
+    let exec_retries = telemetry
+        .executor()
+        .map(|g| g.retries().iter().sum::<u64>())
+        .unwrap_or(0);
+    let gov = telemetry.governor();
     let report = BedsideReport {
         predictions: pred_rows.len(),
         frames,
@@ -332,6 +503,18 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
         e2e_p99: telemetry.e2e.percentile(99.0),
         roc_auc: auc,
         wall_s,
+        patients_evicted: telemetry.patients_evicted.load(ordering),
+        exec_retries,
+        submitted: submitted_n,
+        unresolved: submitted_n.saturating_sub(resolved),
+        governor_epoch: gov.map(|g| g.epoch.load(ordering)).unwrap_or(0),
+        governor_swaps: gov.map(|g| g.swaps.load(ordering)).unwrap_or(0),
+        governor_degraded_entered: gov
+            .map(|g| g.degraded_entered.load(ordering))
+            .unwrap_or(0),
+        governor_probes: gov.map(|g| g.probes.load(ordering)).unwrap_or(0),
+        governor_reinstated: gov.map(|g| g.reinstated.load(ordering)).unwrap_or(0),
+        governor_quarantined: gov.map(|g| g.quarantined.load(ordering) as u64).unwrap_or(0),
     };
     print_report(&report, &telemetry);
     Ok(report)
@@ -341,7 +524,12 @@ fn print_report(r: &BedsideReport, telemetry: &Telemetry) {
     println!("\n── bedside report ──────────────────────────");
     println!("frames ingested      {:>12}", r.frames);
     println!("frames dropped       {:>12}  (per shard: {:?})", r.frames_dropped, r.dropped_per_shard);
+    println!("patients evicted     {:>12}  (idle aggregators past the shard cap)", r.patients_evicted);
     println!("ensemble predictions {:>12}", r.predictions);
+    println!(
+        "queries admitted     {:>12}  (unresolved at exit: {})",
+        r.submitted, r.unresolved
+    );
     println!(
         "executor batches     {:>12}  (per worker: {:?})",
         r.batches_per_worker.iter().sum::<u64>(),
@@ -349,6 +537,22 @@ fn print_report(r: &BedsideReport, telemetry: &Telemetry) {
     );
     if let Some(g) = telemetry.executor() {
         println!("model queue depths   {:>12?}  (end of run)", g.queue_depths());
+        println!(
+            "dead lanes           {:>12?}  (end of run; retries absorbed: {})",
+            g.dead_lanes(),
+            r.exec_retries
+        );
+    }
+    if telemetry.governor().is_some() {
+        println!(
+            "governor             {:>12}  swaps (epoch {}, degraded {}×, probes {}, reinstated {}, quarantined {})",
+            r.governor_swaps,
+            r.governor_epoch,
+            r.governor_degraded_entered,
+            r.governor_probes,
+            r.governor_reinstated,
+            r.governor_quarantined
+        );
     }
     let waits_ms: Vec<f64> = r
         .fill_wait_ns_per_model

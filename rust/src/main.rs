@@ -44,6 +44,13 @@ COMMANDS:
       --slo-ms MS            end-to-end latency SLO          [1000]
       --adaptive-batch       SLO-aware adaptive batch fill deadlines
                              (default: static 1 ms fill window)
+      --govern               spawn the ensemble governor: live SLO-driven
+                             re-composition, degraded-mode floor, backend
+                             quarantine + canary recovery
+      --control-tick-ms MS   governor control-loop period    [100]
+      --floor-acc AUC        degraded-mode accuracy floor    [0.8]
+      --chaos                chaos harness: slowed backend, scripted
+                             mid-run lane fault + ghost admission storm
   profile                  measured latency profile (μ, T_s, T_q) of an ensemble
       --models id1,id2,...   zoo model ids (default: HOLMES servable pick)
       --gpus N --patients N                                  [2, 64]
@@ -71,6 +78,7 @@ fn run(argv: &[String]) -> Result<()> {
         &[
             "artifacts", "budget", "gpus", "patients", "seed", "window", "speedup", "duration",
             "http", "edge-threads", "models", "out", "shards", "workers", "slo-ms",
+            "control-tick-ms", "floor-acc",
         ],
     )?;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -153,6 +161,10 @@ fn run(argv: &[String]) -> Result<()> {
                     workers: args.usize_or("workers", 0)?,
                     slo_ms: args.f64_or("slo-ms", 1000.0)?,
                     adaptive: args.flag("adaptive-batch"),
+                    govern: args.flag("govern") || args.flag("chaos"),
+                    control_tick_ms: args.f64_or("control-tick-ms", 100.0)?,
+                    floor_acc: args.f64_or("floor-acc", 0.8)?,
+                    chaos: args.flag("chaos"),
                 },
             )?;
         }

@@ -78,6 +78,10 @@ pub struct SimBackend {
     /// Fault injection: executing this model index always errors
     /// (exercises the pipeline's fail/evict path in tests).
     fail_model: Option<usize>,
+    /// Scripted fault injection: `(model, flag)` — executing `model`
+    /// errors while `flag` is true (chaos drivers flip it mid-run to
+    /// exercise quarantine → canary → reinstate).
+    fault_switch: Option<(usize, std::sync::Arc<std::sync::atomic::AtomicBool>)>,
 }
 
 impl SimBackend {
@@ -97,12 +101,26 @@ impl SimBackend {
             seconds: std::sync::Arc::new(times.seconds),
             scale: scale.max(0.0),
             fail_model: None,
+            fault_switch: None,
         }
     }
 
     /// Fault injection: every execution of `model_index` fails.
     pub fn failing_model(mut self, model_index: usize) -> Self {
         self.fail_model = Some(model_index);
+        self
+    }
+
+    /// Scripted fault injection: executions of `model_index` fail while
+    /// `flag` is true and succeed again once it clears — the
+    /// chaos-smoke backend fault (`bedside_sim --chaos`), letting a
+    /// driver thread script a mid-run outage and a recovery.
+    pub fn faulty_when(
+        mut self,
+        model_index: usize,
+        flag: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    ) -> Self {
+        self.fault_switch = Some((model_index, flag));
         self
     }
 
@@ -143,6 +161,14 @@ impl ExecWorker for SimWorker {
                 "sim backend: injected failure for model {}",
                 key.0
             )));
+        }
+        if let Some((model, flag)) = &self.backend.fault_switch {
+            if *model == key.0 && flag.load(std::sync::atomic::Ordering::Relaxed) {
+                return Err(crate::Error::serving(format!(
+                    "sim backend: scripted fault active for model {}",
+                    key.0
+                )));
+            }
         }
         let compiled = self.warmed.insert(key);
         let mut scores = Vec::with_capacity(key.1);
@@ -201,6 +227,22 @@ mod tests {
         let input = vec![0.0f32; 10];
         assert!(worker.run((1, 1), &input, 10).is_err());
         assert!(worker.run((0, 1), &input, 10).is_ok());
+    }
+
+    #[test]
+    fn scripted_fault_follows_the_flag() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let zoo = testkit::toy_zoo(4, 16, 1);
+        let flag = std::sync::Arc::new(AtomicBool::new(false));
+        let backend = SimBackend::instant(&zoo).faulty_when(2, std::sync::Arc::clone(&flag));
+        let mut worker = backend.worker(0).unwrap();
+        let input = vec![0.0f32; 10];
+        assert!(worker.run((2, 1), &input, 10).is_ok(), "healthy before the fault");
+        flag.store(true, Ordering::Relaxed);
+        assert!(worker.run((2, 1), &input, 10).is_err(), "faulty while the flag holds");
+        assert!(worker.run((0, 1), &input, 10).is_ok(), "other models unaffected");
+        flag.store(false, Ordering::Relaxed);
+        assert!(worker.run((2, 1), &input, 10).is_ok(), "heals when the flag clears");
     }
 
     #[test]

@@ -26,17 +26,25 @@
 //! each bad item exactly once — the old loop did this with
 //! `Vec::remove` inside a scan, O(n²) on a pathological batch.
 //!
-//! Failure semantics are unchanged from the actor era: when an
-//! execution fails, every item of the batch is failed through
-//! [`Completer::fail`] (evicting the query so blocked `submit()`
-//! callers error out instead of hanging) and the error propagates to
-//! the executor, which marks the model's lane dead and fails its
-//! backlog. Determinism is unaffected by who flushes a batch: member
+//! Failure semantics: a *transient* backend error (an `Err` from
+//! `execute`, not a panic) gets exactly one in-place retry after a
+//! short jittered backoff — ICU monitors hiccup, and killing a lane
+//! (evicting every co-batched query with it) over one blip is worse
+//! than a 1–2 ms stall. The retry is counted per lane (surfaced in
+//! `/stats` as `retries_per_model`). If the retry also fails, every
+//! item of the batch is failed through [`Completer::fail`] (evicting
+//! the query so blocked `submit()` callers error out instead of
+//! hanging) and the error propagates to the executor, which marks the
+//! model's lane dead and fails its backlog; the governor takes it from
+//! there (quarantine → canary → reinstate). Panics never retry — they
+//! unwind past this function to the executor's flush-boundary catch
+//! and fail fast. Determinism is unaffected by who flushes a batch: member
 //! scores live in per-model cells and are summed in model-index order,
 //! so the ensemble score is bit-for-bit identical whichever worker ran
 //! the model.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use super::arena::WindowLease;
@@ -127,18 +135,41 @@ pub(crate) struct FlushOutcome {
     pub resolved: usize,
     /// Whether a device batch actually executed (per-worker gauge).
     pub executed: bool,
+    /// Backend-reported execution nanos amortized per scored item (0
+    /// when nothing executed) — feeds the lane's live service-time EWMA
+    /// the governor recomposes against.
+    pub exec_ns_per_item: u64,
     pub result: Result<()>,
 }
 
 impl FlushOutcome {
-    fn new(resolved: usize, executed: bool, result: Result<()>) -> Self {
-        FlushOutcome { resolved, executed, result }
+    fn new(resolved: usize, executed: bool, exec_ns_per_item: u64, result: Result<()>) -> Self {
+        FlushOutcome { resolved, executed, exec_ns_per_item, result }
     }
+
+    /// Outcome stand-in for a flush that panicked out from under the
+    /// executor's catch boundary.
+    pub fn panicked(resolved: usize, e: crate::Error) -> Self {
+        FlushOutcome::new(resolved, false, 0, Err(e))
+    }
+}
+
+/// Backoff before the single transient-error retry: 0.5–2 ms, jittered
+/// off the clock's sub-microsecond bits so co-failing lanes don't
+/// re-hit the device in lockstep. No RNG dependency.
+fn retry_backoff() -> Duration {
+    let noise = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| u64::from(d.subsec_nanos()))
+        .unwrap_or(0);
+    Duration::from_micros(500 + noise % 1500)
 }
 
 /// Flush one batch from the front of `staged`: weed malformed items
 /// (single pass, each failed exactly once), pack up to `max_take` into
-/// the worker's arena, execute inline, complete each flushed slot.
+/// the worker's arena, execute inline (one bounded retry on a transient
+/// error when `retries` is provided, counted there), complete each
+/// flushed slot.
 pub(crate) fn flush_batch(
     model_index: usize,
     dev: &mut DirectWorker,
@@ -147,6 +178,7 @@ pub(crate) fn flush_batch(
     buf: &mut AlignedBatch,
     done: &Completer,
     max_take: usize,
+    retries: Option<&AtomicU64>,
 ) -> FlushOutcome {
     let mut resolved = 0usize;
     // single-pass, order-preserving weed-out: a bad query must not kill
@@ -161,7 +193,7 @@ pub(crate) fn flush_batch(
         }
     });
     if staged.is_empty() {
-        return FlushOutcome::new(resolved, false, Ok(()));
+        return FlushOutcome::new(resolved, false, 0, Ok(()));
     }
     let take = staged.len().min(max_take);
     let engine = dev.engine();
@@ -171,7 +203,19 @@ pub(crate) fn flush_batch(
         buf.pack_slot(slot, clip_len, &item.input);
     }
     let started = Instant::now();
-    match dev.execute((model_index, batch), buf) {
+    let executed = dev.execute((model_index, batch), buf).or_else(|first| {
+        // one bounded retry for transient errors only — a panic would
+        // have unwound right past this closure (fail-fast preserved)
+        match retries {
+            Some(counter) => {
+                counter.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(retry_backoff());
+                dev.execute((model_index, batch), buf)
+            }
+            None => Err(first),
+        }
+    });
+    match executed {
         Ok(result) => {
             // a backend returning fewer scores than batch slots must
             // fail the batch, not panic the worker: unresolved dequeued
@@ -183,8 +227,10 @@ pub(crate) fn flush_batch(
                     result.scores.len()
                 ));
                 resolved += fail_front(staged, take, done);
-                return FlushOutcome::new(resolved, false, Err(e));
+                return FlushOutcome::new(resolved, false, 0, Err(e));
             }
+            let exec_ns =
+                u64::try_from(result.exec_time.as_nanos()).unwrap_or(u64::MAX) / take as u64;
             for (slot, item) in staged.drain(..take).enumerate() {
                 // direct completion: write this member's score cell; if
                 // that was the last outstanding member, finish() runs
@@ -197,11 +243,11 @@ pub(crate) fn flush_batch(
                 );
                 resolved += 1;
             }
-            FlushOutcome::new(resolved, true, Ok(()))
+            FlushOutcome::new(resolved, true, exec_ns, Ok(()))
         }
         Err(e) => {
             resolved += fail_front(staged, take, done);
-            FlushOutcome::new(resolved, false, Err(e))
+            FlushOutcome::new(resolved, false, 0, Err(e))
         }
     }
 }

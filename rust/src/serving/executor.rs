@@ -40,11 +40,18 @@
 //! identical for any worker count (`tests/executor.rs` proves 1, 2 and
 //! 8 workers against the analytic reference).
 //!
-//! Failure: an execution error fails the flushed batch through
-//! [`Completer::fail`] (evicting those queries), marks the lane dead,
-//! and fails its backlog; subsequent router pushes to the dead lane
-//! error so the router evicts exactly the affected queries — the same
-//! contract the dying batcher thread used to provide.
+//! Failure: a *transient* execution error gets one bounded retry with a
+//! jittered backoff inside [`flush_batch`] (counted per lane in
+//! [`ExecutorGauges`](super::telemetry::ExecutorGauges)); a second
+//! failure fails the flushed batch through [`Completer::fail`] (evicting
+//! those queries), marks the lane dead, and fails its backlog — panics
+//! skip the retry and fail fast. Subsequent router pushes to the dead
+//! lane error so the router evicts exactly the affected queries — the
+//! same contract the dying batcher thread used to provide. Dead is no
+//! longer forever: the governor ([`super::governor`]) quarantines the
+//! lane out of the active membership, re-probes the backend with a
+//! canary batch under exponential backoff, and calls
+//! [`Executor::revive_lane`] once the canary succeeds.
 //!
 //! Shutdown: dropping the last [`LaneSender`] (the router exiting)
 //! closes the executor; workers drain every lane — partial batches
@@ -176,9 +183,6 @@ struct Lane {
     /// Claim flag: the worker that CASes `false → true` owns `staged`
     /// (and the queue's consumer side) until it stores `false` back.
     claimed: AtomicBool,
-    /// Set on execution failure; a dead lane fails everything it is
-    /// handed instead of executing.
-    dead: AtomicBool,
     /// Flush deadline for the batch being filled, in nanos since the
     /// executor epoch; 0 = unset (an unset deadline on a non-empty lane
     /// means "due now" — see the scheduling notes on `lane_due`).
@@ -205,6 +209,18 @@ struct Shared {
     /// Per-lane live depth: items admitted and not yet resolved
     /// (scored/failed). Also the `/stats` queue-depth gauge.
     depths: Arc<[AtomicUsize]>,
+    /// Per-lane dead flags: set on execution failure; a dead lane fails
+    /// everything it is handed instead of executing. Shared out (via
+    /// [`Executor::dead_gauges`]) so the governor can observe lane
+    /// health and [`Executor::revive_lane`] can clear it after a canary
+    /// probe succeeds.
+    dead: Arc<[AtomicBool]>,
+    /// Per-lane transient-error retry counters (`/stats` gauge).
+    retries: Arc<[AtomicU64]>,
+    /// Per-lane EWMA of per-item execution nanos (α = 1/8; 0 = no
+    /// sample yet) — the governor's *live* service-time profile, fed to
+    /// the composer in place of the offline MACs estimate.
+    exec_ewma_ns: Arc<[AtomicU64]>,
     /// Per-worker executed-batch counters (imbalance gauge).
     batches: Arc<[AtomicU64]>,
     engine: Engine,
@@ -282,7 +298,7 @@ impl Shared {
             return false;
         }
         let lane = &self.lanes[i];
-        if lane.dead.load(Ordering::Relaxed) || closed || self.never_waits {
+        if self.dead[i].load(Ordering::Relaxed) || closed || self.never_waits {
             return true;
         }
         if self.depths[i].load(Ordering::Acquire) >= self.max_take {
@@ -340,7 +356,7 @@ impl Shared {
                 // re-checks after release so nothing starves
                 return did;
             }
-            if lane.dead.load(Ordering::Relaxed) {
+            if self.dead[i].load(Ordering::Relaxed) {
                 // fails staged + re-drains until empty, so racing
                 // pushes fail promptly too
                 if self.fail_backlog(i) > 0 {
@@ -381,22 +397,31 @@ impl Shared {
                     buf,
                     &lane.done,
                     self.max_take,
+                    Some(&self.retries[i]),
                 )
             }));
-            let out = caught.unwrap_or_else(|_| FlushOutcome {
-                resolved: staged_before.saturating_sub(staged.len()),
-                executed: false,
-                result: Err(Error::serving(format!(
-                    "model {} execution panicked",
-                    lane.model_index
-                ))),
-            });
+            let out = caught.unwrap_or_else(|_| FlushOutcome::panicked(
+                staged_before.saturating_sub(staged.len()),
+                Error::serving(format!("model {} execution panicked", lane.model_index)),
+            ));
             if out.resolved > 0 {
                 self.depths[i].fetch_sub(out.resolved, Ordering::AcqRel);
                 did = true;
             }
             if out.executed {
                 self.batches[wid].fetch_add(1, Ordering::Relaxed);
+                if out.exec_ns_per_item > 0 {
+                    // α = 1/8 integer EWMA; only the claim holder writes,
+                    // so a plain load/store pair is race-free
+                    let cell = &self.exec_ewma_ns[i];
+                    let old = cell.load(Ordering::Relaxed);
+                    let next = if old == 0 {
+                        out.exec_ns_per_item
+                    } else {
+                        old - old / 8 + out.exec_ns_per_item / 8
+                    };
+                    cell.store(next.max(1), Ordering::Relaxed);
+                }
             }
             match out.result {
                 Ok(()) => {
@@ -417,7 +442,7 @@ impl Shared {
                     }
                 }
                 Err(e) => {
-                    if !lane.dead.swap(true, Ordering::SeqCst) {
+                    if !self.dead[i].swap(true, Ordering::SeqCst) {
                         eprintln!("model lane {} (worker {wid}) failed: {e}", lane.model_index);
                     }
                     // loop continues: the dead branch fails the backlog
@@ -451,7 +476,7 @@ impl LaneSender {
     pub fn push(&self, pos: usize, item: BatchItem) -> Result<()> {
         let shared = &self.shared;
         let lane = &shared.lanes[pos];
-        if lane.dead.load(Ordering::Acquire) {
+        if shared.dead[pos].load(Ordering::Acquire) {
             return Err(Error::serving(format!("model lane {} is dead", lane.model_index)));
         }
         let depth = &shared.depths[pos];
@@ -539,18 +564,23 @@ impl Executor {
                 model_index,
                 queue: InjectQueue::new(),
                 claimed: AtomicBool::new(false),
-                dead: AtomicBool::new(false),
                 deadline_ns: AtomicU64::new(0),
                 staged: UnsafeCell::new(VecDeque::new()),
                 done,
             })
             .collect();
         let depths: Arc<[AtomicUsize]> = (0..lanes.len()).map(|_| AtomicUsize::new(0)).collect();
+        let dead: Arc<[AtomicBool]> = (0..lanes.len()).map(|_| AtomicBool::new(false)).collect();
+        let retries: Arc<[AtomicU64]> = (0..lanes.len()).map(|_| AtomicU64::new(0)).collect();
+        let exec_ewma_ns: Arc<[AtomicU64]> = (0..lanes.len()).map(|_| AtomicU64::new(0)).collect();
         let batches: Arc<[AtomicU64]> = (0..n_workers).map(|_| AtomicU64::new(0)).collect();
         let never_waits = policy.never_waits();
         let shared = Arc::new(Shared {
             lanes,
             depths,
+            dead,
+            retries,
+            exec_ewma_ns,
             batches,
             engine: engine.clone(),
             ctrl,
@@ -615,6 +645,75 @@ impl Executor {
     pub fn controller(&self) -> &Arc<DeadlineController> {
         &self.shared.ctrl
     }
+
+    /// Shared per-lane dead flags (lane health, in member order).
+    pub fn dead_gauges(&self) -> Arc<[AtomicBool]> {
+        Arc::clone(&self.shared.dead)
+    }
+
+    /// Shared per-lane transient-error retry counters.
+    pub fn retry_counters(&self) -> Arc<[AtomicU64]> {
+        Arc::clone(&self.shared.retries)
+    }
+
+    /// Shared per-lane EWMA of per-item execution nanos (0 = no sample
+    /// yet) — the governor's live service-time profile.
+    pub fn exec_ewma_gauges(&self) -> Arc<[AtomicU64]> {
+        Arc::clone(&self.shared.exec_ewma_ns)
+    }
+
+    /// The engine this pool executes on (canary-probe path for the
+    /// governor: probes go through the engine's own job channel, never
+    /// through the quarantined lane).
+    pub fn engine(&self) -> &Engine {
+        &self.shared.engine
+    }
+
+    /// Snapshot of the per-lane dead flags.
+    pub fn dead_lanes(&self) -> Vec<bool> {
+        self.shared.dead.iter().map(|d| d.load(Ordering::Acquire)).collect()
+    }
+
+    /// Bring a dead lane back to life after its backend healed (the
+    /// governor calls this once a canary probe succeeds). Claims the
+    /// lane, fails any backlog stranded while it was dead, clears the
+    /// deadline and the dead flag, then releases and wakes the pool.
+    /// Returns false — and leaves the lane dead — if the pool can no
+    /// longer execute anything (closed, or zero live workers) or the
+    /// claim could not be taken in bounded time.
+    pub fn revive_lane(&self, pos: usize) -> bool {
+        let shared = &self.shared;
+        assert!(pos < shared.lanes.len(), "revive_lane: lane {pos} out of range");
+        if shared.closed.load(Ordering::SeqCst) || shared.live_workers.load(Ordering::SeqCst) == 0
+        {
+            return false;
+        }
+        if !shared.dead[pos].load(Ordering::Acquire) {
+            return true; // already live
+        }
+        let lane = &shared.lanes[pos];
+        // bounded spin for the claim: holders of a dead lane only fail
+        // backlog, which terminates promptly
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while lane
+            .claimed
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::yield_now();
+        }
+        // still dead here, so racing pushes keep erroring while we
+        // clear out anything stranded before the flag flipped
+        shared.fail_backlog(pos);
+        lane.deadline_ns.store(0, Ordering::Release);
+        shared.dead[pos].store(false, Ordering::Release);
+        lane.claimed.store(false, Ordering::Release);
+        shared.wake_all();
+        true
+    }
 }
 
 impl Drop for Executor {
@@ -664,8 +763,8 @@ impl Drop for WorkerGuard<'_> {
             return;
         }
         if self.shared.live_workers.fetch_sub(1, Ordering::SeqCst) == 1 {
-            for lane in self.shared.lanes.iter() {
-                lane.dead.store(true, Ordering::SeqCst);
+            for d in self.shared.dead.iter() {
+                d.store(true, Ordering::SeqCst);
             }
         }
         self.shared.wake_all();
@@ -687,7 +786,7 @@ impl Drop for ClaimGuard<'_> {
     fn drop(&mut self) {
         let lane = &self.shared.lanes[self.lane];
         if std::thread::panicking() {
-            lane.dead.store(true, Ordering::SeqCst);
+            self.shared.dead[self.lane].store(true, Ordering::SeqCst);
         }
         lane.claimed.store(false, Ordering::Release);
         if std::thread::panicking() {
@@ -707,8 +806,8 @@ fn worker_loop(wid: usize, shared: Arc<Shared>) {
             // evicts) and stay behind to fail the already-admitted
             // backlog instead of letting its callers hang forever
             if shared.live_workers.fetch_sub(1, Ordering::SeqCst) == 1 {
-                for lane in shared.lanes.iter() {
-                    lane.dead.store(true, Ordering::SeqCst);
+                for d in shared.dead.iter() {
+                    d.store(true, Ordering::SeqCst);
                 }
                 reaper_loop(&shared);
             }

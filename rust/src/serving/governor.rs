@@ -1,0 +1,796 @@
+//! The ensemble **governor**: the control plane that closes the paper's
+//! accuracy/latency feedback loop on a *running* [`Pipeline`].
+//!
+//! Six PRs of data-plane speed left the serving plane executing one
+//! fixed ensemble until process death: the composer ran offline, a
+//! panicked lane was dead forever, and sustained overload could only
+//! breach the SLO. The governor is the supervisory loop that fixes all
+//! three. Every control tick (`--control-tick-ms`) it:
+//!
+//! ```text
+//!            ┌────────────── read live signals ───────────────┐
+//!            │ pressure = (T_q.p95 + T_s.p95) / SLO           │
+//!            │ dead-lane flags, per-lane exec-time EWMA       │
+//!            └──────┬──────────────┬───────────────┬──────────┘
+//!                   ▼              ▼               ▼
+//!            ┌ degrade/recover ┌ quarantine ┌ recompose (every Nth tick)
+//!            │ pressure ≥ 1 for│ dead lanes │ Composer::search seeded
+//!            │ `overload_ticks`│ leave the  │ with {current, floor,
+//!            │ → step down to  │ active set;│ healthy-universe}, scored
+//!            │ the accuracy    │ canary re- │ against LIVE per-lane
+//!            │ floor; ≤ 0.7 for│ probe with │ service times (EWMA) in
+//!            │ `recover_ticks` │ exp backoff│ place of offline MACs
+//!            │ → step back up  │ → reinstate│ estimates
+//!            └──────┬──────────┴─────┬──────┴──────┬───────────
+//!                   └────────────────┴─────────────┘
+//!                                    ▼
+//!                   Pipeline::install_membership(next)
+//!                   (hot swap: FIFO-ordered vs admissions,
+//!                    zero in-flight queries dropped)
+//! ```
+//!
+//! ## Determinism
+//!
+//! The governor only ever *schedules* swaps; the swap itself rides the
+//! router channel ([`Pipeline::install_membership`]), so queries
+//! admitted under epoch E complete under E's member set bit-for-bit
+//! regardless of worker count or tick timing. Given the same swap
+//! schedule, predictions are bit-identical (`tests/governor.rs`).
+//!
+//! ## Split: pure core vs driver thread
+//!
+//! [`GovernorCore`] is a pure, clock-free state machine — `(pressure,
+//! dead flags, candidate) → (install?, probes)` — unit-tested
+//! exhaustively below without threads or sleeps. [`Governor`] is the
+//! thin driver that owns the tick clock, reads telemetry, runs the
+//! composer, fires canaries, and applies the core's plan to the
+//! pipeline.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::control::DEFAULT_SLO;
+use super::pipeline::Pipeline;
+use super::telemetry::GovernorGauges;
+use crate::composer::Composer;
+use crate::config::{ComposerConfig, SystemConfig};
+use crate::profiler::{
+    AnalyticLatencyProfiler, LatencyProfiler, ServiceTimes, ValidationAccuracyProfiler,
+};
+use crate::profiler::AccuracyProfiler;
+use crate::zoo::{Selector, Zoo};
+use crate::{Error, Result};
+
+/// Governor tuning knobs. The defaults are deliberately conservative:
+/// two consecutive over-pressure ticks before degrading (a single burst
+/// tail must not collapse the ensemble), five clean ticks before
+/// recovering (hysteresis — flapping between floor and full set would
+/// thrash the composer and the lanes' batch fill).
+#[derive(Debug, Clone)]
+pub struct GovernorConfig {
+    /// Control-loop period (`--control-tick-ms`, default 100 ms).
+    pub tick: Duration,
+    /// Accuracy bar (ensemble validation ROC-AUC) the degraded-mode
+    /// floor must still clear (`--floor-acc`, default 0.80).
+    pub floor_acc: f64,
+    /// End-to-end SLO pressure is measured against (`--slo-ms`).
+    pub slo: Duration,
+    /// Latency budget (seconds) handed to the composer's utility.
+    pub latency_budget: f64,
+    /// Consecutive ticks with pressure ≥ 1.0 before stepping down.
+    pub overload_ticks: u32,
+    /// Consecutive ticks with pressure ≤ `recover_pressure` before
+    /// stepping back up (hysteresis width).
+    pub recover_ticks: u32,
+    /// Recovery threshold: strictly below the 1.0 overload line so the
+    /// governor never oscillates on a pressure plateau.
+    pub recover_pressure: f64,
+    /// First canary re-probe delay for a quarantined lane, in ticks.
+    pub backoff_init_ticks: u32,
+    /// Exponential backoff cap, in ticks.
+    pub backoff_max_ticks: u32,
+    /// Run the composer every Nth tick (re-composition is ~ms of CPU;
+    /// quarantine/degrade decisions stay per-tick).
+    pub recompose_every: u32,
+}
+
+impl Default for GovernorConfig {
+    fn default() -> Self {
+        GovernorConfig {
+            tick: Duration::from_millis(100),
+            floor_acc: 0.80,
+            slo: DEFAULT_SLO,
+            latency_budget: 0.2,
+            overload_ticks: 2,
+            recover_ticks: 5,
+            recover_pressure: 0.7,
+            backoff_init_ticks: 2,
+            backoff_max_ticks: 32,
+            recompose_every: 10,
+        }
+    }
+}
+
+/// What one [`GovernorCore::on_tick`] decided.
+#[derive(Debug, Default, PartialEq, Eq)]
+pub struct TickPlan {
+    /// Membership to install (lane positions), if it changed.
+    pub install: Option<Vec<usize>>,
+    /// Quarantined lanes due for a canary probe this tick.
+    pub probes: Vec<usize>,
+    /// The governor stepped down to the floor this tick.
+    pub entered_degraded: bool,
+    /// The governor stepped back up this tick.
+    pub left_degraded: bool,
+}
+
+/// Quarantine ledger entry: exponential-backoff probe schedule.
+#[derive(Debug, Clone, Copy)]
+struct Backoff {
+    /// Current wait between probes, in ticks (doubles per failure).
+    wait: u32,
+    /// Ticks until the next probe fires.
+    next_in: u32,
+}
+
+/// The governor's pure decision core: no clocks, no threads, no I/O —
+/// every input arrives as an argument, every decision leaves as a
+/// [`TickPlan`]. Drives identically under test and under the real
+/// driver.
+#[derive(Debug)]
+pub struct GovernorCore {
+    /// Lane positions of the full spawn-time universe: `0..n_lanes`.
+    n_lanes: usize,
+    /// Degraded-mode member set (smallest set clearing the accuracy
+    /// bar), ascending lane positions.
+    floor: Vec<usize>,
+    /// Current active membership (what the last install established).
+    active: Vec<usize>,
+    /// Quarantined lanes → probe backoff state.
+    quarantine: BTreeMap<usize, Backoff>,
+    /// Lanes whose canary succeeded, joining at the next tick's install.
+    pending_join: Vec<usize>,
+    /// Membership saved on entering degraded mode — what recovery steps
+    /// back up to (a later recompose tick may refine it further).
+    pre_degraded: Vec<usize>,
+    degraded: bool,
+    over_ticks: u32,
+    under_ticks: u32,
+    overload_ticks: u32,
+    recover_ticks: u32,
+    recover_pressure: f64,
+    backoff_init: u32,
+    backoff_max: u32,
+}
+
+impl GovernorCore {
+    /// `floor` is validated against the universe and normalised
+    /// (sorted, deduplicated); the core starts with the full universe
+    /// active (epoch 0's member set).
+    pub fn new(n_lanes: usize, mut floor: Vec<usize>, cfg: &GovernorConfig) -> Self {
+        floor.sort_unstable();
+        floor.dedup();
+        assert!(!floor.is_empty(), "the degraded floor has at least one lane");
+        assert!(floor.iter().all(|&p| p < n_lanes), "floor lanes must be in the universe");
+        GovernorCore {
+            n_lanes,
+            floor,
+            active: (0..n_lanes).collect(),
+            quarantine: BTreeMap::new(),
+            pending_join: Vec::new(),
+            pre_degraded: Vec::new(),
+            degraded: false,
+            over_ticks: 0,
+            under_ticks: 0,
+            overload_ticks: cfg.overload_ticks.max(1),
+            recover_ticks: cfg.recover_ticks.max(1),
+            recover_pressure: cfg.recover_pressure,
+            backoff_init: cfg.backoff_init_ticks.max(1),
+            backoff_max: cfg.backoff_max_ticks.max(1),
+        }
+    }
+
+    pub fn active(&self) -> &[usize] {
+        &self.active
+    }
+
+    pub fn floor(&self) -> &[usize] {
+        &self.floor
+    }
+
+    pub fn degraded(&self) -> bool {
+        self.degraded
+    }
+
+    /// Lanes currently quarantined (ascending).
+    pub fn quarantined(&self) -> Vec<usize> {
+        self.quarantine.keys().copied().collect()
+    }
+
+    /// A lane is healthy when its backend is alive and it is not in
+    /// quarantine (a lane stays quarantined until its canary passes,
+    /// even after the dead flag clears).
+    fn healthy(&self, dead: &[bool]) -> Vec<usize> {
+        (0..self.n_lanes)
+            .filter(|&p| !dead.get(p).copied().unwrap_or(false) && !self.quarantine.contains_key(&p))
+            .collect()
+    }
+
+    fn intersect(a: &[usize], healthy: &[usize]) -> Vec<usize> {
+        a.iter().copied().filter(|p| healthy.contains(p)).collect()
+    }
+
+    /// One control tick. `pressure` is the live tail-latency-to-SLO
+    /// ratio (≥ 1.0 = the tail is at/over the SLO), `dead` the per-lane
+    /// dead flags, `candidate` the composer's pick for this tick (lane
+    /// positions; `None` on non-recompose ticks or when the search
+    /// produced nothing valid).
+    pub fn on_tick(&mut self, pressure: f64, dead: &[bool], candidate: Option<&[usize]>) -> TickPlan {
+        let mut plan = TickPlan::default();
+
+        // 1. quarantine newly dead lanes (active or not — a dead floor
+        // lane must also heal before it can ever serve again)
+        let mut fresh: Vec<usize> = Vec::new();
+        for pos in 0..self.n_lanes {
+            if dead.get(pos).copied().unwrap_or(false) && !self.quarantine.contains_key(&pos) {
+                self.quarantine.insert(
+                    pos,
+                    Backoff { wait: self.backoff_init, next_in: self.backoff_init },
+                );
+                fresh.push(pos);
+                // a lane that died after its canary passed but before it
+                // rejoined must not rejoin
+                self.pending_join.retain(|&p| p != pos);
+            }
+        }
+
+        // 2. degradation state machine with hysteresis
+        if pressure >= 1.0 {
+            self.over_ticks += 1;
+            self.under_ticks = 0;
+            if self.over_ticks >= self.overload_ticks && !self.degraded {
+                self.degraded = true;
+                self.pre_degraded = self.active.clone();
+                plan.entered_degraded = true;
+            }
+        } else if pressure <= self.recover_pressure {
+            self.under_ticks += 1;
+            self.over_ticks = 0;
+            if self.under_ticks >= self.recover_ticks && self.degraded {
+                self.degraded = false;
+                plan.left_degraded = true;
+            }
+        } else {
+            // dead band: neither counter advances, neither resets the
+            // state — the hysteresis gap itself
+            self.over_ticks = 0;
+            self.under_ticks = 0;
+        }
+
+        // 3. target membership for this tick
+        let healthy = self.healthy(dead);
+        let mut target: Vec<usize> = if self.degraded {
+            // the floor, minus whatever of it is unhealthy; reinstated
+            // lanes stay parked in `pending_join` until recovery — the
+            // floor is the minimal set on purpose
+            Self::intersect(&self.floor, &healthy)
+        } else {
+            let joins = std::mem::take(&mut self.pending_join);
+            let mut t = if let Some(cand) = candidate {
+                // composer pick, defensively re-filtered against health
+                Self::intersect(cand, &healthy)
+            } else if plan.left_degraded {
+                // step back up to the pre-degraded membership (a later
+                // recompose tick may refine it)
+                Self::intersect(&std::mem::take(&mut self.pre_degraded), &healthy)
+            } else {
+                // steady state: keep the active set, shedding newly
+                // unhealthy lanes
+                Self::intersect(&self.active, &healthy)
+            };
+            t.extend(joins.into_iter().filter(|p| healthy.contains(p)));
+            t
+        };
+        target.sort_unstable();
+        target.dedup();
+        if target.is_empty() {
+            // every preferred lane is unhealthy: serve with whatever is
+            // healthy at all rather than installing an empty set (an
+            // empty membership is not installable); with nothing
+            // healthy, keep the current set — queries fail fast on the
+            // dead lanes until a canary heals one
+            target = healthy.clone();
+        }
+        if !target.is_empty() && target != self.active {
+            self.active = target.clone();
+            plan.install = Some(target);
+        }
+
+        // 4. canary probe schedule: `backoff_init = N` means the first
+        // probe fires N full ticks after the death tick (freshly
+        // quarantined lanes skip this tick's countdown)
+        for (&pos, b) in self.quarantine.iter_mut() {
+            if fresh.contains(&pos) {
+                continue;
+            }
+            if b.next_in > 0 {
+                b.next_in -= 1;
+            }
+            if b.next_in == 0 {
+                plan.probes.push(pos);
+            }
+        }
+
+        plan
+    }
+
+    /// Report a canary outcome for a quarantined lane. `ok` means the
+    /// canary batch executed *and* the lane was revived — the lane
+    /// joins the membership at the next tick. A failure doubles the
+    /// probe backoff (capped).
+    pub fn probe_result(&mut self, pos: usize, ok: bool) {
+        if ok {
+            if self.quarantine.remove(&pos).is_some() {
+                self.pending_join.push(pos);
+            }
+        } else if let Some(b) = self.quarantine.get_mut(&pos) {
+            b.wait = (b.wait.saturating_mul(2)).min(self.backoff_max);
+            b.next_in = b.wait;
+        }
+    }
+}
+
+/// Compute the degraded-mode floor: the smallest member set (greedy by
+/// descending member validation AUC) whose *ensemble* validation
+/// ROC-AUC clears `floor_acc`. Falls back to the full universe when no
+/// prefix clears the bar (the floor must never be better than nothing).
+/// `lane_models[pos]` maps lane positions to zoo model indices.
+pub fn compute_floor(
+    zoo: &Zoo,
+    acc: &ValidationAccuracyProfiler,
+    lane_models: &[usize],
+    floor_acc: f64,
+) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..lane_models.len()).collect();
+    order.sort_by(|&a, &b| {
+        zoo.model(lane_models[b]).val_auc.total_cmp(&zoo.model(lane_models[a]).val_auc)
+    });
+    let mut picked: Vec<usize> = Vec::new();
+    for pos in order {
+        picked.push(pos);
+        let sel = Selector::from_indices(zoo.n(), picked.iter().map(|&p| lane_models[p]));
+        if acc.accuracy(&sel).roc_auc >= floor_acc {
+            picked.sort_unstable();
+            return picked;
+        }
+    }
+    (0..lane_models.len()).collect()
+}
+
+/// Latency profiler for live re-composition: the analytic queueing
+/// model over *live* per-lane service times, restricted to the
+/// pipeline's lane universe — any selector reaching outside it (the
+/// composer explores the whole zoo) profiles as unservable (+∞), so
+/// the search can never pick a model without a lane.
+struct LaneLatencyProfiler {
+    inner: AnalyticLatencyProfiler,
+    /// Zoo model indices that have a healthy lane right now.
+    allowed: Vec<usize>,
+}
+
+impl LatencyProfiler for LaneLatencyProfiler {
+    fn latency(&self, b: &Selector, c: &SystemConfig) -> f64 {
+        if b.indices().iter().any(|i| !self.allowed.contains(i)) {
+            return f64::INFINITY;
+        }
+        self.inner.latency(b, c)
+    }
+}
+
+/// The governor driver: owns the control thread. Dropping it stops the
+/// loop and joins the thread; the held [`Pipeline`] clone is released
+/// on drop, so a governor never keeps a pipeline alive past its owner's
+/// intent — drop the governor *before* the last pipeline handle.
+pub struct Governor {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    gauges: Arc<GovernorGauges>,
+}
+
+impl Governor {
+    /// Spawn the control loop over `pipeline`. The zoo is cloned for
+    /// the composer's live re-composition searches.
+    pub fn spawn(zoo: &Zoo, pipeline: &Pipeline, cfg: GovernorConfig) -> Result<Governor> {
+        let gauges = Arc::new(GovernorGauges::default());
+        pipeline.telemetry().install_governor(Arc::clone(&gauges));
+
+        let acc = ValidationAccuracyProfiler::from_zoo(zoo);
+        let lane_models: Vec<usize> = pipeline.ensemble().indices().to_vec();
+        let floor = compute_floor(zoo, &acc, &lane_models, cfg.floor_acc);
+        let core = GovernorCore::new(lane_models.len(), floor, &cfg);
+
+        gauges.active_members.store(lane_models.len(), Ordering::Relaxed);
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let stop = Arc::clone(&stop);
+            let gauges = Arc::clone(&gauges);
+            let pipeline = pipeline.clone();
+            let zoo = zoo.clone();
+            std::thread::Builder::new()
+                .name("governor".into())
+                .spawn(move || {
+                    govern_loop(zoo, pipeline, cfg, acc, lane_models, core, gauges, stop)
+                })
+                .map_err(Error::Io)?
+        };
+        Ok(Governor { stop, handle: Some(handle), gauges })
+    }
+
+    pub fn gauges(&self) -> &Arc<GovernorGauges> {
+        &self.gauges
+    }
+}
+
+impl Drop for Governor {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Live tail-latency pressure: (T_q.p95 + T_s.p95) / SLO. ≥ 1.0 means
+/// the observed queueing + execution tail is at or past the SLO.
+fn read_pressure(pipeline: &Pipeline, slo: Duration) -> f64 {
+    let t = pipeline.telemetry();
+    let tail = t.queueing.percentile_fast(95.0) + t.exec.percentile_fast(95.0);
+    tail / slo.as_secs_f64().max(1e-9)
+}
+
+/// Live per-model service times: the analytic MACs estimate as a prior,
+/// overwritten per lane by the executor's measured per-item execution
+/// EWMA wherever one exists — the "live latency profiles in place of
+/// offline MACs estimates" half of the tentpole.
+fn live_service_times(
+    zoo: &Zoo,
+    pipeline: &Pipeline,
+    lane_models: &[usize],
+) -> ServiceTimes {
+    let mut times = ServiceTimes::from_macs(zoo, 5e-4, 2e10);
+    let ewma = pipeline.executor().exec_ewma_gauges();
+    for (pos, &model) in lane_models.iter().enumerate() {
+        let ns = ewma[pos].load(Ordering::Relaxed);
+        if ns > 0 {
+            times.seconds[model] = ns as f64 / 1e9;
+        }
+    }
+    times
+}
+
+/// One re-composition: search the (healthy) lane universe with the
+/// composer, seeded with the current set, the floor, and the full
+/// healthy universe; returns the winning membership (lane positions)
+/// if it is valid — healthy, clearing the accuracy bar, finite latency.
+#[allow(clippy::too_many_arguments)]
+fn recompose(
+    zoo: &Zoo,
+    pipeline: &Pipeline,
+    cfg: &GovernorConfig,
+    acc: &ValidationAccuracyProfiler,
+    lane_models: &[usize],
+    active: &[usize],
+    floor: &[usize],
+    healthy: &[usize],
+) -> Option<Vec<usize>> {
+    if healthy.is_empty() {
+        return None;
+    }
+    let to_selector = |positions: &[usize]| {
+        Selector::from_indices(zoo.n(), positions.iter().map(|&p| lane_models[p]))
+    };
+    let lat = LaneLatencyProfiler {
+        inner: AnalyticLatencyProfiler::new(live_service_times(zoo, pipeline, lane_models)),
+        allowed: healthy.iter().map(|&p| lane_models[p]).collect(),
+    };
+    let composer_cfg = ComposerConfig {
+        latency_budget: cfg.latency_budget,
+        // live loop: a handful of cheap iterations per recompose tick —
+        // the search runs every few hundred ms, not once offline
+        iterations: 3,
+        warm_start: 8,
+        explore_samples: 32,
+        top_k: 4,
+        seed: 13,
+        ..Default::default()
+    };
+    let composer = Composer::new(zoo, acc, &lat, composer_cfg, SystemConfig::default());
+    let seeds = [to_selector(active), to_selector(floor), to_selector(healthy)];
+    let best = composer.search(&seeds).best;
+    // validity gate: the winner must be servable right now and clear
+    // the accuracy bar (or at least the floor's own AUC, when the floor
+    // itself could not reach the bar)
+    let bar = cfg.floor_acc.min(acc.accuracy(&seeds[1]).roc_auc);
+    if !best.latency.is_finite() || best.accuracy.roc_auc < bar {
+        return None;
+    }
+    let model_to_pos: BTreeMap<usize, usize> =
+        lane_models.iter().enumerate().map(|(pos, &m)| (m, pos)).collect();
+    let mut positions = Vec::with_capacity(best.selector.len());
+    for &model in best.selector.indices() {
+        positions.push(*model_to_pos.get(&model)?);
+    }
+    if positions.is_empty() || positions.iter().any(|p| !healthy.contains(p)) {
+        return None;
+    }
+    Some(positions)
+}
+
+/// Fire one canary at a quarantined lane: execute a single-query batch
+/// directly on the engine (bypassing the dead lane), and — only if the
+/// backend answers — revive the lane. Returns whether the lane is back.
+fn canary(pipeline: &Pipeline, lane_models: &[usize], pos: usize) -> bool {
+    let executor = pipeline.executor();
+    let engine = executor.engine();
+    let batch = engine.batch_for(1);
+    let input = vec![0.25f32; batch * pipeline.clip_len()];
+    let ok = engine.execute_blocking((lane_models[pos], batch), input).is_ok();
+    ok && executor.revive_lane(pos)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn govern_loop(
+    zoo: Zoo,
+    pipeline: Pipeline,
+    cfg: GovernorConfig,
+    acc: ValidationAccuracyProfiler,
+    lane_models: Vec<usize>,
+    mut core: GovernorCore,
+    gauges: Arc<GovernorGauges>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut tick_no: u64 = 0;
+    while !stop.load(Ordering::Relaxed) {
+        let tick_started = Instant::now();
+        let dead = pipeline.executor().dead_lanes();
+        let pressure = read_pressure(&pipeline, cfg.slo);
+
+        // re-composition on every Nth tick, skipped while degraded (the
+        // floor IS the degraded answer; searching would fight it)
+        let candidate = if !core.degraded()
+            && cfg.recompose_every > 0
+            && tick_no % u64::from(cfg.recompose_every) == 0
+            && tick_no > 0
+        {
+            let healthy: Vec<usize> = (0..lane_models.len())
+                .filter(|&p| !dead[p] && !core.quarantined().contains(&p))
+                .collect();
+            recompose(
+                &zoo,
+                &pipeline,
+                &cfg,
+                &acc,
+                &lane_models,
+                core.active(),
+                core.floor(),
+                &healthy,
+            )
+        } else {
+            None
+        };
+
+        let plan = core.on_tick(pressure, &dead, candidate.as_deref());
+
+        if plan.entered_degraded {
+            gauges.degraded.store(1, Ordering::Relaxed);
+            gauges.degraded_entered.fetch_add(1, Ordering::Relaxed);
+        }
+        if plan.left_degraded {
+            gauges.degraded.store(0, Ordering::Relaxed);
+        }
+        if let Some(positions) = plan.install.as_deref() {
+            match pipeline.install_membership(positions) {
+                Ok(set) => {
+                    gauges.epoch.store(set.epoch(), Ordering::Relaxed);
+                    gauges.active_members.store(set.len(), Ordering::Relaxed);
+                    gauges.swaps.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(_) => break, // pipeline shut down under us
+            }
+        }
+        for &pos in &plan.probes {
+            gauges.probes.fetch_add(1, Ordering::Relaxed);
+            let ok = canary(&pipeline, &lane_models, pos);
+            if ok {
+                gauges.reinstated.fetch_add(1, Ordering::Relaxed);
+            }
+            core.probe_result(pos, ok);
+        }
+        gauges.quarantined.store(core.quarantined().len(), Ordering::Relaxed);
+
+        tick_no += 1;
+        // sleep out the remainder of the tick in short slices so a stop
+        // request (drop) is honoured within ~a millisecond
+        let elapsed = tick_started.elapsed();
+        let mut left = cfg.tick.saturating_sub(elapsed);
+        while !left.is_zero() && !stop.load(Ordering::Relaxed) {
+            let nap = left.min(Duration::from_millis(1));
+            std::thread::sleep(nap);
+            left = left.saturating_sub(nap);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo::testkit::toy_zoo_with;
+
+    fn cfg() -> GovernorConfig {
+        GovernorConfig::default()
+    }
+
+    #[test]
+    fn overload_steps_down_within_bounded_ticks_and_recovers_with_hysteresis() {
+        let c = cfg();
+        let mut core = GovernorCore::new(4, vec![0, 1], &c);
+        let dead = vec![false; 4];
+        // one over-pressure tick: not yet (overload_ticks = 2)
+        let p1 = core.on_tick(1.5, &dead, None);
+        assert!(!p1.entered_degraded && p1.install.is_none());
+        // second: degrade to the floor
+        let p2 = core.on_tick(1.5, &dead, None);
+        assert!(p2.entered_degraded);
+        assert_eq!(p2.install.as_deref(), Some(&[0, 1][..]));
+        assert!(core.degraded());
+        // pressure in the dead band (0.7 < p < 1.0): stays degraded
+        for _ in 0..10 {
+            let p = core.on_tick(0.85, &dead, None);
+            assert!(p.install.is_none() && !p.left_degraded);
+        }
+        // recovery needs `recover_ticks` consecutive clean ticks
+        for i in 0..c.recover_ticks - 1 {
+            let p = core.on_tick(0.1, &dead, None);
+            assert!(!p.left_degraded, "tick {i} must not yet recover");
+        }
+        let p = core.on_tick(0.1, &dead, None);
+        assert!(p.left_degraded);
+        assert_eq!(p.install.as_deref(), Some(&[0, 1, 2, 3][..]));
+        assert!(!core.degraded());
+    }
+
+    #[test]
+    fn recovery_counter_resets_on_pressure_spike() {
+        let c = cfg();
+        let mut core = GovernorCore::new(2, vec![0], &c);
+        let dead = vec![false; 2];
+        core.on_tick(2.0, &dead, None);
+        let p = core.on_tick(2.0, &dead, None);
+        assert!(p.entered_degraded);
+        // three clean ticks, then a spike: the clean streak must restart
+        for _ in 0..3 {
+            core.on_tick(0.1, &dead, None);
+        }
+        core.on_tick(1.2, &dead, None);
+        for _ in 0..c.recover_ticks - 1 {
+            assert!(!core.on_tick(0.1, &dead, None).left_degraded);
+        }
+        assert!(core.on_tick(0.1, &dead, None).left_degraded);
+    }
+
+    #[test]
+    fn dead_lane_quarantined_probed_with_exponential_backoff_and_reinstated() {
+        let c = cfg(); // backoff_init 2, max 32
+        let mut core = GovernorCore::new(3, vec![0], &c);
+        let mut dead = vec![false; 3];
+        dead[1] = true;
+        // death tick: lane 1 leaves the membership at once, no probe yet
+        let p = core.on_tick(0.1, &dead, None);
+        assert_eq!(p.install.as_deref(), Some(&[0, 2][..]));
+        assert_eq!(core.quarantined(), vec![1]);
+        assert!(p.probes.is_empty());
+        // backoff 2: the probe fires on the second tick after death
+        assert!(core.on_tick(0.1, &dead, None).probes.is_empty());
+        let p = core.on_tick(0.1, &dead, None);
+        assert_eq!(p.probes, vec![1]);
+        // failed canary: wait doubles to 4
+        core.probe_result(1, false);
+        for i in 0..3 {
+            assert!(core.on_tick(0.1, &dead, None).probes.is_empty(), "tick {i}");
+        }
+        let p = core.on_tick(0.1, &dead, None);
+        assert_eq!(p.probes, vec![1]);
+        // successful canary: the lane heals (flag cleared by revive) and
+        // rejoins at the next tick
+        dead[1] = false;
+        core.probe_result(1, true);
+        let p = core.on_tick(0.1, &dead, None);
+        assert_eq!(p.install.as_deref(), Some(&[0, 1, 2][..]));
+        assert!(core.quarantined().is_empty());
+    }
+
+    #[test]
+    fn backoff_caps_at_configured_max() {
+        let mut c = cfg();
+        c.backoff_init_ticks = 2;
+        c.backoff_max_ticks = 4;
+        let mut core = GovernorCore::new(2, vec![0], &c);
+        let mut dead = vec![false; 2];
+        dead[1] = true;
+        core.on_tick(0.1, &dead, None);
+        // drive to the first probe, fail it thrice: wait 2 → 4 → 4
+        for want_wait in [2u32, 4, 4] {
+            let mut ticks = 0;
+            loop {
+                ticks += 1;
+                if !core.on_tick(0.1, &dead, None).probes.is_empty() {
+                    break;
+                }
+                assert!(ticks < 10, "probe must fire within the cap");
+            }
+            assert_eq!(ticks, want_wait, "probe cadence follows capped backoff");
+            core.probe_result(1, false);
+        }
+    }
+
+    #[test]
+    fn degraded_floor_sheds_unhealthy_floor_lanes() {
+        let c = cfg();
+        let mut core = GovernorCore::new(4, vec![0, 1], &c);
+        let mut dead = vec![false; 4];
+        dead[0] = true; // half the floor is dead
+        core.on_tick(2.0, &dead, None);
+        let p = core.on_tick(2.0, &dead, None);
+        assert!(p.entered_degraded);
+        assert_eq!(p.install.as_deref(), Some(&[1][..]), "floor ∩ healthy");
+    }
+
+    #[test]
+    fn all_preferred_dead_falls_back_to_any_healthy_lane() {
+        let c = cfg();
+        let mut core = GovernorCore::new(3, vec![0], &c);
+        let mut dead = vec![false; 3];
+        dead[0] = true;
+        dead[1] = true;
+        core.on_tick(2.0, &dead, None);
+        let p = core.on_tick(2.0, &dead, None);
+        // floor lane 0 is dead: serve with the only healthy lane left
+        assert_eq!(p.install.as_deref(), Some(&[2][..]));
+    }
+
+    #[test]
+    fn candidate_applies_only_when_not_degraded() {
+        let c = cfg();
+        let mut core = GovernorCore::new(4, vec![0], &c);
+        let dead = vec![false; 4];
+        let p = core.on_tick(0.1, &dead, Some(&[1, 2]));
+        assert_eq!(p.install.as_deref(), Some(&[1, 2][..]));
+        // degrade; a candidate while degraded must not override the floor
+        core.on_tick(2.0, &dead, None);
+        let p = core.on_tick(2.0, &dead, Some(&[1, 2, 3]));
+        assert!(p.entered_degraded);
+        assert_eq!(p.install.as_deref(), Some(&[0][..]));
+    }
+
+    #[test]
+    fn floor_is_smallest_prefix_clearing_the_bar() {
+        let zoo = toy_zoo_with(6, 64, 7, 16, &[1, 8]);
+        let acc = ValidationAccuracyProfiler::from_zoo(&zoo);
+        let lane_models: Vec<usize> = (0..zoo.n()).collect();
+        // a bar below the best single member: the floor is one lane
+        let best_single = (0..zoo.n())
+            .map(|i| {
+                acc.accuracy(&Selector::from_indices(zoo.n(), [i])).roc_auc
+            })
+            .fold(f64::MIN, f64::max);
+        let floor = compute_floor(&zoo, &acc, &lane_models, best_single - 0.05);
+        assert_eq!(floor.len(), 1);
+        // an unreachable bar: the floor degrades to the full universe
+        let floor = compute_floor(&zoo, &acc, &lane_models, 1.01);
+        assert_eq!(floor, lane_models);
+    }
+}

@@ -20,13 +20,22 @@
 //!        │ one ensemble Query per ΔT window (WindowLease × 3)
 //!        ▼
 //!  dispatcher ──► per-model lanes ──► executor pool (--workers threads)
-//!        │        (lock-free queues,     │ claim ready lane, pack,
-//!        │         fill deadlines ◄──────│ execute inline (DirectWorker,
-//!        │         armed by the          ▼ gpu-count device permits)
-//!        │         DeadlineController)
+//!        │ epoch E's   (lock-free queues,   │ claim ready lane, pack,
+//!        │ members     fill deadlines ◄─────│ execute inline (DirectWorker,
+//!        │ only        armed by the         ▼ gpu-count device permits)
+//!        │ ▲           DeadlineController)
+//!        │ │ Install(E+1): hot swap, FIFO vs admissions
+//!        │ │
+//!        │ Governor (--govern): control ticks read live pressure
+//!        │ (T_q+T_s tails vs SLO), recompose via Composer::search on
+//!        │ live lane service times, degrade to the accuracy floor
+//!        │ under overload (hysteresis back up), quarantine dead lanes
+//!        │ and reinstate them after a canary batch succeeds
+//!        ▼
 //!  [stateless]  Completer (direct, collector-less): whichever worker
 //!               records a query's last member score finishes it
-//!               inline: bagging mean (Eq. 5) + telemetry
+//!               inline: bagging mean (Eq. 5) over the query's OWN
+//!               admission-epoch member set + telemetry
 //! ```
 //!
 //! ## SLO-aware adaptive batch deadlines
@@ -43,6 +52,21 @@
 //! adaptation on or off (`tests/executor.rs`). The adapted deadline per
 //! model is observable via `/stats` (`fill_wait_ns_per_model`) and the
 //! bedside report.
+//!
+//! ## The ensemble governor (live re-composition + failure recovery)
+//!
+//! `holmes serve --govern [--control-tick-ms 100] [--floor-acc 0.8]`
+//! spawns the supervisory control plane of [`governor`]: each tick it
+//! reads the live tail-latency pressure and lane health, re-scores
+//! candidate ensembles with the paper's composer over *live* per-lane
+//! service-time EWMAs, and hot-swaps membership through the router's
+//! FIFO `Install` message — queries admitted under epoch E complete
+//! under E's member set, bit-identically for any swap schedule
+//! (`tests/governor.rs`). Sustained overload steps the ensemble down to
+//! the smallest member set still clearing `--floor-acc` (and back up
+//! with hysteresis); a lane whose backend fails is quarantined,
+//! re-probed with exponentially backed-off canary batches, and
+//! reinstated when the backend heals — previously it was dead forever.
 //!
 //! Stateful compute (aggregation) and stateless compute (model
 //! inference) are separated exactly as the paper requires of its
@@ -75,6 +99,7 @@ pub mod arena;
 pub mod batcher;
 pub mod control;
 pub mod executor;
+pub mod governor;
 pub mod pipeline;
 pub mod profile;
 pub mod shards;
@@ -84,9 +109,10 @@ pub use aggregator::WindowAggregator;
 pub use arena::{LeadPool, LeadSlot, WindowLease};
 pub use control::{DeadlineController, DEFAULT_SLO};
 pub use executor::{default_workers, default_workers_for};
+pub use governor::{Governor, GovernorConfig, GovernorCore};
 pub use pipeline::{
-    share_leads, Completer, PendingSlots, Pipeline, PipelineConfig, Prediction, Query,
+    share_leads, Completer, MemberSet, PendingSlots, Pipeline, PipelineConfig, Prediction, Query,
     ScoreOutcome,
 };
 pub use shards::{default_shards, ShardConfig, ShardRouter, ShardSender};
-pub use telemetry::{EdgeGauges, ExecutorGauges, LatencyHistogram, Telemetry};
+pub use telemetry::{EdgeGauges, ExecutorGauges, GovernorGauges, LatencyHistogram, Telemetry};

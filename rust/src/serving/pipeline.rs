@@ -4,30 +4,35 @@
 //! ## Data-plane architecture (zero-copy, lock-free, thread-count ∝ hardware)
 //!
 //! ```text
-//!  Pipeline handles ──queries──► router thread ──items──► model lanes (one per
-//!        │                          │ claim slot            member: lock-free
-//!        │ leads: [WindowLease; 3]  │ (CAS, no mutex)       injection queue +
-//!        │ (pooled buffers, shared  ▼                       flush deadline)
-//!        │  by reference, recycled  pending slot arena          │ claim ready
-//!        │  on last drop)           (preallocated,              ▼ lane (CAS)
-//!        │                          generation-tagged;   ┌────────────────────┐
-//!        │                          atomic remaining +   │ executor pool:     │
-//!        │                          per-member score     │ --workers threads, │
-//!        │                          cells, CAS eviction) │ each: persistent   │
-//!        │                              ▲                │ 64B-aligned arena, │
-//!        │                              │ Completer::    │ inline ExecBackend │
-//!        │                              │ score (atomic  │ DirectWorker under │
-//!        │                              │ cell write;    │ n_gpus device      │
-//!        │                              │ last member    │ permits            │
-//!        ▼                              │ finishes the   └─────────▲──────────┘
-//!      reply rx ◄──────────────────── slot INLINE on whichever      │ fill
-//!        │                            worker flushed the last       │ deadline
-//!        │ T_q/T_s percentiles        member's batch                │ per arm
-//!        ▼ (live: bucket-derived ┌──────────────────────────────────┴──┐
-//!   telemetry ──────────────────►│ DeadlineController (--adaptive-batch│
-//!        ▲ queue-depth gauges    │ --slo-ms): wait ∈ [min, max] from   │
-//!        └───────────────────────│ SLO headroom × lane fill level      │
-//!                                └─────────────────────────────────────┘
+//!  Pipeline handles ──messages──► router thread ──items──► model lanes (one
+//!        │  Query | Install(E+1)     │ membership epoch E     per UNIVERSE
+//!        │                           │ (channel FIFO orders   member: lock-free
+//!        │ leads: [WindowLease; 3]   │  hot swaps vs          injection queue +
+//!        │ (pooled buffers, shared   │  admissions; fan out   flush deadline +
+//!        │  by reference, recycled   │  to E's lanes only)    dead flag)
+//!        │  on last drop)            ▼                            │ claim ready
+//!        │                     pending slot arena                 ▼ lane (CAS)
+//!        │                     (preallocated, generation-  ┌────────────────────┐
+//!        │                     tagged; per-query MemberSet │ executor pool:     │
+//!        │                     + atomic remaining +        │ --workers threads, │
+//!        │                     per-member score cells)     │ each: persistent   │
+//!        │                         ▲                       │ 64B-aligned arena, │
+//!        │                         │ Completer::score      │ inline ExecBackend │
+//!        │                         │ (atomic cell write;   │ DirectWorker under │
+//!        │                         │ last member of the    │ n_gpus device      │
+//!        ▼                         │ query's OWN epoch     │ permits            │
+//!      reply rx ◄──────────────── finishes the slot INLINE └──▲────────▲────────┘
+//!        │                                                    │ fill   │ revive/
+//!        │ T_q/T_s percentiles                                │ dead-  │ canary
+//!        ▼ (live: bucket-derived)                             │ line   │
+//!   telemetry ────────────┬───────────────────────────────────┴─┐   ┌──┴───────┐
+//!        ▲ queue depths,  │ DeadlineController (--adaptive-batch│   │ Governor │
+//!        │ dead lanes,    │ --slo-ms): wait ∈ [min, max] from   │   │(--govern)│
+//!        │ exec EWMA      │ SLO headroom × lane fill level      │   └──┬───────┘
+//!        └────────────────┴─────────────────────────────────────┘      │
+//!        └───────── live pressure + lane health + latency profiles ────┘
+//!                   (recompose via Composer::search → Install, degrade
+//!                    to the accuracy floor, quarantine/reinstate lanes)
 //! ```
 //!
 //! * **Zero-copy, pooled windows** — the aggregator fills recycled lead
@@ -69,11 +74,23 @@
 //!   [`Completer`], and whichever worker records the last outstanding
 //!   member runs `finish()` (bagging mean, telemetry, reply delivery)
 //!   inline. No single thread touches every score.
+//! * **Membership epochs (hot swap)** — the router channel carries
+//!   `Install` messages alongside queries, so a membership change is
+//!   FIFO-ordered against admissions: every query admitted under epoch
+//!   E fans out to, waits for, and is averaged over exactly E's member
+//!   set (the [`MemberSet`] travels with the query in its pending
+//!   slot), while the next admission already runs under E+1. No
+//!   in-flight query is dropped, rescored, or re-averaged by a swap —
+//!   [`Pipeline::install_membership`] returns only after the router
+//!   has applied the new set. The universe of lanes is fixed at spawn
+//!   (`cfg.ensemble`); epochs select a subset.
 //! * **Deterministic bagging** — each member's score is written once
 //!   into its own cell and the cells are summed in model-index order at
-//!   completion, so a query's ensemble score is bit-for-bit identical
-//!   regardless of batch composition, arrival order, worker count, or
-//!   which thread completes the slot (`tests/executor.rs`).
+//!   completion (over the query's own member set), so a query's
+//!   ensemble score is bit-for-bit identical regardless of batch
+//!   composition, arrival order, worker count, which thread completes
+//!   the slot, or when a swap landed relative to other queries
+//!   (`tests/executor.rs`, `tests/governor.rs`).
 //! * **Failure eviction** — when a member cannot score a query (engine
 //!   error, dead lane), the slot is reclaimed via a tag CAS and the
 //!   caller's reply channel drops, so `submit()` callers fail fast
@@ -87,7 +104,7 @@
 
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::arena::WindowLease;
@@ -213,6 +230,72 @@ impl PipelineConfig {
 }
 
 // ---------------------------------------------------------------------------
+// Membership epochs
+// ---------------------------------------------------------------------------
+
+/// One ensemble-membership epoch: the subset of executor lanes (member
+/// positions in model-index order, ascending) that score the queries
+/// admitted while the epoch is current. Epoch 0 is the spawn-time full
+/// universe; each [`Pipeline::install_membership`] applied by the
+/// router creates the next one. A query carries its admission epoch's
+/// `Arc<MemberSet>` in its pending slot, so a hot swap never touches a
+/// query already in flight.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemberSet {
+    epoch: u64,
+    /// Sorted ascending, deduplicated — the deterministic summation
+    /// order for the bagging mean.
+    positions: Vec<usize>,
+}
+
+impl MemberSet {
+    /// Build a member set; positions are sorted and deduplicated (must
+    /// be non-empty after dedup).
+    pub fn new(epoch: u64, mut positions: Vec<usize>) -> Self {
+        positions.sort_unstable();
+        positions.dedup();
+        assert!(!positions.is_empty(), "a member set has at least one lane");
+        MemberSet { epoch, positions }
+    }
+
+    /// Epoch 0: every lane of an `n_lanes` universe.
+    pub fn full(n_lanes: usize) -> Self {
+        Self::new(0, (0..n_lanes).collect())
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Member lane positions, ascending.
+    pub fn positions(&self) -> &[usize] {
+        &self.positions
+    }
+
+    pub fn len(&self) -> usize {
+        self.positions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.positions.is_empty()
+    }
+
+    pub fn contains(&self, pos: usize) -> bool {
+        self.positions.binary_search(&pos).is_ok()
+    }
+}
+
+/// What the pipeline handles send the router: a query to admit, or a
+/// membership epoch to install. One channel for both is the whole
+/// determinism story — swaps are FIFO-ordered against admissions, so
+/// "admitted under epoch E" is defined by channel order alone, not by
+/// thread timing.
+enum RouterMsg {
+    Query(Query, Option<mpsc::SyncSender<Prediction>>),
+    Install { positions: Vec<usize>, ack: mpsc::SyncSender<Arc<MemberSet>> },
+}
+
+// ---------------------------------------------------------------------------
 // Lock-free pending slot arena
 // ---------------------------------------------------------------------------
 
@@ -242,9 +325,13 @@ pub enum ScoreOutcome {
 /// [`PendingSlots::score`].
 pub struct CompletedQuery {
     pub meta: PendingMeta,
-    /// Σ member scores, accumulated in model-index (cell) order — the
-    /// deterministic bagging numerator.
+    /// Σ member scores, accumulated in model-index (cell) order over
+    /// the query's own member set — the deterministic bagging
+    /// numerator.
     pub score_sum: f64,
+    /// Members of the query's admission epoch — the bagging
+    /// denominator (a hot swap never changes it retroactively).
+    pub n_members: usize,
     pub min_queue_wait: Duration,
 }
 
@@ -275,13 +362,18 @@ struct Slot {
     /// Guarded by the tag protocol: only the thread that holds the
     /// `TAG_BUSY` claim touches this.
     meta: UnsafeCell<Option<PendingMeta>>,
+    /// The admission epoch's member set (same tag-protocol guard as
+    /// `meta`): `remaining` starts at its length and teardown sums only
+    /// its positions, so a query completes under exactly the membership
+    /// it was admitted with.
+    members: UnsafeCell<Option<Arc<MemberSet>>>,
 }
 
-// SAFETY: `meta` is the only non-atomic field. It is written while the
-// slot's tag is TAG_BUSY, which exactly one thread can hold at a time
-// (claimed by CAS), and read/taken only by the thread holding that
-// claim; the Release store that publishes the live tag (and the Acquire
-// CAS that reclaims it) order those accesses.
+// SAFETY: `meta` and `members` are the only non-atomic fields. They are
+// written while the slot's tag is TAG_BUSY, which exactly one thread can
+// hold at a time (claimed by CAS), and read/taken only by the thread
+// holding that claim; the Release store that publishes the live tag (and
+// the Acquire CAS that reclaims it) order those accesses.
 unsafe impl Send for Slot {}
 unsafe impl Sync for Slot {}
 
@@ -313,6 +405,9 @@ pub struct PendingSlots {
     slots: Box<[Slot]>,
     mask: u64,
     n_models: usize,
+    /// Epoch-0 full member set, used by the membership-agnostic
+    /// [`Self::insert`] (direct executor users, benches, tests).
+    full: Arc<MemberSet>,
     in_flight: AtomicUsize,
 }
 
@@ -334,10 +429,17 @@ impl PendingSlots {
                 min_wait_ns: AtomicU64::new(u64::MAX),
                 scores: (0..n_models).map(|_| AtomicU32::new(0)).collect(),
                 meta: UnsafeCell::new(None),
+                members: UnsafeCell::new(None),
             })
             .collect::<Vec<_>>()
             .into_boxed_slice();
-        PendingSlots { slots, mask: capacity as u64 - 1, n_models, in_flight: AtomicUsize::new(0) }
+        PendingSlots {
+            slots,
+            mask: capacity as u64 - 1,
+            n_models,
+            full: Arc::new(MemberSet::full(n_models)),
+            in_flight: AtomicUsize::new(0),
+        }
     }
 
     fn slot(&self, query_id: u64) -> &Slot {
@@ -350,7 +452,8 @@ impl PendingSlots {
         query_id.wrapping_add(1)
     }
 
-    /// Ensemble members per query (fixed for the pipeline's lifetime).
+    /// Universe size: score cells per slot (fixed for the pipeline's
+    /// lifetime; membership epochs select subsets of it).
     pub fn n_models(&self) -> usize {
         self.n_models
     }
@@ -375,6 +478,18 @@ impl PendingSlots {
     /// can account for the failed queries — eviction itself is
     /// telemetry-agnostic.
     pub fn insert(&self, query_id: u64, meta: PendingMeta) -> usize {
+        self.insert_with(query_id, meta, Arc::clone(&self.full))
+    }
+
+    /// [`Self::insert`] under a specific membership epoch: `remaining`
+    /// starts at the member count and completion sums exactly the
+    /// member cells, so the query finishes under the set it was
+    /// admitted with no matter what epochs follow.
+    pub fn insert_with(&self, query_id: u64, meta: PendingMeta, members: Arc<MemberSet>) -> usize {
+        debug_assert!(
+            members.positions().iter().all(|&p| p < self.n_models),
+            "member positions must index the universe"
+        );
         let slot = self.slot(query_id);
         let mut wait_started: Option<Instant> = None;
         let mut force_evicted = 0usize;
@@ -398,14 +513,16 @@ impl PendingSlots {
             }
             std::thread::yield_now();
         }
-        slot.remaining.store(self.n_models as u32, Ordering::Relaxed);
+        slot.remaining.store(members.len() as u32, Ordering::Relaxed);
         slot.min_wait_ns.store(u64::MAX, Ordering::Relaxed);
         for cell in slot.scores.iter() {
             cell.store(0, Ordering::Relaxed);
         }
         // SAFETY: we hold the TAG_BUSY claim — no other thread touches
-        // `meta` until the Release store below publishes the live tag.
+        // `meta`/`members` until the Release store below publishes the
+        // live tag.
         unsafe { *slot.meta.get() = Some(meta) };
+        unsafe { *slot.members.get() = Some(members) };
         self.in_flight.fetch_add(1, Ordering::Relaxed);
         slot.tag.store(Self::tag_of(query_id), Ordering::Release);
         force_evicted
@@ -512,18 +629,30 @@ impl PendingSlots {
         // SAFETY: TAG_BUSY claim is exclusive; reporters are all out of
         // the writer window.
         let meta = unsafe { (*slot.meta.get()).take() };
+        let members = unsafe { (*slot.members.get()).take() };
         let out = if completed {
-            let score_sum: f64 = slot
-                .scores
+            // sum only the admission epoch's cells, in ascending
+            // position (= model-index) order: the bagging numerator is
+            // bit-identical for any swap schedule that admitted this
+            // query under the same member set
+            let members = members.expect("live slot carries its member set");
+            let score_sum: f64 = members
+                .positions()
                 .iter()
-                .map(|cell| f32::from_bits(cell.load(Ordering::Relaxed)) as f64)
+                .map(|&p| f32::from_bits(slot.scores[p].load(Ordering::Relaxed)) as f64)
                 .sum();
             let ns = slot.min_wait_ns.load(Ordering::Relaxed);
             let min_queue_wait =
                 if ns == u64::MAX { Duration::MAX } else { Duration::from_nanos(ns) };
-            meta.map(|meta| CompletedQuery { meta, score_sum, min_queue_wait })
+            meta.map(|meta| CompletedQuery {
+                meta,
+                score_sum,
+                n_members: members.len(),
+                min_queue_wait,
+            })
         } else {
             drop(meta);
+            drop(members);
             None
         };
         self.in_flight.fetch_sub(1, Ordering::Relaxed);
@@ -572,9 +701,7 @@ impl Completer {
         self.telemetry.exec.record(exec_time);
         self.telemetry.model_jobs.fetch_add(1, Ordering::Relaxed);
         match self.pending.score(query_id, self.member_pos, score, queue_wait) {
-            ScoreOutcome::Completed(done) => {
-                finish(done, self.pending.n_models(), &self.telemetry)
-            }
+            ScoreOutcome::Completed(done) => finish(done, &self.telemetry),
             ScoreOutcome::Accepted | ScoreOutcome::Absent => {}
         }
     }
@@ -607,11 +734,15 @@ pub struct Pipeline {
     /// Declared before `executor` on purpose: dropping the last handle
     /// must close the query channel (router exits, lane sender drops)
     /// *before* the executor handle's drop joins the workers.
-    tx: mpsc::Sender<(Query, Option<mpsc::SyncSender<Prediction>>)>,
+    tx: mpsc::Sender<RouterMsg>,
     telemetry: Arc<Telemetry>,
     pending: Arc<PendingSlots>,
     ensemble: Selector,
     clip_len: usize,
+    /// Mirror of the router's current member set (the router updates it
+    /// after applying each Install): read-only observability — the
+    /// router's own copy is what admissions actually use.
+    membership: Arc<Mutex<Arc<MemberSet>>>,
     executor: Arc<Executor>,
 }
 
@@ -665,14 +796,18 @@ impl Pipeline {
             executor.depth_gauges(),
             executor.batch_counters(),
             executor.controller().lane_waits(),
+            executor.dead_gauges(),
+            executor.retry_counters(),
         ));
 
-        // router thread
-        let (tx, query_rx) =
-            mpsc::channel::<(Query, Option<mpsc::SyncSender<Prediction>>)>();
+        // router thread; epoch 0 = the full spawn-time universe
+        let membership: Arc<Mutex<Arc<MemberSet>>> =
+            Arc::new(Mutex::new(Arc::new(MemberSet::full(cfg.ensemble.len()))));
+        let (tx, query_rx) = mpsc::channel::<RouterMsg>();
         {
             let pending = Arc::clone(&pending);
             let telemetry = Arc::clone(&telemetry);
+            let membership = Arc::clone(&membership);
             // lead index per lane (= member position in model-index order)
             let lane_leads: Vec<usize> =
                 cfg.ensemble.indices().iter().map(|&i| zoo.model(i).lead).collect();
@@ -680,7 +815,7 @@ impl Pipeline {
             std::thread::Builder::new()
                 .name("router".into())
                 .spawn(move || {
-                    router_loop(query_rx, lanes, lane_leads, clip_len, pending, telemetry)
+                    router_loop(query_rx, lanes, lane_leads, clip_len, pending, telemetry, membership)
                 })
                 .map_err(Error::Io)?;
         }
@@ -691,6 +826,7 @@ impl Pipeline {
             pending,
             ensemble: cfg.ensemble,
             clip_len: zoo.manifest.clip_len,
+            membership,
             executor: Arc::new(executor),
         })
     }
@@ -717,13 +853,50 @@ impl Pipeline {
         self.pending.len()
     }
 
+    /// The executor under this pipeline (lane health, revive, engine —
+    /// the governor's control surface).
+    pub fn executor(&self) -> &Arc<Executor> {
+        &self.executor
+    }
+
+    /// The member set admissions currently run under (the router's
+    /// mirror; epoch 0 until the first install).
+    pub fn membership(&self) -> Arc<MemberSet> {
+        Arc::clone(&self.membership.lock().expect("membership mirror poisoned"))
+    }
+
+    /// Hot-swap the ensemble membership to `positions` (lane positions
+    /// in the spawn universe, any order; deduplicated). Blocks until
+    /// the router has applied the new epoch and returns it: every query
+    /// submitted before this call completes under its own admission
+    /// epoch, every query submitted after it (or after the returned
+    /// ack, for other threads) under the new one — nothing in flight is
+    /// dropped or re-averaged. Deterministic by construction: the swap
+    /// rides the same FIFO channel as admissions.
+    pub fn install_membership(&self, positions: &[usize]) -> Result<Arc<MemberSet>> {
+        let n = self.pending.n_models();
+        if positions.is_empty() {
+            return Err(Error::config("membership cannot be empty"));
+        }
+        if let Some(&bad) = positions.iter().find(|&&p| p >= n) {
+            return Err(Error::config(format!(
+                "membership position {bad} outside the {n}-lane universe"
+            )));
+        }
+        let (ack_tx, ack_rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(RouterMsg::Install { positions: positions.to_vec(), ack: ack_tx })
+            .map_err(|_| Error::serving("pipeline shut down"))?;
+        ack_rx.recv().map_err(|_| Error::serving("pipeline shut down before install applied"))
+    }
+
     /// Submit a query; receive the prediction on the returned channel.
     /// If the query fails (a member's engine execution errors), the
     /// channel hangs up without a message.
     pub fn submit(&self, query: Query) -> Result<PredictionRx> {
         let (tx, rx) = mpsc::sync_channel(1);
         self.tx
-            .send((query, Some(tx)))
+            .send(RouterMsg::Query(query, Some(tx)))
             .map_err(|_| Error::serving("pipeline shut down"))?;
         Ok(rx)
     }
@@ -738,23 +911,47 @@ impl Pipeline {
     /// still records the prediction.
     pub fn submit_nowait(&self, query: Query) -> Result<()> {
         self.tx
-            .send((query, None))
+            .send(RouterMsg::Query(query, None))
             .map_err(|_| Error::serving("pipeline shut down"))
     }
 }
 
 fn router_loop(
-    rx: mpsc::Receiver<(Query, Option<mpsc::SyncSender<Prediction>>)>,
+    rx: mpsc::Receiver<RouterMsg>,
     lanes: LaneSender,
     lane_leads: Vec<usize>,
     clip_len: usize,
     pending: Arc<PendingSlots>,
     telemetry: Arc<Telemetry>,
+    membership: Arc<Mutex<Arc<MemberSet>>>,
 ) {
-    // the submission sequence number is the query id; it picks the
-    // pending slot (id mod capacity) and its generation tag (id + 1)
-    for (seq, (q, reply)) in rx.into_iter().enumerate() {
-        let id = seq as u64;
+    // the router's copy is what admissions use; the mirror exists so
+    // handles can observe the current epoch without racing admissions
+    let mut current: Arc<MemberSet> =
+        Arc::clone(&membership.lock().expect("membership mirror poisoned"));
+    let mut epoch = current.epoch();
+    // the admission sequence number is the query id; it picks the
+    // pending slot (id mod capacity) and its generation tag (id + 1).
+    // Installs do not consume ids, so the id stream is identical for any
+    // swap schedule — membership only changes who scores a query.
+    let mut seq = 0u64;
+    for msg in rx {
+        let (q, reply) = match msg {
+            RouterMsg::Install { positions, ack } => {
+                epoch += 1;
+                let set = Arc::new(MemberSet::new(epoch, positions));
+                current = Arc::clone(&set);
+                *membership.lock().expect("membership mirror poisoned") = Arc::clone(&set);
+                // ack after the swap is applied: once the installer's
+                // call returns, every future admission (from any
+                // handle) runs under the new epoch
+                let _ = ack.send(set);
+                continue;
+            }
+            RouterMsg::Query(q, reply) => (q, reply),
+        };
+        let id = seq;
+        seq += 1;
         // reject malformed windows before registering anything: the
         // reply sender drops here, so the caller errors immediately and
         // no model lane ever sees a wrong-length input
@@ -762,7 +959,7 @@ fn router_loop(
             telemetry.failures.fetch_add(1, Ordering::Relaxed);
             continue;
         }
-        let force_evicted = pending.insert(
+        let force_evicted = pending.insert_with(
             id,
             PendingMeta {
                 patient: q.patient,
@@ -771,17 +968,19 @@ fn router_loop(
                 emitted: q.emitted,
                 reply,
             },
+            Arc::clone(&current),
         );
         if force_evicted > 0 {
             // stale occupants killed by the arena's insert failsafe:
             // their callers saw a hang-up, so make the failures visible
             telemetry.failures.fetch_add(force_evicted as u64, Ordering::Relaxed);
         }
-        for (pos, &lead) in lane_leads.iter().enumerate() {
-            // zero-copy fan-out: every member shares the same window
+        for &pos in current.positions() {
+            // zero-copy fan-out to the admission epoch's members only:
+            // every member shares the same window
             let item = BatchItem {
                 query_id: id,
-                input: q.leads[lead].clone(),
+                input: q.leads[lane_leads[pos]].clone(),
                 enqueued: q.emitted,
             };
             if lanes.push(pos, item).is_err() {
@@ -805,8 +1004,10 @@ fn router_loop(
 
 /// Complete one query: deterministic bagging mean + telemetry + reply.
 /// Runs inline on whichever batcher thread recorded the last member's
-/// score (see [`Completer::score`]).
-fn finish(done: CompletedQuery, n_models: usize, telemetry: &Telemetry) {
+/// score (see [`Completer::score`]). The bagging denominator is the
+/// query's own admission-epoch member count — a swap installed after
+/// admission never re-averages it.
+fn finish(done: CompletedQuery, telemetry: &Telemetry) {
     let e2e = done.meta.emitted.elapsed();
     telemetry.e2e.record(e2e);
     telemetry.queueing.record(done.min_queue_wait);
@@ -815,8 +1016,8 @@ fn finish(done: CompletedQuery, n_models: usize, telemetry: &Telemetry) {
         patient: done.meta.patient,
         window_id: done.meta.window_id,
         sim_end: done.meta.sim_end,
-        score: done.score_sum / n_models as f64,
-        n_models,
+        score: done.score_sum / done.n_members as f64,
+        n_models: done.n_members,
         e2e,
         queueing: done.min_queue_wait,
     };
@@ -891,6 +1092,39 @@ mod tests {
         assert!(rx.recv().is_err());
         // a straggler member score for the evicted query is dropped
         assert!(matches!(slots.score(3, 1, 0.5, Duration::ZERO), ScoreOutcome::Absent));
+    }
+
+    #[test]
+    fn insert_with_completes_under_admission_member_set() {
+        let slots = PendingSlots::with_capacity(4, 4);
+        // admit under a 2-member epoch {1, 3} of a 4-lane universe
+        let members = Arc::new(MemberSet::new(5, vec![3, 1]));
+        assert_eq!(members.positions(), &[1, 3], "positions sort + dedup");
+        slots.insert_with(9, meta(), members);
+        assert!(matches!(
+            slots.score(9, 3, 0.5, Duration::from_millis(2)),
+            ScoreOutcome::Accepted
+        ));
+        match slots.score(9, 1, 0.25, Duration::from_millis(1)) {
+            ScoreOutcome::Completed(done) => {
+                let want = 0.25f32 as f64 + 0.5f32 as f64;
+                assert_eq!(done.score_sum.to_bits(), want.to_bits());
+                assert_eq!(done.n_members, 2, "denominator is the admission epoch's size");
+                assert_eq!(done.min_queue_wait, Duration::from_millis(1));
+            }
+            _ => panic!("second member of a 2-member epoch must complete the query"),
+        }
+        assert_eq!(slots.len(), 0);
+    }
+
+    #[test]
+    fn member_set_full_and_contains() {
+        let full = MemberSet::full(3);
+        assert_eq!(full.epoch(), 0);
+        assert_eq!(full.positions(), &[0, 1, 2]);
+        assert_eq!(full.len(), 3);
+        let sub = MemberSet::new(2, vec![2, 0]);
+        assert!(sub.contains(0) && !sub.contains(1) && sub.contains(2));
     }
 
     #[test]

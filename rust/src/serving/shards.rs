@@ -45,7 +45,11 @@ pub const DEFAULT_SHARD_QUEUE: usize = 4096;
 /// paper's clip length) — without a cap, one 4 MiB `/ingest.bin` body
 /// of minimal frames with distinct ids could pin gigabytes. 1024
 /// patients/shard is 10× the paper's 100-bed target even on a single
-/// shard; frames for patients past the cap are counted as dropped.
+/// shard. A new id past the cap evicts the least-recently-updated
+/// *idle* aggregator (one with no partially filled window) — admission
+/// churn, counted in `Telemetry::patients_evicted` — so a discharged
+/// bed's stale id can never starve a newly admitted patient forever;
+/// only when every tracked patient is mid-window is the frame dropped.
 pub const DEFAULT_SHARD_PATIENTS: usize = 1024;
 
 /// Shard-plane construction parameters.
@@ -200,24 +204,49 @@ fn shard_loop<S: FnMut(WindowData)>(
     // on each other's free lists)
     let pool = LeadPool::new(window_samples);
     let mut aggs: HashMap<usize, WindowAggregator> = HashMap::new();
+    // recency ledger for the over-cap eviction policy: monotone
+    // per-frame sequence, bumped for every frame a patient's aggregator
+    // accepts. Separate from `aggs` so eviction scans stay allocation-
+    // free.
+    let mut last_touch: HashMap<usize, u64> = HashMap::new();
+    let mut touch_seq: u64 = 0;
     for frame in rx {
         let t0 = Instant::now();
         telemetry.frames.fetch_add(1, Ordering::Relaxed);
         // bound aggregator state against hostile/garbage patient ids:
-        // past `max_patients` distinct ids, further ids are dropped
-        // (and counted) instead of allocating a fresh aggregator
+        // past `max_patients` distinct ids, a new id evicts the
+        // least-recently-updated IDLE aggregator (no partial window in
+        // flight — evicting mid-window would lose a real patient's
+        // buffered samples). With every tracked patient mid-window the
+        // frame is dropped and counted, as before.
         if !aggs.contains_key(&frame.patient) {
             if aggs.len() >= max_patients {
-                dropped[shard].fetch_add(1, Ordering::Relaxed);
-                telemetry.frames_dropped.fetch_add(1, Ordering::Relaxed);
-                telemetry.ingest.record(t0.elapsed());
-                continue;
+                let victim = aggs
+                    .iter()
+                    .filter(|(_, a)| a.fill() == 0)
+                    .map(|(&p, _)| (last_touch.get(&p).copied().unwrap_or(0), p))
+                    .min();
+                match victim {
+                    Some((_, victim)) => {
+                        aggs.remove(&victim);
+                        last_touch.remove(&victim);
+                        telemetry.patients_evicted.fetch_add(1, Ordering::Relaxed);
+                    }
+                    None => {
+                        dropped[shard].fetch_add(1, Ordering::Relaxed);
+                        telemetry.frames_dropped.fetch_add(1, Ordering::Relaxed);
+                        telemetry.ingest.record(t0.elapsed());
+                        continue;
+                    }
+                }
             }
             aggs.insert(
                 frame.patient,
                 WindowAggregator::with_pool(frame.patient, window_samples, pool.clone()),
             );
         }
+        touch_seq += 1;
+        last_touch.insert(frame.patient, touch_seq);
         let agg = aggs.get_mut(&frame.patient).expect("inserted above");
         let dropped_before = agg.dropped();
         let window = agg.push(&frame);
@@ -311,7 +340,7 @@ mod tests {
     }
 
     #[test]
-    fn patient_cap_bounds_aggregator_state() {
+    fn patient_cap_evicts_least_recently_updated_idle_aggregator() {
         let tel = Arc::new(Telemetry::default());
         let windows = Arc::new(Mutex::new(Vec::new()));
         let (router, tx) = ShardRouter::spawn(
@@ -324,22 +353,54 @@ mod tests {
             },
         )
         .unwrap();
-        // patients 0 and 1 claim the two slots; a flood of fresh ids
-        // (a hostile wire body) is refused, not allocated
+        // patients 0 and 1 claim the two slots; window_samples = 1, so
+        // every accepted ECG frame completes a window and leaves its
+        // aggregator idle — each fresh id then evicts the LRU idle slot
+        // instead of being starved forever
+        for p in 0..2 {
+            tx.send(ecg(p, 1.0)).unwrap();
+        }
+        for fresh in 100..140 {
+            tx.send(ecg(fresh, 9.9)).unwrap();
+        }
+        // an evicted patient re-admits the same way (churn, not a ban)
+        tx.send(ecg(0, 2.0)).unwrap();
+        drop(tx);
+        let dropped = router.join().unwrap();
+        assert_eq!(dropped, vec![0], "idle eviction admits every new id — nothing dropped");
+        assert_eq!(tel.frames_dropped.load(Ordering::Relaxed), 0);
+        // 40 fresh ids + patient 0's re-admission each evicted one slot
+        assert_eq!(tel.patients_evicted.load(Ordering::Relaxed), 41);
+        let mut want: Vec<usize> = vec![0, 1];
+        want.extend(100..140);
+        want.push(0);
+        assert_eq!(*windows.lock().unwrap(), want);
+    }
+
+    #[test]
+    fn patient_cap_never_evicts_mid_window_aggregators() {
+        let tel = Arc::new(Telemetry::default());
+        let (router, tx) = ShardRouter::spawn(
+            ShardConfig { shards: 1, queue_depth: 64, max_patients: 2 },
+            4,
+            Arc::clone(&tel),
+            |_| |_w: WindowData| {},
+        )
+        .unwrap();
+        // window_samples = 4: one frame each leaves patients 0 and 1
+        // mid-window (fill = 1) — their buffered samples must survive a
+        // hostile id flood, which is dropped as before
         for p in 0..2 {
             tx.send(ecg(p, 1.0)).unwrap();
         }
         for hostile in 100..140 {
             tx.send(ecg(hostile, 9.9)).unwrap();
         }
-        // known patients keep serving: window_samples = 1 → a window
-        // per accepted ECG frame
-        tx.send(ecg(0, 2.0)).unwrap();
         drop(tx);
         let dropped = router.join().unwrap();
-        assert_eq!(dropped, vec![40], "every over-cap id counts as dropped");
+        assert_eq!(dropped, vec![40], "no idle victim → over-cap ids drop");
         assert_eq!(tel.frames_dropped.load(Ordering::Relaxed), 40);
-        assert_eq!(*windows.lock().unwrap(), vec![0usize, 1, 0]);
+        assert_eq!(tel.patients_evicted.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! throughput counters. Lock-light: one mutex per histogram, updated
 //! once per query.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Duration;
 
@@ -213,6 +213,11 @@ pub struct ExecutorGauges {
     /// the static `timeout` on a non-adaptive pipeline, the live
     /// adapted deadline under `--adaptive-batch`.
     fill_waits: Arc<[AtomicU64]>,
+    /// Per-lane dead flags — a true entry is a lane whose backend
+    /// failed and is (pending governor action) out of service.
+    dead: Arc<[AtomicBool]>,
+    /// Per-lane transient-error retries (the bounded in-flush retry).
+    retries: Arc<[AtomicU64]>,
 }
 
 impl ExecutorGauges {
@@ -221,10 +226,14 @@ impl ExecutorGauges {
         depths: Arc<[AtomicUsize]>,
         batches: Arc<[AtomicU64]>,
         fill_waits: Arc<[AtomicU64]>,
+        dead: Arc<[AtomicBool]>,
+        retries: Arc<[AtomicU64]>,
     ) -> Self {
         assert_eq!(models.len(), depths.len(), "one depth gauge per lane");
         assert_eq!(models.len(), fill_waits.len(), "one fill-wait gauge per lane");
-        ExecutorGauges { models, depths, batches, fill_waits }
+        assert_eq!(models.len(), dead.len(), "one dead flag per lane");
+        assert_eq!(models.len(), retries.len(), "one retry counter per lane");
+        ExecutorGauges { models, depths, batches, fill_waits, dead, retries }
     }
 
     pub fn models(&self) -> &[usize] {
@@ -246,6 +255,42 @@ impl ExecutorGauges {
     pub fn fill_waits_ns(&self) -> Vec<u64> {
         self.fill_waits.iter().map(|w| w.load(Ordering::Relaxed)).collect()
     }
+
+    /// Dead flag per lane (same order as [`Self::models`]).
+    pub fn dead_lanes(&self) -> Vec<bool> {
+        self.dead.iter().map(|d| d.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Transient-error retries per lane (same order as
+    /// [`Self::models`]).
+    pub fn retries(&self) -> Vec<u64> {
+        self.retries.iter().map(|r| r.load(Ordering::Relaxed)).collect()
+    }
+}
+
+/// Live gauges of the ensemble governor's control loop: the current
+/// membership epoch, how many members are active, swap/degrade/
+/// quarantine counters. Installed into [`Telemetry`] by
+/// `Governor::spawn`; absent on an ungoverned pipeline.
+#[derive(Debug, Default)]
+pub struct GovernorGauges {
+    /// Membership epoch last installed (0 = the spawn-time full set).
+    pub epoch: AtomicU64,
+    /// Members in the active set under that epoch.
+    pub active_members: AtomicUsize,
+    /// Membership installs performed (recompose, degrade, quarantine,
+    /// reinstate — every hot swap counts once).
+    pub swaps: AtomicU64,
+    /// 1 while serving from the degraded-mode floor, else 0.
+    pub degraded: AtomicU64,
+    /// Times the governor stepped down to the floor, lifetime.
+    pub degraded_entered: AtomicU64,
+    /// Lanes currently quarantined (dead and awaiting canary success).
+    pub quarantined: AtomicUsize,
+    /// Canary probes attempted, lifetime.
+    pub probes: AtomicU64,
+    /// Lanes revived after a successful canary, lifetime.
+    pub reinstated: AtomicU64,
 }
 
 /// Live gauges of the event-driven ingest edge, shared with its event
@@ -296,6 +341,10 @@ pub struct Telemetry {
     pub frames_dropped: AtomicU64,
     /// Queries evicted because a member could not score them.
     pub failures: AtomicU64,
+    /// Idle patient aggregators evicted (least-recently-updated) to
+    /// admit new patients past `ShardConfig::max_patients` — admission
+    /// churn made visible instead of silently starving new patients.
+    pub patients_evicted: AtomicU64,
     /// Live HTTP connections on the ingest edge. Doubles as the
     /// connection gate: both edges increment at accept and refuse with
     /// `503` past [`HttpConfig::max_connections`]
@@ -314,6 +363,9 @@ pub struct Telemetry {
     /// Ingest-edge gauges, installed once by the epoll edge (absent on
     /// the thread-per-conn fallback and for non-HTTP ingestion).
     edge: OnceLock<EdgeGauges>,
+    /// Governor gauges, installed once by `Governor::spawn` (absent on
+    /// an ungoverned pipeline).
+    governor: OnceLock<Arc<GovernorGauges>>,
 }
 
 impl Telemetry {
@@ -337,21 +389,51 @@ impl Telemetry {
         self.edge.get()
     }
 
+    /// Attach the governor's live gauges (once; later installs are
+    /// ignored, matching a pipeline's one-governor lifetime).
+    pub fn install_governor(&self, gauges: Arc<GovernorGauges>) {
+        let _ = self.governor.set(gauges);
+    }
+
+    pub fn governor(&self) -> Option<&Arc<GovernorGauges>> {
+        self.governor.get()
+    }
+
     pub fn snapshot(&self) -> TelemetrySnapshot {
-        let (models, queue_depths, worker_batches, fill_waits) = match self.executor.get() {
-            Some(g) => (
-                g.models().iter().map(|&m| m as u64).collect(),
-                g.queue_depths(),
-                g.worker_batches(),
-                g.fill_waits_ns(),
-            ),
-            None => (Vec::new(), Vec::new(), Vec::new(), Vec::new()),
-        };
+        let (models, queue_depths, worker_batches, fill_waits, dead_lanes, retries) =
+            match self.executor.get() {
+                Some(g) => (
+                    g.models().iter().map(|&m| m as u64).collect(),
+                    g.queue_depths(),
+                    g.worker_batches(),
+                    g.fill_waits_ns(),
+                    g.dead_lanes().iter().map(|&d| u64::from(d)).collect(),
+                    g.retries(),
+                ),
+                None => (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new()),
+            };
+        let gov = self.governor.get();
         TelemetrySnapshot {
             executor_models: models,
             queue_depth_per_model: queue_depths,
             batches_per_worker: worker_batches,
             fill_wait_ns_per_model: fill_waits,
+            dead_lanes,
+            retries_per_model: retries,
+            governor_epoch: gov.map(|g| g.epoch.load(Ordering::Relaxed)).unwrap_or(0),
+            governor_active_members: gov
+                .map(|g| g.active_members.load(Ordering::Relaxed) as u64)
+                .unwrap_or(0),
+            governor_swaps: gov.map(|g| g.swaps.load(Ordering::Relaxed)).unwrap_or(0),
+            governor_degraded: gov.map(|g| g.degraded.load(Ordering::Relaxed)).unwrap_or(0),
+            governor_degraded_entered: gov
+                .map(|g| g.degraded_entered.load(Ordering::Relaxed))
+                .unwrap_or(0),
+            governor_quarantined: gov
+                .map(|g| g.quarantined.load(Ordering::Relaxed) as u64)
+                .unwrap_or(0),
+            governor_probes: gov.map(|g| g.probes.load(Ordering::Relaxed)).unwrap_or(0),
+            governor_reinstated: gov.map(|g| g.reinstated.load(Ordering::Relaxed)).unwrap_or(0),
             conns_active: self.conns_active.load(Ordering::Relaxed) as u64,
             conns_accepted: self.conns_accepted.load(Ordering::Relaxed),
             conns_refused: self.conns_refused.load(Ordering::Relaxed),
@@ -362,6 +444,7 @@ impl Telemetry {
             frames: self.frames.load(Ordering::Relaxed),
             frames_dropped: self.frames_dropped.load(Ordering::Relaxed),
             failures: self.failures.load(Ordering::Relaxed),
+            patients_evicted: self.patients_evicted.load(Ordering::Relaxed),
             e2e_mean: self.e2e.mean(),
             e2e_p50: self.e2e.percentile(50.0),
             e2e_p95: self.e2e.percentile(95.0),
@@ -387,6 +470,20 @@ pub struct TelemetrySnapshot {
     /// Last armed batch fill wait per lane, ns (static timeout, or the
     /// adapted deadline under `--adaptive-batch`).
     pub fill_wait_ns_per_model: Vec<u64>,
+    /// 0/1 per lane: 1 = the lane's backend failed and the lane is out
+    /// of service (quarantined until the governor revives it).
+    pub dead_lanes: Vec<u64>,
+    /// Transient-error retries per lane.
+    pub retries_per_model: Vec<u64>,
+    /// Governor state (all zero on an ungoverned pipeline).
+    pub governor_epoch: u64,
+    pub governor_active_members: u64,
+    pub governor_swaps: u64,
+    pub governor_degraded: u64,
+    pub governor_degraded_entered: u64,
+    pub governor_quarantined: u64,
+    pub governor_probes: u64,
+    pub governor_reinstated: u64,
     /// Live HTTP connections on the ingest edge.
     pub conns_active: u64,
     /// Connections accepted / refused (503) / idle-reaped, lifetime.
@@ -401,6 +498,8 @@ pub struct TelemetrySnapshot {
     pub frames: u64,
     pub frames_dropped: u64,
     pub failures: u64,
+    /// Idle patient aggregators evicted for admission churn.
+    pub patients_evicted: u64,
     pub e2e_mean: f64,
     pub e2e_p50: f64,
     pub e2e_p95: f64,
@@ -421,6 +520,16 @@ impl TelemetrySnapshot {
             ("queue_depth_per_model", nums(&self.queue_depth_per_model)),
             ("batches_per_worker", nums(&self.batches_per_worker)),
             ("fill_wait_ns_per_model", nums(&self.fill_wait_ns_per_model)),
+            ("dead_lanes", nums(&self.dead_lanes)),
+            ("retries_per_model", nums(&self.retries_per_model)),
+            ("governor_epoch", Value::Num(self.governor_epoch as f64)),
+            ("governor_active_members", Value::Num(self.governor_active_members as f64)),
+            ("governor_swaps", Value::Num(self.governor_swaps as f64)),
+            ("governor_degraded", Value::Num(self.governor_degraded as f64)),
+            ("governor_degraded_entered", Value::Num(self.governor_degraded_entered as f64)),
+            ("governor_quarantined", Value::Num(self.governor_quarantined as f64)),
+            ("governor_probes", Value::Num(self.governor_probes as f64)),
+            ("governor_reinstated", Value::Num(self.governor_reinstated as f64)),
             ("conns_active", Value::Num(self.conns_active as f64)),
             ("conns_accepted", Value::Num(self.conns_accepted as f64)),
             ("conns_refused", Value::Num(self.conns_refused as f64)),
@@ -431,6 +540,7 @@ impl TelemetrySnapshot {
             ("frames", Value::Num(self.frames as f64)),
             ("frames_dropped", Value::Num(self.frames_dropped as f64)),
             ("failures", Value::Num(self.failures as f64)),
+            ("patients_evicted", Value::Num(self.patients_evicted as f64)),
             ("e2e_mean", Value::Num(self.e2e_mean)),
             ("e2e_p50", Value::Num(self.e2e_p50)),
             ("e2e_p95", Value::Num(self.e2e_p95)),
@@ -564,9 +674,43 @@ mod tests {
         assert!(s.contains("queue_depth_per_model"));
         assert!(s.contains("batches_per_worker"));
         assert!(s.contains("fill_wait_ns_per_model"));
+        assert!(s.contains("dead_lanes"));
+        assert!(s.contains("retries_per_model"));
+        assert!(s.contains("patients_evicted"));
+        assert!(s.contains("governor_epoch"));
+        assert!(s.contains("governor_reinstated"));
         assert!(s.contains("conns_active"));
         assert!(s.contains("conns_accepted"));
         assert!(s.contains("edge_ready_events"));
+    }
+
+    #[test]
+    fn governor_gauges_surface_in_snapshot() {
+        let t = Telemetry::default();
+        assert!(t.governor().is_none());
+        assert_eq!(t.snapshot().governor_swaps, 0);
+        let g = Arc::new(GovernorGauges::default());
+        t.install_governor(Arc::clone(&g));
+        g.epoch.store(3, Ordering::Relaxed);
+        g.active_members.store(2, Ordering::Relaxed);
+        g.swaps.store(4, Ordering::Relaxed);
+        g.degraded.store(1, Ordering::Relaxed);
+        g.degraded_entered.store(1, Ordering::Relaxed);
+        g.quarantined.store(1, Ordering::Relaxed);
+        g.probes.store(5, Ordering::Relaxed);
+        g.reinstated.store(1, Ordering::Relaxed);
+        let snap = t.snapshot();
+        assert_eq!(snap.governor_epoch, 3);
+        assert_eq!(snap.governor_active_members, 2);
+        assert_eq!(snap.governor_swaps, 4);
+        assert_eq!(snap.governor_degraded, 1);
+        assert_eq!(snap.governor_degraded_entered, 1);
+        assert_eq!(snap.governor_quarantined, 1);
+        assert_eq!(snap.governor_probes, 5);
+        assert_eq!(snap.governor_reinstated, 1);
+        // live view, not a copy
+        g.swaps.store(9, Ordering::Relaxed);
+        assert_eq!(t.snapshot().governor_swaps, 9);
     }
 
     #[test]
@@ -599,20 +743,28 @@ mod tests {
         let depths: Arc<[AtomicUsize]> = (0..2).map(|_| AtomicUsize::new(0)).collect();
         let batches: Arc<[AtomicU64]> = (0..3).map(|_| AtomicU64::new(0)).collect();
         let waits: Arc<[AtomicU64]> = (0..2).map(|_| AtomicU64::new(0)).collect();
+        let dead: Arc<[AtomicBool]> = (0..2).map(|_| AtomicBool::new(false)).collect();
+        let retries: Arc<[AtomicU64]> = (0..2).map(|_| AtomicU64::new(0)).collect();
         t.install_executor(ExecutorGauges::new(
             vec![4, 7],
             Arc::clone(&depths),
             Arc::clone(&batches),
             Arc::clone(&waits),
+            Arc::clone(&dead),
+            Arc::clone(&retries),
         ));
         depths[1].store(5, Ordering::Relaxed);
         batches[0].store(9, Ordering::Relaxed);
         waits[0].store(1_000_000, Ordering::Relaxed);
+        dead[1].store(true, Ordering::Relaxed);
+        retries[0].store(2, Ordering::Relaxed);
         let snap = t.snapshot();
         assert_eq!(snap.executor_models, vec![4, 7]);
         assert_eq!(snap.queue_depth_per_model, vec![0, 5]);
         assert_eq!(snap.batches_per_worker, vec![9, 0, 0]);
         assert_eq!(snap.fill_wait_ns_per_model, vec![1_000_000, 0]);
+        assert_eq!(snap.dead_lanes, vec![0, 1]);
+        assert_eq!(snap.retries_per_model, vec![2, 0]);
         // the gauges are live views, not copies
         depths[1].store(0, Ordering::Relaxed);
         assert_eq!(t.snapshot().queue_depth_per_model, vec![0, 0]);

@@ -1,0 +1,228 @@
+//! Governor integration tests: membership hot swaps and lane recovery
+//! on a REAL pipeline.
+//!
+//! 1. **Swap determinism** — a scripted swap schedule (installs
+//!    interleaved with admissions on the router's FIFO channel) must
+//!    produce bit-for-bit identical predictions and window ids for 1,
+//!    2 and 8 pool workers, each matching an analytic reference that
+//!    applies epoch semantics by hand: a query admitted under epoch E
+//!    is scored by exactly E's member set, no matter what epochs
+//!    follow or how the executor schedules the batches.
+//! 2. **Quarantine → reinstate round trip** — a scripted backend fault
+//!    kills a lane; the governor must swap it out of the membership
+//!    (queries keep completing on the survivors), re-probe it with
+//!    canary batches while it is down, and swap it back in after the
+//!    fault clears — with zero in-flight queries dropped.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use holmes::runtime::backend::sim_score;
+use holmes::runtime::{Engine, SimBackend};
+use holmes::serving::pipeline::{Pipeline, PipelineConfig, Query};
+use holmes::serving::{Governor, GovernorConfig};
+use holmes::zoo::{testkit, Selector, Zoo};
+
+const CLIP: usize = 400;
+const PATIENTS: usize = 5;
+/// Lane universe: zoo models per lane position (model-index order).
+const MEMBERS: [usize; 4] = [0, 1, 2, 3];
+
+/// The scripted swap schedule: window w is admitted under this member
+/// set (lane positions into MEMBERS). Window 0 rides epoch 0 (the full
+/// spawn-time universe); each later window is preceded by one install.
+const SCHEDULE: [&[usize]; 4] = [&[0, 1, 2, 3], &[1, 3], &[0, 2, 3], &[2]];
+
+fn toy() -> Zoo {
+    testkit::toy_zoo_with(9, 64, 5, CLIP, &[1, 8])
+}
+
+fn lead_sample(patient: usize, lead: usize, i: usize) -> f32 {
+    ((patient * 31 + lead * 7 + i) as f32 * 0.01).sin()
+}
+
+fn window_leads(patient: usize, w: usize) -> [Vec<f32>; 3] {
+    let mut leads: [Vec<f32>; 3] = Default::default();
+    for (l, lead) in leads.iter_mut().enumerate() {
+        *lead = (w * CLIP..(w + 1) * CLIP).map(|i| lead_sample(patient, l, i)).collect();
+    }
+    leads
+}
+
+/// Epoch semantics applied analytically: window w's score is the
+/// bagging mean over exactly SCHEDULE[w]'s member models.
+fn reference() -> HashMap<(usize, u64), (u64, usize)> {
+    let zoo = toy();
+    let mut out = HashMap::new();
+    for (w, members) in SCHEDULE.iter().enumerate() {
+        for p in 0..PATIENTS {
+            let leads = window_leads(p, w);
+            let sum: f64 = members
+                .iter()
+                .map(|&pos| {
+                    let m = MEMBERS[pos];
+                    sim_score(m, &leads[zoo.model(m).lead]) as f64
+                })
+                .sum();
+            let score = sum / members.len() as f64;
+            out.insert((p, w as u64), (score.to_bits(), members.len()));
+        }
+    }
+    out
+}
+
+/// Drive the scripted schedule: admissions and installs interleave on
+/// the router's FIFO channel from this one thread, so which epoch each
+/// query is admitted under is fixed by construction — then all replies
+/// are collected at the end, with every query in flight concurrently
+/// enough for batching and stealing to actually interleave.
+fn run_schedule(n_workers: usize) -> HashMap<(usize, u64), (u64, usize)> {
+    let zoo = toy();
+    let engine = Engine::with_backend(&zoo, 2, Arc::new(SimBackend::instant(&zoo))).unwrap();
+    let ensemble = Selector::from_indices(zoo.n(), MEMBERS);
+    let pipeline = Pipeline::spawn(
+        &zoo,
+        &engine,
+        PipelineConfig::new(ensemble).with_workers(n_workers),
+    )
+    .unwrap();
+
+    let mut replies = Vec::new();
+    for (w, members) in SCHEDULE.iter().enumerate() {
+        if w > 0 {
+            let set = pipeline.install_membership(members).unwrap();
+            assert_eq!(set.epoch(), w as u64, "one install per window");
+            assert_eq!(set.positions(), *members);
+        }
+        for p in 0..PATIENTS {
+            let q = Query::from_vecs(p, w as u64, 0.0, window_leads(p, w));
+            replies.push(((p, w as u64), pipeline.submit(q).unwrap()));
+        }
+    }
+    // the mirror tracks the last install
+    assert_eq!(pipeline.membership().positions(), *SCHEDULE.last().unwrap());
+
+    let mut out = HashMap::new();
+    for ((p, w), rx) in replies {
+        let pred = rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|e| panic!("{n_workers} workers: patient {p} window {w}: {e:?}"));
+        assert_eq!(pred.patient, p);
+        assert_eq!(pred.window_id, w);
+        out.insert((p, w), (pred.score.to_bits(), pred.n_models));
+    }
+    assert_eq!(pipeline.pending_len(), 0, "no in-flight query dropped by the swaps");
+    out
+}
+
+#[test]
+fn scripted_swap_schedule_is_bit_identical_for_any_worker_count() {
+    let want = reference();
+    for n_workers in [1, 2, 8] {
+        let got = run_schedule(n_workers);
+        assert_eq!(got.len(), want.len(), "{n_workers} workers: every query answered");
+        for (key, expected) in &want {
+            assert_eq!(
+                got.get(key),
+                Some(expected),
+                "{n_workers} workers: {key:?} must complete under its admission epoch"
+            );
+        }
+    }
+}
+
+#[test]
+fn dead_lane_is_quarantined_served_around_and_reinstated() {
+    let zoo = toy();
+    let universe = [0usize, 1, 2];
+    let faulty_model = universe[1];
+    let flag = Arc::new(AtomicBool::new(false));
+    let engine = Engine::with_backend(
+        &zoo,
+        2,
+        Arc::new(SimBackend::instant(&zoo).faulty_when(faulty_model, Arc::clone(&flag))),
+    )
+    .unwrap();
+    let ensemble = Selector::from_indices(zoo.n(), universe);
+    let pipeline =
+        Pipeline::spawn(&zoo, &engine, PipelineConfig::new(ensemble).with_workers(2)).unwrap();
+    let governor = Governor::spawn(
+        &zoo,
+        &pipeline,
+        GovernorConfig {
+            tick: Duration::from_millis(5),
+            backoff_init_ticks: 1,
+            backoff_max_ticks: 4,
+            recompose_every: 0, // pure quarantine/degrade loop, no composer
+            ..GovernorConfig::default()
+        },
+    )
+    .unwrap();
+    let gauges = Arc::clone(governor.gauges());
+
+    let score_of = |members: &[usize], p: usize, w: usize| -> f64 {
+        let leads = window_leads(p, w);
+        let sum: f64 = members
+            .iter()
+            .map(|&m| sim_score(m, &leads[zoo.model(m).lead]) as f64)
+            .sum();
+        sum / members.len() as f64
+    };
+    let wait_for = |what: &str, cond: &dyn Fn() -> bool| {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !cond() {
+            assert!(Instant::now() < deadline, "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    };
+
+    // healthy: full member set
+    let pred = pipeline.query(Query::from_vecs(0, 0, 0.0, window_leads(0, 0))).unwrap();
+    assert_eq!(pred.n_models, 3);
+    assert_eq!(pred.score.to_bits(), score_of(&universe, 0, 0).to_bits());
+
+    // fault the lane; the query riding it is evicted (its caller sees a
+    // hang-up, counted as a failure) and the lane dies
+    flag.store(true, Ordering::Relaxed);
+    let rx = pipeline.submit(Query::from_vecs(1, 1, 0.0, window_leads(1, 1))).unwrap();
+    assert!(
+        rx.recv_timeout(Duration::from_secs(10)).is_err(),
+        "a query admitted under the full set loses its faulted member and must fail"
+    );
+    // the governor swaps the dead lane out within a few ticks
+    wait_for("the dead lane to leave the membership", &|| {
+        pipeline.membership().positions() == [0, 2]
+    });
+    wait_for("the quarantine gauge", &|| gauges.quarantined.load(Ordering::Relaxed) == 1);
+
+    // served around the quarantine: new queries complete on survivors
+    let pred = pipeline.query(Query::from_vecs(2, 2, 0.0, window_leads(2, 2))).unwrap();
+    assert_eq!(pred.n_models, 2);
+    assert_eq!(
+        pred.score.to_bits(),
+        score_of(&[universe[0], universe[2]], 2, 2).to_bits()
+    );
+    // canaries are probing (and failing) on exponential backoff
+    wait_for("a failed canary probe", &|| gauges.probes.load(Ordering::Relaxed) >= 1);
+    assert_eq!(gauges.reinstated.load(Ordering::Relaxed), 0);
+
+    // heal the backend: the next canary revives the lane and the
+    // governor swaps it back in
+    flag.store(false, Ordering::Relaxed);
+    wait_for("the healed lane to rejoin", &|| {
+        pipeline.membership().positions() == [0, 1, 2]
+    });
+    assert!(gauges.reinstated.load(Ordering::Relaxed) >= 1);
+    assert_eq!(gauges.quarantined.load(Ordering::Relaxed), 0);
+
+    // fully recovered: the full member set serves again
+    let pred = pipeline.query(Query::from_vecs(3, 3, 0.0, window_leads(3, 3))).unwrap();
+    assert_eq!(pred.n_models, 3);
+    assert_eq!(pred.score.to_bits(), score_of(&universe, 3, 3).to_bits());
+
+    assert_eq!(pipeline.pending_len(), 0, "nothing left in flight");
+    drop(governor);
+    drop(pipeline);
+}
