@@ -131,6 +131,17 @@ pub struct BedsideReport {
     pub frames_dropped: u64,
     /// Per-shard breakdown of `frames_dropped`.
     pub dropped_per_shard: Vec<u64>,
+    /// `frames_dropped` split by cause: payload-arity rejects.
+    pub frames_dropped_malformed: u64,
+    /// `frames_dropped` split by cause: shard at capacity with every
+    /// tracked aggregator mid-window.
+    pub frames_dropped_overcap: u64,
+    /// ECG frames shed for arriving behind the window position
+    /// (out-of-order / skewed monitor clocks).
+    pub frames_stale: u64,
+    /// Transport-level reconnects the ingest clients performed (HTTP
+    /// runs only — dropped monitor links redialing with backoff).
+    pub client_reconnects: u64,
     /// Device batches executed by each executor pool worker — a skewed
     /// vector means the work-stealing pool was imbalanced.
     pub batches_per_worker: Vec<u64>,
@@ -326,10 +337,12 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
     }
     let mut gen_handles = Vec::new();
     let http_addr = http.as_ref().map(|s| s.addr);
+    let reconnects = Arc::new(AtomicU64::new(0));
     for mut sim in sims.drain(..) {
         let tx = frame_tx.clone();
         let clock = VirtualClock::new(cfg.speedup);
         let duration = cfg.duration_s;
+        let reconnects = Arc::clone(&reconnects);
         gen_handles.push(std::thread::spawn(move || {
             // over-the-wire mode: one keep-alive binary ingest client
             // per bedside monitor, one POST per simulated second
@@ -364,9 +377,13 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
                     None => batch.iter().all(|f| tx.send(*f).is_ok()),
                 };
                 if !delivered {
-                    return;
+                    break;
                 }
                 sim_t += 1.0;
+            }
+            // count the monitor's redials even when it bailed early
+            if let Some(c) = client.as_ref() {
+                reconnects.fetch_add(c.reconnects(), Ordering::Relaxed);
             }
         }));
     }
@@ -491,6 +508,10 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
         frames,
         frames_dropped,
         dropped_per_shard,
+        frames_dropped_malformed: telemetry.frames_dropped_malformed.load(ordering),
+        frames_dropped_overcap: telemetry.frames_dropped_overcap.load(ordering),
+        frames_stale: telemetry.frames_stale.load(ordering),
+        client_reconnects: reconnects.load(ordering),
         batches_per_worker,
         fill_wait_ns_per_model,
         conns_accepted: telemetry.conns_accepted.load(ordering),
@@ -524,6 +545,10 @@ fn print_report(r: &BedsideReport, telemetry: &Telemetry) {
     println!("\n── bedside report ──────────────────────────");
     println!("frames ingested      {:>12}", r.frames);
     println!("frames dropped       {:>12}  (per shard: {:?})", r.frames_dropped, r.dropped_per_shard);
+    println!(
+        "  by cause           {:>12}  malformed, {} over-cap, {} stale",
+        r.frames_dropped_malformed, r.frames_dropped_overcap, r.frames_stale
+    );
     println!("patients evicted     {:>12}  (idle aggregators past the shard cap)", r.patients_evicted);
     println!("ensemble predictions {:>12}", r.predictions);
     println!(
@@ -564,6 +589,10 @@ fn print_report(r: &BedsideReport, telemetry: &Telemetry) {
         println!(
             "edge connections     {:>12}  (refused: {}, reaped: {})",
             r.conns_accepted, r.conns_refused, r.conns_reaped
+        );
+        println!(
+            "client reconnects    {:>12}  (monitor links redialed with backoff)",
+            r.client_reconnects
         );
         if !r.edge_ready_events.is_empty() {
             println!("edge ready events    {:>12?}  (per event loop)", r.edge_ready_events);

@@ -1,0 +1,819 @@
+//! Deterministic adversarial cohort replay: `holmes replay`.
+//!
+//! Drives the full serving pipeline (shard plane → ensemble executor →
+//! completer, optionally through the real HTTP ingest edge) with one of
+//! the seeded fault scenarios from [`crate::ingest::scenario`], then
+//! holds the run's telemetry against the scenario's precomputed
+//! [`FaultBudget`] counter for counter. The point is not to *observe*
+//! what churn, clock skew, or a hostile client does to the system — it
+//! is to **assert** it: every scenario declares machine-checkable
+//! invariants ("every admitted query resolves", "shed counters equal
+//! the injected fault budget exactly", "the p95 is back under the SLO
+//! after the fault clears", "the governor degraded when the tail
+//! breached") and [`check_invariants`] turns any miss into a violation
+//! the binary exits nonzero on. Three scenarios run seeded in CI beside
+//! the bedside smokes.
+//!
+//! Determinism contract: with the same `(scenario, seed)` the
+//! accounting — shed/evict/window/prediction counts **and** the
+//! prediction score fingerprint — is bit-identical across shard and
+//! worker counts (property-tested in `tests/replay.rs`). This holds
+//! because per-patient frame order is preserved end to end, per-patient
+//! decisions depend only on that order, scores are bagged in
+//! model-index order, and the one scenario that exercises cross-patient
+//! state (churn's LRU eviction) drives all traffic from a single
+//! monitor. Governed runs keep their *fault* accounting deterministic
+//! but not their scores (a swap changes member sets mid-run), so the
+//! determinism tests run ungoverned.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::ingest::scenario::{
+    budget, monitors, FaultBudget, Scenario, ScenarioCfg, CHURN_CAP_TOTAL,
+};
+use crate::ingest::synth::SynthConfig;
+use crate::ingest::VirtualClock;
+use crate::profiler::ServiceTimes;
+use crate::runtime::{Engine, SimBackend};
+use crate::serving::pipeline::{Pipeline, PipelineConfig, Query};
+use crate::serving::shards::{ShardConfig, ShardRouter};
+use crate::serving::{Governor, GovernorConfig};
+use crate::zoo::Zoo;
+use crate::{Error, Result};
+
+/// Burst-storm service-time multiplier: heavy enough that the ghost
+/// wave visibly backs the executor up, light enough that the backlog
+/// drains and the recovery-phase p95 invariant can hold (the chaos
+/// smoke's 32× is deliberately harsher — it *wants* an SLO breach).
+pub const STORM_TIME_SCALE: f64 = 8.0;
+
+/// Hostile-edge: corrupt/truncated/NaN wire bodies the byte-level
+/// driver posts — every one must come back `400` without disturbing
+/// the cohort.
+pub const HOSTILE_BAD_BODIES: u64 = 12;
+
+/// Hostile-edge: concurrent connections the flood phase opens against
+/// the edge's connection cap.
+pub const HOSTILE_FLOOD_CONNS: usize = 16;
+
+/// Hostile-edge: slow-loris connections held half-open until the edge's
+/// read-timeout sweep reaps them.
+pub const HOSTILE_LORIS_CONNS: usize = 4;
+
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    pub scenario: Scenario,
+    pub seed: u64,
+    /// Base cohort size (churn ignores this — its cohort is the
+    /// [`CHURN_UNIVERSE`](crate::ingest::scenario::CHURN_UNIVERSE)).
+    pub patients: usize,
+    /// Simulated seconds (= scenario ticks).
+    pub duration_s: u64,
+    pub speedup: f64,
+    pub gpus: usize,
+    /// Aggregation shards; 0 = 2. Churn requires a divisor of
+    /// [`CHURN_CAP_TOTAL`].
+    pub shards: usize,
+    /// Executor workers; 0 = hardware default for `gpus`.
+    pub workers: usize,
+    pub slo_ms: f64,
+    /// Stream over the HTTP ingest edge instead of in-process channels.
+    /// `hostile-edge` forces this on (auto-binding a loopback port)
+    /// because its whole point is the wire boundary.
+    pub http_addr: Option<String>,
+    pub edge_threads: usize,
+    /// Spawn the governor control plane; adds the degrade-on-breach
+    /// invariant but makes scores nondeterministic across runs.
+    pub govern: bool,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        ReplayConfig {
+            scenario: Scenario::Churn,
+            seed: 7,
+            patients: 8,
+            duration_s: 12,
+            speedup: 16.0,
+            gpus: 2,
+            shards: 0,
+            workers: 0,
+            slo_ms: 1000.0,
+            http_addr: None,
+            edge_threads: 0,
+            govern: false,
+        }
+    }
+}
+
+/// The deterministic half of a replay: everything here must reproduce
+/// bit for bit for the same `(scenario, seed)` regardless of shard or
+/// worker count.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ReplayAccounting {
+    pub frames_sent: u64,
+    /// Frames the shard plane received (`Telemetry::frames`).
+    pub frames_ingested: u64,
+    pub frames_dropped: u64,
+    pub frames_dropped_malformed: u64,
+    pub frames_dropped_overcap: u64,
+    pub frames_stale: u64,
+    pub patients_evicted: u64,
+    pub queries_submitted: u64,
+    pub predictions: u64,
+    /// Admitted queries never accounted completed or failed — must be 0.
+    pub unresolved: u64,
+    /// Order-independent fold of `hash(patient, window_id, score_bits)`
+    /// over every prediction — equal fingerprints mean the same windows
+    /// produced the same scores, bit for bit.
+    pub score_fingerprint: u64,
+}
+
+/// Client-side observations of the hostile-edge byte driver.
+#[derive(Debug, Clone, Default)]
+pub struct HostileOutcome {
+    pub bad_bodies_sent: u64,
+    /// `400`s the hostile client saw — must equal `bad_bodies_sent`.
+    pub bad_bodies_rejected: u64,
+    pub flood_conns: u64,
+    /// `503`s the flood saw — must equal the edge's over-cap refusal
+    /// counter (the flood is the scenario's only over-cap source).
+    pub flood_refused: u64,
+    /// Half-open connections held until the server reaped them.
+    pub loris_conns: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    pub scenario: Scenario,
+    pub seed: u64,
+    pub shards: usize,
+    pub workers: usize,
+    pub govern: bool,
+    pub http: bool,
+    /// What the scenario injected (predicted by the dry-run mirror).
+    pub budget: FaultBudget,
+    /// What the live run observed.
+    pub accounting: ReplayAccounting,
+    pub slo_s: f64,
+    /// Whole-run p95 (includes the fault window — may breach).
+    pub e2e_p95: f64,
+    /// p95 over predictions whose window ended after the fault cleared
+    /// ([`ScenarioCfg::recovery_start_sim`]) — must be back under SLO.
+    pub recovery_p95: f64,
+    /// Predictions in the recovery phase (0 ⇒ `recovery_p95` vacuous).
+    pub recovery_n: usize,
+    pub client_reconnects: u64,
+    pub conns_accepted: u64,
+    pub conns_refused: u64,
+    pub conns_refused_overcap: u64,
+    pub conns_refused_handshake: u64,
+    pub conns_reaped: u64,
+    pub hostile: Option<HostileOutcome>,
+    pub governor_degraded_entered: u64,
+    pub governor_swaps: u64,
+    pub wall_s: f64,
+    /// Invariant breaches ([`check_invariants`]); empty ⇒ replay passed.
+    pub violations: Vec<String>,
+}
+
+/// FNV-1a over one prediction's identity; the accounting fingerprint is
+/// the wrapping sum of these, so it is insensitive to completion order
+/// but sensitive to any change in any window's score.
+pub fn prediction_hash(patient: usize, window_id: u64, score: f64) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in (patient as u64)
+        .to_le_bytes()
+        .into_iter()
+        .chain(window_id.to_le_bytes())
+        .chain(score.to_bits().to_le_bytes())
+    {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Evaluate every scenario invariant against a finished report and
+/// return the breaches. Public (and pure) so the property suite can
+/// both assert a clean run produces none and prove a fabricated
+/// mismatch fires.
+pub fn check_invariants(r: &ReplayReport) -> Vec<String> {
+    let mut v = Vec::new();
+    let a = &r.accounting;
+    let b = &r.budget;
+    let mut eq = |what: &str, got: u64, want: u64| {
+        if got != want {
+            v.push(format!("{what}: got {got}, budget says {want}"));
+        }
+    };
+    eq("frames sent by drivers", a.frames_sent, b.frames_sent);
+    eq("frames ingested", a.frames_ingested, b.frames_sent);
+    eq("frames dropped (malformed)", a.frames_dropped_malformed, b.frames_malformed);
+    eq("frames dropped (over cap)", a.frames_dropped_overcap, b.frames_overcap);
+    eq("frames shed stale", a.frames_stale, b.frames_stale);
+    eq(
+        "frames dropped total vs per-cause sum",
+        a.frames_dropped,
+        b.frames_malformed + b.frames_overcap + b.frames_stale,
+    );
+    eq("patients evicted", a.patients_evicted, b.evictions);
+    eq("queries submitted", a.queries_submitted, b.windows);
+    eq("predictions resolved", a.predictions, b.windows);
+    eq("unresolved queries at exit", a.unresolved, 0);
+    if r.recovery_n > 0 && r.recovery_p95 > r.slo_s {
+        v.push(format!(
+            "recovery p95 {:.3}s still above the {:.3}s SLO after the fault cleared",
+            r.recovery_p95, r.slo_s
+        ));
+    }
+    if r.govern && r.e2e_p95 > r.slo_s && r.governor_degraded_entered == 0 {
+        v.push(format!(
+            "governor never degraded despite a whole-run p95 breach ({:.3}s > {:.3}s)",
+            r.e2e_p95, r.slo_s
+        ));
+    }
+    if r.http && b.severs > 0 && r.client_reconnects < b.severs {
+        v.push(format!(
+            "only {} client reconnects for {} injected link severs",
+            r.client_reconnects, b.severs
+        ));
+    }
+    if r.conns_refused != r.conns_refused_overcap + r.conns_refused_handshake {
+        v.push(format!(
+            "conns_refused {} is not over-cap {} + handshake {}",
+            r.conns_refused, r.conns_refused_overcap, r.conns_refused_handshake
+        ));
+    }
+    if let Some(h) = &r.hostile {
+        if h.bad_bodies_rejected != h.bad_bodies_sent {
+            v.push(format!(
+                "hostile bodies: {} of {} rejected with 400",
+                h.bad_bodies_rejected, h.bad_bodies_sent
+            ));
+        }
+        if h.flood_refused != r.conns_refused_overcap {
+            v.push(format!(
+                "flood saw {} refusals but the edge counted {} over-cap",
+                h.flood_refused, r.conns_refused_overcap
+            ));
+        }
+        if h.flood_refused == 0 {
+            v.push("connection flood was never refused — the cap did not hold".into());
+        }
+        if r.conns_reaped < h.loris_conns {
+            v.push(format!(
+                "only {} reaps for {} slow-loris connections",
+                r.conns_reaped, h.loris_conns
+            ));
+        }
+    }
+    v
+}
+
+/// Run one scenario to completion and return the checked report (the
+/// CLI exits nonzero when `violations` is non-empty).
+pub fn run_replay(zoo: &Zoo, cfg: ReplayConfig) -> Result<ReplayReport> {
+    let n_shards = if cfg.shards == 0 { 2 } else { cfg.shards };
+    let n_workers =
+        if cfg.workers == 0 { crate::serving::default_workers_for(cfg.gpus) } else { cfg.workers };
+    let clip_len = zoo.manifest.clip_len;
+    let scfg = ScenarioCfg {
+        scenario: cfg.scenario,
+        patients: cfg.patients,
+        ticks: cfg.duration_s,
+        seed: cfg.seed,
+        window_samples: clip_len,
+        synth: SynthConfig::from(&zoo.manifest.calibration),
+    };
+    // the shard patient cap the scenario runs against: churn squeezes
+    // the plane to CHURN_CAP_TOTAL tracked patients split across shards
+    // so the LRU eviction path actually fires
+    let max_patients = if cfg.scenario == Scenario::Churn {
+        if CHURN_CAP_TOTAL % n_shards != 0 {
+            return Err(Error::config(format!(
+                "churn needs shards dividing {CHURN_CAP_TOTAL}, got {n_shards}"
+            )));
+        }
+        CHURN_CAP_TOTAL / n_shards
+    } else {
+        ShardConfig::default().max_patients
+    };
+    let expected = budget(&scfg, n_shards, max_patients);
+    println!(
+        "replay: scenario {} seed {} — {} patients, {} ticks, {} shards, {} workers, \
+         speedup {}×, SLO {} ms{}{}",
+        cfg.scenario.name(),
+        cfg.seed,
+        cfg.patients,
+        cfg.duration_s,
+        n_shards,
+        n_workers,
+        cfg.speedup,
+        cfg.slo_ms,
+        if cfg.http_addr.is_some() || cfg.scenario == Scenario::HostileEdge {
+            ", over HTTP"
+        } else {
+            ""
+        },
+        if cfg.govern { ", governed" } else { "" },
+    );
+    println!(
+        "fault budget: {} frames → {} windows | malformed {} stale {} overcap {} \
+         evictions {} severs {}",
+        expected.frames_sent,
+        expected.windows,
+        expected.frames_malformed,
+        expected.frames_stale,
+        expected.frames_overcap,
+        expected.evictions,
+        expected.severs,
+    );
+
+    let ensemble = super::fig10_scalability::holmes_servable_ensemble(zoo, 0.2);
+    // burst-storm runs on a slowed scriptable backend so the ghost wave
+    // genuinely saturates the device permits; everything else keeps the
+    // calibrated service times
+    let engine = if cfg.scenario == Scenario::BurstStorm {
+        let times = ServiceTimes::from_macs(zoo, 5e-4, 2e10);
+        let backend = SimBackend::with_times(times, STORM_TIME_SCALE);
+        Engine::with_backend(zoo, cfg.gpus, Arc::new(backend))?
+    } else {
+        Engine::new(zoo, cfg.gpus)?
+    };
+    for &m in ensemble.indices() {
+        for &b in engine.batch_sizes() {
+            engine.profile_model((m, b), 1)?;
+        }
+    }
+
+    let t_start = Instant::now();
+    let slo = Duration::from_secs_f64((cfg.slo_ms / 1000.0).max(0.001));
+    let pipeline = Pipeline::spawn(
+        zoo,
+        &engine,
+        PipelineConfig::new(ensemble.clone()).with_workers(n_workers).with_slo(slo),
+    )?;
+    let telemetry = Arc::clone(pipeline.telemetry());
+    let governor = if cfg.govern {
+        Some(Governor::spawn(zoo, &pipeline, GovernorConfig { slo, ..GovernorConfig::default() })?)
+    } else {
+        None
+    };
+
+    let submitted = Arc::new(AtomicU64::new(0));
+    let (pred_tx, pred_rx) = mpsc::channel::<(usize, u64, f64, f64, f64)>();
+    let (shard_router, frame_tx) = ShardRouter::spawn(
+        ShardConfig { shards: n_shards, max_patients, ..ShardConfig::default() },
+        clip_len,
+        Arc::clone(&telemetry),
+        |_shard| {
+            let pipeline = pipeline.clone();
+            let pred_tx = pred_tx.clone();
+            let submitted = Arc::clone(&submitted);
+            move |window| {
+                let q = Query::from_window(window);
+                if let Ok(rx) = pipeline.submit(q) {
+                    submitted.fetch_add(1, Ordering::Relaxed);
+                    let pred_tx = pred_tx.clone();
+                    std::thread::spawn(move || {
+                        if let Ok(p) = rx.recv() {
+                            let _ = pred_tx.send((
+                                p.patient,
+                                p.window_id,
+                                p.sim_end,
+                                p.score,
+                                p.e2e.as_secs_f64(),
+                            ));
+                        }
+                    });
+                }
+            }
+        },
+    )?;
+    drop(pred_tx);
+
+    // hostile-edge is about the wire boundary: force the HTTP edge on,
+    // with a cap the flood can exceed and a read-timeout the loris
+    // phase can trip inside the run
+    let wall_total = cfg.duration_s as f64 / cfg.speedup;
+    let mut http = None;
+    let hostile_http = cfg.scenario == Scenario::HostileEdge && cfg.http_addr.is_none();
+    if let Some(addr) =
+        cfg.http_addr.clone().or_else(|| hostile_http.then(|| "127.0.0.1:0".to_string()))
+    {
+        let http_cfg = if cfg.scenario == Scenario::HostileEdge {
+            crate::http::HttpConfig {
+                max_connections: cfg.patients + 1 + HOSTILE_LORIS_CONNS + 2,
+                read_timeout: Duration::from_secs_f64((wall_total / 4.0).clamp(0.2, 5.0)),
+                edge_threads: cfg.edge_threads,
+            }
+        } else {
+            crate::http::HttpConfig {
+                edge_threads: cfg.edge_threads,
+                ..crate::http::HttpConfig::default()
+            }
+        };
+        let server =
+            crate::http::serve_with(&addr, frame_tx.clone(), Arc::clone(&telemetry), http_cfg)?;
+        println!("replay ingest edge on {} (binary /ingest.bin)", server.addr);
+        http = Some(server);
+    }
+    let http_addr = http.as_ref().map(|s| s.addr);
+
+    // one driver thread per monitor, paced by the virtual clock; frame
+    // order within a patient is the monitor's emission order, which is
+    // all the determinism contract needs
+    let frames_sent = Arc::new(AtomicU64::new(0));
+    let reconnects = Arc::new(AtomicU64::new(0));
+    let mut handles = Vec::new();
+    for mut mon in monitors(&scfg) {
+        let tx = frame_tx.clone();
+        let clock = VirtualClock::new(cfg.speedup);
+        let ticks = cfg.duration_s;
+        let frames_sent = Arc::clone(&frames_sent);
+        let reconnects = Arc::clone(&reconnects);
+        handles.push(std::thread::spawn(move || {
+            let mut client = match http_addr {
+                Some(addr) => match crate::http::IngestClient::connect(addr) {
+                    Ok(c) => Some(c),
+                    Err(e) => {
+                        eprintln!("monitor {}: ingest connect failed: {e}", mon.index);
+                        return;
+                    }
+                },
+                None => None,
+            };
+            for t in 0..ticks {
+                clock.sleep_until_sim(t as f64);
+                let emit = mon.tick(t);
+                if emit.sever {
+                    // the monitor's link dies *before* this tick's batch
+                    // leaves, so the redial resends nothing the server
+                    // already admitted — delivery stays exactly-once and
+                    // the fault budget stays exact
+                    if let Some(c) = client.as_mut() {
+                        c.sever();
+                    }
+                }
+                if emit.frames.is_empty() {
+                    continue;
+                }
+                frames_sent.fetch_add(emit.frames.len() as u64, Ordering::Relaxed);
+                let delivered = match client.as_mut() {
+                    Some(c) => c.send_frames(&emit.frames).is_ok(),
+                    None => emit.frames.iter().all(|f| tx.send(*f).is_ok()),
+                };
+                if !delivered {
+                    eprintln!("monitor {}: delivery failed at tick {t}", mon.index);
+                    break;
+                }
+            }
+            if let Some(c) = client.as_ref() {
+                reconnects.fetch_add(c.reconnects(), Ordering::Relaxed);
+            }
+        }));
+    }
+
+    // the byte-level hostile client: never becomes a Frame, attacks the
+    // HTTP boundary itself
+    let mut hostile_handle = None;
+    if cfg.scenario == Scenario::HostileEdge {
+        let addr = http_addr.expect("hostile-edge forces the HTTP edge on");
+        let clock = VirtualClock::new(cfg.speedup);
+        let ticks = cfg.duration_s;
+        hostile_handle = Some(std::thread::spawn(move || {
+            hostile_byte_driver(addr, &clock, ticks)
+        }));
+    }
+    drop(frame_tx);
+
+    let sink = std::thread::spawn(move || {
+        let mut rows: Vec<(usize, u64, f64, f64, f64)> = Vec::new();
+        for r in pred_rx {
+            rows.push(r);
+        }
+        rows
+    });
+
+    for h in handles {
+        let _ = h.join();
+    }
+    let hostile = match hostile_handle {
+        Some(h) => Some(h.join().map_err(|_| Error::serving("hostile driver panicked"))?),
+        None => None,
+    };
+    // teardown order matters: the HTTP edge holds a ShardSender clone,
+    // so it must stop before the shard join can see channel close; the
+    // data plane drains before the control plane stops
+    drop(http);
+    shard_router.join()?;
+    let drain_deadline = Instant::now() + Duration::from_secs(60);
+    while pipeline.pending_len() > 0 && Instant::now() < drain_deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    if governor.is_some() {
+        std::thread::sleep(GovernorConfig::default().tick * 4);
+    }
+    drop(governor);
+    drop(pipeline);
+    let rows = sink.join().map_err(|_| Error::serving("sink panicked"))?;
+
+    let ordering = Ordering::Relaxed;
+    let submitted_n = submitted.load(ordering);
+    let resolved = telemetry.queries.load(ordering) + telemetry.failures.load(ordering);
+    let fingerprint = rows
+        .iter()
+        .fold(0u64, |acc, &(p, w, _, s, _)| acc.wrapping_add(prediction_hash(p, w, s)));
+    let recovery_start = scfg.recovery_start_sim();
+    let recovery: Vec<f64> =
+        rows.iter().filter(|r| r.2 >= recovery_start).map(|r| r.4).collect();
+    let gov = telemetry.governor();
+    let mut report = ReplayReport {
+        scenario: cfg.scenario,
+        seed: cfg.seed,
+        shards: n_shards,
+        workers: n_workers,
+        govern: cfg.govern,
+        http: http_addr.is_some(),
+        budget: expected,
+        accounting: ReplayAccounting {
+            frames_sent: frames_sent.load(ordering),
+            frames_ingested: telemetry.frames.load(ordering),
+            frames_dropped: telemetry.frames_dropped.load(ordering),
+            frames_dropped_malformed: telemetry.frames_dropped_malformed.load(ordering),
+            frames_dropped_overcap: telemetry.frames_dropped_overcap.load(ordering),
+            frames_stale: telemetry.frames_stale.load(ordering),
+            patients_evicted: telemetry.patients_evicted.load(ordering),
+            queries_submitted: submitted_n,
+            predictions: rows.len() as u64,
+            unresolved: submitted_n.saturating_sub(resolved),
+            score_fingerprint: fingerprint,
+        },
+        slo_s: slo.as_secs_f64(),
+        e2e_p95: telemetry.e2e.percentile(95.0),
+        recovery_p95: crate::metrics::percentile(&recovery, 95.0),
+        recovery_n: recovery.len(),
+        client_reconnects: reconnects.load(ordering),
+        conns_accepted: telemetry.conns_accepted.load(ordering),
+        conns_refused: telemetry.conns_refused.load(ordering),
+        conns_refused_overcap: telemetry.conns_refused_overcap.load(ordering),
+        conns_refused_handshake: telemetry.conns_refused_handshake.load(ordering),
+        conns_reaped: telemetry.conns_reaped.load(ordering),
+        hostile,
+        governor_degraded_entered: gov
+            .map(|g| g.degraded_entered.load(ordering))
+            .unwrap_or(0),
+        governor_swaps: gov.map(|g| g.swaps.load(ordering)).unwrap_or(0),
+        wall_s: t_start.elapsed().as_secs_f64(),
+        violations: Vec::new(),
+    };
+    report.violations = check_invariants(&report);
+    print_report(&report);
+    Ok(report)
+}
+
+/// The raw-TCP hostile phases: corrupt bodies on a keep-alive
+/// connection, a connection flood against the edge cap, slow-loris
+/// holds until the sweep reaps them. Returns what the *client* observed
+/// so the invariants can cross-check server counters against ground
+/// truth.
+fn hostile_byte_driver(addr: SocketAddr, clock: &VirtualClock, ticks: u64) -> HostileOutcome {
+    let mut out = HostileOutcome::default();
+
+    // phase 1 — malformed wire bodies, every one a 400, none fatal to
+    // the connection or to the cohort streaming beside it
+    clock.sleep_until_sim(1.0);
+    let mut bodies: Vec<Vec<u8>> = Vec::new();
+    for i in 0..8u8 {
+        // corrupt magic, plausible header tail
+        let mut b = b"XXX1".to_vec();
+        b.extend_from_slice(&[1, 0, i, 3]);
+        b.extend_from_slice(&[0u8; 20]);
+        bodies.push(b);
+    }
+    let mut valid = Vec::new();
+    crate::ingest::Frame {
+        patient: 3,
+        modality: crate::ingest::Modality::Ecg,
+        sim_time: 1.0,
+        values: [0.1, 0.2, 0.3].into(),
+    }
+    .write_bytes(&mut valid);
+    for _ in 0..2 {
+        // truncated: header promises 3 values, body ends early
+        bodies.push(valid[..valid.len() - 4].to_vec());
+    }
+    for _ in 0..2 {
+        // NaN payload in an otherwise valid frame
+        let mut nan = Vec::new();
+        crate::ingest::Frame {
+            patient: 3,
+            modality: crate::ingest::Modality::Ecg,
+            sim_time: 1.0,
+            values: crate::ingest::FrameValues::from_slice(&[f32::NAN, 0.0, 0.0])
+                .expect("3 values fit"),
+        }
+        .write_bytes(&mut nan);
+        bodies.push(nan);
+    }
+    let mut conn = TcpStream::connect(addr).ok();
+    for body in &bodies {
+        out.bad_bodies_sent += 1;
+        let status = loop {
+            match conn.as_mut().map(|c| post_raw(c, body)) {
+                Some(Ok(s)) => break Some(s),
+                // server may have closed the previous exchange — redial
+                // once and retry; a second failure counts as no response
+                _ => match TcpStream::connect(addr) {
+                    Ok(c) => {
+                        let fresh = conn.is_none();
+                        conn = Some(c);
+                        if fresh {
+                            continue;
+                        }
+                        match post_raw(conn.as_mut().expect("just set"), body) {
+                            Ok(s) => break Some(s),
+                            Err(_) => break None,
+                        }
+                    }
+                    Err(_) => break None,
+                },
+            }
+        };
+        if status == Some(400) {
+            out.bad_bodies_rejected += 1;
+        }
+    }
+    drop(conn);
+
+    // phase 2 — connection flood: open everything at once and count the
+    // edge's 503 refusals; accepted sockets are closed again untouched
+    clock.sleep_until_sim((ticks / 3) as f64);
+    let mut flood = Vec::new();
+    for _ in 0..HOSTILE_FLOOD_CONNS {
+        out.flood_conns += 1;
+        if let Ok(s) = TcpStream::connect(addr) {
+            flood.push(s);
+        }
+    }
+    for s in &mut flood {
+        let _ = s.set_read_timeout(Some(Duration::from_millis(500)));
+        let mut buf = [0u8; 64];
+        // a refused connection gets "503 …" pushed at accept; an
+        // accepted one stays silent until a request arrives
+        if let Ok(n) = s.read(&mut buf) {
+            if n > 0 && parse_status(&buf[..n]) == Some(503) {
+                out.flood_refused += 1;
+            }
+        }
+    }
+    drop(flood);
+
+    // phase 3 — slow loris: send half a request head and hold the
+    // socket; block until the read-timeout sweep reaps it (the server
+    // closing on us IS the pass signal, so joins stay race-free)
+    clock.sleep_until_sim((ticks / 2) as f64);
+    let mut loris = Vec::new();
+    for _ in 0..HOSTILE_LORIS_CONNS {
+        if let Ok(mut s) = TcpStream::connect(addr) {
+            if s.write_all(b"POST /ingest.bin HTTP/1.1\r\nContent-Le").is_ok() {
+                out.loris_conns += 1;
+                loris.push(s);
+            }
+        }
+    }
+    for s in &mut loris {
+        let _ = s.set_read_timeout(Some(Duration::from_secs(20)));
+        let mut buf = [0u8; 64];
+        // EOF or error ⇒ the sweep reaped us
+        while let Ok(n) = s.read(&mut buf) {
+            if n == 0 {
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// POST one binary body and return the response status. Drains the
+/// full response (headers + declared body) so the next request on the
+/// same keep-alive connection starts on a clean stream.
+fn post_raw(stream: &mut TcpStream, body: &[u8]) -> std::io::Result<u16> {
+    let head = format!(
+        "POST /ingest.bin HTTP/1.1\r\nHost: holmes\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 512];
+    let header_end = loop {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "closed before response head",
+            ));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos + 4;
+        }
+        if buf.len() > 8 * 1024 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "oversized response head",
+            ));
+        }
+    };
+    let status = parse_status(&buf)
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad status line"))?;
+    let content_len = std::str::from_utf8(&buf[..header_end])
+        .ok()
+        .and_then(|h| {
+            h.lines()
+                .find(|l| l.to_ascii_lowercase().starts_with("content-length:"))
+                .and_then(|l| l.split(':').nth(1))
+                .and_then(|v| v.trim().parse::<usize>().ok())
+        })
+        .unwrap_or(0);
+    while buf.len() < header_end + content_len {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    Ok(status)
+}
+
+fn parse_status(buf: &[u8]) -> Option<u16> {
+    let line = buf.split(|&b| b == b'\r').next()?;
+    let text = std::str::from_utf8(line).ok()?;
+    let code = text.split_whitespace().nth(1)?;
+    code.parse().ok()
+}
+
+fn print_report(r: &ReplayReport) {
+    println!("\n── replay report: {} (seed {}) ───────────", r.scenario.name(), r.seed);
+    let a = &r.accounting;
+    let b = &r.budget;
+    println!("frames sent          {:>12}  (budget {})", a.frames_sent, b.frames_sent);
+    println!("frames ingested      {:>12}", a.frames_ingested);
+    println!(
+        "frames dropped       {:>12}  (malformed {} / over-cap {} / stale {})",
+        a.frames_dropped, a.frames_dropped_malformed, a.frames_dropped_overcap, a.frames_stale
+    );
+    println!(
+        "patients evicted     {:>12}  (budget {})",
+        a.patients_evicted, b.evictions
+    );
+    println!(
+        "windows → queries    {:>12} → {} submitted, {} predictions, {} unresolved",
+        b.windows, a.queries_submitted, a.predictions, a.unresolved
+    );
+    println!("score fingerprint    {:>#12x}", a.score_fingerprint);
+    if r.http {
+        println!(
+            "edge connections     {:>12}  (refused {} = over-cap {} + handshake {}, reaped {})",
+            r.conns_accepted,
+            r.conns_refused,
+            r.conns_refused_overcap,
+            r.conns_refused_handshake,
+            r.conns_reaped
+        );
+        println!("client reconnects    {:>12}  (severs injected: {})", r.client_reconnects, b.severs);
+    }
+    if let Some(h) = &r.hostile {
+        println!(
+            "hostile client       {:>12}  bad bodies ({} rejected), {} flood conns ({} refused), {} loris",
+            h.bad_bodies_sent, h.bad_bodies_rejected, h.flood_conns, h.flood_refused, h.loris_conns
+        );
+    }
+    if r.govern {
+        println!(
+            "governor             {:>12}  swaps, degraded {}×",
+            r.governor_swaps, r.governor_degraded_entered
+        );
+    }
+    println!("e2e p95              {:>11.4}s  (SLO {:.1}s)", r.e2e_p95, r.slo_s);
+    println!(
+        "recovery p95         {:>11.4}s  over {} post-fault predictions",
+        r.recovery_p95, r.recovery_n
+    );
+    println!("wall time            {:>11.1}s", r.wall_s);
+    if r.violations.is_empty() {
+        println!("REPLAY OK — every invariant held");
+    } else {
+        println!("REPLAY FAILED — {} invariant breach(es):", r.violations.len());
+        for v in &r.violations {
+            println!("  ✗ {v}");
+        }
+    }
+}

@@ -169,6 +169,7 @@ impl EdgeLoop {
             {
                 self.telemetry.conns_active.fetch_sub(1, Ordering::Relaxed);
                 self.telemetry.conns_refused.fetch_add(1, Ordering::Relaxed);
+                self.telemetry.conns_refused_overcap.fetch_add(1, Ordering::Relaxed);
                 sys::write_best_effort(fd, REFUSAL_503);
                 sys::drain_best_effort(fd, 64 * 1024);
                 sys::close_fd(fd);
@@ -202,6 +203,12 @@ impl EdgeLoop {
             let interest =
                 sys::EPOLLIN | sys::EPOLLOUT | sys::EPOLLRDHUP | sys::EPOLLET;
             if self.ep.add(fd, interest, tok).is_err() {
+                // accepted but never registered: the peer sees a close
+                // with no response — a handshake-level refusal, counted
+                // per cause so a registration leak can't hide inside the
+                // accept totals
+                self.telemetry.conns_refused.fetch_add(1, Ordering::Relaxed);
+                self.telemetry.conns_refused_handshake.fetch_add(1, Ordering::Relaxed);
                 self.close(slot, false);
                 continue;
             }

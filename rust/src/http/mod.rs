@@ -231,6 +231,7 @@ pub fn serve_legacy_with(
                 {
                     telemetry.conns_active.fetch_sub(1, Ordering::Relaxed);
                     telemetry.conns_refused.fetch_add(1, Ordering::Relaxed);
+                    telemetry.conns_refused_overcap.fetch_add(1, Ordering::Relaxed);
                     // best-effort refusal: bound the write so a
                     // non-reading client cannot stall the accept loop
                     let _ = stream
@@ -270,7 +271,7 @@ pub fn serve_legacy_with(
                 let guard = ConnGuard(Arc::clone(&telemetry));
                 let tx = sink.clone();
                 let tel = Arc::clone(&telemetry);
-                std::thread::spawn(move || {
+                let spawned = std::thread::Builder::new().spawn(move || {
                     let _guard = guard;
                     if let Err(Error::Io(e)) = handle_connection(stream, tx, Arc::clone(&tel))
                     {
@@ -282,6 +283,16 @@ pub fn serve_legacy_with(
                         }
                     }
                 });
+                // handler spawn failed (thread exhaustion): the
+                // connection was accepted but cannot be served — counted
+                // as a handshake-failed refusal, mirroring the epoll
+                // edge's registration-failure path. The dropped closure
+                // took the ConnGuard with it, so `conns_active` is
+                // already released.
+                if spawned.is_err() {
+                    telemetry.conns_refused.fetch_add(1, Ordering::Relaxed);
+                    telemetry.conns_refused_handshake.fetch_add(1, Ordering::Relaxed);
+                }
             }
         })
         .map_err(Error::Io)?;
@@ -441,38 +452,136 @@ fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
 /// drivers: one TCP connection per stream, one `POST /ingest.bin`
 /// request per batch of frames, one encode buffer reused across
 /// batches.
+///
+/// A bedside monitor's link drops and comes back — the client survives
+/// that: on a **transport** failure (broken pipe, reset, EOF
+/// mid-response) it redials the remembered address with capped,
+/// jittered exponential backoff and resends the batch, up to
+/// [`Self::with_backoff`]'s attempt budget. Semantics are
+/// at-least-once per batch: a reply lost after the server admitted the
+/// frames makes the retry a duplicate — acceptable for monitor streams
+/// (the replay harness severs *before* the request bytes move, so its
+/// budgets stay exact). A non-2xx **response** is a protocol answer,
+/// not a link failure, and is never retried. Redials are counted in
+/// [`Self::reconnects`] and surfaced in the bedside report.
 pub struct IngestClient {
     stream: TcpStream,
+    addr: SocketAddr,
     body: Vec<u8>,
     resp: Vec<u8>,
+    reconnects: u64,
+    /// Redial attempts per `send_frames` call before giving up.
+    max_attempts: u32,
+    backoff_base: Duration,
+    backoff_cap: Duration,
+    /// xorshift state for deterministic backoff jitter.
+    jitter: u64,
 }
 
 impl IngestClient {
     pub fn connect(addr: SocketAddr) -> Result<IngestClient> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
-        Ok(IngestClient { stream, body: Vec::with_capacity(16 * 1024), resp: Vec::new() })
+        Ok(IngestClient {
+            stream,
+            addr,
+            body: Vec::with_capacity(16 * 1024),
+            resp: Vec::new(),
+            reconnects: 0,
+            max_attempts: 5,
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(500),
+            // per-client deterministic jitter stream (port decorrelates
+            // clients sharing a server)
+            jitter: 0x9E37_79B9_7F4A_7C15 ^ u64::from(addr.port()),
+        })
+    }
+
+    /// Override the redial budget and backoff window (tests, replay).
+    pub fn with_backoff(mut self, attempts: u32, base: Duration, cap: Duration) -> Self {
+        self.max_attempts = attempts;
+        self.backoff_base = base;
+        self.backoff_cap = cap.max(base);
+        self
+    }
+
+    /// Transport-level reconnects performed so far.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
+    }
+
+    /// Fault-injection hook: kill the underlying socket as a dropped
+    /// monitor link would. The next `send_frames` takes the
+    /// backoff-and-redial path. (Shutdown is best-effort; the send
+    /// error is what matters.)
+    pub fn sever(&mut self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
     }
 
     /// POST one batch of frames as a single binary body and wait for
-    /// the response. Errors on transport failure or a non-2xx status.
+    /// the response. Redials on transport failure (see type docs);
+    /// errors when the redial budget is exhausted or the server answers
+    /// non-2xx.
     pub fn send_frames(&mut self, frames: &[Frame]) -> Result<()> {
         self.body.clear();
         for f in frames {
             f.write_bytes(&mut self.body);
         }
+        let mut attempt: u32 = 0;
+        loop {
+            match self.post_once() {
+                Ok(status) => {
+                    return if (200..300).contains(&status) {
+                        Ok(())
+                    } else {
+                        Err(Error::serving(format!("ingest server replied {status}")))
+                    };
+                }
+                Err(e) => {
+                    if attempt >= self.max_attempts {
+                        return Err(e);
+                    }
+                    std::thread::sleep(self.backoff(attempt));
+                    attempt += 1;
+                    // redial; a refused dial consumes an attempt and
+                    // backs off again (the server may still be coming up)
+                    match TcpStream::connect(self.addr) {
+                        Ok(s) => {
+                            let _ = s.set_nodelay(true);
+                            self.stream = s;
+                            self.reconnects += 1;
+                        }
+                        Err(_) => continue,
+                    }
+                }
+            }
+        }
+    }
+
+    /// One request/response exchange on the current connection.
+    fn post_once(&mut self) -> Result<u16> {
         let head = format!(
             "POST /ingest.bin HTTP/1.1\r\nHost: ingest\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
             self.body.len()
         );
         self.stream.write_all(head.as_bytes())?;
         self.stream.write_all(&self.body)?;
-        let status = self.read_response()?;
-        if (200..300).contains(&status) {
-            Ok(())
-        } else {
-            Err(Error::serving(format!("ingest server replied {status}")))
-        }
+        self.read_response()
+    }
+
+    /// Capped exponential backoff with deterministic jitter in
+    /// `[0.5, 1.0]×` of the doubled base.
+    fn backoff(&mut self, attempt: u32) -> Duration {
+        let full = self
+            .backoff_base
+            .saturating_mul(1u32 << attempt.min(16))
+            .min(self.backoff_cap);
+        // xorshift64
+        self.jitter ^= self.jitter << 13;
+        self.jitter ^= self.jitter >> 7;
+        self.jitter ^= self.jitter << 17;
+        let frac = 0.5 + 0.5 * (self.jitter >> 11) as f64 / (1u64 << 53) as f64;
+        full.mul_f64(frac)
     }
 
     pub fn send_frame(&mut self, frame: &Frame) -> Result<()> {
@@ -584,6 +693,40 @@ mod tests {
                 assert_eq!(got.values, vec![0.5, -0.25, 1.0]);
             }
         }
+    }
+
+    #[test]
+    fn ingest_client_reconnects_after_severed_link() {
+        let (server, rx) = test_server();
+        let mut client = IngestClient::connect(server.addr)
+            .unwrap()
+            .with_backoff(3, Duration::from_millis(1), Duration::from_millis(10));
+        let frame = |t: f64| Frame {
+            patient: 7,
+            modality: Modality::Ecg,
+            sim_time: t,
+            values: [0.1, 0.2, 0.3].into(),
+        };
+        client.send_frames(&[frame(0.0)]).unwrap();
+        assert_eq!(rx.recv().unwrap().patient, 7);
+        assert_eq!(client.reconnects(), 0);
+        // monitor link drops: the next batch must redial and deliver —
+        // the sever happens before any request bytes move, so exactly
+        // one copy of the batch is admitted
+        client.sever();
+        client.send_frames(&[frame(1.0)]).unwrap();
+        assert_eq!(client.reconnects(), 1);
+        assert_eq!(rx.recv().unwrap().sim_time, 1.0);
+        assert!(rx.try_recv().is_err(), "no duplicate admission");
+        // a 400 is a protocol answer, not a link failure: no redial
+        let nan = Frame {
+            patient: 7,
+            modality: Modality::Vitals,
+            sim_time: 2.0,
+            values: crate::ingest::FrameValues::from_slice(&[f32::NAN]).unwrap(),
+        };
+        assert!(client.send_frames(std::slice::from_ref(&nan)).is_err());
+        assert_eq!(client.reconnects(), 1);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! experiments, and open-loop stream drivers.
 
 pub mod clock;
+pub mod scenario;
 pub mod synth;
 pub mod wire;
 

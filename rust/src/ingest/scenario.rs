@@ -1,0 +1,567 @@
+//! Adversarial cohort scenarios: the deterministic workload generators
+//! behind `holmes replay` (see `crate::exp::replay`).
+//!
+//! Everything the bedside simulator produced before this module was
+//! steady state — every bed present from t=0, every monitor clock
+//! perfect, every wire frame well-formed. Real ICU cohorts (MIMIC-style
+//! benchmarks, multi-site sepsis deployments) are none of that: beds
+//! churn on admission and discharge, a monitor's leads drop out and
+//! resync, clocks between two monitors on the same bed disagree, and
+//! shift changes slam the ingest edge all at once. Each [`Scenario`]
+//! here reproduces one of those shapes as a **pure function of
+//! `(seed, scenario, tick)`** so that a replay is reproducible bit for
+//! bit: the same seed must yield the same shed/evict/prediction
+//! accounting on 1 shard or 8, 1 worker or 4.
+//!
+//! The other half of the contract is the [`FaultBudget`]: a dry run of
+//! the same generators through a model of the aggregation plane
+//! (per-patient monotone ECG filter, per-shard LRU admission) that
+//! predicts **exactly** how many frames will be admitted, dropped
+//! stale, dropped malformed, how many windows will complete, and how
+//! many idle aggregators will be evicted. The live run's telemetry has
+//! to match the budget counter for counter — that is what makes the
+//! replay harness a property gate instead of a demo.
+
+use std::collections::HashMap;
+
+use super::synth::{PatientSim, SynthConfig};
+use super::{Frame, Modality};
+use crate::{Error, Result};
+
+/// ECG frames a steady monitor emits per simulated second.
+pub const FRAMES_PER_TICK: usize = 250;
+
+/// Total tracked-patient capacity the churn scenario squeezes the shard
+/// plane into (split evenly across shards: `CHURN_CAP_TOTAL / shards`
+/// per shard). The churn id universe is twice this — the satellite
+/// property: a stream churning at 2× `max_patients` must never drop a
+/// new admission.
+pub const CHURN_CAP_TOTAL: usize = 16;
+
+/// Distinct patient ids the churn scenario cycles through.
+pub const CHURN_UNIVERSE: usize = 2 * CHURN_CAP_TOTAL;
+
+/// Admissions per churn tick. Divisible by every supported shard count
+/// so each shard sees the same admission rate.
+pub const CHURN_WAVE: usize = 8;
+
+/// Simulated seconds one churn admission's window spans. Must stay
+/// below the id reappearance period (`CHURN_UNIVERSE / CHURN_WAVE`
+/// ticks) so a readmitted patient's frames are never stale.
+const CHURN_WINDOW_SPAN_S: f64 = 3.0;
+
+/// First ghost patient id in the burst-storm wave (disjoint from any
+/// base cohort).
+const GHOST_ID_BASE: usize = 10_000;
+
+/// Named adversarial scenarios. `all()` is the catalog; the CLI and CI
+/// address them by `name()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// Admission/discharge churn: `CHURN_WAVE` new beds per tick cycle
+    /// through a 2×-capacity id universe; every admission completes one
+    /// window and goes idle. Exercises the shard LRU eviction path —
+    /// invariant: zero drops, evictions exactly `admissions − capacity`,
+    /// identical for any shard count.
+    Churn,
+    /// Per-modality dropout and resync: each bed's ECG leads vanish
+    /// mid-run while vitals continue, then resume with a gap. Over
+    /// `--http` the dropout also severs the monitor's TCP link, so the
+    /// `IngestClient` backoff-reconnect path is exercised for real.
+    DropoutResync,
+    /// Bounded clock skew between two monitors on the same bed: the
+    /// interleaved stream is out of order by a known amount, and the
+    /// stale-frame filter must shed exactly the predicted frames.
+    ClockSkew,
+    /// Shift-change burst: a 3×-bed ghost admission wave lands at once
+    /// on a slowed backend; every admitted query must still resolve and
+    /// the p95 must recover after the storm clears.
+    BurstStorm,
+    /// Hostile clients on the ingest edge: malformed-arity frames,
+    /// oversized patient ids, and (over HTTP) corrupt wire bodies, NaN
+    /// floods, truncated frames, slow-loris holds, and a connection
+    /// flood — none of which may disturb the legitimate cohort.
+    HostileEdge,
+}
+
+impl Scenario {
+    pub fn all() -> [Scenario; 5] {
+        [
+            Scenario::Churn,
+            Scenario::DropoutResync,
+            Scenario::ClockSkew,
+            Scenario::BurstStorm,
+            Scenario::HostileEdge,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::Churn => "churn",
+            Scenario::DropoutResync => "dropout-resync",
+            Scenario::ClockSkew => "clock-skew",
+            Scenario::BurstStorm => "burst-storm",
+            Scenario::HostileEdge => "hostile-edge",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Scenario> {
+        Scenario::all()
+            .into_iter()
+            .find(|s| s.name() == name)
+            .ok_or_else(|| {
+                Error::config(format!(
+                    "unknown scenario '{name}' (known: churn, dropout-resync, clock-skew, \
+                     burst-storm, hostile-edge, all)"
+                ))
+            })
+    }
+}
+
+/// Scenario parameters shared by the live drivers and the budget dry
+/// run — both must be built from the *same* value or the budget is
+/// meaningless.
+#[derive(Debug, Clone)]
+pub struct ScenarioCfg {
+    pub scenario: Scenario,
+    /// Base cohort size (ignored by `churn`, which uses its own id
+    /// universe).
+    pub patients: usize,
+    /// Simulated seconds to run; each monitor emits once per tick.
+    pub ticks: u64,
+    pub seed: u64,
+    /// ECG samples per window (= the zoo's clip length).
+    pub window_samples: usize,
+    pub synth: SynthConfig,
+}
+
+impl ScenarioCfg {
+    /// Simulated time after which the injected fault has cleared and
+    /// the tail is expected back under the SLO (the recovery-phase
+    /// boundary for the p95 invariant).
+    pub fn recovery_start_sim(&self) -> f64 {
+        match self.scenario {
+            Scenario::BurstStorm => {
+                let storm_start = self.ticks / 3;
+                let ghost_ticks = self.window_samples.div_ceil(FRAMES_PER_TICK) as u64;
+                (storm_start + ghost_ticks) as f64
+            }
+            _ => self.ticks as f64 * 2.0 / 3.0,
+        }
+    }
+}
+
+/// What one monitor emits for one simulated second.
+pub struct TickEmit {
+    pub frames: Vec<Frame>,
+    /// HTTP replay: kill the monitor's TCP link *before* sending this
+    /// tick's batch (the link died overnight; the client must redial).
+    /// Severing pre-send keeps delivery exactly-once, so the fault
+    /// budget stays exact.
+    pub sever: bool,
+}
+
+enum Kind {
+    /// One driver cycles `CHURN_WAVE` admissions/tick over the churn id
+    /// universe; each admission streams one full window and goes idle.
+    /// Single-threaded on purpose: cross-patient LRU order is the one
+    /// thing multi-monitor interleave would make nondeterministic.
+    Churn { sims: Vec<PatientSim> },
+    /// A steady bed: 250 Hz ECG + 1 Hz vitals, with an optional ECG
+    /// dropout interval `[start, end)` during which only vitals flow.
+    Steady { sim: PatientSim, dropout: Option<(u64, u64)> },
+    /// Two virtual ECG monitors on one bed, sample-interleaved; monitor
+    /// B's clock runs `skew_s` behind monitor A's.
+    Skewed { sim: PatientSim, skew_s: f64 },
+    /// A shift-change ghost admission: silent until `start`, then
+    /// streams exactly one window's worth of ECG and goes silent again.
+    Ghost { sim: PatientSim, start: u64, emitted: usize },
+    /// The frame-level hostile client: malformed-arity ECG aimed at a
+    /// real bed plus valid frames under absurd (near-`usize::MAX`)
+    /// patient ids. Byte-level hostility (corrupt bodies, slow loris)
+    /// lives in the replay driver — it never becomes a `Frame`.
+    Hostile,
+}
+
+/// One deterministic traffic source; the replay driver runs each on its
+/// own thread (its own `IngestClient` over `--http`).
+pub struct Monitor {
+    kind: Kind,
+    window_samples: usize,
+    /// Stable index for logging and connection naming.
+    pub index: usize,
+}
+
+impl Monitor {
+    pub fn tick(&mut self, t: u64) -> TickEmit {
+        let mut frames = Vec::new();
+        let mut sever = false;
+        match &mut self.kind {
+            Kind::Churn { sims } => {
+                let dt = CHURN_WINDOW_SPAN_S / self.window_samples as f64;
+                for k in 0..CHURN_WAVE {
+                    let pid = (t as usize * CHURN_WAVE + k) % CHURN_UNIVERSE;
+                    let sim = &mut sims[pid];
+                    for i in 0..self.window_samples {
+                        frames.push(Frame {
+                            patient: pid,
+                            modality: Modality::Ecg,
+                            sim_time: t as f64 + i as f64 * dt,
+                            values: sim.next_ecg().into(),
+                        });
+                    }
+                }
+            }
+            Kind::Steady { sim, dropout } => {
+                let in_dropout = dropout.is_some_and(|(s, e)| t >= s && t < e);
+                sever = dropout.is_some_and(|(s, _)| t == s);
+                if !in_dropout {
+                    frames.extend(sim.ecg_frames(t as f64, FRAMES_PER_TICK));
+                }
+                frames.push(Frame {
+                    patient: self.index,
+                    modality: Modality::Vitals,
+                    sim_time: t as f64,
+                    values: sim.next_vitals().into(),
+                });
+            }
+            Kind::Skewed { sim, skew_s } => {
+                let dt = 1.0 / FRAMES_PER_TICK as f64;
+                for i in 0..FRAMES_PER_TICK {
+                    let true_t = t as f64 + i as f64 * dt;
+                    // even samples come from monitor A (true clock),
+                    // odd from monitor B (clock behind by skew_s)
+                    let stamped = if i % 2 == 0 { true_t } else { true_t - *skew_s };
+                    frames.push(Frame {
+                        patient: self.index,
+                        modality: Modality::Ecg,
+                        sim_time: stamped,
+                        values: sim.next_ecg().into(),
+                    });
+                }
+            }
+            Kind::Ghost { sim, start, emitted } => {
+                if t >= *start && *emitted < self.window_samples {
+                    let n = FRAMES_PER_TICK.min(self.window_samples - *emitted);
+                    let dt = 1.0 / FRAMES_PER_TICK as f64;
+                    for i in 0..n {
+                        frames.push(Frame {
+                            patient: GHOST_ID_BASE + self.index,
+                            modality: Modality::Ecg,
+                            sim_time: t as f64 + i as f64 * dt,
+                            values: sim.next_ecg().into(),
+                        });
+                    }
+                    *emitted += n;
+                }
+            }
+            Kind::Hostile => {
+                // malformed lead arity on a real bed's id: must be
+                // counted malformed without touching that bed's windows
+                for i in 0..4 {
+                    frames.push(Frame {
+                        patient: 0,
+                        modality: Modality::Ecg,
+                        sim_time: t as f64 + i as f64 * 1e-3,
+                        values: [9.9].into(),
+                    });
+                }
+                // oversized ids: wire-valid, admitted as (useless)
+                // aggregators — bounded by the shard patient cap
+                let huge = usize::MAX - (t as usize % 3);
+                for i in 0..2 {
+                    frames.push(Frame {
+                        patient: huge,
+                        modality: Modality::Ecg,
+                        sim_time: t as f64 + i as f64 * 0.5,
+                        values: [0.5, 0.5, 0.5].into(),
+                    });
+                }
+            }
+        }
+        TickEmit { frames, sever }
+    }
+}
+
+/// Build the scenario's monitors. Deterministic in `cfg`; the budget
+/// dry run and the live drivers each call this once and must feed the
+/// monitors the same tick sequence `0..cfg.ticks`.
+pub fn monitors(cfg: &ScenarioCfg) -> Vec<Monitor> {
+    let sim = |id: usize, stream: u64| {
+        PatientSim::new(id, cfg.seed.wrapping_add(stream), cfg.synth.clone())
+    };
+    let mut out = Vec::new();
+    match cfg.scenario {
+        Scenario::Churn => {
+            let sims = (0..CHURN_UNIVERSE).map(|p| sim(p, p as u64)).collect();
+            out.push(Monitor { kind: Kind::Churn { sims }, window_samples: cfg.window_samples, index: 0 });
+        }
+        Scenario::DropoutResync => {
+            for p in 0..cfg.patients {
+                let start = cfg.ticks / 3 + (p as u64 % 3);
+                let len = (cfg.ticks / 4).max(2);
+                let dropout = (start < cfg.ticks).then_some((start, (start + len).min(cfg.ticks)));
+                out.push(Monitor {
+                    kind: Kind::Steady { sim: sim(p, p as u64), dropout },
+                    window_samples: cfg.window_samples,
+                    index: p,
+                });
+            }
+        }
+        Scenario::ClockSkew => {
+            let dt = 1.0 / FRAMES_PER_TICK as f64;
+            for p in 0..cfg.patients {
+                // even beds: bounded skew within one sample period —
+                // harmless. Odd beds: 2.5 periods behind — every B
+                // sample lands behind the window position and must shed.
+                let skew_s = if p % 2 == 0 { 0.5 * dt } else { 2.5 * dt };
+                out.push(Monitor {
+                    kind: Kind::Skewed { sim: sim(p, p as u64), skew_s },
+                    window_samples: cfg.window_samples,
+                    index: p,
+                });
+            }
+        }
+        Scenario::BurstStorm => {
+            for p in 0..cfg.patients {
+                out.push(Monitor {
+                    kind: Kind::Steady { sim: sim(p, p as u64), dropout: None },
+                    window_samples: cfg.window_samples,
+                    index: p,
+                });
+            }
+            let storm_start = cfg.ticks / 3;
+            for g in 0..3 * cfg.patients {
+                out.push(Monitor {
+                    kind: Kind::Ghost {
+                        sim: sim(GHOST_ID_BASE + g, 7_000 + g as u64),
+                        start: storm_start,
+                        emitted: 0,
+                    },
+                    window_samples: cfg.window_samples,
+                    index: g,
+                });
+            }
+        }
+        Scenario::HostileEdge => {
+            for p in 0..cfg.patients {
+                out.push(Monitor {
+                    kind: Kind::Steady { sim: sim(p, p as u64), dropout: None },
+                    window_samples: cfg.window_samples,
+                    index: p,
+                });
+            }
+            out.push(Monitor {
+                kind: Kind::Hostile,
+                window_samples: cfg.window_samples,
+                index: cfg.patients,
+            });
+        }
+    }
+    out
+}
+
+/// The exact fault budget a scenario injects, predicted by a dry run of
+/// the same generators through a model of the aggregation plane. The
+/// live run's counters must match these numbers exactly — any
+/// difference is an invariant breach.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultBudget {
+    /// Total frames the generators emit.
+    pub frames_sent: u64,
+    /// Frames the aggregators must reject for payload arity.
+    pub frames_malformed: u64,
+    /// ECG frames behind the window position (clock skew) — shed.
+    pub frames_stale: u64,
+    /// Frames dropped because the shard was at capacity with no idle
+    /// victim (zero in every shipped scenario: churn always leaves
+    /// idle aggregators to evict).
+    pub frames_overcap: u64,
+    /// Windows that complete — each must become exactly one query and
+    /// one prediction.
+    pub windows: u64,
+    /// Idle aggregators evicted for admission churn.
+    pub evictions: u64,
+    /// Monitor-link severs injected (HTTP replay: the reconnect floor).
+    pub severs: u64,
+}
+
+/// Dry-run the scenario against a model of the shard plane and return
+/// the exact expected counters.
+///
+/// The model mirrors `serving::shards::shard_loop` + `WindowAggregator`
+/// semantics: admission (with LRU idle eviction at `max_patients` per
+/// shard) happens for every frame, then the modality checks — arity →
+/// malformed, ECG older than the newest accepted sample → stale,
+/// otherwise the window fill advances.
+///
+/// Exactness argument for the interleave: monitors run concurrently in
+/// the live system, so the mirror is only exact where its sequential
+/// order can't matter. Per-patient decisions (stale, malformed, window
+/// completion) depend only on that patient's frame order, which each
+/// monitor preserves. Cross-patient decisions (eviction, overcap) are
+/// only ever triggered by the churn scenario — which drives all
+/// traffic from a single monitor precisely so that global order is
+/// deterministic.
+pub fn budget(cfg: &ScenarioCfg, shards: usize, max_patients: usize) -> FaultBudget {
+    struct AggModel {
+        fill: usize,
+        last_ecg: f64,
+    }
+    struct ShardModel {
+        aggs: HashMap<usize, AggModel>,
+        last_touch: HashMap<usize, u64>,
+        touch_seq: u64,
+    }
+    let mut plane: Vec<ShardModel> = (0..shards.max(1))
+        .map(|_| ShardModel { aggs: HashMap::new(), last_touch: HashMap::new(), touch_seq: 0 })
+        .collect();
+    let mut b = FaultBudget::default();
+    let mut mons = monitors(cfg);
+    for t in 0..cfg.ticks {
+        for mon in &mut mons {
+            let emit = mon.tick(t);
+            if emit.sever {
+                b.severs += 1;
+            }
+            for f in emit.frames {
+                b.frames_sent += 1;
+                let sh = &mut plane[f.patient % shards.max(1)];
+                if !sh.aggs.contains_key(&f.patient) {
+                    if sh.aggs.len() >= max_patients {
+                        let victim = sh
+                            .aggs
+                            .iter()
+                            .filter(|(_, a)| a.fill == 0)
+                            .map(|(&p, _)| (sh.last_touch.get(&p).copied().unwrap_or(0), p))
+                            .min();
+                        match victim {
+                            Some((_, victim)) => {
+                                sh.aggs.remove(&victim);
+                                sh.last_touch.remove(&victim);
+                                b.evictions += 1;
+                            }
+                            None => {
+                                b.frames_overcap += 1;
+                                continue;
+                            }
+                        }
+                    }
+                    sh.aggs.insert(f.patient, AggModel { fill: 0, last_ecg: f64::NEG_INFINITY });
+                }
+                sh.touch_seq += 1;
+                sh.last_touch.insert(f.patient, sh.touch_seq);
+                let agg = sh.aggs.get_mut(&f.patient).expect("inserted above");
+                match f.modality {
+                    Modality::Ecg => {
+                        if f.values.len() != 3 {
+                            b.frames_malformed += 1;
+                        } else if f.sim_time < agg.last_ecg {
+                            b.frames_stale += 1;
+                        } else {
+                            agg.last_ecg = f.sim_time;
+                            agg.fill += 1;
+                            if agg.fill >= cfg.window_samples {
+                                agg.fill = 0;
+                                b.windows += 1;
+                            }
+                        }
+                    }
+                    Modality::Vitals => {
+                        if f.values.len() != 7 {
+                            b.frames_malformed += 1;
+                        }
+                    }
+                    Modality::Labs => {
+                        if f.values.len() != 8 {
+                            b.frames_malformed += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(scenario: Scenario) -> ScenarioCfg {
+        ScenarioCfg {
+            scenario,
+            patients: 4,
+            ticks: 8,
+            seed: 11,
+            window_samples: 250,
+            synth: SynthConfig::default(),
+        }
+    }
+
+    #[test]
+    fn scenario_names_roundtrip() {
+        for s in Scenario::all() {
+            assert_eq!(Scenario::from_name(s.name()).unwrap(), s);
+        }
+        assert!(Scenario::from_name("nope").is_err());
+    }
+
+    #[test]
+    fn churn_budget_matches_closed_form() {
+        let b = budget(&cfg(Scenario::Churn), 2, CHURN_CAP_TOTAL / 2);
+        let admissions = 8 * CHURN_WAVE as u64; // ticks × wave
+        assert_eq!(b.windows, admissions, "every admission completes one window");
+        assert_eq!(b.frames_sent, admissions * 250);
+        assert_eq!(b.evictions, admissions - CHURN_CAP_TOTAL as u64);
+        assert_eq!(b.frames_overcap, 0, "an idle victim always exists");
+        assert_eq!(b.frames_stale + b.frames_malformed, 0);
+    }
+
+    #[test]
+    fn churn_budget_is_shard_count_invariant() {
+        let base = budget(&cfg(Scenario::Churn), 1, CHURN_CAP_TOTAL);
+        for shards in [2usize, 4, 8] {
+            let b = budget(&cfg(Scenario::Churn), shards, CHURN_CAP_TOTAL / shards);
+            assert_eq!(b, base, "{shards} shards");
+        }
+    }
+
+    #[test]
+    fn clock_skew_budget_sheds_only_the_lagging_monitor() {
+        let b = budget(&cfg(Scenario::ClockSkew), 1, 1024);
+        // odd beds (2 of 4) shed every B sample: 125 per tick × 8 ticks
+        assert_eq!(b.frames_stale, 2 * 125 * 8);
+        assert_eq!(b.frames_malformed, 0);
+        // even beds keep all 2000 samples → 8 windows each at 250/window;
+        // odd beds keep 1000 → 4 windows each
+        assert_eq!(b.windows, 2 * 8 + 2 * 4);
+    }
+
+    #[test]
+    fn dropout_budget_counts_severs_and_reduced_windows() {
+        let b = budget(&cfg(Scenario::DropoutResync), 4, 1024);
+        assert_eq!(b.severs, 4, "one link sever per bed");
+        let steady = budget(&cfg(Scenario::BurstStorm), 4, 1024);
+        assert!(b.windows < steady.windows, "dropout must cost windows");
+        assert_eq!(b.frames_stale, 0, "resync resumes on the true clock");
+    }
+
+    #[test]
+    fn hostile_budget_isolates_malformed_from_the_cohort() {
+        let b = budget(&cfg(Scenario::HostileEdge), 2, 1024);
+        assert_eq!(b.frames_malformed, 4 * 8, "4 malformed frames × 8 ticks");
+        assert_eq!(b.frames_stale, 0);
+        assert_eq!(b.frames_overcap, 0);
+        // the legit cohort's windows are untouched by the hostile noise:
+        // 4 beds × 8 ticks × 250 = 8000 accepted samples → 32 windows
+        assert_eq!(b.windows, 32);
+    }
+
+    #[test]
+    fn budgets_are_deterministic() {
+        for s in Scenario::all() {
+            assert_eq!(budget(&cfg(s), 2, 8), budget(&cfg(s), 2, 8), "{}", s.name());
+        }
+    }
+}

@@ -51,6 +51,25 @@ COMMANDS:
       --floor-acc AUC        degraded-mode accuracy floor    [0.8]
       --chaos                chaos harness: slowed backend, scripted
                              mid-run lane fault + ghost admission storm
+  replay                   deterministic adversarial scenario replay; exits
+                           nonzero when any scenario invariant is breached
+                           (falls back to the toy zoo without artifacts)
+      --scenario NAME        churn | dropout-resync | clock-skew |
+                             burst-storm | hostile-edge | all  [churn]
+      --seed N               scenario seed (same seed ⇒ bit-identical
+                             shed/evict/prediction accounting) [7]
+      --patients N --gpus N                                  [8, 2]
+      --duration SECS        simulated seconds (= ticks)     [12]
+      --speedup X            virtual-clock acceleration      [16]
+      --shards N             aggregation shards (0 = 2; churn needs a
+                             divisor of its 16-patient cap)  [0]
+      --workers N            executor pool threads (0 = auto) [0]
+      --slo-ms MS            recovery-phase p95 gate         [1000]
+      --http ADDR            stream over the HTTP ingest edge (forced
+                             on, auto-bound, for hostile-edge)
+      --edge-threads N       epoll event-loop threads        [0]
+      --govern               spawn the governor; adds the
+                             degrade-on-breach invariant
   profile                  measured latency profile (μ, T_s, T_q) of an ensemble
       --models id1,id2,...   zoo model ids (default: HOLMES servable pick)
       --gpus N --patients N                                  [2, 64]
@@ -78,7 +97,7 @@ fn run(argv: &[String]) -> Result<()> {
         &[
             "artifacts", "budget", "gpus", "patients", "seed", "window", "speedup", "duration",
             "http", "edge-threads", "models", "out", "shards", "workers", "slo-ms",
-            "control-tick-ms", "floor-acc",
+            "control-tick-ms", "floor-acc", "scenario",
         ],
     )?;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -167,6 +186,49 @@ fn run(argv: &[String]) -> Result<()> {
                     chaos: args.flag("chaos"),
                 },
             )?;
+        }
+        Some("replay") => {
+            // the replay gate must run in CI with no trained artifacts:
+            // fall back to the deterministic toy zoo (same fallback the
+            // bedside_sim example uses)
+            let zoo = match Zoo::load(&artifacts) {
+                Ok(zoo) => zoo,
+                Err(_) => {
+                    println!("no artifacts at {} — using toy zoo", artifacts.display());
+                    holmes::zoo::testkit::toy_zoo_with(9, 64, 21, 2500, &[1, 8])
+                }
+            };
+            let spec = args.get_or("scenario", "churn").to_string();
+            let scenarios: Vec<holmes::ingest::scenario::Scenario> = if spec == "all" {
+                holmes::ingest::scenario::Scenario::all().to_vec()
+            } else {
+                vec![holmes::ingest::scenario::Scenario::from_name(&spec)?]
+            };
+            let mut failed = 0usize;
+            for scenario in scenarios {
+                let report = exp::replay::run_replay(
+                    &zoo,
+                    exp::replay::ReplayConfig {
+                        scenario,
+                        seed: args.u64_or("seed", 7)?,
+                        patients: args.usize_or("patients", 8)?,
+                        duration_s: args.f64_or("duration", 12.0)? as u64,
+                        speedup: args.f64_or("speedup", 16.0)?,
+                        gpus: args.usize_or("gpus", 2)?,
+                        shards: args.usize_or("shards", 0)?,
+                        workers: args.usize_or("workers", 0)?,
+                        slo_ms: args.f64_or("slo-ms", 1000.0)?,
+                        http_addr: args.get("http").map(String::from),
+                        edge_threads: args.usize_or("edge-threads", 0)?,
+                        govern: args.flag("govern"),
+                    },
+                )?;
+                failed += usize::from(!report.violations.is_empty());
+            }
+            if failed > 0 {
+                eprintln!("replay: {failed} scenario(s) breached invariants");
+                std::process::exit(1);
+            }
         }
         Some("profile") => {
             let zoo = Zoo::load(&artifacts)?;

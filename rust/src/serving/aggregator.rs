@@ -52,6 +52,13 @@ pub struct WindowAggregator {
     last_labs: FrameValues,
     window_id: u64,
     dropped: u64,
+    /// Highest ECG `sim_time` accepted so far — the current window
+    /// position. Frames strictly older than this (a monitor whose clock
+    /// runs behind, or frames reordered in flight) would corrupt window
+    /// packing if written at `fill`, so they are dropped and counted in
+    /// `stale` instead.
+    last_ecg_time: f64,
+    stale: u64,
 }
 
 impl WindowAggregator {
@@ -84,6 +91,8 @@ impl WindowAggregator {
             last_labs: FrameValues::new(),
             window_id: 0,
             dropped: 0,
+            last_ecg_time: f64::NEG_INFINITY,
+            stale: 0,
         }
     }
 
@@ -100,6 +109,13 @@ impl WindowAggregator {
         self.dropped
     }
 
+    /// ECG frames rejected because their `sim_time` was strictly older
+    /// than the newest accepted sample (out-of-order / skewed-clock
+    /// arrivals). Disjoint from [`dropped`](Self::dropped).
+    pub fn stale(&self) -> u64 {
+        self.stale
+    }
+
     /// Push one frame; returns a completed window when ΔT fills up.
     pub fn push(&mut self, frame: &Frame) -> Option<WindowData> {
         if frame.patient != self.patient {
@@ -112,6 +128,16 @@ impl WindowAggregator {
                     self.dropped += 1;
                     return None;
                 }
+                // a lagging monitor clock must not rewind the window:
+                // samples land at `fill` regardless of timestamp, so an
+                // older frame would splice stale signal into the current
+                // interval. Equal timestamps are fine (two in-sync
+                // monitors covering the same bed).
+                if frame.sim_time < self.last_ecg_time {
+                    self.stale += 1;
+                    return None;
+                }
+                self.last_ecg_time = frame.sim_time;
                 let at = self.fill;
                 for (lead, &v) in self.leads.iter_mut().zip(frame.values.iter()) {
                     lead.as_mut_slice()[at] = v;
@@ -285,6 +311,46 @@ mod tests {
             values: [1.0, 2.0].into(),
         });
         assert_eq!(agg.dropped(), 2);
+    }
+
+    #[test]
+    fn skewed_two_monitor_interleave_drops_only_stale_frames() {
+        // monitor A is on true time; monitor B's clock runs 2.5 sample
+        // periods behind. Interleaving A/B sample-by-sample means every
+        // B frame arrives with a timestamp older than the A frame just
+        // accepted — each must be counted stale and must NOT advance
+        // the window, while A's samples pack a correct window.
+        let dt = 1.0 / 250.0;
+        let skew = 2.5 * dt;
+        let mut agg = WindowAggregator::new(0, 4);
+        let mut accepted = Vec::new();
+        for i in 0..10 {
+            let (t, v) = if i % 2 == 0 {
+                (i as f64 * dt, i as f32) // monitor A
+            } else {
+                (i as f64 * dt - skew, 1000.0 + i as f32) // monitor B, behind
+            };
+            if let Some(w) = agg.push(&ecg_frame(0, t, v)) {
+                accepted.push(w);
+            }
+        }
+        // i=1 is B's first frame: nothing accepted yet at a later time
+        // except A's i=0 at t=0 vs B at 1·dt−2.5·dt < 0 → stale too.
+        assert_eq!(agg.stale(), 5, "every B frame is behind the window position");
+        assert_eq!(agg.dropped(), 0, "stale is its own cause, not 'malformed'");
+        assert_eq!(accepted.len(), 1);
+        let w = &accepted[0];
+        assert_eq!(&w.leads[0][..], &[0.0, 2.0, 4.0, 6.0][..], "window holds A's stream only");
+        assert_eq!(agg.fill(), 1, "A's 5th sample started the next window");
+    }
+
+    #[test]
+    fn equal_timestamps_are_not_stale() {
+        let mut agg = WindowAggregator::new(0, 2);
+        agg.push(&ecg_frame(0, 1.0, 0.0));
+        let w = agg.push(&ecg_frame(0, 1.0, 1.0)).expect("in-sync duplicate timestamps pack");
+        assert_eq!(agg.stale(), 0);
+        assert_eq!(&w.leads[0][..], &[0.0, 1.0][..]);
     }
 
     #[test]

@@ -68,6 +68,28 @@
 //! re-probed with exponentially backed-off canary batches, and
 //! reinstated when the backend heals — previously it was dead forever.
 //!
+//! ## Adversarial scenario catalog (`holmes replay`)
+//!
+//! The serving plane's robustness claims are gated, not asserted in
+//! prose: `holmes replay --scenario <name> --seed <n>` drives this
+//! whole pipeline with a seeded fault scenario from
+//! [`crate::ingest::scenario`] and exits nonzero unless every live
+//! counter matches the scenario's precomputed fault budget and every
+//! latency/recovery invariant holds ([`crate::exp::replay`]):
+//!
+//! | scenario | fault shape | gated invariants |
+//! |---|---|---|
+//! | `churn` | admission/discharge waves cycling a 2×-capacity id universe through the shard LRU | zero drops; evictions = admissions − capacity, identical on 1/2/8 shards; every admission's window predicts |
+//! | `dropout-resync` | per-bed ECG dropout + TCP link sever mid-run, vitals continue | every window resolves; zero stale sheds on resync; client redials ≥ severs (HTTP) |
+//! | `clock-skew` | two virtual monitors per bed, one clock 2.5 sample periods behind | stale sheds exactly equal the budget; windows unaffected on in-skew beds |
+//! | `burst-storm` | 3×-bed ghost admission wave on a slowed backend | every admitted query resolves; p95 back under SLO after the storm (`recovery_p95`) |
+//! | `hostile-edge` | malformed arities, absurd patient ids, corrupt/truncated/NaN wire bodies, conn flood, slow loris | all bad bodies 400'd; flood 503s = over-cap counter; loris conns reaped; cohort windows untouched |
+//!
+//! The same seed reproduces the same shed/evict/window/prediction
+//! accounting — including a score fingerprint — bit for bit across
+//! shard and worker counts (`tests/replay.rs`); three scenarios run
+//! seeded in CI beside the bedside smokes.
+//!
 //! Stateful compute (aggregation) and stateless compute (model
 //! inference) are separated exactly as the paper requires of its
 //! serving platform.

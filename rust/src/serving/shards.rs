@@ -235,6 +235,7 @@ fn shard_loop<S: FnMut(WindowData)>(
                     None => {
                         dropped[shard].fetch_add(1, Ordering::Relaxed);
                         telemetry.frames_dropped.fetch_add(1, Ordering::Relaxed);
+                        telemetry.frames_dropped_overcap.fetch_add(1, Ordering::Relaxed);
                         telemetry.ingest.record(t0.elapsed());
                         continue;
                     }
@@ -249,11 +250,21 @@ fn shard_loop<S: FnMut(WindowData)>(
         last_touch.insert(frame.patient, touch_seq);
         let agg = aggs.get_mut(&frame.patient).expect("inserted above");
         let dropped_before = agg.dropped();
+        let stale_before = agg.stale();
         let window = agg.push(&frame);
-        let delta = agg.dropped() - dropped_before;
-        if delta > 0 {
-            dropped[shard].fetch_add(delta, Ordering::Relaxed);
-            telemetry.frames_dropped.fetch_add(delta, Ordering::Relaxed);
+        let malformed = agg.dropped() - dropped_before;
+        if malformed > 0 {
+            dropped[shard].fetch_add(malformed, Ordering::Relaxed);
+            telemetry.frames_dropped.fetch_add(malformed, Ordering::Relaxed);
+            telemetry.frames_dropped_malformed.fetch_add(malformed, Ordering::Relaxed);
+        }
+        // out-of-order ECG (skewed monitor clock) is its own drop cause
+        // so replay invariants can match it against an injected budget
+        let stale = agg.stale() - stale_before;
+        if stale > 0 {
+            dropped[shard].fetch_add(stale, Ordering::Relaxed);
+            telemetry.frames_dropped.fetch_add(stale, Ordering::Relaxed);
+            telemetry.frames_stale.fetch_add(stale, Ordering::Relaxed);
         }
         if let Some(w) = window {
             sink(w);
@@ -336,7 +347,37 @@ mod tests {
         let dropped = router.join().unwrap();
         assert_eq!(dropped, vec![0, 2]);
         assert_eq!(tel.frames_dropped.load(Ordering::Relaxed), 2);
+        assert_eq!(tel.frames_dropped_malformed.load(Ordering::Relaxed), 2);
         assert_eq!(tel.frames.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn stale_frames_count_per_shard_and_by_cause() {
+        let tel = Arc::new(Telemetry::default());
+        let (router, tx) = ShardRouter::spawn(
+            ShardConfig { shards: 2, queue_depth: 16, ..ShardConfig::default() },
+            4,
+            Arc::clone(&tel),
+            |_| |_w: WindowData| {},
+        )
+        .unwrap();
+        let at = |t: f64| Frame {
+            patient: 1, // shard 1
+            modality: Modality::Ecg,
+            sim_time: t,
+            values: [1.0, 1.0, 1.0].into(),
+        };
+        tx.send(at(5.0)).unwrap();
+        tx.send(at(3.0)).unwrap(); // behind the window position → stale
+        tx.send(at(4.0)).unwrap(); // still behind → stale
+        tx.send(at(5.0)).unwrap(); // equal is in-sync, accepted
+        drop(tx);
+        let dropped = router.join().unwrap();
+        assert_eq!(dropped, vec![0, 2], "stale drops roll into the per-shard totals");
+        assert_eq!(tel.frames_dropped.load(Ordering::Relaxed), 2);
+        assert_eq!(tel.frames_stale.load(Ordering::Relaxed), 2);
+        assert_eq!(tel.frames_dropped_malformed.load(Ordering::Relaxed), 0);
+        assert_eq!(tel.frames_dropped_overcap.load(Ordering::Relaxed), 0);
     }
 
     #[test]
@@ -400,6 +441,7 @@ mod tests {
         let dropped = router.join().unwrap();
         assert_eq!(dropped, vec![40], "no idle victim → over-cap ids drop");
         assert_eq!(tel.frames_dropped.load(Ordering::Relaxed), 40);
+        assert_eq!(tel.frames_dropped_overcap.load(Ordering::Relaxed), 40);
         assert_eq!(tel.patients_evicted.load(Ordering::Relaxed), 0);
     }
 

@@ -339,6 +339,18 @@ pub struct Telemetry {
     /// breakdowns live on the shard router
     /// ([`super::shards::ShardRouter::dropped_per_shard`]).
     pub frames_dropped: AtomicU64,
+    /// Per-cause breakdown of `frames_dropped` — the three causes
+    /// partition the total exactly, so replay invariants can assert an
+    /// injected fault budget against each one:
+    /// malformed payload (bad lead arity, wrong patient),
+    pub frames_dropped_malformed: AtomicU64,
+    /// new patient refused because the shard was at
+    /// `ShardConfig::max_patients` with no idle aggregator to evict,
+    pub frames_dropped_overcap: AtomicU64,
+    /// and ECG frames older than the window position (skewed monitor
+    /// clocks / out-of-order arrival — see
+    /// [`super::WindowAggregator::stale`]).
+    pub frames_stale: AtomicU64,
     /// Queries evicted because a member could not score them.
     pub failures: AtomicU64,
     /// Idle patient aggregators evicted (least-recently-updated) to
@@ -353,8 +365,14 @@ pub struct Telemetry {
     pub conns_active: AtomicUsize,
     /// Connections accepted by the ingest edge, lifetime total.
     pub conns_accepted: AtomicU64,
-    /// Connections refused with `503` at the gate, lifetime total.
+    /// Connections refused with `503` at the gate, lifetime total
+    /// (= `conns_refused_overcap` + `conns_refused_handshake`).
     pub conns_refused: AtomicU64,
+    /// Refused because `conns_active` was at `max_connections`.
+    pub conns_refused_overcap: AtomicU64,
+    /// Accepted by the listener but torn down before serving a request
+    /// because edge setup failed (epoll registration, handler spawn).
+    pub conns_refused_handshake: AtomicU64,
     /// Connections reaped by the idle/read deadline (slow-loris sweep).
     pub conns_reaped: AtomicU64,
     /// Executor gauges, installed once by `Pipeline::spawn` (absent for
@@ -437,12 +455,17 @@ impl Telemetry {
             conns_active: self.conns_active.load(Ordering::Relaxed) as u64,
             conns_accepted: self.conns_accepted.load(Ordering::Relaxed),
             conns_refused: self.conns_refused.load(Ordering::Relaxed),
+            conns_refused_overcap: self.conns_refused_overcap.load(Ordering::Relaxed),
+            conns_refused_handshake: self.conns_refused_handshake.load(Ordering::Relaxed),
             conns_reaped: self.conns_reaped.load(Ordering::Relaxed),
             edge_ready_events: self.edge.get().map(|g| g.ready_events()).unwrap_or_default(),
             queries: self.queries.load(Ordering::Relaxed),
             model_jobs: self.model_jobs.load(Ordering::Relaxed),
             frames: self.frames.load(Ordering::Relaxed),
             frames_dropped: self.frames_dropped.load(Ordering::Relaxed),
+            frames_dropped_malformed: self.frames_dropped_malformed.load(Ordering::Relaxed),
+            frames_dropped_overcap: self.frames_dropped_overcap.load(Ordering::Relaxed),
+            frames_stale: self.frames_stale.load(Ordering::Relaxed),
             failures: self.failures.load(Ordering::Relaxed),
             patients_evicted: self.patients_evicted.load(Ordering::Relaxed),
             e2e_mean: self.e2e.mean(),
@@ -489,6 +512,10 @@ pub struct TelemetrySnapshot {
     /// Connections accepted / refused (503) / idle-reaped, lifetime.
     pub conns_accepted: u64,
     pub conns_refused: u64,
+    /// Per-cause refusal split: gate over `max_connections` vs accepted
+    /// but torn down during edge setup.
+    pub conns_refused_overcap: u64,
+    pub conns_refused_handshake: u64,
     pub conns_reaped: u64,
     /// Readiness events handled per event loop (empty on the
     /// thread-per-conn fallback edge).
@@ -497,6 +524,11 @@ pub struct TelemetrySnapshot {
     pub model_jobs: u64,
     pub frames: u64,
     pub frames_dropped: u64,
+    /// Per-cause drop split (malformed + overcap + stale =
+    /// `frames_dropped`).
+    pub frames_dropped_malformed: u64,
+    pub frames_dropped_overcap: u64,
+    pub frames_stale: u64,
     pub failures: u64,
     /// Idle patient aggregators evicted for admission churn.
     pub patients_evicted: u64,
@@ -533,12 +565,17 @@ impl TelemetrySnapshot {
             ("conns_active", Value::Num(self.conns_active as f64)),
             ("conns_accepted", Value::Num(self.conns_accepted as f64)),
             ("conns_refused", Value::Num(self.conns_refused as f64)),
+            ("conns_refused_overcap", Value::Num(self.conns_refused_overcap as f64)),
+            ("conns_refused_handshake", Value::Num(self.conns_refused_handshake as f64)),
             ("conns_reaped", Value::Num(self.conns_reaped as f64)),
             ("edge_ready_events", nums(&self.edge_ready_events)),
             ("queries", Value::Num(self.queries as f64)),
             ("model_jobs", Value::Num(self.model_jobs as f64)),
             ("frames", Value::Num(self.frames as f64)),
             ("frames_dropped", Value::Num(self.frames_dropped as f64)),
+            ("frames_dropped_malformed", Value::Num(self.frames_dropped_malformed as f64)),
+            ("frames_dropped_overcap", Value::Num(self.frames_dropped_overcap as f64)),
+            ("frames_stale", Value::Num(self.frames_stale as f64)),
             ("failures", Value::Num(self.failures as f64)),
             ("patients_evicted", Value::Num(self.patients_evicted as f64)),
             ("e2e_mean", Value::Num(self.e2e_mean)),
@@ -682,6 +719,12 @@ mod tests {
         assert!(s.contains("conns_active"));
         assert!(s.contains("conns_accepted"));
         assert!(s.contains("edge_ready_events"));
+        // per-cause splits for the replay harness's budget assertions
+        assert!(s.contains("frames_dropped_malformed"));
+        assert!(s.contains("frames_dropped_overcap"));
+        assert!(s.contains("frames_stale"));
+        assert!(s.contains("conns_refused_overcap"));
+        assert!(s.contains("conns_refused_handshake"));
     }
 
     #[test]
