@@ -191,7 +191,15 @@ pub struct BedsideReport {
 }
 
 /// Run the simulation to completion and report latency + accuracy.
+///
+/// SIGTERM / ctrl-c triggers a graceful drain instead of a hard exit:
+/// generators stop at the next tick, heartbeat responses advertise
+/// `"draining":true` (so an upstream router re-homes this node's beds
+/// before the edge closes), the shard queues and in-flight queries
+/// drain through the normal teardown below, the final telemetry
+/// snapshot prints, and the process exits 0.
 pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
+    crate::signal::install_shutdown_handler();
     let ensemble = super::fig10_scalability::holmes_servable_ensemble(zoo, 0.2);
     let n_shards =
         if cfg.shards == 0 { crate::serving::default_shards() } else { cfg.shards };
@@ -359,6 +367,9 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
             let mut batch: Vec<Frame> = Vec::with_capacity(251);
             let mut sim_t = 0.0f64;
             while sim_t < duration {
+                if crate::signal::shutdown_requested() {
+                    break; // SIGTERM: stop emitting, drain behind us
+                }
                 // one simulated second per tick: 250 ECG samples + 1 vitals
                 clock.sleep_until_sim(sim_t);
                 batch.clear();
@@ -407,6 +418,9 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
                 let mut batch: Vec<Frame> = Vec::with_capacity(251);
                 let mut sim_t = storm_start;
                 while sim_t < storm_start + storm_span {
+                    if crate::signal::shutdown_requested() {
+                        return;
+                    }
                     clock.sleep_until_sim(sim_t);
                     batch.clear();
                     batch.extend(sim.ecg_frames(sim_t, 250));
@@ -449,6 +463,27 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
     for h in gen_handles {
         let _ = h.join();
     }
+    // ingest-only node (`--patients 0`, e.g. a peer behind the router
+    // tier): no local generators pace the run, so hold the edge open
+    // until the configured duration elapses on the wall — or a shutdown
+    // signal starts the drain early
+    if cfg.patients == 0 && !cfg.chaos && http.is_some() {
+        let wall_end = t_start + Duration::from_secs_f64(cfg.duration_s / cfg.speedup);
+        while Instant::now() < wall_end && !crate::signal::shutdown_requested() {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+    if crate::signal::shutdown_requested() {
+        // graceful drain: advertise the drain on ingest heartbeats long
+        // enough for an upstream router to flush its link and re-home
+        // this node's beds, then fall through to the normal teardown
+        // (shard join → pipeline drain → report) and exit 0
+        telemetry.draining.store(true, Ordering::Relaxed);
+        println!("shutdown requested: draining (heartbeats now advertise it)");
+        if http.is_some() {
+            std::thread::sleep(Duration::from_millis(600));
+        }
+    }
     // stop the HTTP server BEFORE joining the shard plane: its accept
     // thread holds a ShardSender clone, so the shard workers (and thus
     // the join below) would otherwise never see their channels close
@@ -481,8 +516,12 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
     let mut labels_v = Vec::with_capacity(pred_rows.len());
     let mut scores_v = Vec::with_capacity(pred_rows.len());
     for (pid, score) in &pred_rows {
-        labels_v.push(labels[pid]);
-        scores_v.push(*score);
+        // remotely ingested patients (a `--patients 0` node behind the
+        // router tier) have no local ground truth — skip them in the AUC
+        if let Some(&label) = labels.get(pid) {
+            labels_v.push(label);
+            scores_v.push(*score);
+        }
     }
     let auc = roc_auc(&labels_v, &scores_v);
     let batches_per_worker = telemetry
@@ -566,6 +605,24 @@ fn print_report(r: &BedsideReport, telemetry: &Telemetry) {
             "dead lanes           {:>12?}  (end of run; retries absorbed: {})",
             g.dead_lanes(),
             r.exec_retries
+        );
+    }
+    if let Some(g) = telemetry.router() {
+        let ordering = Ordering::Relaxed;
+        println!(
+            "router peers         {:>12?}  state (0 healthy / 1 suspect / 2 dead / 3 draining)",
+            g.peer_states()
+        );
+        println!("  frames forwarded   {:>12?}  (per peer)", g.frames_forwarded());
+        println!("  forward retries    {:>12?}  (per peer)", g.forward_retries());
+        println!("  spill depth        {:>12?}  (per peer, end of run)", g.spill_depths());
+        println!(
+            "  patients re-homed  {:>12}  (spilled {}, replayed {}, overflow {}, reinstated {})",
+            g.patients_rehomed.load(ordering),
+            g.spilled_total.load(ordering),
+            g.spill_replayed.load(ordering),
+            g.spill_overflow.load(ordering),
+            g.peers_reinstated.load(ordering)
         );
     }
     if telemetry.governor().is_some() {

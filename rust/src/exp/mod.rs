@@ -12,6 +12,7 @@ pub mod fig13_window;
 pub mod fig2_staleness;
 pub mod fig9_timeline;
 pub mod replay;
+pub mod route;
 pub mod search_suite;
 
 use std::path::Path;

@@ -11,8 +11,14 @@
 //! the injected fault budget exactly", "the p95 is back under the SLO
 //! after the fault clears", "the governor degraded when the tail
 //! breached") and [`check_invariants`] turns any miss into a violation
-//! the binary exits nonzero on. Three scenarios run seeded in CI beside
+//! the binary exits nonzero on. Four scenarios run seeded in CI beside
 //! the bedside smokes.
+//!
+//! With `route_peers > 0` the cohort streams through the consistent-
+//! hash [`Router`] into N independent serving stacks instead of one —
+//! and `node-loss` scripts a mid-cohort peer kill + same-port restart
+//! on top, holding the re-home/spill/reinstate counters against the
+//! scenario's ring-mirror budget.
 //!
 //! Determinism contract: with the same `(scenario, seed)` the
 //! accounting — shed/evict/window/prediction counts **and** the
@@ -29,7 +35,7 @@
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::ingest::scenario::{
@@ -39,9 +45,10 @@ use crate::ingest::synth::SynthConfig;
 use crate::ingest::VirtualClock;
 use crate::profiler::ServiceTimes;
 use crate::runtime::{Engine, SimBackend};
+use crate::router::{HealthConfig, Ring, Router, RouterConfig};
 use crate::serving::pipeline::{Pipeline, PipelineConfig, Query};
 use crate::serving::shards::{ShardConfig, ShardRouter};
-use crate::serving::{Governor, GovernorConfig};
+use crate::serving::{Governor, GovernorConfig, ShardSender, Telemetry};
 use crate::zoo::Zoo;
 use crate::{Error, Result};
 
@@ -89,6 +96,12 @@ pub struct ReplayConfig {
     /// Spawn the governor control plane; adds the degrade-on-breach
     /// invariant but makes scores nondeterministic across runs.
     pub govern: bool,
+    /// Run the cohort through the router tier: N in-process peer
+    /// stacks (own shard plane + executor pipeline + ingest edge on a
+    /// loopback port) behind a consistent-hash [`Router`]. 0 = direct
+    /// single-stack serving. `node-loss` forces this on (2 peers) —
+    /// its whole point is the failover.
+    pub route_peers: usize,
 }
 
 impl Default for ReplayConfig {
@@ -106,6 +119,7 @@ impl Default for ReplayConfig {
             http_addr: None,
             edge_threads: 0,
             govern: false,
+            route_peers: 0,
         }
     }
 }
@@ -174,6 +188,21 @@ pub struct ReplayReport {
     pub conns_refused_handshake: u64,
     pub conns_reaped: u64,
     pub hostile: Option<HostileOutcome>,
+    /// Peer count when the run went through the router tier; 0 = direct.
+    pub route_peers: usize,
+    /// Frames parked in link spill buffers while a peer was down
+    /// (`router_spilled_total`).
+    pub frames_spilled: u64,
+    /// Stranded frames replayed through survivors at failover — must
+    /// equal `frames_spilled`, or the spill lost data.
+    pub spill_replayed: u64,
+    /// Spill-cap overruns (dropped frames) — must be 0.
+    pub spill_overflow: u64,
+    /// Sticky owner-map rewrites at death/drain — must equal the
+    /// budget's ring-mirror count exactly.
+    pub patients_rehomed: u64,
+    /// Canary-probe reinstatements of recovered peers.
+    pub peers_reinstated: u64,
     pub governor_degraded_entered: u64,
     pub governor_swaps: u64,
     pub wall_s: f64,
@@ -225,6 +254,30 @@ pub fn check_invariants(r: &ReplayReport) -> Vec<String> {
     eq("queries submitted", a.queries_submitted, b.windows);
     eq("predictions resolved", a.predictions, b.windows);
     eq("unresolved queries at exit", a.unresolved, 0);
+    if r.route_peers > 0 {
+        eq("patients re-homed", r.patients_rehomed, b.rehomed_patients);
+    }
+    if r.route_peers > 0 {
+        if r.spill_replayed != r.frames_spilled {
+            v.push(format!(
+                "{} frames spilled but {} replayed — frames lost in the spill buffer",
+                r.frames_spilled, r.spill_replayed
+            ));
+        }
+        if r.spill_overflow > 0 {
+            v.push(format!("{} frames dropped to spill overflow", r.spill_overflow));
+        }
+        if b.rehomed_patients > 0 {
+            if r.frames_spilled == 0 {
+                v.push(
+                    "node loss spilled nothing — the kill landed after the cohort finished".into(),
+                );
+            }
+            if r.peers_reinstated == 0 {
+                v.push("the restarted peer was never reinstated by a canary probe".into());
+            }
+        }
+    }
     if r.recovery_n > 0 && r.recovery_p95 > r.slo_s {
         v.push(format!(
             "recovery p95 {:.3}s still above the {:.3}s SLO after the fault cleared",
@@ -277,7 +330,14 @@ pub fn check_invariants(r: &ReplayReport) -> Vec<String> {
 
 /// Run one scenario to completion and return the checked report (the
 /// CLI exits nonzero when `violations` is non-empty).
-pub fn run_replay(zoo: &Zoo, cfg: ReplayConfig) -> Result<ReplayReport> {
+pub fn run_replay(zoo: &Zoo, mut cfg: ReplayConfig) -> Result<ReplayReport> {
+    if cfg.scenario == Scenario::NodeLoss && cfg.route_peers == 0 {
+        // node loss IS a router scenario: the budget mirrors a 2-peer ring
+        cfg.route_peers = 2;
+    }
+    if cfg.route_peers > 0 {
+        return run_replay_routed(zoo, cfg);
+    }
     let n_shards = if cfg.shards == 0 { 2 } else { cfg.shards };
     let n_workers =
         if cfg.workers == 0 { crate::serving::default_workers_for(cfg.gpus) } else { cfg.workers };
@@ -565,10 +625,434 @@ pub fn run_replay(zoo: &Zoo, cfg: ReplayConfig) -> Result<ReplayReport> {
         conns_refused_handshake: telemetry.conns_refused_handshake.load(ordering),
         conns_reaped: telemetry.conns_reaped.load(ordering),
         hostile,
+        route_peers: 0,
+        frames_spilled: 0,
+        spill_replayed: 0,
+        spill_overflow: 0,
+        patients_rehomed: 0,
+        peers_reinstated: 0,
         governor_degraded_entered: gov
             .map(|g| g.degraded_entered.load(ordering))
             .unwrap_or(0),
         governor_swaps: gov.map(|g| g.swaps.load(ordering)).unwrap_or(0),
+        wall_s: t_start.elapsed().as_secs_f64(),
+        violations: Vec::new(),
+    };
+    report.violations = check_invariants(&report);
+    print_report(&report);
+    Ok(report)
+}
+
+/// One downstream serving stack behind the router: its own shard
+/// plane, executor pipeline, telemetry, and ingest edge on a loopback
+/// port. The executor [`Engine`] (device permits, profiles) is shared
+/// across peers — node loss is a serving-plane fault, not a device
+/// fault.
+struct PeerStack {
+    server: crate::http::HttpServer,
+    frame_tx: ShardSender,
+    shard_router: ShardRouter,
+    pipeline: Pipeline,
+    telemetry: Arc<Telemetry>,
+}
+
+/// Two-phase rendezvous for the node-loss kill script: every monitor
+/// checks in after delivering the kill tick, the script freezes and
+/// tears down the victim on that (empty-fill) tick boundary, then
+/// releases the cohort into the outage. This keeps the fault budget
+/// exact — a wall-clock-raced kill could land mid-window and strand a
+/// partial aggregation fill in the dying stack.
+struct KillFence {
+    /// (monitors past the kill tick, script done — cohort may resume)
+    state: Mutex<(usize, bool)>,
+    cv: Condvar,
+}
+
+impl KillFence {
+    fn new() -> Self {
+        KillFence { state: Mutex::new((0, false)), cv: Condvar::new() }
+    }
+
+    /// Monitor side: check in after the kill tick's frames are
+    /// delivered, block until the script releases the cohort.
+    fn check_in_and_wait(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.0 += 1;
+        self.cv.notify_all();
+        while !st.1 {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Script side: wait for every monitor to clear the kill tick.
+    fn wait_all(&self, n: usize) {
+        let mut st = self.state.lock().unwrap();
+        while st.0 < n {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn release(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.1 = true;
+        self.cv.notify_all();
+    }
+}
+
+/// The routed replay: the cohort streams through a [`Router`] into
+/// `route_peers` independent serving stacks, each owning a
+/// consistent-hash share of the patients. For `node-loss` the driver
+/// additionally runs the scripted chaos: kill the peer that owns
+/// patient 0 a third of the way in (its frames spill, the heartbeat
+/// prober declares it dead, its patients re-home to the survivor and
+/// the spill replays), restart it on the **same port** two thirds in
+/// (a canary probe reinstates it), and admit a second patient wave
+/// that the returnee can pick up. Every count is then held against the
+/// scenario's ring-mirror budget by [`check_invariants`].
+fn run_replay_routed(zoo: &Zoo, cfg: ReplayConfig) -> Result<ReplayReport> {
+    let n_peers = cfg.route_peers;
+    match cfg.scenario {
+        Scenario::Churn => {
+            return Err(Error::config(
+                "churn's LRU budget models one shard plane — it cannot run routed",
+            ))
+        }
+        Scenario::HostileEdge => {
+            return Err(Error::config(
+                "hostile-edge attacks the direct ingest edge — it cannot run routed",
+            ))
+        }
+        Scenario::NodeLoss if n_peers != 2 => {
+            return Err(Error::config(
+                "node-loss's fault budget mirrors a 2-peer ring; use --route-peers 2",
+            ))
+        }
+        _ => {}
+    }
+    if cfg.govern {
+        return Err(Error::config("--govern is per-stack; it is not supported routed"));
+    }
+    if cfg.http_addr.is_some() {
+        return Err(Error::config(
+            "routed replay drives the router sink in-process; use `holmes route` for a wire-level router tier",
+        ));
+    }
+
+    let n_shards = if cfg.shards == 0 { 2 } else { cfg.shards };
+    let n_workers =
+        if cfg.workers == 0 { crate::serving::default_workers_for(cfg.gpus) } else { cfg.workers };
+    let clip_len = zoo.manifest.clip_len;
+    let scfg = ScenarioCfg {
+        scenario: cfg.scenario,
+        patients: cfg.patients,
+        ticks: cfg.duration_s,
+        seed: cfg.seed,
+        window_samples: clip_len,
+        synth: SynthConfig::from(&zoo.manifest.calibration),
+    };
+    let max_patients = ShardConfig::default().max_patients;
+    let expected = budget(&scfg, n_shards, max_patients);
+    println!(
+        "replay: scenario {} seed {} — {} patients, {} ticks, routed over {} peers \
+         ({} shards, {} workers each), speedup {}×, SLO {} ms",
+        cfg.scenario.name(),
+        cfg.seed,
+        cfg.patients,
+        cfg.duration_s,
+        n_peers,
+        n_shards,
+        n_workers,
+        cfg.speedup,
+        cfg.slo_ms,
+    );
+    println!(
+        "fault budget: {} frames → {} windows | malformed {} stale {} overcap {} \
+         evictions {} severs {} re-homed {}",
+        expected.frames_sent,
+        expected.windows,
+        expected.frames_malformed,
+        expected.frames_stale,
+        expected.frames_overcap,
+        expected.evictions,
+        expected.severs,
+        expected.rehomed_patients,
+    );
+
+    let ensemble = super::fig10_scalability::holmes_servable_ensemble(zoo, 0.2);
+    let engine = if cfg.scenario == Scenario::BurstStorm {
+        let times = ServiceTimes::from_macs(zoo, 5e-4, 2e10);
+        let backend = SimBackend::with_times(times, STORM_TIME_SCALE);
+        Engine::with_backend(zoo, cfg.gpus, Arc::new(backend))?
+    } else {
+        Engine::new(zoo, cfg.gpus)?
+    };
+    for &m in ensemble.indices() {
+        for &b in engine.batch_sizes() {
+            engine.profile_model((m, b), 1)?;
+        }
+    }
+
+    let t_start = Instant::now();
+    let slo = Duration::from_secs_f64((cfg.slo_ms / 1000.0).max(0.001));
+    let submitted = Arc::new(AtomicU64::new(0));
+    let (pred_tx, pred_rx) = mpsc::channel::<(usize, u64, f64, f64, f64)>();
+
+    // one full serving stack per peer; the closure is reused by the
+    // node-loss rolling restart to rebuild the victim on its old port
+    let spawn_stack = |listen: &str| -> Result<PeerStack> {
+        let pipeline = Pipeline::spawn(
+            zoo,
+            &engine,
+            PipelineConfig::new(ensemble.clone()).with_workers(n_workers).with_slo(slo),
+        )?;
+        let telemetry = Arc::clone(pipeline.telemetry());
+        let (shard_router, frame_tx) = ShardRouter::spawn(
+            ShardConfig { shards: n_shards, max_patients, ..ShardConfig::default() },
+            clip_len,
+            Arc::clone(&telemetry),
+            |_shard| {
+                let pipeline = pipeline.clone();
+                let pred_tx = pred_tx.clone();
+                let submitted = Arc::clone(&submitted);
+                move |window| {
+                    let q = Query::from_window(window);
+                    if let Ok(rx) = pipeline.submit(q) {
+                        submitted.fetch_add(1, Ordering::Relaxed);
+                        let pred_tx = pred_tx.clone();
+                        std::thread::spawn(move || {
+                            if let Ok(p) = rx.recv() {
+                                let _ = pred_tx.send((
+                                    p.patient,
+                                    p.window_id,
+                                    p.sim_end,
+                                    p.score,
+                                    p.e2e.as_secs_f64(),
+                                ));
+                            }
+                        });
+                    }
+                }
+            },
+        )?;
+        let server = crate::http::serve_with(
+            listen,
+            frame_tx.clone(),
+            Arc::clone(&telemetry),
+            crate::http::HttpConfig {
+                edge_threads: cfg.edge_threads,
+                ..crate::http::HttpConfig::default()
+            },
+        )?;
+        Ok(PeerStack { server, frame_tx, shard_router, pipeline, telemetry })
+    };
+
+    let mut stacks: Vec<Option<PeerStack>> = Vec::with_capacity(n_peers);
+    for _ in 0..n_peers {
+        stacks.push(Some(spawn_stack("127.0.0.1:0")?));
+    }
+    let peer_addrs: Vec<SocketAddr> =
+        stacks.iter().map(|s| s.as_ref().expect("fresh stack").server.addr).collect();
+    for (i, addr) in peer_addrs.iter().enumerate() {
+        println!("routed peer {i} serving on {addr}");
+    }
+
+    // fast probe cadence so failure detection and canary reinstatement
+    // fit inside a sped-up replay; dead_after 3 keeps a single dropped
+    // probe from flapping a healthy peer out of the ring
+    let health = HealthConfig {
+        probe_interval: Duration::from_millis(10),
+        dead_after: 3,
+        backoff_init: 1,
+        backoff_max: 4,
+        connect_timeout: Duration::from_millis(100),
+        io_timeout: Duration::from_millis(250),
+    };
+    let mut rcfg = RouterConfig::new(peer_addrs.clone());
+    rcfg.health = health;
+    let router = Router::new(&rcfg)?;
+    let prober = router.spawn_prober(health);
+
+    // the scripted chaos targets the peer that owns patient 0 — the
+    // same victim the scenario's budget mirror computes its re-home
+    // count for
+    let kill_tick = cfg.duration_s / 3;
+    let restart_tick = cfg.duration_s * 2 / 3;
+    let victim = Ring::new(n_peers).route(0);
+    let fence = (cfg.scenario == Scenario::NodeLoss).then(|| Arc::new(KillFence::new()));
+
+    let frames_sent = Arc::new(AtomicU64::new(0));
+    // anchored now, alongside the monitors' clocks — the kill script's
+    // restart tick is measured from run start, not from the kill
+    let script_clock = VirtualClock::new(cfg.speedup);
+    let mut handles = Vec::new();
+    for mut mon in monitors(&scfg) {
+        let sink = router.sink();
+        let clock = VirtualClock::new(cfg.speedup);
+        let ticks = cfg.duration_s;
+        let frames_sent = Arc::clone(&frames_sent);
+        let fence = fence.clone();
+        handles.push(std::thread::spawn(move || {
+            for t in 0..ticks {
+                clock.sleep_until_sim(t as f64);
+                let emit = mon.tick(t);
+                // emit.sever models the bedside TCP hop dying; routed
+                // delivery is in-process, so there is no link to cut
+                if !emit.frames.is_empty() {
+                    frames_sent.fetch_add(emit.frames.len() as u64, Ordering::Relaxed);
+                    for f in &emit.frames {
+                        if let Err(e) = sink.deliver(*f) {
+                            eprintln!("monitor {}: routed delivery failed at tick {t}: {e}", mon.index);
+                            return;
+                        }
+                    }
+                }
+                if let Some(fence) = &fence {
+                    if t == kill_tick {
+                        fence.check_in_and_wait();
+                    }
+                }
+            }
+        }));
+    }
+
+    let mut retired_pipelines: Vec<Pipeline> = Vec::new();
+    let mut retired_telemetry: Vec<Arc<Telemetry>> = Vec::new();
+    if let Some(fence) = &fence {
+        // ── the node-loss kill script ──
+        fence.wait_all(handles.len());
+        // freeze the victim's link on the tick boundary: everything up
+        // to the kill tick flushes to the peer, everything after spills
+        router.quiesce_peer(victim);
+        // crash the victim's serving stack; its pipeline keeps
+        // draining in the background so already-admitted queries still
+        // resolve, and its telemetry stays in the books
+        let PeerStack { server, frame_tx, shard_router, pipeline, telemetry } =
+            stacks[victim].take().expect("victim stack");
+        let victim_addr = server.addr;
+        drop(server);
+        drop(frame_tx);
+        shard_router.join()?;
+        retired_pipelines.push(pipeline);
+        retired_telemetry.push(telemetry);
+        println!("node-loss: killed peer {victim} ({victim_addr}) after tick {kill_tick}");
+        // release the cohort into the outage
+        fence.release();
+        // the prober must observe the death and fail the cohort over
+        // (re-home + spill replay) before a restart could mask it
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while router.gauges().patients_rehomed.load(Ordering::Relaxed) == 0
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // rolling restart on the same port (`bind_reuse` re-claims it
+        // through TIME_WAIT); the canary probe reinstates the peer
+        script_clock.sleep_until_sim(restart_tick as f64);
+        stacks[victim] = Some(spawn_stack(&victim_addr.to_string())?);
+        println!("node-loss: restarted peer {victim} on {victim_addr} at tick {restart_tick}");
+    }
+    drop(spawn_stack);
+    drop(pred_tx);
+
+    for h in handles {
+        let _ = h.join();
+    }
+    if cfg.scenario == Scenario::NodeLoss {
+        // reinstatement must land before the books close
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while router.gauges().peers_reinstated.load(Ordering::Relaxed) == 0
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    // stop probing before links start disappearing, then flush every
+    // link while the peer edges are still up
+    drop(prober);
+    router.shutdown();
+
+    let sink = std::thread::spawn(move || {
+        let mut rows: Vec<(usize, u64, f64, f64, f64)> = Vec::new();
+        for r in pred_rx {
+            rows.push(r);
+        }
+        rows
+    });
+
+    let mut pipelines = retired_pipelines;
+    let mut telemetries = retired_telemetry;
+    for stack in stacks.into_iter().flatten() {
+        let PeerStack { server, frame_tx, shard_router, pipeline, telemetry } = stack;
+        drop(server);
+        drop(frame_tx);
+        shard_router.join()?;
+        pipelines.push(pipeline);
+        telemetries.push(telemetry);
+    }
+    let drain_deadline = Instant::now() + Duration::from_secs(60);
+    while pipelines.iter().any(|p| p.pending_len() > 0) && Instant::now() < drain_deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    drop(pipelines);
+    let rows = sink.join().map_err(|_| Error::serving("sink panicked"))?;
+
+    let ordering = Ordering::Relaxed;
+    let submitted_n = submitted.load(ordering);
+    let resolved: u64 = telemetries
+        .iter()
+        .map(|t| t.queries.load(ordering) + t.failures.load(ordering))
+        .sum();
+    let sum = |field: fn(&Telemetry) -> &AtomicU64| -> u64 {
+        telemetries.iter().map(|t| field(t).load(ordering)).sum()
+    };
+    let fingerprint = rows
+        .iter()
+        .fold(0u64, |acc, &(p, w, _, s, _)| acc.wrapping_add(prediction_hash(p, w, s)));
+    let recovery_start = scfg.recovery_start_sim();
+    let recovery: Vec<f64> =
+        rows.iter().filter(|r| r.2 >= recovery_start).map(|r| r.4).collect();
+    let all_e2e: Vec<f64> = rows.iter().map(|r| r.4).collect();
+    let g = router.gauges();
+    let mut report = ReplayReport {
+        scenario: cfg.scenario,
+        seed: cfg.seed,
+        shards: n_shards,
+        workers: n_workers,
+        govern: false,
+        http: false,
+        budget: expected,
+        accounting: ReplayAccounting {
+            frames_sent: frames_sent.load(ordering),
+            frames_ingested: sum(|t| &t.frames),
+            frames_dropped: sum(|t| &t.frames_dropped),
+            frames_dropped_malformed: sum(|t| &t.frames_dropped_malformed),
+            frames_dropped_overcap: sum(|t| &t.frames_dropped_overcap),
+            frames_stale: sum(|t| &t.frames_stale),
+            patients_evicted: sum(|t| &t.patients_evicted),
+            queries_submitted: submitted_n,
+            predictions: rows.len() as u64,
+            unresolved: submitted_n.saturating_sub(resolved),
+            score_fingerprint: fingerprint,
+        },
+        slo_s: slo.as_secs_f64(),
+        e2e_p95: crate::metrics::percentile(&all_e2e, 95.0),
+        recovery_p95: crate::metrics::percentile(&recovery, 95.0),
+        recovery_n: recovery.len(),
+        client_reconnects: 0,
+        conns_accepted: sum(|t| &t.conns_accepted),
+        conns_refused: sum(|t| &t.conns_refused),
+        conns_refused_overcap: sum(|t| &t.conns_refused_overcap),
+        conns_refused_handshake: sum(|t| &t.conns_refused_handshake),
+        conns_reaped: sum(|t| &t.conns_reaped),
+        hostile: None,
+        route_peers: n_peers,
+        frames_spilled: g.spilled_total.load(ordering),
+        spill_replayed: g.spill_replayed.load(ordering),
+        spill_overflow: g.spill_overflow.load(ordering),
+        patients_rehomed: g.patients_rehomed.load(ordering),
+        peers_reinstated: g.peers_reinstated.load(ordering),
+        governor_degraded_entered: 0,
+        governor_swaps: 0,
         wall_s: t_start.elapsed().as_secs_f64(),
         violations: Vec::new(),
     };
@@ -789,6 +1273,18 @@ fn print_report(r: &ReplayReport) {
             r.conns_reaped
         );
         println!("client reconnects    {:>12}  (severs injected: {})", r.client_reconnects, b.severs);
+    }
+    if r.route_peers > 0 {
+        println!(
+            "router tier          {:>12}  peers — re-homed {} (budget {}), spilled {} / replayed {} / overflow {}, reinstated {}",
+            r.route_peers,
+            r.patients_rehomed,
+            r.budget.rehomed_patients,
+            r.frames_spilled,
+            r.spill_replayed,
+            r.spill_overflow,
+            r.peers_reinstated
+        );
     }
     if let Some(h) = &r.hostile {
         println!(

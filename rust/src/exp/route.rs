@@ -1,0 +1,446 @@
+//! `holmes route` — the fault-tolerant router tier as a process.
+//!
+//! Owns the ingest edge, forwards decoded frames to N downstream
+//! `holmes serve` peers through the consistent-hash [`Router`]
+//! (64 vnodes/peer, sticky owners), and runs the heartbeat [`Prober`]
+//! that drives death → re-home → spill-replay and drain → re-home
+//! transitions. Two modes:
+//!
+//! * **plain** (`--peers a:p,b:p,...`): long-running router in front of
+//!   externally managed peers. Serves `/ingest.bin` + `/stats` (the
+//!   snapshot carries the per-peer `router_*` gauges), prints a
+//!   per-peer line every 5 s, and drains cleanly on SIGTERM.
+//! * **smoke** (`--spawn-peers N --patients B --kill-at T`): the CI
+//!   chaos gate. Spawns N child `holmes serve --patients 0` processes
+//!   (ingest-only peers on adjacent ports), streams a synthetic
+//!   B-bed cohort through the ring, SIGKILLs the peer that owns bed 0
+//!   mid-run, and exits nonzero unless the dead peer's beds re-home to
+//!   survivors inside the recovery SLO, every spilled frame is
+//!   replayed, frame conservation holds against each survivor's own
+//!   telemetry, and every survivor's graceful drain (SIGTERM) resolves
+//!   all admitted queries and exits 0.
+
+use std::net::SocketAddr;
+use std::process::{Child, Command};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::http::FrameSink;
+use crate::ingest::synth::{PatientSim, SynthConfig};
+use crate::ingest::{Frame, Modality, VirtualClock};
+use crate::router::health::probe_once;
+use crate::router::{HealthConfig, ProbeOutcome, Ring, Router, RouterConfig};
+use crate::serving::Telemetry;
+use crate::{Error, Result};
+
+#[derive(Debug, Clone)]
+pub struct RouteConfig {
+    /// Ingest-edge listen address (`--http`).
+    pub listen: String,
+    /// Downstream peer ingest addresses (`--peers a,b,...`); empty in
+    /// smoke mode, where peers are spawned as children instead.
+    pub peers: Vec<String>,
+    /// Event-loop threads for the epoll edge (`--edge-threads`).
+    pub edge_threads: usize,
+    /// Smoke mode: spawn this many child `serve --patients 0` peers on
+    /// ports adjacent to the listen port (0 = plain mode).
+    pub spawn_peers: usize,
+    /// Smoke cohort size (beds streamed through the ring in-process).
+    pub patients: usize,
+    /// Smoke cohort length in simulated seconds; in plain mode, an
+    /// optional wall-clock lifetime (0 = run until SIGTERM).
+    pub duration_s: f64,
+    pub speedup: f64,
+    pub seed: u64,
+    /// Smoke: SIGKILL the peer owning bed 0 at this simulated second
+    /// (0 = healthy run, no kill).
+    pub kill_at: f64,
+    /// Smoke: crash → beds-re-homed recovery budget, milliseconds.
+    pub slo_ms: f64,
+}
+
+impl Default for RouteConfig {
+    fn default() -> Self {
+        RouteConfig {
+            listen: "127.0.0.1:7171".into(),
+            peers: Vec::new(),
+            edge_threads: 0,
+            spawn_peers: 0,
+            patients: 8,
+            duration_s: 12.0,
+            speedup: 4.0,
+            seed: 7,
+            kill_at: 0.0,
+            slo_ms: 3000.0,
+        }
+    }
+}
+
+/// Health tuning for the smoke: tight enough that crash detection is a
+/// small fraction of the recovery SLO, loose enough not to flap on a
+/// loaded CI runner.
+fn smoke_health() -> HealthConfig {
+    HealthConfig {
+        probe_interval: Duration::from_millis(25),
+        dead_after: 3,
+        backoff_init: 2,
+        backoff_max: 16,
+        connect_timeout: Duration::from_millis(200),
+        io_timeout: Duration::from_millis(500),
+    }
+}
+
+pub fn run_route(cfg: RouteConfig) -> Result<()> {
+    crate::signal::install_shutdown_handler();
+    let smoke = cfg.spawn_peers > 0;
+    let peer_addrs: Vec<SocketAddr> = if smoke {
+        if !cfg.peers.is_empty() {
+            return Err(Error::config("--spawn-peers and --peers are mutually exclusive"));
+        }
+        if cfg.spawn_peers < 2 {
+            return Err(Error::config("--spawn-peers needs at least 2 peers"));
+        }
+        if cfg.patients == 0 {
+            return Err(Error::config("the route smoke needs --patients > 0"));
+        }
+        if cfg.kill_at > 0.0 && cfg.kill_at >= cfg.duration_s {
+            return Err(Error::config("--kill-at must land inside --duration"));
+        }
+        // child peers listen on the ports right after the router's
+        let listen: SocketAddr = cfg.listen.parse().map_err(|_| {
+            Error::config("--spawn-peers needs a concrete --http ip:port to derive peer ports")
+        })?;
+        if listen.port() == 0 {
+            return Err(Error::config("--spawn-peers cannot derive peer ports from port 0"));
+        }
+        (0..cfg.spawn_peers)
+            .map(|i| SocketAddr::new(listen.ip(), listen.port() + 1 + i as u16))
+            .collect()
+    } else {
+        if cfg.peers.is_empty() {
+            return Err(Error::config("route needs --peers a:port,b:port,... or --spawn-peers N"));
+        }
+        cfg.peers
+            .iter()
+            .map(|s| {
+                s.parse::<SocketAddr>()
+                    .map_err(|_| Error::config(format!("bad peer address {s:?} (want ip:port)")))
+            })
+            .collect::<Result<_>>()?
+    };
+
+    let mut children: Vec<Child> = Vec::new();
+    if smoke {
+        let exe = std::env::current_exe()?;
+        // children outlive the cohort; the smoke retires them itself
+        let child_duration = cfg.duration_s + 10.0 * cfg.speedup;
+        for addr in &peer_addrs {
+            children.push(
+                Command::new(&exe)
+                    .args([
+                        "serve",
+                        "--http",
+                        &addr.to_string(),
+                        "--patients",
+                        "0",
+                        "--duration",
+                        &format!("{child_duration}"),
+                        "--speedup",
+                        &format!("{}", cfg.speedup),
+                        "--workers",
+                        "2",
+                    ])
+                    .spawn()?,
+            );
+        }
+        // wait until every child's ingest edge answers a heartbeat
+        let deadline = Instant::now() + Duration::from_secs(60);
+        for (i, &addr) in peer_addrs.iter().enumerate() {
+            loop {
+                match probe_once(addr, 0, Duration::from_millis(200), Duration::from_millis(500))
+                {
+                    ProbeOutcome::Ok | ProbeOutcome::Draining => break,
+                    ProbeOutcome::Fail if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                    ProbeOutcome::Fail => {
+                        reap(&mut children);
+                        return Err(Error::serving(format!("peer {i} ({addr}) never came up")));
+                    }
+                }
+            }
+        }
+        println!("route smoke: {} child peers up: {:?}", children.len(), peer_addrs);
+    }
+
+    let health = if smoke { smoke_health() } else { HealthConfig::default() };
+    let mut rcfg = RouterConfig::new(peer_addrs.clone());
+    rcfg.health = health;
+    let router = Router::new(&rcfg)?;
+    let telemetry = Arc::new(Telemetry::default());
+    telemetry.install_router(Arc::clone(router.gauges()));
+    let server = crate::http::serve_with(
+        &cfg.listen,
+        router.sink(),
+        Arc::clone(&telemetry),
+        crate::http::HttpConfig {
+            edge_threads: cfg.edge_threads,
+            ..crate::http::HttpConfig::default()
+        },
+    )?;
+    println!(
+        "router ingest edge on {} → {} peers {:?}",
+        server.addr,
+        peer_addrs.len(),
+        peer_addrs
+    );
+    let prober = router.spawn_prober(health);
+
+    if !smoke {
+        // plain mode: hold the edge open until SIGTERM (or an optional
+        // wall-clock lifetime), printing a per-peer line every 5 s
+        let t0 = Instant::now();
+        let mut last_print = Instant::now();
+        while !crate::signal::shutdown_requested() {
+            if cfg.duration_s > 0.0 && t0.elapsed().as_secs_f64() >= cfg.duration_s {
+                break;
+            }
+            if last_print.elapsed() >= Duration::from_secs(5) {
+                last_print = Instant::now();
+                let g = router.gauges();
+                println!(
+                    "router: states {:?} forwarded {:?} retries {:?} spill {:?} re-homed {} reinstated {}",
+                    g.peer_states(),
+                    g.frames_forwarded(),
+                    g.forward_retries(),
+                    g.spill_depths(),
+                    g.patients_rehomed.load(Ordering::Relaxed),
+                    g.peers_reinstated.load(Ordering::Relaxed),
+                );
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        println!("route: shutting down — flushing forwarding links");
+        drop(server);
+        drop(prober);
+        router.shutdown();
+        return Ok(());
+    }
+
+    // ── smoke: drive the cohort, crash the bed-0 owner, gate recovery ──
+    let ring = Ring::new(peer_addrs.len());
+    let victim = ring.route(0);
+    let expected_rehomed =
+        (0..cfg.patients).filter(|&p| ring.route(p) == victim).count() as u64;
+    let kill_tick =
+        if cfg.kill_at > 0.0 { cfg.kill_at.floor() as u64 } else { u64::MAX };
+    let duration = cfg.duration_s.max(1.0) as u64;
+    let mut failures: Vec<String> = Vec::new();
+    let mut recovery_ms: Option<f64> = None;
+    println!(
+        "route smoke: {} beds over {} peers, {} sim s (speedup {}×), victim peer {} at t={}",
+        cfg.patients, peer_addrs.len(), duration, cfg.speedup, victim, cfg.kill_at
+    );
+
+    let sink = router.sink();
+    let synth = SynthConfig::default();
+    let mut sims: Vec<PatientSim> =
+        (0..cfg.patients).map(|pid| PatientSim::new(pid, cfg.seed, synth.clone())).collect();
+    let clock = VirtualClock::new(cfg.speedup);
+    'cohort: for t in 0..duration {
+        if crate::signal::shutdown_requested() {
+            break;
+        }
+        clock.sleep_until_sim(t as f64);
+        for sim in sims.iter_mut() {
+            // one simulated second per bed: 250 ECG samples + 1 vitals
+            for f in sim.ecg_frames(t as f64, 250) {
+                if let Err(e) = sink.deliver(f) {
+                    failures.push(format!("frame delivery failed at t={t}: {e}"));
+                    break 'cohort;
+                }
+            }
+            let v = sim.next_vitals();
+            let f = Frame {
+                patient: sim.id,
+                modality: Modality::Vitals,
+                sim_time: t as f64,
+                values: v.into(),
+            };
+            if let Err(e) = sink.deliver(f) {
+                failures.push(format!("frame delivery failed at t={t}: {e}"));
+                break 'cohort;
+            }
+        }
+        if t == kill_tick {
+            // SIGKILL, not SIGTERM: a genuine crash the heartbeat
+            // prober must detect organically
+            let t_kill = Instant::now();
+            let _ = children[victim].kill();
+            let _ = children[victim].wait();
+            println!("route smoke: crashed peer {victim} ({})", peer_addrs[victim]);
+            let g = router.gauges();
+            let deadline = Instant::now() + Duration::from_secs(30);
+            while g.patients_rehomed.load(Ordering::Relaxed) == 0 && Instant::now() < deadline
+            {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            let ms = t_kill.elapsed().as_secs_f64() * 1e3;
+            recovery_ms = Some(ms);
+            println!(
+                "route smoke: {} beds re-homed {:.0} ms after the crash",
+                g.patients_rehomed.load(Ordering::Relaxed),
+                ms
+            );
+        }
+    }
+
+    // freeze the tier: stop the edge and the prober, then flush and
+    // close every link so the gauges are final
+    drop(server);
+    drop(prober);
+    router.shutdown();
+    let g = router.gauges();
+    let rehomed = g.patients_rehomed.load(Ordering::Relaxed);
+    let spilled = g.spilled_total.load(Ordering::Relaxed);
+    let replayed = g.spill_replayed.load(Ordering::Relaxed);
+    let overflow = g.spill_overflow.load(Ordering::Relaxed);
+    let forwarded = g.frames_forwarded();
+    println!(
+        "route smoke: forwarded {:?}, re-homed {rehomed}, spilled {spilled} / replayed {replayed} / overflow {overflow}",
+        forwarded
+    );
+
+    if kill_tick != u64::MAX {
+        if rehomed != expected_rehomed {
+            failures.push(format!(
+                "re-homed {rehomed} beds — the ring mirror says the victim owned {expected_rehomed}"
+            ));
+        }
+        match recovery_ms {
+            Some(ms) if ms <= cfg.slo_ms => {}
+            Some(ms) => failures.push(format!(
+                "recovery took {ms:.0} ms — over the {:.0} ms SLO",
+                cfg.slo_ms
+            )),
+            None => failures.push("the kill tick never ran — cohort ended early".into()),
+        }
+        // replay covers the spill plus any queue remnants the crash
+        // stranded, so replayed >= spilled; anything less lost frames
+        if replayed < spilled {
+            failures.push(format!("{spilled} frames spilled but only {replayed} replayed"));
+        }
+        if overflow > 0 {
+            failures.push(format!("{overflow} frames lost to spill overflow"));
+        }
+        let states = g.peer_states();
+        if states[victim] != 2 {
+            failures.push(format!(
+                "victim peer state {} at exit — expected dead (2)",
+                states[victim]
+            ));
+        }
+        // conservation over the wire: every frame the router counted as
+        // forwarded to a survivor must be visible in that peer's own
+        // telemetry, and the peer must have resolved queries from them
+        for (i, &addr) in peer_addrs.iter().enumerate() {
+            if i == victim {
+                continue;
+            }
+            match peer_stats(addr) {
+                Ok(stats) => {
+                    let frames = stats.get("frames").and_then(|v| v.as_u64()).unwrap_or(0);
+                    let queries = stats.get("queries").and_then(|v| v.as_u64()).unwrap_or(0);
+                    if frames != forwarded[i] {
+                        failures.push(format!(
+                            "peer {i}: router forwarded {} frames but the peer ingested {frames}",
+                            forwarded[i]
+                        ));
+                    }
+                    if queries == 0 {
+                        failures.push(format!("peer {i} resolved no queries"));
+                    }
+                }
+                Err(e) => failures.push(format!("peer {i} /stats unreachable at exit: {e}")),
+            }
+        }
+    }
+
+    // retire the survivors with SIGTERM: their graceful drain must
+    // resolve every admitted query and exit 0 (serve returns nonzero on
+    // unresolved queries)
+    for (i, child) in children.iter_mut().enumerate() {
+        if kill_tick != u64::MAX && i == victim {
+            continue; // already reaped at the kill tick
+        }
+        crate::signal::send_sigterm(child.id());
+    }
+    let drain_deadline = Instant::now() + Duration::from_secs(60);
+    for (i, child) in children.iter_mut().enumerate() {
+        if kill_tick != u64::MAX && i == victim {
+            continue;
+        }
+        loop {
+            match child.try_wait() {
+                Ok(Some(status)) if status.success() => break,
+                Ok(Some(status)) => {
+                    failures.push(format!(
+                        "peer {i} exited {status} from its graceful drain — admitted queries went unresolved"
+                    ));
+                    break;
+                }
+                Ok(None) if Instant::now() < drain_deadline => {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Ok(None) => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    failures.push(format!("peer {i} failed to drain within 60 s of SIGTERM"));
+                    break;
+                }
+                Err(e) => {
+                    failures.push(format!("waiting on peer {i}: {e}"));
+                    break;
+                }
+            }
+        }
+    }
+
+    if failures.is_empty() {
+        println!("ROUTE SMOKE PASS");
+        Ok(())
+    } else {
+        for f in &failures {
+            eprintln!("ROUTE SMOKE FAIL: {f}");
+        }
+        Err(Error::serving(format!("{} route smoke violations", failures.len())))
+    }
+}
+
+/// Fetch and parse a peer's `/stats` snapshot.
+fn peer_stats(addr: SocketAddr) -> Result<crate::json::Value> {
+    use std::io::{Read, Write};
+    let mut stream = std::net::TcpStream::connect_timeout(&addr, Duration::from_millis(500))?;
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    write!(stream, "GET /stats HTTP/1.0\r\nHost: holmes\r\n\r\n")?;
+    let mut buf = String::new();
+    stream.read_to_string(&mut buf)?;
+    let Some((head, body)) = buf.split_once("\r\n\r\n") else {
+        return Err(Error::serving("/stats: malformed response"));
+    };
+    let status = head.lines().next().unwrap_or("");
+    if !status.contains(" 200 ") {
+        return Err(Error::serving(format!("/stats: {status}")));
+    }
+    crate::json::Value::parse(body)
+}
+
+/// Kill and reap every child — the bail-out path.
+fn reap(children: &mut [Child]) {
+    for c in children.iter_mut() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}

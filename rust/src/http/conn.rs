@@ -17,7 +17,11 @@
 //! * [`HttpConn`] — the incremental request state machine: head →
 //!   (streaming binary body | buffered body | drain), tolerant of any
 //!   read fragmentation, admitting `/ingest.bin` frames straight into
-//!   the [`ShardSender`] as their bytes complete.
+//!   the connection's [`FrameSink`] (local shards on a serve node, the
+//!   router's peer links on a router) as their bytes complete. The
+//!   streaming decoder speaks the full envelope: plain `HLM1` frames,
+//!   `HLMB` batch headers, and `HLMH` heartbeats (whose response
+//!   reports the node's drain state).
 //!
 //! The steady-state `/ingest.bin` path allocates nothing: the receive
 //! buffer and output ring reuse their grown capacity, frames decode
@@ -26,10 +30,11 @@
 //! shard channels are preallocated. `tests/edge.rs` asserts this with
 //! a counting global allocator.
 
-use crate::ingest::wire::{self, DecodeStep};
-use crate::serving::{ShardSender, Telemetry};
+use crate::ingest::wire::{self, EnvelopeStep};
+use crate::serving::Telemetry;
+use std::sync::atomic::Ordering;
 
-use super::{route_parsed, MAX_BODY_BYTES};
+use super::{route_parsed, FrameSink, MAX_BODY_BYTES};
 
 /// Largest accepted request head (request line + headers).
 pub const MAX_HEAD_BYTES: usize = 1 << 20;
@@ -214,6 +219,10 @@ impl OutRing {
 pub enum Route {
     IngestJson,
     IngestBin,
+    /// `POST /drain` — flag this node as draining for a rolling
+    /// upgrade (heartbeat responses advertise it; the router re-homes
+    /// this peer's patients with zero frame loss).
+    Drain,
     Stats,
     Healthz,
     Unknown,
@@ -257,6 +266,7 @@ pub fn parse_head(head: &[u8]) -> HeadInfo {
     let route = match (method, path) {
         (b"POST", b"/ingest") => Route::IngestJson,
         (b"POST", b"/ingest.bin") => Route::IngestBin,
+        (b"POST", b"/drain") => Route::Drain,
         (b"GET", b"/stats") => Route::Stats,
         (b"GET", b"/healthz") => Route::Healthz,
         _ => Route::Unknown,
@@ -310,8 +320,19 @@ enum Phase {
     /// Accumulating the request head.
     Head,
     /// Streaming a `/ingest.bin` body: frames decode in place and go
-    /// straight to the shard sender as their bytes complete.
-    BinBody { remaining: usize, keep_alive: bool, frames: u64, err: Option<BinError> },
+    /// straight to the frame sink as their bytes complete. `batch_left`
+    /// tracks an open `HLMB` envelope (its announced frames must all
+    /// arrive within this body); `heartbeat` records that the body
+    /// carried an `HLMH` probe, which switches the response to the
+    /// drain-state-reporting form.
+    BinBody {
+        remaining: usize,
+        keep_alive: bool,
+        frames: u64,
+        err: Option<BinError>,
+        batch_left: u32,
+        heartbeat: bool,
+    },
     /// Buffering a (small, bounded) body for a non-streaming route.
     BufBody { route: Route, remaining: usize, keep_alive: bool },
     /// Discarding an oversized body (bounded) so the queued `413`
@@ -398,7 +419,7 @@ impl HttpConn {
     /// Run the state machine over whatever bytes are in the receive
     /// buffer. Returns `true` if any input was consumed or output
     /// produced (the driver loops while progress is being made).
-    pub fn advance(&mut self, sink: &ShardSender, telemetry: &Telemetry) -> bool {
+    pub fn advance<S: FrameSink>(&mut self, sink: &S, telemetry: &Telemetry) -> bool {
         let mut progressed = false;
         loop {
             match std::mem::replace(&mut self.phase, Phase::Head) {
@@ -450,6 +471,8 @@ impl HttpConn {
                             keep_alive: info.keep_alive,
                             frames: 0,
                             err: None,
+                            batch_left: 0,
+                            heartbeat: false,
                         },
                         route => Phase::BufBody {
                             route,
@@ -458,11 +481,18 @@ impl HttpConn {
                         },
                     };
                 }
-                Phase::BinBody { mut remaining, keep_alive, mut frames, mut err } => {
-                    // decode frames in place from the receive buffer as
-                    // their bytes complete; after an error the rest of
-                    // the body is still consumed, so keep-alive framing
-                    // survives a bad body
+                Phase::BinBody {
+                    mut remaining,
+                    keep_alive,
+                    mut frames,
+                    mut err,
+                    mut batch_left,
+                    mut heartbeat,
+                } => {
+                    // decode envelope records in place from the receive
+                    // buffer as their bytes complete; after an error the
+                    // rest of the body is still consumed, so keep-alive
+                    // framing survives a bad body
                     while remaining > 0 && !self.recv.is_empty() {
                         if err.is_some() {
                             let discard = self.recv.len().min(remaining);
@@ -472,20 +502,39 @@ impl HttpConn {
                             continue;
                         }
                         let avail = self.recv.len().min(remaining);
-                        match wire::decode_step(&self.recv.data()[..avail]) {
-                            Ok(DecodeStep::Frame(frame, used)) => {
-                                if sink.send(frame).is_err() {
+                        match wire::decode_envelope_step(&self.recv.data()[..avail]) {
+                            Ok(EnvelopeStep::Frame(frame, used)) => {
+                                if sink.deliver(frame).is_err() {
                                     err = Some(BinError::PipelineClosed);
                                 } else {
                                     frames += 1;
                                 }
+                                batch_left = batch_left.saturating_sub(1);
                                 self.recv.consume(used);
                                 remaining -= used;
                                 progressed = true;
                             }
-                            Ok(DecodeStep::NeedMore(need)) => {
+                            Ok(EnvelopeStep::Heartbeat { used, .. }) => {
+                                heartbeat = true;
+                                self.recv.consume(used);
+                                remaining -= used;
+                                progressed = true;
+                            }
+                            Ok(EnvelopeStep::BatchStart { n_frames, used }) => {
+                                if batch_left > 0 {
+                                    err = Some(BinError::Malformed(
+                                        "batch header inside an open batch".to_string(),
+                                    ));
+                                    continue;
+                                }
+                                batch_left = n_frames;
+                                self.recv.consume(used);
+                                remaining -= used;
+                                progressed = true;
+                            }
+                            Ok(EnvelopeStep::NeedMore(need)) => {
                                 if need > remaining {
-                                    // the frame cannot complete within
+                                    // the record cannot complete within
                                     // this body: malformed
                                     err = Some(BinError::Malformed(format!(
                                         "truncated frame: body ends {} bytes short",
@@ -500,10 +549,36 @@ impl HttpConn {
                     }
                     if remaining > 0 {
                         // body incomplete: park and wait for more bytes
-                        self.phase = Phase::BinBody { remaining, keep_alive, frames, err };
+                        self.phase = Phase::BinBody {
+                            remaining,
+                            keep_alive,
+                            frames,
+                            err,
+                            batch_left,
+                            heartbeat,
+                        };
                         break;
                     }
+                    if err.is_none() && batch_left > 0 {
+                        // an HLMB header promised more frames than the
+                        // body delivered — refuse rather than let a
+                        // half-replicated batch look complete
+                        err = Some(BinError::Malformed(format!(
+                            "batch truncated: {batch_left} frames missing"
+                        )));
+                    }
                     match err {
+                        None if heartbeat => {
+                            // heartbeat responses report the drain flag;
+                            // probes are off the hot path, so the
+                            // format! allocation is fine here (the pure
+                            // frame path below stays allocation-free)
+                            let draining = telemetry.draining.load(Ordering::Relaxed);
+                            let body = format!(
+                                "{{\"ok\":true,\"frames\":{frames},\"draining\":{draining}}}"
+                            );
+                            self.respond("200 OK", body.as_bytes(), keep_alive);
+                        }
                         None => {
                             const PRE: &[u8] = b"{\"ok\":true,\"frames\":";
                             let mut body = [0u8; 41];
@@ -562,6 +637,7 @@ impl HttpConn {
 mod tests {
     use super::*;
     use crate::ingest::{Frame, Modality};
+    use crate::serving::ShardSender;
     use std::sync::mpsc;
 
     fn sink() -> (ShardSender, mpsc::Receiver<Frame>) {
@@ -728,6 +804,87 @@ mod tests {
         assert!(resp.contains("\"status\":\"up\""));
         assert_eq!(rx.try_recv().unwrap().patient, 0);
         assert_eq!(rx.try_recv().unwrap().patient, 1);
+    }
+
+    #[test]
+    fn streaming_batch_envelope_admits_frames_at_any_fragmentation() {
+        let (sink, rx) = sink();
+        let tel = Telemetry::default();
+        let mut body = Vec::new();
+        wire::write_batch_header(3, &mut body);
+        for p in 0..3usize {
+            frame(p).write_bytes(&mut body);
+        }
+        let mut req = format!(
+            "POST /ingest.bin HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        )
+        .into_bytes();
+        req.extend_from_slice(&body);
+        let mut conn = HttpConn::new();
+        for &b in &req {
+            conn.recv_mut().extend(&[b]);
+            conn.advance(&sink, &tel);
+        }
+        let resp = drain_out(&mut conn);
+        assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+        assert!(resp.contains("\"frames\":3"), "{resp}");
+        for p in 0..3usize {
+            assert_eq!(rx.try_recv().unwrap().patient, p);
+        }
+        assert!(!conn.ready_to_close(), "keep-alive survives");
+    }
+
+    #[test]
+    fn truncated_batch_envelope_is_400() {
+        let (sink, _rx) = sink();
+        let tel = Telemetry::default();
+        let mut body = Vec::new();
+        wire::write_batch_header(2, &mut body);
+        frame(0).write_bytes(&mut body); // 1 of the announced 2
+        let mut req = format!(
+            "POST /ingest.bin HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        )
+        .into_bytes();
+        req.extend_from_slice(&body);
+        let mut conn = HttpConn::new();
+        conn.recv_mut().extend(&req);
+        conn.advance(&sink, &tel);
+        let resp = drain_out(&mut conn);
+        assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+        assert!(resp.contains("batch truncated"), "{resp}");
+        assert!(!conn.ready_to_close(), "keep-alive framing survives");
+    }
+
+    #[test]
+    fn heartbeat_reports_drain_state() {
+        let (sink, rx) = sink();
+        let tel = Telemetry::default();
+        let mut conn = HttpConn::new();
+        let hb = wire::encode_heartbeat(5);
+        let mut req = format!(
+            "POST /ingest.bin HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n",
+            hb.len()
+        )
+        .into_bytes();
+        req.extend_from_slice(&hb);
+        conn.recv_mut().extend(&req);
+        conn.advance(&sink, &tel);
+        let resp = drain_out(&mut conn);
+        assert!(resp.contains("\"draining\":false"), "{resp}");
+        assert!(rx.try_recv().is_err(), "a heartbeat admits no frames");
+        // POST /drain flips the flag for subsequent heartbeats
+        conn.recv_mut().extend(
+            b"POST /drain HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n",
+        );
+        conn.advance(&sink, &tel);
+        let resp = drain_out(&mut conn);
+        assert!(resp.contains("\"draining\":true"), "{resp}");
+        conn.recv_mut().extend(&req);
+        conn.advance(&sink, &tel);
+        let resp = drain_out(&mut conn);
+        assert!(resp.contains("\"draining\":true"), "{resp}");
     }
 
     #[test]

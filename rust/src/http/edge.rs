@@ -11,8 +11,8 @@
 //!        │ edge-triggered readv → RecvBuf (contiguous, compacting)
 //!        │ in-place wire decode (decode_step, no body Vec)
 //!        ▼
-//!   ShardSender (patient % shards) ──► aggregation shards
-//!        ▲
+//!   FrameSink (ShardSender: patient % shards ──► aggregation shards,
+//!        ▲     or RouterSink: ring route ──► downstream peer links)
 //!        └ responses: OutRing → writev (≤ 2 segments, pipelined)
 //! ```
 //!
@@ -37,12 +37,12 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::serving::{EdgeGauges, ShardSender, Telemetry};
+use crate::serving::{EdgeGauges, Telemetry};
 use crate::{Error, Result};
 
 use super::conn::HttpConn;
 use super::sys::{self, IoStep};
-use super::{HttpConfig, HttpServer};
+use super::{FrameSink, HttpConfig, HttpServer};
 
 /// epoll token of the shared listener.
 const TOKEN_LISTEN: u64 = u64::MAX;
@@ -82,11 +82,11 @@ struct Slot {
     last_activity: Instant,
 }
 
-struct EdgeLoop {
+struct EdgeLoop<S: FrameSink> {
     ep: sys::Epoll,
     waker: Arc<sys::EventFd>,
     listener_fd: i32,
-    sink: ShardSender,
+    sink: S,
     telemetry: Arc<Telemetry>,
     stop: Arc<AtomicBool>,
     ready_events: Arc<[AtomicU64]>,
@@ -104,7 +104,7 @@ enum Flush {
     Error,
 }
 
-impl EdgeLoop {
+impl<S: FrameSink> EdgeLoop<S> {
     fn run(mut self) {
         let tick = (self.read_timeout / 4)
             .clamp(Duration::from_millis(10), Duration::from_secs(1));
@@ -360,13 +360,20 @@ impl EdgeLoop {
 
 /// Spawn the epoll edge: bind, start `--edge-threads` event loops,
 /// return the server handle whose drop stops and joins them.
-pub(crate) fn serve_edge(
+pub(crate) fn serve_edge<S: FrameSink>(
     addr: &str,
-    sink: ShardSender,
+    sink: S,
     telemetry: Arc<Telemetry>,
     cfg: HttpConfig,
 ) -> Result<HttpServer> {
-    let listener = TcpListener::bind(addr)?;
+    // SO_REUSEADDR before the bind: a restarted peer must re-claim its
+    // port through the previous incarnation's TIME_WAIT remnants
+    // (rolling upgrades, node-loss recovery). Non-IPv4 address forms
+    // fall back to the plain std bind.
+    let listener = match addr.parse::<std::net::SocketAddrV4>() {
+        Ok(v4) => sys::bind_reuse(v4)?,
+        Err(_) => TcpListener::bind(addr)?,
+    };
     let local = listener.local_addr()?;
     let listener_fd = listener.as_raw_fd();
     sys::set_nonblocking(listener_fd).map_err(Error::Io)?;

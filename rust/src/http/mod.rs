@@ -6,8 +6,34 @@
 //!   payloads are rejected with `400` at the boundary.
 //! * `POST /ingest.bin`  — binary body of one or more back-to-back
 //!   wire-encoded frames (see below); the hot path at 25k frames/s.
+//!   Also accepts the router envelope records: `HLMB` frame-batch
+//!   headers and `HLMH` heartbeats (a heartbeat response reports
+//!   whether this node is draining).
+//! * `POST /drain`       — operator-initiated rolling-upgrade drain:
+//!   sets the `draining` flag so heartbeat responses advertise it and
+//!   the router re-homes this peer's patients before it exits.
 //! * `GET /stats`        — telemetry snapshot (JSON).
 //! * `GET /healthz`      — liveness.
+//!
+//! ## The router tier above the edge
+//!
+//! A `holmes route` process stacks one more tier on top of this one
+//! ([`crate::router`]): it owns the ingest edge, hashes each decoded
+//! frame's patient id on a consistent ring, and forwards it over a
+//! persistent link to the owning `holmes serve` peer — which runs this
+//! same edge:
+//!
+//! ```text
+//!   bedside monitors ──► router edge (this module, sink = RouterSink)
+//!                              │ ring.route(patient) → peer link
+//!                              ▼ HLMB batches over /ingest.bin
+//!                        serve peers (this module, sink = ShardSender)
+//!                              ▼ shards → lanes → completer
+//! ```
+//!
+//! The edge itself is **sink-generic** ([`FrameSink`]): the router's
+//! forwarding sink and a serve node's local shard sink are
+//! interchangeable behind the same byte-identical protocol core.
 //!
 //! ## Two edges, one protocol core
 //!
@@ -101,6 +127,22 @@ use crate::json::Value;
 use crate::serving::{ShardSender, Telemetry};
 use crate::{Error, Result};
 
+/// Destination for decoded ingest frames. The edge is generic over its
+/// sink so a router process (forwarding to remote peers through
+/// `crate::router::RouterSink`) and a serve node (local aggregation
+/// shards, [`ShardSender`]) share one edge implementation.
+pub trait FrameSink: Clone + Send + 'static {
+    /// Deliver one admitted frame. `Err` means the downstream is gone
+    /// and the edge answers `503`.
+    fn deliver(&self, frame: Frame) -> Result<()>;
+}
+
+impl FrameSink for ShardSender {
+    fn deliver(&self, frame: Frame) -> Result<()> {
+        self.send(frame)
+    }
+}
+
 /// Largest accepted request body; larger requests are refused with
 /// `413 Payload Too Large`. A one-second 64-bed binary burst
 /// (64 × 251 frames ≈ 400 KiB) fits with an order of magnitude to
@@ -177,16 +219,20 @@ impl Drop for ConnGuard {
 /// Start the ingest server with default [`HttpConfig`]; admitted frames
 /// are routed into the sharded aggregation plane through `sink`. Bind
 /// with port 0 to auto-pick.
-pub fn serve(addr: &str, sink: ShardSender, telemetry: Arc<Telemetry>) -> Result<HttpServer> {
+pub fn serve<S: FrameSink>(
+    addr: &str,
+    sink: S,
+    telemetry: Arc<Telemetry>,
+) -> Result<HttpServer> {
     serve_with(addr, sink, telemetry, HttpConfig::default())
 }
 
 /// [`serve`] with explicit tunables. On Linux this starts the
 /// event-driven epoll edge; elsewhere the thread-per-connection
 /// fallback ([`serve_legacy_with`]).
-pub fn serve_with(
+pub fn serve_with<S: FrameSink>(
     addr: &str,
-    sink: ShardSender,
+    sink: S,
     telemetry: Arc<Telemetry>,
     cfg: HttpConfig,
 ) -> Result<HttpServer> {
@@ -204,9 +250,9 @@ pub fn serve_with(
 /// accepted connection. The portable fallback on non-Linux targets,
 /// and the `legacy_` baseline the edge-concurrency benches measure the
 /// epoll edge against. Same routes, same status and framing semantics.
-pub fn serve_legacy_with(
+pub fn serve_legacy_with<S: FrameSink>(
     addr: &str,
-    sink: ShardSender,
+    sink: S,
     telemetry: Arc<Telemetry>,
     cfg: HttpConfig,
 ) -> Result<HttpServer> {
@@ -299,9 +345,9 @@ pub fn serve_legacy_with(
     Ok(HttpServer { addr: local, stop, shutdown: None })
 }
 
-fn handle_connection(
+fn handle_connection<S: FrameSink>(
     mut stream: TcpStream,
-    frame_tx: ShardSender,
+    frame_tx: S,
     telemetry: Arc<Telemetry>,
 ) -> Result<()> {
     let mut buf: Vec<u8> = Vec::with_capacity(4096);
@@ -400,10 +446,10 @@ fn write_response(
 /// by the fallback edge (every route) and the event-driven edge (every
 /// route except `/ingest.bin`, which decodes streaming and in place —
 /// see [`conn::HttpConn`]).
-pub(crate) fn route_parsed(
+pub(crate) fn route_parsed<S: FrameSink>(
     route: conn::Route,
     body: &[u8],
-    frame_tx: &ShardSender,
+    frame_tx: &S,
     telemetry: &Telemetry,
 ) -> (&'static str, String) {
     match route {
@@ -414,7 +460,7 @@ pub(crate) fn route_parsed(
                 .and_then(|v| Frame::from_json(&v));
             match parsed {
                 Ok(frame) => {
-                    if frame_tx.send(frame).is_ok() {
+                    if frame_tx.deliver(frame).is_ok() {
                         ("200 OK", "{\"ok\":true}".to_string())
                     } else {
                         ("503 Service Unavailable", "{\"error\":\"pipeline closed\"}".to_string())
@@ -423,25 +469,72 @@ pub(crate) fn route_parsed(
                 Err(e) => ("400 Bad Request", format!("{{\"error\":\"{e}\"}}")),
             }
         }
-        conn::Route::IngestBin => match wire::decode_stream(body) {
-            Ok(frames) => {
+        conn::Route::IngestBin => match decode_envelope_body(body) {
+            Ok((frames, heartbeat)) => {
                 let n = frames.len();
                 for frame in frames {
-                    if frame_tx.send(frame).is_err() {
+                    if frame_tx.deliver(frame).is_err() {
                         return (
                             "503 Service Unavailable",
                             "{\"error\":\"pipeline closed\"}".to_string(),
                         );
                     }
                 }
-                ("200 OK", format!("{{\"ok\":true,\"frames\":{n}}}"))
+                if heartbeat {
+                    let draining = telemetry.draining.load(Ordering::Relaxed);
+                    ("200 OK", format!("{{\"ok\":true,\"frames\":{n},\"draining\":{draining}}}"))
+                } else {
+                    ("200 OK", format!("{{\"ok\":true,\"frames\":{n}}}"))
+                }
             }
             Err(e) => ("400 Bad Request", format!("{{\"error\":\"{e}\"}}")),
         },
+        conn::Route::Drain => {
+            telemetry.draining.store(true, Ordering::SeqCst);
+            ("200 OK", "{\"ok\":true,\"draining\":true}".to_string())
+        }
         conn::Route::Stats => ("200 OK", telemetry.snapshot().to_json().to_string()),
         conn::Route::Healthz => ("200 OK", "{\"status\":\"up\"}".to_string()),
         conn::Route::Unknown => ("404 Not Found", "{\"error\":\"no such route\"}".to_string()),
     }
+}
+
+/// Decode a whole `/ingest.bin` body of envelope records — plain
+/// frames, `HLMB` batch headers, `HLMH` heartbeats — all-or-nothing
+/// like [`wire::decode_stream`]. Returns the decoded frames and
+/// whether any heartbeat was present (the response then reports the
+/// node's drain state).
+fn decode_envelope_body(mut buf: &[u8]) -> Result<(Vec<Frame>, bool)> {
+    let mut frames = Vec::new();
+    let mut heartbeat = false;
+    let mut batch_left: u32 = 0;
+    while !buf.is_empty() {
+        match wire::decode_envelope_step(buf)? {
+            wire::EnvelopeStep::Frame(f, used) => {
+                batch_left = batch_left.saturating_sub(1);
+                frames.push(f);
+                buf = &buf[used..];
+            }
+            wire::EnvelopeStep::Heartbeat { used, .. } => {
+                heartbeat = true;
+                buf = &buf[used..];
+            }
+            wire::EnvelopeStep::BatchStart { n_frames, used } => {
+                if batch_left > 0 {
+                    return Err(Error::wire("batch header inside an open batch"));
+                }
+                batch_left = n_frames;
+                buf = &buf[used..];
+            }
+            wire::EnvelopeStep::NeedMore(_) => {
+                return Err(Error::wire("truncated envelope record"));
+            }
+        }
+    }
+    if batch_left > 0 {
+        return Err(Error::wire(format!("batch truncated: {batch_left} frames missing")));
+    }
+    Ok((frames, heartbeat))
 }
 
 fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
@@ -476,6 +569,9 @@ pub struct IngestClient {
     backoff_cap: Duration,
     /// xorshift state for deterministic backoff jitter.
     jitter: u64,
+    /// Socket read/write deadline (None = block forever). Router links
+    /// set this so a half-dead peer cannot wedge a forwarder.
+    io_timeout: Option<Duration>,
 }
 
 impl IngestClient {
@@ -494,7 +590,19 @@ impl IngestClient {
             // per-client deterministic jitter stream (port decorrelates
             // clients sharing a server)
             jitter: 0x9E37_79B9_7F4A_7C15 ^ u64::from(addr.port()),
+            io_timeout: None,
         })
+    }
+
+    /// Bound every socket read and write. A write that exceeds the
+    /// deadline surfaces as a transport error and takes the
+    /// backoff-and-redial path — the router link's defense against a
+    /// peer that accepts the connection but stops draining it.
+    pub fn with_io_timeout(mut self, timeout: Duration) -> Self {
+        self.io_timeout = Some(timeout);
+        let _ = self.stream.set_read_timeout(self.io_timeout);
+        let _ = self.stream.set_write_timeout(self.io_timeout);
+        self
     }
 
     /// Override the redial budget and backoff window (tests, replay).
@@ -527,6 +635,35 @@ impl IngestClient {
         for f in frames {
             f.write_bytes(&mut self.body);
         }
+        self.post_with_retry()
+    }
+
+    /// POST one batch of frames wrapped in an `HLMB` envelope header —
+    /// the router link path. Same retry semantics as
+    /// [`Self::send_frames`].
+    pub fn send_batch(&mut self, frames: &[Frame]) -> Result<()> {
+        self.body.clear();
+        wire::write_batch_header(frames.len() as u32, &mut self.body);
+        for f in frames {
+            f.write_bytes(&mut self.body);
+        }
+        self.post_with_retry()
+    }
+
+    /// POST one `HLMH` heartbeat; returns `true` if the peer reported
+    /// itself draining. Transport retries as for [`Self::send_frames`]
+    /// (the health prober uses its own single-attempt probe instead —
+    /// a probe that needs retries IS the failure signal).
+    pub fn send_heartbeat(&mut self, seq: u64) -> Result<bool> {
+        self.body.clear();
+        self.body.extend_from_slice(&wire::encode_heartbeat(seq));
+        self.post_with_retry()?;
+        Ok(find_subslice(&self.resp, b"\"draining\":true").is_some())
+    }
+
+    /// Retry loop around [`Self::post_once`] for whatever body is
+    /// currently staged in `self.body`.
+    fn post_with_retry(&mut self) -> Result<()> {
         let mut attempt: u32 = 0;
         loop {
             match self.post_once() {
@@ -548,6 +685,8 @@ impl IngestClient {
                     match TcpStream::connect(self.addr) {
                         Ok(s) => {
                             let _ = s.set_nodelay(true);
+                            let _ = s.set_read_timeout(self.io_timeout);
+                            let _ = s.set_write_timeout(self.io_timeout);
                             self.stream = s;
                             self.reconnects += 1;
                         }
@@ -899,6 +1038,53 @@ mod tests {
             let text = read_full_response(&mut s);
             assert!(text.contains(expect), "{path}: {text}");
         }
+    }
+
+    #[test]
+    fn batch_envelope_heartbeat_and_drain_roundtrip() {
+        let (tx, rx) = mpsc::sync_channel(1024);
+        let tel = Arc::new(Telemetry::default());
+        let server =
+            serve("127.0.0.1:0", ShardSender::from_senders(vec![tx]), Arc::clone(&tel)).unwrap();
+        let mut client = IngestClient::connect(server.addr).unwrap();
+        // a batch-envelope body delivers its frames like plain ones
+        let frames: Vec<Frame> = (0..3usize)
+            .map(|i| Frame {
+                patient: i,
+                modality: Modality::Ecg,
+                sim_time: i as f64 * 0.004,
+                values: [0.5, -0.25, 1.0].into(),
+            })
+            .collect();
+        client.send_batch(&frames).unwrap();
+        for i in 0..3usize {
+            assert_eq!(rx.recv().unwrap().patient, i);
+        }
+        // heartbeat on a healthy node: not draining, no frame admitted
+        assert!(!client.send_heartbeat(1).unwrap());
+        assert!(rx.try_recv().is_err());
+        // POST /drain flips the flag; subsequent heartbeats advertise it
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        s.write_all(b"POST /drain HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\nConnection: close\r\n\r\n")
+            .unwrap();
+        let text = read_full_response(&mut s);
+        assert!(text.starts_with("HTTP/1.1 200"), "{text}");
+        assert!(text.contains("\"draining\":true"), "{text}");
+        assert!(tel.draining.load(Ordering::Relaxed));
+        assert!(client.send_heartbeat(2).unwrap(), "heartbeat must advertise the drain");
+        // a truncated batch is refused whole
+        let mut hdr = Vec::new();
+        wire::write_batch_header(2, &mut hdr);
+        frames[0].write_bytes(&mut hdr); // only 1 of the announced 2
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        let req = format!(
+            "POST /ingest.bin HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            hdr.len()
+        );
+        s.write_all(req.as_bytes()).unwrap();
+        s.write_all(&hdr).unwrap();
+        let text = read_full_response(&mut s);
+        assert!(text.starts_with("HTTP/1.1 400"), "{text}");
     }
 
     #[test]

@@ -12,7 +12,9 @@
 #![allow(clippy::missing_safety_doc)]
 
 use std::io;
+use std::net::{SocketAddrV4, TcpListener};
 use std::os::raw::{c_int, c_uint, c_void};
+use std::os::unix::io::FromRawFd;
 
 // ---- constants (x86_64/aarch64 Linux; values are ABI-stable) ----
 
@@ -42,6 +44,12 @@ const O_NONBLOCK: c_int = 0o4000;
 
 const IPPROTO_TCP: c_int = 6;
 const TCP_NODELAY: c_int = 1;
+
+const AF_INET: c_int = 2;
+const SOCK_STREAM: c_int = 1;
+const SOL_SOCKET: c_int = 1;
+const SO_REUSEADDR: c_int = 2;
+const LISTEN_BACKLOG: c_int = 1024;
 
 const RLIMIT_NOFILE: c_int = 7;
 
@@ -79,6 +87,15 @@ struct Rlimit {
     max: u64,
 }
 
+/// `struct sockaddr_in` (network byte order for port and address).
+#[repr(C)]
+struct SockAddrIn {
+    sin_family: u16,
+    sin_port: u16,
+    sin_addr: u32,
+    sin_zero: [u8; 8],
+}
+
 extern "C" {
     fn epoll_create1(flags: c_int) -> c_int;
     fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
@@ -101,6 +118,9 @@ extern "C" {
     ) -> c_int;
     fn getrlimit(resource: c_int, rlim: *mut Rlimit) -> c_int;
     fn setrlimit(resource: c_int, rlim: *const Rlimit) -> c_int;
+    fn socket(domain: c_int, ty: c_int, protocol: c_int) -> c_int;
+    fn bind(fd: c_int, addr: *const c_void, addrlen: u32) -> c_int;
+    fn listen(fd: c_int, backlog: c_int) -> c_int;
 }
 
 fn errno() -> i32 {
@@ -319,6 +339,50 @@ pub fn drain_best_effort(fd: i32, limit: usize) {
     }
 }
 
+/// Bind an IPv4 listener with `SO_REUSEADDR` set before the bind —
+/// a restarted peer (rolling upgrade, node-loss recovery) must be
+/// able to re-claim its old port while the kernel still holds
+/// TIME_WAIT remnants of the previous incarnation's connections.
+/// `std::net::TcpListener::bind` offers no pre-bind socket options,
+/// hence the raw construction; the returned listener is an ordinary
+/// std listener owning the descriptor.
+pub fn bind_reuse(addr: SocketAddrV4) -> io::Result<TcpListener> {
+    let fd = unsafe { socket(AF_INET, SOCK_STREAM | SOCK_CLOEXEC, 0) };
+    if fd < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    let one: c_int = 1;
+    if unsafe {
+        setsockopt(fd, SOL_SOCKET, SO_REUSEADDR, (&one as *const c_int).cast(), 4)
+    } < 0
+    {
+        let err = io::Error::last_os_error();
+        close_fd(fd);
+        return Err(err);
+    }
+    let sa = SockAddrIn {
+        sin_family: AF_INET as u16,
+        sin_port: addr.port().to_be(),
+        sin_addr: u32::from(*addr.ip()).to_be(),
+        sin_zero: [0u8; 8],
+    };
+    if unsafe {
+        bind(fd, (&sa as *const SockAddrIn).cast(), std::mem::size_of::<SockAddrIn>() as u32)
+    } < 0
+    {
+        let err = io::Error::last_os_error();
+        close_fd(fd);
+        return Err(err);
+    }
+    if unsafe { listen(fd, LISTEN_BACKLOG) } < 0 {
+        let err = io::Error::last_os_error();
+        close_fd(fd);
+        return Err(err);
+    }
+    // SAFETY: fd is a freshly created, bound, listening socket we own.
+    Ok(unsafe { TcpListener::from_raw_fd(fd) })
+}
+
 /// Raise the open-file soft limit to the hard limit (benches and
 /// high-fan-in deployments need ~2 fds per held connection). Returns
 /// the resulting soft limit; errors degrade to the current value.
@@ -365,6 +429,25 @@ mod tests {
         assert_eq!(data, 7);
         efd.drain();
         ep.del(efd.raw());
+    }
+
+    #[test]
+    fn bind_reuse_rebinds_a_just_used_port() {
+        let l1 = bind_reuse("127.0.0.1:0".parse().unwrap()).unwrap();
+        let addr = l1.local_addr().unwrap();
+        // leave connection remnants behind on the port, then drop the
+        // listener — the REUSEADDR rebind must still succeed
+        let c = std::net::TcpStream::connect(addr).unwrap();
+        let (a, _) = l1.accept().unwrap();
+        drop(a);
+        drop(c);
+        drop(l1);
+        let l2 = bind_reuse(SocketAddrV4::new(
+            std::net::Ipv4Addr::LOCALHOST,
+            addr.port(),
+        ))
+        .unwrap();
+        assert_eq!(l2.local_addr().unwrap().port(), addr.port());
     }
 
     #[test]

@@ -9,7 +9,11 @@ pub mod wire;
 
 pub use clock::VirtualClock;
 pub use synth::{PatientSim, PatientState, SynthConfig};
-pub use wire::{decode_stream, MAX_WIRE_VALUES, WIRE_HEADER_LEN, WIRE_MAGIC, WIRE_VERSION};
+pub use wire::{
+    decode_envelope_step, decode_stream, encode_heartbeat, write_batch_header, EnvelopeStep,
+    BATCH_HEADER_LEN, BATCH_MAGIC, HEARTBEAT_LEN, HEARTBEAT_MAGIC, MAX_WIRE_VALUES,
+    WIRE_HEADER_LEN, WIRE_MAGIC, WIRE_VERSION,
+};
 
 use std::str::FromStr;
 

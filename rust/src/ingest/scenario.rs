@@ -82,16 +82,33 @@ pub enum Scenario {
     /// floods, truncated frames, slow-loris holds, and a connection
     /// flood — none of which may disturb the legitimate cohort.
     HostileEdge,
+    /// Correlated vendor clock drift: every bed carries two interleaved
+    /// monitors; on odd beds the second monitor is from a vendor whose
+    /// clock starts drifting at a fixed rate after an onset tick —
+    /// *together*, fleet-wide, the way a bad NTP rollout actually
+    /// lands. Once the drift exceeds one sample period, every drifted
+    /// sample must shed stale, and the budget predicts the exact count
+    /// from the onset and rate. Vendor-A beds must be untouched.
+    VendorSkew,
+    /// Router-tier node loss: the cohort is served through `holmes
+    /// route` over two peers; the peer owning patient 0 is killed
+    /// mid-cohort and restarted later. The ring must re-home exactly
+    /// the victim's patients to the survivor (minimal movement), every
+    /// spilled frame must replay after failover, and the returned peer
+    /// is canary-reinstated to serve a second admission wave.
+    NodeLoss,
 }
 
 impl Scenario {
-    pub fn all() -> [Scenario; 5] {
+    pub fn all() -> [Scenario; 7] {
         [
             Scenario::Churn,
             Scenario::DropoutResync,
             Scenario::ClockSkew,
             Scenario::BurstStorm,
             Scenario::HostileEdge,
+            Scenario::VendorSkew,
+            Scenario::NodeLoss,
         ]
     }
 
@@ -102,6 +119,8 @@ impl Scenario {
             Scenario::ClockSkew => "clock-skew",
             Scenario::BurstStorm => "burst-storm",
             Scenario::HostileEdge => "hostile-edge",
+            Scenario::VendorSkew => "vendor-skew",
+            Scenario::NodeLoss => "node-loss",
         }
     }
 
@@ -112,7 +131,7 @@ impl Scenario {
             .ok_or_else(|| {
                 Error::config(format!(
                     "unknown scenario '{name}' (known: churn, dropout-resync, clock-skew, \
-                     burst-storm, hostile-edge, all)"
+                     burst-storm, hostile-edge, vendor-skew, node-loss, all)"
                 ))
             })
     }
@@ -169,10 +188,17 @@ enum Kind {
     Churn { sims: Vec<PatientSim> },
     /// A steady bed: 250 Hz ECG + 1 Hz vitals, with an optional ECG
     /// dropout interval `[start, end)` during which only vitals flow.
-    Steady { sim: PatientSim, dropout: Option<(u64, u64)> },
+    /// Silent entirely before `admit` (late-wave admissions — the
+    /// node-loss scenario's post-recovery cohort).
+    Steady { sim: PatientSim, dropout: Option<(u64, u64)>, admit: u64 },
     /// Two virtual ECG monitors on one bed, sample-interleaved; monitor
     /// B's clock runs `skew_s` behind monitor A's.
     Skewed { sim: PatientSim, skew_s: f64 },
+    /// Two interleaved monitors where monitor B's clock *drifts*:
+    /// `skew(t) = rate_s × (t − onset)` once `t ≥ onset`, zero before.
+    /// The correlated-vendor-failure shape — every vendor-B monitor in
+    /// the fleet drifts in lockstep.
+    VendorDrift { sim: PatientSim, onset: u64, rate_s: f64 },
     /// A shift-change ghost admission: silent until `start`, then
     /// streams exactly one window's worth of ECG and goes silent again.
     Ghost { sim: PatientSim, start: u64, emitted: usize },
@@ -212,7 +238,10 @@ impl Monitor {
                     }
                 }
             }
-            Kind::Steady { sim, dropout } => {
+            Kind::Steady { sim, dropout, admit } => {
+                if t < *admit {
+                    return TickEmit { frames, sever };
+                }
                 let in_dropout = dropout.is_some_and(|(s, e)| t >= s && t < e);
                 sever = dropout.is_some_and(|(s, _)| t == s);
                 if !in_dropout {
@@ -232,6 +261,22 @@ impl Monitor {
                     // even samples come from monitor A (true clock),
                     // odd from monitor B (clock behind by skew_s)
                     let stamped = if i % 2 == 0 { true_t } else { true_t - *skew_s };
+                    frames.push(Frame {
+                        patient: self.index,
+                        modality: Modality::Ecg,
+                        sim_time: stamped,
+                        values: sim.next_ecg().into(),
+                    });
+                }
+            }
+            Kind::VendorDrift { sim, onset, rate_s } => {
+                let dt = 1.0 / FRAMES_PER_TICK as f64;
+                let skew = if t >= *onset { *rate_s * (t - *onset) as f64 } else { 0.0 };
+                for i in 0..FRAMES_PER_TICK {
+                    let true_t = t as f64 + i as f64 * dt;
+                    // even samples: monitor A (true clock); odd:
+                    // monitor B (the drifting vendor)
+                    let stamped = if i % 2 == 0 { true_t } else { true_t - skew };
                     frames.push(Frame {
                         patient: self.index,
                         modality: Modality::Ecg,
@@ -302,7 +347,7 @@ pub fn monitors(cfg: &ScenarioCfg) -> Vec<Monitor> {
                 let len = (cfg.ticks / 4).max(2);
                 let dropout = (start < cfg.ticks).then_some((start, (start + len).min(cfg.ticks)));
                 out.push(Monitor {
-                    kind: Kind::Steady { sim: sim(p, p as u64), dropout },
+                    kind: Kind::Steady { sim: sim(p, p as u64), dropout, admit: 0 },
                     window_samples: cfg.window_samples,
                     index: p,
                 });
@@ -325,7 +370,7 @@ pub fn monitors(cfg: &ScenarioCfg) -> Vec<Monitor> {
         Scenario::BurstStorm => {
             for p in 0..cfg.patients {
                 out.push(Monitor {
-                    kind: Kind::Steady { sim: sim(p, p as u64), dropout: None },
+                    kind: Kind::Steady { sim: sim(p, p as u64), dropout: None, admit: 0 },
                     window_samples: cfg.window_samples,
                     index: p,
                 });
@@ -346,7 +391,7 @@ pub fn monitors(cfg: &ScenarioCfg) -> Vec<Monitor> {
         Scenario::HostileEdge => {
             for p in 0..cfg.patients {
                 out.push(Monitor {
-                    kind: Kind::Steady { sim: sim(p, p as u64), dropout: None },
+                    kind: Kind::Steady { sim: sim(p, p as u64), dropout: None, admit: 0 },
                     window_samples: cfg.window_samples,
                     index: p,
                 });
@@ -356,6 +401,47 @@ pub fn monitors(cfg: &ScenarioCfg) -> Vec<Monitor> {
                 window_samples: cfg.window_samples,
                 index: cfg.patients,
             });
+        }
+        Scenario::VendorSkew => {
+            let dt = 1.0 / FRAMES_PER_TICK as f64;
+            let onset = cfg.ticks / 3;
+            for p in 0..cfg.patients {
+                // even beds: both monitors vendor A (no drift). Odd
+                // beds: monitor B is the bad vendor — drifting 1.5
+                // sample periods further behind per tick, correlated
+                // across every vendor-B bed (same onset, same rate).
+                let rate_s = if p % 2 == 0 { 0.0 } else { 1.5 * dt };
+                out.push(Monitor {
+                    kind: Kind::VendorDrift { sim: sim(p, p as u64), onset, rate_s },
+                    window_samples: cfg.window_samples,
+                    index: p,
+                });
+            }
+        }
+        Scenario::NodeLoss => {
+            // wave 1: the base cohort, present from t=0 — some of it
+            // owned by the peer that will be killed. wave 2: a fresh
+            // cohort admitted after the peer restarts, to prove the
+            // canary-reinstated peer takes new patients.
+            let wave2_admit = cfg.ticks * 2 / 3;
+            for p in 0..cfg.patients {
+                out.push(Monitor {
+                    kind: Kind::Steady { sim: sim(p, p as u64), dropout: None, admit: 0 },
+                    window_samples: cfg.window_samples,
+                    index: p,
+                });
+            }
+            for p in cfg.patients..2 * cfg.patients {
+                out.push(Monitor {
+                    kind: Kind::Steady {
+                        sim: sim(p, p as u64),
+                        dropout: None,
+                        admit: wave2_admit,
+                    },
+                    window_samples: cfg.window_samples,
+                    index: p,
+                });
+            }
         }
     }
     out
@@ -384,6 +470,13 @@ pub struct FaultBudget {
     pub evictions: u64,
     /// Monitor-link severs injected (HTTP replay: the reconnect floor).
     pub severs: u64,
+    /// Node-loss only: patients the router must re-home when the
+    /// victim peer dies — exactly the wave-1 patients the 2-peer
+    /// consistent-hash ring assigns to patient 0's owner (the kill
+    /// script always kills that peer). Recomputed offline from
+    /// [`crate::router::ring::Ring`], which is deterministic across
+    /// processes by construction.
+    pub rehomed_patients: u64,
 }
 
 /// Dry-run the scenario against a model of the shard plane and return
@@ -481,6 +574,16 @@ pub fn budget(cfg: &ScenarioCfg, shards: usize, max_patients: usize) -> FaultBud
             }
         }
     }
+    if cfg.scenario == Scenario::NodeLoss {
+        // mirror the router's ring: the replay kill script kills the
+        // peer that owns patient 0, so exactly the wave-1 patients
+        // sharing that owner re-home (the ring's minimal-movement
+        // property makes this set the whole re-home budget)
+        let ring = crate::router::ring::Ring::new(2);
+        let victim = ring.route(0);
+        b.rehomed_patients =
+            (0..cfg.patients).filter(|&p| ring.route(p) == victim).count() as u64;
+    }
     b
 }
 
@@ -562,6 +665,57 @@ mod tests {
     fn budgets_are_deterministic() {
         for s in Scenario::all() {
             assert_eq!(budget(&cfg(s), 2, 8), budget(&cfg(s), 2, 8), "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn vendor_skew_budget_sheds_exactly_after_drift_onset() {
+        let b = budget(&cfg(Scenario::VendorSkew), 1, 1024);
+        // onset = ticks/3 = 2, rate 1.5 sample periods per tick: the
+        // drift exceeds one period from tick 3 on, so odd (vendor-B)
+        // beds shed all 125 B samples on ticks 3..8 — 5 ticks, 2 beds
+        assert_eq!(b.frames_stale, 2 * 5 * 125, "correlated drift sheds");
+        assert_eq!(b.frames_malformed, 0);
+        assert_eq!(b.frames_overcap, 0);
+        // vendor-A beds keep all 2000 samples → 8 windows each; B beds
+        // keep 3×250 + 5×125 = 1375 → 5 windows each
+        assert_eq!(b.windows, 2 * 8 + 2 * 5);
+        assert_eq!(b.frames_sent, 4 * 8 * 250);
+    }
+
+    #[test]
+    fn vendor_skew_budget_is_shard_count_invariant() {
+        let base = budget(&cfg(Scenario::VendorSkew), 1, 1024);
+        for shards in [2usize, 4, 8] {
+            assert_eq!(budget(&cfg(Scenario::VendorSkew), shards, 1024), base, "{shards} shards");
+        }
+    }
+
+    #[test]
+    fn node_loss_budget_mirrors_the_router_ring() {
+        let b = budget(&cfg(Scenario::NodeLoss), 2, 1024);
+        // the budget's re-home count must agree with the real ring the
+        // router routes by — same hash, same vnode count
+        let ring = crate::router::ring::Ring::new(2);
+        let victim = ring.route(0);
+        let expect = (0..4usize).filter(|&p| ring.route(p) == victim).count() as u64;
+        assert_eq!(b.rehomed_patients, expect);
+        assert!(b.rehomed_patients >= 1, "patient 0's owner owns patient 0");
+        assert!(b.rehomed_patients < 4, "the ring must spread 4 patients over 2 peers");
+        // wave 2 (4 more beds) joins at tick 2·8/3 = 5: 3 ticks of
+        // 250 ECG + 1 vitals per bed
+        assert_eq!(b.frames_sent, 4 * 8 * 251 + 4 * 3 * 251);
+        assert_eq!(b.windows, 4 * 8 + 4 * 3);
+        assert_eq!(b.frames_stale + b.frames_malformed + b.frames_overcap, 0);
+        assert_eq!(b.severs, 0, "node loss severs links at the router, not the monitors");
+    }
+
+    #[test]
+    fn non_node_loss_budgets_have_zero_rehome() {
+        for s in Scenario::all() {
+            if s != Scenario::NodeLoss {
+                assert_eq!(budget(&cfg(s), 2, 1024).rehomed_patients, 0, "{}", s.name());
+            }
         }
     }
 }

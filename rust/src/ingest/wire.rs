@@ -192,6 +192,112 @@ pub fn decode_step(buf: &[u8]) -> Result<DecodeStep> {
     Ok(DecodeStep::Frame(Frame { patient, modality, sim_time, values }, total))
 }
 
+/// First four body bytes of a router heartbeat probe.
+pub const HEARTBEAT_MAGIC: [u8; 4] = *b"HLMH";
+
+/// First four body bytes of a router frame-batch envelope header.
+pub const BATCH_MAGIC: [u8; 4] = *b"HLMB";
+
+/// Encoded size of a heartbeat: magic(4) + version(1) + reserved(3) +
+/// seq(8).
+pub const HEARTBEAT_LEN: usize = 16;
+
+/// Encoded size of a batch envelope header: magic(4) + version(1) +
+/// reserved(3) + n_frames(4). The `n_frames` wire frames follow back
+/// to back.
+pub const BATCH_HEADER_LEN: usize = 12;
+
+/// Encode a router heartbeat probe body.
+pub fn encode_heartbeat(seq: u64) -> [u8; HEARTBEAT_LEN] {
+    let mut out = [0u8; HEARTBEAT_LEN];
+    out[..4].copy_from_slice(&HEARTBEAT_MAGIC);
+    out[4] = WIRE_VERSION;
+    out[8..16].copy_from_slice(&seq.to_le_bytes());
+    out
+}
+
+/// Append a batch envelope header announcing `n_frames` frames to
+/// `out`; the caller appends the frames themselves with
+/// [`Frame::write_bytes`].
+pub fn write_batch_header(n_frames: u32, out: &mut Vec<u8>) {
+    out.reserve(BATCH_HEADER_LEN);
+    out.extend_from_slice(&BATCH_MAGIC);
+    out.push(WIRE_VERSION);
+    out.extend_from_slice(&[0u8; 3]); // reserved
+    out.extend_from_slice(&n_frames.to_le_bytes());
+}
+
+/// Outcome of one [`decode_envelope_step`] attempt. A superset of
+/// [`DecodeStep`]: the router tier speaks heartbeats and frame-batch
+/// envelopes over the same `/ingest.bin` route, and all three record
+/// types share the `HLM` magic prefix so early garbage rejection is as
+/// eager as for plain frames.
+#[derive(Debug, Clone, Copy)]
+pub enum EnvelopeStep {
+    /// A complete plain wire frame (same as [`DecodeStep::Frame`]).
+    Frame(Frame, usize),
+    /// A complete heartbeat probe.
+    Heartbeat { seq: u64, used: usize },
+    /// A batch envelope header: `n_frames` wire frames follow.
+    BatchStart { n_frames: u32, used: usize },
+    /// Valid prefix of one of the above; resume with more bytes.
+    NeedMore(usize),
+}
+
+/// Resumable decode of the router envelope stream: plain frames
+/// (`HLM1`, delegated to [`decode_step`]), heartbeats (`HLMH`), and
+/// batch headers (`HLMB`). Unknown fourth bytes after a valid `HLM`
+/// prefix are hard errors, as are bad version/reserved bytes, detected
+/// as soon as the offending byte is visible.
+pub fn decode_envelope_step(buf: &[u8]) -> Result<EnvelopeStep> {
+    let prefix = buf.len().min(3);
+    if buf[..prefix] != WIRE_MAGIC[..prefix] {
+        return Err(Error::wire("bad magic (expected HLM prefix)"));
+    }
+    if buf.len() < 4 {
+        return Ok(EnvelopeStep::NeedMore(4));
+    }
+    match buf[3] {
+        b'1' => Ok(match decode_step(buf)? {
+            DecodeStep::Frame(frame, used) => EnvelopeStep::Frame(frame, used),
+            DecodeStep::NeedMore(need) => EnvelopeStep::NeedMore(need),
+        }),
+        b'H' => {
+            let total = HEARTBEAT_LEN;
+            if buf.len() > 4 && buf[4] != WIRE_VERSION {
+                return Err(Error::wire(format!("unsupported wire version {}", buf[4])));
+            }
+            for at in 5..8usize.min(buf.len()) {
+                if buf[at] != 0 {
+                    return Err(Error::wire("nonzero reserved bytes"));
+                }
+            }
+            if buf.len() < total {
+                return Ok(EnvelopeStep::NeedMore(total));
+            }
+            let seq = u64::from_le_bytes(take8(buf, 8));
+            Ok(EnvelopeStep::Heartbeat { seq, used: total })
+        }
+        b'B' => {
+            let total = BATCH_HEADER_LEN;
+            if buf.len() > 4 && buf[4] != WIRE_VERSION {
+                return Err(Error::wire(format!("unsupported wire version {}", buf[4])));
+            }
+            for at in 5..8usize.min(buf.len()) {
+                if buf[at] != 0 {
+                    return Err(Error::wire("nonzero reserved bytes"));
+                }
+            }
+            if buf.len() < total {
+                return Ok(EnvelopeStep::NeedMore(total));
+            }
+            let n_frames = u32::from_le_bytes(take4(buf, 8));
+            Ok(EnvelopeStep::BatchStart { n_frames, used: total })
+        }
+        other => Err(Error::wire(format!("unknown envelope type byte 0x{other:02x}"))),
+    }
+}
+
 /// Decode a whole request body of back-to-back frames. Errors if any
 /// frame is malformed or if trailing bytes remain after the last frame.
 pub fn decode_stream(mut buf: &[u8]) -> Result<Vec<Frame>> {
@@ -381,6 +487,104 @@ mod tests {
         let mut body = frame().to_bytes();
         body.push(0x00);
         assert!(decode_stream(&body).is_err());
+    }
+
+    #[test]
+    fn heartbeat_roundtrips_and_resumes() {
+        let body = encode_heartbeat(0xDEAD_BEEF_0042);
+        assert_eq!(body.len(), HEARTBEAT_LEN);
+        match decode_envelope_step(&body).unwrap() {
+            EnvelopeStep::Heartbeat { seq, used } => {
+                assert_eq!(seq, 0xDEAD_BEEF_0042);
+                assert_eq!(used, HEARTBEAT_LEN);
+            }
+            other => panic!("expected heartbeat, got {other:?}"),
+        }
+        for cut in 0..body.len() {
+            match decode_envelope_step(&body[..cut]).unwrap_or_else(|e| panic!("cut {cut}: {e}")) {
+                EnvelopeStep::NeedMore(need) => {
+                    assert!(need > cut && need <= HEARTBEAT_LEN, "cut {cut}: need {need}");
+                }
+                other => panic!("cut {cut}: incomplete heartbeat decoded {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn batch_envelope_header_roundtrips() {
+        let mut body = Vec::new();
+        write_batch_header(3, &mut body);
+        assert_eq!(body.len(), BATCH_HEADER_LEN);
+        for i in 0..3usize {
+            let mut f = frame();
+            f.patient = i;
+            f.write_bytes(&mut body);
+        }
+        match decode_envelope_step(&body).unwrap() {
+            EnvelopeStep::BatchStart { n_frames, used } => {
+                assert_eq!(n_frames, 3);
+                assert_eq!(used, BATCH_HEADER_LEN);
+            }
+            other => panic!("expected batch start, got {other:?}"),
+        }
+        // the frames that follow decode as plain envelope frames
+        let mut at = BATCH_HEADER_LEN;
+        for i in 0..3usize {
+            match decode_envelope_step(&body[at..]).unwrap() {
+                EnvelopeStep::Frame(f, used) => {
+                    assert_eq!(f.patient, i);
+                    at += used;
+                }
+                other => panic!("frame {i}: got {other:?}"),
+            }
+        }
+        assert_eq!(at, body.len());
+    }
+
+    #[test]
+    fn envelope_delegates_plain_frames_to_decode_step() {
+        let f = frame();
+        let bytes = f.to_bytes();
+        match decode_envelope_step(&bytes).unwrap() {
+            EnvelopeStep::Frame(g, used) => {
+                assert_eq!(used, bytes.len());
+                assert_eq!(g.patient, f.patient);
+                assert_eq!(g.values, f.values);
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+        for cut in 0..bytes.len() {
+            assert!(
+                matches!(decode_envelope_step(&bytes[..cut]).unwrap(), EnvelopeStep::NeedMore(_)),
+                "cut {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn envelope_rejects_garbage_at_the_first_visible_byte() {
+        assert!(decode_envelope_step(&[0xde]).is_err());
+        assert!(decode_envelope_step(b"HLX").is_err());
+        // valid HLM prefix + unknown type byte
+        assert!(decode_envelope_step(b"HLMZ").is_err());
+        // heartbeat with corrupt version / reserved bytes, rejected as
+        // soon as that byte arrives
+        let good = encode_heartbeat(7);
+        for (at, bad) in [(4usize, 9u8), (5, 1), (6, 1), (7, 1)] {
+            let mut b = good.to_vec();
+            b[at] = bad;
+            assert!(decode_envelope_step(&b[..at + 1]).is_err(), "byte {at} not rejected early");
+            assert!(decode_envelope_step(&b).is_err(), "byte {at} not rejected in full");
+        }
+        // same for the batch header
+        let mut hdr = Vec::new();
+        write_batch_header(2, &mut hdr);
+        for (at, bad) in [(4usize, 9u8), (5, 1), (6, 1), (7, 1)] {
+            let mut b = hdr.clone();
+            b[at] = bad;
+            assert!(decode_envelope_step(&b[..at + 1]).is_err(), "byte {at} not rejected early");
+            assert!(decode_envelope_step(&b).is_err(), "byte {at} not rejected in full");
+        }
     }
 
     #[test]

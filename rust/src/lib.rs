@@ -63,8 +63,10 @@ pub mod mlcpu;
 pub mod netcalc;
 pub mod profiler;
 pub mod rng;
+pub mod router;
 pub mod runtime;
 pub mod serving;
+pub mod signal;
 pub mod surrogate;
 pub mod zoo;
 

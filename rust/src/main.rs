@@ -4,6 +4,7 @@
 //! holmes zoo                       inspect the model zoo
 //! holmes compose [--budget 0.2]    run the ensemble composer (+ baselines)
 //! holmes serve [--patients 64]     run the bedside serving simulation
+//! holmes route --peers a,b         router tier in front of serve peers
 //! holmes profile [--models a,b]    measured latency profile of an ensemble
 //! holmes exp <id|all> [--quick]    regenerate a paper table/figure
 //! ```
@@ -51,11 +52,38 @@ COMMANDS:
       --floor-acc AUC        degraded-mode accuracy floor    [0.8]
       --chaos                chaos harness: slowed backend, scripted
                              mid-run lane fault + ghost admission storm
+                           serve drains gracefully on SIGTERM/ctrl-c: stops
+                           accepting, resolves in-flight queries, advertises
+                           \"draining\" on heartbeats, flushes the final
+                           telemetry report, exits 0; with --patients 0 it
+                           is a pure ingest peer for the router tier (falls
+                           back to the toy zoo without artifacts)
+  route                    fault-tolerant router tier: owns the ingest edge,
+                           forwards frames to serve peers over a consistent-
+                           hash ring (sticky owners), heartbeat-probes them,
+                           and re-homes + replays spilled frames on death or
+                           drain; drains cleanly on SIGTERM
+      --http ADDR            router ingest-edge address   [127.0.0.1:7171]
+      --peers a:p,b:p,...    downstream serve ingest addresses
+      --edge-threads N       epoll event-loop threads     [0]
+      --duration SECS        plain mode: wall-clock lifetime (0 = until
+                             SIGTERM); smoke: simulated cohort length
+      --spawn-peers N        CI smoke: spawn N child `serve --patients 0`
+                             peers on adjacent ports and gate on recovery
+      --patients N --seed N  smoke cohort                 [8, 7]
+      --speedup X            smoke virtual-clock factor   [4]
+      --kill-at SECS         smoke: SIGKILL the bed-0 owner at this
+                             simulated second (0 = healthy run)
+      --slo-ms MS            smoke crash→re-home budget   [3000]
   replay                   deterministic adversarial scenario replay; exits
                            nonzero when any scenario invariant is breached
                            (falls back to the toy zoo without artifacts)
       --scenario NAME        churn | dropout-resync | clock-skew |
-                             burst-storm | hostile-edge | all  [churn]
+                             burst-storm | hostile-edge | vendor-skew |
+                             node-loss | all              [churn]
+      --route-peers N        stream through the router tier into N
+                             in-process peer stacks (node-loss forces 2;
+                             0 = direct single-node)      [0]
       --seed N               scenario seed (same seed ⇒ bit-identical
                              shed/evict/prediction accounting) [7]
       --patients N --gpus N                                  [8, 2]
@@ -97,7 +125,8 @@ fn run(argv: &[String]) -> Result<()> {
         &[
             "artifacts", "budget", "gpus", "patients", "seed", "window", "speedup", "duration",
             "http", "edge-threads", "models", "out", "shards", "workers", "slo-ms",
-            "control-tick-ms", "floor-acc", "scenario",
+            "control-tick-ms", "floor-acc", "scenario", "peers", "route-peers", "spawn-peers",
+            "kill-at",
         ],
     )?;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -164,8 +193,17 @@ fn run(argv: &[String]) -> Result<()> {
             }
         }
         Some("serve") => {
-            let zoo = Zoo::load(&artifacts)?;
-            exp::bedside::run_bedside(
+            // serve must be spawnable as a router peer with no trained
+            // artifacts (the route smoke does exactly that): fall back
+            // to the same deterministic toy zoo the replay gate uses
+            let zoo = match Zoo::load(&artifacts) {
+                Ok(zoo) => zoo,
+                Err(_) => {
+                    println!("no artifacts at {} — using toy zoo", artifacts.display());
+                    holmes::zoo::testkit::toy_zoo_with(9, 64, 21, 2500, &[1, 8])
+                }
+            };
+            let report = exp::bedside::run_bedside(
                 &zoo,
                 exp::bedside::BedsideConfig {
                     patients: args.usize_or("patients", 64)?,
@@ -186,6 +224,35 @@ fn run(argv: &[String]) -> Result<()> {
                     chaos: args.flag("chaos"),
                 },
             )?;
+            // a drained serve exiting 0 is the router smoke's proof
+            // that every admitted query resolved
+            if report.unresolved > 0 {
+                return Err(Error::serving(format!(
+                    "{} admitted queries unresolved at exit",
+                    report.unresolved
+                )));
+            }
+        }
+        Some("route") => {
+            let peers: Vec<String> = args
+                .get("peers")
+                .map(|s| s.split(',').map(|p| p.trim().to_string()).collect())
+                .unwrap_or_default();
+            let smoke = args.usize_or("spawn-peers", 0)? > 0;
+            exp::route::run_route(exp::route::RouteConfig {
+                listen: args.get_or("http", "127.0.0.1:7171").to_string(),
+                peers,
+                edge_threads: args.usize_or("edge-threads", 0)?,
+                spawn_peers: args.usize_or("spawn-peers", 0)?,
+                patients: args.usize_or("patients", 8)?,
+                // plain mode defaults to run-until-SIGTERM; the smoke
+                // needs a bounded cohort
+                duration_s: args.f64_or("duration", if smoke { 12.0 } else { 0.0 })?,
+                speedup: args.f64_or("speedup", 4.0)?,
+                seed: args.u64_or("seed", 7)?,
+                kill_at: args.f64_or("kill-at", 0.0)?,
+                slo_ms: args.f64_or("slo-ms", 3000.0)?,
+            })?;
         }
         Some("replay") => {
             // the replay gate must run in CI with no trained artifacts:
@@ -221,6 +288,7 @@ fn run(argv: &[String]) -> Result<()> {
                         http_addr: args.get("http").map(String::from),
                         edge_threads: args.usize_or("edge-threads", 0)?,
                         govern: args.flag("govern"),
+                        route_peers: args.usize_or("route-peers", 0)?,
                     },
                 )?;
                 failed += usize::from(!report.violations.is_empty());

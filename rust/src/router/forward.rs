@@ -1,0 +1,425 @@
+//! Per-peer forwarding link: bounded send queue, a worker thread
+//! speaking the `HLMB` batch envelope over one persistent keep-alive
+//! connection, and a spill buffer that holds a dead or draining peer's
+//! frames until the router re-homes them.
+//!
+//! ```text
+//!   RouterSink::deliver ──► Link::send
+//!        │ queue (bounded; full = caller blocks — physical backpressure)
+//!        ▼
+//!   worker thread: take ≤ MAX_BATCH ──► IngestClient::send_batch
+//!        │   capped-jitter redial retries, socket write timeout;
+//!        │   a persistently failing batch returns to the queue FRONT
+//!        ▼   (delivery order is preserved across retries)
+//!   downstream `holmes serve` peer (POST /ingest.bin, HLMB envelope)
+//! ```
+//!
+//! Ordering note for the spill buffer: frames only enter `spill` while
+//! the link is paused (operator drain) or dead — states in which the
+//! worker delivers nothing new — so the spill is always a contiguous
+//! suffix of the link's traffic. [`Link::drain_for_failover`] returns
+//! queue remnants followed by the spill, preserving per-patient frame
+//! order for replay through the survivors.
+
+use std::collections::VecDeque;
+use std::net::SocketAddr;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::http::IngestClient;
+use crate::ingest::Frame;
+use crate::serving::RouterGauges;
+
+/// Bounded send-queue depth; a full queue blocks the router's deliver
+/// path (backpressure reaches the ingest edge, not a hidden buffer).
+pub const QUEUE_CAP: usize = 8192;
+/// Spill-buffer cap: ~4 s of one peer's share of a 250 Hz × 64-bed
+/// cohort. Overflow drops the oldest budgeted guarantee and is counted
+/// (`router_spill_overflow`), never silent.
+pub const SPILL_CAP: usize = 65_536;
+/// Frames per forwarded batch (one `HLMB` envelope).
+pub const MAX_BATCH: usize = 256;
+/// Pause between redeliveries of a persistently failing batch — long
+/// enough to avoid a busy retry loop, short enough that the health
+/// prober (not this loop) decides when the peer is dead.
+const RETRY_PAUSE: Duration = Duration::from_millis(50);
+
+struct LinkState {
+    queue: VecDeque<Frame>,
+    spill: VecDeque<Frame>,
+    /// Operator drain in progress: new frames spill, the worker
+    /// flushes what is already queued.
+    paused: bool,
+    /// Peer declared dead by the prober: the worker stops delivering.
+    dead: bool,
+    /// [`Link::drain_for_failover`] already harvested this link's
+    /// frames — anything arriving after this would be lost in the
+    /// spill, so senders get the frame back ([`SendOutcome::Gone`])
+    /// and re-route it.
+    drained: bool,
+    /// Link shutdown: the worker exits once the queue is flushed.
+    closing: bool,
+    /// A batch is outside the lock being delivered right now.
+    in_flight: bool,
+}
+
+struct Shared {
+    state: Mutex<LinkState>,
+    cv: Condvar,
+}
+
+/// What happened to a frame handed to [`LinkHandle::send`].
+#[must_use]
+pub enum SendOutcome {
+    /// Queued for delivery (possibly after a backpressure wait).
+    Queued,
+    /// Link paused or dead: parked in the spill buffer, recovered by
+    /// the next `drain_for_failover`.
+    Spilled,
+    /// Link dead *and already drained* — the frame comes back to the
+    /// caller, who must re-resolve ownership and route it elsewhere.
+    Gone(Frame),
+}
+
+/// One persistent forwarding link to a downstream peer. The owning
+/// side (the router's control plane) holds the `Link`; the data path
+/// sends through cloneable [`LinkHandle`]s so no router-wide lock is
+/// ever held across a backpressure wait.
+pub struct Link {
+    shared: Arc<Shared>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Cloneable sender handle onto a [`Link`]'s queue.
+#[derive(Clone)]
+pub struct LinkHandle {
+    shared: Arc<Shared>,
+}
+
+impl Link {
+    /// Spawn the link's worker thread. The connection is dialed lazily
+    /// by the worker, so constructing a link to a not-yet-listening
+    /// peer succeeds and the first batches retry until it comes up.
+    pub fn spawn(
+        peer: usize,
+        addr: SocketAddr,
+        io_timeout: Duration,
+        gauges: Arc<RouterGauges>,
+    ) -> Link {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(LinkState {
+                queue: VecDeque::new(),
+                spill: VecDeque::new(),
+                paused: false,
+                dead: false,
+                drained: false,
+                closing: false,
+                in_flight: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let shared2 = Arc::clone(&shared);
+        let worker = std::thread::Builder::new()
+            .name(format!("router-link-{peer}"))
+            .spawn(move || worker_loop(shared2, peer, addr, io_timeout, gauges))
+            .expect("spawn router link worker");
+        Link {
+            shared,
+            worker: Some(worker),
+        }
+    }
+
+    /// A cloneable sender handle for the routing data path.
+    pub fn handle(&self) -> LinkHandle {
+        LinkHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Enqueue one frame for delivery (convenience over
+    /// [`LinkHandle::send`] for the control plane and tests).
+    pub fn send(&self, frame: Frame, peer: usize, gauges: &RouterGauges) -> SendOutcome {
+        self.handle().send(frame, peer, gauges)
+    }
+
+    /// Operator drain: stop accepting (new frames spill for re-homing)
+    /// and wait until every already-queued frame has been delivered to
+    /// the peer. Returns early if the peer dies mid-drain — the
+    /// remnants are then recovered by [`Self::drain_for_failover`].
+    pub fn quiesce(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.paused = true;
+        self.shared.cv.notify_all();
+        while (!st.queue.is_empty() || st.in_flight) && !st.dead {
+            st = self.shared.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Wait until everything queued so far has been delivered, without
+    /// pausing the link (tests and settle points; new sends may still
+    /// arrive behind the wait).
+    pub fn flush(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        while (!st.queue.is_empty() || st.in_flight) && !st.dead {
+            st = self.shared.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Failover: mark the link dead, wait out any in-flight batch (the
+    /// worker pushes a failed batch back to the queue front), and take
+    /// every undelivered frame — queue remnants first, then the spill —
+    /// in original send order for replay through the survivors.
+    pub fn drain_for_failover(&self, peer: usize, gauges: &RouterGauges) -> Vec<Frame> {
+        let mut st = self.shared.state.lock().unwrap();
+        st.dead = true;
+        self.shared.cv.notify_all();
+        while st.in_flight {
+            st = self.shared.cv.wait(st).unwrap();
+        }
+        st.drained = true;
+        let mut out: Vec<Frame> = st.queue.drain(..).collect();
+        out.extend(st.spill.drain(..));
+        gauges.spill_depth[peer].store(0, Ordering::Relaxed);
+        drop(st);
+        // senders parked on a full queue must wake and take the Gone path
+        self.shared.cv.notify_all();
+        out
+    }
+
+    /// Flush-and-join shutdown: the worker exits after the queue
+    /// empties (or immediately if the link is dead).
+    pub fn shutdown(mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.closing = true;
+        }
+        self.shared.cv.notify_all();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Link {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.closing = true;
+            st.dead = true; // drop is abandonment, not a flush
+        }
+        self.shared.cv.notify_all();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl LinkHandle {
+    /// Enqueue one frame. Blocks while the queue is full
+    /// (backpressure); spills while the link is paused or dead; hands
+    /// the frame back once the link has been drained for failover
+    /// (the caller re-resolves ownership and routes it elsewhere).
+    pub fn send(&self, frame: Frame, peer: usize, gauges: &RouterGauges) -> SendOutcome {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.queue.len() >= QUEUE_CAP && !st.paused && !st.dead {
+            st = self.shared.cv.wait(st).unwrap();
+        }
+        if st.drained {
+            return SendOutcome::Gone(frame);
+        }
+        if st.paused || st.dead {
+            if st.spill.len() >= SPILL_CAP {
+                gauges.spill_overflow.fetch_add(1, Ordering::Relaxed);
+            } else {
+                st.spill.push_back(frame);
+                gauges.spilled_total.fetch_add(1, Ordering::Relaxed);
+                gauges.spill_depth[peer].store(st.spill.len() as u64, Ordering::Relaxed);
+            }
+            return SendOutcome::Spilled;
+        }
+        st.queue.push_back(frame);
+        drop(st);
+        self.shared.cv.notify_all();
+        SendOutcome::Queued
+    }
+}
+
+fn worker_loop(
+    shared: Arc<Shared>,
+    peer: usize,
+    addr: SocketAddr,
+    io_timeout: Duration,
+    gauges: Arc<RouterGauges>,
+) {
+    let mut client: Option<IngestClient> = None;
+    let mut batch: Vec<Frame> = Vec::with_capacity(MAX_BATCH);
+    loop {
+        {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.dead || (st.closing && st.queue.is_empty()) {
+                    return;
+                }
+                if !st.queue.is_empty() {
+                    break;
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+            let take = st.queue.len().min(MAX_BATCH);
+            batch.clear();
+            batch.extend(st.queue.drain(..take));
+            st.in_flight = true;
+        }
+        // senders blocked on a full queue can make progress now
+        shared.cv.notify_all();
+
+        if client.is_none() {
+            client = IngestClient::connect(addr)
+                .ok()
+                .map(|c| {
+                    c.with_backoff(3, Duration::from_millis(10), Duration::from_millis(200))
+                        .with_io_timeout(io_timeout)
+                });
+        }
+        let sent = match client.as_mut() {
+            Some(c) => {
+                let before = c.reconnects();
+                let r = c.send_batch(&batch);
+                let retries = c.reconnects() - before;
+                if retries > 0 {
+                    gauges.forward_retries[peer].fetch_add(retries, Ordering::Relaxed);
+                }
+                if r.is_err() {
+                    client = None; // the connection is suspect; redial next round
+                }
+                r.is_ok()
+            }
+            None => {
+                gauges.forward_retries[peer].fetch_add(1, Ordering::Relaxed);
+                false
+            }
+        };
+
+        let mut st = shared.state.lock().unwrap();
+        st.in_flight = false;
+        if sent {
+            gauges.frames_forwarded[peer].fetch_add(batch.len() as u64, Ordering::Relaxed);
+            drop(st);
+            shared.cv.notify_all();
+        } else {
+            // redelivery preserves order: the failed batch returns to
+            // the queue front ahead of everything enqueued since
+            for f in batch.drain(..).rev() {
+                st.queue.push_front(f);
+            }
+            let dead = st.dead;
+            drop(st);
+            shared.cv.notify_all();
+            if !dead {
+                std::thread::sleep(RETRY_PAUSE);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ingest::Modality;
+    use crate::serving::{ShardSender, Telemetry};
+    use std::sync::mpsc;
+
+    fn frame(patient: usize, t: f64) -> Frame {
+        Frame {
+            patient,
+            modality: Modality::Vitals,
+            sim_time: t,
+            values: [0.5f32; 6].into(),
+        }
+    }
+
+    #[test]
+    fn delivers_batches_to_a_live_peer() {
+        let (tx, rx) = mpsc::sync_channel(1024);
+        let telemetry = Arc::new(Telemetry::default());
+        let server = crate::http::serve(
+            "127.0.0.1:0",
+            ShardSender::from_senders(vec![tx]),
+            Arc::clone(&telemetry),
+        )
+        .unwrap();
+        let gauges = Arc::new(RouterGauges::new(1));
+        let link = Link::spawn(0, server.addr, Duration::from_secs(2), Arc::clone(&gauges));
+        for i in 0..100 {
+            assert!(matches!(
+                link.send(frame(i % 4, i as f64), 0, &gauges),
+                SendOutcome::Queued
+            ));
+        }
+        link.quiesce();
+        assert_eq!(gauges.frames_forwarded[0].load(Ordering::Relaxed), 100);
+        link.shutdown();
+        assert_eq!(telemetry.frames.load(Ordering::Relaxed), 100);
+        // the frames actually landed on the peer's shard plane
+        assert_eq!(rx.try_iter().count(), 100);
+    }
+
+    #[test]
+    fn failover_drain_returns_undelivered_frames_in_order() {
+        // an address nobody listens on: every batch fails, frames pile
+        // up in the queue; after drain_for_failover they come back in
+        // original send order (a failed in-flight batch returns to the
+        // queue front)
+        let gauges = Arc::new(RouterGauges::new(1));
+        let addr: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        let link = Link::spawn(0, addr, Duration::from_millis(100), Arc::clone(&gauges));
+        for i in 0..50 {
+            let _ = link.send(frame(7, i as f64), 0, &gauges);
+        }
+        let drained = link.drain_for_failover(0, &gauges);
+        assert_eq!(drained.len(), 50);
+        for (i, f) in drained.iter().enumerate() {
+            assert_eq!(f.sim_time, i as f64, "frame order broken at {i}");
+        }
+        // a send racing past the failover gets its frame back to
+        // re-route — never silently parked in a drained spill
+        match link.send(frame(7, 50.0), 0, &gauges) {
+            SendOutcome::Gone(f) => assert_eq!(f.sim_time, 50.0),
+            _ => panic!("expected Gone after failover drain"),
+        }
+        assert_eq!(gauges.spill_overflow.load(Ordering::Relaxed), 0);
+        link.shutdown();
+    }
+
+    #[test]
+    fn paused_link_spills_and_failover_recovers_the_spill() {
+        let (tx, rx) = mpsc::sync_channel(1024);
+        let telemetry = Arc::new(Telemetry::default());
+        let server = crate::http::serve(
+            "127.0.0.1:0",
+            ShardSender::from_senders(vec![tx]),
+            Arc::clone(&telemetry),
+        )
+        .unwrap();
+        let gauges = Arc::new(RouterGauges::new(1));
+        let link = Link::spawn(0, server.addr, Duration::from_secs(2), Arc::clone(&gauges));
+        for i in 0..10 {
+            let _ = link.send(frame(3, i as f64), 0, &gauges);
+        }
+        // quiesce flushes everything queued so far to the live peer...
+        link.quiesce();
+        assert_eq!(gauges.frames_forwarded[0].load(Ordering::Relaxed), 10);
+        assert_eq!(rx.try_iter().count(), 10);
+        // ...then new sends spill instead of reaching the peer
+        assert!(matches!(
+            link.send(frame(3, 99.0), 0, &gauges),
+            SendOutcome::Spilled
+        ));
+        assert_eq!(gauges.spilled_total.load(Ordering::Relaxed), 1);
+        assert_eq!(gauges.spill_depths(), vec![1]);
+        let drained = link.drain_for_failover(0, &gauges);
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].sim_time, 99.0);
+        assert_eq!(gauges.spill_depths(), vec![0]);
+        link.shutdown();
+    }
+}

@@ -1,0 +1,394 @@
+//! Heartbeat prober with failure detection and canary re-probe.
+//!
+//! Mirrors the governor's lane-quarantine pattern one tier up: a
+//! consecutive-miss counter turns a peer `Suspect`, enough misses turn
+//! it `Dead` (the router drains and re-homes its patients), and a dead
+//! peer is re-probed on **capped exponential backoff** — one canary
+//! heartbeat per backoff expiry, reinstated only when a probe round
+//! trips cleanly. A peer answering heartbeats with `"draining":true`
+//! (operator `POST /drain` or SIGTERM) is treated as an orderly
+//! departure: same re-home, zero frame loss, no suspicion counting.
+//!
+//! The decision core ([`HealthCore`]) is pure and tick-driven —
+//! deterministic unit tests, no sockets — while [`Prober`] is the thin
+//! driver thread that performs one **single-attempt** heartbeat per
+//! peer per tick (a probe that needs retries IS the failure signal,
+//! so it deliberately bypasses [`IngestClient`]'s redial loop).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::ingest::wire;
+
+/// Peer state gauge encoding (mirrored in `router_peer_states`).
+pub const STATE_HEALTHY: u8 = 0;
+pub const STATE_SUSPECT: u8 = 1;
+pub const STATE_DEAD: u8 = 2;
+pub const STATE_DRAINING: u8 = 3;
+
+/// What one probe round-trip observed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeOutcome {
+    /// 2xx heartbeat response, peer serving normally.
+    Ok,
+    /// 2xx heartbeat response advertising `"draining":true`.
+    Draining,
+    /// Connect refused/timed out, transport error, or non-2xx.
+    Fail,
+}
+
+/// State-transition edge the router must act on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeerAction {
+    /// Peer crossed the miss threshold: drain its link and re-home.
+    Down,
+    /// Peer advertised an orderly drain: quiesce, then re-home.
+    Draining,
+    /// Canary probe succeeded: reinstate into the ring.
+    Up,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum PeerHealth {
+    Healthy,
+    /// Consecutive missed probes so far.
+    Suspect(u32),
+    /// Canary backoff: `wait` is the current backoff width in probe
+    /// ticks (doubles on each failed canary, capped), `next_in` counts
+    /// down to the next canary probe.
+    Dead { wait: u32, next_in: u32 },
+    Draining,
+}
+
+/// Per-peer probe cadence and failure-detection thresholds.
+#[derive(Debug, Clone, Copy)]
+pub struct HealthConfig {
+    /// One probe sweep per this interval.
+    pub probe_interval: Duration,
+    /// Consecutive misses before a peer is declared dead.
+    pub dead_after: u32,
+    /// Initial canary backoff, in probe ticks (mirrors the governor's
+    /// `backoff_init_ticks`).
+    pub backoff_init: u32,
+    /// Backoff cap, in probe ticks.
+    pub backoff_max: u32,
+    /// TCP connect deadline for one probe attempt.
+    pub connect_timeout: Duration,
+    /// Socket read/write deadline for one probe attempt.
+    pub io_timeout: Duration,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            probe_interval: Duration::from_millis(100),
+            dead_after: 3,
+            backoff_init: 2,
+            backoff_max: 32,
+            connect_timeout: Duration::from_millis(250),
+            io_timeout: Duration::from_millis(500),
+        }
+    }
+}
+
+/// Pure failure-detection state machine: feed it probe outcomes, get
+/// back the actions the router must take. No clocks, no sockets.
+pub struct HealthCore {
+    peers: Vec<PeerHealth>,
+    dead_after: u32,
+    backoff_init: u32,
+    backoff_max: u32,
+}
+
+impl HealthCore {
+    pub fn new(n_peers: usize, cfg: &HealthConfig) -> Self {
+        HealthCore {
+            peers: vec![PeerHealth::Healthy; n_peers],
+            dead_after: cfg.dead_after.max(1),
+            backoff_init: cfg.backoff_init.max(1),
+            backoff_max: cfg.backoff_max.max(cfg.backoff_init.max(1)),
+        }
+    }
+
+    /// Should this tick probe `peer`? Live peers are probed every
+    /// tick; dead peers only when their canary backoff expires (each
+    /// call advances the countdown by one tick).
+    pub fn should_probe(&mut self, peer: usize) -> bool {
+        match &mut self.peers[peer] {
+            PeerHealth::Dead { next_in, .. } => {
+                if *next_in == 0 {
+                    true
+                } else {
+                    *next_in -= 1;
+                    false
+                }
+            }
+            _ => true,
+        }
+    }
+
+    /// Fold one probe outcome into the state machine; returns the
+    /// action edge, if this observation crossed one.
+    pub fn observe(&mut self, peer: usize, outcome: ProbeOutcome) -> Option<PeerAction> {
+        let (next, action) = match (self.peers[peer], outcome) {
+            (PeerHealth::Healthy, ProbeOutcome::Ok) => (PeerHealth::Healthy, None),
+            (PeerHealth::Healthy, ProbeOutcome::Fail) => (PeerHealth::Suspect(1), None),
+            (PeerHealth::Suspect(_), ProbeOutcome::Ok) => (PeerHealth::Healthy, None),
+            (PeerHealth::Suspect(m), ProbeOutcome::Fail) => {
+                if m + 1 >= self.dead_after {
+                    (
+                        PeerHealth::Dead { wait: self.backoff_init, next_in: self.backoff_init },
+                        Some(PeerAction::Down),
+                    )
+                } else {
+                    (PeerHealth::Suspect(m + 1), None)
+                }
+            }
+            // an orderly drain is announced, not inferred: no
+            // suspicion counting on the way out
+            (PeerHealth::Healthy | PeerHealth::Suspect(_), ProbeOutcome::Draining) => {
+                (PeerHealth::Draining, Some(PeerAction::Draining))
+            }
+            (PeerHealth::Dead { .. }, ProbeOutcome::Ok) => {
+                (PeerHealth::Healthy, Some(PeerAction::Up))
+            }
+            (PeerHealth::Dead { wait, .. }, ProbeOutcome::Fail) => {
+                let wait = (wait.saturating_mul(2)).min(self.backoff_max);
+                (PeerHealth::Dead { wait, next_in: wait }, None)
+            }
+            // alive but still draining: hold the backoff width, probe
+            // again next expiry
+            (PeerHealth::Dead { wait, .. }, ProbeOutcome::Draining) => {
+                (PeerHealth::Dead { wait, next_in: wait }, None)
+            }
+            (PeerHealth::Draining, ProbeOutcome::Ok) => {
+                (PeerHealth::Healthy, Some(PeerAction::Up))
+            }
+            (PeerHealth::Draining, ProbeOutcome::Draining) => (PeerHealth::Draining, None),
+            // a draining peer that stops answering was already drained
+            // and re-homed — demote to Dead silently (canary cadence)
+            (PeerHealth::Draining, ProbeOutcome::Fail) => (
+                PeerHealth::Dead { wait: self.backoff_init, next_in: self.backoff_init },
+                None,
+            ),
+        };
+        self.peers[peer] = next;
+        action
+    }
+
+    /// Gauge encoding of a peer's current state.
+    pub fn state_code(&self, peer: usize) -> u8 {
+        match self.peers[peer] {
+            PeerHealth::Healthy => STATE_HEALTHY,
+            PeerHealth::Suspect(_) => STATE_SUSPECT,
+            PeerHealth::Dead { .. } => STATE_DEAD,
+            PeerHealth::Draining => STATE_DRAINING,
+        }
+    }
+}
+
+/// One single-attempt heartbeat round trip: fresh connection, one
+/// `HLMH` record to `/ingest.bin`, one response. Any stumble is a
+/// miss — retrying inside a probe would blunt the failure detector.
+pub fn probe_once(
+    addr: SocketAddr,
+    seq: u64,
+    connect_timeout: Duration,
+    io_timeout: Duration,
+) -> ProbeOutcome {
+    let Ok(mut stream) = TcpStream::connect_timeout(&addr, connect_timeout) else {
+        return ProbeOutcome::Fail;
+    };
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(io_timeout));
+    let _ = stream.set_write_timeout(Some(io_timeout));
+    let body = wire::encode_heartbeat(seq);
+    let head = format!(
+        "POST /ingest.bin HTTP/1.1\r\nHost: probe\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    if stream.write_all(head.as_bytes()).is_err() || stream.write_all(&body).is_err() {
+        return ProbeOutcome::Fail;
+    }
+    // Connection: close — read to EOF, then parse status + body
+    let mut resp = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                resp.extend_from_slice(&chunk[..n]);
+                if resp.len() > 16 * 1024 {
+                    return ProbeOutcome::Fail;
+                }
+            }
+            Err(_) => return ProbeOutcome::Fail,
+        }
+    }
+    // "HTTP/1.1 NNN ..."
+    if resp.len() < 12 || !resp.starts_with(b"HTTP/1.") {
+        return ProbeOutcome::Fail;
+    }
+    let status: u16 = match std::str::from_utf8(&resp[9..12]).ok().and_then(|s| s.parse().ok()) {
+        Some(s) => s,
+        None => return ProbeOutcome::Fail,
+    };
+    if !(200..300).contains(&status) {
+        return ProbeOutcome::Fail;
+    }
+    const DRAIN_TAG: &[u8] = b"\"draining\":true";
+    if resp.windows(DRAIN_TAG.len()).any(|w| w == DRAIN_TAG) {
+        ProbeOutcome::Draining
+    } else {
+        ProbeOutcome::Ok
+    }
+}
+
+/// The prober driver thread: sweeps every peer once per
+/// [`HealthConfig::probe_interval`], feeds outcomes through
+/// [`HealthCore`], and hands action edges to the router.
+pub struct Prober {
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Prober {
+    pub fn spawn(router: Arc<super::Router>, cfg: HealthConfig) -> Prober {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let join = std::thread::Builder::new()
+            .name("router-prober".into())
+            .spawn(move || {
+                let addrs = router.peer_addrs().to_vec();
+                let mut core = HealthCore::new(addrs.len(), &cfg);
+                let mut seq: u64 = 0;
+                while !stop2.load(Ordering::SeqCst) {
+                    for (peer, &addr) in addrs.iter().enumerate() {
+                        if !core.should_probe(peer) {
+                            continue;
+                        }
+                        seq += 1;
+                        let outcome =
+                            probe_once(addr, seq, cfg.connect_timeout, cfg.io_timeout);
+                        let action = core.observe(peer, outcome);
+                        router.set_peer_state(peer, core.state_code(peer));
+                        match action {
+                            Some(PeerAction::Down) => router.on_peer_dead(peer),
+                            Some(PeerAction::Draining) => router.on_peer_drain(peer),
+                            Some(PeerAction::Up) => router.on_peer_up(peer),
+                            None => {}
+                        }
+                    }
+                    std::thread::sleep(cfg.probe_interval);
+                }
+            })
+            .expect("spawn router prober");
+        Prober { stop, join: Some(join) }
+    }
+}
+
+impl Drop for Prober {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn core() -> HealthCore {
+        HealthCore::new(2, &HealthConfig::default()) // dead_after 3, backoff 2..32
+    }
+
+    #[test]
+    fn misses_accumulate_to_dead_and_one_ok_resets() {
+        let mut c = core();
+        assert_eq!(c.observe(0, ProbeOutcome::Fail), None);
+        assert_eq!(c.state_code(0), STATE_SUSPECT);
+        assert_eq!(c.observe(0, ProbeOutcome::Ok), None);
+        assert_eq!(c.state_code(0), STATE_HEALTHY, "one ok clears suspicion");
+        assert_eq!(c.observe(0, ProbeOutcome::Fail), None);
+        assert_eq!(c.observe(0, ProbeOutcome::Fail), None);
+        assert_eq!(c.observe(0, ProbeOutcome::Fail), Some(PeerAction::Down));
+        assert_eq!(c.state_code(0), STATE_DEAD);
+        // the other peer is untouched
+        assert_eq!(c.state_code(1), STATE_HEALTHY);
+    }
+
+    #[test]
+    fn canary_backoff_doubles_and_caps_then_reinstates() {
+        let mut c = core();
+        for _ in 0..3 {
+            c.observe(0, ProbeOutcome::Fail);
+        }
+        assert_eq!(c.state_code(0), STATE_DEAD);
+        // initial backoff: 2 ticks of silence, then one canary
+        assert!(!c.should_probe(0));
+        assert!(!c.should_probe(0));
+        assert!(c.should_probe(0));
+        // failed canary doubles the wait: 4 silent ticks
+        c.observe(0, ProbeOutcome::Fail);
+        let mut silent = 0;
+        while !c.should_probe(0) {
+            silent += 1;
+        }
+        assert_eq!(silent, 4);
+        // keep failing: the wait caps at backoff_max
+        for _ in 0..10 {
+            c.observe(0, ProbeOutcome::Fail);
+            while !c.should_probe(0) {}
+        }
+        c.observe(0, ProbeOutcome::Fail);
+        silent = 0;
+        while !c.should_probe(0) {
+            silent += 1;
+        }
+        assert_eq!(silent, 32, "backoff caps at backoff_max");
+        // a clean canary reinstates immediately
+        assert_eq!(c.observe(0, ProbeOutcome::Ok), Some(PeerAction::Up));
+        assert_eq!(c.state_code(0), STATE_HEALTHY);
+        assert!(c.should_probe(0), "healthy peers probe every tick");
+    }
+
+    #[test]
+    fn drain_is_orderly_not_suspicious() {
+        let mut c = core();
+        assert_eq!(c.observe(0, ProbeOutcome::Draining), Some(PeerAction::Draining));
+        assert_eq!(c.state_code(0), STATE_DRAINING);
+        // still draining: no repeated action edge
+        assert_eq!(c.observe(0, ProbeOutcome::Draining), None);
+        // back up after the rolling restart
+        assert_eq!(c.observe(0, ProbeOutcome::Ok), Some(PeerAction::Up));
+        assert_eq!(c.state_code(0), STATE_HEALTHY);
+    }
+
+    #[test]
+    fn draining_peer_that_dies_demotes_without_a_second_down() {
+        let mut c = core();
+        assert_eq!(c.observe(0, ProbeOutcome::Draining), Some(PeerAction::Draining));
+        // it was already drained and re-homed; its death is not news
+        assert_eq!(c.observe(0, ProbeOutcome::Fail), None);
+        assert_eq!(c.state_code(0), STATE_DEAD);
+        // recovery from there is the normal canary path
+        assert_eq!(c.observe(0, ProbeOutcome::Ok), Some(PeerAction::Up));
+    }
+
+    #[test]
+    fn dead_peer_answering_draining_stays_unrouted() {
+        let mut c = core();
+        for _ in 0..3 {
+            c.observe(0, ProbeOutcome::Fail);
+        }
+        // the restarted process is up but drains before serving
+        assert_eq!(c.observe(0, ProbeOutcome::Draining), None);
+        assert_eq!(c.state_code(0), STATE_DEAD);
+        assert_eq!(c.observe(0, ProbeOutcome::Ok), Some(PeerAction::Up));
+    }
+}

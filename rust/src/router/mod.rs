@@ -1,0 +1,450 @@
+//! Fault-tolerant router tier: consistent-hash patient partitioning
+//! over health-checked `holmes serve` peers, with drain + re-home on
+//! node loss.
+//!
+//! ```text
+//!   bedside streams ──► `holmes route` (owns the ingest edge)
+//!        │  RouterSink: FrameSink the edge delivers decoded frames to
+//!        ▼
+//!   Ring (ring.rs): consistent hash over patient id, 64 vnodes/peer
+//!        │  sticky owner map: a patient keeps its first-assigned peer
+//!        │  until that peer dies or drains (re-homes are counted, not
+//!        │  churned on every ring flap)
+//!        ▼
+//!   Link (forward.rs): per-peer bounded queue + worker speaking the
+//!        │  HLMB batch envelope; spill buffer while the peer is down
+//!        ▼
+//!   peers: N × `holmes serve --http ...`   ◄── Prober (health.rs):
+//!           each with its own shard plane       heartbeats, miss
+//!           and executor pool                   counting, canary
+//!                                               backoff re-probe
+//! ```
+//!
+//! **Node loss**: the prober declares the peer dead → the ring marks it
+//! inactive (lookups walk past its vnodes — the minimal-movement
+//! property re-homes exactly the victim's patients) → the victim
+//! link's undelivered queue + spill replays through the survivors in
+//! original order. **Recovery**: canary heartbeat succeeds → fresh
+//! link, ring reactivated → only *new* patients route to the returnee
+//! (sticky owners keep re-home accounting deterministic). **Rolling
+//! upgrade**: `POST /drain` (or SIGTERM) makes the peer advertise
+//! `draining` in heartbeat responses → the router quiesces its link
+//! (flushing every queued frame), then re-homes — zero dropped frames.
+
+pub mod forward;
+pub mod health;
+pub mod ring;
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::http::FrameSink;
+use crate::ingest::Frame;
+use crate::serving::RouterGauges;
+use crate::Result;
+
+pub use forward::{Link, LinkHandle, SendOutcome};
+pub use health::{HealthConfig, HealthCore, PeerAction, Prober, ProbeOutcome};
+pub use ring::Ring;
+
+/// Router tunables.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Downstream `holmes serve` ingest addresses, one per peer.
+    pub peers: Vec<SocketAddr>,
+    /// Heartbeat prober cadence and thresholds.
+    pub health: HealthConfig,
+    /// Socket read/write deadline on forwarding links.
+    pub link_io_timeout: Duration,
+}
+
+impl RouterConfig {
+    pub fn new(peers: Vec<SocketAddr>) -> Self {
+        RouterConfig {
+            peers,
+            health: HealthConfig::default(),
+            link_io_timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+struct RouterInner {
+    ring: Ring,
+    /// Sticky patient → peer assignment. Set on first frame, rewritten
+    /// only by a death or drain of the owner.
+    owner: HashMap<usize, usize>,
+    /// One link per peer; `None` between death and reinstatement.
+    links: Vec<Option<Link>>,
+}
+
+/// The routing control plane: owns the ring, the sticky owner map, and
+/// the per-peer links. The edge delivers frames through
+/// [`RouterSink`]; the [`Prober`] calls the `on_peer_*` transitions.
+pub struct Router {
+    inner: Mutex<RouterInner>,
+    gauges: Arc<RouterGauges>,
+    addrs: Vec<SocketAddr>,
+    link_io_timeout: Duration,
+}
+
+impl Router {
+    /// Build the router and spawn one forwarding link per peer.
+    /// Connections dial lazily — peers may still be coming up.
+    pub fn new(cfg: &RouterConfig) -> Result<Arc<Router>> {
+        assert!(!cfg.peers.is_empty(), "router needs at least one peer");
+        let gauges = Arc::new(RouterGauges::new(cfg.peers.len()));
+        let links = cfg
+            .peers
+            .iter()
+            .enumerate()
+            .map(|(i, &addr)| {
+                Some(Link::spawn(i, addr, cfg.link_io_timeout, Arc::clone(&gauges)))
+            })
+            .collect();
+        Ok(Arc::new(Router {
+            inner: Mutex::new(RouterInner {
+                ring: Ring::new(cfg.peers.len()),
+                owner: HashMap::new(),
+                links,
+            }),
+            gauges,
+            addrs: cfg.peers.clone(),
+            link_io_timeout: cfg.link_io_timeout,
+        }))
+    }
+
+    /// Start the heartbeat prober against this router.
+    pub fn spawn_prober(self: &Arc<Self>, cfg: HealthConfig) -> Prober {
+        Prober::spawn(Arc::clone(self), cfg)
+    }
+
+    pub fn peer_addrs(&self) -> &[SocketAddr] {
+        &self.addrs
+    }
+
+    pub fn gauges(&self) -> &Arc<RouterGauges> {
+        &self.gauges
+    }
+
+    /// A cloneable [`FrameSink`] handle for the ingest edge.
+    pub fn sink(self: &Arc<Self>) -> RouterSink {
+        RouterSink { router: Arc::clone(self) }
+    }
+
+    pub(crate) fn set_peer_state(&self, peer: usize, code: u8) {
+        self.gauges.peer_states[peer].store(code, Ordering::Relaxed);
+    }
+
+    /// Route one frame to its owner's link. The sticky owner map wins
+    /// over the raw ring lookup so a reinstated peer only receives
+    /// patients admitted after its return.
+    ///
+    /// Ownership resolves under the router lock, but the send (which
+    /// may block on the link's backpressure queue) runs outside it —
+    /// otherwise a full queue to a dying peer would deadlock against
+    /// the prober's `on_peer_dead`, which needs this lock to unstick
+    /// it. A send that races past a failover gets its frame back
+    /// ([`SendOutcome::Gone`]) and re-resolves: by the time the Gone
+    /// surfaces, the re-home has already rewritten the owner map.
+    fn deliver(&self, mut frame: Frame) -> Result<()> {
+        for _ in 0..8 {
+            let (peer, handle) = {
+                let mut inner = self.inner.lock().unwrap();
+                let peer = match inner.owner.get(&frame.patient) {
+                    Some(&p) => p,
+                    None => {
+                        let p = inner.ring.route(frame.patient);
+                        inner.owner.insert(frame.patient, p);
+                        p
+                    }
+                };
+                match &inner.links[peer] {
+                    Some(link) => (peer, link.handle()),
+                    // a missing link with no survivor to re-home to:
+                    // the last peer died
+                    None => {
+                        return Err(crate::Error::serving(format!(
+                            "router: no live link for peer {peer}"
+                        )))
+                    }
+                }
+            };
+            match handle.send(frame, peer, &self.gauges) {
+                SendOutcome::Queued | SendOutcome::Spilled => return Ok(()),
+                SendOutcome::Gone(f) => frame = f,
+            }
+        }
+        Err(crate::Error::serving(
+            "router: frame unplaceable after repeated failovers".to_string(),
+        ))
+    }
+
+    /// Prober edge: the peer crossed the miss threshold. Deactivate it
+    /// on the ring, re-home its patients to survivors, and replay the
+    /// link's undelivered frames (queue remnants + spill, in order)
+    /// through their new owners.
+    pub fn on_peer_dead(&self, peer: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.ring.is_active(peer) {
+            return; // already down
+        }
+        if inner.ring.active_peers() == 1 {
+            // last peer: keep it on the ring (there is nowhere to
+            // re-home to); its link keeps spilling until it returns
+            return;
+        }
+        inner.ring.set_active(peer, false);
+        let stranded = match inner.links[peer].take() {
+            Some(link) => {
+                let frames = link.drain_for_failover(peer, &self.gauges);
+                link.shutdown();
+                frames
+            }
+            None => Vec::new(),
+        };
+        self.rehome_and_replay(&mut inner, peer, stranded);
+    }
+
+    /// Prober edge: the peer advertised an orderly drain. Flush its
+    /// link completely (every queued frame reaches the peer before it
+    /// exits), then re-home — the zero-frame-loss rolling-upgrade path.
+    pub fn on_peer_drain(&self, peer: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.ring.is_active(peer) {
+            return;
+        }
+        if inner.ring.active_peers() == 1 {
+            return;
+        }
+        inner.ring.set_active(peer, false);
+        let stranded = match inner.links[peer].take() {
+            Some(link) => {
+                link.quiesce();
+                // the queue flushed to the draining peer; only frames
+                // that spilled during the quiesce remain
+                let frames = link.drain_for_failover(peer, &self.gauges);
+                link.shutdown();
+                frames
+            }
+            None => Vec::new(),
+        };
+        self.rehome_and_replay(&mut inner, peer, stranded);
+    }
+
+    /// Prober edge: a canary heartbeat succeeded. Fresh link, back on
+    /// the ring. Existing patients stay with their sticky owners; the
+    /// returnee picks up newly admitted patients.
+    pub fn on_peer_up(&self, peer: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.ring.is_active(peer) && inner.links[peer].is_some() {
+            return;
+        }
+        if inner.links[peer].is_none() {
+            inner.links[peer] = Some(Link::spawn(
+                peer,
+                self.addrs[peer],
+                self.link_io_timeout,
+                Arc::clone(&self.gauges),
+            ));
+        }
+        inner.ring.set_active(peer, true);
+        self.gauges.peers_reinstated.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Rewrite the dead/drained peer's sticky assignments through the
+    /// ring (minimal movement: only its keys move) and replay its
+    /// stranded frames through the survivors in original order.
+    fn rehome_and_replay(&self, inner: &mut RouterInner, peer: usize, stranded: Vec<Frame>) {
+        let mut rehomed = 0u64;
+        let moves: Vec<(usize, usize)> = inner
+            .owner
+            .iter()
+            .filter(|&(_, &p)| p == peer)
+            .map(|(&patient, _)| (patient, inner.ring.route(patient)))
+            .collect();
+        for (patient, new_owner) in moves {
+            inner.owner.insert(patient, new_owner);
+            rehomed += 1;
+        }
+        self.gauges.patients_rehomed.fetch_add(rehomed, Ordering::Relaxed);
+        let n = stranded.len() as u64;
+        for frame in stranded {
+            let owner = match inner.owner.get(&frame.patient) {
+                Some(&p) => p,
+                None => {
+                    let p = inner.ring.route(frame.patient);
+                    inner.owner.insert(frame.patient, p);
+                    p
+                }
+            };
+            if let Some(link) = &inner.links[owner] {
+                let _ = link.send(frame, owner, &self.gauges);
+            }
+        }
+        self.gauges.spill_replayed.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Chaos/replay hook: pause one peer's link — everything already
+    /// queued flushes to the peer, everything after spills for
+    /// re-homing. Called by the node-loss kill script right before it
+    /// tears the victim's serving stack down, so the crash lands on a
+    /// clean frame boundary and the fault budget stays exact.
+    pub fn quiesce_peer(&self, peer: usize) {
+        let inner = self.inner.lock().unwrap();
+        if let Some(link) = &inner.links[peer] {
+            link.quiesce();
+        }
+    }
+
+    /// Flush every live link and stop its worker (test/CLI teardown).
+    pub fn shutdown(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        for slot in inner.links.iter_mut() {
+            if let Some(link) = slot.take() {
+                link.quiesce();
+                link.shutdown();
+            }
+        }
+    }
+}
+
+/// The [`FrameSink`] the ingest edge hands decoded frames to when the
+/// process runs as a router — interchangeable with the local
+/// [`ShardSender`](crate::serving::ShardSender) plane.
+#[derive(Clone)]
+pub struct RouterSink {
+    router: Arc<Router>,
+}
+
+impl FrameSink for RouterSink {
+    fn deliver(&self, frame: Frame) -> Result<()> {
+        self.router.deliver(frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ingest::Modality;
+    use crate::serving::{ShardSender, Telemetry};
+    use std::sync::mpsc;
+
+    fn frame(patient: usize, t: f64) -> Frame {
+        Frame {
+            patient,
+            modality: Modality::Vitals,
+            sim_time: t,
+            values: [1.0f32; 6].into(),
+        }
+    }
+
+    struct Peer {
+        server: crate::http::HttpServer,
+        telemetry: Arc<Telemetry>,
+        rx: mpsc::Receiver<Frame>,
+    }
+
+    fn peer() -> Peer {
+        let (tx, rx) = mpsc::sync_channel(65_536);
+        let telemetry = Arc::new(Telemetry::default());
+        let server = crate::http::serve(
+            "127.0.0.1:0",
+            ShardSender::from_senders(vec![tx]),
+            Arc::clone(&telemetry),
+        )
+        .unwrap();
+        Peer { server, telemetry, rx }
+    }
+
+    #[test]
+    fn routes_by_ring_and_dead_peer_rehomes_to_survivor() {
+        let a = peer();
+        let b = peer();
+        let router =
+            Router::new(&RouterConfig::new(vec![a.server.addr, b.server.addr])).unwrap();
+        let sink = router.sink();
+        let ring = Ring::new(2);
+        for p in 0..16 {
+            sink.deliver(frame(p, 0.0)).unwrap();
+        }
+        // flush both links so the counts are settled
+        {
+            let inner = router.inner.lock().unwrap();
+            for link in inner.links.iter().flatten() {
+                link.flush();
+            }
+        }
+        let fwd = router.gauges().frames_forwarded();
+        assert_eq!(fwd.iter().sum::<u64>(), 16);
+        let expect_a = (0..16).filter(|&p| ring.route(p) == 0).count() as u64;
+        assert_eq!(fwd[0], expect_a, "ring split mismatch");
+        assert_eq!(
+            a.telemetry.frames.load(Ordering::Relaxed) + b.telemetry.frames.load(Ordering::Relaxed),
+            16
+        );
+
+        // kill peer 0's stack and declare it dead: its patients re-home
+        let owned_by_a: Vec<usize> = (0..16).filter(|&p| ring.route(p) == 0).collect();
+        drop(a.server);
+        router.on_peer_dead(0);
+        assert_eq!(
+            router.gauges().patients_rehomed.load(Ordering::Relaxed),
+            owned_by_a.len() as u64
+        );
+        // frames for re-homed patients now reach the survivor
+        for &p in &owned_by_a {
+            sink.deliver(frame(p, 1.0)).unwrap();
+        }
+        router.shutdown();
+        let b_frames = b.telemetry.frames.load(Ordering::Relaxed);
+        let expect_b0 = 16 - owned_by_a.len() as u64;
+        assert_eq!(b_frames, expect_b0 + owned_by_a.len() as u64);
+    }
+
+    #[test]
+    fn last_survivor_is_never_deactivated() {
+        let a = peer();
+        let router = Router::new(&RouterConfig::new(vec![a.server.addr])).unwrap();
+        router.on_peer_dead(0);
+        // still routable: the ring refused to go empty
+        router.sink().deliver(frame(3, 0.0)).unwrap();
+        router.shutdown();
+        assert_eq!(a.rx.try_iter().count(), 1);
+    }
+
+    #[test]
+    fn reinstated_peer_gets_new_patients_only() {
+        let a = peer();
+        let b = peer();
+        let router =
+            Router::new(&RouterConfig::new(vec![a.server.addr, b.server.addr])).unwrap();
+        let sink = router.sink();
+        let ring = Ring::new(2);
+        let p_on_a = (0..64).find(|&p| ring.route(p) == 0).unwrap();
+        sink.deliver(frame(p_on_a, 0.0)).unwrap();
+        // settle delivery before the kill so nothing is stranded
+        {
+            let inner = router.inner.lock().unwrap();
+            inner.links[0].as_ref().unwrap().flush();
+        }
+        router.on_peer_dead(0);
+        router.on_peer_up(0);
+        assert_eq!(router.gauges().peers_reinstated.load(Ordering::Relaxed), 1);
+        // sticky: the re-homed patient stays on the survivor
+        sink.deliver(frame(p_on_a, 1.0)).unwrap();
+        // but a brand-new patient that hashes to peer 0 lands there
+        let fresh = (0..1000)
+            .find(|&p| ring.route(p) == 0 && p != p_on_a)
+            .unwrap();
+        sink.deliver(frame(fresh, 1.0)).unwrap();
+        router.shutdown();
+        // peer 0 saw: the pre-death frame + the fresh patient
+        assert_eq!(a.rx.try_iter().count(), 2);
+        // the survivor saw the sticky re-homed frame (replay of the
+        // dead link was empty — everything had been delivered)
+        assert_eq!(b.rx.try_iter().count(), 1);
+    }
+}

@@ -1,0 +1,172 @@
+//! Consistent-hash ring over patient ids with virtual nodes.
+//!
+//! Every peer contributes [`VNODES_PER_PEER`] virtual nodes to one
+//! sorted ring; a patient id hashes to a point on the ring and is owned
+//! by the first vnode at-or-after that point (wrapping). Peers are
+//! never removed from the ring — they are marked inactive and their
+//! vnodes are *skipped* during lookup. That construction gives the
+//! minimal-movement property by definition: deactivating a peer
+//! reassigns exactly the keys whose owning vnode belonged to that peer
+//! (each lands on the next active vnode clockwise), and every other
+//! key's lookup walk is unchanged. Reactivating restores the original
+//! assignment exactly.
+//!
+//! The hash is the SplitMix64 finalizer (same mix as
+//! [`crate::rng::Rng::next_u64`]) — deterministic across runs and
+//! processes, so the replay budget mirror in
+//! [`crate::ingest::scenario`] can recompute ownership offline.
+
+/// Virtual nodes per peer. 64 keeps the worst-case load within ~1.2×
+/// of fair share for 2–16 peers (checked by proptest in
+/// `tests/router.rs`) while the full ring stays small enough to
+/// rebuild or scan cheaply.
+pub const VNODES_PER_PEER: usize = 64;
+
+/// SplitMix64 finalizer — the same bit mix used by `Rng::next_u64`,
+/// inlined so ring placement never depends on RNG stream state.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn vnode_hash(peer: usize, replica: usize) -> u64 {
+    mix64(((peer as u64) << 32) | replica as u64)
+}
+
+fn key_hash(key: usize) -> u64 {
+    mix64(key as u64 ^ 0x9E37_79B9_7F4A_7C15)
+}
+
+/// Consistent-hash ring with per-peer activation flags.
+#[derive(Debug, Clone)]
+pub struct Ring {
+    /// All vnodes of all peers, sorted by hash. Never mutated after
+    /// construction; lookups skip vnodes of inactive peers.
+    vnodes: Vec<(u64, usize)>,
+    active: Vec<bool>,
+}
+
+impl Ring {
+    /// Build a ring over `n_peers` peers, all active.
+    pub fn new(n_peers: usize) -> Self {
+        assert!(n_peers > 0, "ring needs at least one peer");
+        let mut vnodes = Vec::with_capacity(n_peers * VNODES_PER_PEER);
+        for peer in 0..n_peers {
+            for replica in 0..VNODES_PER_PEER {
+                vnodes.push((vnode_hash(peer, replica), peer));
+            }
+        }
+        vnodes.sort_unstable();
+        Ring {
+            vnodes,
+            active: vec![true; n_peers],
+        }
+    }
+
+    pub fn n_peers(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn is_active(&self, peer: usize) -> bool {
+        self.active[peer]
+    }
+
+    /// Number of currently active peers.
+    pub fn active_peers(&self) -> usize {
+        self.active.iter().filter(|a| **a).count()
+    }
+
+    /// Activate or deactivate a peer. Deactivation never rebuilds the
+    /// ring — lookups just walk past the peer's vnodes, which is what
+    /// makes re-homing minimal.
+    pub fn set_active(&mut self, peer: usize, active: bool) {
+        self.active[peer] = active;
+    }
+
+    /// Owner of `key` among the active peers. Panics if no peer is
+    /// active (the router never routes with an empty survivor set).
+    pub fn route(&self, key: usize) -> usize {
+        assert!(
+            self.active.iter().any(|a| *a),
+            "ring has no active peers to route to"
+        );
+        let h = key_hash(key);
+        let start = match self.vnodes.binary_search(&(h, 0)) {
+            Ok(i) => i,
+            Err(i) => i,
+        };
+        let n = self.vnodes.len();
+        for off in 0..n {
+            let (_, peer) = self.vnodes[(start + off) % n];
+            if self.active[peer] {
+                return peer;
+            }
+        }
+        unreachable!("active peer exists but no active vnode found");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let a = Ring::new(3);
+        let b = Ring::new(3);
+        for key in 0..1000 {
+            assert_eq!(a.route(key), b.route(key));
+        }
+    }
+
+    #[test]
+    fn all_peers_receive_traffic() {
+        let ring = Ring::new(2);
+        let mut counts = [0usize; 2];
+        for key in 0..1000 {
+            counts[ring.route(key)] += 1;
+        }
+        assert!(counts[0] > 0 && counts[1] > 0, "counts: {counts:?}");
+    }
+
+    #[test]
+    fn deactivation_rehomes_only_victims_keys() {
+        let mut ring = Ring::new(4);
+        let before: Vec<usize> = (0..2000).map(|k| ring.route(k)).collect();
+        ring.set_active(1, false);
+        for (k, &owner_before) in before.iter().enumerate() {
+            let owner_after = ring.route(k);
+            if owner_before == 1 {
+                assert_ne!(owner_after, 1, "key {k} still on dead peer");
+            } else {
+                assert_eq!(owner_after, owner_before, "key {k} moved needlessly");
+            }
+        }
+        // reactivation restores the original assignment exactly
+        ring.set_active(1, true);
+        for (k, &owner_before) in before.iter().enumerate() {
+            assert_eq!(ring.route(k), owner_before, "key {k} not restored");
+        }
+    }
+
+    #[test]
+    fn single_survivor_owns_everything() {
+        let mut ring = Ring::new(3);
+        ring.set_active(0, false);
+        ring.set_active(2, false);
+        for key in 0..500 {
+            assert_eq!(ring.route(key), 1);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "no active peers")]
+    fn routing_with_no_active_peers_panics() {
+        let mut ring = Ring::new(2);
+        ring.set_active(0, false);
+        ring.set_active(1, false);
+        ring.route(0);
+    }
+}

@@ -7,7 +7,16 @@
 //! hardware, not the ensemble:
 //!
 //! ```text
-//!  bedside streams ──► HTTP ingest edge / in-process ingest
+//!  bedside streams ──► router tier (optional, `holmes route --peers`)
+//!        │     owns the ingest edge; a consistent-hash ring over
+//!        │     patient id (crate::router::ring, 64 vnodes/peer) picks
+//!        │     the owning `holmes serve` peer; per-peer links forward
+//!        │     frame batches over the wire codec, a heartbeat prober
+//!        │     quarantines dead peers (canary re-probe on backoff) and
+//!        │     re-homes their patients to survivors, replaying the
+//!        │     link's spill buffer — see crate::router
+//!        ▼ (or directly, single-node)
+//!  HTTP ingest edge / in-process ingest
 //!        │     (epoll event loops, --edge-threads of them: keep-alive
 //!        │      connections decode wire frames IN PLACE from their
 //!        │      receive buffers — no body buffer, no per-frame alloc —
@@ -84,6 +93,8 @@
 //! | `clock-skew` | two virtual monitors per bed, one clock 2.5 sample periods behind | stale sheds exactly equal the budget; windows unaffected on in-skew beds |
 //! | `burst-storm` | 3×-bed ghost admission wave on a slowed backend | every admitted query resolves; p95 back under SLO after the storm (`recovery_p95`) |
 //! | `hostile-edge` | malformed arities, absurd patient ids, corrupt/truncated/NaN wire bodies, conn flood, slow loris | all bad bodies 400'd; flood 503s = over-cap counter; loris conns reaped; cohort windows untouched |
+//! | `vendor-skew` | one monitor vendor's clocks drift together (correlated, rate-ramped) | stale sheds exactly equal the drift-onset budget; the other vendor's beds untouched |
+//! | `node-loss` | router + 2 peers; the peer owning patient 0 is killed mid-cohort and restarted later | every admitted query resolves; exactly the victim's patients re-home (ring mirror); spilled frames all replayed, zero overflow; peer canary-reinstated |
 //!
 //! The same seed reproduces the same shed/evict/window/prediction
 //! accounting — including a score fingerprint — bit for bit across
@@ -137,4 +148,6 @@ pub use pipeline::{
     ScoreOutcome,
 };
 pub use shards::{default_shards, ShardConfig, ShardRouter, ShardSender};
-pub use telemetry::{EdgeGauges, ExecutorGauges, GovernorGauges, LatencyHistogram, Telemetry};
+pub use telemetry::{
+    EdgeGauges, ExecutorGauges, GovernorGauges, LatencyHistogram, RouterGauges, Telemetry,
+};

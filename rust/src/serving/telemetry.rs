@@ -3,7 +3,7 @@
 //! throughput counters. Lock-light: one mutex per histogram, updated
 //! once per query.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Duration;
 
@@ -293,6 +293,72 @@ pub struct GovernorGauges {
     pub reinstated: AtomicU64,
 }
 
+/// Live gauges of the router tier's peer links, shared with the
+/// forwarders and the health prober (the counters themselves, not
+/// copies). Installed into the *router process's* [`Telemetry`] by
+/// `Router::spawn`; absent on a plain serve node.
+///
+/// Peer state encoding (`peer_states`): 0 = healthy, 1 = suspect,
+/// 2 = dead, 3 = draining — mirrors `router::health::PeerState`.
+#[derive(Debug)]
+pub struct RouterGauges {
+    /// Per-peer health state (see encoding above).
+    pub peer_states: Vec<AtomicU8>,
+    /// Per-peer frames delivered over the persistent link, lifetime.
+    pub frames_forwarded: Vec<AtomicU64>,
+    /// Per-peer transport retries (redial + backoff re-POST), lifetime.
+    pub forward_retries: Vec<AtomicU64>,
+    /// Per-peer frames currently parked in the link's spill buffer.
+    pub spill_depth: Vec<AtomicU64>,
+    /// Frames that ever entered a spill buffer, lifetime.
+    pub spilled_total: AtomicU64,
+    /// Spilled frames replayed to a survivor after failover, lifetime.
+    pub spill_replayed: AtomicU64,
+    /// Frames lost because a spill buffer overflowed its cap, lifetime
+    /// (must stay 0 in every budgeted scenario).
+    pub spill_overflow: AtomicU64,
+    /// Patients re-homed off a dead or draining peer, lifetime.
+    pub patients_rehomed: AtomicU64,
+    /// Peers canary-probed back to healthy after death/drain, lifetime.
+    pub peers_reinstated: AtomicU64,
+}
+
+impl RouterGauges {
+    pub fn new(n_peers: usize) -> Self {
+        RouterGauges {
+            peer_states: (0..n_peers).map(|_| AtomicU8::new(0)).collect(),
+            frames_forwarded: (0..n_peers).map(|_| AtomicU64::new(0)).collect(),
+            forward_retries: (0..n_peers).map(|_| AtomicU64::new(0)).collect(),
+            spill_depth: (0..n_peers).map(|_| AtomicU64::new(0)).collect(),
+            spilled_total: AtomicU64::new(0),
+            spill_replayed: AtomicU64::new(0),
+            spill_overflow: AtomicU64::new(0),
+            patients_rehomed: AtomicU64::new(0),
+            peers_reinstated: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_peers(&self) -> usize {
+        self.peer_states.len()
+    }
+
+    pub fn peer_states(&self) -> Vec<u64> {
+        self.peer_states.iter().map(|s| s.load(Ordering::Relaxed) as u64).collect()
+    }
+
+    pub fn frames_forwarded(&self) -> Vec<u64> {
+        self.frames_forwarded.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn forward_retries(&self) -> Vec<u64> {
+        self.forward_retries.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn spill_depths(&self) -> Vec<u64> {
+        self.spill_depth.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+}
+
 /// Live gauges of the event-driven ingest edge, shared with its event
 /// loops (the counters themselves, not copies): per-loop ready-event
 /// totals make loop imbalance visible the same way per-worker batch
@@ -375,6 +441,11 @@ pub struct Telemetry {
     pub conns_refused_handshake: AtomicU64,
     /// Connections reaped by the idle/read deadline (slow-loris sweep).
     pub conns_reaped: AtomicU64,
+    /// Set by `POST /drain` (or SIGTERM on a serve node): this node is
+    /// draining for a rolling upgrade. Heartbeat responses advertise it
+    /// so the router re-homes this peer's patients *before* the process
+    /// exits — zero dropped frames instead of a failover.
+    pub draining: AtomicBool,
     /// Executor gauges, installed once by `Pipeline::spawn` (absent for
     /// telemetry created outside a pipeline — benches, shard tests).
     executor: OnceLock<ExecutorGauges>,
@@ -384,6 +455,9 @@ pub struct Telemetry {
     /// Governor gauges, installed once by `Governor::spawn` (absent on
     /// an ungoverned pipeline).
     governor: OnceLock<Arc<GovernorGauges>>,
+    /// Router-tier gauges, installed once by `Router::spawn` (absent
+    /// on anything but a router process).
+    router: OnceLock<Arc<RouterGauges>>,
 }
 
 impl Telemetry {
@@ -417,6 +491,16 @@ impl Telemetry {
         self.governor.get()
     }
 
+    /// Attach the router tier's live gauges (once; later installs are
+    /// ignored, matching a process's one-router lifetime).
+    pub fn install_router(&self, gauges: Arc<RouterGauges>) {
+        let _ = self.router.set(gauges);
+    }
+
+    pub fn router(&self) -> Option<&Arc<RouterGauges>> {
+        self.router.get()
+    }
+
     pub fn snapshot(&self) -> TelemetrySnapshot {
         let (models, queue_depths, worker_batches, fill_waits, dead_lanes, retries) =
             match self.executor.get() {
@@ -431,6 +515,7 @@ impl Telemetry {
                 None => (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new()),
             };
         let gov = self.governor.get();
+        let rt = self.router.get();
         TelemetrySnapshot {
             executor_models: models,
             queue_depth_per_model: queue_depths,
@@ -452,6 +537,26 @@ impl Telemetry {
                 .unwrap_or(0),
             governor_probes: gov.map(|g| g.probes.load(Ordering::Relaxed)).unwrap_or(0),
             governor_reinstated: gov.map(|g| g.reinstated.load(Ordering::Relaxed)).unwrap_or(0),
+            router_peer_states: rt.map(|g| g.peer_states()).unwrap_or_default(),
+            router_frames_forwarded: rt.map(|g| g.frames_forwarded()).unwrap_or_default(),
+            router_forward_retries: rt.map(|g| g.forward_retries()).unwrap_or_default(),
+            router_spill_depth: rt.map(|g| g.spill_depths()).unwrap_or_default(),
+            router_spilled_total: rt
+                .map(|g| g.spilled_total.load(Ordering::Relaxed))
+                .unwrap_or(0),
+            router_spill_replayed: rt
+                .map(|g| g.spill_replayed.load(Ordering::Relaxed))
+                .unwrap_or(0),
+            router_spill_overflow: rt
+                .map(|g| g.spill_overflow.load(Ordering::Relaxed))
+                .unwrap_or(0),
+            router_patients_rehomed: rt
+                .map(|g| g.patients_rehomed.load(Ordering::Relaxed))
+                .unwrap_or(0),
+            router_peers_reinstated: rt
+                .map(|g| g.peers_reinstated.load(Ordering::Relaxed))
+                .unwrap_or(0),
+            draining: u64::from(self.draining.load(Ordering::Relaxed)),
             conns_active: self.conns_active.load(Ordering::Relaxed) as u64,
             conns_accepted: self.conns_accepted.load(Ordering::Relaxed),
             conns_refused: self.conns_refused.load(Ordering::Relaxed),
@@ -507,6 +612,20 @@ pub struct TelemetrySnapshot {
     pub governor_quarantined: u64,
     pub governor_probes: u64,
     pub governor_reinstated: u64,
+    /// Router-tier state (all empty/zero on anything but a router
+    /// process). Peer state encoding: 0 healthy, 1 suspect, 2 dead,
+    /// 3 draining.
+    pub router_peer_states: Vec<u64>,
+    pub router_frames_forwarded: Vec<u64>,
+    pub router_forward_retries: Vec<u64>,
+    pub router_spill_depth: Vec<u64>,
+    pub router_spilled_total: u64,
+    pub router_spill_replayed: u64,
+    pub router_spill_overflow: u64,
+    pub router_patients_rehomed: u64,
+    pub router_peers_reinstated: u64,
+    /// 1 while this node is draining for a rolling upgrade.
+    pub draining: u64,
     /// Live HTTP connections on the ingest edge.
     pub conns_active: u64,
     /// Connections accepted / refused (503) / idle-reaped, lifetime.
@@ -562,6 +681,16 @@ impl TelemetrySnapshot {
             ("governor_quarantined", Value::Num(self.governor_quarantined as f64)),
             ("governor_probes", Value::Num(self.governor_probes as f64)),
             ("governor_reinstated", Value::Num(self.governor_reinstated as f64)),
+            ("router_peer_states", nums(&self.router_peer_states)),
+            ("router_frames_forwarded", nums(&self.router_frames_forwarded)),
+            ("router_forward_retries", nums(&self.router_forward_retries)),
+            ("router_spill_depth", nums(&self.router_spill_depth)),
+            ("router_spilled_total", Value::Num(self.router_spilled_total as f64)),
+            ("router_spill_replayed", Value::Num(self.router_spill_replayed as f64)),
+            ("router_spill_overflow", Value::Num(self.router_spill_overflow as f64)),
+            ("router_patients_rehomed", Value::Num(self.router_patients_rehomed as f64)),
+            ("router_peers_reinstated", Value::Num(self.router_peers_reinstated as f64)),
+            ("draining", Value::Num(self.draining as f64)),
             ("conns_active", Value::Num(self.conns_active as f64)),
             ("conns_accepted", Value::Num(self.conns_accepted as f64)),
             ("conns_refused", Value::Num(self.conns_refused as f64)),
@@ -725,6 +854,49 @@ mod tests {
         assert!(s.contains("frames_stale"));
         assert!(s.contains("conns_refused_overcap"));
         assert!(s.contains("conns_refused_handshake"));
+        // router tier + rolling-upgrade drain flag
+        assert!(s.contains("router_peer_states"));
+        assert!(s.contains("router_frames_forwarded"));
+        assert!(s.contains("router_forward_retries"));
+        assert!(s.contains("router_spill_depth"));
+        assert!(s.contains("router_spilled_total"));
+        assert!(s.contains("router_spill_replayed"));
+        assert!(s.contains("router_spill_overflow"));
+        assert!(s.contains("router_patients_rehomed"));
+        assert!(s.contains("router_peers_reinstated"));
+        assert!(s.contains("\"draining\""));
+    }
+
+    #[test]
+    fn router_gauges_surface_in_snapshot() {
+        let t = Telemetry::default();
+        assert!(t.router().is_none());
+        assert!(t.snapshot().router_peer_states.is_empty());
+        let g = Arc::new(RouterGauges::new(2));
+        t.install_router(Arc::clone(&g));
+        g.peer_states[1].store(2, Ordering::Relaxed);
+        g.frames_forwarded[0].store(500, Ordering::Relaxed);
+        g.forward_retries[1].store(3, Ordering::Relaxed);
+        g.spill_depth[1].store(7, Ordering::Relaxed);
+        g.spilled_total.store(9, Ordering::Relaxed);
+        g.spill_replayed.store(9, Ordering::Relaxed);
+        g.patients_rehomed.store(4, Ordering::Relaxed);
+        g.peers_reinstated.store(1, Ordering::Relaxed);
+        t.draining.store(true, Ordering::Relaxed);
+        let snap = t.snapshot();
+        assert_eq!(snap.router_peer_states, vec![0, 2]);
+        assert_eq!(snap.router_frames_forwarded, vec![500, 0]);
+        assert_eq!(snap.router_forward_retries, vec![0, 3]);
+        assert_eq!(snap.router_spill_depth, vec![0, 7]);
+        assert_eq!(snap.router_spilled_total, 9);
+        assert_eq!(snap.router_spill_replayed, 9);
+        assert_eq!(snap.router_spill_overflow, 0);
+        assert_eq!(snap.router_patients_rehomed, 4);
+        assert_eq!(snap.router_peers_reinstated, 1);
+        assert_eq!(snap.draining, 1);
+        // live view, not a copy
+        g.frames_forwarded[1].store(10, Ordering::Relaxed);
+        assert_eq!(t.snapshot().router_frames_forwarded, vec![500, 10]);
     }
 
     #[test]

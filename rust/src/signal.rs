@@ -1,0 +1,83 @@
+//! Process shutdown signal plumbing for graceful drains.
+//!
+//! `holmes serve` (and the bedside example) must survive rolling
+//! upgrades: on SIGTERM/ctrl-c the process stops accepting new work,
+//! drains shard queues and in-flight pipeline queries through the
+//! normal teardown path, flushes a final telemetry snapshot, and exits
+//! 0 — the router tier sees the peer advertise `draining` in its
+//! heartbeat responses and re-homes its patients with zero dropped
+//! frames (see [`crate::router`]).
+//!
+//! The handler is the async-signal-safe minimum: one store to a static
+//! [`AtomicBool`]. Everything else (drain, flush, exit) happens on
+//! ordinary threads polling [`shutdown_requested`]. Raw `signal(2)`
+//! FFI keeps the crate dependency-free; on non-Linux targets
+//! installation is a no-op and the flag is only driven by
+//! [`request_shutdown`] (tests, in-process drains).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(target_os = "linux")]
+mod imp {
+    use std::os::raw::c_int;
+
+    pub const SIGINT: c_int = 2;
+    pub const SIGTERM: c_int = 15;
+
+    extern "C" {
+        pub fn signal(signum: c_int, handler: usize) -> usize;
+        pub fn kill(pid: c_int, sig: c_int) -> c_int;
+    }
+
+    pub extern "C" fn on_signal(_signum: c_int) {
+        super::SHUTDOWN.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+}
+
+/// Install the SIGTERM/SIGINT handler (idempotent; no-op off Linux).
+pub fn install_shutdown_handler() {
+    #[cfg(target_os = "linux")]
+    unsafe {
+        imp::signal(imp::SIGTERM, imp::on_signal as usize);
+        imp::signal(imp::SIGINT, imp::on_signal as usize);
+    }
+}
+
+/// Has a shutdown been requested (signal or [`request_shutdown`])?
+pub fn shutdown_requested() -> bool {
+    SHUTDOWN.load(Ordering::SeqCst)
+}
+
+/// Request a shutdown from inside the process (tests, drain routes).
+pub fn request_shutdown() {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+/// Send SIGTERM to another process — the rolling-upgrade drain trigger
+/// (the router smoke uses it to gracefully retire its child peers).
+/// No-op off Linux, where `std::process::Child::kill` is the fallback.
+pub fn send_sigterm(pid: u32) {
+    #[cfg(target_os = "linux")]
+    unsafe {
+        let _ = imp::kill(pid as std::os::raw::c_int, imp::SIGTERM);
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = pid;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_sets_the_flag() {
+        // installation must not fire the flag by itself
+        install_shutdown_handler();
+        request_shutdown();
+        assert!(shutdown_requested());
+    }
+}

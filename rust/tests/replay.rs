@@ -40,6 +40,7 @@ fn cfg(scenario: Scenario, shards: usize, workers: usize) -> ReplayConfig {
         http_addr: None,
         edge_threads: 0,
         govern: false,
+        route_peers: 0,
     }
 }
 
@@ -70,6 +71,43 @@ fn clock_skew_sheds_exactly_the_budgeted_frames() {
     let r = run_replay(&zoo, cfg(Scenario::ClockSkew, 4, 2)).unwrap();
     assert_eq!(r.violations, Vec::<String>::new());
     assert_eq!(r.accounting, base.accounting, "skew accounting diverged across shards");
+}
+
+#[test]
+fn vendor_skew_sheds_exactly_the_budgeted_frames_deterministically() {
+    let zoo = small_zoo();
+    let base = run_replay(&zoo, cfg(Scenario::VendorSkew, 1, 2)).unwrap();
+    assert_eq!(base.violations, Vec::<String>::new());
+    assert!(base.budget.frames_stale > 0, "the drifting vendor must actually shed");
+    assert_eq!(base.accounting.frames_stale, base.budget.frames_stale);
+    assert_eq!(base.accounting.frames_dropped_malformed, 0);
+    let r = run_replay(&zoo, cfg(Scenario::VendorSkew, 4, 2)).unwrap();
+    assert_eq!(r.violations, Vec::<String>::new());
+    assert_eq!(r.accounting, base.accounting, "vendor-skew accounting diverged across shards");
+}
+
+/// Node loss runs routed (two in-process peer stacks behind the
+/// consistent-hash router), SIGKILL-equivalently tears one down
+/// mid-cohort, restarts it on the same port, and must hold the ring
+/// mirror's re-home budget with every spilled frame replayed — twice,
+/// with identical accounting.
+#[test]
+fn node_loss_rehomes_spills_and_stays_budget_exact() {
+    let zoo = small_zoo();
+    let mut c = cfg(Scenario::NodeLoss, 2, 2);
+    c.speedup = 32.0;
+    let r = run_replay(&zoo, c.clone()).unwrap();
+    assert_eq!(r.violations, Vec::<String>::new());
+    assert_eq!(r.route_peers, 2, "node-loss forces the routed plane");
+    assert!(r.budget.rehomed_patients > 0, "the victim must own at least one bed");
+    assert_eq!(r.patients_rehomed, r.budget.rehomed_patients);
+    assert!(r.frames_spilled > 0, "the kill must strand frames in the spill buffer");
+    assert_eq!(r.spill_replayed, r.frames_spilled, "every spilled frame must replay");
+    assert_eq!(r.spill_overflow, 0);
+    assert!(r.peers_reinstated >= 1, "the restarted peer must be canary-reinstated");
+    assert_eq!(r.accounting.unresolved, 0);
+    let r2 = run_replay(&zoo, c).unwrap();
+    assert_eq!(r2.accounting, r.accounting, "node-loss accounting must be deterministic");
 }
 
 #[test]
@@ -201,6 +239,12 @@ fn fabricated_mismatches_fire_violations() {
         conns_refused_handshake: 0,
         conns_reaped: 0,
         hostile: None,
+        route_peers: 0,
+        frames_spilled: 0,
+        spill_replayed: 0,
+        spill_overflow: 0,
+        patients_rehomed: 0,
+        peers_reinstated: 0,
         governor_degraded_entered: 0,
         governor_swaps: 0,
         wall_s: 0.0,
@@ -234,6 +278,18 @@ fn fabricated_mismatches_fire_violations() {
         !check_invariants(&lazy_governor).is_empty(),
         "a p95 breach with no degrade must trip on governed runs"
     );
+
+    let mut lost_spill = clean.clone();
+    lost_spill.route_peers = 2;
+    lost_spill.frames_spilled = 5;
+    lost_spill.spill_replayed = 4;
+    assert!(!check_invariants(&lost_spill).is_empty(), "a lost spilled frame must trip");
+
+    let mut wrong_rehome = clean.clone();
+    wrong_rehome.route_peers = 2;
+    wrong_rehome.budget.rehomed_patients = 3;
+    wrong_rehome.patients_rehomed = 2;
+    assert!(!check_invariants(&wrong_rehome).is_empty(), "a re-home miscount must trip");
 
     let mut leaky_cap = clean.clone();
     leaky_cap.hostile = Some(holmes::exp::replay::HostileOutcome {

@@ -1,0 +1,103 @@
+//! Router-tier property gates: consistent-hash load spread, minimal
+//! movement on peer loss, and the routed plane's bit-identical parity
+//! with a single-node run on a healthy cohort.
+
+use holmes::exp::replay::{run_replay, ReplayConfig};
+use holmes::ingest::scenario::Scenario;
+use holmes::rng::Rng;
+use holmes::router::Ring;
+use holmes::zoo::testkit::toy_zoo_with;
+
+const CASES: usize = 40;
+
+fn rngs() -> impl Iterator<Item = (u64, Rng)> {
+    (0..CASES as u64).map(|s| (s, Rng::seed_from_u64(s * 97 + 5)))
+}
+
+/// With 64 vnodes/peer, no peer's share of a key population strays past
+/// 2× fair (or under a quarter of fair) anywhere in the 2–16 peer range
+/// the tier is designed for.
+#[test]
+fn prop_ring_spread_stays_within_twice_fair_share() {
+    const KEYS: usize = 4096;
+    for (seed, mut rng) in rngs() {
+        let n_peers = rng.range(2, 17);
+        let ring = Ring::new(n_peers);
+        let mut counts = vec![0usize; n_peers];
+        for _ in 0..KEYS {
+            counts[ring.route(rng.next_u64() as usize)] += 1;
+        }
+        let fair = KEYS as f64 / n_peers as f64;
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap() as f64;
+        assert!(
+            max <= 2.0 * fair,
+            "seed {seed}: {n_peers} peers, max share {max} vs fair {fair} ({counts:?})"
+        );
+        assert!(
+            min >= fair / 4.0,
+            "seed {seed}: {n_peers} peers, min share {min} vs fair {fair} ({counts:?})"
+        );
+    }
+}
+
+/// Deactivating one peer re-homes exactly that peer's keys — every
+/// other key keeps its owner (the minimal-movement property the
+/// failover path depends on), and reactivation restores the original
+/// assignment bit-for-bit.
+#[test]
+fn prop_peer_removal_moves_only_the_victims_keys() {
+    for (seed, mut rng) in rngs() {
+        let n_peers = rng.range(2, 17);
+        let mut ring = Ring::new(n_peers);
+        let victim = rng.range(0, n_peers);
+        let keys: Vec<usize> = (0..1024).map(|_| rng.next_u64() as usize).collect();
+        let before: Vec<usize> = keys.iter().map(|&k| ring.route(k)).collect();
+        ring.set_active(victim, false);
+        for (&k, &owner) in keys.iter().zip(&before) {
+            let after = ring.route(k);
+            if owner == victim {
+                assert_ne!(after, victim, "seed {seed}: key {k} stayed on the dead peer");
+            } else {
+                assert_eq!(after, owner, "seed {seed}: key {k} moved needlessly");
+            }
+        }
+        ring.set_active(victim, true);
+        for (&k, &owner) in keys.iter().zip(&before) {
+            assert_eq!(ring.route(k), owner, "seed {seed}: key {k} not restored");
+        }
+    }
+}
+
+/// A healthy cohort streamed through the router into two peer stacks
+/// must produce the same shed/evict/window/prediction accounting —
+/// including the score fingerprint — as the same cohort served by one
+/// node. Partitioning is a placement decision, never a semantic one.
+#[test]
+fn routed_healthy_run_is_bit_identical_to_single_node() {
+    let zoo = toy_zoo_with(4, 32, 9, 250, &[1, 4]);
+    let mk = |route_peers: usize| ReplayConfig {
+        scenario: Scenario::ClockSkew,
+        seed: 11,
+        patients: 4,
+        duration_s: 6,
+        speedup: 64.0,
+        gpus: 2,
+        shards: 2,
+        workers: 2,
+        slo_ms: 1000.0,
+        http_addr: None,
+        edge_threads: 0,
+        govern: false,
+        route_peers,
+    };
+    let direct = run_replay(&zoo, mk(0)).unwrap();
+    assert_eq!(direct.violations, Vec::<String>::new());
+    let routed = run_replay(&zoo, mk(2)).unwrap();
+    assert_eq!(routed.violations, Vec::<String>::new());
+    assert_eq!(routed.route_peers, 2);
+    assert_eq!(
+        routed.accounting, direct.accounting,
+        "routed plane diverged from the single-node run"
+    );
+}
