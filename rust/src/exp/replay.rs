@@ -198,6 +198,9 @@ pub struct ReplayReport {
     pub spill_replayed: u64,
     /// Spill-cap overruns (dropped frames) — must be 0.
     pub spill_overflow: u64,
+    /// Stranded frames the failover replay could not place within its
+    /// deadline (every survivor saturated) — must be 0.
+    pub replay_dropped: u64,
     /// Sticky owner-map rewrites at death/drain — must equal the
     /// budget's ring-mirror count exactly.
     pub patients_rehomed: u64,
@@ -266,6 +269,12 @@ pub fn check_invariants(r: &ReplayReport) -> Vec<String> {
         }
         if r.spill_overflow > 0 {
             v.push(format!("{} frames dropped to spill overflow", r.spill_overflow));
+        }
+        if r.replay_dropped > 0 {
+            v.push(format!(
+                "{} stranded frames dropped by the failover replay deadline",
+                r.replay_dropped
+            ));
         }
         if b.rehomed_patients > 0 {
             if r.frames_spilled == 0 {
@@ -629,6 +638,7 @@ pub fn run_replay(zoo: &Zoo, mut cfg: ReplayConfig) -> Result<ReplayReport> {
         frames_spilled: 0,
         spill_replayed: 0,
         spill_overflow: 0,
+        replay_dropped: 0,
         patients_rehomed: 0,
         peers_reinstated: 0,
         governor_degraded_entered: gov
@@ -1049,6 +1059,7 @@ fn run_replay_routed(zoo: &Zoo, cfg: ReplayConfig) -> Result<ReplayReport> {
         frames_spilled: g.spilled_total.load(ordering),
         spill_replayed: g.spill_replayed.load(ordering),
         spill_overflow: g.spill_overflow.load(ordering),
+        replay_dropped: g.replay_dropped.load(ordering),
         patients_rehomed: g.patients_rehomed.load(ordering),
         peers_reinstated: g.peers_reinstated.load(ordering),
         governor_degraded_entered: 0,
@@ -1276,13 +1287,14 @@ fn print_report(r: &ReplayReport) {
     }
     if r.route_peers > 0 {
         println!(
-            "router tier          {:>12}  peers — re-homed {} (budget {}), spilled {} / replayed {} / overflow {}, reinstated {}",
+            "router tier          {:>12}  peers — re-homed {} (budget {}), spilled {} / replayed {} / overflow {} / replay-dropped {}, reinstated {}",
             r.route_peers,
             r.patients_rehomed,
             r.budget.rehomed_patients,
             r.frames_spilled,
             r.spill_replayed,
             r.spill_overflow,
+            r.replay_dropped,
             r.peers_reinstated
         );
     }

@@ -306,9 +306,10 @@ pub fn run_route(cfg: RouteConfig) -> Result<()> {
     let spilled = g.spilled_total.load(Ordering::Relaxed);
     let replayed = g.spill_replayed.load(Ordering::Relaxed);
     let overflow = g.spill_overflow.load(Ordering::Relaxed);
+    let dropped = g.replay_dropped.load(Ordering::Relaxed);
     let forwarded = g.frames_forwarded();
     println!(
-        "route smoke: forwarded {:?}, re-homed {rehomed}, spilled {spilled} / replayed {replayed} / overflow {overflow}",
+        "route smoke: forwarded {:?}, re-homed {rehomed}, spilled {spilled} / replayed {replayed} / overflow {overflow} / replay-dropped {dropped}",
         forwarded
     );
 
@@ -333,6 +334,11 @@ pub fn run_route(cfg: RouteConfig) -> Result<()> {
         }
         if overflow > 0 {
             failures.push(format!("{overflow} frames lost to spill overflow"));
+        }
+        if dropped > 0 {
+            failures.push(format!(
+                "{dropped} stranded frames dropped by the failover replay deadline"
+            ));
         }
         let states = g.peer_states();
         if states[victim] != 2 {

@@ -322,15 +322,20 @@ enum Phase {
     /// Streaming a `/ingest.bin` body: frames decode in place and go
     /// straight to the frame sink as their bytes complete. `batch_left`
     /// tracks an open `HLMB` envelope (its announced frames must all
-    /// arrive within this body); `heartbeat` records that the body
-    /// carried an `HLMH` probe, which switches the response to the
-    /// drain-state-reporting form.
+    /// arrive within this body); `seq` holds a pending `HLMS`
+    /// idempotency tag for the next batch header; `skip` marks the
+    /// open batch as an already-admitted duplicate whose frames are
+    /// acknowledged (counted in `frames`) but not delivered;
+    /// `heartbeat` records that the body carried an `HLMH` probe,
+    /// which switches the response to the drain-state-reporting form.
     BinBody {
         remaining: usize,
         keep_alive: bool,
         frames: u64,
         err: Option<BinError>,
         batch_left: u32,
+        seq: Option<(u64, u64)>,
+        skip: bool,
         heartbeat: bool,
     },
     /// Buffering a (small, bounded) body for a non-streaming route.
@@ -472,6 +477,8 @@ impl HttpConn {
                             frames: 0,
                             err: None,
                             batch_left: 0,
+                            seq: None,
+                            skip: false,
                             heartbeat: false,
                         },
                         route => Phase::BufBody {
@@ -487,6 +494,8 @@ impl HttpConn {
                     mut frames,
                     mut err,
                     mut batch_left,
+                    mut seq,
+                    mut skip,
                     mut heartbeat,
                 } => {
                     // decode envelope records in place from the receive
@@ -504,18 +513,40 @@ impl HttpConn {
                         let avail = self.recv.len().min(remaining);
                         match wire::decode_envelope_step(&self.recv.data()[..avail]) {
                             Ok(EnvelopeStep::Frame(frame, used)) => {
-                                if sink.deliver(frame).is_err() {
+                                if batch_left > 0 && skip {
+                                    // duplicate batch: acknowledge the
+                                    // frame without re-delivering it
+                                    telemetry
+                                        .frames_deduped
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    frames += 1;
+                                } else if sink.deliver(frame).is_err() {
                                     err = Some(BinError::PipelineClosed);
                                 } else {
                                     frames += 1;
                                 }
                                 batch_left = batch_left.saturating_sub(1);
+                                if batch_left == 0 {
+                                    skip = false;
+                                }
                                 self.recv.consume(used);
                                 remaining -= used;
                                 progressed = true;
                             }
                             Ok(EnvelopeStep::Heartbeat { used, .. }) => {
                                 heartbeat = true;
+                                self.recv.consume(used);
+                                remaining -= used;
+                                progressed = true;
+                            }
+                            Ok(EnvelopeStep::BatchSeq { token, seq: s, used }) => {
+                                if batch_left > 0 {
+                                    err = Some(BinError::Malformed(
+                                        "batch-seq tag inside an open batch".to_string(),
+                                    ));
+                                    continue;
+                                }
+                                seq = Some((token, s));
                                 self.recv.consume(used);
                                 remaining -= used;
                                 progressed = true;
@@ -528,6 +559,12 @@ impl HttpConn {
                                     continue;
                                 }
                                 batch_left = n_frames;
+                                skip = match seq.take() {
+                                    Some((token, s)) if n_frames > 0 => {
+                                        !telemetry.admit_batch(token, s)
+                                    }
+                                    _ => false,
+                                };
                                 self.recv.consume(used);
                                 remaining -= used;
                                 progressed = true;
@@ -555,6 +592,8 @@ impl HttpConn {
                             frames,
                             err,
                             batch_left,
+                            seq,
+                            skip,
                             heartbeat,
                         };
                         break;
@@ -566,6 +605,11 @@ impl HttpConn {
                         err = Some(BinError::Malformed(format!(
                             "batch truncated: {batch_left} frames missing"
                         )));
+                    }
+                    if err.is_none() && seq.is_some() {
+                        err = Some(BinError::Malformed(
+                            "dangling batch-seq tag with no batch".to_string(),
+                        ));
                     }
                     match err {
                         None if heartbeat => {

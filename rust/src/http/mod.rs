@@ -7,8 +7,11 @@
 //! * `POST /ingest.bin`  — binary body of one or more back-to-back
 //!   wire-encoded frames (see below); the hot path at 25k frames/s.
 //!   Also accepts the router envelope records: `HLMB` frame-batch
-//!   headers and `HLMH` heartbeats (a heartbeat response reports
-//!   whether this node is draining).
+//!   headers, `HLMS` batch-sequence tags (idempotency: a retried
+//!   batch the node already admitted is acknowledged but not
+//!   re-delivered — counted in `frames_deduped`), and `HLMH`
+//!   heartbeats (a heartbeat response reports whether this node is
+//!   draining).
 //! * `POST /drain`       — operator-initiated rolling-upgrade drain:
 //!   sets the `draining` flag so heartbeat responses advertise it and
 //!   the router re-homes this peer's patients before it exits.
@@ -469,9 +472,8 @@ pub(crate) fn route_parsed<S: FrameSink>(
                 Err(e) => ("400 Bad Request", format!("{{\"error\":\"{e}\"}}")),
             }
         }
-        conn::Route::IngestBin => match decode_envelope_body(body) {
-            Ok((frames, heartbeat)) => {
-                let n = frames.len();
+        conn::Route::IngestBin => match decode_envelope_body(body, telemetry) {
+            Ok((frames, total, heartbeat)) => {
                 for frame in frames {
                     if frame_tx.deliver(frame).is_err() {
                         return (
@@ -480,11 +482,17 @@ pub(crate) fn route_parsed<S: FrameSink>(
                         );
                     }
                 }
+                // `total` counts deduped frames too: a retried batch
+                // must be acknowledged exactly like its first delivery
+                // or the sender would count it against a lost response
                 if heartbeat {
                     let draining = telemetry.draining.load(Ordering::Relaxed);
-                    ("200 OK", format!("{{\"ok\":true,\"frames\":{n},\"draining\":{draining}}}"))
+                    (
+                        "200 OK",
+                        format!("{{\"ok\":true,\"frames\":{total},\"draining\":{draining}}}"),
+                    )
                 } else {
-                    ("200 OK", format!("{{\"ok\":true,\"frames\":{n}}}"))
+                    ("200 OK", format!("{{\"ok\":true,\"frames\":{total}}}"))
                 }
             }
             Err(e) => ("400 Bad Request", format!("{{\"error\":\"{e}\"}}")),
@@ -500,23 +508,50 @@ pub(crate) fn route_parsed<S: FrameSink>(
 }
 
 /// Decode a whole `/ingest.bin` body of envelope records — plain
-/// frames, `HLMB` batch headers, `HLMH` heartbeats — all-or-nothing
-/// like [`wire::decode_stream`]. Returns the decoded frames and
-/// whether any heartbeat was present (the response then reports the
-/// node's drain state).
-fn decode_envelope_body(mut buf: &[u8]) -> Result<(Vec<Frame>, bool)> {
+/// frames, `HLMS` batch-sequence tags, `HLMB` batch headers, `HLMH`
+/// heartbeats — all-or-nothing like [`wire::decode_stream`]. Returns
+/// the frames to deliver, the total frame count seen (including frames
+/// suppressed by `HLMS` dedupe — the response must acknowledge a
+/// retried batch exactly like its first delivery), and whether any
+/// heartbeat was present (the response then reports the node's drain
+/// state).
+fn decode_envelope_body(
+    mut buf: &[u8],
+    telemetry: &Telemetry,
+) -> Result<(Vec<Frame>, usize, bool)> {
     let mut frames = Vec::new();
+    let mut total = 0usize;
     let mut heartbeat = false;
     let mut batch_left: u32 = 0;
+    // pending HLMS tag: applies to the next batch header
+    let mut seq: Option<(u64, u64)> = None;
+    // the current batch is a dedupled duplicate: acknowledge its
+    // frames without delivering them
+    let mut skip = false;
     while !buf.is_empty() {
         match wire::decode_envelope_step(buf)? {
             wire::EnvelopeStep::Frame(f, used) => {
+                total += 1;
+                if batch_left > 0 && skip {
+                    telemetry.frames_deduped.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    frames.push(f);
+                }
                 batch_left = batch_left.saturating_sub(1);
-                frames.push(f);
+                if batch_left == 0 {
+                    skip = false;
+                }
                 buf = &buf[used..];
             }
             wire::EnvelopeStep::Heartbeat { used, .. } => {
                 heartbeat = true;
+                buf = &buf[used..];
+            }
+            wire::EnvelopeStep::BatchSeq { token, seq: s, used } => {
+                if batch_left > 0 {
+                    return Err(Error::wire("batch-seq tag inside an open batch"));
+                }
+                seq = Some((token, s));
                 buf = &buf[used..];
             }
             wire::EnvelopeStep::BatchStart { n_frames, used } => {
@@ -524,6 +559,10 @@ fn decode_envelope_body(mut buf: &[u8]) -> Result<(Vec<Frame>, bool)> {
                     return Err(Error::wire("batch header inside an open batch"));
                 }
                 batch_left = n_frames;
+                skip = match seq.take() {
+                    Some((token, s)) if n_frames > 0 => !telemetry.admit_batch(token, s),
+                    _ => false,
+                };
                 buf = &buf[used..];
             }
             wire::EnvelopeStep::NeedMore(_) => {
@@ -534,7 +573,10 @@ fn decode_envelope_body(mut buf: &[u8]) -> Result<(Vec<Frame>, bool)> {
     if batch_left > 0 {
         return Err(Error::wire(format!("batch truncated: {batch_left} frames missing")));
     }
-    Ok((frames, heartbeat))
+    if seq.is_some() {
+        return Err(Error::wire("dangling batch-seq tag with no batch"));
+    }
+    Ok((frames, total, heartbeat))
 }
 
 fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
@@ -550,13 +592,16 @@ fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
 /// that: on a **transport** failure (broken pipe, reset, EOF
 /// mid-response) it redials the remembered address with capped,
 /// jittered exponential backoff and resends the batch, up to
-/// [`Self::with_backoff`]'s attempt budget. Semantics are
+/// [`Self::with_backoff`]'s attempt budget. Transport semantics are
 /// at-least-once per batch: a reply lost after the server admitted the
 /// frames makes the retry a duplicate — acceptable for monitor streams
 /// (the replay harness severs *before* the request bytes move, so its
-/// budgets stay exact). A non-2xx **response** is a protocol answer,
-/// not a link failure, and is never retried. Redials are counted in
-/// [`Self::reconnects`] and surfaced in the bedside report.
+/// budgets stay exact), and upgraded to exactly-once for router links
+/// via [`Self::send_batch_seq`], whose `HLMS` idempotency tag rides
+/// the re-POSTed body verbatim so the server dedupes the retry. A
+/// non-2xx **response** is a protocol answer, not a link failure, and
+/// is never retried. Redials are counted in [`Self::reconnects`] and
+/// surfaced in the bedside report.
 pub struct IngestClient {
     stream: TcpStream,
     addr: SocketAddr,
@@ -643,6 +688,21 @@ impl IngestClient {
     /// [`Self::send_frames`].
     pub fn send_batch(&mut self, frames: &[Frame]) -> Result<()> {
         self.body.clear();
+        wire::write_batch_header(frames.len() as u32, &mut self.body);
+        for f in frames {
+            f.write_bytes(&mut self.body);
+        }
+        self.post_with_retry()
+    }
+
+    /// POST one batch under an `HLMS` idempotency tag — the router
+    /// link path. `token` identifies the link lifetime, `seq` the
+    /// batch; a retry of the same `(token, seq)` (redial re-POST here,
+    /// or a re-formed batch in the link worker) is acknowledged by the
+    /// peer without re-delivering the frames.
+    pub fn send_batch_seq(&mut self, token: u64, seq: u64, frames: &[Frame]) -> Result<()> {
+        self.body.clear();
+        wire::write_batch_seq(token, seq, &mut self.body);
         wire::write_batch_header(frames.len() as u32, &mut self.body);
         for f in frames {
             f.write_bytes(&mut self.body);
@@ -1085,6 +1145,43 @@ mod tests {
         s.write_all(&hdr).unwrap();
         let text = read_full_response(&mut s);
         assert!(text.starts_with("HTTP/1.1 400"), "{text}");
+    }
+
+    #[test]
+    fn retried_batch_seq_is_acknowledged_but_not_redelivered() {
+        let (tx, rx) = mpsc::sync_channel(1024);
+        let tel = Arc::new(Telemetry::default());
+        let server =
+            serve("127.0.0.1:0", ShardSender::from_senders(vec![tx]), Arc::clone(&tel)).unwrap();
+        let mut client = IngestClient::connect(server.addr).unwrap();
+        let frames: Vec<Frame> = (0..3usize)
+            .map(|i| Frame {
+                patient: i,
+                modality: Modality::Ecg,
+                sim_time: i as f64 * 0.004,
+                values: [0.5, -0.25, 1.0].into(),
+            })
+            .collect();
+        // first delivery admits the batch
+        client.send_batch_seq(77, 0, &frames).unwrap();
+        for i in 0..3usize {
+            assert_eq!(rx.recv().unwrap().patient, i);
+        }
+        // a retry of the same (token, seq) — the lost-response case —
+        // answers 2xx with the full frame count but delivers nothing
+        client.send_batch_seq(77, 0, &frames).unwrap();
+        assert!(find_subslice(&client.resp, b"\"frames\":3").is_some());
+        assert!(rx.try_recv().is_err(), "duplicate batch must not be re-delivered");
+        assert_eq!(tel.frames_deduped.load(Ordering::Relaxed), 3);
+        // the next sequence flows normally
+        client.send_batch_seq(77, 1, &frames).unwrap();
+        for i in 0..3usize {
+            assert_eq!(rx.recv().unwrap().patient, i);
+        }
+        // a different token is an independent link lifetime
+        client.send_batch_seq(99, 0, &frames).unwrap();
+        assert_eq!(rx.try_iter().count(), 3);
+        assert_eq!(tel.frames_deduped.load(Ordering::Relaxed), 3);
     }
 
     #[test]

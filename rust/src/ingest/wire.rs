@@ -198,6 +198,13 @@ pub const HEARTBEAT_MAGIC: [u8; 4] = *b"HLMH";
 /// First four body bytes of a router frame-batch envelope header.
 pub const BATCH_MAGIC: [u8; 4] = *b"HLMB";
 
+/// First four body bytes of a batch-sequence tag: identifies the batch
+/// that follows (`HLMB` + frames) by a per-link token and a monotonic
+/// sequence number, so a peer can ignore a re-POST of a batch it
+/// already admitted (a retry after the response was lost) instead of
+/// double-delivering its frames.
+pub const BATCH_SEQ_MAGIC: [u8; 4] = *b"HLMS";
+
 /// Encoded size of a heartbeat: magic(4) + version(1) + reserved(3) +
 /// seq(8).
 pub const HEARTBEAT_LEN: usize = 16;
@@ -206,6 +213,10 @@ pub const HEARTBEAT_LEN: usize = 16;
 /// reserved(3) + n_frames(4). The `n_frames` wire frames follow back
 /// to back.
 pub const BATCH_HEADER_LEN: usize = 12;
+
+/// Encoded size of a batch-sequence tag: magic(4) + version(1) +
+/// reserved(3) + token(8) + seq(8).
+pub const BATCH_SEQ_LEN: usize = 24;
 
 /// Encode a router heartbeat probe body.
 pub fn encode_heartbeat(seq: u64) -> [u8; HEARTBEAT_LEN] {
@@ -227,17 +238,33 @@ pub fn write_batch_header(n_frames: u32, out: &mut Vec<u8>) {
     out.extend_from_slice(&n_frames.to_le_bytes());
 }
 
+/// Append a batch-sequence tag to `out`. The tag applies to the next
+/// `HLMB` batch in the body: a peer that has already admitted
+/// `(token, seq)` skips the batch's frames (and counts them in its
+/// `frames_deduped` gauge) while still answering 2xx, making link
+/// retries exactly-once instead of at-least-once.
+pub fn write_batch_seq(token: u64, seq: u64, out: &mut Vec<u8>) {
+    out.reserve(BATCH_SEQ_LEN);
+    out.extend_from_slice(&BATCH_SEQ_MAGIC);
+    out.push(WIRE_VERSION);
+    out.extend_from_slice(&[0u8; 3]); // reserved
+    out.extend_from_slice(&token.to_le_bytes());
+    out.extend_from_slice(&seq.to_le_bytes());
+}
+
 /// Outcome of one [`decode_envelope_step`] attempt. A superset of
-/// [`DecodeStep`]: the router tier speaks heartbeats and frame-batch
-/// envelopes over the same `/ingest.bin` route, and all three record
-/// types share the `HLM` magic prefix so early garbage rejection is as
-/// eager as for plain frames.
+/// [`DecodeStep`]: the router tier speaks heartbeats, batch-sequence
+/// tags, and frame-batch envelopes over the same `/ingest.bin` route,
+/// and all the record types share the `HLM` magic prefix so early
+/// garbage rejection is as eager as for plain frames.
 #[derive(Debug, Clone, Copy)]
 pub enum EnvelopeStep {
     /// A complete plain wire frame (same as [`DecodeStep::Frame`]).
     Frame(Frame, usize),
     /// A complete heartbeat probe.
     Heartbeat { seq: u64, used: usize },
+    /// A complete batch-sequence tag: applies to the next batch.
+    BatchSeq { token: u64, seq: u64, used: usize },
     /// A batch envelope header: `n_frames` wire frames follow.
     BatchStart { n_frames: u32, used: usize },
     /// Valid prefix of one of the above; resume with more bytes.
@@ -245,10 +272,11 @@ pub enum EnvelopeStep {
 }
 
 /// Resumable decode of the router envelope stream: plain frames
-/// (`HLM1`, delegated to [`decode_step`]), heartbeats (`HLMH`), and
-/// batch headers (`HLMB`). Unknown fourth bytes after a valid `HLM`
-/// prefix are hard errors, as are bad version/reserved bytes, detected
-/// as soon as the offending byte is visible.
+/// (`HLM1`, delegated to [`decode_step`]), heartbeats (`HLMH`), batch
+/// headers (`HLMB`), and batch-sequence tags (`HLMS`). Unknown fourth
+/// bytes after a valid `HLM` prefix are hard errors, as are bad
+/// version/reserved bytes, detected as soon as the offending byte is
+/// visible.
 pub fn decode_envelope_step(buf: &[u8]) -> Result<EnvelopeStep> {
     let prefix = buf.len().min(3);
     if buf[..prefix] != WIRE_MAGIC[..prefix] {
@@ -293,6 +321,23 @@ pub fn decode_envelope_step(buf: &[u8]) -> Result<EnvelopeStep> {
             }
             let n_frames = u32::from_le_bytes(take4(buf, 8));
             Ok(EnvelopeStep::BatchStart { n_frames, used: total })
+        }
+        b'S' => {
+            let total = BATCH_SEQ_LEN;
+            if buf.len() > 4 && buf[4] != WIRE_VERSION {
+                return Err(Error::wire(format!("unsupported wire version {}", buf[4])));
+            }
+            for at in 5..8usize.min(buf.len()) {
+                if buf[at] != 0 {
+                    return Err(Error::wire("nonzero reserved bytes"));
+                }
+            }
+            if buf.len() < total {
+                return Ok(EnvelopeStep::NeedMore(total));
+            }
+            let token = u64::from_le_bytes(take8(buf, 8));
+            let seq = u64::from_le_bytes(take8(buf, 16));
+            Ok(EnvelopeStep::BatchSeq { token, seq, used: total })
         }
         other => Err(Error::wire(format!("unknown envelope type byte 0x{other:02x}"))),
     }
@@ -511,6 +556,29 @@ mod tests {
     }
 
     #[test]
+    fn batch_seq_roundtrips_and_resumes() {
+        let mut body = Vec::new();
+        write_batch_seq(0xFACE_FEED_0001, 42, &mut body);
+        assert_eq!(body.len(), BATCH_SEQ_LEN);
+        match decode_envelope_step(&body).unwrap() {
+            EnvelopeStep::BatchSeq { token, seq, used } => {
+                assert_eq!(token, 0xFACE_FEED_0001);
+                assert_eq!(seq, 42);
+                assert_eq!(used, BATCH_SEQ_LEN);
+            }
+            other => panic!("expected batch seq, got {other:?}"),
+        }
+        for cut in 0..body.len() {
+            match decode_envelope_step(&body[..cut]).unwrap_or_else(|e| panic!("cut {cut}: {e}")) {
+                EnvelopeStep::NeedMore(need) => {
+                    assert!(need > cut && need <= BATCH_SEQ_LEN, "cut {cut}: need {need}");
+                }
+                other => panic!("cut {cut}: incomplete batch seq decoded {other:?}"),
+            }
+        }
+    }
+
+    #[test]
     fn batch_envelope_header_roundtrips() {
         let mut body = Vec::new();
         write_batch_header(3, &mut body);
@@ -581,6 +649,15 @@ mod tests {
         write_batch_header(2, &mut hdr);
         for (at, bad) in [(4usize, 9u8), (5, 1), (6, 1), (7, 1)] {
             let mut b = hdr.clone();
+            b[at] = bad;
+            assert!(decode_envelope_step(&b[..at + 1]).is_err(), "byte {at} not rejected early");
+            assert!(decode_envelope_step(&b).is_err(), "byte {at} not rejected in full");
+        }
+        // same for the batch-sequence tag
+        let mut tag = Vec::new();
+        write_batch_seq(1, 1, &mut tag);
+        for (at, bad) in [(4usize, 9u8), (5, 1), (6, 1), (7, 1)] {
+            let mut b = tag.clone();
             b[at] = bad;
             assert!(decode_envelope_step(&b[..at + 1]).is_err(), "byte {at} not rejected early");
             assert!(decode_envelope_step(&b).is_err(), "byte {at} not rejected in full");

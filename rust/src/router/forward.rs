@@ -7,12 +7,19 @@
 //!   RouterSink::deliver ──► Link::send
 //!        │ queue (bounded; full = caller blocks — physical backpressure)
 //!        ▼
-//!   worker thread: take ≤ MAX_BATCH ──► IngestClient::send_batch
+//!   worker thread: take ≤ MAX_BATCH ──► IngestClient::send_batch_seq
 //!        │   capped-jitter redial retries, socket write timeout;
 //!        │   a persistently failing batch returns to the queue FRONT
 //!        ▼   (delivery order is preserved across retries)
-//!   downstream `holmes serve` peer (POST /ingest.bin, HLMB envelope)
+//!   downstream `holmes serve` peer (POST /ingest.bin, HLMS + HLMB)
 //! ```
+//!
+//! Exactly-once across retries: every batch is tagged with an `HLMS`
+//! record carrying a per-link random token and a monotonic sequence
+//! number. A retry — whether a redial re-POST inside the client or a
+//! requeued batch re-formed by the worker — repeats the *same* frames
+//! under the *same* sequence, so a peer that admitted the batch but
+//! lost the response dedupes the repeat instead of double-counting it.
 //!
 //! Ordering note for the spill buffer: frames only enter `spill` while
 //! the link is paused (operator drain) or dead — states in which the
@@ -25,7 +32,7 @@ use std::collections::VecDeque;
 use std::net::SocketAddr;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::http::IngestClient;
 use crate::ingest::Frame;
@@ -35,7 +42,8 @@ use crate::serving::RouterGauges;
 /// path (backpressure reaches the ingest edge, not a hidden buffer).
 pub const QUEUE_CAP: usize = 8192;
 /// Spill-buffer cap: ~4 s of one peer's share of a 250 Hz × 64-bed
-/// cohort. Overflow drops the oldest budgeted guarantee and is counted
+/// cohort. Overflow drops the oldest spilled frame (the newest clinical
+/// data is the most valuable) and is counted
 /// (`router_spill_overflow`), never silent.
 pub const SPILL_CAP: usize = 65_536;
 /// Frames per forwarded batch (one `HLMB` envelope).
@@ -80,6 +88,11 @@ pub enum SendOutcome {
     /// Link dead *and already drained* — the frame comes back to the
     /// caller, who must re-resolve ownership and route it elsewhere.
     Gone(Frame),
+    /// Bounded send ([`LinkHandle::send_for`]) timed out waiting for
+    /// queue space; the frame comes back to the caller, who decides
+    /// whether to drop it (counted) or try elsewhere. Never returned
+    /// by the unbounded [`LinkHandle::send`].
+    Busy(Frame),
 }
 
 /// One persistent forwarding link to a downstream peer. The owning
@@ -145,6 +158,8 @@ impl Link {
     /// and wait until every already-queued frame has been delivered to
     /// the peer. Returns early if the peer dies mid-drain — the
     /// remnants are then recovered by [`Self::drain_for_failover`].
+    /// Unbounded; control paths that must not wedge on an unresponsive
+    /// peer use [`Self::quiesce_for`] instead.
     pub fn quiesce(&self) {
         let mut st = self.shared.state.lock().unwrap();
         st.paused = true;
@@ -152,6 +167,23 @@ impl Link {
         while (!st.queue.is_empty() || st.in_flight) && !st.dead {
             st = self.shared.cv.wait(st).unwrap();
         }
+    }
+
+    /// Bounded [`Self::quiesce`]: returns `true` if the flush completed
+    /// (or the link died) within `timeout`, `false` if frames were
+    /// still undelivered when the deadline hit. Either way the link is
+    /// left paused; on `false` the caller routes the remnants through
+    /// [`Self::drain_for_failover`] instead of waiting forever on a
+    /// peer that stopped accepting.
+    pub fn quiesce_for(&self, timeout: Duration) -> bool {
+        self.handle().quiesce_for(timeout)
+    }
+
+    /// Abandon the link: mark it dead so the worker stops retrying and
+    /// blocked senders wake. Undelivered frames stay harvestable via
+    /// [`Self::drain_for_failover`].
+    pub fn mark_dead(&self) {
+        self.handle().mark_dead()
     }
 
     /// Wait until everything queued so far has been delivered, without
@@ -219,21 +251,57 @@ impl LinkHandle {
     /// the frame back once the link has been drained for failover
     /// (the caller re-resolves ownership and routes it elsewhere).
     pub fn send(&self, frame: Frame, peer: usize, gauges: &RouterGauges) -> SendOutcome {
+        self.send_inner(frame, peer, gauges, None)
+    }
+
+    /// Bounded-wait [`Self::send`] for control paths (failover replay)
+    /// that must not block indefinitely on a saturated survivor:
+    /// returns [`SendOutcome::Busy`] with the frame if no queue space
+    /// opens within `wait`.
+    pub fn send_for(
+        &self,
+        frame: Frame,
+        peer: usize,
+        gauges: &RouterGauges,
+        wait: Duration,
+    ) -> SendOutcome {
+        self.send_inner(frame, peer, gauges, Some(wait))
+    }
+
+    fn send_inner(
+        &self,
+        frame: Frame,
+        peer: usize,
+        gauges: &RouterGauges,
+        wait: Option<Duration>,
+    ) -> SendOutcome {
+        let deadline = wait.map(|w| Instant::now() + w);
         let mut st = self.shared.state.lock().unwrap();
         while st.queue.len() >= QUEUE_CAP && !st.paused && !st.dead {
-            st = self.shared.cv.wait(st).unwrap();
+            match deadline {
+                None => st = self.shared.cv.wait(st).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return SendOutcome::Busy(frame);
+                    }
+                    st = self.shared.cv.wait_timeout(st, d - now).unwrap().0;
+                }
+            }
         }
         if st.drained {
             return SendOutcome::Gone(frame);
         }
         if st.paused || st.dead {
             if st.spill.len() >= SPILL_CAP {
+                // drop-oldest: the newest clinical data is the most
+                // valuable, so overflow evicts from the front
+                st.spill.pop_front();
                 gauges.spill_overflow.fetch_add(1, Ordering::Relaxed);
-            } else {
-                st.spill.push_back(frame);
-                gauges.spilled_total.fetch_add(1, Ordering::Relaxed);
-                gauges.spill_depth[peer].store(st.spill.len() as u64, Ordering::Relaxed);
             }
+            st.spill.push_back(frame);
+            gauges.spilled_total.fetch_add(1, Ordering::Relaxed);
+            gauges.spill_depth[peer].store(st.spill.len() as u64, Ordering::Relaxed);
             return SendOutcome::Spilled;
         }
         st.queue.push_back(frame);
@@ -241,6 +309,45 @@ impl LinkHandle {
         self.shared.cv.notify_all();
         SendOutcome::Queued
     }
+
+    /// See [`Link::quiesce_for`].
+    pub fn quiesce_for(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.shared.state.lock().unwrap();
+        st.paused = true;
+        self.shared.cv.notify_all();
+        while (!st.queue.is_empty() || st.in_flight) && !st.dead {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            st = self.shared.cv.wait_timeout(st, deadline - now).unwrap().0;
+        }
+        true
+    }
+
+    /// See [`Link::mark_dead`].
+    pub fn mark_dead(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.dead = true;
+        drop(st);
+        self.shared.cv.notify_all();
+    }
+}
+
+/// Per-link idempotency token: wall-clock nanos mixed with the peer
+/// index through a splitmix64 finalizer, so a restarted router (fresh
+/// sequence counter starting at 0) never collides with the token a
+/// peer already has dedupe state for.
+fn link_token(peer: usize) -> u64 {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0x9E37_79B9_7F4A_7C15);
+    let mut x = nanos ^ (((peer as u64) << 1) | 1);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
 }
 
 fn worker_loop(
@@ -252,6 +359,14 @@ fn worker_loop(
 ) {
     let mut client: Option<IngestClient> = None;
     let mut batch: Vec<Frame> = Vec::with_capacity(MAX_BATCH);
+    let token = link_token(peer);
+    let mut next_seq: u64 = 0;
+    // A failed batch must re-form VERBATIM on the next round — same
+    // frames (they return to the queue front), same sequence number —
+    // so a peer that admitted it but lost the response can dedupe the
+    // repeat. Growing the batch or advancing the sequence on retry
+    // would turn every lost response into double delivery.
+    let mut pending: Option<(u64, usize)> = None;
     loop {
         {
             let mut st = shared.state.lock().unwrap();
@@ -264,13 +379,25 @@ fn worker_loop(
                 }
                 st = shared.cv.wait(st).unwrap();
             }
-            let take = st.queue.len().min(MAX_BATCH);
+            let take = match pending {
+                Some((_, len)) => len.min(st.queue.len()),
+                None => st.queue.len().min(MAX_BATCH),
+            };
             batch.clear();
             batch.extend(st.queue.drain(..take));
             st.in_flight = true;
         }
         // senders blocked on a full queue can make progress now
         shared.cv.notify_all();
+
+        let seq = match pending {
+            Some((s, _)) => s,
+            None => {
+                let s = next_seq;
+                next_seq += 1;
+                s
+            }
+        };
 
         if client.is_none() {
             client = IngestClient::connect(addr)
@@ -283,7 +410,7 @@ fn worker_loop(
         let sent = match client.as_mut() {
             Some(c) => {
                 let before = c.reconnects();
-                let r = c.send_batch(&batch);
+                let r = c.send_batch_seq(token, seq, &batch);
                 let retries = c.reconnects() - before;
                 if retries > 0 {
                     gauges.forward_retries[peer].fetch_add(retries, Ordering::Relaxed);
@@ -302,10 +429,12 @@ fn worker_loop(
         let mut st = shared.state.lock().unwrap();
         st.in_flight = false;
         if sent {
+            pending = None;
             gauges.frames_forwarded[peer].fetch_add(batch.len() as u64, Ordering::Relaxed);
             drop(st);
             shared.cv.notify_all();
         } else {
+            pending = Some((seq, batch.len()));
             // redelivery preserves order: the failed batch returns to
             // the queue front ahead of everything enqueued since
             for f in batch.drain(..).rev() {

@@ -28,8 +28,19 @@
 //! link, ring reactivated → only *new* patients route to the returnee
 //! (sticky owners keep re-home accounting deterministic). **Rolling
 //! upgrade**: `POST /drain` (or SIGTERM) makes the peer advertise
-//! `draining` in heartbeat responses → the router quiesces its link
-//! (flushing every queued frame), then re-homes — zero dropped frames.
+//! `draining` in heartbeat responses → the router flushes its link
+//! (bounded by `drain_flush_timeout`; a peer that stops accepting
+//! mid-drain forfeits the flush and its remnants take the
+//! failover-replay path), then re-homes — zero dropped frames when the
+//! peer drains cleanly.
+//!
+//! Locking discipline: the router-wide `inner` mutex is held only for
+//! map/ring/link-slot bookkeeping, NEVER across a blocking link
+//! operation (flush, in-flight drain, backpressure send). Every
+//! `on_peer_*` transition runs on the single prober thread, which is
+//! also the only thread that can declare further peers dead — if it
+//! blocked on one wedged link while holding the lock, no failure could
+//! ever be declared again and `deliver()` would stall router-wide.
 
 pub mod forward;
 pub mod health;
@@ -39,7 +50,7 @@ use std::collections::HashMap;
 use std::net::SocketAddr;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::http::FrameSink;
 use crate::ingest::Frame;
@@ -50,6 +61,25 @@ pub use forward::{Link, LinkHandle, SendOutcome};
 pub use health::{HealthConfig, HealthCore, PeerAction, Prober, ProbeOutcome};
 pub use ring::Ring;
 
+/// Ceiling on how long [`Router::deliver`] waits for a link slot that
+/// is mid-transition (`None` between a failure/drain claiming the link
+/// and the re-home publishing new owners). Transitions are themselves
+/// bounded — drain flush + in-flight drain + replay — so this only
+/// fires if the control plane is genuinely wedged.
+const TRANSITION_WAIT: Duration = Duration::from_secs(30);
+/// Per-link flush grace during [`Router::shutdown`]; a link whose peer
+/// stopped accepting is abandoned (marked dead) after this so teardown
+/// always terminates.
+const SHUTDOWN_FLUSH_TIMEOUT: Duration = Duration::from_secs(5);
+/// Per-attempt bound on one replay send into a survivor's queue. Short:
+/// the replay runs on the prober thread, and a saturated survivor must
+/// not wedge the only thread that could declare it dead.
+const REPLAY_SEND_WAIT: Duration = Duration::from_millis(500);
+/// Overall bound on replaying one removed peer's stranded frames.
+/// Frames that cannot be placed within this budget are dropped and
+/// counted (`router_replay_dropped`), never silently.
+const REPLAY_DEADLINE: Duration = Duration::from_secs(10);
+
 /// Router tunables.
 #[derive(Debug, Clone)]
 pub struct RouterConfig {
@@ -59,6 +89,11 @@ pub struct RouterConfig {
     pub health: HealthConfig,
     /// Socket read/write deadline on forwarding links.
     pub link_io_timeout: Duration,
+    /// How long an orderly drain may spend flushing the departing
+    /// peer's queue before the remnants are diverted to the
+    /// failover-replay path. Bounds `on_peer_drain` so a peer that
+    /// exits mid-drain cannot wedge the prober.
+    pub drain_flush_timeout: Duration,
 }
 
 impl RouterConfig {
@@ -67,6 +102,7 @@ impl RouterConfig {
             peers,
             health: HealthConfig::default(),
             link_io_timeout: Duration::from_secs(2),
+            drain_flush_timeout: Duration::from_secs(5),
         }
     }
 }
@@ -88,6 +124,7 @@ pub struct Router {
     gauges: Arc<RouterGauges>,
     addrs: Vec<SocketAddr>,
     link_io_timeout: Duration,
+    drain_flush_timeout: Duration,
 }
 
 impl Router {
@@ -113,6 +150,7 @@ impl Router {
             gauges,
             addrs: cfg.peers.clone(),
             link_io_timeout: cfg.link_io_timeout,
+            drain_flush_timeout: cfg.drain_flush_timeout,
         }))
     }
 
@@ -149,9 +187,18 @@ impl Router {
     /// it. A send that races past a failover gets its frame back
     /// ([`SendOutcome::Gone`]) and re-resolves: by the time the Gone
     /// surfaces, the re-home has already rewritten the owner map.
+    ///
+    /// A `None` link slot behind a still-sticky owner means a
+    /// failure/drain transition is in flight (the link is claimed
+    /// before the re-home publishes new owners, so stranded-frame
+    /// replay lands ahead of live traffic and per-patient order
+    /// holds). The frame waits — bounded by [`TRANSITION_WAIT`] — and
+    /// re-resolves once the re-home lands.
     fn deliver(&self, mut frame: Frame) -> Result<()> {
-        for _ in 0..8 {
-            let (peer, handle) = {
+        let deadline = Instant::now() + TRANSITION_WAIT;
+        let mut hops = 0u32;
+        loop {
+            let resolved = {
                 let mut inner = self.inner.lock().unwrap();
                 let peer = match inner.owner.get(&frame.patient) {
                     Some(&p) => p,
@@ -161,43 +208,51 @@ impl Router {
                         p
                     }
                 };
-                match &inner.links[peer] {
-                    Some(link) => (peer, link.handle()),
-                    // a missing link with no survivor to re-home to:
-                    // the last peer died
-                    None => {
-                        return Err(crate::Error::serving(format!(
-                            "router: no live link for peer {peer}"
-                        )))
+                inner.links[peer].as_ref().map(|link| (peer, link.handle()))
+            };
+            let (peer, handle) = match resolved {
+                Some(r) => r,
+                None => {
+                    if Instant::now() >= deadline {
+                        return Err(crate::Error::serving(
+                            "router: peer transition never completed".to_string(),
+                        ));
                     }
+                    std::thread::sleep(Duration::from_millis(1));
+                    continue;
                 }
             };
             match handle.send(frame, peer, &self.gauges) {
                 SendOutcome::Queued | SendOutcome::Spilled => return Ok(()),
-                SendOutcome::Gone(f) => frame = f,
+                SendOutcome::Gone(f) => {
+                    frame = f;
+                    hops += 1;
+                    if hops >= 8 {
+                        return Err(crate::Error::serving(
+                            "router: frame unplaceable after repeated failovers".to_string(),
+                        ));
+                    }
+                }
+                SendOutcome::Busy(_) => {
+                    unreachable!("unbounded send never reports Busy")
+                }
             }
         }
-        Err(crate::Error::serving(
-            "router: frame unplaceable after repeated failovers".to_string(),
-        ))
     }
 
     /// Prober edge: the peer crossed the miss threshold. Deactivate it
-    /// on the ring, re-home its patients to survivors, and replay the
-    /// link's undelivered frames (queue remnants + spill, in order)
-    /// through their new owners.
+    /// on the ring, replay the link's undelivered frames (queue
+    /// remnants + spill, in order) through the survivors, then re-home
+    /// its patients. Replay runs before the re-home publishes new
+    /// owners: live traffic for the victim's patients waits in
+    /// `deliver()`'s transition window, so replayed (older) frames
+    /// always land first and per-patient order holds.
     pub fn on_peer_dead(&self, peer: usize) {
-        let mut inner = self.inner.lock().unwrap();
-        if !inner.ring.is_active(peer) {
-            return; // already down
-        }
-        if inner.ring.active_peers() == 1 {
-            // last peer: keep it on the ring (there is nowhere to
-            // re-home to); its link keeps spilling until it returns
-            return;
-        }
-        inner.ring.set_active(peer, false);
-        let stranded = match inner.links[peer].take() {
+        let link = match self.begin_removal(peer) {
+            Some(link) => link,
+            None => return,
+        };
+        let stranded = match link {
             Some(link) => {
                 let frames = link.drain_for_failover(peer, &self.gauges);
                 link.shutdown();
@@ -205,33 +260,55 @@ impl Router {
             }
             None => Vec::new(),
         };
-        self.rehome_and_replay(&mut inner, peer, stranded);
+        self.replay(stranded);
+        self.rehome(peer);
     }
 
     /// Prober edge: the peer advertised an orderly drain. Flush its
-    /// link completely (every queued frame reaches the peer before it
-    /// exits), then re-home — the zero-frame-loss rolling-upgrade path.
+    /// link (bounded: a peer that stops accepting mid-drain forfeits
+    /// the flush instead of wedging the prober), then re-home — the
+    /// zero-frame-loss rolling-upgrade path when the peer drains
+    /// cleanly.
     pub fn on_peer_drain(&self, peer: usize) {
-        let mut inner = self.inner.lock().unwrap();
-        if !inner.ring.is_active(peer) {
-            return;
-        }
-        if inner.ring.active_peers() == 1 {
-            return;
-        }
-        inner.ring.set_active(peer, false);
-        let stranded = match inner.links[peer].take() {
+        let link = match self.begin_removal(peer) {
+            Some(link) => link,
+            None => return,
+        };
+        let stranded = match link {
             Some(link) => {
-                link.quiesce();
-                // the queue flushed to the draining peer; only frames
-                // that spilled during the quiesce remain
+                // Bounded flush, OUTSIDE the router lock: every frame
+                // the departing peer still accepts gets through. If it
+                // exits mid-drain, the deadline fires and the queue
+                // remnants take the failover-replay path below — the
+                // unbounded quiesce here once wedged the prober (and
+                // with it the whole router) forever.
+                let _ = link.quiesce_for(self.drain_flush_timeout);
                 let frames = link.drain_for_failover(peer, &self.gauges);
                 link.shutdown();
                 frames
             }
             None => Vec::new(),
         };
-        self.rehome_and_replay(&mut inner, peer, stranded);
+        self.replay(stranded);
+        self.rehome(peer);
+    }
+
+    /// Under the router lock: take the peer off the ring and claim its
+    /// link slot. Returns `None` (no transition) if the peer is
+    /// already down or is the last survivor — the ring never goes
+    /// empty; the last peer's link stays up and callers block on its
+    /// queue backpressure until it recovers. All blocking work on the
+    /// claimed link happens after the lock is released.
+    fn begin_removal(&self, peer: usize) -> Option<Option<Link>> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.ring.is_active(peer) {
+            return None; // already down
+        }
+        if inner.ring.active_peers() == 1 {
+            return None;
+        }
+        inner.ring.set_active(peer, false);
+        Some(inner.links[peer].take())
     }
 
     /// Prober edge: a canary heartbeat succeeded. Fresh link, back on
@@ -254,59 +331,117 @@ impl Router {
         self.gauges.peers_reinstated.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Rewrite the dead/drained peer's sticky assignments through the
-    /// ring (minimal movement: only its keys move) and replay its
-    /// stranded frames through the survivors in original order.
-    fn rehome_and_replay(&self, inner: &mut RouterInner, peer: usize, stranded: Vec<Frame>) {
-        let mut rehomed = 0u64;
+    /// Replay a removed peer's stranded frames through the survivors
+    /// in original order. Runs on the prober thread with the router
+    /// lock RELEASED around every send: a survivor whose queue is full
+    /// must not block the only thread that could declare *it* dead
+    /// (the cascading-failure deadlock). Each send is bounded by
+    /// [`REPLAY_SEND_WAIT`] and the whole replay by
+    /// [`REPLAY_DEADLINE`]; frames that cannot be placed are counted
+    /// in `router_replay_dropped` — a budgeted loss the invariant
+    /// checks surface, never a silent one. Targets resolve through the
+    /// ring directly (the victim is already off it) without touching
+    /// the sticky owner map — the re-home publishes afterwards.
+    fn replay(&self, stranded: Vec<Frame>) {
+        if stranded.is_empty() {
+            return;
+        }
+        let deadline = Instant::now() + REPLAY_DEADLINE;
+        for mut frame in stranded {
+            let mut hops = 0u32;
+            let placed = loop {
+                let resolved = {
+                    let inner = self.inner.lock().unwrap();
+                    let owner = match inner.owner.get(&frame.patient) {
+                        Some(&p) if inner.ring.is_active(p) => p,
+                        _ => inner.ring.route(frame.patient),
+                    };
+                    inner.links[owner].as_ref().map(|link| (owner, link.handle()))
+                };
+                let Some((owner, handle)) = resolved else {
+                    break false;
+                };
+                let wait = deadline
+                    .saturating_duration_since(Instant::now())
+                    .min(REPLAY_SEND_WAIT);
+                match handle.send_for(frame, owner, &self.gauges, wait) {
+                    SendOutcome::Queued | SendOutcome::Spilled => break true,
+                    SendOutcome::Gone(f) => {
+                        frame = f;
+                        hops += 1;
+                        if hops >= 8 {
+                            break false;
+                        }
+                    }
+                    SendOutcome::Busy(f) => {
+                        frame = f;
+                        if Instant::now() >= deadline {
+                            break false;
+                        }
+                    }
+                }
+            };
+            if placed {
+                self.gauges.spill_replayed.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.gauges.replay_dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Rewrite the removed peer's sticky assignments through the ring
+    /// (minimal movement: only its keys move). Runs under the lock —
+    /// pure map work, nothing blocking — and publishes the new owners
+    /// that `deliver()`'s transition window has been waiting on.
+    fn rehome(&self, peer: usize) {
+        let mut inner = self.inner.lock().unwrap();
         let moves: Vec<(usize, usize)> = inner
             .owner
             .iter()
             .filter(|&(_, &p)| p == peer)
             .map(|(&patient, _)| (patient, inner.ring.route(patient)))
             .collect();
+        let rehomed = moves.len() as u64;
         for (patient, new_owner) in moves {
             inner.owner.insert(patient, new_owner);
-            rehomed += 1;
         }
         self.gauges.patients_rehomed.fetch_add(rehomed, Ordering::Relaxed);
-        let n = stranded.len() as u64;
-        for frame in stranded {
-            let owner = match inner.owner.get(&frame.patient) {
-                Some(&p) => p,
-                None => {
-                    let p = inner.ring.route(frame.patient);
-                    inner.owner.insert(frame.patient, p);
-                    p
-                }
-            };
-            if let Some(link) = &inner.links[owner] {
-                let _ = link.send(frame, owner, &self.gauges);
-            }
-        }
-        self.gauges.spill_replayed.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Chaos/replay hook: pause one peer's link — everything already
     /// queued flushes to the peer, everything after spills for
     /// re-homing. Called by the node-loss kill script right before it
     /// tears the victim's serving stack down, so the crash lands on a
-    /// clean frame boundary and the fault budget stays exact.
+    /// clean frame boundary and the fault budget stays exact. The
+    /// flush runs on a handle outside the router lock and is bounded
+    /// like an orderly drain — the hook targets a still-live peer, so
+    /// the deadline only fires if that assumption breaks.
     pub fn quiesce_peer(&self, peer: usize) {
-        let inner = self.inner.lock().unwrap();
-        if let Some(link) = &inner.links[peer] {
-            link.quiesce();
+        let handle = {
+            let inner = self.inner.lock().unwrap();
+            inner.links[peer].as_ref().map(|link| link.handle())
+        };
+        if let Some(handle) = handle {
+            let _ = handle.quiesce_for(self.drain_flush_timeout);
         }
     }
 
-    /// Flush every live link and stop its worker (test/CLI teardown).
+    /// Flush every live link (bounded) and stop its worker (test/CLI
+    /// teardown). A link whose peer no longer accepts — e.g. the
+    /// deliberately-kept-alive link of a dead last survivor — is
+    /// abandoned after [`SHUTDOWN_FLUSH_TIMEOUT`] so teardown always
+    /// terminates. Links are claimed under the lock but flushed and
+    /// joined outside it.
     pub fn shutdown(&self) {
-        let mut inner = self.inner.lock().unwrap();
-        for slot in inner.links.iter_mut() {
-            if let Some(link) = slot.take() {
-                link.quiesce();
-                link.shutdown();
+        let links: Vec<Link> = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.links.iter_mut().filter_map(|slot| slot.take()).collect()
+        };
+        for link in links {
+            if !link.quiesce_for(SHUTDOWN_FLUSH_TIMEOUT) {
+                link.mark_dead();
             }
+            link.shutdown();
         }
     }
 }

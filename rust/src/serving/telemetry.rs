@@ -3,6 +3,7 @@
 //! throughput counters. Lock-light: one mutex per histogram, updated
 //! once per query.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Duration;
@@ -317,6 +318,10 @@ pub struct RouterGauges {
     /// Frames lost because a spill buffer overflowed its cap, lifetime
     /// (must stay 0 in every budgeted scenario).
     pub spill_overflow: AtomicU64,
+    /// Stranded frames dropped because failover replay could not place
+    /// them within its deadline — every survivor saturated or gone,
+    /// lifetime (must stay 0 in every budgeted scenario).
+    pub replay_dropped: AtomicU64,
     /// Patients re-homed off a dead or draining peer, lifetime.
     pub patients_rehomed: AtomicU64,
     /// Peers canary-probed back to healthy after death/drain, lifetime.
@@ -333,6 +338,7 @@ impl RouterGauges {
             spilled_total: AtomicU64::new(0),
             spill_replayed: AtomicU64::new(0),
             spill_overflow: AtomicU64::new(0),
+            replay_dropped: AtomicU64::new(0),
             patients_rehomed: AtomicU64::new(0),
             peers_reinstated: AtomicU64::new(0),
         }
@@ -417,6 +423,17 @@ pub struct Telemetry {
     /// clocks / out-of-order arrival — see
     /// [`super::WindowAggregator::stale`]).
     pub frames_stale: AtomicU64,
+    /// Duplicate batch deliveries dedupled on the ingest edge: a
+    /// router retried an `HLMS`-tagged batch this node had already
+    /// admitted (the response was lost, not the request). The frames
+    /// are acknowledged but not re-delivered — exactly-once despite
+    /// at-least-once transport.
+    pub frames_deduped: AtomicU64,
+    /// Last-admitted batch sequence per router link token (the `HLMS`
+    /// dedupe state behind [`Self::admit_batch`]). One entry per link
+    /// that ever forwarded here; tokens are random per link lifetime,
+    /// so the map stays tiny.
+    batch_seen: Mutex<HashMap<u64, u64>>,
     /// Queries evicted because a member could not score them.
     pub failures: AtomicU64,
     /// Idle patient aggregators evicted (least-recently-updated) to
@@ -501,6 +518,24 @@ impl Telemetry {
         self.router.get()
     }
 
+    /// `HLMS` idempotency check: admit a batch iff this (token, seq)
+    /// is newer than the last batch admitted under that token. A link
+    /// worker delivers batches strictly in sequence order and repeats
+    /// a sequence only when the response (not the request) was lost,
+    /// so `seq <= last` is always a retry of work already done —
+    /// callers acknowledge it without re-delivering the frames and
+    /// count it in [`Self::frames_deduped`].
+    pub fn admit_batch(&self, token: u64, seq: u64) -> bool {
+        let mut seen = self.batch_seen.lock().expect("telemetry poisoned");
+        match seen.get(&token) {
+            Some(&last) if seq <= last => false,
+            _ => {
+                seen.insert(token, seq);
+                true
+            }
+        }
+    }
+
     pub fn snapshot(&self) -> TelemetrySnapshot {
         let (models, queue_depths, worker_batches, fill_waits, dead_lanes, retries) =
             match self.executor.get() {
@@ -550,6 +585,9 @@ impl Telemetry {
             router_spill_overflow: rt
                 .map(|g| g.spill_overflow.load(Ordering::Relaxed))
                 .unwrap_or(0),
+            router_replay_dropped: rt
+                .map(|g| g.replay_dropped.load(Ordering::Relaxed))
+                .unwrap_or(0),
             router_patients_rehomed: rt
                 .map(|g| g.patients_rehomed.load(Ordering::Relaxed))
                 .unwrap_or(0),
@@ -567,6 +605,7 @@ impl Telemetry {
             queries: self.queries.load(Ordering::Relaxed),
             model_jobs: self.model_jobs.load(Ordering::Relaxed),
             frames: self.frames.load(Ordering::Relaxed),
+            frames_deduped: self.frames_deduped.load(Ordering::Relaxed),
             frames_dropped: self.frames_dropped.load(Ordering::Relaxed),
             frames_dropped_malformed: self.frames_dropped_malformed.load(Ordering::Relaxed),
             frames_dropped_overcap: self.frames_dropped_overcap.load(Ordering::Relaxed),
@@ -622,6 +661,7 @@ pub struct TelemetrySnapshot {
     pub router_spilled_total: u64,
     pub router_spill_replayed: u64,
     pub router_spill_overflow: u64,
+    pub router_replay_dropped: u64,
     pub router_patients_rehomed: u64,
     pub router_peers_reinstated: u64,
     /// 1 while this node is draining for a rolling upgrade.
@@ -642,6 +682,9 @@ pub struct TelemetrySnapshot {
     pub queries: u64,
     pub model_jobs: u64,
     pub frames: u64,
+    /// Duplicate-batch frames acknowledged without re-delivery (`HLMS`
+    /// dedupe on the ingest edge).
+    pub frames_deduped: u64,
     pub frames_dropped: u64,
     /// Per-cause drop split (malformed + overcap + stale =
     /// `frames_dropped`).
@@ -688,6 +731,7 @@ impl TelemetrySnapshot {
             ("router_spilled_total", Value::Num(self.router_spilled_total as f64)),
             ("router_spill_replayed", Value::Num(self.router_spill_replayed as f64)),
             ("router_spill_overflow", Value::Num(self.router_spill_overflow as f64)),
+            ("router_replay_dropped", Value::Num(self.router_replay_dropped as f64)),
             ("router_patients_rehomed", Value::Num(self.router_patients_rehomed as f64)),
             ("router_peers_reinstated", Value::Num(self.router_peers_reinstated as f64)),
             ("draining", Value::Num(self.draining as f64)),
@@ -701,6 +745,7 @@ impl TelemetrySnapshot {
             ("queries", Value::Num(self.queries as f64)),
             ("model_jobs", Value::Num(self.model_jobs as f64)),
             ("frames", Value::Num(self.frames as f64)),
+            ("frames_deduped", Value::Num(self.frames_deduped as f64)),
             ("frames_dropped", Value::Num(self.frames_dropped as f64)),
             ("frames_dropped_malformed", Value::Num(self.frames_dropped_malformed as f64)),
             ("frames_dropped_overcap", Value::Num(self.frames_dropped_overcap as f64)),
@@ -862,9 +907,27 @@ mod tests {
         assert!(s.contains("router_spilled_total"));
         assert!(s.contains("router_spill_replayed"));
         assert!(s.contains("router_spill_overflow"));
+        assert!(s.contains("router_replay_dropped"));
         assert!(s.contains("router_patients_rehomed"));
         assert!(s.contains("router_peers_reinstated"));
+        assert!(s.contains("frames_deduped"));
         assert!(s.contains("\"draining\""));
+    }
+
+    #[test]
+    fn admit_batch_dedupes_retried_sequences_per_token() {
+        let t = Telemetry::default();
+        assert!(t.admit_batch(100, 0));
+        assert!(t.admit_batch(100, 1));
+        // a retry of an admitted sequence is refused...
+        assert!(!t.admit_batch(100, 1));
+        assert!(!t.admit_batch(100, 0));
+        // ...but delivery resumes at the next sequence
+        assert!(t.admit_batch(100, 2));
+        // tokens are independent (one per link lifetime)
+        assert!(t.admit_batch(200, 0));
+        assert!(!t.admit_batch(200, 0));
+        assert!(t.admit_batch(100, 3));
     }
 
     #[test]
@@ -880,6 +943,7 @@ mod tests {
         g.spill_depth[1].store(7, Ordering::Relaxed);
         g.spilled_total.store(9, Ordering::Relaxed);
         g.spill_replayed.store(9, Ordering::Relaxed);
+        g.replay_dropped.store(2, Ordering::Relaxed);
         g.patients_rehomed.store(4, Ordering::Relaxed);
         g.peers_reinstated.store(1, Ordering::Relaxed);
         t.draining.store(true, Ordering::Relaxed);
@@ -891,6 +955,7 @@ mod tests {
         assert_eq!(snap.router_spilled_total, 9);
         assert_eq!(snap.router_spill_replayed, 9);
         assert_eq!(snap.router_spill_overflow, 0);
+        assert_eq!(snap.router_replay_dropped, 2);
         assert_eq!(snap.router_patients_rehomed, 4);
         assert_eq!(snap.router_peers_reinstated, 1);
         assert_eq!(snap.draining, 1);

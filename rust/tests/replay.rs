@@ -243,6 +243,7 @@ fn fabricated_mismatches_fire_violations() {
         frames_spilled: 0,
         spill_replayed: 0,
         spill_overflow: 0,
+        replay_dropped: 0,
         patients_rehomed: 0,
         peers_reinstated: 0,
         governor_degraded_entered: 0,
@@ -284,6 +285,14 @@ fn fabricated_mismatches_fire_violations() {
     lost_spill.frames_spilled = 5;
     lost_spill.spill_replayed = 4;
     assert!(!check_invariants(&lost_spill).is_empty(), "a lost spilled frame must trip");
+
+    let mut dropped_replay = clean.clone();
+    dropped_replay.route_peers = 2;
+    dropped_replay.replay_dropped = 1;
+    assert!(
+        !check_invariants(&dropped_replay).is_empty(),
+        "a replay-deadline drop must trip"
+    );
 
     let mut wrong_rehome = clean.clone();
     wrong_rehome.route_peers = 2;
