@@ -4,9 +4,18 @@
 //! `--features xla`, the sim otherwise); without built artifacts it
 //! falls back to a toy zoo on the sim backend.
 //!
+//! Emits `<repo root>/BENCH_runtime.json` with a `modelled` stamp: on
+//! the sim backend every duration comes from the analytic cost model,
+//! and the JSON says so rather than passing the numbers off as
+//! measured XLA times.
+//!
 //! `cargo bench --bench runtime`
 
+use std::collections::BTreeMap;
+use std::path::Path;
+
 use holmes::bench::{black_box, Bencher};
+use holmes::json::Value;
 use holmes::runtime::{bench_hlo_file, Engine};
 use holmes::zoo::{testkit, Zoo};
 
@@ -22,6 +31,9 @@ fn main() {
     };
     let engine = Engine::new(&zoo, 1).expect("engine");
     let clip_len = zoo.manifest.clip_len;
+    // sim-backend executions are modelled service times, not device
+    // measurements; stamp that into everything this bench emits
+    let modelled = engine.backend_name() != "pjrt";
 
     // smallest / mid / largest trained model, batch 1 and 8
     let mut servable = zoo.servable_indices();
@@ -44,19 +56,85 @@ fn main() {
     }
 
     // Fig-13 window sweep artifacts (per-length raw latency)
+    let mut sweep_medians: Vec<(usize, f64, bool)> = Vec::new();
     if let Some(sweep) = &zoo.manifest.window_sweep {
         let mut lengths: Vec<usize> =
             sweep.artifacts.keys().filter_map(|k| k.parse().ok()).collect();
         lengths.sort_unstable();
         for len in lengths {
             let path = zoo.root.join(&sweep.artifacts[&len.to_string()]);
-            let times = bench_hlo_file(&path, len, if quick { 3 } else { 10 }).unwrap();
-            let med = times[times.len() / 2];
+            let hlo = bench_hlo_file(&path, len, if quick { 3 } else { 10 }).unwrap();
+            let med = hlo.median();
             println!(
-                "{:<44} window {len:>5} samples: median {:?}",
+                "{:<44} window {len:>5} samples: median {:?}{}",
                 format!("window_sweep/{}", sweep.model_id),
-                med
+                med,
+                if hlo.modelled { "  (modelled)" } else { "" }
             );
+            sweep_medians.push((len, med.as_nanos() as f64, hlo.modelled));
         }
+    }
+
+    write_bench_json(&b, &sweep_medians, quick, engine.backend_name(), modelled);
+}
+
+/// Emit medians to `<repo root>/BENCH_runtime.json`, stamped with
+/// whether the backend modelled the durations.
+fn write_bench_json(
+    b: &Bencher,
+    sweep: &[(usize, f64, bool)],
+    quick: bool,
+    backend: &str,
+    modelled: bool,
+) {
+    let mut benches = BTreeMap::new();
+    for r in b.results() {
+        benches.insert(
+            r.name.clone(),
+            Value::obj(vec![
+                ("median_ns", Value::Num(r.median.as_nanos() as f64)),
+                ("mean_ns", Value::Num(r.mean.as_nanos() as f64)),
+                ("p95_ns", Value::Num(r.p95.as_nanos() as f64)),
+                ("iters", Value::Num(r.iters as f64)),
+                ("modelled", Value::Bool(modelled)),
+            ]),
+        );
+    }
+    for (len, median_ns, m) in sweep {
+        benches.insert(
+            format!("window_sweep/{len}"),
+            Value::obj(vec![
+                ("median_ns", Value::Num(*median_ns)),
+                ("modelled", Value::Bool(*m)),
+            ]),
+        );
+    }
+    let doc = Value::obj(vec![
+        ("bench", Value::Str("runtime".into())),
+        ("backend", Value::Str(backend.into())),
+        ("quick", Value::Bool(quick)),
+        ("modelled", Value::Bool(modelled)),
+        (
+            "note",
+            Value::Str(
+                "raw executable latency per zoo variant/batch plus the Fig-13 \
+                 window sweep; modelled=true means the durations come from the \
+                 sim cost model (build with --features xla for measured times); \
+                 regenerate with `cargo bench --bench runtime -- --quick`"
+                    .into(),
+            ),
+        ),
+        ("benches", Value::Obj(benches)),
+    ]);
+    if modelled {
+        println!("\nnote: durations are MODELLED (sim backend) — not measured XLA times");
+    }
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_runtime.json"))
+        .expect("manifest dir has a parent");
+    match std::fs::write(&path, doc.to_string() + "\n") {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
     }
 }

@@ -97,6 +97,18 @@ pub struct BedsideConfig {
     /// scripted mid-run backend fault, and a ghost admission storm —
     /// the CI smoke for degrade → quarantine → reinstate.
     pub chaos: bool,
+    /// Root directory of this node's content-addressed artifact store
+    /// (`--registry-root`). When set, the node publishes its zoo
+    /// bundles into the store (warm node) or fetches the active
+    /// ensemble's artifacts from `registry_peer` (cold node), serves
+    /// `GET /artifact/<id>` from it, and backs its heartbeat residency
+    /// claims with actual store contents.
+    pub registry_root: Option<String>,
+    /// `host:port` of a warm peer to pull missing artifacts from
+    /// (`--registry`). Only meaningful with `registry_root` set; turns
+    /// this node into a cold peer that must fetch before it may claim
+    /// `"resident":true` on heartbeats.
+    pub registry_peer: Option<String>,
 }
 
 impl Default for BedsideConfig {
@@ -118,6 +130,8 @@ impl Default for BedsideConfig {
             control_tick_ms: 100.0,
             floor_acc: 0.80,
             chaos: false,
+            registry_root: None,
+            registry_peer: None,
         }
     }
 }
@@ -188,6 +202,20 @@ pub struct BedsideReport {
     pub governor_probes: u64,
     pub governor_reinstated: u64,
     pub governor_quarantined: u64,
+    /// Artifact plane at end of run (all zero without `--registry-root`):
+    /// how many artifacts the active ensemble demands, how many the
+    /// local store holds, and the registry traffic both ways.
+    pub artifacts_required: u64,
+    pub artifacts_resident: u64,
+    pub artifacts_fetched: u64,
+    pub artifacts_served: u64,
+    /// Shared compiled-executable cache counters (zero when the active
+    /// backend routes compiles elsewhere). `compiles` staying at the
+    /// distinct `(artifact, batch)` count while workers > 1 is the
+    /// whole point of the process-wide cache.
+    pub exec_cache_hits: u64,
+    pub exec_cache_misses: u64,
+    pub exec_cache_compiles: u64,
 }
 
 /// Run the simulation to completion and report latency + accuracy.
@@ -242,6 +270,7 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
     let engine = if cfg.chaos {
         let times = ServiceTimes::from_macs(zoo, 5e-4, 2e10);
         let backend = SimBackend::with_times(times, CHAOS_TIME_SCALE)
+            .with_catalog(Arc::new(crate::runtime::ArtifactCatalog::from_zoo(zoo)))
             .faulty_when(ensemble.indices()[0], Arc::clone(&fault_flag));
         Engine::with_backend(zoo, cfg.gpus, Arc::new(backend))?
     } else {
@@ -272,6 +301,77 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
             .with_slo(slo),
     )?;
     let telemetry = Arc::clone(pipeline.telemetry());
+
+    // content-addressed artifact plane: a local registry store backs
+    // this node's heartbeat residency claims and its /artifact edge.
+    // A warm node (no --registry peer) publishes its own zoo bundles;
+    // a cold node fetches what the active ensemble demands from the
+    // peer — verified, with bounded retry while the peer boots — and
+    // only then may it advertise "resident":true. Installed BEFORE the
+    // governor spawns so its install path counts residency against the
+    // real store.
+    if let Some(root) = &cfg.registry_root {
+        use crate::registry::{ArtifactBundle, HttpRegistry, LocalFs, Registry};
+        let store = Arc::new(LocalFs::open(root.as_str())?);
+        let catalog = Arc::clone(engine.artifact_catalog());
+        let required = catalog.ids_for_models(ensemble.indices());
+        match &cfg.registry_peer {
+            None => {
+                // warm node: the zoo on disk is the source of truth
+                let mut published = 0usize;
+                for (key, _) in catalog.known_entries() {
+                    store.store(&ArtifactBundle::from_zoo(zoo, key.0, key.1)?)?;
+                    published += 1;
+                }
+                println!("artifact registry {root}: published {published} zoo bundles");
+            }
+            Some(peer) => {
+                let remote = HttpRegistry::new(peer.as_str());
+                for &id in &required {
+                    if store.has(id) {
+                        continue;
+                    }
+                    let mut attempts = 0u32;
+                    loop {
+                        match remote.fetch(id) {
+                            Ok(bundle) => {
+                                store.store(&bundle)?;
+                                telemetry.artifacts_fetched.fetch_add(1, Ordering::Relaxed);
+                                break;
+                            }
+                            Err(e) => {
+                                attempts += 1;
+                                if attempts >= 40 {
+                                    // verification failures and dead
+                                    // peers end the same way: the
+                                    // artifact stays non-resident and
+                                    // the router keeps us quarantined
+                                    telemetry
+                                        .artifacts_verify_failed
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    eprintln!("artifact {id} unavailable from {peer}: {e}");
+                                    break;
+                                }
+                                std::thread::sleep(Duration::from_millis(250));
+                            }
+                        }
+                    }
+                }
+                println!(
+                    "artifact registry {root}: fetched {} bundles from {peer}",
+                    telemetry.artifacts_fetched.load(Ordering::Relaxed)
+                );
+            }
+        }
+        let resident = required.iter().filter(|&&id| store.has(id)).count() as u64;
+        telemetry.artifacts_required.store(required.len() as u64, Ordering::Relaxed);
+        telemetry.artifacts_resident.store(resident, Ordering::Relaxed);
+        telemetry.install_artifact_store(store);
+        println!(
+            "artifact residency: {resident}/{} required by the active ensemble",
+            required.len()
+        );
+    }
 
     // the governor control plane: rides the running pipeline, stopped
     // (dropped) only after the data plane has fully drained below
@@ -542,6 +642,7 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
         .map(|g| g.retries().iter().sum::<u64>())
         .unwrap_or(0);
     let gov = telemetry.governor();
+    let ec = telemetry.exec_cache();
     let report = BedsideReport {
         predictions: pred_rows.len(),
         frames,
@@ -575,6 +676,13 @@ pub fn run_bedside(zoo: &Zoo, cfg: BedsideConfig) -> Result<BedsideReport> {
         governor_probes: gov.map(|g| g.probes.load(ordering)).unwrap_or(0),
         governor_reinstated: gov.map(|g| g.reinstated.load(ordering)).unwrap_or(0),
         governor_quarantined: gov.map(|g| g.quarantined.load(ordering) as u64).unwrap_or(0),
+        artifacts_required: telemetry.artifacts_required.load(ordering),
+        artifacts_resident: telemetry.artifacts_resident.load(ordering),
+        artifacts_fetched: telemetry.artifacts_fetched.load(ordering),
+        artifacts_served: telemetry.artifacts_served.load(ordering),
+        exec_cache_hits: ec.map(|g| g.hits.load(ordering)).unwrap_or(0),
+        exec_cache_misses: ec.map(|g| g.misses.load(ordering)).unwrap_or(0),
+        exec_cache_compiles: ec.map(|g| g.compiles.load(ordering)).unwrap_or(0),
     };
     print_report(&report, &telemetry);
     Ok(report)
@@ -623,6 +731,18 @@ fn print_report(r: &BedsideReport, telemetry: &Telemetry) {
             g.spill_replayed.load(ordering),
             g.spill_overflow.load(ordering),
             g.peers_reinstated.load(ordering)
+        );
+    }
+    if r.artifacts_required > 0 || r.artifacts_fetched > 0 || r.artifacts_served > 0 {
+        println!(
+            "artifacts resident   {:>12}  of {} required (fetched {}, served {})",
+            r.artifacts_resident, r.artifacts_required, r.artifacts_fetched, r.artifacts_served
+        );
+    }
+    if r.exec_cache_compiles > 0 || r.exec_cache_hits > 0 {
+        println!(
+            "exec cache           {:>12}  hits  ({} misses, {} compiles shared by all workers)",
+            r.exec_cache_hits, r.exec_cache_misses, r.exec_cache_compiles
         );
     }
     if telemetry.governor().is_some() {

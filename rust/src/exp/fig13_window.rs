@@ -42,12 +42,13 @@ pub fn run(zoo: &Zoo, out: &Path, quick: bool) -> Result<()> {
         sweep.artifacts.keys().filter_map(|k| k.parse().ok()).collect();
     lengths.sort_unstable();
     let mut rows = Vec::new();
+    let mut modelled = false;
     for len in lengths {
         let rel = &sweep.artifacts[&len.to_string()];
         let path = zoo.root.join(rel);
-        let mut times = bench_hlo_file(&path, len, reps)?;
-        times.sort();
-        let timeit = times[times.len() / 2].as_secs_f64();
+        let bench = bench_hlo_file(&path, len, reps)?;
+        modelled = bench.modelled;
+        let timeit = bench.median().as_secs_f64();
         let ts = timeit + overhead;
         let mu = gpus as f64 / ts;
         let tq = tq_periodic_sources(patients, window_s, mu, ts);
@@ -60,14 +61,17 @@ pub fn run(zoo: &Zoo, out: &Path, quick: bool) -> Result<()> {
             (ts + tq) * 1e3
         );
         rows.push(format!(
-            "{len},{secs:.2},{timeit:.6},{ts:.6},{tq:.6},{:.6}",
+            "{len},{secs:.2},{timeit:.6},{ts:.6},{tq:.6},{:.6},{modelled}",
             ts + tq
         ));
+    }
+    if modelled {
+        println!("  note: timeit column is MODELLED (sim cost model) — rebuild with --features xla for measured times");
     }
     write_csv(
         out,
         "fig13.csv",
-        "window_samples,window_s,timeit_s,ts_s,tq_s,ts_plus_tq_s",
+        "window_samples,window_s,timeit_s,ts_s,tq_s,ts_plus_tq_s,modelled",
         &rows,
     )?;
     Ok(())

@@ -58,6 +58,15 @@ pub struct RouteConfig {
     pub kill_at: f64,
     /// Smoke: crash → beds-re-homed recovery budget, milliseconds.
     pub slo_ms: f64,
+    /// Smoke: cold-peer artifact admission variant (`--cold-peer`).
+    /// The bed-0 owner becomes the *warm* peer (publishes its zoo
+    /// bundles into a registry store); every other peer boots cold —
+    /// an empty store plus `--registry <warm>` — and must fetch the
+    /// active ensemble's artifacts, report `"resident":true`, and be
+    /// admitted by the prober before the cohort streams. The warm peer
+    /// is then killed, so the re-homed beds land on peers that proved
+    /// artifact residency first.
+    pub cold_peer: bool,
 }
 
 impl Default for RouteConfig {
@@ -73,6 +82,7 @@ impl Default for RouteConfig {
             seed: 7,
             kill_at: 0.0,
             slo_ms: 3000.0,
+            cold_peer: false,
         }
     }
 }
@@ -130,43 +140,69 @@ pub fn run_route(cfg: RouteConfig) -> Result<()> {
             .collect::<Result<_>>()?
     };
 
+    // cold-peer variant: the bed-0 owner (the smoke's later victim) is
+    // the warm peer; its registry store seeds every other, cold, peer.
+    // Ring::new is deterministic in the peer count, so this matches the
+    // `victim` the smoke computes below.
+    let warm_idx = Ring::new(peer_addrs.len()).route(0);
+    let registry_scratch = if smoke && cfg.cold_peer {
+        let dir = std::env::temp_dir()
+            .join(format!("holmes-route-registry-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        Some(dir)
+    } else {
+        None
+    };
+
     let mut children: Vec<Child> = Vec::new();
     if smoke {
         let exe = std::env::current_exe()?;
         // children outlive the cohort; the smoke retires them itself
         let child_duration = cfg.duration_s + 10.0 * cfg.speedup;
-        for addr in &peer_addrs {
-            children.push(
-                Command::new(&exe)
-                    .args([
-                        "serve",
-                        "--http",
-                        &addr.to_string(),
-                        "--patients",
-                        "0",
-                        "--duration",
-                        &format!("{child_duration}"),
-                        "--speedup",
-                        &format!("{}", cfg.speedup),
-                        "--workers",
-                        "2",
-                    ])
-                    .spawn()?,
-            );
+        for (i, addr) in peer_addrs.iter().enumerate() {
+            let mut args = vec![
+                "serve".to_string(),
+                "--http".to_string(),
+                addr.to_string(),
+                "--patients".to_string(),
+                "0".to_string(),
+                "--duration".to_string(),
+                format!("{child_duration}"),
+                "--speedup".to_string(),
+                format!("{}", cfg.speedup),
+                "--workers".to_string(),
+                "2".to_string(),
+            ];
+            if let Some(root) = &registry_scratch {
+                args.push("--registry-root".to_string());
+                args.push(root.join(format!("peer-{i}")).display().to_string());
+                if i != warm_idx {
+                    // cold peer: empty store, must pull from the warm one
+                    args.push("--registry".to_string());
+                    args.push(peer_addrs[warm_idx].to_string());
+                }
+            }
+            children.push(Command::new(&exe).args(&args).spawn()?);
         }
-        // wait until every child's ingest edge answers a heartbeat
+        // wait until every child's ingest edge answers a heartbeat;
+        // NotReady (up, still fetching artifacts) keeps waiting — the
+        // edge only answers Ok once the peer's store is resident
         let deadline = Instant::now() + Duration::from_secs(60);
         for (i, &addr) in peer_addrs.iter().enumerate() {
             loop {
                 match probe_once(addr, 0, Duration::from_millis(200), Duration::from_millis(500))
                 {
                     ProbeOutcome::Ok | ProbeOutcome::Draining => break,
-                    ProbeOutcome::Fail if Instant::now() < deadline => {
+                    ProbeOutcome::Fail | ProbeOutcome::NotReady
+                        if Instant::now() < deadline =>
+                    {
                         std::thread::sleep(Duration::from_millis(50));
                     }
-                    ProbeOutcome::Fail => {
+                    outcome => {
                         reap(&mut children);
-                        return Err(Error::serving(format!("peer {i} ({addr}) never came up")));
+                        return Err(Error::serving(format!(
+                            "peer {i} ({addr}) never became servable (last probe: {outcome:?})"
+                        )));
                     }
                 }
             }
@@ -242,6 +278,61 @@ pub fn run_route(cfg: RouteConfig) -> Result<()> {
         "route smoke: {} beds over {} peers, {} sim s (speedup {}×), victim peer {} at t={}",
         cfg.patients, peer_addrs.len(), duration, cfg.speedup, victim, cfg.kill_at
     );
+
+    // ── cold-peer admission gates: fetch → resident → admitted ──
+    if cfg.cold_peer {
+        debug_assert_eq!(victim, warm_idx);
+        for (i, &addr) in peer_addrs.iter().enumerate() {
+            if i == warm_idx {
+                continue;
+            }
+            match peer_stats(addr) {
+                Ok(stats) => {
+                    let n = |k: &str| stats.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+                    if n("artifacts_required") == 0 {
+                        failures.push(format!("cold peer {i} reports no artifact demand"));
+                    }
+                    if n("artifacts_fetched") == 0 {
+                        failures
+                            .push(format!("cold peer {i} fetched nothing from the warm peer"));
+                    }
+                    if n("artifacts_resident") < n("artifacts_required") {
+                        failures.push(format!(
+                            "cold peer {i} not resident: {}/{} artifacts",
+                            n("artifacts_resident"),
+                            n("artifacts_required")
+                        ));
+                    }
+                }
+                Err(e) => failures.push(format!("cold peer {i} /stats unreachable: {e}")),
+            }
+        }
+        // the prober must classify every peer healthy (not NotReady →
+        // draining) before any bed is routed at it
+        let g = router.gauges();
+        let admit_deadline = Instant::now() + Duration::from_secs(10);
+        while g.peer_states().iter().any(|&s| s != 0) && Instant::now() < admit_deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let states = g.peer_states();
+        if states.iter().any(|&s| s != 0) {
+            failures
+                .push(format!("peers not all admitted before the cohort: states {states:?}"));
+        }
+        if !failures.is_empty() {
+            reap(&mut children);
+            if let Some(dir) = &registry_scratch {
+                let _ = std::fs::remove_dir_all(dir);
+            }
+            for f in &failures {
+                eprintln!("ROUTE SMOKE FAIL: {f}");
+            }
+            return Err(Error::serving(format!("{} route smoke violations", failures.len())));
+        }
+        println!(
+            "route smoke: cold peers fetched from warm peer {warm_idx}, resident, admitted"
+        );
+    }
 
     let sink = router.sink();
     let synth = SynthConfig::default();
@@ -413,6 +504,9 @@ pub fn run_route(cfg: RouteConfig) -> Result<()> {
         }
     }
 
+    if let Some(dir) = &registry_scratch {
+        let _ = std::fs::remove_dir_all(dir);
+    }
     if failures.is_empty() {
         println!("ROUTE SMOKE PASS");
         Ok(())

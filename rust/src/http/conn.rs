@@ -223,6 +223,11 @@ pub enum Route {
     /// upgrade (heartbeat responses advertise it; the router re-homes
     /// this peer's patients with zero frame loss).
     Drain,
+    /// `GET /artifact/<64-hex id>` — serve a content-addressed model
+    /// bundle from this node's local registry store (the peer-to-peer
+    /// distribution edge a cold node fetches its models over). The id
+    /// is parsed in place; a malformed id is `Unknown` (404).
+    Artifact(crate::registry::ArtifactId),
     Stats,
     Healthz,
     Unknown,
@@ -267,6 +272,10 @@ pub fn parse_head(head: &[u8]) -> HeadInfo {
         (b"POST", b"/ingest") => Route::IngestJson,
         (b"POST", b"/ingest.bin") => Route::IngestBin,
         (b"POST", b"/drain") => Route::Drain,
+        (b"GET", p) if p.starts_with(b"/artifact/") => std::str::from_utf8(&p[10..])
+            .ok()
+            .and_then(crate::registry::ArtifactId::from_hex)
+            .map_or(Route::Unknown, Route::Artifact),
         (b"GET", b"/stats") => Route::Stats,
         (b"GET", b"/healthz") => Route::Healthz,
         _ => Route::Unknown,
@@ -613,14 +622,12 @@ impl HttpConn {
                     }
                     match err {
                         None if heartbeat => {
-                            // heartbeat responses report the drain flag;
-                            // probes are off the hot path, so the
-                            // format! allocation is fine here (the pure
-                            // frame path below stays allocation-free)
-                            let draining = telemetry.draining.load(Ordering::Relaxed);
-                            let body = format!(
-                                "{{\"ok\":true,\"frames\":{frames},\"draining\":{draining}}}"
-                            );
+                            // heartbeat responses report the drain flag
+                            // and artifact residency; probes are off the
+                            // hot path, so the format! allocation is
+                            // fine here (the pure frame path below
+                            // stays allocation-free)
+                            let body = super::heartbeat_body(frames, telemetry);
                             self.respond("200 OK", body.as_bytes(), keep_alive);
                         }
                         None => {
@@ -656,7 +663,7 @@ impl HttpConn {
                     let (status, payload) =
                         route_parsed(route, &self.recv.data()[..remaining], sink, telemetry);
                     self.recv.consume(remaining);
-                    self.respond(status, payload.as_bytes(), keep_alive);
+                    self.respond(status, &payload, keep_alive);
                     progressed = true;
                 }
                 Phase::Drain { mut remaining } => {
@@ -792,6 +799,24 @@ mod tests {
     }
 
     #[test]
+    fn parse_head_routes_artifact_ids() {
+        let id = crate::registry::ArtifactId::digest_of(b"some bundle");
+        let req = format!("GET /artifact/{id} HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert_eq!(parse_head(req.as_bytes()).route, Route::Artifact(id));
+        // uppercase hex is the same id
+        let req = format!("GET /artifact/{} HTTP/1.1\r\n\r\n", id.to_hex().to_uppercase());
+        assert_eq!(parse_head(req.as_bytes()).route, Route::Artifact(id));
+        // short, long, and non-hex ids all 404 as Unknown
+        for bad in ["/artifact/abc", "/artifact/", &format!("/artifact/{id}ff")] {
+            let req = format!("GET {bad} HTTP/1.1\r\n\r\n");
+            assert_eq!(parse_head(req.as_bytes()).route, Route::Unknown, "{bad}");
+        }
+        // POST on the artifact path is not a route (the store is pull-only)
+        let req = format!("POST /artifact/{id} HTTP/1.1\r\n\r\n");
+        assert_eq!(parse_head(req.as_bytes()).route, Route::Unknown);
+    }
+
+    #[test]
     fn streaming_bin_body_admits_frames_at_any_fragmentation() {
         let (sink, rx) = sink();
         let tel = Telemetry::default();
@@ -917,6 +942,9 @@ mod tests {
         conn.advance(&sink, &tel);
         let resp = drain_out(&mut conn);
         assert!(resp.contains("\"draining\":false"), "{resp}");
+        // no registry in play: zero artifacts, trivially resident
+        assert!(resp.contains("\"artifacts\":0"), "{resp}");
+        assert!(resp.contains("\"resident\":true"), "{resp}");
         assert!(rx.try_recv().is_err(), "a heartbeat admits no frames");
         // POST /drain flips the flag for subsequent heartbeats
         conn.recv_mut().extend(
@@ -929,6 +957,20 @@ mod tests {
         conn.advance(&sink, &tel);
         let resp = drain_out(&mut conn);
         assert!(resp.contains("\"draining\":true"), "{resp}");
+        // a node missing required artifacts advertises not-resident
+        tel.artifacts_required.store(3, Ordering::Relaxed);
+        tel.artifacts_resident.store(1, Ordering::Relaxed);
+        conn.recv_mut().extend(&req);
+        conn.advance(&sink, &tel);
+        let resp = drain_out(&mut conn);
+        assert!(resp.contains("\"artifacts\":1"), "{resp}");
+        assert!(resp.contains("\"resident\":false"), "{resp}");
+        // ...and flips back once the full set is resident
+        tel.artifacts_resident.store(3, Ordering::Relaxed);
+        conn.recv_mut().extend(&req);
+        conn.advance(&sink, &tel);
+        let resp = drain_out(&mut conn);
+        assert!(resp.contains("\"resident\":true"), "{resp}");
     }
 
     #[test]

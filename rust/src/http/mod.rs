@@ -15,8 +15,20 @@
 //! * `POST /drain`       — operator-initiated rolling-upgrade drain:
 //!   sets the `draining` flag so heartbeat responses advertise it and
 //!   the router re-homes this peer's patients before it exits.
+//! * `GET /artifact/<id>` — content-addressed model bundle by 64-hex
+//!   [`crate::registry::ArtifactId`], served from the node's local
+//!   registry store (404 when no store is installed or the id is
+//!   absent). This is the peer-to-peer distribution edge: a cold node
+//!   points an [`crate::registry::HttpRegistry`] here and pulls every
+//!   bundle the active member set requires, digest-verifying each one.
 //! * `GET /stats`        — telemetry snapshot (JSON).
 //! * `GET /healthz`      — liveness.
+//!
+//! Heartbeat (`HLMH`) responses carry
+//! `{"ok":true,"frames":N,"draining":b,"artifacts":A,"resident":r}`:
+//! `A` is how many required artifacts the node holds and `r` whether
+//! the full required set is resident — the router refuses to (re)admit
+//! a peer that answers `"resident":false`.
 //!
 //! ## The router tier above the edge
 //!
@@ -288,7 +300,7 @@ pub fn serve_legacy_with<S: FrameSink>(
                     if write_response(
                         &mut stream,
                         "503 Service Unavailable",
-                        "{\"error\":\"connection limit reached\"}",
+                        b"{\"error\":\"connection limit reached\"}",
                         false,
                     )
                     .is_ok()
@@ -379,7 +391,7 @@ fn handle_connection<S: FrameSink>(
             write_response(
                 &mut stream,
                 "400 Bad Request",
-                "{\"error\":\"unsupported or malformed body framing\"}",
+                b"{\"error\":\"unsupported or malformed body framing\"}",
                 false,
             )?;
             return Ok(());
@@ -391,7 +403,7 @@ fn handle_connection<S: FrameSink>(
             write_response(
                 &mut stream,
                 "413 Payload Too Large",
-                &format!("{{\"error\":\"body exceeds {MAX_BODY_BYTES} bytes\"}}"),
+                format!("{{\"error\":\"body exceeds {MAX_BODY_BYTES} bytes\"}}").as_bytes(),
                 false,
             )?;
             // drain (bounded) what the client already sent: closing
@@ -432,7 +444,7 @@ fn handle_connection<S: FrameSink>(
 fn write_response(
     stream: &mut TcpStream,
     status: &str,
-    payload: &str,
+    payload: &[u8],
     keep_alive: bool,
 ) -> Result<()> {
     let connection = if keep_alive { "keep-alive" } else { "close" };
@@ -441,8 +453,24 @@ fn write_response(
         payload.len()
     );
     stream.write_all(response.as_bytes())?;
-    stream.write_all(payload.as_bytes())?;
+    stream.write_all(payload)?;
     Ok(())
+}
+
+/// The `HLMH` heartbeat response body: admitted frame count, drain
+/// flag, and artifact residency (`artifacts` = required bundles held
+/// locally, `resident` = the full required set is present; a node with
+/// no required set — no registry in play — is trivially resident).
+/// Shared by both edges so the prober parses one format.
+pub(crate) fn heartbeat_body(frames: u64, telemetry: &Telemetry) -> String {
+    let draining = telemetry.draining.load(Ordering::Relaxed);
+    let required = telemetry.artifacts_required.load(Ordering::Relaxed);
+    let resident_n = telemetry.artifacts_resident.load(Ordering::Relaxed);
+    let resident = resident_n >= required;
+    format!(
+        "{{\"ok\":true,\"frames\":{frames},\"draining\":{draining},\
+         \"artifacts\":{resident_n},\"resident\":{resident}}}"
+    )
 }
 
 /// Dispatch one fully-buffered request body on a parsed route. Shared
@@ -454,7 +482,7 @@ pub(crate) fn route_parsed<S: FrameSink>(
     body: &[u8],
     frame_tx: &S,
     telemetry: &Telemetry,
-) -> (&'static str, String) {
+) -> (&'static str, Vec<u8>) {
     match route {
         conn::Route::IngestJson => {
             let parsed = std::str::from_utf8(body)
@@ -464,12 +492,15 @@ pub(crate) fn route_parsed<S: FrameSink>(
             match parsed {
                 Ok(frame) => {
                     if frame_tx.deliver(frame).is_ok() {
-                        ("200 OK", "{\"ok\":true}".to_string())
+                        ("200 OK", b"{\"ok\":true}".to_vec())
                     } else {
-                        ("503 Service Unavailable", "{\"error\":\"pipeline closed\"}".to_string())
+                        (
+                            "503 Service Unavailable",
+                            b"{\"error\":\"pipeline closed\"}".to_vec(),
+                        )
                     }
                 }
-                Err(e) => ("400 Bad Request", format!("{{\"error\":\"{e}\"}}")),
+                Err(e) => ("400 Bad Request", format!("{{\"error\":\"{e}\"}}").into_bytes()),
             }
         }
         conn::Route::IngestBin => match decode_envelope_body(body, telemetry) {
@@ -478,7 +509,7 @@ pub(crate) fn route_parsed<S: FrameSink>(
                     if frame_tx.deliver(frame).is_err() {
                         return (
                             "503 Service Unavailable",
-                            "{\"error\":\"pipeline closed\"}".to_string(),
+                            b"{\"error\":\"pipeline closed\"}".to_vec(),
                         );
                     }
                 }
@@ -486,24 +517,40 @@ pub(crate) fn route_parsed<S: FrameSink>(
                 // must be acknowledged exactly like its first delivery
                 // or the sender would count it against a lost response
                 if heartbeat {
-                    let draining = telemetry.draining.load(Ordering::Relaxed);
-                    (
-                        "200 OK",
-                        format!("{{\"ok\":true,\"frames\":{total},\"draining\":{draining}}}"),
-                    )
+                    ("200 OK", heartbeat_body(total as u64, telemetry).into_bytes())
                 } else {
-                    ("200 OK", format!("{{\"ok\":true,\"frames\":{total}}}"))
+                    ("200 OK", format!("{{\"ok\":true,\"frames\":{total}}}").into_bytes())
                 }
             }
-            Err(e) => ("400 Bad Request", format!("{{\"error\":\"{e}\"}}")),
+            Err(e) => ("400 Bad Request", format!("{{\"error\":\"{e}\"}}").into_bytes()),
         },
         conn::Route::Drain => {
             telemetry.draining.store(true, Ordering::SeqCst);
-            ("200 OK", "{\"ok\":true,\"draining\":true}".to_string())
+            ("200 OK", b"{\"ok\":true,\"draining\":true}".to_vec())
         }
-        conn::Route::Stats => ("200 OK", telemetry.snapshot().to_json().to_string()),
-        conn::Route::Healthz => ("200 OK", "{\"status\":\"up\"}".to_string()),
-        conn::Route::Unknown => ("404 Not Found", "{\"error\":\"no such route\"}".to_string()),
+        conn::Route::Artifact(id) => match telemetry.artifact_store() {
+            Some(store) => match store.fetch_blob(id) {
+                Ok(blob) => {
+                    telemetry.artifacts_served.fetch_add(1, Ordering::Relaxed);
+                    ("200 OK", blob)
+                }
+                Err(_) => {
+                    // present-but-unreadable means the blob failed its
+                    // digest check — corruption that must be counted,
+                    // never served
+                    if store.blob_path(id).exists() {
+                        telemetry.artifacts_verify_failed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    ("404 Not Found", b"{\"error\":\"no such artifact\"}".to_vec())
+                }
+            },
+            None => ("404 Not Found", b"{\"error\":\"no artifact store on this node\"}".to_vec()),
+        },
+        conn::Route::Stats => {
+            ("200 OK", telemetry.snapshot().to_json().to_string().into_bytes())
+        }
+        conn::Route::Healthz => ("200 OK", b"{\"status\":\"up\"}".to_vec()),
+        conn::Route::Unknown => ("404 Not Found", b"{\"error\":\"no such route\"}".to_vec()),
     }
 }
 
@@ -1233,5 +1280,44 @@ mod tests {
     fn find_subslice_works() {
         assert_eq!(find_subslice(b"abc\r\n\r\n", b"\r\n\r\n"), Some(3));
         assert_eq!(find_subslice(b"abc", b"xyz"), None);
+    }
+
+    #[test]
+    fn artifact_endpoint_serves_verified_bundles() {
+        use crate::registry::{ArtifactBundle, HttpRegistry, LocalFs, Registry};
+        let dir =
+            std::env::temp_dir().join(format!("holmes-artifact-edge-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(LocalFs::open(&dir).unwrap());
+        let bundle =
+            ArtifactBundle { input_len: 2500, macs: 9_000_000, hlo: b"HloModule edge_test\n".to_vec() };
+        let id = store.store(&bundle).unwrap();
+
+        let (tx, _rx) = mpsc::sync_channel(16);
+        let tel = Arc::new(Telemetry::default());
+        tel.install_artifact_store(Arc::clone(&store));
+        let server =
+            serve("127.0.0.1:0", ShardSender::from_senders(vec![tx]), Arc::clone(&tel)).unwrap();
+
+        // the cold-node client pulls and digest-verifies the bundle
+        let reg = HttpRegistry::new(server.addr.to_string());
+        assert!(reg.has(id));
+        assert_eq!(reg.fetch(id).unwrap(), bundle);
+        assert!(tel.artifacts_served.load(Ordering::Relaxed) >= 1);
+
+        // an id the store doesn't hold is a 404, not a hang
+        let ghost = crate::registry::ArtifactId::digest_of(b"never stored");
+        assert!(reg.fetch(ghost).is_err());
+        assert!(!reg.has(ghost));
+
+        // corrupt the blob on disk: the edge must refuse to serve it
+        let path = store.blob_path(id);
+        let mut blob = std::fs::read(&path).unwrap();
+        let last = blob.len() - 1;
+        blob[last] ^= 0x01;
+        std::fs::write(&path, &blob).unwrap();
+        assert!(reg.fetch(id).is_err(), "corrupt blob must never be served");
+        assert_eq!(tel.artifacts_verify_failed.load(Ordering::Relaxed), 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

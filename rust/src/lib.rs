@@ -62,6 +62,7 @@ pub mod metrics;
 pub mod mlcpu;
 pub mod netcalc;
 pub mod profiler;
+pub mod registry;
 pub mod rng;
 pub mod router;
 pub mod runtime;

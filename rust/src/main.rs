@@ -52,6 +52,13 @@ COMMANDS:
       --floor-acc AUC        degraded-mode accuracy floor    [0.8]
       --chaos                chaos harness: slowed backend, scripted
                              mid-run lane fault + ghost admission storm
+      --registry-root DIR    content-addressed artifact store: publish this
+                             node's zoo bundles, serve GET /artifact/<id>,
+                             and back heartbeat residency claims with it
+      --registry HOST:PORT   cold-start from a warm peer: fetch the active
+                             ensemble's artifacts (verified by digest) from
+                             its /artifact endpoint into --registry-root
+                             before claiming \"resident\":true on heartbeats
                            serve drains gracefully on SIGTERM/ctrl-c: stops
                            accepting, resolves in-flight queries, advertises
                            \"draining\" on heartbeats, flushes the final
@@ -75,6 +82,11 @@ COMMANDS:
       --kill-at SECS         smoke: SIGKILL the bed-0 owner at this
                              simulated second (0 = healthy run)
       --slo-ms MS            smoke crash→re-home budget   [3000]
+      --cold-peer            smoke variant: the bed-0 owner becomes a
+                             warm registry peer; the others boot cold,
+                             must fetch its artifacts + prove residency
+                             to be admitted, then inherit its beds when
+                             it is killed
   replay                   deterministic adversarial scenario replay; exits
                            nonzero when any scenario invariant is breached
                            (falls back to the toy zoo without artifacts)
@@ -126,7 +138,7 @@ fn run(argv: &[String]) -> Result<()> {
             "artifacts", "budget", "gpus", "patients", "seed", "window", "speedup", "duration",
             "http", "edge-threads", "models", "out", "shards", "workers", "slo-ms",
             "control-tick-ms", "floor-acc", "scenario", "peers", "route-peers", "spawn-peers",
-            "kill-at",
+            "kill-at", "registry", "registry-root",
         ],
     )?;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -222,6 +234,8 @@ fn run(argv: &[String]) -> Result<()> {
                     control_tick_ms: args.f64_or("control-tick-ms", 100.0)?,
                     floor_acc: args.f64_or("floor-acc", 0.8)?,
                     chaos: args.flag("chaos"),
+                    registry_root: args.get("registry-root").map(String::from),
+                    registry_peer: args.get("registry").map(String::from),
                 },
             )?;
             // a drained serve exiting 0 is the router smoke's proof
@@ -252,6 +266,7 @@ fn run(argv: &[String]) -> Result<()> {
                 seed: args.u64_or("seed", 7)?,
                 kill_at: args.f64_or("kill-at", 0.0)?,
                 slo_ms: args.f64_or("slo-ms", 3000.0)?,
+                cold_peer: args.flag("cold-peer"),
             })?;
         }
         Some("replay") => {

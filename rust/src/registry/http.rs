@@ -1,0 +1,105 @@
+//! Registry backend that pulls blobs over the serving edge.
+//!
+//! Any peer with a [`LocalFs`](super::LocalFs) store installed on its
+//! telemetry answers `GET /artifact/<hex id>` with the raw blob bytes
+//! (see `http::route_parsed`). This client fetches over a short-lived
+//! `Connection: close` request — artifact pulls are rare (admission
+//! time only), so connection reuse buys nothing and close-delimited
+//! bodies keep the client trivial. Every fetch re-digests the body, so
+//! a lying or truncating peer yields an error, never a served model.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use super::{ArtifactBundle, ArtifactId, Registry};
+use crate::{Error, Result};
+
+/// Pull-only registry client for one remote peer's edge address.
+pub struct HttpRegistry {
+    /// Peer ingest-edge address, e.g. `127.0.0.1:7272`.
+    addr: String,
+    connect_timeout: Duration,
+    io_timeout: Duration,
+}
+
+impl HttpRegistry {
+    pub fn new(addr: impl Into<String>) -> HttpRegistry {
+        HttpRegistry {
+            addr: addr.into(),
+            connect_timeout: Duration::from_millis(500),
+            io_timeout: Duration::from_secs(5),
+        }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// One GET round trip; returns `(status, body)`.
+    fn get(&self, path: &str) -> Result<(u16, Vec<u8>)> {
+        let sock_addr = self
+            .addr
+            .parse()
+            .map_err(|e| Error::config(format!("registry peer '{}': {e}", self.addr)))?;
+        let mut stream = TcpStream::connect_timeout(&sock_addr, self.connect_timeout)
+            .map_err(|e| Error::artifact(format!("registry {}: connect: {e}", self.addr)))?;
+        stream.set_read_timeout(Some(self.io_timeout))?;
+        stream.set_write_timeout(Some(self.io_timeout))?;
+        let req = format!(
+            "GET {path} HTTP/1.1\r\nHost: {}\r\nConnection: close\r\n\r\n",
+            self.addr
+        );
+        stream
+            .write_all(req.as_bytes())
+            .map_err(|e| Error::artifact(format!("registry {}: send: {e}", self.addr)))?;
+        let mut resp = Vec::new();
+        stream
+            .read_to_end(&mut resp)
+            .map_err(|e| Error::artifact(format!("registry {}: recv: {e}", self.addr)))?;
+        // "HTTP/1.1 NNN ..." — status code at bytes 9..12
+        if resp.len() < 12 || !resp.starts_with(b"HTTP/1.") {
+            return Err(Error::artifact(format!(
+                "registry {}: malformed response ({} bytes)",
+                self.addr,
+                resp.len()
+            )));
+        }
+        let status = std::str::from_utf8(&resp[9..12])
+            .ok()
+            .and_then(|s| s.parse::<u16>().ok())
+            .ok_or_else(|| Error::artifact(format!("registry {}: bad status line", self.addr)))?;
+        let body_at = resp
+            .windows(4)
+            .position(|w| w == b"\r\n\r\n")
+            .map(|p| p + 4)
+            .unwrap_or(resp.len());
+        Ok((status, resp[body_at..].to_vec()))
+    }
+}
+
+impl Registry for HttpRegistry {
+    fn has(&self, id: ArtifactId) -> bool {
+        self.fetch(id).is_ok()
+    }
+
+    fn fetch(&self, id: ArtifactId) -> Result<ArtifactBundle> {
+        let (status, body) = self.get(&format!("/artifact/{}", id.to_hex()))?;
+        if status != 200 {
+            return Err(Error::artifact(format!(
+                "registry {}: artifact {id} → HTTP {status}",
+                self.addr
+            )));
+        }
+        // decode_verified re-digests: transport corruption or a wrong
+        // blob from the peer fails here and is never installed
+        ArtifactBundle::decode_verified(&body, id)
+    }
+
+    fn store(&self, _bundle: &ArtifactBundle) -> Result<ArtifactId> {
+        Err(Error::artifact(format!(
+            "registry {} is pull-only (no artifact upload endpoint)",
+            self.addr
+        )))
+    }
+}

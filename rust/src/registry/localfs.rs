@@ -1,0 +1,188 @@
+//! On-disk content-addressed artifact store.
+//!
+//! Blobs live at `<root>/<hex[0..2]>/<hex>` (fan-out over the first digest
+//! byte keeps directories small). Writes go to a temp file under
+//! `<root>/tmp/` and are renamed into place, so a concurrent reader —
+//! including another process serving `GET /artifact/<id>` off the same
+//! store — never observes a partial blob: the path either doesn't exist
+//! yet or holds the complete, digest-checkable content.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::{ArtifactBundle, ArtifactId, Registry};
+use crate::{Error, Result};
+
+/// Monotonic discriminator for temp-file names within this process.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Content-addressed store rooted at one directory.
+pub struct LocalFs {
+    root: PathBuf,
+}
+
+impl LocalFs {
+    /// Open (creating directories as needed) a store at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> Result<LocalFs> {
+        let root = root.into();
+        fs::create_dir_all(root.join("tmp"))?;
+        Ok(LocalFs { root })
+    }
+
+    /// Final resting path of a blob.
+    pub fn blob_path(&self, id: ArtifactId) -> PathBuf {
+        let hex = id.to_hex();
+        self.root.join(&hex[..2]).join(&hex)
+    }
+
+    fn tmp_path(&self, id: ArtifactId) -> PathBuf {
+        let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+        let name = format!("{}.{}.{}", &id.to_hex()[..16], std::process::id(), seq);
+        self.root.join("tmp").join(name)
+    }
+
+    /// Ids of every blob currently resident (directory scan; used by the
+    /// serve wiring to seed residency counts after a restart).
+    pub fn list(&self) -> Vec<ArtifactId> {
+        let mut out = Vec::new();
+        let Ok(fans) = fs::read_dir(&self.root) else { return out };
+        for fan in fans.flatten() {
+            if fan.file_name() == "tmp" || !fan.path().is_dir() {
+                continue;
+            }
+            let Ok(entries) = fs::read_dir(fan.path()) else { continue };
+            for e in entries.flatten() {
+                if let Some(id) = e.file_name().to_str().and_then(ArtifactId::from_hex) {
+                    out.push(id);
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+
+    /// Raw verified blob bytes (what `GET /artifact/<id>` serves). The
+    /// digest check runs here too: a bit-rotted file is an error, not a
+    /// response body.
+    pub fn fetch_blob(&self, id: ArtifactId) -> Result<Vec<u8>> {
+        let path = self.blob_path(id);
+        let blob = fs::read(&path).map_err(|e| {
+            Error::artifact(format!("artifact {id} not in store {}: {e}", self.root.display()))
+        })?;
+        let got = ArtifactId(super::sha256::digest(&blob));
+        if got != id {
+            return Err(Error::artifact(format!(
+                "store corruption at {}: blob digests to {got}, want {id}",
+                path.display()
+            )));
+        }
+        Ok(blob)
+    }
+
+    /// Store pre-encoded blob bytes under the id they digest to.
+    pub fn store_blob(&self, blob: &[u8]) -> Result<ArtifactId> {
+        let id = ArtifactId(super::sha256::digest(blob));
+        let dst = self.blob_path(id);
+        if dst.exists() {
+            return Ok(id); // content-addressed: resident means identical
+        }
+        if let Some(parent) = dst.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let tmp = self.tmp_path(id);
+        fs::write(&tmp, blob)?;
+        // atomic on POSIX: readers see either nothing or the whole blob
+        fs::rename(&tmp, &dst)?;
+        Ok(id)
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+}
+
+impl Registry for LocalFs {
+    fn has(&self, id: ArtifactId) -> bool {
+        self.blob_path(id).exists()
+    }
+
+    fn fetch(&self, id: ArtifactId) -> Result<ArtifactBundle> {
+        let blob = self.fetch_blob(id)?;
+        ArtifactBundle::decode_verified(&blob, id)
+    }
+
+    fn store(&self, bundle: &ArtifactBundle) -> Result<ArtifactId> {
+        self.store_blob(&bundle.encode())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "holmes-registry-{tag}-{}-{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn bundle(seed: u8) -> ArtifactBundle {
+        ArtifactBundle {
+            input_len: 2500,
+            macs: 7_000_000 + seed as u64,
+            hlo: vec![seed; 1024],
+        }
+    }
+
+    #[test]
+    fn store_fetch_round_trip() {
+        let dir = scratch("roundtrip");
+        let store = LocalFs::open(&dir).unwrap();
+        for seed in 0..5u8 {
+            let b = bundle(seed);
+            let id = store.store(&b).unwrap();
+            assert_eq!(id, b.id());
+            assert!(store.has(id));
+            let back = store.fetch(id).unwrap();
+            assert_eq!(back, b, "seed {seed}: fetched bundle must be byte-identical");
+        }
+        assert_eq!(store.list().len(), 5);
+        // idempotent re-store
+        let b = bundle(0);
+        assert_eq!(store.store(&b).unwrap(), b.id());
+        assert_eq!(store.list().len(), 5);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_blob_is_never_served() {
+        let dir = scratch("corrupt");
+        let store = LocalFs::open(&dir).unwrap();
+        let b = bundle(9);
+        let id = store.store(&b).unwrap();
+        // flip a byte in place, simulating disk rot / tampering
+        let path = store.blob_path(id);
+        let mut blob = fs::read(&path).unwrap();
+        let last = blob.len() - 1;
+        blob[last] ^= 0x01;
+        fs::write(&path, &blob).unwrap();
+        assert!(store.fetch(id).is_err(), "decoded fetch must fail digest check");
+        assert!(store.fetch_blob(id).is_err(), "raw fetch must fail digest check");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_blob_is_an_error() {
+        let dir = scratch("missing");
+        let store = LocalFs::open(&dir).unwrap();
+        let ghost = bundle(42).id();
+        assert!(!store.has(ghost));
+        assert!(store.fetch(ghost).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,328 @@
+//! Content-addressed model artifact registry.
+//!
+//! One identity from disk to device to peer: a model artifact is the unit
+//! of distribution — its AOT-compiled HLO bytes plus the profile facts
+//! the runtime needs to schedule it (input shape, MACs) — and its name is
+//! the SHA-256 digest of that bundle:
+//!
+//! ```text
+//!             ┌───────────────────────────────┐
+//!  zoo/disk ─▶│ ArtifactBundle                │─ encode ─▶ blob bytes
+//!             │   input_len · macs · HLO text │                │
+//!             └───────────────────────────────┘             sha256
+//!                                                              │
+//!                                                              ▼
+//!                                                        ArtifactId
+//!                                                              │
+//!        ┌───────────────────────┬──────────────────────┐      │
+//!        ▼                       ▼                      ▼      │
+//!   LocalFs store           Http registry          ExecCache key
+//!   blobs/ab/abcd…          GET /artifact/<id>     (ArtifactId, batch)
+//!   (atomic rename)         (any warm peer)        single-flight compile
+//! ```
+//!
+//! Because the id is recomputable from the blob alone, every fetch path
+//! (disk read, peer pull) re-digests before returning: a corrupt or
+//! tampered blob is an error, never a served model. [`LocalFs`] is the
+//! on-disk store (write-to-temp + atomic rename-into-place, so readers
+//! never observe a partial blob); [`HttpRegistry`] pulls blobs over the
+//! existing ingest edge from any peer that has them, which is how a cold
+//! router peer becomes servable without out-of-band artifact copying.
+
+pub mod http;
+pub mod localfs;
+pub mod sha256;
+
+pub use http::HttpRegistry;
+pub use localfs::LocalFs;
+
+use crate::zoo::Zoo;
+use crate::{Error, Result};
+
+/// Content-addressed identity of one compiled model artifact: the
+/// SHA-256 digest of its encoded [`ArtifactBundle`].
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ArtifactId(pub [u8; 32]);
+
+impl ArtifactId {
+    /// Lower-case 64-char hex form (the wire / path spelling).
+    pub fn to_hex(self) -> String {
+        let mut s = String::with_capacity(64);
+        for b in self.0 {
+            s.push(HEX[(b >> 4) as usize] as char);
+            s.push(HEX[(b & 0xf) as usize] as char);
+        }
+        s
+    }
+
+    /// Parse the 64-char hex spelling (case-insensitive). Returns `None`
+    /// for anything that is not exactly 64 hex digits.
+    pub fn from_hex(s: &str) -> Option<ArtifactId> {
+        let bytes = s.as_bytes();
+        if bytes.len() != 64 {
+            return None;
+        }
+        let mut out = [0u8; 32];
+        for i in 0..32 {
+            let hi = hex_val(bytes[i * 2])?;
+            let lo = hex_val(bytes[i * 2 + 1])?;
+            out[i] = (hi << 4) | lo;
+        }
+        Some(ArtifactId(out))
+    }
+
+    /// Digest arbitrary bytes into an id (used by the sim backend to mint
+    /// deterministic synthetic identities when no HLO file exists).
+    pub fn digest_of(data: &[u8]) -> ArtifactId {
+        ArtifactId(sha256::digest(data))
+    }
+}
+
+const HEX: &[u8; 16] = b"0123456789abcdef";
+
+fn hex_val(b: u8) -> Option<u8> {
+    match b {
+        b'0'..=b'9' => Some(b - b'0'),
+        b'a'..=b'f' => Some(b - b'a' + 10),
+        b'A'..=b'F' => Some(b - b'A' + 10),
+        _ => None,
+    }
+}
+
+impl std::fmt::Display for ArtifactId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.to_hex())
+    }
+}
+
+impl std::fmt::Debug for ArtifactId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // short form: enough to eyeball in logs without 64-char lines
+        write!(f, "ArtifactId({}…)", &self.to_hex()[..12])
+    }
+}
+
+/// The unit of distribution: compiled HLO bytes plus the profile facts
+/// the runtime keys scheduling on. The digest covers the whole encoded
+/// bundle, so identity changes when *either* the program or its declared
+/// shape/cost facts change.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct ArtifactBundle {
+    /// Input window length in samples (the model's input shape).
+    pub input_len: u64,
+    /// Table-3 multiply-accumulate count for one inference at batch 1.
+    pub macs: u64,
+    /// AOT-compiled HLO program bytes (text proto from `make artifacts`,
+    /// or a deterministic sim-grade placeholder for toy zoos).
+    pub hlo: Vec<u8>,
+}
+
+/// Header magic for the blob encoding. Version-bumping the format mints
+/// new ids for every artifact, which is exactly the right behaviour.
+const MAGIC: &str = "HLMA1";
+
+impl ArtifactBundle {
+    /// Serialise to the canonical blob form the digest is taken over:
+    /// one ASCII header line, then the raw HLO bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let header = format!(
+            "{MAGIC} input_len={} macs={} hlo_len={}\n",
+            self.input_len,
+            self.macs,
+            self.hlo.len()
+        );
+        let mut out = Vec::with_capacity(header.len() + self.hlo.len());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(&self.hlo);
+        out
+    }
+
+    /// Parse a blob produced by [`encode`](Self::encode). Structural
+    /// validation only — digest verification is [`Self::decode_verified`].
+    pub fn decode(blob: &[u8]) -> Result<ArtifactBundle> {
+        let nl = blob
+            .iter()
+            .position(|&b| b == b'\n')
+            .ok_or_else(|| Error::artifact("artifact blob: missing header line"))?;
+        let header = std::str::from_utf8(&blob[..nl])
+            .map_err(|_| Error::artifact("artifact blob: non-UTF8 header"))?;
+        let mut parts = header.split_whitespace();
+        if parts.next() != Some(MAGIC) {
+            return Err(Error::artifact(format!(
+                "artifact blob: bad magic (want {MAGIC})"
+            )));
+        }
+        let mut input_len = None;
+        let mut macs = None;
+        let mut hlo_len = None;
+        for kv in parts {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| Error::artifact(format!("artifact header: bad field '{kv}'")))?;
+            let n: u64 = v
+                .parse()
+                .map_err(|_| Error::artifact(format!("artifact header: bad number '{v}'")))?;
+            match k {
+                "input_len" => input_len = Some(n),
+                "macs" => macs = Some(n),
+                "hlo_len" => hlo_len = Some(n),
+                other => {
+                    return Err(Error::artifact(format!(
+                        "artifact header: unknown field '{other}'"
+                    )))
+                }
+            }
+        }
+        let (input_len, macs, hlo_len) = match (input_len, macs, hlo_len) {
+            (Some(i), Some(m), Some(l)) => (i, m, l),
+            _ => return Err(Error::artifact("artifact header: missing field")),
+        };
+        let hlo = &blob[nl + 1..];
+        if hlo.len() as u64 != hlo_len {
+            return Err(Error::artifact(format!(
+                "artifact blob: hlo_len={} but {} payload bytes",
+                hlo_len,
+                hlo.len()
+            )));
+        }
+        Ok(ArtifactBundle { input_len, macs, hlo: hlo.to_vec() })
+    }
+
+    /// Parse a blob *and* prove it is the artifact `want` names: the blob
+    /// is re-digested and a mismatch is an error. Every registry fetch
+    /// path goes through this, so a corrupt blob is never served.
+    pub fn decode_verified(blob: &[u8], want: ArtifactId) -> Result<ArtifactBundle> {
+        let got = ArtifactId(sha256::digest(blob));
+        if got != want {
+            return Err(Error::artifact(format!(
+                "artifact digest mismatch: want {want}, blob digests to {got}"
+            )));
+        }
+        Self::decode(blob)
+    }
+
+    /// The bundle's content-addressed identity.
+    pub fn id(&self) -> ArtifactId {
+        ArtifactId(sha256::digest(&self.encode()))
+    }
+
+    /// Build the bundle for one `(model, batch)` zoo entry. Reads the
+    /// compiled HLO from disk when present; toy zoos (manifest says
+    /// trained, but no files on disk) get a deterministic sim-grade
+    /// placeholder program synthesised from the profile, so identities
+    /// are stable across processes without `make artifacts`.
+    pub fn from_zoo(zoo: &Zoo, index: usize, batch: usize) -> Result<ArtifactBundle> {
+        let m = zoo.model(index);
+        Ok(ArtifactBundle {
+            input_len: m.input_len as u64,
+            macs: m.macs as u64,
+            hlo: zoo.artifact_bytes(index, batch)?,
+        })
+    }
+}
+
+/// A store of content-addressed artifact bundles.
+///
+/// `fetch` is *verified*: implementations re-digest the blob and must
+/// never return a bundle whose content does not match `id`.
+pub trait Registry: Send + Sync {
+    /// Cheap residency check (no verification).
+    fn has(&self, id: ArtifactId) -> bool;
+    /// Retrieve and verify the bundle named `id`.
+    fn fetch(&self, id: ArtifactId) -> Result<ArtifactBundle>;
+    /// Persist `bundle`; returns its id. Idempotent — storing an already
+    /// resident bundle is a no-op.
+    fn store(&self, bundle: &ArtifactBundle) -> Result<ArtifactId>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bundle(seed: u8) -> ArtifactBundle {
+        ArtifactBundle {
+            input_len: 2500 + seed as u64,
+            macs: 1_000_000 * (seed as u64 + 1),
+            hlo: (0..257u16).map(|i| (i as u8).wrapping_mul(seed | 1)).collect(),
+        }
+    }
+
+    #[test]
+    fn hex_round_trip() {
+        let id = bundle(3).id();
+        let hex = id.to_hex();
+        assert_eq!(hex.len(), 64);
+        assert!(hex.bytes().all(|b| b.is_ascii_hexdigit()));
+        assert_eq!(ArtifactId::from_hex(&hex), Some(id));
+        assert_eq!(ArtifactId::from_hex(&hex.to_uppercase()), Some(id));
+        assert_eq!(ArtifactId::from_hex(&hex[..63]), None);
+        assert_eq!(ArtifactId::from_hex(&format!("{}g", &hex[..63])), None);
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        for seed in 0..8u8 {
+            let b = bundle(seed);
+            let blob = b.encode();
+            let back = ArtifactBundle::decode(&blob).unwrap();
+            assert_eq!(back, b);
+            assert_eq!(back.id(), b.id());
+        }
+    }
+
+    #[test]
+    fn id_depends_on_every_field() {
+        let base = bundle(1);
+        let mut other = base.clone();
+        other.input_len += 1;
+        assert_ne!(base.id(), other.id());
+        let mut other = base.clone();
+        other.macs += 1;
+        assert_ne!(base.id(), other.id());
+        let mut other = base.clone();
+        other.hlo[0] ^= 1;
+        assert_ne!(base.id(), other.id());
+    }
+
+    #[test]
+    fn decode_verified_rejects_corruption() {
+        let b = bundle(2);
+        let id = b.id();
+        let mut blob = b.encode();
+        assert!(ArtifactBundle::decode_verified(&blob, id).is_ok());
+        // flip one payload bit: still structurally valid, digest must catch it
+        let last = blob.len() - 1;
+        blob[last] ^= 0x40;
+        let err = ArtifactBundle::decode_verified(&blob, id).unwrap_err();
+        assert!(err.to_string().contains("digest mismatch"), "{err}");
+    }
+
+    #[test]
+    fn decode_rejects_malformed_headers() {
+        assert!(ArtifactBundle::decode(b"").is_err());
+        assert!(ArtifactBundle::decode(b"no newline here").is_err());
+        assert!(ArtifactBundle::decode(b"WRONG input_len=1 macs=1 hlo_len=0\n").is_err());
+        assert!(ArtifactBundle::decode(b"HLMA1 input_len=1 macs=1\n").is_err());
+        assert!(ArtifactBundle::decode(b"HLMA1 input_len=1 macs=1 hlo_len=4\nxy").is_err());
+        assert!(ArtifactBundle::decode(b"HLMA1 input_len=z macs=1 hlo_len=0\n").is_err());
+    }
+
+    #[test]
+    fn toy_zoo_bundles_are_deterministic() {
+        let z1 = crate::zoo::testkit::toy_zoo_with(4, 16, 21, 2500, &[1, 8]);
+        let z2 = crate::zoo::testkit::toy_zoo_with(4, 16, 21, 2500, &[1, 8]);
+        for i in 0..4 {
+            for &b in &[1usize, 8] {
+                let a = ArtifactBundle::from_zoo(&z1, i, b).unwrap();
+                let c = ArtifactBundle::from_zoo(&z2, i, b).unwrap();
+                assert_eq!(a.id(), c.id(), "model {i} batch {b}");
+            }
+        }
+        // distinct (model, batch) pairs get distinct identities
+        let a = ArtifactBundle::from_zoo(&z1, 0, 1).unwrap();
+        let b = ArtifactBundle::from_zoo(&z1, 0, 8).unwrap();
+        let c = ArtifactBundle::from_zoo(&z1, 1, 1).unwrap();
+        assert_ne!(a.id(), b.id());
+        assert_ne!(a.id(), c.id());
+    }
+}

@@ -36,8 +36,24 @@ pub enum ProbeOutcome {
     Ok,
     /// 2xx heartbeat response advertising `"draining":true`.
     Draining,
+    /// 2xx heartbeat response advertising `"resident":false` — the
+    /// peer is alive but missing required model artifacts (a cold
+    /// restart mid-fetch). Treated exactly like an orderly drain: its
+    /// patients are re-homed and it is not reinstated until a probe
+    /// reports the full artifact set resident.
+    NotReady,
     /// Connect refused/timed out, transport error, or non-2xx.
     Fail,
+}
+
+/// A probe outcome plus what the heartbeat response advertised about
+/// the peer's artifact store (0 when the response carried no
+/// `"artifacts"` field — pre-registry peers, or transport failure).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProbeReport {
+    pub outcome: ProbeOutcome,
+    /// Required artifacts the peer reports resident.
+    pub artifacts: u64,
 }
 
 /// State-transition edge the router must act on.
@@ -148,10 +164,13 @@ impl HealthCore {
                 }
             }
             // an orderly drain is announced, not inferred: no
-            // suspicion counting on the way out
-            (PeerHealth::Healthy | PeerHealth::Suspect(_), ProbeOutcome::Draining) => {
-                (PeerHealth::Draining, Some(PeerAction::Draining))
-            }
+            // suspicion counting on the way out. A peer missing its
+            // required artifacts (NotReady) takes the same edge — it
+            // cannot serve, so its patients leave, without suspicion.
+            (
+                PeerHealth::Healthy | PeerHealth::Suspect(_),
+                ProbeOutcome::Draining | ProbeOutcome::NotReady,
+            ) => (PeerHealth::Draining, Some(PeerAction::Draining)),
             (PeerHealth::Dead { .. }, ProbeOutcome::Ok) => {
                 (PeerHealth::Healthy, Some(PeerAction::Up))
             }
@@ -159,15 +178,17 @@ impl HealthCore {
                 let wait = (wait.saturating_mul(2)).min(self.backoff_max);
                 (PeerHealth::Dead { wait, next_in: wait }, None)
             }
-            // alive but still draining: hold the backoff width, probe
-            // again next expiry
-            (PeerHealth::Dead { wait, .. }, ProbeOutcome::Draining) => {
+            // alive but still draining (or still fetching artifacts):
+            // hold the backoff width, probe again next expiry
+            (PeerHealth::Dead { wait, .. }, ProbeOutcome::Draining | ProbeOutcome::NotReady) => {
                 (PeerHealth::Dead { wait, next_in: wait }, None)
             }
             (PeerHealth::Draining, ProbeOutcome::Ok) => {
                 (PeerHealth::Healthy, Some(PeerAction::Up))
             }
-            (PeerHealth::Draining, ProbeOutcome::Draining) => (PeerHealth::Draining, None),
+            (PeerHealth::Draining, ProbeOutcome::Draining | ProbeOutcome::NotReady) => {
+                (PeerHealth::Draining, None)
+            }
             // a draining peer that stops answering was already drained
             // and re-homed — demote to Dead silently (canary cadence)
             (PeerHealth::Draining, ProbeOutcome::Fail) => (
@@ -199,8 +220,19 @@ pub fn probe_once(
     connect_timeout: Duration,
     io_timeout: Duration,
 ) -> ProbeOutcome {
+    probe_once_report(addr, seq, connect_timeout, io_timeout).outcome
+}
+
+/// [`probe_once`] plus the peer's advertised artifact residency.
+pub fn probe_once_report(
+    addr: SocketAddr,
+    seq: u64,
+    connect_timeout: Duration,
+    io_timeout: Duration,
+) -> ProbeReport {
+    const FAIL: ProbeReport = ProbeReport { outcome: ProbeOutcome::Fail, artifacts: 0 };
     let Ok(mut stream) = TcpStream::connect_timeout(&addr, connect_timeout) else {
-        return ProbeOutcome::Fail;
+        return FAIL;
     };
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(io_timeout));
@@ -211,7 +243,7 @@ pub fn probe_once(
         body.len()
     );
     if stream.write_all(head.as_bytes()).is_err() || stream.write_all(&body).is_err() {
-        return ProbeOutcome::Fail;
+        return FAIL;
     }
     // Connection: close — read to EOF, then parse status + body
     let mut resp = Vec::with_capacity(512);
@@ -222,29 +254,55 @@ pub fn probe_once(
             Ok(n) => {
                 resp.extend_from_slice(&chunk[..n]);
                 if resp.len() > 16 * 1024 {
-                    return ProbeOutcome::Fail;
+                    return FAIL;
                 }
             }
-            Err(_) => return ProbeOutcome::Fail,
+            Err(_) => return FAIL,
         }
     }
+    classify_response(&resp)
+}
+
+/// Classify a raw heartbeat response (status line + body bytes). Pure
+/// — unit-testable without sockets. Precedence: a non-2xx is `Fail`;
+/// `"draining":true` wins over residency (the peer is leaving either
+/// way); `"resident":false` is `NotReady`; otherwise `Ok`. The
+/// `"artifacts":N` count is reported whenever the response is 2xx.
+fn classify_response(resp: &[u8]) -> ProbeReport {
+    const FAIL: ProbeReport = ProbeReport { outcome: ProbeOutcome::Fail, artifacts: 0 };
     // "HTTP/1.1 NNN ..."
     if resp.len() < 12 || !resp.starts_with(b"HTTP/1.") {
-        return ProbeOutcome::Fail;
+        return FAIL;
     }
     let status: u16 = match std::str::from_utf8(&resp[9..12]).ok().and_then(|s| s.parse().ok()) {
         Some(s) => s,
-        None => return ProbeOutcome::Fail,
+        None => return FAIL,
     };
     if !(200..300).contains(&status) {
-        return ProbeOutcome::Fail;
+        return FAIL;
     }
+    let artifacts = scan_u64_field(resp, b"\"artifacts\":").unwrap_or(0);
     const DRAIN_TAG: &[u8] = b"\"draining\":true";
-    if resp.windows(DRAIN_TAG.len()).any(|w| w == DRAIN_TAG) {
+    const NOT_RESIDENT_TAG: &[u8] = b"\"resident\":false";
+    let outcome = if resp.windows(DRAIN_TAG.len()).any(|w| w == DRAIN_TAG) {
         ProbeOutcome::Draining
+    } else if resp.windows(NOT_RESIDENT_TAG.len()).any(|w| w == NOT_RESIDENT_TAG) {
+        ProbeOutcome::NotReady
     } else {
         ProbeOutcome::Ok
+    };
+    ProbeReport { outcome, artifacts }
+}
+
+/// Scan `bytes` for `tag` immediately followed by decimal digits.
+fn scan_u64_field(bytes: &[u8], tag: &[u8]) -> Option<u64> {
+    let at = bytes.windows(tag.len()).position(|w| w == tag)? + tag.len();
+    let digits: &[u8] = &bytes[at..];
+    let end = digits.iter().position(|b| !b.is_ascii_digit()).unwrap_or(digits.len());
+    if end == 0 {
+        return None;
     }
+    std::str::from_utf8(&digits[..end]).ok()?.parse().ok()
 }
 
 /// The prober driver thread: sweeps every peer once per
@@ -271,10 +329,11 @@ impl Prober {
                             continue;
                         }
                         seq += 1;
-                        let outcome =
-                            probe_once(addr, seq, cfg.connect_timeout, cfg.io_timeout);
-                        let action = core.observe(peer, outcome);
+                        let report =
+                            probe_once_report(addr, seq, cfg.connect_timeout, cfg.io_timeout);
+                        let action = core.observe(peer, report.outcome);
                         router.set_peer_state(peer, core.state_code(peer));
+                        router.set_peer_artifacts(peer, report.artifacts);
                         match action {
                             Some(PeerAction::Down) => router.on_peer_dead(peer),
                             Some(PeerAction::Draining) => router.on_peer_drain(peer),
@@ -390,5 +449,50 @@ mod tests {
         assert_eq!(c.observe(0, ProbeOutcome::Draining), None);
         assert_eq!(c.state_code(0), STATE_DEAD);
         assert_eq!(c.observe(0, ProbeOutcome::Ok), Some(PeerAction::Up));
+    }
+
+    #[test]
+    fn not_ready_peer_is_never_admitted_until_resident() {
+        // alive-but-artifact-less takes the orderly-drain edge, not
+        // suspicion: its patients leave and it is not reinstated...
+        let mut c = core();
+        assert_eq!(c.observe(0, ProbeOutcome::NotReady), Some(PeerAction::Draining));
+        assert_eq!(c.state_code(0), STATE_DRAINING);
+        assert_eq!(c.observe(0, ProbeOutcome::NotReady), None, "no repeated edge");
+        // ...until a probe reports the full artifact set resident
+        assert_eq!(c.observe(0, ProbeOutcome::Ok), Some(PeerAction::Up));
+        assert_eq!(c.state_code(0), STATE_HEALTHY);
+        // a dead peer that restarts cold stays unrouted while fetching
+        for _ in 0..3 {
+            c.observe(1, ProbeOutcome::Fail);
+        }
+        assert_eq!(c.observe(1, ProbeOutcome::NotReady), None);
+        assert_eq!(c.state_code(1), STATE_DEAD);
+        assert_eq!(c.observe(1, ProbeOutcome::Ok), Some(PeerAction::Up));
+    }
+
+    #[test]
+    fn classify_response_reads_residency_and_artifacts() {
+        let ok = b"HTTP/1.1 200 OK\r\n\r\n{\"ok\":true,\"frames\":0,\"draining\":false,\"artifacts\":12,\"resident\":true}";
+        assert_eq!(
+            classify_response(ok),
+            ProbeReport { outcome: ProbeOutcome::Ok, artifacts: 12 }
+        );
+        let cold = b"HTTP/1.1 200 OK\r\n\r\n{\"ok\":true,\"frames\":0,\"draining\":false,\"artifacts\":3,\"resident\":false}";
+        assert_eq!(
+            classify_response(cold),
+            ProbeReport { outcome: ProbeOutcome::NotReady, artifacts: 3 }
+        );
+        // draining wins over residency — the peer is leaving either way
+        let drain = b"HTTP/1.1 200 OK\r\n\r\n{\"ok\":true,\"frames\":0,\"draining\":true,\"artifacts\":3,\"resident\":false}";
+        assert_eq!(classify_response(drain).outcome, ProbeOutcome::Draining);
+        // pre-registry peers carry no artifact fields: plain Ok
+        let legacy = b"HTTP/1.1 200 OK\r\n\r\n{\"ok\":true,\"frames\":4}";
+        assert_eq!(
+            classify_response(legacy),
+            ProbeReport { outcome: ProbeOutcome::Ok, artifacts: 0 }
+        );
+        let err = b"HTTP/1.1 503 Service Unavailable\r\n\r\n{}";
+        assert_eq!(classify_response(err).outcome, ProbeOutcome::Fail);
     }
 }

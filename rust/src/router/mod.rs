@@ -58,7 +58,7 @@ use crate::serving::RouterGauges;
 use crate::Result;
 
 pub use forward::{Link, LinkHandle, SendOutcome};
-pub use health::{HealthConfig, HealthCore, PeerAction, Prober, ProbeOutcome};
+pub use health::{HealthConfig, HealthCore, PeerAction, Prober, ProbeOutcome, ProbeReport};
 pub use ring::Ring;
 
 /// Ceiling on how long [`Router::deliver`] waits for a link slot that
@@ -174,6 +174,12 @@ impl Router {
 
     pub(crate) fn set_peer_state(&self, peer: usize, code: u8) {
         self.gauges.peer_states[peer].store(code, Ordering::Relaxed);
+    }
+
+    /// Record how many required artifacts a peer's last heartbeat
+    /// reported resident (the prober's admission evidence).
+    pub(crate) fn set_peer_artifacts(&self, peer: usize, n: u64) {
+        self.gauges.artifacts_resident[peer].store(n, Ordering::Relaxed);
     }
 
     /// Route one frame to its owner's link. The sticky owner map wins

@@ -12,8 +12,10 @@
 //!   AOT-compiled HLO artifacts executed through PJRT.
 
 use std::collections::HashSet;
+use std::sync::Arc;
 use std::time::Duration;
 
+use super::exec_cache::{ArtifactCatalog, ExecCache, ExecCacheGauges};
 use super::ModelKey;
 use crate::profiler::ServiceTimes;
 use crate::zoo::Zoo;
@@ -40,6 +42,20 @@ pub trait ExecBackend: Send + Sync {
     /// Create the execution state for device worker `wid`. Called on
     /// the worker's own thread.
     fn worker(&self, wid: usize) -> Result<Box<dyn ExecWorker>>;
+
+    /// The backend's `(model, batch) → ArtifactId` resolution, when it
+    /// keys executables by content-addressed identity. The engine
+    /// adopts this catalog so serving-tier advertisements use exactly
+    /// the ids the cache compiles under.
+    fn catalog(&self) -> Option<Arc<ArtifactCatalog>> {
+        None
+    }
+
+    /// Shared compiled-executable cache counters, when the backend
+    /// routes compiles through an [`ExecCache`].
+    fn exec_cache_gauges(&self) -> Option<Arc<ExecCacheGauges>> {
+        None
+    }
 }
 
 /// One worker's execution state (e.g. a PJRT client + executable cache).
@@ -82,6 +98,14 @@ pub struct SimBackend {
     /// errors while `flag` is true (chaos drivers flip it mid-run to
     /// exercise quarantine → canary → reinstate).
     fault_switch: Option<(usize, std::sync::Arc<std::sync::atomic::AtomicBool>)>,
+    /// Shared "compiled executable" cache: the sim holds no real
+    /// executables (unit payload) but runs the same single-flight
+    /// warm-up accounting as PJRT, so `compile_count == distinct
+    /// (ArtifactId, batch)` holds identically on both backends.
+    cache: Arc<ExecCache<()>>,
+    /// `(model, batch) → ArtifactId` (content-addressed when built from
+    /// a zoo, synthetic-deterministic otherwise).
+    catalog: Arc<ArtifactCatalog>,
 }
 
 impl SimBackend {
@@ -89,11 +113,13 @@ impl SimBackend {
     /// latency profiler's default cost model).
     pub fn from_zoo(zoo: &Zoo) -> Self {
         Self::with_times(ServiceTimes::from_macs(zoo, 5e-4, 2e10), 1.0)
+            .with_catalog(Arc::new(ArtifactCatalog::from_zoo(zoo)))
     }
 
     /// Zero service time: pure data-plane cost (benches, fast tests).
     pub fn instant(zoo: &Zoo) -> Self {
         Self::with_times(ServiceTimes::from_macs(zoo, 5e-4, 2e10), 0.0)
+            .with_catalog(Arc::new(ArtifactCatalog::from_zoo(zoo)))
     }
 
     pub fn with_times(times: ServiceTimes, scale: f64) -> Self {
@@ -102,7 +128,16 @@ impl SimBackend {
             scale: scale.max(0.0),
             fail_model: None,
             fault_switch: None,
+            cache: Arc::new(ExecCache::new()),
+            catalog: Arc::new(ArtifactCatalog::empty()),
         }
+    }
+
+    /// Resolve cache keys through `catalog` (zoo-derived identities)
+    /// instead of the synthetic per-key fallback.
+    pub fn with_catalog(mut self, catalog: Arc<ArtifactCatalog>) -> Self {
+        self.catalog = catalog;
+        self
     }
 
     /// Fault injection: every execution of `model_index` fails.
@@ -146,11 +181,23 @@ impl ExecBackend for SimBackend {
     fn worker(&self, _wid: usize) -> Result<Box<dyn ExecWorker>> {
         Ok(Box::new(SimWorker { backend: self.clone(), warmed: HashSet::new() }))
     }
+
+    fn catalog(&self) -> Option<Arc<ArtifactCatalog>> {
+        Some(Arc::clone(&self.catalog))
+    }
+
+    fn exec_cache_gauges(&self) -> Option<Arc<ExecCacheGauges>> {
+        Some(self.cache.gauges())
+    }
 }
 
 struct SimWorker {
     backend: SimBackend,
-    /// Keys executed at least once (mimics the lazy compile cache).
+    /// Keys this worker has already resolved through the shared
+    /// [`ExecCache`] — the steady-state fast path stays one local
+    /// HashSet probe (what the old private warm-set cost); only a
+    /// worker's *first* touch of a key goes to the shared cache, where
+    /// single-flight decides the one compile per (ArtifactId, batch).
     warmed: HashSet<ModelKey>,
 }
 
@@ -170,7 +217,14 @@ impl ExecWorker for SimWorker {
                 )));
             }
         }
-        let compiled = self.warmed.insert(key);
+        let compiled = if self.warmed.contains(&key) {
+            false
+        } else {
+            let id = self.backend.catalog.id_for(key);
+            let (_exe, built) = self.backend.cache.get_or_compile((id, key.1), || Ok(()))?;
+            self.warmed.insert(key);
+            built
+        };
         let mut scores = Vec::with_capacity(key.1);
         for slot in 0..key.1 {
             scores.push(sim_score(key.0, &input[slot * clip_len..(slot + 1) * clip_len]));

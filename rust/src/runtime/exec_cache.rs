@@ -1,0 +1,428 @@
+//! Process-wide compiled-executable cache, keyed by content-addressed
+//! artifact identity.
+//!
+//! ```text
+//!            (ArtifactId, batch)            16 shards
+//!   worker ──────┬──────────────▶ shard = id[0]&15 ── RwLock<HashMap>
+//!   worker ──────┤                                        │
+//!   worker ──────┘                              ┌─────────┴─────────┐
+//!                                               ▼                   ▼
+//!                                        Ready(Arc<T>)      Building(Flight)
+//!                                        (hit: clone)       (wait on condvar,
+//!                                                            re-check on wake)
+//! ```
+//!
+//! Replaces the old per-`DirectWorker` private caches: W executor
+//! threads running an M-member ensemble used to compile (and hold) up
+//! to W × M executables; with the shared cache a process performs
+//! **exactly `distinct (ArtifactId, batch)` compiles** regardless of W.
+//! The compile is *single-flight*: the first caller of a vacant key
+//! becomes the winner and runs the compile closure outside any shard
+//! lock; concurrent callers for the same key park on the key's
+//! [`Flight`] and observe the winner's executable when it lands. A
+//! failed compile clears the slot (waiters wake, re-race, and the next
+//! caller retries the compile), so transient backend faults don't wedge
+//! a key forever.
+//!
+//! `T` must be `Send + Sync` to be shared across workers. The vendored
+//! `xla` stub's handles are trivially so; a real PJRT binding must
+//! provide thread-safe loaded-executable handles to use this cache
+//! (PJRT `ExecuteSharded` is documented thread-compatible — the client
+//! stays per worker, only the compiled executable is shared).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+
+use super::ModelKey;
+use crate::registry::{ArtifactBundle, ArtifactId};
+use crate::zoo::Zoo;
+use crate::Result;
+
+/// Cache key: content-addressed artifact + the batch shape it was
+/// compiled for.
+pub type CacheKey = (ArtifactId, usize);
+
+const SHARDS: usize = 16;
+
+/// Cache counters, surfaced through telemetry (`exec_cache_*`).
+/// `hits + misses` = lookups; `compiles ≤ misses` (waiters parked on a
+/// winner's flight count as misses but never compile).
+#[derive(Debug, Default)]
+pub struct ExecCacheGauges {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub compiles: AtomicU64,
+}
+
+/// One in-progress compile; losers of the insert race park here.
+struct Flight {
+    done: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Flight {
+    fn new() -> Arc<Flight> {
+        Arc::new(Flight { done: Mutex::new(false), cv: Condvar::new() })
+    }
+
+    fn finish(&self) {
+        *self.done.lock().expect("flight poisoned") = true;
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) {
+        let mut done = self.done.lock().expect("flight poisoned");
+        while !*done {
+            done = self.cv.wait(done).expect("flight poisoned");
+        }
+    }
+}
+
+enum Slot<T> {
+    Ready(Arc<T>),
+    Building(Arc<Flight>),
+}
+
+/// Sharded single-flight map from [`CacheKey`] to a shared executable.
+pub struct ExecCache<T> {
+    shards: Vec<RwLock<HashMap<CacheKey, Slot<T>>>>,
+    gauges: Arc<ExecCacheGauges>,
+}
+
+impl<T> Default for ExecCache<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> std::fmt::Debug for ExecCache<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ExecCache")
+            .field("entries", &self.len())
+            .field("gauges", &self.gauges)
+            .finish()
+    }
+}
+
+impl<T> ExecCache<T> {
+    pub fn new() -> Self {
+        ExecCache {
+            shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            gauges: Arc::new(ExecCacheGauges::default()),
+        }
+    }
+
+    fn shard(&self, key: &CacheKey) -> &RwLock<HashMap<CacheKey, Slot<T>>> {
+        // the id is a SHA-256 digest: its first byte is already uniform
+        &self.shards[(key.0 .0[0] as usize ^ key.1) % SHARDS]
+    }
+
+    /// Shared counters (telemetry installs a clone of this Arc).
+    pub fn gauges(&self) -> Arc<ExecCacheGauges> {
+        Arc::clone(&self.gauges)
+    }
+
+    /// Number of Ready executables currently cached.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.read()
+                    .expect("exec cache poisoned")
+                    .values()
+                    .filter(|v| matches!(v, Slot::Ready(_)))
+                    .count()
+            })
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fetch the executable for `key`, compiling it with `build` exactly
+    /// once per key process-wide. Returns `(executable, compiled)` where
+    /// `compiled` is true only for the single-flight winner that
+    /// actually ran `build`; parked waiters observe the winner's Arc
+    /// with `compiled = false`. `build` runs with no shard lock held.
+    pub fn get_or_compile(
+        &self,
+        key: CacheKey,
+        build: impl FnOnce() -> Result<T>,
+    ) -> Result<(Arc<T>, bool)> {
+        let shard = self.shard(&key);
+        // fast path: read-lock only
+        if let Some(Slot::Ready(t)) = shard.read().expect("exec cache poisoned").get(&key) {
+            self.gauges.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((Arc::clone(t), false));
+        }
+        self.gauges.misses.fetch_add(1, Ordering::Relaxed);
+        loop {
+            // decide under the write lock: hit, park, or become the winner
+            let wait_on = {
+                let mut map = shard.write().expect("exec cache poisoned");
+                match map.get(&key) {
+                    Some(Slot::Ready(t)) => {
+                        // another caller landed it while we raced here
+                        return Ok((Arc::clone(t), false));
+                    }
+                    Some(Slot::Building(fl)) => Some(Arc::clone(fl)),
+                    None => {
+                        map.insert(key, Slot::Building(Flight::new()));
+                        None
+                    }
+                }
+            };
+            if let Some(fl) = wait_on {
+                // park until the winner lands or fails, then re-check:
+                // Ready on success, vacant on failure (we re-race the
+                // compile so a transient fault doesn't starve waiters)
+                fl.wait();
+                continue;
+            }
+            // we are the winner: compile outside the lock
+            let built = build();
+            let mut map = shard.write().expect("exec cache poisoned");
+            let flight = match map.remove(&key) {
+                Some(Slot::Building(fl)) => fl,
+                _ => unreachable!("winner's Building slot vanished"),
+            };
+            return match built {
+                Ok(t) => {
+                    let arc = Arc::new(t);
+                    map.insert(key, Slot::Ready(Arc::clone(&arc)));
+                    drop(map);
+                    flight.finish();
+                    self.gauges.compiles.fetch_add(1, Ordering::Relaxed);
+                    Ok((arc, true))
+                }
+                Err(e) => {
+                    // slot already removed: waiters re-race on wake
+                    drop(map);
+                    flight.finish();
+                    Err(e)
+                }
+            };
+        }
+    }
+}
+
+/// `(zoo index, batch)` → [`ArtifactId`] resolution, computed once per
+/// backend at construction so cache keys, heartbeat advertisements and
+/// governor install-path requirements all speak the same identities.
+///
+/// Keys the zoo never declared (custom test backends built without a
+/// zoo) resolve to a memoised synthetic digest of the key itself —
+/// still deterministic across workers and processes, still 1:1 with
+/// `(model, batch)`, so the `compile_count == distinct keys` invariant
+/// is unaffected.
+#[derive(Debug)]
+pub struct ArtifactCatalog {
+    known: HashMap<ModelKey, ArtifactId>,
+    synth: RwLock<HashMap<ModelKey, ArtifactId>>,
+    batch_sizes: Vec<usize>,
+}
+
+impl ArtifactCatalog {
+    /// Digest every servable `(model, batch)` bundle of the zoo.
+    pub fn from_zoo(zoo: &Zoo) -> Self {
+        let mut known = HashMap::new();
+        for &idx in &zoo.servable_indices() {
+            for &b in &zoo.manifest.batch_sizes {
+                if zoo.model(idx).artifact_for_batch(b).is_some() {
+                    if let Ok(bundle) = ArtifactBundle::from_zoo(zoo, idx, b) {
+                        known.insert((idx, b), bundle.id());
+                    }
+                }
+            }
+        }
+        ArtifactCatalog {
+            known,
+            synth: RwLock::new(HashMap::new()),
+            batch_sizes: zoo.manifest.batch_sizes.clone(),
+        }
+    }
+
+    /// Catalog with no zoo-declared entries; every id is synthetic.
+    pub fn empty() -> Self {
+        ArtifactCatalog {
+            known: HashMap::new(),
+            synth: RwLock::new(HashMap::new()),
+            batch_sizes: Vec::new(),
+        }
+    }
+
+    /// The identity of one `(model, batch)` executable.
+    pub fn id_for(&self, key: ModelKey) -> ArtifactId {
+        if let Some(id) = self.known.get(&key) {
+            return *id;
+        }
+        if let Some(id) = self.synth.read().expect("catalog poisoned").get(&key) {
+            return *id;
+        }
+        let id = ArtifactId::digest_of(
+            format!("holmes-synthetic-artifact model={} batch={}", key.0, key.1).as_bytes(),
+        );
+        self.synth.write().expect("catalog poisoned").insert(key, id);
+        id
+    }
+
+    /// True when `key` was declared by the zoo manifest (as opposed to
+    /// a synthetic test identity).
+    pub fn is_known(&self, key: ModelKey) -> bool {
+        self.known.contains_key(&key)
+    }
+
+    /// Every artifact a membership over `models` needs resident: all
+    /// compiled batch variants of each member, sorted and deduped.
+    pub fn ids_for_models(&self, models: &[usize]) -> Vec<ArtifactId> {
+        let mut out: Vec<ArtifactId> = models
+            .iter()
+            .flat_map(|&m| self.batch_sizes.iter().map(move |&b| self.id_for((m, b))))
+            .collect();
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    /// All zoo-declared `(key, id)` pairs (the publishable inventory).
+    pub fn known_entries(&self) -> impl Iterator<Item = (ModelKey, ArtifactId)> + '_ {
+        self.known.iter().map(|(&k, &v)| (k, v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Barrier;
+
+    fn key(tag: u8, batch: usize) -> CacheKey {
+        (ArtifactId::digest_of(&[tag]), batch)
+    }
+
+    #[test]
+    fn hit_returns_same_arc_without_recompiling() {
+        let cache = ExecCache::new();
+        let (a, compiled) = cache.get_or_compile(key(1, 8), || Ok(42u64)).unwrap();
+        assert!(compiled);
+        let (b, compiled) = cache.get_or_compile(key(1, 8), || panic!("must not rebuild")).unwrap();
+        assert!(!compiled);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.gauges().hits.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.gauges().compiles.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn distinct_batches_are_distinct_entries() {
+        let cache = ExecCache::new();
+        cache.get_or_compile(key(1, 1), || Ok(1u64)).unwrap();
+        cache.get_or_compile(key(1, 8), || Ok(8u64)).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.gauges().compiles.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn single_flight_under_contention() {
+        let cache = Arc::new(ExecCache::new());
+        let builds = Arc::new(AtomicUsize::new(0));
+        let n = 8;
+        let barrier = Arc::new(Barrier::new(n));
+        let mut joins = Vec::new();
+        for _ in 0..n {
+            let cache = Arc::clone(&cache);
+            let builds = Arc::clone(&builds);
+            let barrier = Arc::clone(&barrier);
+            joins.push(std::thread::spawn(move || {
+                barrier.wait();
+                cache
+                    .get_or_compile(key(7, 8), || {
+                        builds.fetch_add(1, Ordering::SeqCst);
+                        // stretch the build so every loser actually parks
+                        std::thread::sleep(std::time::Duration::from_millis(30));
+                        Ok(1234u64)
+                    })
+                    .unwrap()
+            }));
+        }
+        let results: Vec<(Arc<u64>, bool)> =
+            joins.into_iter().map(|j| j.join().unwrap()).collect();
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "exactly one build ran");
+        assert_eq!(results.iter().filter(|(_, c)| *c).count(), 1, "exactly one winner");
+        let winner = &results[0].0;
+        for (arc, _) in &results {
+            assert!(Arc::ptr_eq(arc, winner), "every waiter observes the winner's Arc");
+        }
+        assert_eq!(cache.gauges().compiles.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn failed_compile_clears_the_slot_for_retry() {
+        let cache = ExecCache::new();
+        let err = cache.get_or_compile(key(3, 1), || {
+            Err::<u64, _>(crate::Error::serving("injected compile fault"))
+        });
+        assert!(err.is_err());
+        assert_eq!(cache.len(), 0, "failed slot must not linger");
+        // next caller retries and succeeds
+        let (v, compiled) = cache.get_or_compile(key(3, 1), || Ok(5u64)).unwrap();
+        assert!(compiled);
+        assert_eq!(*v, 5);
+    }
+
+    #[test]
+    fn waiters_survive_a_winner_failure() {
+        let cache = Arc::new(ExecCache::new());
+        let builds = Arc::new(AtomicUsize::new(0));
+        let n = 6;
+        let barrier = Arc::new(Barrier::new(n));
+        let mut joins = Vec::new();
+        for _ in 0..n {
+            let cache = Arc::clone(&cache);
+            let builds = Arc::clone(&builds);
+            let barrier = Arc::clone(&barrier);
+            joins.push(std::thread::spawn(move || {
+                barrier.wait();
+                cache.get_or_compile(key(9, 2), || {
+                    let i = builds.fetch_add(1, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                    // first winner fails; whoever re-races next succeeds
+                    if i == 0 {
+                        Err(crate::Error::serving("first compile faulted"))
+                    } else {
+                        Ok(77u64)
+                    }
+                })
+            }));
+        }
+        let results: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        let ok = results.iter().filter(|r| r.is_ok()).count();
+        // exactly one caller observed the injected failure; everyone
+        // else ended up with the retried executable
+        assert_eq!(ok, n - 1);
+        for r in results.iter().flatten() {
+            assert_eq!(*r.0, 77);
+        }
+        assert_eq!(builds.load(Ordering::SeqCst), 2, "failed + retried");
+    }
+
+    #[test]
+    fn catalog_resolves_zoo_and_synthetic_keys() {
+        let zoo = crate::zoo::testkit::toy_zoo_with(3, 16, 5, 100, &[1, 8]);
+        let cat = ArtifactCatalog::from_zoo(&zoo);
+        assert!(cat.is_known((0, 1)) && cat.is_known((2, 8)));
+        assert_ne!(cat.id_for((0, 1)), cat.id_for((0, 8)));
+        assert_ne!(cat.id_for((0, 1)), cat.id_for((1, 1)));
+        // zoo-declared ids match the registry bundles byte for byte
+        let bundle = ArtifactBundle::from_zoo(&zoo, 1, 8).unwrap();
+        assert_eq!(cat.id_for((1, 8)), bundle.id());
+        // membership → artifact set: 2 models × 2 batches
+        assert_eq!(cat.ids_for_models(&[0, 2]).len(), 4);
+        // synthetic fallback is stable and distinct per key
+        let empty = ArtifactCatalog::empty();
+        assert!(!empty.is_known((0, 1)));
+        assert_eq!(empty.id_for((9, 1)), empty.id_for((9, 1)));
+        assert_ne!(empty.id_for((9, 1)), empty.id_for((9, 8)));
+    }
+}

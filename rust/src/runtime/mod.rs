@@ -25,14 +25,45 @@
 //! [`Engine::new`] picks the feature-selected default;
 //! [`Engine::with_backend`] injects any implementation (tests inject a
 //! fault-injecting sim, benches a zero-latency one).
+//!
+//! ## One artifact identity, one compile per artifact
+//!
+//! A model is not a `(zoo index, batch)` pair once it leaves the
+//! manifest: its identity is the content-addressed
+//! [`ArtifactId`](crate::registry::ArtifactId) — the digest of its HLO
+//! bytes + input shape + MACs profile — minted by the backend's
+//! [`ArtifactCatalog`] at construction and shared by every tier:
+//!
+//! ```text
+//!  zoo manifest ──▶ ArtifactCatalog: (model, batch) → ArtifactId
+//!                        │
+//!        ┌───────────────┼──────────────────────────┐
+//!        ▼               ▼                          ▼
+//!  registry store   ExecCache key             heartbeat advert
+//!  (LocalFs blobs,  (ArtifactId, batch)       "artifacts resident"
+//!   GET /artifact)   single-flight compile     → router admission
+//!                        │
+//!          DirectWorker ─┤─ DirectWorker ─ … (W inline handles)
+//!          worker_loop  ─┘  (FIFO pool)
+//!            each worker: local Arc memo → shared sharded cache
+//! ```
+//!
+//! Compiled executables live in one process-wide [`ExecCache`] per
+//! backend: whatever the executor pool width W, a serving process
+//! performs exactly `distinct (ArtifactId, batch)` compiles
+//! (single-flight — concurrent first touches dedupe to one compile,
+//! with waiters adopting the winner's executable) and holds each
+//! executable once, behind an `Arc`, instead of once per worker.
 
 pub mod backend;
 pub mod buf;
+pub mod exec_cache;
 #[cfg(feature = "xla")]
 pub mod pjrt;
 
 pub use backend::{BackendOutput, ExecBackend, ExecWorker, SimBackend};
 pub use buf::AlignedBatch;
+pub use exec_cache::{ArtifactCatalog, CacheKey, ExecCache, ExecCacheGauges};
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -120,6 +151,10 @@ struct EngineInner {
     /// thread count.
     device: Arc<Semaphore>,
     backend_name: &'static str,
+    /// `(model, batch) → ArtifactId`: adopted from the backend when it
+    /// has one (so advertisements use exactly the cache's identities),
+    /// else derived from the zoo.
+    catalog: Arc<ArtifactCatalog>,
     /// Servable (model, batch) keys per the zoo manifest.
     model_keys: HashSet<ModelKey>,
     clip_len: usize,
@@ -172,6 +207,9 @@ impl Engine {
         let device = Arc::new(Semaphore::new(n_workers));
         let clip_len = zoo.manifest.clip_len;
         let backend_name = backend.name();
+        let catalog = backend
+            .catalog()
+            .unwrap_or_else(|| Arc::new(ArtifactCatalog::from_zoo(zoo)));
         let mut workers = Vec::with_capacity(n_workers);
         for wid in 0..n_workers {
             let rx = Arc::clone(&rx);
@@ -193,6 +231,7 @@ impl Engine {
                 backend,
                 device,
                 backend_name,
+                catalog,
                 model_keys,
                 clip_len,
                 batch_sizes,
@@ -235,6 +274,19 @@ impl Engine {
 
     pub fn stats(&self) -> &EngineStats {
         &self.inner.stats
+    }
+
+    /// `(model, batch) → ArtifactId` resolution — the identities the
+    /// serving tier advertises on heartbeats and the governor's install
+    /// path resolves memberships through.
+    pub fn artifact_catalog(&self) -> &Arc<ArtifactCatalog> {
+        &self.inner.catalog
+    }
+
+    /// Shared compiled-executable cache counters, when the active
+    /// backend routes compiles through an [`ExecCache`].
+    pub fn exec_cache_gauges(&self) -> Option<Arc<ExecCacheGauges>> {
+        self.inner.backend.exec_cache_gauges()
     }
 
     fn validate(&self, key: ModelKey, input_len: usize) -> Result<()> {
@@ -303,11 +355,11 @@ impl Engine {
     /// on itself under the engine's device permits — the serving hot
     /// path, with no job channel and no reply rendezvous.
     ///
-    /// Known cost: backend worker state is **per handle**, so a pool of
-    /// N threads on the PJRT backend holds N clients/executable caches
-    /// while only `n_workers` permits ever execute at once (free on the
-    /// sim backend, whose worker state is a few hundred bytes). Sharing
-    /// compiled executables across inline handles is a ROADMAP item.
+    /// Compiled executables are **shared across handles** through the
+    /// backend's [`ExecCache`]: a pool of N threads holds N lightweight
+    /// worker states (a PJRT client, a memo map) but exactly one copy
+    /// of each compiled `(ArtifactId, batch)` executable, compiled
+    /// once process-wide by whichever handle touches the key first.
     pub fn direct_worker(&self, wid: usize) -> Result<DirectWorker> {
         Ok(DirectWorker {
             worker: self.inner.backend.worker(wid)?,
@@ -455,6 +507,29 @@ fn worker_loop(
     }
 }
 
+/// Result of [`bench_hlo_file`]: per-rep durations plus an honesty
+/// flag. Downstream emitters (the runtime bench JSON, the Fig. 13 CSV)
+/// must propagate `modelled` so analytic stand-in numbers are never
+/// mistaken for measured XLA times.
+#[derive(Debug, Clone)]
+pub struct HloBench {
+    /// One duration per rep.
+    pub times: Vec<Duration>,
+    /// True when the durations came from the sim cost model rather
+    /// than real compiled-HLO execution (i.e. built without
+    /// `--features xla`).
+    pub modelled: bool,
+}
+
+impl HloBench {
+    /// Median of the rep durations.
+    pub fn median(&self) -> Duration {
+        let mut t = self.times.clone();
+        t.sort();
+        t[t.len() / 2]
+    }
+}
+
 /// Compile an HLO-text file and time `reps` executions with a synthetic
 /// `(1, input_elems)` f32 input, inline on the calling thread (used by
 /// the Fig. 13 window-sweep harness and the runtime bench).
@@ -462,12 +537,10 @@ fn worker_loop(
 /// Without the `xla` feature this returns *modelled* durations from the
 /// same linear cost model the sim backend uses (overhead + c·elems) —
 /// a stand-in so the window-sweep harnesses still produce their curves
-/// offline; it is not a measurement.
-pub fn bench_hlo_file(
-    path: &std::path::Path,
-    input_elems: usize,
-    reps: usize,
-) -> Result<Vec<Duration>> {
+/// offline; it is not a measurement. The result says so
+/// (`modelled: true`) and a one-line warning goes to stderr, once per
+/// process.
+pub fn bench_hlo_file(path: &std::path::Path, input_elems: usize, reps: usize) -> Result<HloBench> {
     #[cfg(feature = "xla")]
     {
         let client = xla::PjRtClient::cpu()?;
@@ -486,13 +559,20 @@ pub fn bench_hlo_file(
             let _ = r[0][0].to_literal_sync()?;
             out.push(t0.elapsed());
         }
-        Ok(out)
+        Ok(HloBench { times: out, modelled: false })
     }
     #[cfg(not(feature = "xla"))]
     {
         let _ = path;
+        static WARNED: std::sync::Once = std::sync::Once::new();
+        WARNED.call_once(|| {
+            eprintln!(
+                "warning: built without --features xla — HLO timings are \
+                 modelled (sim cost model), not measured"
+            );
+        });
         let secs = 2e-4 + input_elems as f64 * 4e-9;
-        Ok(vec![Duration::from_secs_f64(secs); reps])
+        Ok(HloBench { times: vec![Duration::from_secs_f64(secs); reps], modelled: true })
     }
 }
 
@@ -568,6 +648,57 @@ mod tests {
         // validation applies inline too
         let short = AlignedBatch::filled(clip - 1, 0.0);
         assert!(dev.execute((0, 1), &short).is_err());
+    }
+
+    /// Tentpole invariant: with the shared ExecCache, a process running
+    /// W workers over M ensemble members performs exactly
+    /// `distinct (ArtifactId, batch)` compiles for any W, and every
+    /// worker's predictions are bit-identical to the single-worker
+    /// (per-worker-cache era) baseline — waiters parked on a
+    /// single-flight compile observe the winner's executable.
+    #[test]
+    fn shared_cache_compiles_once_per_key_at_any_width() {
+        let keys: Vec<ModelKey> = (0..6).flat_map(|m| [(m, 1usize), (m, 8usize)]).collect();
+        for &w in &[1usize, 2, 8] {
+            let zoo = testkit::toy_zoo_with(6, 32, 3, 40, &[1, 8]);
+            let engine =
+                Engine::with_backend(&zoo, w, Arc::new(SimBackend::instant(&zoo))).unwrap();
+            let clip = engine.clip_len();
+            let barrier = Arc::new(std::sync::Barrier::new(w));
+            let mut joins = Vec::new();
+            for wid in 0..w {
+                let engine = engine.clone();
+                let keys = keys.clone();
+                let barrier = Arc::clone(&barrier);
+                joins.push(std::thread::spawn(move || {
+                    let mut dev = engine.direct_worker(wid).unwrap();
+                    barrier.wait(); // all workers hit cold keys together
+                    keys.iter()
+                        .map(|&key| {
+                            let buf = AlignedBatch::filled(key.1 * clip, 0.125);
+                            dev.execute(key, &buf).unwrap().scores
+                        })
+                        .collect::<Vec<_>>()
+                }));
+            }
+            let per_worker: Vec<Vec<Vec<f32>>> =
+                joins.into_iter().map(|j| j.join().unwrap()).collect();
+            assert_eq!(
+                engine.stats().compile_count.load(Ordering::Relaxed),
+                keys.len() as u64,
+                "W={w}: compile_count must equal distinct (ArtifactId, batch) keys"
+            );
+            let window = vec![0.125f32; clip];
+            for outs in &per_worker {
+                for (ki, scores) in outs.iter().enumerate() {
+                    let want = backend::sim_score(keys[ki].0, &window);
+                    assert_eq!(scores.len(), keys[ki].1);
+                    for s in scores {
+                        assert_eq!(s.to_bits(), want.to_bits(), "W={w} key={:?}", keys[ki]);
+                    }
+                }
+            }
+        }
     }
 
     #[test]

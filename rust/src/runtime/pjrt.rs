@@ -1,23 +1,35 @@
 //! PJRT execution backend (`--features xla`): loads the AOT-compiled
 //! HLO-text artifacts and runs them on the worker threads.
 //!
-//! The `xla` crate's PJRT handles wrap raw C pointers (`!Send`), so
-//! every worker builds its own `PjRtClient` plus a lazily-compiled
-//! executable cache on its own thread — the backend itself only carries
-//! the artifact path inventory.
+//! The `xla` crate's `PjRtClient` wraps raw C pointers, so every worker
+//! still builds its own client on its own thread — but the **compiled
+//! executables** live in the backend's shared [`ExecCache`], keyed by
+//! content-addressed [`ArtifactId`](crate::registry::ArtifactId) +
+//! batch shape: W workers running an M-member ensemble perform exactly
+//! `distinct (ArtifactId, batch)` compiles instead of up to W × M, and
+//! hold one executable per key instead of one per worker. Each worker
+//! keeps a local `key → Arc<executable>` memo so the steady-state hot
+//! path never touches the shared map. Sharing requires the loaded
+//! executable to be usable across threads; PJRT execution is
+//! thread-compatible on a loaded executable (and the vendored stub's
+//! handles are trivially `Send + Sync`).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::backend::{BackendOutput, ExecBackend, ExecWorker};
+use super::exec_cache::{ArtifactCatalog, ExecCache, ExecCacheGauges};
 use super::ModelKey;
 use crate::zoo::Zoo;
 use crate::{Error, Result};
 
 /// PJRT-backed execution: (model, batch) → compiled HLO artifact.
 pub struct PjrtBackend {
-    paths: HashMap<ModelKey, PathBuf>,
+    paths: Arc<HashMap<ModelKey, PathBuf>>,
+    cache: Arc<ExecCache<xla::PjRtLoadedExecutable>>,
+    catalog: Arc<ArtifactCatalog>,
 }
 
 impl PjrtBackend {
@@ -30,7 +42,11 @@ impl PjrtBackend {
                 paths.insert((idx, b), zoo.artifact_path(idx, b)?);
             }
         }
-        Ok(PjrtBackend { paths })
+        Ok(PjrtBackend {
+            paths: Arc::new(paths),
+            cache: Arc::new(ExecCache::new()),
+            catalog: Arc::new(ArtifactCatalog::from_zoo(zoo)),
+        })
     }
 }
 
@@ -41,33 +57,62 @@ impl ExecBackend for PjrtBackend {
 
     fn worker(&self, _wid: usize) -> Result<Box<dyn ExecWorker>> {
         let client = xla::PjRtClient::cpu()?;
-        Ok(Box::new(PjrtWorker { client, cache: HashMap::new(), paths: self.paths.clone() }))
+        Ok(Box::new(PjrtWorker {
+            client,
+            local: HashMap::new(),
+            paths: Arc::clone(&self.paths),
+            cache: Arc::clone(&self.cache),
+            catalog: Arc::clone(&self.catalog),
+        }))
+    }
+
+    fn catalog(&self) -> Option<Arc<ArtifactCatalog>> {
+        Some(Arc::clone(&self.catalog))
+    }
+
+    fn exec_cache_gauges(&self) -> Option<Arc<ExecCacheGauges>> {
+        Some(self.cache.gauges())
     }
 }
 
 struct PjrtWorker {
+    /// Per-thread PJRT client (owns device state; never shared).
     client: xla::PjRtClient,
-    cache: HashMap<ModelKey, xla::PjRtLoadedExecutable>,
-    paths: HashMap<ModelKey, PathBuf>,
+    /// This worker's memo of shared executables: steady-state runs are
+    /// one local probe, no shard lock.
+    local: HashMap<ModelKey, Arc<xla::PjRtLoadedExecutable>>,
+    paths: Arc<HashMap<ModelKey, PathBuf>>,
+    cache: Arc<ExecCache<xla::PjRtLoadedExecutable>>,
+    catalog: Arc<ArtifactCatalog>,
 }
 
-impl ExecWorker for PjrtWorker {
-    fn run(&mut self, key: ModelKey, input: &[f32], _clip_len: usize) -> Result<BackendOutput> {
-        let mut compiled = false;
-        if !self.cache.contains_key(&key) {
-            let path = self
-                .paths
+impl PjrtWorker {
+    /// Resolve `key` to its shared executable, compiling it through the
+    /// single-flight cache on this worker's client if nobody has yet.
+    fn executable(&mut self, key: ModelKey) -> Result<(Arc<xla::PjRtLoadedExecutable>, bool)> {
+        if let Some(exe) = self.local.get(&key) {
+            return Ok((Arc::clone(exe), false));
+        }
+        let id = self.catalog.id_for(key);
+        let (client, paths) = (&self.client, &self.paths);
+        let (exe, compiled) = self.cache.get_or_compile((id, key.1), || {
+            let path = paths
                 .get(&key)
                 .ok_or_else(|| Error::artifact(format!("unknown model key {key:?}")))?;
             let proto = xla::HloModuleProto::from_text_file(
                 path.to_str().ok_or_else(|| Error::artifact("non-utf8 path"))?,
             )?;
             let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            self.cache.insert(key, exe);
-            compiled = true;
-        }
-        let exe = self.cache.get(&key).expect("just inserted");
+            Ok(client.compile(&comp)?)
+        })?;
+        self.local.insert(key, Arc::clone(&exe));
+        Ok((exe, compiled))
+    }
+}
+
+impl ExecWorker for PjrtWorker {
+    fn run(&mut self, key: ModelKey, input: &[f32], _clip_len: usize) -> Result<BackendOutput> {
+        let (exe, compiled) = self.executable(key)?;
         let (batch, clip_len) = (key.1 as i64, (input.len() / key.1) as i64);
         let lit = xla::Literal::vec1(input).reshape(&[batch, clip_len])?;
         let t0 = Instant::now();
@@ -76,5 +121,29 @@ impl ExecWorker for PjrtWorker {
         // aot.py lowers with return_tuple=True → 1-tuple of (batch,) probs
         let scores = out.to_tuple1()?.to_vec::<f32>()?;
         Ok(BackendOutput { scores, exec_time, compiled })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo::testkit;
+
+    /// Link-coverage for the xla seam: the vendored stub fails at
+    /// client construction, and that failure must surface as a clean
+    /// error (not a panic) through the backend's worker factory. With a
+    /// real PJRT toolchain this test still passes — a healthy client
+    /// just exercises the success arm.
+    #[test]
+    fn worker_factory_surfaces_client_errors() {
+        let zoo = testkit::toy_zoo_with(2, 8, 1, 50, &[1]);
+        let backend = PjrtBackend::from_zoo(&zoo).unwrap();
+        assert_eq!(backend.name(), "pjrt");
+        assert!(backend.catalog().is_some());
+        assert!(backend.exec_cache_gauges().is_some());
+        match backend.worker(0) {
+            Ok(_) => {} // real XLA present
+            Err(e) => assert!(e.to_string().contains("xla"), "unexpected error: {e}"),
+        }
     }
 }

@@ -413,6 +413,10 @@ impl Governor {
         let core = GovernorCore::new(lane_models.len(), floor, &cfg);
 
         gauges.active_members.store(lane_models.len(), Ordering::Relaxed);
+        // seed the heartbeat's residency evidence for the initial (full)
+        // membership before the first probe can observe this node
+        let all_positions: Vec<usize> = (0..lane_models.len()).collect();
+        publish_artifact_demand(pipeline, &lane_models, &all_positions);
 
         let stop = Arc::new(AtomicBool::new(false));
         let handle = {
@@ -530,6 +534,30 @@ fn recompose(
     Some(positions)
 }
 
+/// Publish the artifact demand of a membership: resolve `positions` →
+/// zoo models → the [`crate::registry::ArtifactId`] set every batch
+/// variant needs, then stamp `artifacts_required` / `artifacts_resident`
+/// into telemetry. Those two counters are what the heartbeat's
+/// `"resident"` field is computed from, so this is the exact point where
+/// a membership swap changes what the router demands of this node.
+///
+/// When no artifact store is installed (in-process pipelines, tests) the
+/// zoo on local disk *is* the artifact source, so residency is trivially
+/// complete and the node must not advertise itself cold.
+fn publish_artifact_demand(pipeline: &Pipeline, lane_models: &[usize], positions: &[usize]) {
+    use crate::registry::Registry;
+    let models: Vec<usize> = positions.iter().map(|&p| lane_models[p]).collect();
+    let ids = pipeline.executor().engine().artifact_catalog().ids_for_models(&models);
+    let telemetry = pipeline.telemetry();
+    let required = ids.len() as u64;
+    let resident = match telemetry.artifact_store() {
+        Some(store) => ids.iter().filter(|&&id| store.has(id)).count() as u64,
+        None => required,
+    };
+    telemetry.artifacts_required.store(required, Ordering::Relaxed);
+    telemetry.artifacts_resident.store(resident, Ordering::Relaxed);
+}
+
 /// Fire one canary at a quarantined lane: execute a single-query batch
 /// directly on the engine (bypassing the dead lane), and — only if the
 /// backend answers — revive the lane. Returns whether the lane is back.
@@ -598,6 +626,9 @@ fn govern_loop(
                     gauges.epoch.store(set.epoch(), Ordering::Relaxed);
                     gauges.active_members.store(set.len(), Ordering::Relaxed);
                     gauges.swaps.fetch_add(1, Ordering::Relaxed);
+                    // the member set changed, so the artifact demand
+                    // advertised on heartbeats changes with it
+                    publish_artifact_demand(&pipeline, &lane_models, positions);
                 }
                 Err(_) => break, // pipeline shut down under us
             }

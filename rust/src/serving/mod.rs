@@ -32,14 +32,20 @@
 //!        │ epoch E's   (lock-free queues,   │ claim ready lane, pack,
 //!        │ members     fill deadlines ◄─────│ execute inline (DirectWorker,
 //!        │ only        armed by the         ▼ gpu-count device permits)
-//!        │ ▲           DeadlineController)
+//!        │ ▲           DeadlineController)  │ compile once per ArtifactId
+//!        │ │                                │ × batch via the process-wide
+//!        │ │                                │ ExecCache (single-flight; all
+//!        │ │                                │ workers share one executable)
 //!        │ │ Install(E+1): hot swap, FIFO vs admissions
 //!        │ │
 //!        │ Governor (--govern): control ticks read live pressure
 //!        │ (T_q+T_s tails vs SLO), recompose via Composer::search on
 //!        │ live lane service times, degrade to the accuracy floor
 //!        │ under overload (hysteresis back up), quarantine dead lanes
-//!        │ and reinstate them after a canary batch succeeds
+//!        │ and reinstate them after a canary batch succeeds; every
+//!        │ membership install re-derives the ArtifactId demand through
+//!        │ the engine's ArtifactCatalog and republishes the node's
+//!        │ required/resident counts (the heartbeat's "resident" field)
 //!        ▼
 //!  [stateless]  Completer (direct, collector-less): whichever worker
 //!               records a query's last member score finishes it
@@ -100,6 +106,29 @@
 //! accounting — including a score fingerprint — bit for bit across
 //! shard and worker counts (`tests/replay.rs`); three scenarios run
 //! seeded in CI beside the bedside smokes.
+//!
+//! ## One artifact identity from disk to device
+//!
+//! Every model executable is named by a content-addressed
+//! [`ArtifactId`](crate::registry::ArtifactId) — a digest over the HLO
+//! bytes plus the input shape and MACs profile — resolved through the
+//! engine's [`ArtifactCatalog`](crate::runtime::ArtifactCatalog). The
+//! serving tier threads that single identity end to end:
+//!
+//! * the executor compiles through the process-wide, single-flight
+//!   [`ExecCache`](crate::runtime::ExecCache) keyed on
+//!   `(ArtifactId, batch)`, so W workers share one compiled executable
+//!   per distinct key (`exec_cache_{hits,misses,compiles}` in `/stats`);
+//! * `holmes serve --registry-root DIR` opens a content-addressed
+//!   [`LocalFs`](crate::registry::LocalFs) store, publishes the zoo's
+//!   bundles, and serves them to peers over `GET /artifact/<id>`
+//!   (every fetch re-digests — a corrupt blob is never served);
+//! * a cold node (`--registry HOST:PORT`) pulls the active ensemble's
+//!   artifacts from a warm peer before claiming `"resident":true` on
+//!   heartbeats; the router treats a live-but-non-resident peer like a
+//!   draining one — re-homed away from, not admitted — until residency
+//!   is proven (`crate::router::health`, gated by the `--cold-peer`
+//!   route smoke in CI).
 //!
 //! Stateful compute (aggregation) and stateless compute (model
 //! inference) are separated exactly as the paper requires of its

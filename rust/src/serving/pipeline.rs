@@ -799,6 +799,11 @@ impl Pipeline {
             executor.dead_gauges(),
             executor.retry_counters(),
         ));
+        // surface the backend's shared compiled-executable cache in
+        // /stats (absent on backends without one)
+        if let Some(g) = engine.exec_cache_gauges() {
+            telemetry.install_exec_cache(g);
+        }
 
         // router thread; epoch 0 = the full spawn-time universe
         let membership: Arc<Mutex<Arc<MemberSet>>> =

@@ -326,6 +326,10 @@ pub struct RouterGauges {
     pub patients_rehomed: AtomicU64,
     /// Peers canary-probed back to healthy after death/drain, lifetime.
     pub peers_reinstated: AtomicU64,
+    /// Per-peer artifact count last advertised on a heartbeat response
+    /// (`"artifacts":N`) — how much of the model set each peer holds
+    /// resident, as seen by the health prober.
+    pub artifacts_resident: Vec<AtomicU64>,
 }
 
 impl RouterGauges {
@@ -341,6 +345,7 @@ impl RouterGauges {
             replay_dropped: AtomicU64::new(0),
             patients_rehomed: AtomicU64::new(0),
             peers_reinstated: AtomicU64::new(0),
+            artifacts_resident: (0..n_peers).map(|_| AtomicU64::new(0)).collect(),
         }
     }
 
@@ -362,6 +367,10 @@ impl RouterGauges {
 
     pub fn spill_depths(&self) -> Vec<u64> {
         self.spill_depth.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn artifacts_resident(&self) -> Vec<u64> {
+        self.artifacts_resident.iter().map(|c| c.load(Ordering::Relaxed)).collect()
     }
 }
 
@@ -463,6 +472,23 @@ pub struct Telemetry {
     /// so the router re-homes this peer's patients *before* the process
     /// exits — zero dropped frames instead of a failover.
     pub draining: AtomicBool,
+    /// Artifact bundles this node pulled from a peer registry over
+    /// `GET /artifact/<id>` (digest-verified before counting).
+    pub artifacts_fetched: AtomicU64,
+    /// Artifact bundles this node served to peers from its local
+    /// content-addressed store.
+    pub artifacts_served: AtomicU64,
+    /// Blobs rejected because their bytes did not re-digest to the
+    /// requested [`crate::registry::ArtifactId`] — a corrupt or
+    /// tampered bundle that was *not* served or installed.
+    pub artifacts_verify_failed: AtomicU64,
+    /// Artifacts the active member set requires on this node
+    /// (recomputed by the governor on every membership install).
+    pub artifacts_required: AtomicU64,
+    /// Of [`Self::artifacts_required`], how many are resident locally.
+    /// Heartbeat responses advertise `resident >= required` so the
+    /// router can refuse to (re)admit a peer that cannot serve yet.
+    pub artifacts_resident: AtomicU64,
     /// Executor gauges, installed once by `Pipeline::spawn` (absent for
     /// telemetry created outside a pipeline — benches, shard tests).
     executor: OnceLock<ExecutorGauges>,
@@ -475,6 +501,15 @@ pub struct Telemetry {
     /// Router-tier gauges, installed once by `Router::spawn` (absent
     /// on anything but a router process).
     router: OnceLock<Arc<RouterGauges>>,
+    /// Shared compiled-executable cache gauges, installed once by
+    /// `Pipeline::spawn` from the engine's backend (absent for
+    /// telemetry created outside a pipeline, or on backends without a
+    /// shared cache).
+    exec_cache: OnceLock<Arc<crate::runtime::ExecCacheGauges>>,
+    /// Local content-addressed artifact store, installed once by the
+    /// serve path when `--registry-root` is given. The ingest edge
+    /// serves `GET /artifact/<id>` straight out of it.
+    artifact_store: OnceLock<Arc<crate::registry::LocalFs>>,
 }
 
 impl Telemetry {
@@ -518,6 +553,27 @@ impl Telemetry {
         self.router.get()
     }
 
+    /// Attach the shared executable cache's live gauges (once; later
+    /// installs are ignored — one process-wide cache per backend).
+    pub fn install_exec_cache(&self, gauges: Arc<crate::runtime::ExecCacheGauges>) {
+        let _ = self.exec_cache.set(gauges);
+    }
+
+    pub fn exec_cache(&self) -> Option<&Arc<crate::runtime::ExecCacheGauges>> {
+        self.exec_cache.get()
+    }
+
+    /// Attach the local content-addressed artifact store (once; later
+    /// installs are ignored — one registry root per process). The HTTP
+    /// edges use it to answer `GET /artifact/<id>`.
+    pub fn install_artifact_store(&self, store: Arc<crate::registry::LocalFs>) {
+        let _ = self.artifact_store.set(store);
+    }
+
+    pub fn artifact_store(&self) -> Option<&Arc<crate::registry::LocalFs>> {
+        self.artifact_store.get()
+    }
+
     /// `HLMS` idempotency check: admit a batch iff this (token, seq)
     /// is newer than the last batch admitted under that token. A link
     /// worker delivers batches strictly in sequence order and repeats
@@ -551,6 +607,7 @@ impl Telemetry {
             };
         let gov = self.governor.get();
         let rt = self.router.get();
+        let ec = self.exec_cache.get();
         TelemetrySnapshot {
             executor_models: models,
             queue_depth_per_model: queue_depths,
@@ -594,6 +651,15 @@ impl Telemetry {
             router_peers_reinstated: rt
                 .map(|g| g.peers_reinstated.load(Ordering::Relaxed))
                 .unwrap_or(0),
+            router_artifacts_resident: rt.map(|g| g.artifacts_resident()).unwrap_or_default(),
+            exec_cache_hits: ec.map(|g| g.hits.load(Ordering::Relaxed)).unwrap_or(0),
+            exec_cache_misses: ec.map(|g| g.misses.load(Ordering::Relaxed)).unwrap_or(0),
+            exec_cache_compiles: ec.map(|g| g.compiles.load(Ordering::Relaxed)).unwrap_or(0),
+            artifacts_fetched: self.artifacts_fetched.load(Ordering::Relaxed),
+            artifacts_served: self.artifacts_served.load(Ordering::Relaxed),
+            artifacts_verify_failed: self.artifacts_verify_failed.load(Ordering::Relaxed),
+            artifacts_required: self.artifacts_required.load(Ordering::Relaxed),
+            artifacts_resident: self.artifacts_resident.load(Ordering::Relaxed),
             draining: u64::from(self.draining.load(Ordering::Relaxed)),
             conns_active: self.conns_active.load(Ordering::Relaxed) as u64,
             conns_accepted: self.conns_accepted.load(Ordering::Relaxed),
@@ -664,6 +730,22 @@ pub struct TelemetrySnapshot {
     pub router_replay_dropped: u64,
     pub router_patients_rehomed: u64,
     pub router_peers_reinstated: u64,
+    /// Per-peer artifact count last advertised on a heartbeat (router
+    /// processes only; same order as `router_peer_states`).
+    pub router_artifacts_resident: Vec<u64>,
+    /// Shared executable cache: lookup hits/misses and single-flight
+    /// compiles (compiles ≤ misses; all zero without a shared cache).
+    pub exec_cache_hits: u64,
+    pub exec_cache_misses: u64,
+    pub exec_cache_compiles: u64,
+    /// Registry traffic: bundles pulled from peers / served to peers /
+    /// rejected on digest verification, lifetime.
+    pub artifacts_fetched: u64,
+    pub artifacts_served: u64,
+    pub artifacts_verify_failed: u64,
+    /// Active member set's artifact demand vs what is resident locally.
+    pub artifacts_required: u64,
+    pub artifacts_resident: u64,
     /// 1 while this node is draining for a rolling upgrade.
     pub draining: u64,
     /// Live HTTP connections on the ingest edge.
@@ -734,6 +816,15 @@ impl TelemetrySnapshot {
             ("router_replay_dropped", Value::Num(self.router_replay_dropped as f64)),
             ("router_patients_rehomed", Value::Num(self.router_patients_rehomed as f64)),
             ("router_peers_reinstated", Value::Num(self.router_peers_reinstated as f64)),
+            ("router_artifacts_resident", nums(&self.router_artifacts_resident)),
+            ("exec_cache_hits", Value::Num(self.exec_cache_hits as f64)),
+            ("exec_cache_misses", Value::Num(self.exec_cache_misses as f64)),
+            ("exec_cache_compiles", Value::Num(self.exec_cache_compiles as f64)),
+            ("artifacts_fetched", Value::Num(self.artifacts_fetched as f64)),
+            ("artifacts_served", Value::Num(self.artifacts_served as f64)),
+            ("artifacts_verify_failed", Value::Num(self.artifacts_verify_failed as f64)),
+            ("artifacts_required", Value::Num(self.artifacts_required as f64)),
+            ("artifacts_resident", Value::Num(self.artifacts_resident as f64)),
             ("draining", Value::Num(self.draining as f64)),
             ("conns_active", Value::Num(self.conns_active as f64)),
             ("conns_accepted", Value::Num(self.conns_accepted as f64)),
@@ -912,6 +1003,16 @@ mod tests {
         assert!(s.contains("router_peers_reinstated"));
         assert!(s.contains("frames_deduped"));
         assert!(s.contains("\"draining\""));
+        // artifact identity: shared exec cache + registry traffic
+        assert!(s.contains("router_artifacts_resident"));
+        assert!(s.contains("exec_cache_hits"));
+        assert!(s.contains("exec_cache_misses"));
+        assert!(s.contains("exec_cache_compiles"));
+        assert!(s.contains("artifacts_fetched"));
+        assert!(s.contains("artifacts_served"));
+        assert!(s.contains("artifacts_verify_failed"));
+        assert!(s.contains("artifacts_required"));
+        assert!(s.contains("\"artifacts_resident\""));
     }
 
     #[test]
@@ -946,6 +1047,7 @@ mod tests {
         g.replay_dropped.store(2, Ordering::Relaxed);
         g.patients_rehomed.store(4, Ordering::Relaxed);
         g.peers_reinstated.store(1, Ordering::Relaxed);
+        g.artifacts_resident[0].store(6, Ordering::Relaxed);
         t.draining.store(true, Ordering::Relaxed);
         let snap = t.snapshot();
         assert_eq!(snap.router_peer_states, vec![0, 2]);
@@ -958,6 +1060,7 @@ mod tests {
         assert_eq!(snap.router_replay_dropped, 2);
         assert_eq!(snap.router_patients_rehomed, 4);
         assert_eq!(snap.router_peers_reinstated, 1);
+        assert_eq!(snap.router_artifacts_resident, vec![6, 0]);
         assert_eq!(snap.draining, 1);
         // live view, not a copy
         g.frames_forwarded[1].store(10, Ordering::Relaxed);
@@ -991,6 +1094,35 @@ mod tests {
         // live view, not a copy
         g.swaps.store(9, Ordering::Relaxed);
         assert_eq!(t.snapshot().governor_swaps, 9);
+    }
+
+    #[test]
+    fn exec_cache_and_artifact_gauges_surface_in_snapshot() {
+        let t = Telemetry::default();
+        assert!(t.exec_cache().is_none());
+        assert_eq!(t.snapshot().exec_cache_hits, 0);
+        let g = Arc::new(crate::runtime::ExecCacheGauges::default());
+        t.install_exec_cache(Arc::clone(&g));
+        g.hits.store(40, Ordering::Relaxed);
+        g.misses.store(12, Ordering::Relaxed);
+        g.compiles.store(12, Ordering::Relaxed);
+        t.artifacts_fetched.store(5, Ordering::Relaxed);
+        t.artifacts_served.store(7, Ordering::Relaxed);
+        t.artifacts_verify_failed.store(1, Ordering::Relaxed);
+        t.artifacts_required.store(12, Ordering::Relaxed);
+        t.artifacts_resident.store(12, Ordering::Relaxed);
+        let snap = t.snapshot();
+        assert_eq!(snap.exec_cache_hits, 40);
+        assert_eq!(snap.exec_cache_misses, 12);
+        assert_eq!(snap.exec_cache_compiles, 12);
+        assert_eq!(snap.artifacts_fetched, 5);
+        assert_eq!(snap.artifacts_served, 7);
+        assert_eq!(snap.artifacts_verify_failed, 1);
+        assert_eq!(snap.artifacts_required, 12);
+        assert_eq!(snap.artifacts_resident, 12);
+        // live view, not a copy
+        g.hits.store(41, Ordering::Relaxed);
+        assert_eq!(t.snapshot().exec_cache_hits, 41);
     }
 
     #[test]

@@ -316,6 +316,36 @@ impl Zoo {
         Ok(self.root.join(rel))
     }
 
+    /// HLO program bytes for a model's batch variant — the payload a
+    /// [`crate::registry::ArtifactBundle`] is built around. Reads the
+    /// compiled file when it exists on disk; when the manifest declares
+    /// a variant but the file is absent (toy zoos, artifact-less router
+    /// peers), a deterministic sim-grade placeholder program is
+    /// synthesised from the profile so content-addressed identities
+    /// stay stable across processes without `make artifacts`.
+    pub fn artifact_bytes(&self, index: usize, batch: usize) -> Result<Vec<u8>> {
+        let path = self.artifact_path(index, batch)?;
+        match std::fs::read(&path) {
+            Ok(bytes) => Ok(bytes),
+            Err(_) => {
+                let m = self.model(index);
+                Ok(format!(
+                    "HloModule sim_{id}_b{batch}, placeholder=true\n\
+                     // sim-grade stand-in for {rel}: deterministic identity,\n\
+                     // not an executable program\n\
+                     // profile: macs={macs} params={params} input_len={len} lead={lead}\n",
+                    id = m.id,
+                    rel = m.artifact_for_batch(batch).unwrap_or("?"),
+                    macs = m.macs,
+                    params = m.params,
+                    len = m.input_len,
+                    lead = m.lead,
+                )
+                .into_bytes())
+            }
+        }
+    }
+
     /// The profile matrix V (n × m) as feature rows for surrogates.
     pub fn profile_matrix(&self) -> Vec<Vec<f64>> {
         self.manifest.models.iter().map(|m| m.feature_row()).collect()

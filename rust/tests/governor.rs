@@ -162,7 +162,14 @@ fn dead_lane_is_quarantined_served_around_and_reinstated() {
     .unwrap();
     let gauges = Arc::clone(governor.gauges());
 
-    let score_of = |members: &[usize], p: usize, w: usize| -> f64 {
+    // spawn seeds the heartbeat's residency evidence: the full member
+    // set's artifact demand, trivially resident with no registry store
+    let telemetry = Arc::clone(pipeline.telemetry());
+    let full_required = telemetry.artifacts_required.load(Ordering::Relaxed);
+    assert!(full_required > 0, "spawn must publish the initial artifact demand");
+    assert_eq!(telemetry.artifacts_resident.load(Ordering::Relaxed), full_required);
+
+    let score_of =|members: &[usize], p: usize, w: usize| -> f64 {
         let leads = window_leads(p, w);
         let sum: f64 = members
             .iter()
@@ -196,6 +203,10 @@ fn dead_lane_is_quarantined_served_around_and_reinstated() {
         pipeline.membership().positions() == [0, 2]
     });
     wait_for("the quarantine gauge", &|| gauges.quarantined.load(Ordering::Relaxed) == 1);
+    // shrinking the membership shrinks the advertised artifact demand
+    wait_for("the artifact demand to track the swap", &|| {
+        telemetry.artifacts_required.load(Ordering::Relaxed) < full_required
+    });
 
     // served around the quarantine: new queries complete on survivors
     let pred = pipeline.query(Query::from_vecs(2, 2, 0.0, window_leads(2, 2))).unwrap();

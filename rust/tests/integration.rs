@@ -202,9 +202,11 @@ fn window_sweep_artifacts_execute() {
     lengths.sort_unstable();
     let len = lengths[0];
     let path = zoo.root.join(&sweep.artifacts[&len.to_string()]);
-    let times = holmes::runtime::bench_hlo_file(&path, len, 2).unwrap();
-    assert_eq!(times.len(), 2);
-    assert!(times[0].as_nanos() > 0);
+    let bench = holmes::runtime::bench_hlo_file(&path, len, 2).unwrap();
+    assert_eq!(bench.times.len(), 2);
+    assert!(bench.times[0].as_nanos() > 0);
+    // honesty flag tracks the build: modelled exactly when no real XLA
+    assert_eq!(bench.modelled, cfg!(not(feature = "xla")));
 }
 
 /// Real-HLO numeric parity against the python probe — meaningless on
